@@ -1,0 +1,125 @@
+//! Per-artifact PJRT execute timing (Fig 3a real-path counterpart + the
+//! L2/L3 perf-pass probe): attention, stacked gating, expert FFN at every
+//! precision and chunk size, LM head, plus the expert transfer itself.
+//! harness = false (criterion is not in the offline vendor set).
+
+use std::path::PathBuf;
+
+use hobbit::config::{HardwareConfig, PolicyConfig};
+use hobbit::engine::{Engine, EngineOptions, KvState};
+use hobbit::memory::{LinkModel, ThrottledCopier};
+use hobbit::util::benchkit::{bench, header};
+
+fn main() {
+    let artifacts = PathBuf::from("artifacts");
+    if !artifacts.join("mixtral-tiny/manifest.json").exists() {
+        eprintln!("artifacts not built; run `make artifacts`");
+        return;
+    }
+    let hw = HardwareConfig {
+        hi_cache_experts: 64,
+        lo_cache_experts: 64,
+        load_bw: 64e9,
+        load_latency: 0.0,
+        ..HardwareConfig::rtx4090_real()
+    };
+    // A/B: pallas-interpret FFN vs XLA-fused fast FFN, same process
+    let mut slow_opts = EngineOptions::new(hw.clone(), PolicyConfig::default());
+    slow_opts.use_fast_ffn = false;
+    let mut slow_engine = Engine::new(&artifacts, "mixtral-tiny", slow_opts).expect("engine");
+    let mut engine =
+        Engine::new(&artifacts, "mixtral-tiny", EngineOptions::new(hw, PolicyConfig::default()))
+            .expect("engine");
+
+    header();
+    {
+        let mut kv = slow_engine.new_sequence();
+        let prompt: Vec<u32> = (0..16u32).map(|i| 65 + i).collect();
+        let _ = slow_engine.prefill(&mut kv, &prompt).unwrap();
+        bench("engine decode_step (pallas-interpret FFN)", || {
+            if kv.remaining() < 2 {
+                kv = slow_engine.new_sequence();
+                let _ = slow_engine.prefill(&mut kv, &prompt).unwrap();
+            }
+            let _ = slow_engine.decode_step(&mut kv, 66).unwrap();
+        });
+    }
+    drop(slow_engine);
+
+    // whole-token decode + prefill chunks through the engine
+    let mut kv: KvState = engine.new_sequence();
+    let prompt: Vec<u32> = (0..16u32).map(|i| 65 + i).collect();
+    let _ = engine.prefill(&mut kv, &prompt).unwrap();
+    bench("engine decode_step (token, all layers)", || {
+        if kv.remaining() < 2 {
+            kv = engine.new_sequence();
+            let _ = engine.prefill(&mut kv, &prompt).unwrap();
+        }
+        let _ = engine.decode_step(&mut kv, 66).unwrap();
+    });
+
+    let mut kv2 = engine.new_sequence();
+    bench("engine prefill chunk s=16", || {
+        if kv2.remaining() < 32 {
+            kv2 = engine.new_sequence();
+        }
+        let _ = engine.prefill(&mut kv2, &prompt).unwrap();
+    });
+
+    // direct artifact timings (isolated)
+    let names: Vec<String> = vec![
+        "attn_s1".into(),
+        "gate_p1_s1".into(),
+        "gate_p3_s1".into(),
+        "expert_f32_s1".into(),
+        "expert_fast_f32_s1".into(),
+        "expert_fast_q8_s1".into(),
+        "expert_q8_s1".into(),
+        "expert_q2_s1".into(),
+        "head_s1".into(),
+        "attn_s16".into(),
+        "expert_f32_s16".into(),
+        "attn_s128".into(),
+        "expert_f32_s128".into(),
+    ];
+    for name in &names {
+        if engine.rt.ensure(name).is_err() {
+            continue;
+        }
+        let spec = engine.rt.manifest.artifacts.get(name).unwrap().clone();
+        let args: Vec<xla::Literal> = spec
+            .inputs
+            .iter()
+            .map(|(shape, dt)| {
+                let n: usize = shape.iter().product();
+                match dt {
+                    hobbit::runtime::DType::F32 => {
+                        hobbit::runtime::lit_f32(shape, &vec![0.01f32; n]).unwrap()
+                    }
+                    hobbit::runtime::DType::U8 => {
+                        hobbit::runtime::lit_u8(shape, &vec![1u8; n]).unwrap()
+                    }
+                    hobbit::runtime::DType::I32 => hobbit::runtime::lit_i32(0),
+                }
+            })
+            .collect();
+        bench(&format!("artifact {name}"), || {
+            let _ = engine.rt.execute(name, &args).unwrap();
+        });
+    }
+
+    // the transfer engine at the three modeled link rates
+    for (label, bw) in [("pcie-scaled 1.5GB/s", 1.5e9), ("ssd-scaled 0.25GB/s", 0.25e9)] {
+        let copier = ThrottledCopier::new(LinkModel { bytes_per_s: bw, latency_s: 30e-6 });
+        let src = vec![1u8; engine.cfg.bytes_for(hobbit::Precision::F32)];
+        let mut dst = vec![0u8; src.len()];
+        bench(&format!("expert f32 transfer @ {label}"), || {
+            let _ = copier.transfer(&src, &mut dst);
+        });
+        let srcq = vec![1u8; engine.cfg.bytes_for(hobbit::Precision::Q8)];
+        let mut dstq = vec![0u8; srcq.len()];
+        bench(&format!("expert q8  transfer @ {label}"), || {
+            let _ = copier.transfer(&srcq, &mut dstq);
+        });
+    }
+}

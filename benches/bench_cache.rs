@@ -1,0 +1,36 @@
+//! Fig 18 bench: cache-policy replay throughput and miss penalties over
+//! the calibrated synthetic trace set, every policy, two cache sizes.
+
+use hobbit::cache::Policy;
+use hobbit::trace::replay::{replay, ReplayConfig};
+use hobbit::trace::{generate, TraceGenConfig};
+use hobbit::util::benchkit::{bench, header};
+
+fn main() {
+    let traces = generate(&TraceGenConfig::mixtral_like(), 4, 96);
+    header();
+    for (label, hi, lo) in [("small-cache", 16, 24), ("large-cache", 43, 55)] {
+        let cfg = ReplayConfig { hi_capacity: hi, lo_capacity: lo, ..Default::default() };
+        let mut penalties = Vec::new();
+        for (name, p) in [
+            ("random", Policy::Random { seed: 3 }),
+            ("lru", Policy::Lru),
+            ("lfu", Policy::LfuSeq),
+            ("lhu", Policy::Lhu),
+            ("fld", Policy::Fld),
+            ("multidim", Policy::Multidim { w: [0.65, 0.05, 0.10, 0.20] }),
+        ] {
+            let p2 = p.clone();
+            bench(&format!("replay {label} {name}"), || {
+                let _ = replay(&traces, p2.clone(), &cfg);
+            });
+            penalties.push((name, replay(&traces, p, &cfg).penalty));
+        }
+        let base = penalties[0].1;
+        print!("\n{label} normalized penalties:");
+        for (name, pen) in &penalties {
+            print!(" {name}={:.3}", pen / base);
+        }
+        println!("\n");
+    }
+}

@@ -1,0 +1,84 @@
+//! Fig 14/15/16 bench: end-to-end decode throughput + prefill latency of
+//! HOBBIT vs every baseline at paper scale (the DES), plus one live
+//! tiny-model serving measurement per hardware profile (the real path).
+
+use std::path::PathBuf;
+
+use hobbit::baselines::{self, EQ3_WEIGHTS};
+use hobbit::config::HardwareConfig;
+use hobbit::coordinator::{Coordinator, Request};
+use hobbit::engine::Engine;
+use hobbit::sim::des::simulate_decode;
+use hobbit::sim::params::{SimHardware, SimModel};
+use hobbit::trace::{generate, TraceGenConfig};
+use hobbit::util::benchkit::{bench_cfg, header, BenchConfig};
+
+fn main() {
+    println!("== sim @ paper scale: decode tok/s (prefill s) ==\n");
+    for (gname, hw, systems) in [
+        ("orin-int8", SimHardware::orin(), baselines::group_orin_int8()),
+        ("4090-f16", SimHardware::rtx4090(), baselines::group_rtx4090_f16()),
+        ("4090+cpu", SimHardware::rtx4090(), baselines::group_rtx4090_cpu()),
+    ] {
+        for model in [SimModel::mixtral_8x7b(), SimModel::phi_moe()] {
+            let gen = if model.n_experts == 16 {
+                TraceGenConfig::phi_like()
+            } else {
+                TraceGenConfig::mixtral_like()
+            };
+            let traces = generate(&gen, 2, 64);
+            print!("{gname:<10} {:<14}", model.name);
+            for sys in &systems {
+                let (p, d) = simulate_decode(sys, &hw, &model, &traces, 16, 1);
+                print!(" {}={:.2}t/s({:.2}s)", sys.name, d.tps(), p.latency);
+            }
+            println!();
+        }
+    }
+
+    // ablation: dynamic loading on/off (Fig 16)
+    println!("\n== Fig 16 ablation (sim): dynamic loading speedup ==");
+    for model in [SimModel::mixtral_8x7b(), SimModel::phi_moe()] {
+        let traces = generate(&TraceGenConfig::mixtral_like(), 2, 64);
+        let hw = SimHardware::orin();
+        let on = simulate_decode(&hobbit::sim::des::SimSystem::hobbit_int8(EQ3_WEIGHTS), &hw, &model, &traces, 16, 1).1;
+        let mut sys_off = hobbit::sim::des::SimSystem::hobbit_int8(EQ3_WEIGHTS);
+        sys_off.dynamic = false;
+        sys_off.lo_cache_frac = 0.0;
+        let off = simulate_decode(&sys_off, &hw, &model, &traces, 16, 1).1;
+        println!("  {}: {:.2}x", model.name, on.tps() / off.tps());
+    }
+
+    // live tiny-model serving (real path)
+    let artifacts = PathBuf::from("artifacts");
+    if !artifacts.join("mixtral-tiny/manifest.json").exists() {
+        eprintln!("\n(artifacts not built; skipping live benches)");
+        return;
+    }
+    println!("\n== live tiny-model serving (PJRT real path) ==\n");
+    header();
+    for hw_name in ["rtx4090", "orin"] {
+        let hw = HardwareConfig::preset(hw_name).unwrap();
+        let engine =
+            Engine::new(&artifacts, "mixtral-tiny", baselines::real_hobbit(hw)).unwrap();
+        let mut coord = Coordinator::new(engine);
+        let mut n = 0u64;
+        bench_cfg(
+            &format!("live generate [16 in, 8 out] @ {hw_name}"),
+            BenchConfig { warmup_iters: 1, min_iters: 3, max_iters: 5, min_time_s: 0.0 },
+            || {
+                n += 1;
+                let _ = coord
+                    .generate(&Request::new(n, "sixteen byte pro", 8))
+                    .unwrap();
+            },
+        );
+        coord.sync_report();
+        println!(
+            "   -> mean decode {:.2} tok/s, prefill {:.3} s, hit ratio {:.1}%",
+            coord.report.mean_decode_tps(),
+            coord.report.mean_prefill_s(),
+            100.0 * coord.report.cache.hit_ratio()
+        );
+    }
+}

@@ -1,0 +1,43 @@
+//! Fig 17(a) bench: the Stacking Computer (one stacked gate launch for p
+//! layers) vs the naive sequential loop — both as compiled PJRT
+//! executables. The paper's claim: stacked cost is ~flat in p, sequential
+//! grows linearly.
+
+use std::path::PathBuf;
+
+use hobbit::config::ModelConfig;
+use hobbit::runtime::{lit_f32, Runtime};
+use hobbit::util::benchkit::{bench, header};
+
+fn main() {
+    let dir = PathBuf::from("artifacts/mixtral-tiny");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("artifacts not built; run `make artifacts`");
+        return;
+    }
+    let mut rt = Runtime::open(&dir).unwrap();
+    let cfg = ModelConfig::from_manifest(&rt.manifest.model_json()).unwrap();
+    let (d, e) = (cfg.d_model, cfg.n_experts as usize);
+
+    header();
+    let mut results = Vec::new();
+    for p in 1..=4usize {
+        let x = lit_f32(&[1, d], &vec![0.1; d]).unwrap();
+        let pn = lit_f32(&[p, d], &vec![1.0; p * d]).unwrap();
+        let wg = lit_f32(&[p, d, e], &vec![0.02; p * d * e]).unwrap();
+        for kind in ["gate", "gate_seq"] {
+            let name = format!("{kind}_p{p}_s1");
+            rt.ensure(&name).unwrap();
+            let r = bench(&format!("{name} (p={p})"), || {
+                let _ = rt.execute(&name, &[&x, &pn, &wg]).unwrap();
+            });
+            results.push((kind, p, r.summary.p50));
+        }
+    }
+    // headline ratio: sequential p=4 vs stacked p=4
+    let stacked4 = results.iter().find(|r| r.0 == "gate" && r.1 == 4).unwrap().2;
+    let seq4 = results.iter().find(|r| r.0 == "gate_seq" && r.1 == 4).unwrap().2;
+    let stacked1 = results.iter().find(|r| r.0 == "gate" && r.1 == 1).unwrap().2;
+    println!("\nstacked p=4 vs p=1: {:.2}x (flat is 1.0)", stacked4 / stacked1);
+    println!("sequential p=4 vs stacked p=4: {:.2}x", seq4 / stacked4);
+}

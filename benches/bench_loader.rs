@@ -1,0 +1,65 @@
+//! Loader/memory-hierarchy bench: transfer engine rates, task queue
+//! round-trip latency, and the scheduler thread's on-demand vs prefetch
+//! lane behaviour under load (the Fig 6/9 machinery).
+
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+
+use hobbit::cache::{CacheManager, Policy, Pool};
+use hobbit::config::ModelConfig;
+use hobbit::loader::{ExpertLoader, TaskKind};
+use hobbit::memory::{LinkModel, ThrottledCopier};
+use hobbit::model::ExpertStore;
+use hobbit::runtime::Manifest;
+use hobbit::util::benchkit::{bench, header};
+use hobbit::{ExpertKey, Precision};
+
+fn main() {
+    header();
+
+    // raw throttled-copy rates at the modeled links
+    for (label, bw) in [("16 GB/s", 16e9), ("1.5 GB/s", 1.5e9)] {
+        let copier = ThrottledCopier::new(LinkModel { bytes_per_s: bw, latency_s: 0.0 });
+        let src = vec![7u8; 1_572_864]; // one f32 tiny expert
+        let mut dst = vec![0u8; src.len()];
+        bench(&format!("throttled memcpy 1.5MB @ {label}"), || {
+            let _ = copier.transfer(&src, &mut dst);
+        });
+    }
+
+    let root = PathBuf::from("artifacts");
+    if !root.join("mixtral-tiny/manifest.json").exists() {
+        eprintln!("artifacts not built; skipping loader round-trip benches");
+        return;
+    }
+    let manifest = Manifest::parse(
+        &std::fs::read_to_string(root.join("mixtral-tiny/manifest.json")).unwrap(),
+    )
+    .unwrap();
+    let cfg = ModelConfig::from_manifest(&manifest.model_json()).unwrap();
+    let store =
+        Arc::new(ExpertStore::load(&root.join("weights/mixtral-tiny"), &cfg).unwrap());
+
+    // loader round-trip: submit -> scheduler thread -> commit -> wait
+    let cache = Arc::new(Mutex::new(CacheManager::new(
+        cfg.n_layers,
+        cfg.n_experts,
+        4,
+        cfg.bytes_for(Precision::F32),
+        4,
+        cfg.bytes_for(Precision::Q8),
+        Policy::Lru,
+        0.25,
+    )));
+    let copier = Arc::new(ThrottledCopier::new(LinkModel { bytes_per_s: 64e9, latency_s: 0.0 }));
+    let loader = ExpertLoader::start(store, cache, copier);
+    let mut i = 0u32;
+    bench("loader round-trip (submit+wait, 64GB/s link)", || {
+        // rotate keys so every submit is a real (non-deduped) load
+        let key = ExpertKey::new(i % cfg.n_layers, (i / cfg.n_layers) % cfg.n_experts);
+        i += 1;
+        if let Some(id) = loader.submit(key, Precision::Q8, Pool::Lo, TaskKind::OnDemand, 0) {
+            loader.wait(&[id]);
+        }
+    });
+}

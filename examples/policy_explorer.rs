@@ -1,0 +1,66 @@
+//! Policy explorer: compare cache replacement policies (the Fig 18 space)
+//! on synthetic gating traces AND on the live engine, then sweep the
+//! Eq. 3 weight blend to see the calibration surface.
+//!
+//! ```sh
+//! cargo run --release --example policy_explorer
+//! ```
+
+use hobbit::cache::Policy;
+use hobbit::trace::replay::{replay, ReplayConfig};
+use hobbit::trace::{generate, TraceGenConfig};
+
+fn main() {
+    println!("== cache policy explorer ==\n");
+    let gen = TraceGenConfig::mixtral_like();
+    let traces = generate(&gen, 6, 96);
+    let cfg = ReplayConfig { hi_capacity: 24, lo_capacity: 32, ..Default::default() };
+
+    println!("{:<14} {:>10} {:>10} {:>12}", "policy", "hit%", "penalty", "vs random");
+    println!("{}", "-".repeat(50));
+    let base = replay(&traces, Policy::Random { seed: 3 }, &cfg).penalty;
+    for (name, p) in [
+        ("random", Policy::Random { seed: 3 }),
+        ("lru", Policy::Lru),
+        ("lfu-seq", Policy::LfuSeq),
+        ("lfu-model", Policy::LfuModel),
+        ("lhu", Policy::Lhu),
+        ("fld", Policy::Fld),
+        ("multidim", Policy::Multidim { w: [0.65, 0.05, 0.10, 0.20] }),
+    ] {
+        let r = replay(&traces, p, &cfg);
+        println!(
+            "{:<14} {:>9.1}% {:>10.1} {:>11.3}x",
+            name,
+            100.0 * r.hit_ratio(),
+            r.penalty,
+            r.penalty / base
+        );
+    }
+
+    println!("\n== Eq. 3 weight sweep (lru, lfu, lhu, fld) ==\n");
+    println!("{:<28} {:>10}", "weights", "penalty");
+    println!("{}", "-".repeat(40));
+    for w in [
+        [1.0, 0.0, 0.0, 0.0],
+        [0.0, 1.0, 0.0, 0.0],
+        [0.0, 0.0, 1.0, 0.0],
+        [0.0, 0.0, 0.0, 1.0],
+        [0.25, 0.25, 0.25, 0.25],
+        [0.65, 0.05, 0.10, 0.20],
+        [0.5, 0.1, 0.2, 0.2],
+        [0.4, 0.2, 0.2, 0.2],
+    ] {
+        let r = replay(&traces, Policy::Multidim { w }, &cfg);
+        println!("{:<28} {:>10.1}", format!("{w:?}"), r.penalty);
+    }
+
+    println!("\n== cache-size sensitivity (multidim) ==\n");
+    println!("{:<20} {:>10} {:>10}", "hi/lo capacity", "hit%", "penalty");
+    println!("{}", "-".repeat(44));
+    for (hi, lo) in [(8, 12), (16, 24), (24, 32), (43, 55), (64, 64)] {
+        let c = ReplayConfig { hi_capacity: hi, lo_capacity: lo, ..Default::default() };
+        let r = replay(&traces, Policy::Multidim { w: [0.65, 0.05, 0.10, 0.20] }, &c);
+        println!("{:<20} {:>9.1}% {:>10.1}", format!("{hi}/{lo}"), 100.0 * r.hit_ratio(), r.penalty);
+    }
+}

@@ -1,0 +1,68 @@
+//! Quickstart: load the tiny MoE model through the PJRT runtime and
+//! generate text with HOBBIT's full pipeline (dynamic mixed-precision
+//! loading + adaptive prefetching + multidimensional caching).
+//!
+//! Build artifacts first: `make artifacts`. Then:
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use hobbit::baselines;
+use hobbit::config::HardwareConfig;
+use hobbit::coordinator::{Coordinator, Request};
+use hobbit::engine::Engine;
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = std::path::PathBuf::from(
+        std::env::args().nth(1).unwrap_or_else(|| "artifacts".into()),
+    );
+
+    // An RTX-4090-like offloading profile, scaled to the tiny model:
+    // the expert cache holds 20 of 64 high-precision experts and loading
+    // runs at a PCIe-like (scaled) 1.5 GB/s.
+    let opts = baselines::real_hobbit(HardwareConfig::rtx4090_real());
+    println!("loading mixtral-tiny ...");
+    let engine = Engine::new(&artifacts, "mixtral-tiny", opts)?;
+    println!(
+        "model: {} layers x {} experts (top-{}), platform: {}",
+        engine.cfg.n_layers,
+        engine.cfg.n_experts,
+        engine.cfg.top_k,
+        engine.rt.platform()
+    );
+
+    let mut coord = Coordinator::new(engine);
+    let req = Request {
+        id: 1,
+        prompt: "Mixture-of-experts models activate only a few experts per token".into(),
+        max_new_tokens: 48,
+        temperature: 0.9,
+    };
+    let r = coord.generate(&req)?;
+
+    println!("\ngenerated ({} tokens): {:?}", r.tokens.len(), r.text);
+    println!(
+        "\nprefill latency : {:.3} s\ndecode speed    : {:.2} tok/s\ncompute time    : {:.3} s\nload-wait time  : {:.3} s",
+        r.metrics.prefill_time.as_secs_f64(),
+        r.metrics.decode_tps(),
+        r.metrics.compute_time.as_secs_f64(),
+        r.metrics.load_wait_time.as_secs_f64(),
+    );
+    coord.sync_report();
+    let st = &coord.report.loader;
+    println!(
+        "loader          : {} hi + {} lo on-demand loads, {} prefetches, {} skipped, {:.1} MB moved",
+        st.ondemand_loads[0],
+        st.ondemand_loads[1],
+        st.prefetch_loads.iter().sum::<u64>(),
+        st.skipped,
+        st.bytes_loaded as f64 / 1e6
+    );
+    println!(
+        "cache           : hit ratio {:.1}%, miss penalty {:.1}",
+        100.0 * coord.report.cache.hit_ratio(),
+        coord.report.cache.miss_penalty
+    );
+    Ok(())
+}

@@ -1,0 +1,114 @@
+//! END-TO-END serving driver (the EXPERIMENTS.md validation run): load
+//! the tiny MoE model, serve batched requests over the real TCP front-end
+//! under an offloading-constrained hardware profile, and report prefill
+//! latency + decode throughput per length group — the paper's §5.1
+//! protocol (batch 1, groups [16,32] [16,128] [128,32] [128,128]) at
+//! reproduction scale.
+//!
+//! ```sh
+//! cargo run --release --example serve_offload -- [artifacts] [model] [hardware]
+//! ```
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+
+use hobbit::baselines;
+use hobbit::config::HardwareConfig;
+use hobbit::coordinator::Coordinator;
+use hobbit::engine::Engine;
+use hobbit::server::Server;
+use hobbit::util::json::Json;
+use hobbit::util::rng::Rng;
+
+/// The paper's four [input_len, output_len] groups, shortened for the
+/// tiny testbed (prompt bytes -> roughly the target token counts).
+const GROUPS: [(usize, usize); 4] = [(16, 32), (16, 128), (128, 32), (128, 128)];
+const REQUESTS_PER_GROUP: usize = 3;
+
+fn synth_prompt(rng: &mut Rng, len: usize) -> String {
+    const WORDS: [&str; 12] = [
+        "expert", "router", "cache", "token", "layer", "gate", "moe", "edge",
+        "memory", "load", "tensor", "batch",
+    ];
+    let mut s = String::new();
+    while s.len() < len {
+        if !s.is_empty() {
+            s.push(' ');
+        }
+        s.push_str(WORDS[rng.below(WORDS.len())]);
+    }
+    s.truncate(len);
+    s
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut args = std::env::args().skip(1);
+    let artifacts = std::path::PathBuf::from(args.next().unwrap_or_else(|| "artifacts".into()));
+    let model = args.next().unwrap_or_else(|| "mixtral-tiny".into());
+    let hw_name = args.next().unwrap_or_else(|| "rtx4090".into());
+    let hw = HardwareConfig::preset(&hw_name).expect("hardware preset");
+
+    println!("== HOBBIT end-to-end serving driver ==");
+    println!("model={model} hardware={hw_name} (bw {:.2} GB/s, hi cache {} experts)",
+        hw.load_bw / 1e9, hw.hi_cache_experts);
+
+    let engine = Engine::new(&artifacts, &model, baselines::real_hobbit(hw))?;
+    let mut coord = Coordinator::new(engine);
+    let mut server = Server::bind("127.0.0.1:0")?;
+    let addr = server.local_addr()?.to_string();
+    println!("serving on {addr}\n");
+
+    let total_conns = GROUPS.len() * REQUESTS_PER_GROUP;
+    let client = std::thread::spawn(move || -> anyhow::Result<Vec<(usize, usize, Json)>> {
+        let mut rng = Rng::new(0xE2E);
+        let mut out = Vec::new();
+        for (inp, gen) in GROUPS {
+            for _ in 0..REQUESTS_PER_GROUP {
+                let prompt = synth_prompt(&mut rng, inp);
+                let mut stream = TcpStream::connect(&addr)?;
+                writeln!(stream, "GEN {gen} 0.8 {prompt}")?;
+                stream.flush()?;
+                let mut reader = BufReader::new(stream);
+                let mut line = String::new();
+                reader.read_line(&mut line)?;
+                let j = Json::parse(line.trim_end()).map_err(anyhow::Error::msg)?;
+                out.push((inp, gen, j));
+            }
+        }
+        Ok(out)
+    });
+
+    server.serve(&mut coord, Some(total_conns))?;
+    let results = client.join().unwrap()?;
+
+    println!("{:<14} {:>10} {:>14} {:>12}", "group", "requests", "prefill(s)", "decode tok/s");
+    println!("{}", "-".repeat(56));
+    for (inp, gen) in GROUPS {
+        let rows: Vec<&Json> = results
+            .iter()
+            .filter(|(i, g, _)| *i == inp && *g == gen)
+            .map(|(_, _, j)| j)
+            .collect();
+        let mean = |k: &str| {
+            rows.iter().filter_map(|j| j.get(k).and_then(Json::as_f64)).sum::<f64>()
+                / rows.len() as f64
+        };
+        println!(
+            "[{inp:>3},{gen:>3}]     {:>10} {:>14.3} {:>12.2}",
+            rows.len(),
+            mean("prefill_s"),
+            mean("decode_tps")
+        );
+    }
+
+    coord.sync_report();
+    let rep = &coord.report;
+    println!("\ncache hit ratio {:.1}% | miss penalty {:.1} | {:.1} MB loaded | prefetch acc {:.0}%",
+        100.0 * rep.cache.hit_ratio(),
+        rep.cache.miss_penalty,
+        rep.loader.bytes_loaded as f64 / 1e6,
+        100.0 * rep.loader.prefetch_hits as f64 / rep.loader.prefetch_total.max(1) as f64,
+    );
+    println!("\nfull report JSON:\n{}", rep.to_json().to_string());
+    Ok(())
+}

@@ -1,0 +1,182 @@
+"""AOT-lower every L2 compute unit to HLO *text* for the rust runtime.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which the xla crate's bundled
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs, per model, under artifacts/<model>/:
+
+  attn_s{S}.hlo.txt              S in {1, 16, 128}
+  gate_p{p}_s1.hlo.txt           p in {1..4}   (Stacking Computer, decode)
+  gate_seq_p{p}_s1.hlo.txt       p in {1..4}   (sequential baseline, Fig 17a)
+  gate_p1_s{S}.hlo.txt           S in {16, 128} (prefill gating)
+  expert_{fmt}_s{S}.hlo.txt      fmt in {f32, q8, q4, q2} x S in {1, 16, 128}
+  head_s{S}.hlo.txt              S in {1, 16, 128}
+  manifest.json                  shapes/dtypes/arity of every artifact
+
+Every artifact returns a tuple (return_tuple=True) and is unwrapped with
+to_tupleN() on the rust side.  Python runs ONCE at build time; the rust
+binary is self-contained afterwards.
+"""
+
+import argparse
+import functools
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import configs, model
+from .configs import MODELS, PRECISIONS, SEQ_VARIANTS, PREFILL_CHUNKS, GATE_STACK_DEPTHS
+
+F32 = jnp.float32
+S32 = jnp.int32
+U8 = jnp.uint8
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _pack_rows(rows, fmt):
+    return {"q8": rows, "q4": rows // 2, "q2": rows // 4}[fmt]
+
+
+def artifact_defs(cfg):
+    """Yield (name, fn, arg_specs, n_outputs) for every compiled unit."""
+    d, ff, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    h, hkv, hd, t = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim, cfg.max_seq
+    g = cfg.quant_group
+    v = cfg.vocab
+
+    defs = []
+
+    for s in SEQ_VARIANTS:
+        defs.append((
+            f"attn_s{s}",
+            functools.partial(model.attn_block, cfg),
+            [spec((s, d)), spec((d,)), spec((d, h * hd)), spec((d, hkv * hd)),
+             spec((d, hkv * hd)), spec((h * hd, d)), spec((t, hkv, hd)),
+             spec((t, hkv, hd)), spec((), S32)],
+            3,
+        ))
+
+    def gate_fn(x, pn, wg):
+        probs = model.gate_stack(cfg, x, pn, wg)
+        hn0 = model.rmsnorm(x, pn[0], cfg.norm_eps)
+        return probs, hn0
+
+    def gate_seq_fn(x, pn, wg):
+        probs = model.gate_sequential(cfg, x, pn, wg)
+        hn0 = model.rmsnorm(x, pn[0], cfg.norm_eps)
+        return probs, hn0
+
+    for p in GATE_STACK_DEPTHS:
+        defs.append((
+            f"gate_p{p}_s1", gate_fn,
+            [spec((1, d)), spec((p, d)), spec((p, d, e))], 2))
+        defs.append((
+            f"gate_seq_p{p}_s1", gate_seq_fn,
+            [spec((1, d)), spec((p, d)), spec((p, d, e))], 2))
+    for s in PREFILL_CHUNKS:
+        defs.append((
+            f"gate_p1_s{s}", gate_fn,
+            [spec((s, d)), spec((1, d)), spec((1, d, e))], 2))
+
+    for s in SEQ_VARIANTS:
+        # two lowerings per expert unit: the Pallas kernel (the real-TPU
+        # hot path; interpret-mode on CPU) and the XLA-fused jnp variant
+        # the engine serves from on the CPU PJRT client (§Perf)
+        defs.append((
+            f"expert_f32_s{s}", model.expert_ffn_f32,
+            [spec((s, d)), spec((d, ff)), spec((d, ff)), spec((ff, d)),
+             spec((s,))], 1))
+        defs.append((
+            f"expert_fast_f32_s{s}", model.expert_ffn_f32_fast,
+            [spec((s, d)), spec((d, ff)), spec((d, ff)), spec((ff, d)),
+             spec((s,))], 1))
+        for fmt in PRECISIONS[1:]:
+            qspecs = [spec((s, d)),
+                      spec((_pack_rows(d, fmt), ff), U8), spec((d // g, ff)),
+                      spec((_pack_rows(d, fmt), ff), U8), spec((d // g, ff)),
+                      spec((_pack_rows(ff, fmt), d), U8), spec((ff // g, d)),
+                      spec((s,))]
+            fn = functools.partial(model.expert_ffn_quant, fmt=fmt, group=g)
+            defs.append((f"expert_{fmt}_s{s}", fn, list(qspecs), 1))
+            ffn = functools.partial(model.expert_ffn_quant_fast, fmt=fmt, group=g)
+            defs.append((f"expert_fast_{fmt}_s{s}", ffn, list(qspecs), 1))
+
+    for s in SEQ_VARIANTS:
+        defs.append((
+            f"head_s{s}",
+            functools.partial(model.lm_head, cfg),
+            [spec((s, d)), spec((d,)), spec((v, d))], 1))
+
+    return defs
+
+
+def build_model(cfg, out_root, only=None, force=False):
+    out_dir = os.path.join(out_root, cfg.name)
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"model": cfg.to_dict(), "artifacts": {}}
+    n_built = 0
+    for name, fn, arg_specs, n_out in artifact_defs(cfg):
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        entry = {
+            "file": f"{name}.hlo.txt",
+            "inputs": [{"shape": list(a.shape), "dtype": str(a.dtype.name)}
+                       for a in arg_specs],
+            "outputs": n_out,
+        }
+        manifest["artifacts"][name] = entry
+        if only and not any(tok in name for tok in only):
+            continue
+        if os.path.exists(path) and not force:
+            continue
+        t0 = time.time()
+        lowered = jax.jit(fn).lower(*arg_specs)
+        text = to_hlo_text(lowered)
+        with open(path, "w") as f:
+            f.write(text)
+        n_built += 1
+        print(f"  [{cfg.name}] {name}: {len(text)/1e3:.0f} kB "
+              f"({time.time()-t0:.1f}s)", flush=True)
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    return n_built
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifacts root")
+    ap.add_argument("--models", nargs="*", default=list(MODELS),
+                    help="subset of model names")
+    ap.add_argument("--only", nargs="*", default=None,
+                    help="only build artifacts whose name contains any token")
+    ap.add_argument("--force", action="store_true", help="rebuild even if present")
+    args = ap.parse_args()
+
+    t0 = time.time()
+    total = 0
+    for mname in args.models:
+        cfg = MODELS[mname]
+        print(f"building artifacts for {mname} ...", flush=True)
+        total += build_model(cfg, args.out, only=args.only, force=args.force)
+    print(f"built {total} artifacts in {time.time()-t0:.0f}s -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

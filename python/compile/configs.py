@@ -1,0 +1,101 @@
+"""Model configurations for the HOBBIT reproduction.
+
+Two tiny MoE transformer configs mirror the structure (expert count, top-k,
+layer count ratio) of the paper's evaluated models (Mixtral-8x7B, Phi-MoE)
+at a scale that runs end-to-end on a single-CPU PJRT client.  The
+paper-scale byte sizes used by the discrete-event simulator live on the
+rust side (rust/src/sim/params.rs); these configs drive the *real* path.
+"""
+
+from dataclasses import dataclass, field, asdict
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    d_ff: int          # expert hidden dim
+    n_experts: int     # experts per layer
+    top_k: int
+    n_heads: int       # query heads
+    n_kv_heads: int
+    vocab: int         # byte-level tokenizer: 256 bytes + BOS + EOS + PAD + UNK
+    max_seq: int       # KV-cache capacity
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-5
+    # quantization group size along the contraction (d_model / d_ff) dim
+    quant_group: int = 64
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+    @property
+    def expert_params(self) -> int:
+        """Parameters of one expert (w1, w3: [d, ff]; w2: [ff, d])."""
+        return 3 * self.d_model * self.d_ff
+
+    def expert_bytes(self, precision: str) -> int:
+        """On-wire bytes of one expert at a given precision (incl. scales)."""
+        n = self.expert_params
+        groups = n // self.quant_group
+        if precision == "f32":
+            return 4 * n
+        if precision == "q8":
+            return n + 4 * groups
+        if precision == "q4":
+            return n // 2 + 4 * groups
+        if precision == "q2":
+            return n // 4 + 4 * groups
+        raise ValueError(f"unknown precision {precision!r}")
+
+    def to_dict(self) -> dict:
+        d = asdict(self)
+        d["head_dim"] = self.head_dim
+        d["expert_params"] = self.expert_params
+        d["expert_bytes"] = {p: self.expert_bytes(p) for p in PRECISIONS}
+        return d
+
+
+# Precisions, highest to lowest. "f32" stands in for the paper's fp16 class;
+# q8 is the "int4-role" replacement (4.0x byte ratio, matching fp16:int4);
+# q2 is the "int2-role" replacement for the q8-served model (4.0x again).
+PRECISIONS = ("f32", "q8", "q4", "q2")
+
+# Sequence-length variants we AOT-compile. Prefill runs in chunks of these
+# sizes; decode uses S=1.
+PREFILL_CHUNKS = (16, 128)
+DECODE_S = 1
+SEQ_VARIANTS = (DECODE_S,) + PREFILL_CHUNKS
+
+# Stacking-Computer depths we AOT-compile (Fig 8 / Fig 17).
+GATE_STACK_DEPTHS = (1, 2, 3, 4)
+
+MIXTRAL_TINY = ModelConfig(
+    name="mixtral-tiny",
+    n_layers=8,
+    d_model=256,
+    d_ff=512,
+    n_experts=8,
+    top_k=2,
+    n_heads=8,
+    n_kv_heads=4,
+    vocab=260,
+    max_seq=512,
+)
+
+PHI_TINY = ModelConfig(
+    name="phi-tiny",
+    n_layers=8,
+    d_model=256,
+    d_ff=256,
+    n_experts=16,
+    top_k=2,
+    n_heads=8,
+    n_kv_heads=4,
+    vocab=260,
+    max_seq=512,
+)
+
+MODELS = {m.name: m for m in (MIXTRAL_TINY, PHI_TINY)}

@@ -1,0 +1,59 @@
+"""Dump reference logits for the cross-language correctness check.
+
+Runs the pure-JAX oracle (model.reference_forward) on a fixed token
+sequence with the exported weights and writes the logits to
+artifacts/weights/<model>/reference_logits.json. The rust integration
+test rust/tests/engine_vs_reference.rs replays the same tokens through
+the PJRT engine and asserts agreement — the end-to-end proof that the
+three layers compose.
+"""
+
+import argparse
+import json
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import gen_weights, model
+from .configs import MODELS
+
+# fixed pseudo-text tokens (BOS + printable bytes), same generator as the
+# rust side's figures/real.rs eval_tokens
+def eval_tokens(n: int):
+    v = [256]  # BOS
+    s = 0x9E3779B97F4A7C15
+    while len(v) < n:
+        s = (s * 6364136223846793005 + 1442695040888963407) % (1 << 64)
+        v.append(32 + (s >> 33) % 90)
+    return v
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--models", nargs="*", default=list(MODELS))
+    ap.add_argument("--seed", type=int, default=20240917)
+    ap.add_argument("--tokens", type=int, default=24)
+    args = ap.parse_args()
+
+    for mname in args.models:
+        cfg = MODELS[mname]
+        params = {k: jnp.asarray(v)
+                  for k, v in gen_weights.make_params(cfg, args.seed).items()}
+        toks = eval_tokens(args.tokens)
+        logits = model.reference_forward(cfg, params, jnp.asarray(toks, jnp.int32))
+        logits = np.asarray(logits, dtype=np.float64)
+        out = {
+            "tokens": toks,
+            "vocab": cfg.vocab,
+            # logits at every position (next-token distribution per prefix)
+            "logits": [[round(float(x), 6) for x in row] for row in logits],
+        }
+        path = f"{args.out}/weights/{mname}/reference_logits.json"
+        with open(path, "w") as f:
+            json.dump(out, f)
+        print(f"  [{mname}] wrote reference logits for {len(toks)} tokens -> {path}")
+
+
+if __name__ == "__main__":
+    main()

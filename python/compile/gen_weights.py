@@ -1,0 +1,148 @@
+"""Generate and export model weights for the rust coordinator.
+
+The paper evaluates pretrained Mixtral-8x7B / Phi-MoE checkpoints; those are
+unavailable offline, so we export seeded random-init weights at matching
+*structure* (DESIGN.md §Hardware-Adaptation).  Every expert is additionally
+exported at every quantized precision so the Dynamic Expert Loader has real
+byte-exact low-precision versions to fetch.
+
+Layout under artifacts/weights/<model>/:
+
+  weights.json               manifest: every tensor's file, shape, dtype
+  nonexpert.bin              all non-expert tensors, concatenated f32 LE
+  experts_f32.bin            [layer][expert] (w1 | w3 | w2) f32 LE
+  experts_q8.bin / _q4 / _q2 per-expert packed codes + scales, concatenated
+                             in the same (layer, expert) order
+
+Expert record layouts match rust/src/quant.rs + model/storage.rs exactly;
+python/tests/test_weights.py round-trips them.
+"""
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+from .configs import MODELS, PRECISIONS
+from . import quantize
+
+
+def _init(rng, shape, fan_in):
+    return (rng.standard_normal(shape, dtype=np.float32)
+            * np.float32(1.0 / np.sqrt(fan_in)))
+
+
+def nonexpert_tensors(cfg, rng):
+    """Ordered (name, array) list of all non-expert weights."""
+    d, e, v = cfg.d_model, cfg.n_experts, cfg.vocab
+    h, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    out = [("emb", _init(rng, (v, d), d))]
+    for li in range(cfg.n_layers):
+        out += [
+            (f"attn_norm.{li}", np.ones(d, np.float32)),
+            (f"wq.{li}", _init(rng, (d, h * hd), d)),
+            (f"wk.{li}", _init(rng, (d, hkv * hd), d)),
+            (f"wv.{li}", _init(rng, (d, hkv * hd), d)),
+            (f"wo.{li}", _init(rng, (h * hd, d), h * hd)),
+            (f"post_norm.{li}", np.ones(d, np.float32)),
+            (f"wg.{li}", _init(rng, (d, e), d)),
+        ]
+    out.append(("final_norm", np.ones(d, np.float32)))
+    return out
+
+
+def expert_tensors(cfg, rng, li, ei):
+    d, ff = cfg.d_model, cfg.d_ff
+    return [
+        (f"expert.{li}.{ei}.w1", _init(rng, (d, ff), d)),
+        (f"expert.{li}.{ei}.w3", _init(rng, (d, ff), d)),
+        (f"expert.{li}.{ei}.w2", _init(rng, (ff, d), ff)),
+    ]
+
+
+def quantized_record(cfg, mats, fmt):
+    """Packed bytes of one expert at `fmt`: for each of w1, w3, w2 in order,
+    packed codes then scales (both C-order, LE)."""
+    g = cfg.quant_group
+    chunks = []
+    for _, w in mats:
+        packed, scales = quantize.quantize(w, g, fmt)
+        chunks.append(packed.tobytes())
+        chunks.append(scales.tobytes())
+    return b"".join(chunks)
+
+
+def export_model(cfg, out_root, seed):
+    t0 = time.time()
+    out_dir = os.path.join(out_root, "weights", cfg.name)
+    os.makedirs(out_dir, exist_ok=True)
+    rng = np.random.default_rng(seed)
+
+    manifest = {"model": cfg.name, "seed": seed, "nonexpert": [], "experts": {}}
+
+    # --- non-expert weights -------------------------------------------------
+    off = 0
+    with open(os.path.join(out_dir, "nonexpert.bin"), "wb") as f:
+        for name, arr in nonexpert_tensors(cfg, rng):
+            f.write(arr.tobytes())
+            manifest["nonexpert"].append(
+                {"name": name, "shape": list(arr.shape), "offset": off})
+            off += arr.nbytes
+    manifest["nonexpert_bytes"] = off
+
+    # --- experts, all precisions -------------------------------------------
+    files = {fmt: open(os.path.join(out_dir, f"experts_{fmt}.bin"), "wb")
+             for fmt in PRECISIONS}
+    rec_bytes = {fmt: None for fmt in PRECISIONS}
+    for li in range(cfg.n_layers):
+        for ei in range(cfg.n_experts):
+            mats = expert_tensors(cfg, rng, li, ei)
+            f32_rec = b"".join(w.tobytes() for _, w in mats)
+            files["f32"].write(f32_rec)
+            rec_bytes["f32"] = len(f32_rec)
+            for fmt in PRECISIONS[1:]:
+                rec = quantized_record(cfg, mats, fmt)
+                files[fmt].write(rec)
+                rec_bytes[fmt] = len(rec)
+    for f in files.values():
+        f.close()
+    manifest["experts"] = {
+        "order": "layer-major (layer, expert)",
+        "record_bytes": rec_bytes,
+        "count": cfg.n_layers * cfg.n_experts,
+    }
+
+    with open(os.path.join(out_dir, "weights.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    total = sum(rec_bytes[p] for p in PRECISIONS) * cfg.n_layers * cfg.n_experts
+    print(f"  [{cfg.name}] exported {cfg.n_layers}x{cfg.n_experts} experts, "
+          f"{total/1e6:.0f} MB expert data, {off/1e6:.1f} MB non-expert "
+          f"({time.time()-t0:.0f}s)")
+
+
+def make_params(cfg, seed):
+    """Regenerate the full parameter dict (same RNG stream as export_model)
+    for model.reference_forward — used by python tests and the accuracy
+    experiments to cross-check the rust engine on identical weights."""
+    rng = np.random.default_rng(seed)
+    params = dict(nonexpert_tensors(cfg, rng))
+    for li in range(cfg.n_layers):
+        for ei in range(cfg.n_experts):
+            params.update(dict(expert_tensors(cfg, rng, li, ei)))
+    return params
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--models", nargs="*", default=list(MODELS))
+    ap.add_argument("--seed", type=int, default=20240917)
+    args = ap.parse_args()
+    for m in args.models:
+        export_model(MODELS[m], args.out, args.seed)
+
+
+if __name__ == "__main__":
+    main()

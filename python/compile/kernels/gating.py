@@ -1,0 +1,49 @@
+"""L1 Pallas kernel: the Stacking Computer (paper §3.3, Fig 8).
+
+Computes the gating softmax of the *current* layer's input against the gate
+matrices of the next `p` layers in ONE kernel launch — the paper's
+observation is that the expert-count dimension E is tiny (8/16/64), so all
+p gating matmuls fit in a single stacked computation whose cost is nearly
+independent of p (reproduced by Fig 17(a) / `hobbit figures --fig 17a`).
+
+Grid iterates over the p stacked layers; each step holds one [d, E] gate
+matrix in VMEM and emits one softmax row.  interpret=True (CPU image).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gate_stack_kernel(xs_ref, wg_ref, o_ref):
+    x = xs_ref[0]                         # [S, d] — this stacked layer's input
+    logits = x @ wg_ref[0]                # [S, E]
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    e = jnp.exp(logits - m)
+    o_ref[0] = e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def gate_stack(xs, wg_stack):
+    """Stacked gating probabilities.
+
+    xs: [p, S, d] — the hidden state normalized with each stacked layer's
+    own post-attention norm weight; wg_stack: [p, d, E] -> probs [p, S, E]
+    """
+    p, s, d = xs.shape
+    e = wg_stack.shape[2]
+    return pl.pallas_call(
+        _gate_stack_kernel,
+        grid=(p,),
+        in_specs=[
+            pl.BlockSpec((1, s, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, d, e), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, s, e), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((p, s, e), jnp.float32),
+        interpret=True,
+    )(xs, wg_stack)
+
+
+def gate_single(x, wg):
+    """Single-layer gating probs: x [S, d], wg [d, E] -> [S, E]."""
+    return gate_stack(x[None], wg[None])[0]

@@ -1,0 +1,183 @@
+"""L1 Pallas kernels: the expert-FFN hot spot, in f32 and group-quantized
+(q8/q4/q2) variants with in-kernel dequantization.
+
+This is the paper's compute hot path: a SwiGLU expert FFN
+    y[s, :] = gatew[s] * ( (silu(x @ w1) * (x @ w3)) @ w2 )[s, :]
+where the quantized variants carry w1/w3/w2 as packed sub-byte codes plus
+per-(group, col) scales and dequantize *inside the matmul tile loop* — the
+TPU rethink of the paper's CUDA dequant kernels (DESIGN.md
+§Hardware-Adaptation):
+
+  * grid iterates over tiles of the expert hidden dim (d_ff); each step
+    holds one (d_model, FF_TILE) slab of w1/w3 and one (FF_TILE, d_model)
+    slab of w2 in VMEM — the HBM→VMEM schedule the paper expressed with
+    threadblocks is expressed here with a BlockSpec over the grid.
+  * dequant (unpack + scale) happens on the VMEM-resident tile right before
+    it feeds the MXU, so packed bytes are all that crosses HBM.
+  * the output block is revisited across grid steps and accumulated,
+    double-buffer friendly (no cross-step dependency except the += ).
+
+Kernels MUST run with interpret=True on this CPU-only image (real TPU
+lowering emits a Mosaic custom-call the CPU PJRT plugin cannot execute).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Tile of the expert hidden dimension processed per grid step. 128 matches
+# the TPU lane width so dequantized tiles feed the MXU without re-layout.
+FF_TILE = 128
+
+_PACK = {"q8": 1, "q4": 2, "q2": 4}
+_QOFF = {"q4": 8.0, "q2": 2.0}
+
+
+def _silu(x):
+    return x * jax.nn.sigmoid(x)
+
+
+# ---------------------------------------------------------------------------
+# f32 ("high precision") kernel
+# ---------------------------------------------------------------------------
+
+def _ffn_f32_kernel(x_ref, w1_ref, w3_ref, w2_ref, gw_ref, o_ref):
+    """One grid step: one FF_TILE slab of the hidden dim."""
+    x = x_ref[...]                       # [S, d]
+    h = _silu(x @ w1_ref[...]) * (x @ w3_ref[...])   # [S, FF_TILE]
+    part = h @ w2_ref[...]               # [S, d]
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += part
+
+    @pl.when(pl.program_id(0) == pl.num_programs(0) - 1)
+    def _scale():
+        o_ref[...] *= gw_ref[...][:, None]
+
+
+def ffn_f32(x, w1, w3, w2, gatew):
+    """Weighted SwiGLU expert FFN, f32 weights.
+
+    x: [S, d]; w1, w3: [d, ff]; w2: [ff, d]; gatew: [S] -> [S, d]
+    """
+    s, d = x.shape
+    ff = w1.shape[1]
+    assert ff % FF_TILE == 0, (ff, FF_TILE)
+    grid = (ff // FF_TILE,)
+    return pl.pallas_call(
+        _ffn_f32_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((s, d), lambda i: (0, 0)),
+            pl.BlockSpec((d, FF_TILE), lambda i: (0, i)),
+            pl.BlockSpec((d, FF_TILE), lambda i: (0, i)),
+            pl.BlockSpec((FF_TILE, d), lambda i: (i, 0)),
+            pl.BlockSpec((s,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((s, d), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((s, d), jnp.float32),
+        interpret=True,
+    )(x, w1, w3, w2, gatew)
+
+
+# ---------------------------------------------------------------------------
+# Quantized kernels (q8 / q4 / q2) with in-kernel group dequant
+# ---------------------------------------------------------------------------
+
+def _dequant_tile(packed, scales, rows, group, fmt):
+    """Dequantize a VMEM-resident packed tile.
+
+    packed: u8 [rows/pack, cols]; scales: f32 [rows/group, cols]
+    returns f32 [rows, cols].
+    """
+    pack = _PACK[fmt]
+    cols = packed.shape[-1]
+    if fmt == "q8":
+        codes = packed.astype(jnp.int8).astype(jnp.float32)
+    elif fmt == "q4":
+        nib0 = (packed & 0xF).astype(jnp.float32) - _QOFF["q4"]
+        nib1 = (packed >> 4).astype(jnp.float32) - _QOFF["q4"]
+        # interleave rows: packed row r holds logical rows 2r (lo), 2r+1 (hi)
+        codes = jnp.stack([nib0, nib1], axis=1).reshape(rows, cols)
+    elif fmt == "q2":
+        fields = [((packed >> (2 * i)) & 0x3).astype(jnp.float32) - _QOFF["q2"]
+                  for i in range(4)]
+        codes = jnp.stack(fields, axis=1).reshape(rows, cols)
+        codes = codes + 0.5  # symmetric 4-level grid {-1.5,-0.5,0.5,1.5}
+    else:
+        raise ValueError(fmt)
+    del pack
+    s = jnp.repeat(scales, group, axis=0)  # [rows, cols]
+    return codes * s
+
+
+def _ffn_quant_kernel(x_ref, w1p_ref, w1s_ref, w3p_ref, w3s_ref,
+                      w2p_ref, w2s_ref, gw_ref, o_ref, *, d, group, fmt):
+    x = x_ref[...]
+    w1 = _dequant_tile(w1p_ref[...], w1s_ref[...], d, group, fmt)
+    w3 = _dequant_tile(w3p_ref[...], w3s_ref[...], d, group, fmt)
+    w2 = _dequant_tile(w2p_ref[...], w2s_ref[...], FF_TILE, group, fmt)
+    h = _silu(x @ w1) * (x @ w3)         # [S, FF_TILE]
+    part = h @ w2                        # [S, d]
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += part
+
+    @pl.when(pl.program_id(0) == pl.num_programs(0) - 1)
+    def _scale():
+        o_ref[...] *= gw_ref[...][:, None]
+
+
+def ffn_quant(x, w1p, w1s, w3p, w3s, w2p, w2s, gatew, *, fmt, group):
+    """Weighted SwiGLU expert FFN over packed quantized weights.
+
+    Layouts follow python/compile/quantize.py:
+      w1p, w3p: u8 [d/pack, ff];   w1s, w3s: f32 [d/group, ff]
+      w2p:      u8 [ff/pack, d];   w2s:      f32 [ff/group, d]
+    """
+    s, d = x.shape
+    ff = w1p.shape[1]
+    pack = _PACK[fmt]
+    assert ff % FF_TILE == 0 and d % group == 0 and FF_TILE % group == 0
+    grid = (ff // FF_TILE,)
+    kern = functools.partial(_ffn_quant_kernel, d=d, group=group, fmt=fmt)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((s, d), lambda i: (0, 0)),
+            pl.BlockSpec((d // pack, FF_TILE), lambda i: (0, i)),
+            pl.BlockSpec((d // group, FF_TILE), lambda i: (0, i)),
+            pl.BlockSpec((d // pack, FF_TILE), lambda i: (0, i)),
+            pl.BlockSpec((d // group, FF_TILE), lambda i: (0, i)),
+            pl.BlockSpec((FF_TILE // pack, d), lambda i: (i, 0)),
+            pl.BlockSpec((FF_TILE // group, d), lambda i: (i, 0)),
+            pl.BlockSpec((s,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((s, d), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((s, d), jnp.float32),
+        interpret=True,
+    )(x, w1p, w1s, w3p, w3s, w2p, w2s, gatew)
+
+
+def vmem_bytes(s: int, d: int, fmt: str, group: int) -> int:
+    """HBM→VMEM bytes staged per grid step by the BlockSpecs (the quantity
+    double-buffering must hide; DESIGN.md §Perf).  In a production Mosaic
+    kernel the dequantized tile lives in vector registers feeding the MXU,
+    so packed codes + scales are all that occupy weight VMEM."""
+    if fmt == "f32":
+        w = 4 * (2 * d * FF_TILE + FF_TILE * d)
+    else:
+        pack = _PACK[fmt]
+        w = (2 * (d // pack) * FF_TILE + (FF_TILE // pack) * d)
+        w += 4 * (2 * (d // group) * FF_TILE + (FF_TILE // group) * d)
+    io = 4 * (s * d * 2 + s * FF_TILE + s)
+    return w + io

@@ -1,0 +1,39 @@
+"""Pure-jnp correctness oracles for the L1 Pallas kernels.
+
+Every kernel in moe_ffn.py / gating.py has a reference here; pytest
+(python/tests/) asserts allclose between kernel and oracle across a
+hypothesis sweep of shapes/precisions.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .. import quantize
+
+
+def silu(x):
+    return x * jax.nn.sigmoid(x)
+
+
+def ffn_ref(x, w1, w3, w2, gatew):
+    """Weighted SwiGLU FFN: the f32 oracle."""
+    h = silu(x @ w1) * (x @ w3)
+    return (h @ w2) * gatew[:, None]
+
+
+def ffn_quant_ref(x, w1p, w1s, w3p, w3s, w2p, w2s, gatew, *, fmt, group):
+    """Quantized oracle: dequantize in numpy (the layout contract's own
+    inverse), then run the f32 oracle."""
+    d = x.shape[1]
+    ff = w1p.shape[1]
+    w1 = jnp.asarray(quantize.dequantize(np.asarray(w1p), np.asarray(w1s), d, group, fmt))
+    w3 = jnp.asarray(quantize.dequantize(np.asarray(w3p), np.asarray(w3s), d, group, fmt))
+    w2 = jnp.asarray(quantize.dequantize(np.asarray(w2p), np.asarray(w2s), ff, group, fmt))
+    return ffn_ref(x, w1, w3, w2, gatew)
+
+
+def gate_stack_ref(xs, wg_stack):
+    """Stacked gating oracle: softmax(xs_i @ wg_i) for each stacked layer."""
+    logits = jnp.einsum("psd,pde->pse", xs, wg_stack)
+    return jax.nn.softmax(logits, axis=-1)

@@ -1,0 +1,229 @@
+"""L2: the MoE transformer compute graph in JAX, calling the L1 kernels.
+
+This module defines every function the rust coordinator executes at
+runtime; each one is AOT-lowered to HLO text by aot.py against a concrete
+(model, sequence-length) shape and never re-traced after build time.
+
+Granularity follows the paper's execution model: the coordinator owns the
+layer loop and the expert-cache state, so the compiled units are
+
+  attn_block   — RMSNorm + RoPE GQA attention + residual, with the KV cache
+                 threaded through functionally (read in, updated copies out)
+  gate_stack   — the Stacking Computer (§3.3): softmax gating of the current
+                 hidden state against the next p layers' gate matrices
+  expert_ffn   — one expert's weighted SwiGLU FFN at a given precision
+                 (f32 / q8 / q4 / q2), pallas kernel inside
+  lm_head      — final RMSNorm + tied-embedding logits
+
+The coordinator composes these per token/layer, deciding *which* expert
+weights (and at what precision) to feed expert_ffn — that choice is the
+paper's contribution and lives in rust (L3).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import moe_ffn, gating
+
+
+def rmsnorm(x, w, eps):
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * w
+
+
+def rope(q, pos, theta):
+    """Rotary embedding. q: [S, H, hd]; pos: scalar start position."""
+    s, _, hd = q.shape
+    half = hd // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    t = (pos + jnp.arange(s, dtype=jnp.float32))[:, None] * freqs[None, :]
+    cos, sin = jnp.cos(t), jnp.sin(t)          # [S, half]
+    q1, q2 = q[..., :half], q[..., half:]
+    cos, sin = cos[:, None, :], sin[:, None, :]
+    return jnp.concatenate([q1 * cos - q2 * sin, q1 * sin + q2 * cos], axis=-1)
+
+
+def attn_block(cfg, x, norm_w, wq, wk, wv, wo, kcache, vcache, pos):
+    """Attention sub-block with functional KV cache.
+
+    x: [S, d]; wq: [d, H*hd]; wk, wv: [d, Hkv*hd]; wo: [H*hd, d]
+    kcache, vcache: [T, Hkv, hd]; pos: s32 scalar (write offset)
+    returns (x + attn_out [S, d], kcache', vcache')
+
+    Rows of a partially-filled chunk beyond the true prompt length write
+    garbage cache slots ≥ pos+len; the coordinator overwrites them on the
+    next chunk and the causal/length mask keeps them invisible meanwhile.
+    """
+    s, d = x.shape
+    h, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    t = kcache.shape[0]
+    posf = pos.astype(jnp.float32)
+    hn = rmsnorm(x, norm_w, cfg.norm_eps)
+    q = (hn @ wq).reshape(s, h, hd)
+    k = (hn @ wk).reshape(s, hkv, hd)
+    v = (hn @ wv).reshape(s, hkv, hd)
+    q = rope(q, posf, cfg.rope_theta)
+    k = rope(k, posf, cfg.rope_theta)
+
+    kcache = jax.lax.dynamic_update_slice(kcache, k, (pos, 0, 0))
+    vcache = jax.lax.dynamic_update_slice(vcache, v, (pos, 0, 0))
+
+    # GQA without materializing repeated KV heads (§Perf: the jnp.repeat
+    # version copied the whole cache twice per call): group query heads by
+    # their kv head and contract against the cache directly.
+    rep = h // hkv
+    qg = q.reshape(s, hkv, rep, hd)
+    scores = jnp.einsum("sgrd,tgd->grst", qg, kcache) / jnp.sqrt(float(hd))
+    # causal + length mask: query row i (absolute pos+i) sees keys j <= pos+i
+    j = jnp.arange(t)[None, :]                  # [1, T]
+    i = pos + jnp.arange(s)[:, None]            # [S, 1]
+    mask = (j <= i)[None, None, :, :]           # [1, 1, S, T]
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("grst,tgd->sgrd", probs, vcache).reshape(s, h * hd)
+    return x + out @ wo, kcache, vcache
+
+
+def gate_stack(cfg, x, post_norm_w, wg_stack):
+    """The Stacking Computer (§3.3). x: [S, d] is the attention-block
+    output of the current layer; post_norm_w: [p, d] are the stacked
+    layers' post-attention norm weights; wg_stack: [p, d, E].
+    Returns gating probs [p, S, E].
+
+    Index 0 is the *current* layer (its probs drive on-demand selection);
+    indices 1..p-1 are the predictions for subsequent layers (Fig 8) —
+    they reuse the current hidden state, exploiting the residual-stream
+    similarity the paper measures in Fig 7.
+    """
+    p = wg_stack.shape[0]
+    xs = jnp.stack([rmsnorm(x, post_norm_w[i], cfg.norm_eps) for i in range(p)])
+    return gating.gate_stack(xs, wg_stack)
+
+
+def gate_sequential(cfg, x, post_norm_w, wg_stack):
+    """Naive per-layer gating loop — the baseline of Fig 17(a). Computes the
+    same probs as gate_stack but with p separate kernel launches."""
+    outs = []
+    for i in range(wg_stack.shape[0]):
+        hn = rmsnorm(x, post_norm_w[i], cfg.norm_eps)
+        outs.append(gating.gate_single(hn, wg_stack[i]))
+    return jnp.stack(outs)
+
+
+def post_norm(cfg, x, norm_w):
+    """Post-attention RMSNorm — the expert input (separate unit so the
+    coordinator normalizes once per layer, not once per expert)."""
+    return rmsnorm(x, norm_w, cfg.norm_eps)
+
+
+def expert_ffn_f32(x_normed, w1, w3, w2, gatew):
+    """One expert at high precision; x_normed is the post-attn-normed
+    hidden state. gatew[s]=0 rows are not routed here. -> weighted [S, d]."""
+    return moe_ffn.ffn_f32(x_normed, w1, w3, w2, gatew)
+
+
+def expert_ffn_quant(x_normed, w1p, w1s, w3p, w3s, w2p, w2s, gatew, *, fmt, group):
+    """One expert at low precision (q8/q4/q2), packed per quantize.py."""
+    return moe_ffn.ffn_quant(x_normed, w1p, w1s, w3p, w3s, w2p, w2s, gatew,
+                             fmt=fmt, group=group)
+
+
+# ---------------------------------------------------------------------------
+# "fast" lowerings (§Perf): the same computations expressed as plain jnp so
+# XLA fuses them into a handful of loops. On a real TPU the Pallas kernels
+# above ARE the fast path (MXU-tiled, in-kernel dequant); under the CPU
+# PJRT client Pallas runs in interpret mode (a correctness stand-in with a
+# serial grid loop), so aot.py emits BOTH lowerings per expert unit and the
+# rust engine picks `expert_fast_*` on CPU (EngineOptions::use_fast_ffn).
+# pytest asserts fast == pallas to float tolerance.
+# ---------------------------------------------------------------------------
+
+def _dequant_jnp(packed, scales, rows, group, fmt):
+    """jnp mirror of kernels.moe_ffn._dequant_tile (full-matrix, unfused)."""
+    cols = packed.shape[-1]
+    if fmt == "q8":
+        codes = packed.astype(jnp.int8).astype(jnp.float32)
+    elif fmt == "q4":
+        nib0 = (packed & 0xF).astype(jnp.float32) - 8.0
+        nib1 = (packed >> 4).astype(jnp.float32) - 8.0
+        codes = jnp.stack([nib0, nib1], axis=1).reshape(rows, cols)
+    elif fmt == "q2":
+        fields = [((packed >> (2 * i)) & 0x3).astype(jnp.float32) - 2.0
+                  for i in range(4)]
+        codes = jnp.stack(fields, axis=1).reshape(rows, cols) + 0.5
+    else:
+        raise ValueError(fmt)
+    return codes * jnp.repeat(scales, group, axis=0)
+
+
+def expert_ffn_f32_fast(x_normed, w1, w3, w2, gatew):
+    """XLA-fused SwiGLU expert FFN (identical math to expert_ffn_f32)."""
+    h = jax.nn.silu(x_normed @ w1) * (x_normed @ w3)
+    return (h @ w2) * gatew[:, None]
+
+
+def expert_ffn_quant_fast(x_normed, w1p, w1s, w3p, w3s, w2p, w2s, gatew, *, fmt, group):
+    d = x_normed.shape[1]
+    ff = w1p.shape[-1]
+    w1 = _dequant_jnp(w1p, w1s, d, group, fmt)
+    w3 = _dequant_jnp(w3p, w3s, d, group, fmt)
+    w2 = _dequant_jnp(w2p, w2s, ff, group, fmt)
+    return expert_ffn_f32_fast(x_normed, w1, w3, w2, gatew)
+
+
+def lm_head(cfg, x, norm_w, emb):
+    """Final norm + tied-embedding logits. x: [S, d]; emb: [V, d] -> [S, V]."""
+    hn = rmsnorm(x, norm_w, cfg.norm_eps)
+    return hn @ emb.T
+
+
+# ---------------------------------------------------------------------------
+# Whole-model forward in pure JAX — the L2 oracle used by python tests and
+# by the accuracy experiments (Fig 3b / Table 3 are generated from engine
+# traces on the rust side; python/tests compare the rust engine against
+# this function on identical weights).
+# ---------------------------------------------------------------------------
+
+def reference_forward(cfg, params, tokens, expert_override=None):
+    """Run the full tiny model on a token sequence. Returns logits [S, V].
+
+    params: dict with keys
+      emb [V, d]; final_norm [d]
+      per layer i: attn_norm.i, wq.i, wk.i, wv.i, wo.i, post_norm.i,
+                   wg.i [d, E], expert.i.e.{w1,w3,w2}
+    expert_override: optional fn(layer, expert, name, w) -> w allowing the
+      accuracy experiments to swap in dequantized / skipped experts.
+    """
+    s = tokens.shape[0]
+    d = cfg.d_model
+    x = params["emb"][tokens]                     # [S, d]
+    t = cfg.max_seq
+    for li in range(cfg.n_layers):
+        kc = jnp.zeros((t, cfg.n_kv_heads, cfg.head_dim), jnp.float32)
+        vc = jnp.zeros((t, cfg.n_kv_heads, cfg.head_dim), jnp.float32)
+        x, _, _ = attn_block(
+            cfg, x, params[f"attn_norm.{li}"], params[f"wq.{li}"],
+            params[f"wk.{li}"], params[f"wv.{li}"], params[f"wo.{li}"],
+            kc, vc, jnp.array(0, jnp.int32))
+        hn = rmsnorm(x, params[f"post_norm.{li}"], cfg.norm_eps)
+        probs = jax.nn.softmax(hn @ params[f"wg.{li}"], axis=-1)   # [S, E]
+        topv, topi = jax.lax.top_k(probs, cfg.top_k)
+        # renormalize top-k gate weights (Mixtral convention)
+        topv = topv / jnp.sum(topv, axis=-1, keepdims=True)
+        moe_out = jnp.zeros_like(x)
+        for e in range(cfg.n_experts):
+            w1 = params[f"expert.{li}.{e}.w1"]
+            w3 = params[f"expert.{li}.{e}.w3"]
+            w2 = params[f"expert.{li}.{e}.w2"]
+            if expert_override is not None:
+                w1 = expert_override(li, e, "w1", w1)
+                w3 = expert_override(li, e, "w3", w3)
+                w2 = expert_override(li, e, "w2", w2)
+            gw = jnp.sum(jnp.where(topi == e, topv, 0.0), axis=-1)  # [S]
+            if w1 is None:  # expert skipped by override
+                continue
+            h = (hn * 1.0) @ w1
+            out = (jax.nn.silu(h) * (hn @ w3)) @ w2
+            moe_out = moe_out + out * gw[:, None]
+        x = x + moe_out
+    return lm_head(cfg, x, params["final_norm"], params["emb"])

@@ -1,0 +1,109 @@
+"""Symmetric group quantization for expert weights (q8 / q4 / q2).
+
+The rust side (rust/src/quant.rs) implements byte-identical packing so that
+the expert storage written by gen_weights.py can be consumed (and verified)
+by the coordinator.  Layout contract, for a weight matrix W[rows, cols]
+quantized along the *row* (contraction) axis with group size G:
+
+  scales  f32[rows/G, cols]      scale of each (group, col) cell
+  q8      int8 stored as u8 (two's complement) [rows, cols]
+  q4      u8[rows/2, cols]; element (r, c) is the nibble
+          (packed[r//2, c] >> (4*(r%2))) & 0xF, value = nibble - 8
+  q2      u8[rows/4, cols]; element (r, c) is the 2-bit field
+          (packed[r//4, c] >> (2*(r%4))) & 0x3, value = field - 2
+
+All arrays are C-contiguous and written little-endian.
+"""
+
+import numpy as np
+
+QBITS = {"q8": 8, "q4": 4, "q2": 2}
+# max representable magnitude of the signed code for each format
+QMAX = {"q8": 127.0, "q4": 7.0, "q2": 1.5}
+# offset added when packing sub-byte codes into unsigned fields
+QOFFSET = {"q4": 8, "q2": 2}
+
+
+def group_scales(w: np.ndarray, group: int, fmt: str) -> np.ndarray:
+    """Per-(group, col) scales so that max|w| in the group maps to QMAX."""
+    rows, cols = w.shape
+    assert rows % group == 0, (rows, group)
+    g = w.reshape(rows // group, group, cols)
+    amax = np.abs(g).max(axis=1)  # [rows/G, cols]
+    scale = amax / QMAX[fmt]
+    # avoid div-by-zero for all-zero groups
+    return np.where(scale == 0.0, 1.0, scale).astype(np.float32)
+
+
+def _codes(w: np.ndarray, scales: np.ndarray, group: int, fmt: str) -> np.ndarray:
+    """Signed integer codes (float array holding integral values for q2)."""
+    rows, cols = w.shape
+    s = np.repeat(scales, group, axis=0)  # [rows, cols]
+    q = w / s
+    if fmt == "q2":
+        # 4 symmetric levels {-1.5, -0.5, 0.5, 1.5}: code in {-2..1} encodes
+        # level (code + 0.5). round(q - 0.5) picks the nearest level.
+        c = np.clip(np.round(q - 0.5), -2, 1)
+    else:
+        c = np.clip(np.round(q), -QMAX[fmt], QMAX[fmt])
+    return c
+
+
+def quantize(w: np.ndarray, group: int, fmt: str):
+    """Quantize f32 W[rows, cols] -> (packed u8 array, scales f32).
+
+    Returns (packed, scales) per the module-level layout contract.
+    """
+    assert w.ndim == 2 and w.dtype == np.float32
+    scales = group_scales(w, group, fmt)
+    c = _codes(w, scales, group, fmt)
+    rows, cols = w.shape
+    if fmt == "q8":
+        packed = c.astype(np.int8).view(np.uint8)
+    elif fmt == "q4":
+        u = (c.astype(np.int32) + QOFFSET["q4"]).astype(np.uint8)  # 0..15
+        lo = u[0::2, :]
+        hi = u[1::2, :]
+        packed = (lo | (hi << 4)).astype(np.uint8)
+    elif fmt == "q2":
+        u = (c.astype(np.int32) + QOFFSET["q2"]).astype(np.uint8)  # 0..3
+        packed = np.zeros((rows // 4, cols), dtype=np.uint8)
+        for i in range(4):
+            packed |= u[i::4, :] << (2 * i)
+    else:
+        raise ValueError(fmt)
+    return np.ascontiguousarray(packed), np.ascontiguousarray(scales)
+
+
+def unpack_codes(packed: np.ndarray, rows: int, fmt: str) -> np.ndarray:
+    """Inverse of the packing step: u8 packed -> float signed codes [rows, cols]."""
+    if fmt == "q8":
+        return packed.view(np.int8).astype(np.float32)
+    if fmt == "q4":
+        cols = packed.shape[1]
+        out = np.empty((rows, cols), dtype=np.float32)
+        out[0::2, :] = (packed & 0xF).astype(np.float32) - QOFFSET["q4"]
+        out[1::2, :] = (packed >> 4).astype(np.float32) - QOFFSET["q4"]
+        return out
+    if fmt == "q2":
+        cols = packed.shape[1]
+        out = np.empty((rows, cols), dtype=np.float32)
+        for i in range(4):
+            out[i::4, :] = ((packed >> (2 * i)) & 0x3).astype(np.float32) - QOFFSET["q2"]
+        return out
+    raise ValueError(fmt)
+
+
+def dequantize(packed: np.ndarray, scales: np.ndarray, rows: int, group: int, fmt: str) -> np.ndarray:
+    """Reconstruct f32 weights from packed codes + scales."""
+    c = unpack_codes(packed, rows, fmt)
+    if fmt == "q2":
+        c = c + 0.5  # levels are code + 0.5 (see _codes)
+    s = np.repeat(scales, group, axis=0)
+    return (c * s).astype(np.float32)
+
+
+def quantize_roundtrip(w: np.ndarray, group: int, fmt: str) -> np.ndarray:
+    """Quantize then dequantize — what the model actually computes with."""
+    packed, scales = quantize(w, group, fmt)
+    return dequantize(packed, scales, w.shape[0], group, fmt)

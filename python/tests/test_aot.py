@@ -1,0 +1,79 @@
+"""AOT pipeline tests: artifact definitions cover the engine's needs and
+lowered HLO text is loadable-shaped (ENTRY present, tuple root)."""
+
+import json
+import os
+
+import jax
+import pytest
+
+from compile import aot
+from compile.configs import MODELS, MIXTRAL_TINY, SEQ_VARIANTS, PRECISIONS, GATE_STACK_DEPTHS
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_artifact_defs_complete():
+    names = {n for n, *_ in aot.artifact_defs(MIXTRAL_TINY)}
+    for s in SEQ_VARIANTS:
+        assert f"attn_s{s}" in names
+        assert f"head_s{s}" in names
+        for fmt in PRECISIONS:
+            assert f"expert_{fmt}_s{s}" in names
+    for p in GATE_STACK_DEPTHS:
+        assert f"gate_p{p}_s1" in names
+        assert f"gate_seq_p{p}_s1" in names
+
+
+def test_artifact_defs_unique_names():
+    for cfg in MODELS.values():
+        names = [n for n, *_ in aot.artifact_defs(cfg)]
+        assert len(names) == len(set(names))
+
+
+def test_lower_one_artifact_to_hlo_text():
+    cfg = MIXTRAL_TINY
+    defs = {n: (fn, specs) for n, fn, specs, _ in aot.artifact_defs(cfg)}
+    fn, specs = defs["head_s1"]
+    text = aot.to_hlo_text(jax.jit(fn).lower(*specs))
+    assert "ENTRY" in text and "HloModule" in text
+    # tuple root (return_tuple=True) so rust unwraps with to_tupleN
+    assert "tuple(" in text or "tuple " in text
+
+
+@pytest.mark.skipif(not os.path.isdir(os.path.join(ART, "mixtral-tiny")),
+                    reason="artifacts not built")
+@pytest.mark.parametrize("mname", list(MODELS))
+def test_manifest_matches_files(mname):
+    mdir = os.path.join(ART, mname)
+    with open(os.path.join(mdir, "manifest.json")) as f:
+        manifest = json.load(f)
+    assert manifest["model"]["name"] == mname
+    for name, entry in manifest["artifacts"].items():
+        path = os.path.join(mdir, entry["file"])
+        assert os.path.exists(path), f"missing artifact {name}"
+        assert entry["outputs"] >= 1
+        for inp in entry["inputs"]:
+            assert inp["dtype"] in ("float32", "int32", "uint8")
+
+
+@pytest.mark.skipif(not os.path.isdir(os.path.join(ART, "mixtral-tiny")),
+                    reason="artifacts not built")
+def test_hlo_text_parses_headers():
+    mdir = os.path.join(ART, "mixtral-tiny")
+    for fn in sorted(os.listdir(mdir)):
+        if fn.endswith(".hlo.txt"):
+            with open(os.path.join(mdir, fn)) as f:
+                head = f.read(4096)
+            assert head.startswith("HloModule"), fn
+
+
+def test_expert_bytes_ratios():
+    """The loading-byte ratios that drive the whole paper: low-precision
+    replacements are ~4x cheaper per step of the precision ladder."""
+    cfg = MIXTRAL_TINY
+    b = {p: cfg.expert_bytes(p) for p in PRECISIONS}
+    assert 3.5 < b["f32"] / b["q8"] <= 4.0
+    # scales overhead costs q2 a bit more, relatively
+    assert 3.2 <= b["q8"] / b["q2"] <= 4.0
+    assert b["q8"] > b["q4"] > b["q2"]

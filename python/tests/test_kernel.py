@@ -1,0 +1,156 @@
+"""L1 kernel vs pure-jnp oracle — the CORE correctness signal.
+
+hypothesis sweeps shapes and precisions; every pallas kernel must match
+its ref.py oracle to float tolerance.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import quantize
+from compile.kernels import moe_ffn, gating, ref
+
+FMTS = ("q8", "q4", "q2")
+
+
+def _mk(seed, *shape, scale=0.05):
+    rng = np.random.default_rng(seed)
+    return (rng.standard_normal(shape, dtype=np.float32) * np.float32(scale))
+
+
+def _ffn_args(seed, s, d, ff):
+    x = _mk(seed, s, d, scale=1.0)
+    w1 = _mk(seed + 1, d, ff)
+    w3 = _mk(seed + 2, d, ff)
+    w2 = _mk(seed + 3, ff, d)
+    gw = np.abs(_mk(seed + 4, s, scale=1.0))
+    return x, w1, w3, w2, gw
+
+
+@pytest.mark.parametrize("s", [1, 4, 16, 128])
+def test_ffn_f32_matches_ref(s):
+    x, w1, w3, w2, gw = map(jnp.asarray, _ffn_args(s, s, 256, 512))
+    y = moe_ffn.ffn_f32(x, w1, w3, w2, gw)
+    yr = ref.ffn_ref(x, w1, w3, w2, gw)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), rtol=2e-5, atol=2e-6)
+
+
+@pytest.mark.parametrize("fmt", FMTS)
+@pytest.mark.parametrize("s", [1, 16])
+def test_ffn_quant_matches_ref(fmt, s):
+    x, w1, w3, w2, gw = _ffn_args(7, s, 256, 512)
+    g = 64
+    packs = []
+    for w in (w1, w3, w2):
+        p, sc = quantize.quantize(w, g, fmt)
+        packs += [jnp.asarray(p), jnp.asarray(sc)]
+    y = moe_ffn.ffn_quant(jnp.asarray(x), *packs, jnp.asarray(gw), fmt=fmt, group=g)
+    yr = ref.ffn_quant_ref(jnp.asarray(x), *packs, jnp.asarray(gw), fmt=fmt, group=g)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), rtol=2e-5, atol=2e-6)
+
+
+def test_ffn_gate_weight_scales_rows():
+    """gatew scales each row of the output independently."""
+    x, w1, w3, w2, _ = map(jnp.asarray, _ffn_args(11, 4, 256, 128))
+    ones = jnp.ones(4)
+    base = moe_ffn.ffn_f32(x, w1, w3, w2, ones)
+    gw = jnp.asarray([0.0, 0.5, 1.0, 2.0], jnp.float32)
+    y = moe_ffn.ffn_f32(x, w1, w3, w2, gw)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(base * gw[:, None]),
+                               rtol=1e-5, atol=1e-7)
+
+
+def test_ffn_zero_gate_gives_zero():
+    x, w1, w3, w2, _ = map(jnp.asarray, _ffn_args(13, 2, 128, 128))
+    y = moe_ffn.ffn_f32(x, w1, w3, w2, jnp.zeros(2))
+    assert float(jnp.max(jnp.abs(y))) == 0.0
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    s=st.sampled_from([1, 2, 8]),
+    d=st.sampled_from([64, 128, 256]),
+    ff=st.sampled_from([128, 256, 512]),
+    seed=st.integers(0, 10_000),
+)
+def test_ffn_f32_property(s, d, ff, seed):
+    x, w1, w3, w2, gw = map(jnp.asarray, _ffn_args(seed, s, d, ff))
+    y = moe_ffn.ffn_f32(x, w1, w3, w2, gw)
+    yr = ref.ffn_ref(x, w1, w3, w2, gw)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), rtol=5e-5, atol=5e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    fmt=st.sampled_from(FMTS),
+    d=st.sampled_from([128, 256]),
+    ff=st.sampled_from([128, 256]),
+    seed=st.integers(0, 10_000),
+)
+def test_ffn_quant_property(fmt, d, ff, seed):
+    s, g = 2, 64
+    x, w1, w3, w2, gw = _ffn_args(seed, s, d, ff)
+    packs = []
+    for w in (w1, w3, w2):
+        p, sc = quantize.quantize(w, g, fmt)
+        packs += [jnp.asarray(p), jnp.asarray(sc)]
+    y = moe_ffn.ffn_quant(jnp.asarray(x), *packs, jnp.asarray(gw), fmt=fmt, group=g)
+    yr = ref.ffn_quant_ref(jnp.asarray(x), *packs, jnp.asarray(gw), fmt=fmt, group=g)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), rtol=5e-5, atol=5e-6)
+
+
+@pytest.mark.parametrize("p", [1, 2, 3, 4])
+@pytest.mark.parametrize("e", [8, 16])
+def test_gate_stack_matches_ref(p, e):
+    xs = jnp.asarray(_mk(p * 31 + e, p, 1, 256, scale=1.0))
+    wg = jnp.asarray(_mk(p * 37 + e, p, 256, e, scale=0.1))
+    y = gating.gate_stack(xs, wg)
+    yr = ref.gate_stack_ref(xs, wg)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), rtol=1e-5, atol=1e-6)
+
+
+def test_gate_stack_rows_sum_to_one():
+    xs = jnp.asarray(_mk(3, 2, 16, 128, scale=1.0))
+    wg = jnp.asarray(_mk(4, 2, 128, 8, scale=0.2))
+    y = np.asarray(gating.gate_stack(xs, wg))
+    np.testing.assert_allclose(y.sum(-1), np.ones((2, 16)), rtol=1e-5)
+
+
+def test_gate_single_consistency():
+    x = jnp.asarray(_mk(5, 4, 128, scale=1.0))
+    wg = jnp.asarray(_mk(6, 128, 8, scale=0.2))
+    a = gating.gate_single(x, wg)
+    b = gating.gate_stack(x[None], wg[None])[0]
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b))
+
+
+def test_vmem_estimate_monotone_in_precision():
+    """Packed formats shrink the VMEM working set (perf model sanity)."""
+    sizes = [moe_ffn.vmem_bytes(1, 256, f, 64) for f in ("f32", "q8", "q4", "q2")]
+    assert sizes[1] < sizes[0] and sizes[3] < sizes[2] <= sizes[1]
+
+
+# --- fast (XLA-fused) lowerings must equal the pallas kernels (§Perf) ----
+
+def test_fast_ffn_f32_matches_pallas():
+    from compile import model as m
+    x, w1, w3, w2, gw = map(jnp.asarray, _ffn_args(21, 4, 256, 512))
+    a = m.expert_ffn_f32(x, w1, w3, w2, gw)
+    b = m.expert_ffn_f32_fast(x, w1, w3, w2, gw)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-5, atol=2e-6)
+
+
+@pytest.mark.parametrize("fmt", FMTS)
+def test_fast_ffn_quant_matches_pallas(fmt):
+    from compile import model as m
+    g = 64
+    x, w1, w3, w2, gw = _ffn_args(23, 2, 256, 512)
+    packs = []
+    for w in (w1, w3, w2):
+        p, sc = quantize.quantize(w, g, fmt)
+        packs += [jnp.asarray(p), jnp.asarray(sc)]
+    a = m.expert_ffn_quant(jnp.asarray(x), *packs, jnp.asarray(gw), fmt=fmt, group=g)
+    b = m.expert_ffn_quant_fast(jnp.asarray(x), *packs, jnp.asarray(gw), fmt=fmt, group=g)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-5, atol=2e-6)

@@ -1,0 +1,113 @@
+"""Unit + property tests for the group-quantization layout contract."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import quantize
+from compile.quantize import quantize as q, dequantize, unpack_codes, group_scales
+
+FMTS = ("q8", "q4", "q2")
+
+
+def rand_w(rows, cols, seed=0, scale=0.05):
+    rng = np.random.default_rng(seed)
+    return (rng.standard_normal((rows, cols), dtype=np.float32) * np.float32(scale))
+
+
+@pytest.mark.parametrize("fmt", FMTS)
+def test_packed_shape(fmt):
+    w = rand_w(128, 32)
+    packed, scales = q(w, 64, fmt)
+    pack = {"q8": 1, "q4": 2, "q2": 4}[fmt]
+    assert packed.shape == (128 // pack, 32)
+    assert packed.dtype == np.uint8
+    assert scales.shape == (2, 32)
+    assert scales.dtype == np.float32
+
+
+@pytest.mark.parametrize("fmt", FMTS)
+def test_roundtrip_error_bound(fmt):
+    """Dequantized weights stay within half a quantization step."""
+    w = rand_w(256, 64, seed=1)
+    packed, scales = q(w, 64, fmt)
+    wd = dequantize(packed, scales, 256, 64, fmt)
+    step = np.repeat(scales, 64, axis=0)  # one code unit
+    err = np.abs(wd - w)
+    # clipping can only bring values inward; interior codes are within step/2
+    assert np.all(err <= step * 0.5 + 1e-6)
+
+
+def test_error_ordering():
+    """Coarser formats are strictly worse on average."""
+    w = rand_w(512, 128, seed=2)
+    errs = []
+    for fmt in FMTS:
+        wd = quantize.quantize_roundtrip(w, 64, fmt)
+        errs.append(float(np.abs(wd - w).mean()))
+    assert errs[0] < errs[1] < errs[2]
+
+
+def test_q8_matches_int8_view():
+    w = rand_w(64, 8)
+    packed, scales = q(w, 64, "q8")
+    codes = packed.view(np.int8)
+    assert codes.min() >= -127 and codes.max() <= 127
+    wd = codes.astype(np.float32) * np.repeat(scales, 64, axis=0)
+    np.testing.assert_allclose(wd, dequantize(packed, scales, 64, 64, "q8"))
+
+
+def test_zero_group_no_nan():
+    w = np.zeros((64, 4), np.float32)
+    packed, scales = q(w, 64, "q2")
+    wd = dequantize(packed, scales, 64, 64, "q2")
+    assert np.all(np.isfinite(wd))
+    # q2 has no exact-zero level; magnitudes are <= half step of scale 1.0
+    assert np.all(np.abs(wd) <= 0.5)
+
+
+@pytest.mark.parametrize("fmt", FMTS)
+def test_unpack_inverts_pack(fmt):
+    w = rand_w(128, 16, seed=3)
+    packed, scales = q(w, 32, fmt)
+    codes = unpack_codes(packed, 128, fmt)
+    # re-packing the codes must give identical bytes
+    lvl = codes + (0.5 if fmt == "q2" else 0.0)
+    wd = lvl * np.repeat(scales, 32, axis=0)
+    p2, s2 = q(wd.astype(np.float32), 32, fmt)
+    np.testing.assert_array_equal(packed, p2)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    rows=st.sampled_from([64, 128, 256]),
+    cols=st.integers(1, 24),
+    group=st.sampled_from([32, 64]),
+    fmt=st.sampled_from(FMTS),
+    seed=st.integers(0, 2**31 - 1),
+    scale=st.floats(1e-4, 10.0),
+)
+def test_roundtrip_property(rows, cols, group, fmt, seed, scale):
+    w = rand_w(rows, cols, seed=seed, scale=scale)
+    packed, scales = q(w, group, fmt)
+    wd = dequantize(packed, scales, rows, group, fmt)
+    assert wd.shape == w.shape
+    assert np.all(np.isfinite(wd))
+    step = np.repeat(scales, group, axis=0)
+    assert np.all(np.abs(wd - w) <= step * 0.5 + 1e-5 * scale)
+
+
+@settings(max_examples=20, deadline=None)
+@given(fmt=st.sampled_from(FMTS), seed=st.integers(0, 1000))
+def test_scale_invariance(fmt, seed):
+    """quantize(c*W) == c * quantize(W) up to float rounding."""
+    w = rand_w(128, 8, seed=seed)
+    a = quantize.quantize_roundtrip(w, 64, fmt)
+    b = quantize.quantize_roundtrip((w * 4.0).astype(np.float32), 64, fmt) / 4.0
+    np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-7)
+
+
+def test_group_scales_positive():
+    w = rand_w(128, 8, seed=9)
+    s = group_scales(w, 64, "q8")
+    assert np.all(s > 0)

@@ -1,0 +1,98 @@
+"""Weight export round-trip: the bytes gen_weights.py writes are exactly
+what make_params() regenerates, at every precision (the rust side reads
+the same files — rust/tests/storage_roundtrip.rs checks from that end)."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from compile import gen_weights, quantize
+from compile.configs import MIXTRAL_TINY, MODELS, PRECISIONS
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+SEED = 20240917
+
+
+def _wdir(name):
+    return os.path.join(ART, "weights", name)
+
+
+built = os.path.exists(os.path.join(_wdir("mixtral-tiny"), "weights.json"))
+pytestmark = pytest.mark.skipif(not built, reason="weights not exported")
+
+
+def test_nonexpert_roundtrip():
+    cfg = MIXTRAL_TINY
+    with open(os.path.join(_wdir(cfg.name), "weights.json")) as f:
+        man = json.load(f)
+    blob = np.fromfile(os.path.join(_wdir(cfg.name), "nonexpert.bin"), np.float32)
+    params = gen_weights.make_params(cfg, SEED)
+    for ent in man["nonexpert"]:
+        arr = params[ent["name"]]
+        n = int(np.prod(ent["shape"]))
+        got = blob[ent["offset"] // 4: ent["offset"] // 4 + n].reshape(ent["shape"])
+        np.testing.assert_array_equal(got, arr, err_msg=ent["name"])
+
+
+def test_expert_f32_roundtrip():
+    cfg = MIXTRAL_TINY
+    params = gen_weights.make_params(cfg, SEED)
+    rec = cfg.expert_params  # floats per expert
+    blob = np.fromfile(os.path.join(_wdir(cfg.name), "experts_f32.bin"), np.float32)
+    assert blob.size == rec * cfg.n_layers * cfg.n_experts
+    # spot-check first, middle, last expert
+    for li, ei in [(0, 0), (cfg.n_layers // 2, 3), (cfg.n_layers - 1, cfg.n_experts - 1)]:
+        idx = li * cfg.n_experts + ei
+        got = blob[idx * rec:(idx + 1) * rec]
+        d, ff = cfg.d_model, cfg.d_ff
+        w1 = got[:d * ff].reshape(d, ff)
+        w3 = got[d * ff:2 * d * ff].reshape(d, ff)
+        w2 = got[2 * d * ff:].reshape(ff, d)
+        np.testing.assert_array_equal(w1, params[f"expert.{li}.{ei}.w1"])
+        np.testing.assert_array_equal(w3, params[f"expert.{li}.{ei}.w3"])
+        np.testing.assert_array_equal(w2, params[f"expert.{li}.{ei}.w2"])
+
+
+@pytest.mark.parametrize("fmt", PRECISIONS[1:])
+def test_expert_quant_record_layout(fmt):
+    cfg = MIXTRAL_TINY
+    params = gen_weights.make_params(cfg, SEED)
+    with open(os.path.join(_wdir(cfg.name), "weights.json")) as f:
+        man = json.load(f)
+    rec = man["experts"]["record_bytes"][fmt]
+    assert rec == cfg.expert_bytes(fmt)
+    path = os.path.join(_wdir(cfg.name), f"experts_{fmt}.bin")
+    blob = open(path, "rb").read()
+    assert len(blob) == rec * cfg.n_layers * cfg.n_experts
+    # decode expert (0, 1) and compare to direct quantization
+    li, ei = 0, 1
+    raw = blob[(li * cfg.n_experts + ei) * rec:(li * cfg.n_experts + ei + 1) * rec]
+    g, d, ff = cfg.quant_group, cfg.d_model, cfg.d_ff
+    pack = {"q8": 1, "q4": 2, "q2": 4}[fmt]
+    off = 0
+    for name, rows, cols in (("w1", d, ff), ("w3", d, ff), ("w2", ff, d)):
+        nb = rows // pack * cols
+        packed = np.frombuffer(raw[off:off + nb], np.uint8).reshape(rows // pack, cols)
+        off += nb
+        ns = rows // g * cols * 4
+        scales = np.frombuffer(raw[off:off + ns], np.float32).reshape(rows // g, cols)
+        off += ns
+        w = params[f"expert.{li}.{ei}.{name}"]
+        p2, s2 = quantize.quantize(w, g, fmt)
+        np.testing.assert_array_equal(packed, p2, err_msg=name)
+        np.testing.assert_array_equal(scales, s2, err_msg=name)
+    assert off == rec
+
+
+@pytest.mark.parametrize("mname", list(MODELS))
+def test_quant_quality_ladder(mname):
+    """Dequantized experts approximate f32 better at higher precision —
+    the premise of the paper's Fig 3(b)."""
+    cfg = MODELS[mname]
+    params = gen_weights.make_params(cfg, SEED)
+    w = params["expert.0.0.w1"]
+    errs = [np.abs(quantize.quantize_roundtrip(w, cfg.quant_group, f) - w).mean()
+            for f in PRECISIONS[1:]]
+    assert errs[0] < errs[1] < errs[2]

@@ -1,0 +1,96 @@
+//! The comparator systems of §5 (Table 2), for both execution paths:
+//!
+//! * **sim** (paper scale): `SimSystem` configurations per testing group;
+//! * **real** (tiny models via PJRT): `EngineOptions` ablation variants —
+//!   HOBBIT minus one mechanism at a time, plus classic cache policies.
+
+use crate::cache::Policy;
+use crate::config::{HardwareConfig, PolicyConfig};
+use crate::engine::EngineOptions;
+use crate::sim::des::SimSystem;
+
+pub const EQ3_WEIGHTS: [f64; 4] = [0.65, 0.05, 0.10, 0.20];
+
+/// Table 2, row 2: GeForce RTX 4090, float16 group — HB, TF, DS, MO, MI.
+pub fn group_rtx4090_f16() -> Vec<SimSystem> {
+    vec![
+        SimSystem::hobbit(EQ3_WEIGHTS),
+        SimSystem::dense("Transformers", 16.0),
+        SimSystem::dense("DeepSpeed", 16.0),
+        SimSystem::moe_offloading(16.0),
+        SimSystem::moe_infinity(16.0),
+    ]
+}
+
+/// Table 2, row 1: Jetson AGX Orin, int8 group — HB, LL, MI.
+pub fn group_orin_int8() -> Vec<SimSystem> {
+    vec![
+        SimSystem::hobbit_int8(EQ3_WEIGHTS),
+        SimSystem::llama_cpp(8.0),
+        SimSystem::moe_infinity(8.0),
+    ]
+}
+
+/// Table 2, row 3: RTX 4090 + CPU, float16 group — HB(coop), LL, FD.
+pub fn group_rtx4090_cpu() -> Vec<SimSystem> {
+    vec![
+        SimSystem::hobbit_coop(EQ3_WEIGHTS),
+        SimSystem::llama_cpp(16.0),
+        SimSystem::fiddler(16.0),
+    ]
+}
+
+// ---------------------------------------------------------------------------
+// Real-path (tiny model) ablation variants — Fig 16/17/18 on live PJRT.
+// ---------------------------------------------------------------------------
+
+/// Full HOBBIT.
+pub fn real_hobbit(hw: HardwareConfig) -> EngineOptions {
+    EngineOptions::new(hw, PolicyConfig::default())
+}
+
+/// Dynamic mixed-precision loading disabled (Fig 16 ablation).
+pub fn real_no_dynamic(hw: HardwareConfig) -> EngineOptions {
+    let policy = PolicyConfig { dynamic_loading: false, ..PolicyConfig::default() };
+    EngineOptions::new(hw, policy)
+}
+
+/// Prefetching disabled (Fig 17b ablation).
+pub fn real_no_prefetch(hw: HardwareConfig) -> EngineOptions {
+    let policy = PolicyConfig { prefetch_depth: 0, ..PolicyConfig::default() };
+    EngineOptions::new(hw, policy)
+}
+
+/// Classic cache policy instead of Eq. 3 (Fig 18 comparison).
+pub fn real_with_policy(hw: HardwareConfig, policy: Policy) -> EngineOptions {
+    let mut opts = EngineOptions::new(hw, PolicyConfig::default());
+    opts.cache_policy = Some(policy);
+    opts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn groups_match_table2() {
+        assert_eq!(group_rtx4090_f16().len(), 5);
+        assert_eq!(group_orin_int8().len(), 3);
+        assert_eq!(group_rtx4090_cpu().len(), 3);
+        assert_eq!(group_orin_int8()[0].hi_bits, 8.0);
+        assert_eq!(group_orin_int8()[0].lo_bits, 2.0);
+    }
+
+    #[test]
+    fn weights_sum_to_one() {
+        assert!((EQ3_WEIGHTS.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ablations_differ_from_full() {
+        let hw = HardwareConfig::rtx4090_real();
+        assert!(real_hobbit(hw.clone()).policy.dynamic_loading);
+        assert!(!real_no_dynamic(hw.clone()).policy.dynamic_loading);
+        assert_eq!(real_no_prefetch(hw).policy.prefetch_depth, 0);
+    }
+}

@@ -1,0 +1,19 @@
+use hobbit::cache::Policy;
+use hobbit::trace::replay::{replay, ReplayConfig};
+use hobbit::trace::{generate, TraceGenConfig};
+fn main() {
+    let cands: [[f64;4];6] = [
+        [0.7,0.0,0.1,0.2],[0.6,0.1,0.1,0.2],[0.55,0.1,0.15,0.2],
+        [0.5,0.15,0.15,0.2],[0.65,0.05,0.1,0.2],[0.6,0.05,0.15,0.2]];
+    for (name, gen, cfg) in [
+        ("mixtral-4090", TraceGenConfig::mixtral_like(), ReplayConfig { hi_capacity: 43, lo_capacity: 55, ..Default::default() }),
+        ("mixtral-orin", TraceGenConfig::mixtral_like(), ReplayConfig { hi_capacity: 16, lo_capacity: 24, ..Default::default() }),
+        ("phi-4090", TraceGenConfig::phi_like(), ReplayConfig { hi_capacity: 90, lo_capacity: 110, ..Default::default() }),
+        ("phi-orin", TraceGenConfig::phi_like(), ReplayConfig { hi_capacity: 34, lo_capacity: 50, ..Default::default() }),
+    ] {
+        let ts = generate(&gen, 6, 96);
+        print!("{name}:");
+        for w in cands { print!(" {:?}={:.0}", w, replay(&ts, Policy::Multidim{w}, &cfg).penalty); }
+        println!();
+    }
+}

@@ -1,0 +1,38 @@
+//! Calibration utility: grid-search Eq. 3 weights minimizing mixed-precision
+//! cache miss penalty on the synthetic calibration trace set (paper §3.4:
+//! "we determine suitable values by minimizing the mixed precision expert
+//! cache miss penalties on a calibration dataset").
+use hobbit::cache::Policy;
+use hobbit::trace::replay::{replay, ReplayConfig};
+use hobbit::trace::{generate, TraceGenConfig};
+
+fn main() {
+    for (name, gen, cfg) in [
+        ("mixtral-4090", TraceGenConfig::mixtral_like(),
+         ReplayConfig { hi_capacity: 43, lo_capacity: 55, ..Default::default() }),
+        ("mixtral-orin", TraceGenConfig::mixtral_like(),
+         ReplayConfig { hi_capacity: 16, lo_capacity: 24, ..Default::default() }),
+        ("phi-4090", TraceGenConfig::phi_like(),
+         ReplayConfig { hi_capacity: 90, lo_capacity: 110, ..Default::default() }),
+        ("phi-orin", TraceGenConfig::phi_like(),
+         ReplayConfig { hi_capacity: 34, lo_capacity: 50, ..Default::default() }),
+    ] {
+        let ts = generate(&gen, 6, 96);
+        let rand = replay(&ts, Policy::Random { seed: 1 }, &cfg).penalty;
+        let lru = replay(&ts, Policy::Lru, &cfg).penalty;
+        let lfu = replay(&ts, Policy::LfuSeq, &cfg).penalty;
+        let lhu = replay(&ts, Policy::Lhu, &cfg).penalty;
+        let fld = replay(&ts, Policy::Fld, &cfg).penalty;
+        println!("{name}: rand {rand:.0} lru {lru:.0} lfu {lfu:.0} lhu {lhu:.0} fld {fld:.0}");
+        let mut best = (f64::MAX, [0.0; 4]);
+        let steps = [0.0, 0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7];
+        for &a in &steps { for &b in &steps { for &c in &steps {
+            let d: f64 = 1.0 - a - b - c;
+            if d < -1e-9 || d > 0.7 { continue; }
+            let w = [a, b, c, d.max(0.0)];
+            let p = replay(&ts, Policy::Multidim { w }, &cfg).penalty;
+            if p < best.0 { best = (p, w); }
+        }}}
+        println!("  best multidim {:.0} at {:?}", best.0, best.1);
+    }
+}

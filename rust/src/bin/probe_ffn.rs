@@ -1,0 +1,20 @@
+use xla::*;
+fn main() -> anyhow::Result<()> {
+    let client = PjRtClient::cpu()?;
+    for s in [1usize, 128] {
+        let proto = HloModuleProto::from_text_file(&format!("/tmp/ffn_jnp_s{s}.hlo.txt"))?;
+        let exe = client.compile(&XlaComputation::from_proto(&proto))?;
+        let x = Literal::vec1(&vec![0.1f32; s*256]).reshape(&[s as i64,256])?;
+        let w1 = Literal::vec1(&vec![0.01f32; 256*512]).reshape(&[256,512])?;
+        let w3 = w1.clone();
+        let w2 = Literal::vec1(&vec![0.01f32; 512*256]).reshape(&[512,256])?;
+        let gw = Literal::vec1(&vec![1.0f32; s]);
+        let args = [&x,&w1,&w3,&w2,&gw];
+        for _ in 0..5 { exe.execute::<&Literal>(&args)?; }
+        let t0 = std::time::Instant::now();
+        let iters = 50;
+        for _ in 0..iters { let r = exe.execute::<&Literal>(&args)?; let _ = r[0][0].to_literal_sync()?; }
+        println!("jnp ffn s={s}: {:.3} ms/call", t0.elapsed().as_secs_f64()/iters as f64*1e3);
+    }
+    Ok(())
+}

@@ -1,0 +1,438 @@
+//! Sequence-level multidimensional expert caching (§3.4, Fig 12).
+//!
+//! A mixed-precision expert cache with **two pools** (high-precision and
+//! low-precision; the high pool is typically larger), per-sequence usage
+//! records, and a pluggable replacement policy. The paper's contribution
+//! is the *Multidimensional* policy of Eq. 3 — a weighted blend of
+//!
+//! * LRU   — recency `R_t / T`
+//! * LFU   — sequence-level frequency `F_t / T`
+//! * LHU   — **least high-precision frequently used** `H_t / T` (novel:
+//!           a high-precision miss costs `B_h/B_l` times a low one)
+//! * FLD   — farthest layer distance `1 - ((l_t - l_i + l_n) % l_n)/l_n`
+//!
+//! and the evaluation metric is the *miss penalty* (hi miss = 1, lo miss
+//! = B_l/B_h), not the raw miss ratio.
+//!
+//! Pools hand out slot buffers guarded per-slot so the scheduler thread
+//! can fill a reserved slot while the engine reads others; the pool map
+//! itself is guarded by the caller (`loader::SharedCache` wraps the whole
+//! manager in a mutex — pool sizes are tens of entries, scans are cheap).
+
+pub mod policy;
+
+pub use policy::Policy;
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use crate::metrics::CacheStats;
+use crate::ExpertKey;
+
+/// Which pool an expert version lives in.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Pool {
+    Hi,
+    Lo,
+}
+
+/// Per-expert usage records (dense over layer*expert), reset per sequence
+/// (§3.4: "at the start of each new sequence, the Policy Performer resets
+/// the LRU, LFU and LHU records").
+#[derive(Debug, Clone)]
+pub struct Records {
+    pub last_used: Vec<u64>,
+    pub freq: Vec<u32>,
+    pub hi_freq: Vec<u32>,
+    /// model-level frequency: never reset (the Fig 18(b) comparison)
+    pub model_freq: Vec<u64>,
+    /// token counter T within the current sequence
+    pub token: u64,
+    experts_per_layer: u32,
+}
+
+impl Records {
+    pub fn new(n_layers: u32, experts_per_layer: u32) -> Self {
+        let n = (n_layers * experts_per_layer) as usize;
+        Self {
+            last_used: vec![0; n],
+            freq: vec![0; n],
+            hi_freq: vec![0; n],
+            model_freq: vec![0; n],
+            token: 0,
+            experts_per_layer,
+        }
+    }
+
+    pub fn idx(&self, key: ExpertKey) -> usize {
+        key.index(self.experts_per_layer)
+    }
+
+    pub fn note_token(&mut self) {
+        self.token += 1;
+    }
+
+    /// Record a use of `key`; `hi` marks high-precision use (LHU).
+    pub fn note_use(&mut self, key: ExpertKey, hi: bool) {
+        let i = self.idx(key);
+        self.last_used[i] = self.token;
+        self.freq[i] += 1;
+        self.model_freq[i] += 1;
+        if hi {
+            self.hi_freq[i] += 1;
+        }
+    }
+
+    pub fn reset_sequence(&mut self) {
+        self.last_used.fill(0);
+        self.freq.fill(0);
+        self.hi_freq.fill(0);
+        self.token = 0;
+    }
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+enum SlotState {
+    Free,
+    /// reserved by the loader; not evictable, not readable
+    Loading(ExpertKey),
+    Ready(ExpertKey),
+}
+
+/// One precision pool.
+pub struct CachePool {
+    state: Vec<SlotState>,
+    map: HashMap<ExpertKey, usize>,
+    buffers: Vec<Arc<Mutex<Vec<u8>>>>,
+    pinned: HashMap<ExpertKey, u32>, // pin count (predictions may stack)
+}
+
+impl CachePool {
+    pub fn new(capacity: usize, slot_bytes: usize) -> Self {
+        Self {
+            state: vec![SlotState::Free; capacity],
+            map: HashMap::new(),
+            buffers: (0..capacity)
+                .map(|_| Arc::new(Mutex::new(vec![0u8; slot_bytes])))
+                .collect(),
+            pinned: HashMap::new(),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.state.len()
+    }
+
+    pub fn contains_ready(&self, key: ExpertKey) -> bool {
+        self.map
+            .get(&key)
+            .map(|&s| self.state[s] == SlotState::Ready(key))
+            .unwrap_or(false)
+    }
+
+    pub fn is_loading(&self, key: ExpertKey) -> bool {
+        self.map
+            .get(&key)
+            .map(|&s| self.state[s] == SlotState::Loading(key))
+            .unwrap_or(false)
+    }
+
+    pub fn buffer(&self, key: ExpertKey) -> Option<Arc<Mutex<Vec<u8>>>> {
+        let &slot = self.map.get(&key)?;
+        if self.state[slot] == SlotState::Ready(key) {
+            Some(self.buffers[slot].clone())
+        } else {
+            None
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn pin(&mut self, key: ExpertKey) {
+        *self.pinned.entry(key).or_insert(0) += 1;
+    }
+
+    pub fn unpin(&mut self, key: ExpertKey) {
+        if let Some(c) = self.pinned.get_mut(&key) {
+            *c -= 1;
+            if *c == 0 {
+                self.pinned.remove(&key);
+            }
+        }
+    }
+
+    pub fn pinned_contains(&self, key: ExpertKey) -> bool {
+        self.pinned.contains_key(&key)
+    }
+
+    pub fn ready_keys(&self) -> impl Iterator<Item = ExpertKey> + '_ {
+        self.state.iter().filter_map(|s| match s {
+            SlotState::Ready(k) => Some(*k),
+            _ => None,
+        })
+    }
+}
+
+/// Result of a slot reservation.
+pub struct Reservation {
+    pub slot: usize,
+    pub buffer: Arc<Mutex<Vec<u8>>>,
+    pub evicted: Option<ExpertKey>,
+}
+
+/// The Multidimensional Cache Manager (Fig 12).
+pub struct CacheManager {
+    pub hi: CachePool,
+    pub lo: CachePool,
+    pub records: Records,
+    pub policy: Policy,
+    pub stats: CacheStats,
+    n_layers: u32,
+    /// miss-penalty ratio B_l/B_h of the active precision pair
+    penalty_ratio: f64,
+}
+
+impl CacheManager {
+    pub fn new(
+        n_layers: u32,
+        experts_per_layer: u32,
+        hi_capacity: usize,
+        hi_slot_bytes: usize,
+        lo_capacity: usize,
+        lo_slot_bytes: usize,
+        policy: Policy,
+        penalty_ratio: f64,
+    ) -> Self {
+        Self {
+            hi: CachePool::new(hi_capacity, hi_slot_bytes),
+            lo: CachePool::new(lo_capacity, lo_slot_bytes),
+            records: Records::new(n_layers, experts_per_layer),
+            policy,
+            stats: CacheStats::default(),
+            n_layers,
+            penalty_ratio,
+        }
+    }
+
+    fn pool(&self, p: Pool) -> &CachePool {
+        match p {
+            Pool::Hi => &self.hi,
+            Pool::Lo => &self.lo,
+        }
+    }
+
+    fn pool_mut(&mut self, p: Pool) -> &mut CachePool {
+        match p {
+            Pool::Hi => &mut self.hi,
+            Pool::Lo => &mut self.lo,
+        }
+    }
+
+    /// Probe without accounting (used by the predictor).
+    pub fn contains(&self, key: ExpertKey, pool: Pool) -> bool {
+        self.pool(pool).contains_ready(key) || self.pool(pool).is_loading(key)
+    }
+
+    /// Probe for an on-demand access, with hit/miss/penalty accounting.
+    /// A hit in either requested precision counts; `pool` is the precision
+    /// the loader *wants* for this access.
+    pub fn access(&mut self, key: ExpertKey, pool: Pool) -> bool {
+        let hit = self.pool(pool).contains_ready(key);
+        match (pool, hit) {
+            (Pool::Hi, true) => self.stats.hits_hi += 1,
+            (Pool::Lo, true) => self.stats.hits_lo += 1,
+            (Pool::Hi, false) => {
+                self.stats.misses_hi += 1;
+                self.stats.miss_penalty += 1.0;
+            }
+            (Pool::Lo, false) => {
+                self.stats.misses_lo += 1;
+                self.stats.miss_penalty += self.penalty_ratio;
+            }
+        }
+        hit
+    }
+
+    /// Record a use (hit path or after load completes).
+    pub fn note_use(&mut self, key: ExpertKey, pool: Pool) {
+        self.records.note_use(key, pool == Pool::Hi);
+    }
+
+    /// Reserve a slot for `key` in `pool`, evicting the lowest-priority
+    /// victim if full (Eq. 3). Returns None when every slot is pinned or
+    /// mid-load — callers then bypass the cache.
+    pub fn reserve(&mut self, key: ExpertKey, pool: Pool, current_layer: u32) -> Option<Reservation> {
+        if self.pool(pool).contains_ready(key) || self.pool(pool).is_loading(key) {
+            return None; // already present/incoming
+        }
+        let n_layers = self.n_layers;
+        // find a free slot first
+        let free = self.pool(pool).state.iter().position(|s| *s == SlotState::Free);
+        let (slot, evicted) = if let Some(s) = free {
+            (s, None)
+        } else {
+            let victim = self.choose_victim(pool, current_layer)?;
+            let p = self.pool_mut(pool);
+            let vslot = p.map[&victim];
+            p.map.remove(&victim);
+            self.stats.evictions += 1;
+            (vslot, Some(victim))
+        };
+        let _ = n_layers;
+        let p = self.pool_mut(pool);
+        p.state[slot] = SlotState::Loading(key);
+        p.map.insert(key, slot);
+        Some(Reservation { slot, buffer: p.buffers[slot].clone(), evicted })
+    }
+
+    /// Mark a reserved slot as filled and readable.
+    pub fn commit(&mut self, key: ExpertKey, pool: Pool) {
+        let p = self.pool_mut(pool);
+        if let Some(&slot) = p.map.get(&key) {
+            debug_assert_eq!(p.state[slot], SlotState::Loading(key));
+            p.state[slot] = SlotState::Ready(key);
+        }
+    }
+
+    /// Abort a reservation (load failed / cancelled before starting).
+    pub fn abort(&mut self, key: ExpertKey, pool: Pool) {
+        let p = self.pool_mut(pool);
+        if let Some(&slot) = p.map.get(&key) {
+            if p.state[slot] == SlotState::Loading(key) {
+                p.state[slot] = SlotState::Free;
+                p.map.remove(&key);
+            }
+        }
+    }
+
+    fn choose_victim(&self, pool: Pool, current_layer: u32) -> Option<ExpertKey> {
+        let p = self.pool(pool);
+        let mut best: Option<(f64, ExpertKey)> = None;
+        let mut pinned_best: Option<(f64, ExpertKey)> = None;
+        for key in p.ready_keys() {
+            let prio = self.policy.priority(&self.records, key, current_layer, self.n_layers);
+            let slot_entry = (prio, key);
+            if p.pinned.contains_key(&key) {
+                if pinned_best.map(|(b, _)| prio < b).unwrap_or(true) {
+                    pinned_best = Some(slot_entry);
+                }
+            } else if best.map(|(b, _)| prio < b).unwrap_or(true) {
+                best = Some(slot_entry);
+            }
+        }
+        // prefer unpinned victims; fall back to pinned only if unavoidable
+        best.or(pinned_best).map(|(_, k)| k)
+    }
+
+    /// New sequence: reset seq-level records (§3.4).
+    pub fn reset_sequence(&mut self) {
+        self.records.reset_sequence();
+    }
+
+    pub fn penalty_ratio(&self) -> f64 {
+        self.penalty_ratio
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mgr(hi: usize, lo: usize) -> CacheManager {
+        CacheManager::new(4, 4, hi, 8, lo, 4, Policy::Lru, 0.25)
+    }
+
+    fn k(layer: u32, expert: u32) -> ExpertKey {
+        ExpertKey::new(layer, expert)
+    }
+
+    #[test]
+    fn insert_commit_lookup() {
+        let mut m = mgr(2, 2);
+        let r = m.reserve(k(0, 0), Pool::Hi, 0).unwrap();
+        assert!(r.evicted.is_none());
+        assert!(!m.hi.contains_ready(k(0, 0)));
+        assert!(m.hi.is_loading(k(0, 0)));
+        m.commit(k(0, 0), Pool::Hi);
+        assert!(m.hi.contains_ready(k(0, 0)));
+        assert!(m.hi.buffer(k(0, 0)).is_some());
+    }
+
+    #[test]
+    fn lru_evicts_least_recent() {
+        let mut m = mgr(2, 0);
+        for e in 0..2 {
+            m.reserve(k(0, e), Pool::Hi, 0).unwrap();
+            m.commit(k(0, e), Pool::Hi);
+        }
+        m.records.note_token();
+        m.note_use(k(0, 1), Pool::Hi); // expert 1 recently used
+        let r = m.reserve(k(0, 2), Pool::Hi, 0).unwrap();
+        assert_eq!(r.evicted, Some(k(0, 0)));
+    }
+
+    #[test]
+    fn pinned_survive_eviction() {
+        let mut m = mgr(2, 0);
+        for e in 0..2 {
+            m.reserve(k(0, e), Pool::Hi, 0).unwrap();
+            m.commit(k(0, e), Pool::Hi);
+        }
+        m.hi.pin(k(0, 0));
+        m.records.note_token();
+        m.note_use(k(0, 0), Pool::Hi);
+        m.note_use(k(0, 1), Pool::Hi);
+        // expert 0 is pinned; victim must be 1 even under equal recency
+        let r = m.reserve(k(0, 2), Pool::Hi, 0).unwrap();
+        assert_eq!(r.evicted, Some(k(0, 1)));
+    }
+
+    #[test]
+    fn access_accounts_penalty() {
+        let mut m = mgr(1, 1);
+        assert!(!m.access(k(0, 0), Pool::Hi));
+        assert!(!m.access(k(0, 1), Pool::Lo));
+        assert_eq!(m.stats.misses_hi, 1);
+        assert_eq!(m.stats.misses_lo, 1);
+        assert!((m.stats.miss_penalty - 1.25).abs() < 1e-12);
+        m.reserve(k(0, 0), Pool::Hi, 0).unwrap();
+        m.commit(k(0, 0), Pool::Hi);
+        assert!(m.access(k(0, 0), Pool::Hi));
+        assert_eq!(m.stats.hits_hi, 1);
+    }
+
+    #[test]
+    fn reset_sequence_clears_records() {
+        let mut m = mgr(1, 1);
+        m.records.note_token();
+        m.note_use(k(1, 2), Pool::Hi);
+        assert_eq!(m.records.freq[m.records.idx(k(1, 2))], 1);
+        m.reset_sequence();
+        assert_eq!(m.records.freq[m.records.idx(k(1, 2))], 0);
+        assert_eq!(m.records.token, 0);
+        // model-level record survives (Fig 18b)
+        assert_eq!(m.records.model_freq[m.records.idx(k(1, 2))], 1);
+    }
+
+    #[test]
+    fn abort_frees_slot() {
+        let mut m = mgr(1, 0);
+        m.reserve(k(0, 0), Pool::Hi, 0).unwrap();
+        m.abort(k(0, 0), Pool::Hi);
+        assert!(!m.hi.is_loading(k(0, 0)));
+        assert!(m.reserve(k(0, 1), Pool::Hi, 0).is_some());
+    }
+
+    #[test]
+    fn double_reserve_returns_none() {
+        let mut m = mgr(2, 0);
+        assert!(m.reserve(k(0, 0), Pool::Hi, 0).is_some());
+        assert!(m.reserve(k(0, 0), Pool::Hi, 0).is_none());
+    }
+}

@@ -1,0 +1,157 @@
+//! Replacement policies. `priority` returns "keep-worthiness": the victim
+//! is the *lowest* priority Ready, unpinned entry. The Multidimensional
+//! policy implements Eq. 3 exactly; the single-strategy policies exist as
+//! the paper's comparison baselines (Fig 18) and as degenerate weight
+//! settings of the blend.
+
+use super::Records;
+use crate::ExpertKey;
+
+#[derive(Debug, Clone)]
+pub enum Policy {
+    /// uniform-random victim (the normalization baseline of Fig 18a)
+    Random { seed: u64 },
+    Lru,
+    /// sequence-level LFU (records reset per sequence)
+    LfuSeq,
+    /// model-level LFU (never reset — the Fig 18b comparison)
+    LfuModel,
+    /// least high-precision frequently used (the paper's novel dimension)
+    Lhu,
+    /// farthest layer distance
+    Fld,
+    /// Eq. 3 weighted blend [w_lru, w_lfu, w_lhu, w_fld]
+    Multidim { w: [f64; 4] },
+}
+
+impl Policy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Policy::Random { .. } => "random",
+            Policy::Lru => "lru",
+            Policy::LfuSeq => "lfu-seq",
+            Policy::LfuModel => "lfu-model",
+            Policy::Lhu => "lhu",
+            Policy::Fld => "fld",
+            Policy::Multidim { .. } => "multidim",
+        }
+    }
+
+    pub fn from_name(s: &str, w: [f64; 4]) -> Option<Policy> {
+        match s {
+            "random" => Some(Policy::Random { seed: 0 }),
+            "lru" => Some(Policy::Lru),
+            "lfu" | "lfu-seq" => Some(Policy::LfuSeq),
+            "lfu-model" => Some(Policy::LfuModel),
+            "lhu" => Some(Policy::Lhu),
+            "fld" => Some(Policy::Fld),
+            "multidim" | "hobbit" => Some(Policy::Multidim { w }),
+            _ => None,
+        }
+    }
+
+    /// Keep-priority of `key` given the records and the layer currently
+    /// being executed (`l_i` in Eq. 3). Higher = more worth keeping.
+    pub fn priority(&self, rec: &Records, key: ExpertKey, current_layer: u32, n_layers: u32) -> f64 {
+        let i = rec.idx(key);
+        let t = rec.token.max(1) as f64;
+        let lru = rec.last_used[i] as f64 / t;
+        let lfu = rec.freq[i] as f64 / t;
+        let lhu = rec.hi_freq[i] as f64 / t;
+        let fld = fld_term(key.layer, current_layer, n_layers);
+        match self {
+            Policy::Random { seed } => {
+                // stable pseudo-random priority per (key, token) so ties
+                // break uniformly without carrying RNG state
+                let mut h = seed ^ (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ rec.token;
+                h ^= h >> 33;
+                h = h.wrapping_mul(0xFF51_AFD7_ED55_8CCD);
+                h ^= h >> 33;
+                (h as f64) / (u64::MAX as f64)
+            }
+            Policy::Lru => lru,
+            Policy::LfuSeq => lfu,
+            Policy::LfuModel => {
+                let total: u64 = rec.model_freq.iter().sum();
+                rec.model_freq[i] as f64 / (total.max(1) as f64)
+            }
+            Policy::Lhu => lhu,
+            Policy::Fld => fld,
+            Policy::Multidim { w } => w[0] * lru + w[1] * lfu + w[2] * lhu + w[3] * fld,
+        }
+    }
+}
+
+/// `1 - ((l_t - l_i + l_n) % l_n) / l_n` — experts in layers just ahead of
+/// the current layer score high; the layer just behind scores lowest.
+pub fn fld_term(expert_layer: u32, current_layer: u32, n_layers: u32) -> f64 {
+    let ln = n_layers as i64;
+    let dist = ((expert_layer as i64 - current_layer as i64) + ln) % ln;
+    1.0 - dist as f64 / ln as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fld_prefers_near_future_layers() {
+        let n = 8;
+        // current layer 3: layer 4 is next (dist 1), layer 2 is farthest ahead (dist 7)
+        let next = fld_term(4, 3, n);
+        let prev = fld_term(2, 3, n);
+        let same = fld_term(3, 3, n);
+        assert!(same > next && next > prev);
+        assert!((same - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn multidim_reduces_to_components() {
+        let mut rec = Records::new(2, 4);
+        rec.note_token();
+        rec.note_token();
+        let k = ExpertKey::new(0, 1);
+        rec.note_use(k, true);
+        let full = Policy::Multidim { w: [1.0, 0.0, 0.0, 0.0] };
+        assert!(
+            (full.priority(&rec, k, 0, 2) - Policy::Lru.priority(&rec, k, 0, 2)).abs() < 1e-12
+        );
+        let fld = Policy::Multidim { w: [0.0, 0.0, 0.0, 1.0] };
+        assert!(
+            (fld.priority(&rec, k, 0, 2) - Policy::Fld.priority(&rec, k, 0, 2)).abs() < 1e-12
+        );
+    }
+
+    #[test]
+    fn lhu_distinguishes_from_lfu() {
+        let mut rec = Records::new(1, 4);
+        rec.note_token();
+        let a = ExpertKey::new(0, 0);
+        let b = ExpertKey::new(0, 1);
+        // a: used 3x, never in high precision; b: used 2x, always high
+        for _ in 0..3 {
+            rec.note_use(a, false);
+        }
+        for _ in 0..2 {
+            rec.note_use(b, true);
+        }
+        assert!(Policy::LfuSeq.priority(&rec, a, 0, 1) > Policy::LfuSeq.priority(&rec, b, 0, 1));
+        assert!(Policy::Lhu.priority(&rec, b, 0, 1) > Policy::Lhu.priority(&rec, a, 0, 1));
+    }
+
+    #[test]
+    fn random_is_deterministic_per_token() {
+        let rec = Records::new(1, 4);
+        let p = Policy::Random { seed: 7 };
+        let k = ExpertKey::new(0, 2);
+        assert_eq!(p.priority(&rec, k, 0, 1), p.priority(&rec, k, 0, 1));
+    }
+
+    #[test]
+    fn names_roundtrip() {
+        for n in ["random", "lru", "lfu", "lfu-model", "lhu", "fld", "multidim"] {
+            assert!(Policy::from_name(n, [0.25; 4]).is_some(), "{n}");
+        }
+        assert!(Policy::from_name("nope", [0.25; 4]).is_none());
+    }
+}

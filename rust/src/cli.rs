@@ -1,0 +1,113 @@
+//! Hand-rolled argument parsing (clap is not in the offline vendor set).
+//! Flags are `--name value` or `--flag`; positional args fill in order.
+
+use std::collections::HashMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub flags: HashMap<String, String>,
+}
+
+impl Args {
+    /// Parse raw argv (after the subcommand). `bool_flags` names flags
+    /// that take no value.
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I, bool_flags: &[&str]) -> Args {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                if bool_flags.contains(&name) {
+                    out.flags.insert(name.to_string(), "true".into());
+                } else if let Some(v) = it.peek() {
+                    if v.starts_with("--") {
+                        out.flags.insert(name.to_string(), "true".into());
+                    } else {
+                        out.flags.insert(name.to_string(), it.next().unwrap());
+                    }
+                } else {
+                    out.flags.insert(name.to_string(), "true".into());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> usize {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> f64 {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.flags.contains_key(name)
+    }
+}
+
+pub const USAGE: &str = "\
+hobbit — mixed-precision expert offloading for fast MoE inference
+(reproduction of the HOBBIT paper; see DESIGN.md)
+
+USAGE:
+  hobbit <command> [options]
+
+COMMANDS:
+  serve       start the TCP serving front-end
+              --addr 127.0.0.1:7077  --model mixtral-tiny  --artifacts artifacts
+              --hardware rtx4090|orin|rtx4090+cpu  --max-conns N
+  generate    run one generation from the CLI
+              --model M --artifacts DIR --prompt TEXT --max-new N --temp T
+              --hardware H --no-dynamic --no-prefetch --policy P
+  figures     regenerate the paper's tables/figures
+              --fig 3a|3b|5|7|9|10|11|14|15|16|17a|17b|18a|18b|table3 | --all
+              --artifacts DIR --model M
+  sim         run one simulator configuration
+              --system hobbit|mo|mi|tf|ll|fd --hardware rtx4090|orin
+              --model mixtral|phi --prompt-len N --tokens N
+  selfcheck   artifact + weights + PJRT round-trip sanity check
+              --artifacts DIR --model M
+  help        print this help
+";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from), &["all", "no-dynamic"])
+    }
+
+    #[test]
+    fn values_and_bools() {
+        let a = parse("--model mixtral-tiny --all --max-new 32 pos1");
+        assert_eq!(a.get("model"), Some("mixtral-tiny"));
+        assert!(a.has("all"));
+        assert_eq!(a.get_usize("max-new", 0), 32);
+        assert_eq!(a.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("");
+        assert_eq!(a.get_or("model", "m"), "m");
+        assert_eq!(a.get_f64("temp", 0.5), 0.5);
+    }
+
+    #[test]
+    fn trailing_bool_flag() {
+        let a = parse("--no-dynamic");
+        assert!(a.has("no-dynamic"));
+    }
+}

@@ -1,0 +1,138 @@
+//! The serving coordinator: request queue, sequence lifecycle, generation
+//! loop, metrics. Follows the paper's evaluation protocol — batch size 1,
+//! FCFS, prefill latency + decode tokens/s as the headline metrics (§5.1
+//! "edge-side continuous serving scenarios often focus on single-batch
+//! inference").
+
+use std::collections::VecDeque;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::engine::{Engine, KvState};
+use crate::metrics::{RequestMetrics, RunReport};
+use crate::tensor::sample_logits;
+use crate::tokenizer::{Tokenizer, EOS};
+use crate::util::rng::Rng;
+
+/// One generation request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    pub prompt: String,
+    pub max_new_tokens: usize,
+    /// 0.0 = greedy
+    pub temperature: f32,
+}
+
+impl Request {
+    pub fn new(id: u64, prompt: impl Into<String>, max_new_tokens: usize) -> Self {
+        Self { id, prompt: prompt.into(), max_new_tokens, temperature: 0.0 }
+    }
+}
+
+/// A finished generation.
+#[derive(Debug, Clone)]
+pub struct GenerationResult {
+    pub id: u64,
+    pub text: String,
+    pub tokens: Vec<u32>,
+    pub metrics: RequestMetrics,
+}
+
+/// FCFS coordinator over one engine.
+pub struct Coordinator {
+    pub engine: Engine,
+    pub tokenizer: Tokenizer,
+    pub report: RunReport,
+    queue: VecDeque<Request>,
+    rng: Rng,
+}
+
+impl Coordinator {
+    pub fn new(engine: Engine) -> Self {
+        Self {
+            engine,
+            tokenizer: Tokenizer::new(),
+            report: RunReport::default(),
+            queue: VecDeque::new(),
+            rng: Rng::new(0xC0FFEE),
+        }
+    }
+
+    pub fn submit(&mut self, req: Request) {
+        self.queue.push_back(req);
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Serve every queued request FCFS; returns the results in order.
+    pub fn drain(&mut self) -> Result<Vec<GenerationResult>> {
+        let mut out = Vec::with_capacity(self.queue.len());
+        while let Some(req) = self.queue.pop_front() {
+            out.push(self.generate(&req)?);
+        }
+        Ok(out)
+    }
+
+    /// Run one request through prefill + decode.
+    pub fn generate(&mut self, req: &Request) -> Result<GenerationResult> {
+        let mut prompt_tokens = self.tokenizer.encode(&req.prompt);
+        let budget = self.engine.cfg.max_seq.saturating_sub(req.max_new_tokens + 1);
+        if prompt_tokens.len() > budget {
+            prompt_tokens.truncate(budget.max(1));
+        }
+
+        let mut kv: KvState = self.engine.new_sequence();
+        let compute0 = self.engine.compute_time();
+        let wait0 = self.engine.load_wait;
+
+        let t0 = Instant::now();
+        let mut logits = self.engine.prefill(&mut kv, &prompt_tokens)?;
+        let prefill_time = t0.elapsed();
+
+        let mut generated: Vec<u32> = Vec::with_capacity(req.max_new_tokens);
+        let t1 = Instant::now();
+        for _ in 0..req.max_new_tokens {
+            if kv.remaining() == 0 {
+                break;
+            }
+            let next = sample_logits(&logits, req.temperature, &mut self.rng) as u32;
+            if next == EOS {
+                break;
+            }
+            generated.push(next);
+            logits = self.engine.decode_step(&mut kv, next)?;
+        }
+        let decode_time = t1.elapsed();
+
+        let metrics = RequestMetrics {
+            prompt_tokens: prompt_tokens.len(),
+            generated_tokens: generated.len(),
+            prefill_time,
+            decode_time,
+            compute_time: self.engine.compute_time().saturating_sub(compute0),
+            load_wait_time: self.engine.load_wait.saturating_sub(wait0),
+        };
+        self.report.requests.push(metrics.clone());
+        self.sync_report();
+
+        Ok(GenerationResult {
+            id: req.id,
+            text: self.tokenizer.decode(&generated),
+            tokens: generated,
+            metrics,
+        })
+    }
+
+    /// Pull loader/cache stats into the report.
+    pub fn sync_report(&mut self) {
+        self.report.loader = self.engine.loader.stats.lock().unwrap().clone();
+        self.report.cache = self.engine.cache.lock().unwrap().stats.clone();
+        let (h, t) = self.engine.predictor.tracker.per_offset[0];
+        self.report.loader.prefetch_hits = h;
+        self.report.loader.prefetch_total = self.report.loader.prefetch_total.max(t);
+    }
+}

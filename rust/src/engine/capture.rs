@@ -1,0 +1,61 @@
+//! Instrumentation capture for the paper's analysis figures. Disabled by
+//! default (zero cost on the hot path beyond a bool check); the figures
+//! binary enables the channels it needs.
+
+use crate::ExpertKey;
+
+/// One expert activation observation (Fig 5a: ‖G‖ vs ‖G·E(x)‖).
+#[derive(Debug, Clone, Copy)]
+pub struct GateObs {
+    pub key: ExpertKey,
+    pub token: u64,
+    /// gate weight (normalized top-k)
+    pub gate: f32,
+    /// L2 norm of the expert's weighted output
+    pub out_norm: f32,
+    /// Eq. 2 unimportance score
+    pub score: f64,
+}
+
+/// Per-(token, layer) gate-input hidden state (Fig 7: cross-layer cosine).
+#[derive(Debug, Clone)]
+pub struct HiddenObs {
+    pub token: u64,
+    pub layer: u32,
+    pub hidden: Vec<f32>,
+}
+
+/// Routing record: top-k experts chosen per (token, layer) (Fig 10).
+#[derive(Debug, Clone)]
+pub struct RoutingObs {
+    pub token: u64,
+    pub layer: u32,
+    pub experts: Vec<u32>,
+    pub probs: Vec<f32>,
+}
+
+#[derive(Debug, Default)]
+pub struct Capture {
+    pub gate_stats: bool,
+    pub hidden_states: bool,
+    pub routing: bool,
+    pub gates: Vec<GateObs>,
+    pub hiddens: Vec<HiddenObs>,
+    pub routes: Vec<RoutingObs>,
+}
+
+impl Capture {
+    pub fn none() -> Self {
+        Self::default()
+    }
+
+    pub fn all() -> Self {
+        Self { gate_stats: true, hidden_states: true, routing: true, ..Self::default() }
+    }
+
+    pub fn clear(&mut self) {
+        self.gates.clear();
+        self.hiddens.clear();
+        self.routes.clear();
+    }
+}

@@ -1,0 +1,580 @@
+//! The inference engine: composes the AOT PJRT artifacts (attention,
+//! stacked gating, expert FFNs, LM head) into prefill/decode steps, with
+//! the paper's three mechanisms wired in:
+//!
+//! * on a cache miss the **Expert Scorer** picks the precision to fetch
+//!   (token-level dynamic loading, §3.2);
+//! * the **Stacking Computer** gate artifact predicts subsequent layers'
+//!   experts and the predictor issues mixed-precision prefetches (§3.3);
+//! * the **Multidimensional Cache Manager** owns eviction (§3.4).
+//!
+//! The engine is single-threaded on the compute side; the loader's
+//! scheduler thread moves expert bytes concurrently with compute, which is
+//! exactly the overlap the paper's prefetching exploits.
+
+mod capture;
+mod state;
+
+pub use capture::{Capture, GateObs, HiddenObs, RoutingObs};
+pub use state::KvState;
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{anyhow, Context, Result};
+use xla::Literal;
+
+use crate::cache::{CacheManager, Policy, Pool};
+use crate::config::{HardwareConfig, ModelConfig, PolicyConfig};
+use crate::loader::scorer::{self, Class};
+use crate::loader::{ExpertLoader, TaskKind};
+use crate::memory::{LinkModel, ThrottledCopier};
+use crate::model::{expert_literals, ExpertStore, NonExpertWeights};
+use crate::predictor::Predictor;
+use crate::runtime::{lit_f32, lit_i32, lit_to_f32, Runtime};
+use crate::{ExpertKey, Precision};
+
+/// Prefill chunk sizes with compiled artifacts, largest first.
+pub const PREFILL_CHUNKS: [usize; 3] = [128, 16, 1];
+
+pub struct EngineOptions {
+    pub hardware: HardwareConfig,
+    pub policy: PolicyConfig,
+    /// cache replacement policy (default: the paper's multidimensional)
+    pub cache_policy: Option<Policy>,
+    /// capture instrumentation channels
+    pub capture: Capture,
+    /// serve expert FFNs from the XLA-fused `expert_fast_*` lowerings
+    /// instead of the interpret-mode Pallas ones (§Perf: ~11x on the CPU
+    /// PJRT client; on a real TPU the Pallas kernels are the fast path)
+    pub use_fast_ffn: bool,
+}
+
+impl EngineOptions {
+    pub fn new(hardware: HardwareConfig, policy: PolicyConfig) -> Self {
+        Self {
+            hardware,
+            policy,
+            cache_policy: None,
+            capture: Capture::none(),
+            use_fast_ffn: true,
+        }
+    }
+}
+
+/// Precomputed per-layer literal sets (built once; the request path never
+/// re-creates weight literals — perf-critical).
+struct LayerLits {
+    attn: [Literal; 5], // norm, wq, wk, wv, wo
+    /// decode gate stack for this layer: (p_eff, pn[p,d], wg[p,d,E])
+    gate_stack: (usize, Literal, Literal),
+    /// prefill gate (p = 1)
+    gate_single: (Literal, Literal),
+}
+
+pub struct Engine {
+    pub rt: Runtime,
+    pub cfg: ModelConfig,
+    pub policy: PolicyConfig,
+    pub hardware: HardwareConfig,
+    pub store: Arc<ExpertStore>,
+    pub cache: Arc<Mutex<CacheManager>>,
+    pub loader: ExpertLoader,
+    pub predictor: Predictor,
+    pub capture: Capture,
+    /// retained for instrumentation (Fig 7 offline prediction accuracy)
+    pub nonexpert: NonExpertWeights,
+    nonexpert_emb: Vec<f32>,
+    layers: Vec<LayerLits>,
+    emb_lit: Literal,
+    final_norm_lit: Literal,
+    /// decode-loop accounting
+    pub load_wait: Duration,
+    token_counter: u64,
+    ffn_prefix: &'static str,
+}
+
+impl Engine {
+    /// Build an engine from `artifacts/<model>` + `artifacts/weights/<model>`.
+    pub fn new(artifacts_root: &Path, model: &str, opts: EngineOptions) -> Result<Self> {
+        let art_dir = artifacts_root.join(model);
+        let weights_dir = artifacts_root.join("weights").join(model);
+        let mut rt = Runtime::open(&art_dir)?;
+        let cfg = ModelConfig::from_manifest(&rt.manifest.model_json())
+            .map_err(|e| anyhow!("model config: {e}"))?;
+        opts.policy.validate().map_err(|e| anyhow!("policy: {e}"))?;
+        anyhow::ensure!(
+            opts.hardware.hi_cache_experts >= cfg.top_k,
+            "hi cache must hold at least top_k experts"
+        );
+
+        let nonexpert = NonExpertWeights::load(&weights_dir)?;
+        let store = Arc::new(ExpertStore::load(&weights_dir, &cfg)?);
+
+        // ---- compile the artifacts this configuration uses -----------------
+        let hi = opts.policy.hi_precision;
+        let lo = opts.policy.lo_precision;
+        // older artifact sets may not carry the fast lowerings
+        let fast = opts.use_fast_ffn
+            && rt.manifest.artifacts.contains_key("expert_fast_f32_s1");
+        let ffn_prefix = if fast { "expert_fast" } else { "expert" };
+        let mut names: Vec<String> = Vec::new();
+        for s in [1usize, 16, 128] {
+            names.push(format!("attn_s{s}"));
+            names.push(format!("head_s{s}"));
+            names.push(format!("{ffn_prefix}_{}_s{s}", hi.name()));
+            names.push(format!("{ffn_prefix}_{}_s{s}", lo.name()));
+        }
+        let depth = opts.policy.prefetch_depth;
+        for p in 1..=(depth + 1).min(4) {
+            names.push(format!("gate_p{p}_s1"));
+        }
+        for s in [16usize, 128] {
+            names.push(format!("gate_p1_s{s}"));
+        }
+        rt.ensure_all(names.iter().map(|s| s.as_str()))?;
+
+        // ---- per-layer literals --------------------------------------------
+        let l = cfg.n_layers as usize;
+        let stack_p = (depth + 1).min(4).max(1);
+        let mut layers = Vec::with_capacity(l);
+        for li in 0..l {
+            let get2 = |name: &str| -> Result<(Vec<usize>, Vec<f32>)> {
+                let (shape, data) = nonexpert.get(name)?;
+                Ok((shape.to_vec(), data.to_vec()))
+            };
+            let mk = |name: &str| -> Result<Literal> {
+                let (shape, data) = get2(name)?;
+                lit_f32(&shape, &data)
+            };
+            let attn = [
+                mk(&format!("attn_norm.{li}"))?,
+                mk(&format!("wq.{li}"))?,
+                mk(&format!("wk.{li}"))?,
+                mk(&format!("wv.{li}"))?,
+                mk(&format!("wo.{li}"))?,
+            ];
+            // decode gate stack: layers li .. li+p_eff-1
+            let p_eff = stack_p.min(l - li);
+            let mut pn = Vec::with_capacity(p_eff * cfg.d_model);
+            let mut wg = Vec::with_capacity(p_eff * cfg.d_model * cfg.n_experts as usize);
+            for j in 0..p_eff {
+                let (_, pnj) = nonexpert.get(&format!("post_norm.{}", li + j))?;
+                pn.extend_from_slice(pnj);
+                let (_, wgj) = nonexpert.get(&format!("wg.{}", li + j))?;
+                wg.extend_from_slice(wgj);
+            }
+            let e = cfg.n_experts as usize;
+            let gate_stack = (
+                p_eff,
+                lit_f32(&[p_eff, cfg.d_model], &pn)?,
+                lit_f32(&[p_eff, cfg.d_model, e], &wg)?,
+            );
+            let (_, pn0) = nonexpert.get(&format!("post_norm.{li}"))?;
+            let (_, wg0) = nonexpert.get(&format!("wg.{li}"))?;
+            let gate_single = (
+                lit_f32(&[1, cfg.d_model], pn0)?,
+                lit_f32(&[1, cfg.d_model, e], wg0)?,
+            );
+            layers.push(LayerLits { attn, gate_stack, gate_single });
+        }
+
+        let (emb_shape, emb) = nonexpert.get("emb")?;
+        let emb_lit = lit_f32(emb_shape, emb)?;
+        let nonexpert_emb = emb.to_vec();
+        let (_, fnorm) = nonexpert.get("final_norm")?;
+        let final_norm_lit = lit_f32(&[cfg.d_model], fnorm)?;
+
+        // ---- cache + loader -------------------------------------------------
+        let penalty_ratio = opts.policy.penalty_ratio(&cfg);
+        let cache_policy = opts.cache_policy.clone().unwrap_or(Policy::Multidim {
+            w: [opts.policy.w_lru, opts.policy.w_lfu, opts.policy.w_lhu, opts.policy.w_fld],
+        });
+        let cache = Arc::new(Mutex::new(CacheManager::new(
+            cfg.n_layers,
+            cfg.n_experts,
+            opts.hardware.hi_cache_experts,
+            cfg.bytes_for(hi),
+            opts.hardware.lo_cache_experts,
+            cfg.bytes_for(lo),
+            cache_policy,
+            penalty_ratio,
+        )));
+        let copier = Arc::new(ThrottledCopier::new(LinkModel {
+            bytes_per_s: opts.hardware.load_bw,
+            latency_s: opts.hardware.load_latency,
+        }));
+        let loader = ExpertLoader::start(store.clone(), cache.clone(), copier);
+        let predictor = Predictor::new(
+            depth,
+            cfg.top_k,
+            opts.policy.t1,
+            opts.policy.t2,
+            opts.policy.dynamic_loading,
+            cfg.n_layers,
+        );
+
+        Ok(Self {
+            rt,
+            cfg,
+            policy: opts.policy,
+            hardware: opts.hardware,
+            store,
+            cache,
+            loader,
+            predictor,
+            capture: opts.capture,
+            nonexpert,
+            nonexpert_emb,
+            layers,
+            emb_lit,
+            final_norm_lit,
+            load_wait: Duration::ZERO,
+            token_counter: 0,
+            ffn_prefix: if fast { "expert_fast" } else { "expert" },
+        })
+    }
+
+    /// Start a new sequence: fresh KV state + per-sequence cache records.
+    pub fn new_sequence(&mut self) -> KvState {
+        self.cache.lock().unwrap().reset_sequence();
+        KvState::new(&self.cfg)
+    }
+
+    /// Prefill `tokens`, returning the logits after the last token.
+    pub fn prefill(&mut self, kv: &mut KvState, tokens: &[u32]) -> Result<Vec<f32>> {
+        anyhow::ensure!(!tokens.is_empty(), "empty prompt");
+        anyhow::ensure!(tokens.len() <= kv.remaining(), "prompt exceeds KV capacity");
+        let mut i = 0usize;
+        let mut logits = None;
+        while i < tokens.len() {
+            let remaining = tokens.len() - i;
+            let chunk = *PREFILL_CHUNKS
+                .iter()
+                .find(|&&c| c <= remaining)
+                .unwrap_or(&1usize);
+            let is_last = i + chunk >= tokens.len();
+            let out = self.forward_chunk(kv, &tokens[i..i + chunk], chunk, is_last)?;
+            if is_last {
+                logits = out;
+            }
+            i += chunk;
+        }
+        logits.ok_or_else(|| anyhow!("prefill produced no logits"))
+    }
+
+    /// One decode step for `token`; returns next-token logits.
+    pub fn decode_step(&mut self, kv: &mut KvState, token: u32) -> Result<Vec<f32>> {
+        anyhow::ensure!(kv.remaining() >= 1, "KV cache full");
+        self.forward_chunk(kv, &[token], 1, true)?
+            .ok_or_else(|| anyhow!("decode produced no logits"))
+    }
+
+    /// Run `tokens` through the model with chunk-size `s` artifacts.
+    /// Padded rows (when tokens.len() < s) are masked out of routing.
+    fn forward_chunk(
+        &mut self,
+        kv: &mut KvState,
+        tokens: &[u32],
+        s: usize,
+        want_logits: bool,
+    ) -> Result<Option<Vec<f32>>> {
+        let real = tokens.len();
+        anyhow::ensure!(real <= s);
+        let d = self.cfg.d_model;
+        let e = self.cfg.n_experts as usize;
+        let decode = s == 1;
+
+        // embed (pad rows use PAD)
+        let mut x = vec![0.0f32; s * d];
+        for (r, slot) in x.chunks_mut(d).enumerate() {
+            let tok = if r < real { tokens[r] } else { crate::tokenizer::PAD } as usize;
+            slot.copy_from_slice(&self.nonexpert_emb[tok * d..(tok + 1) * d]);
+        }
+        let pos = kv.pos as i32;
+
+        for li in 0..self.cfg.n_layers as usize {
+            // ---- attention ---------------------------------------------------
+            let x_lit = lit_f32(&[s, d], &x)?;
+            let kdims = [self.cfg.max_seq, self.cfg.n_kv_heads, self.cfg.head_dim()];
+            let k_lit = lit_f32(&kdims, &kv.k[li])?;
+            let v_lit = lit_f32(&kdims, &kv.v[li])?;
+            let pos_lit = lit_i32(pos);
+            let ll = &self.layers[li];
+            let args: Vec<&Literal> = vec![
+                &x_lit, &ll.attn[0], &ll.attn[1], &ll.attn[2], &ll.attn[3], &ll.attn[4],
+                &k_lit, &v_lit, &pos_lit,
+            ];
+            let outs = self.rt.execute(&format!("attn_s{s}"), &args)?;
+            anyhow::ensure!(outs.len() == 3, "attn outputs");
+            let y = lit_to_f32(&outs[0])?;
+            kv.k[li] = lit_to_f32(&outs[1])?;
+            kv.v[li] = lit_to_f32(&outs[2])?;
+            x = y;
+
+            // ---- gating (stacked on decode; single on prefill) --------------
+            let x_lit = lit_f32(&[s, d], &x)?;
+            let (p_eff, probs, hn) = if decode {
+                let (p_eff, ref pn, ref wg) = ll.gate_stack;
+                let args: Vec<&Literal> = vec![&x_lit, pn, wg];
+                let outs = self.rt.execute(&format!("gate_p{p_eff}_s1"), &args)?;
+                (p_eff, lit_to_f32(&outs[0])?, lit_to_f32(&outs[1])?)
+            } else {
+                let (ref pn, ref wg) = ll.gate_single;
+                let args: Vec<&Literal> = vec![&x_lit, pn, wg];
+                let outs = self.rt.execute(&format!("gate_p1_s{s}"), &args)?;
+                (1usize, lit_to_f32(&outs[0])?, lit_to_f32(&outs[1])?)
+            };
+            // probs layout [p, s, e]; row-major
+            let layer_probs = &probs[..s * e];
+
+            // ---- routing + scoring -------------------------------------------
+            let li_u32 = li as u32;
+            if self.capture.hidden_states {
+                // raw gating input (attention output, pre-norm): the
+                // quantity whose cross-layer similarity Fig 7 measures
+                self.capture.hiddens.push(HiddenObs {
+                    token: self.token_counter,
+                    layer: li_u32,
+                    hidden: x[..d].to_vec(),
+                });
+            }
+            let mut per_expert: HashMap<u32, (Class, Vec<f32>, f64)> = HashMap::new();
+            for r in 0..real {
+                let row = &layer_probs[r * e..(r + 1) * e];
+                let decisions = scorer::decide(
+                    row,
+                    self.cfg.top_k,
+                    self.policy.t1,
+                    self.policy.t2,
+                    self.policy.dynamic_loading,
+                );
+                if self.capture.routing {
+                    self.capture.routes.push(RoutingObs {
+                        token: self.token_counter + r as u64,
+                        layer: li_u32,
+                        experts: decisions.iter().map(|dd| dd.expert).collect(),
+                        probs: row.to_vec(),
+                    });
+                }
+                for dd in decisions {
+                    let ent = per_expert
+                        .entry(dd.expert)
+                        .or_insert((Class::Skip, vec![0.0; s], dd.score));
+                    ent.0 = max_class(ent.0, dd.class);
+                    ent.1[r] = dd.gate_weight;
+                    ent.2 = ent.2.min(dd.score);
+                }
+            }
+
+            // predictor: plan prefetches for subsequent layers (decode only)
+            if decode && p_eff > 1 && self.policy.prefetch_depth > 0 {
+                let stacked: Vec<Vec<f32>> =
+                    (0..p_eff).map(|j| probs[j * e..(j + 1) * e].to_vec()).collect();
+                self.loader.bump_prefetch_generation();
+                let mut cache = self.cache.lock().unwrap();
+                let plan =
+                    self.predictor
+                        .plan(&mut cache, li_u32, self.cfg.n_layers, &stacked);
+                drop(cache);
+                if let Some(plan) = plan {
+                    let mut stats = self.loader.stats.lock().unwrap();
+                    stats.prefetch_total += plan.experts.len() as u64;
+                    drop(stats);
+                    for (key, class) in plan.experts {
+                        let (prec, pool) = self.class_target(class);
+                        if class != Class::Skip {
+                            let _ = self.loader.submit(
+                                key,
+                                prec,
+                                pool,
+                                TaskKind::Prefetch,
+                                li_u32,
+                            );
+                        }
+                    }
+                }
+            }
+            if decode {
+                // score the pending prediction of this layer + release pins
+                // (unconditional: even layers with p_eff == 1 may have been
+                // predicted from an earlier layer)
+                let mut cache = self.cache.lock().unwrap();
+                self.predictor.observe(&mut cache, li_u32, &layer_probs[..e]);
+                let hits = self.predictor.tracker.per_offset[0].0;
+                let mut st = self.loader.stats.lock().unwrap();
+                st.prefetch_hits = hits;
+            }
+
+            // ---- ensure on-demand experts resident ---------------------------
+            let mut waits: Vec<u64> = Vec::new();
+            let mut uses: Vec<(ExpertKey, Class, Vec<f32>)> = Vec::new();
+            {
+                let mut cache = self.cache.lock().unwrap();
+                cache.records.note_token();
+                for (&expert, (class, gatew, _score)) in &per_expert {
+                    if *class == Class::Skip {
+                        let mut st = self.loader.stats.lock().unwrap();
+                        st.skipped += 1;
+                        continue;
+                    }
+                    let key = ExpertKey::new(li_u32, expert);
+                    let (_prec, pool) = self.class_target(*class);
+                    let mut hit = cache.access(key, pool);
+                    // a Lo request served by a resident Hi copy is a free upgrade
+                    let mut eff_class = *class;
+                    if !hit && pool == Pool::Lo && cache.hi.contains_ready(key) {
+                        hit = true;
+                        eff_class = Class::Hi;
+                        cache.stats.hits_hi += 1;
+                        // undo the lo-miss penalty charged by access()
+                        cache.stats.misses_lo -= 1;
+                        cache.stats.miss_penalty -= cache.penalty_ratio();
+                    }
+                    match eff_class {
+                        Class::Hi => cache.hi.pin(key),
+                        _ => cache.lo.pin(key),
+                    }
+                    uses.push((key, eff_class, gatew.clone()));
+                    if !hit {
+                        drop(cache);
+                        let (prec, pool) = self.class_target(eff_class);
+                        if let Some(id) =
+                            self.loader.submit(key, prec, pool, TaskKind::OnDemand, li_u32)
+                        {
+                            waits.push(id);
+                        }
+                        cache = self.cache.lock().unwrap();
+                    }
+                }
+            }
+            if !waits.is_empty() {
+                let waited = self.loader.wait(&waits);
+                self.load_wait += waited;
+                let mut st = self.loader.stats.lock().unwrap();
+                st.wait_time += waited;
+            }
+
+            // ---- expert FFNs --------------------------------------------------
+            let x_norm_lit = lit_f32(&[s, d], &hn)?;
+            let mut moe_out = vec![0.0f32; s * d];
+            for (key, class, gatew) in uses {
+                let (prec, pool) = self.class_target(class);
+                let buf = {
+                    let cache = self.cache.lock().unwrap();
+                    let pool_ref = match pool {
+                        Pool::Hi => &cache.hi,
+                        Pool::Lo => &cache.lo,
+                    };
+                    pool_ref.buffer(key)
+                };
+                let Some(buf) = buf else {
+                    // evicted between load and use under extreme pressure:
+                    // execute directly from next-level memory (bypass)
+                    let record = self.store.record(key, prec).to_vec();
+                    self.run_expert(&x_norm_lit, s, prec, &record, &gatew, &mut moe_out, key)?;
+                    self.unpin(key, pool);
+                    continue;
+                };
+                let record = buf.lock().unwrap().clone();
+                self.run_expert(&x_norm_lit, s, prec, &record, &gatew, &mut moe_out, key)?;
+                {
+                    let mut cache = self.cache.lock().unwrap();
+                    cache.note_use(key, pool);
+                }
+                self.unpin(key, pool);
+            }
+            for (xv, mv) in x.iter_mut().zip(&moe_out) {
+                *xv += mv;
+            }
+        }
+
+        kv.pos += real;
+        self.token_counter += real as u64;
+
+        if !want_logits {
+            return Ok(None);
+        }
+        let x_lit = lit_f32(&[s, d], &x)?;
+        let args: Vec<&Literal> = vec![&x_lit, &self.final_norm_lit, &self.emb_lit];
+        let outs = self.rt.execute(&format!("head_s{s}"), &args)?;
+        let logits = lit_to_f32(&outs[0])?;
+        let v = self.cfg.vocab;
+        Ok(Some(logits[(real - 1) * v..real * v].to_vec()))
+    }
+
+    fn unpin(&self, key: ExpertKey, pool: Pool) {
+        let mut cache = self.cache.lock().unwrap();
+        match pool {
+            Pool::Hi => cache.hi.unpin(key),
+            Pool::Lo => cache.lo.unpin(key),
+        }
+    }
+
+    fn run_expert(
+        &mut self,
+        x_norm_lit: &Literal,
+        s: usize,
+        prec: Precision,
+        record: &[u8],
+        gatew: &[f32],
+        moe_out: &mut [f32],
+        key: ExpertKey,
+    ) -> Result<()> {
+        let mut args: Vec<Literal> = Vec::with_capacity(8);
+        args.push(x_norm_lit.clone());
+        args.extend(expert_literals(&self.cfg, prec, record)?);
+        args.push(lit_f32(&[s], gatew)?);
+        let name = format!("{}_{}_s{s}", self.ffn_prefix, prec.name());
+        let outs = self
+            .rt
+            .execute(&name, &args)
+            .with_context(|| format!("expert {key:?} via {name}"))?;
+        let y = lit_to_f32(&outs[0])?;
+        if self.capture.gate_stats {
+            let d = self.cfg.d_model;
+            for (r, w) in gatew.iter().enumerate() {
+                if *w > 0.0 {
+                    let row = &y[r * d..(r + 1) * d];
+                    let norm =
+                        row.iter().map(|v| (*v as f64) * (*v as f64)).sum::<f64>().sqrt();
+                    self.capture.gates.push(GateObs {
+                        key,
+                        token: self.token_counter + r as u64,
+                        gate: *w,
+                        out_norm: norm as f32,
+                        score: 0.0,
+                    });
+                }
+            }
+        }
+        for (o, yv) in moe_out.iter_mut().zip(&y) {
+            *o += yv;
+        }
+        Ok(())
+    }
+
+    /// Map a scorer class to (precision, pool) under the active config.
+    fn class_target(&self, class: Class) -> (Precision, Pool) {
+        match class {
+            Class::Hi => (self.policy.hi_precision, Pool::Hi),
+            Class::Lo | Class::Skip => (self.policy.lo_precision, Pool::Lo),
+        }
+    }
+
+    /// Compute-time spent inside PJRT (for Fig 3a-real).
+    pub fn compute_time(&self) -> Duration {
+        self.rt.compute_time.get()
+    }
+}
+
+fn max_class(a: Class, b: Class) -> Class {
+    use Class::*;
+    match (a, b) {
+        (Hi, _) | (_, Hi) => Hi,
+        (Lo, _) | (_, Lo) => Lo,
+        _ => Skip,
+    }
+}

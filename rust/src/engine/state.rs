@@ -1,0 +1,80 @@
+//! Per-sequence state: KV caches (host-resident, threaded through the
+//! functional attention artifacts) and position.
+
+use crate::config::ModelConfig;
+
+/// One sequence's KV caches: per layer, [max_seq, n_kv_heads, head_dim].
+#[derive(Debug, Clone)]
+pub struct KvState {
+    pub k: Vec<Vec<f32>>,
+    pub v: Vec<Vec<f32>>,
+    /// tokens already written to the cache
+    pub pos: usize,
+    pub max_seq: usize,
+}
+
+impl KvState {
+    pub fn new(cfg: &ModelConfig) -> Self {
+        let per_layer = cfg.max_seq * cfg.n_kv_heads * cfg.head_dim();
+        Self {
+            k: (0..cfg.n_layers).map(|_| vec![0.0; per_layer]).collect(),
+            v: (0..cfg.n_layers).map(|_| vec![0.0; per_layer]).collect(),
+            pos: 0,
+            max_seq: cfg.max_seq,
+        }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.max_seq.saturating_sub(self.pos)
+    }
+
+    pub fn reset(&mut self) {
+        for k in &mut self.k {
+            k.fill(0.0);
+        }
+        for v in &mut self.v {
+            v.fill(0.0);
+        }
+        self.pos = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> ModelConfig {
+        ModelConfig {
+            name: "t".into(),
+            n_layers: 2,
+            d_model: 64,
+            d_ff: 128,
+            n_experts: 4,
+            top_k: 2,
+            n_heads: 4,
+            n_kv_heads: 2,
+            vocab: 260,
+            max_seq: 16,
+            quant_group: 32,
+            expert_bytes: [0; 4],
+        }
+    }
+
+    #[test]
+    fn kv_dims() {
+        let s = KvState::new(&cfg());
+        assert_eq!(s.k.len(), 2);
+        assert_eq!(s.k[0].len(), 16 * 2 * 16);
+        assert_eq!(s.remaining(), 16);
+    }
+
+    #[test]
+    fn reset_clears() {
+        let mut s = KvState::new(&cfg());
+        s.k[0][5] = 1.0;
+        s.pos = 7;
+        s.reset();
+        assert_eq!(s.k[0][5], 0.0);
+        assert_eq!(s.pos, 0);
+    }
+}

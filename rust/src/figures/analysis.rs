@@ -1,0 +1,193 @@
+//! Trace/cache analysis figures: Fig 10 (expert-usage statistics), Fig 11
+//! (LFU vs LHU), Fig 18 (cache-policy comparison).
+
+use crate::cache::Policy;
+use crate::trace::replay::{replay, ReplayConfig};
+use crate::trace::{self, generate, TraceGenConfig};
+
+use super::{section, Row};
+
+fn mixtral_traces(seed: u64) -> trace::TraceSet {
+    generate(&TraceGenConfig { seed, ..TraceGenConfig::mixtral_like() }, 4, 96)
+}
+
+/// Fig 10: (a) probability of expert reuse between consecutive tokens vs
+/// the theoretical uniform values; (b) sequence-level selection skew.
+pub fn fig10() -> Vec<Row> {
+    section("Fig 10 — expert usage statistics (Mixtral-like traces)");
+    let ts = mixtral_traces(41);
+    let k = 2;
+    let e = 8.0;
+    let top1: f64 =
+        ts.seqs.iter().map(|s| trace::top1_reuse_prob(s, k)).sum::<f64>() / ts.seqs.len() as f64;
+    let any: f64 =
+        ts.seqs.iter().map(|s| trace::any_reuse_prob(s, k)).sum::<f64>() / ts.seqs.len() as f64;
+    // theoretical: top-1 reused with prob k/E; any-of-k ~ 1-((E-k)/E)^k
+    let th_top1 = k as f64 / e;
+    let th_any = 1.0 - ((e - k as f64) / e) * ((e - 1.0 - k as f64) / (e - 1.0));
+    let mut rows = vec![
+        Row::new("top1 reuse").push("measured", top1).push("theoretical", th_top1),
+        Row::new("any-of-topk reuse").push("measured", any).push("theoretical", th_any),
+    ];
+    // (b) per-sequence preference divergence: mean L1 distance between two
+    // sequences' per-layer selection frequencies
+    let f0 = trace::selection_frequency(&ts.seqs[0], k);
+    let f1 = trace::selection_frequency(&ts.seqs[1], k);
+    let mut l1 = 0.0;
+    for (r0, r1) in f0.iter().zip(&f1) {
+        for (a, b) in r0.iter().zip(r1) {
+            l1 += (a - b).abs();
+        }
+    }
+    l1 /= f0.len() as f64;
+    rows.push(Row::new("seq-level preference L1 gap").push("per-layer", l1));
+    super::print_rows(&rows);
+    rows
+}
+
+/// Fig 11: LFU vs LHU on mixed-precision usage — per-expert miss counts
+/// for one layer and the total penalty gap.
+pub fn fig11() -> Vec<Row> {
+    section("Fig 11 — LFU vs LHU (mixed-precision cache, one layer)");
+    let ts = mixtral_traces(43);
+    let cfg = ReplayConfig { hi_capacity: 12, lo_capacity: 16, ..Default::default() };
+    let lfu = replay(&ts, Policy::LfuSeq, &cfg);
+    let lhu = replay(&ts, Policy::Lhu, &cfg);
+    let mut rows = Vec::new();
+    // per-expert misses of layer 0 (the paper shows one layer)
+    for e in 0..8usize {
+        rows.push(
+            Row::new(format!("layer0/expert{e}"))
+                .push("lfu_hi_miss", lfu.per_expert_misses[e][0] as f64)
+                .push("lfu_lo_miss", lfu.per_expert_misses[e][1] as f64)
+                .push("lhu_hi_miss", lhu.per_expert_misses[e][0] as f64)
+                .push("lhu_lo_miss", lhu.per_expert_misses[e][1] as f64),
+        );
+    }
+    rows.push(
+        Row::new("total miss penalty")
+            .push("lfu", lfu.penalty)
+            .push("lhu", lhu.penalty)
+            .push("lhu_vs_lfu_%", 100.0 * (lfu.penalty - lhu.penalty) / lfu.penalty),
+    );
+    super::print_rows(&rows);
+    rows
+}
+
+/// The four evaluation setups of Fig 18(a): (model, cache sizes).
+fn fig18_setups() -> Vec<(String, TraceGenConfig, ReplayConfig)> {
+    vec![
+        (
+            "mixtral/4090".into(),
+            TraceGenConfig::mixtral_like(),
+            ReplayConfig { hi_capacity: 43, lo_capacity: 55, ..Default::default() },
+        ),
+        (
+            "mixtral/orin".into(),
+            TraceGenConfig::mixtral_like(),
+            ReplayConfig { hi_capacity: 16, lo_capacity: 24, ..Default::default() },
+        ),
+        (
+            "phi/4090".into(),
+            TraceGenConfig::phi_like(),
+            ReplayConfig { hi_capacity: 90, lo_capacity: 110, ..Default::default() },
+        ),
+        (
+            "phi/orin".into(),
+            TraceGenConfig::phi_like(),
+            ReplayConfig { hi_capacity: 34, lo_capacity: 50, ..Default::default() },
+        ),
+    ]
+}
+
+/// Fig 18(a): cache miss penalty by policy, normalized against Random.
+pub fn fig18a(weights: [f64; 4]) -> Vec<Row> {
+    section("Fig 18(a) — cache policy miss penalty (normalized vs random)");
+    let mut rows = Vec::new();
+    for (name, mut gen, cfg) in fig18_setups() {
+        gen.seed = 47;
+        let ts = generate(&gen, 5, 96);
+        let base = replay(&ts, Policy::Random { seed: 3 }, &cfg).penalty;
+        let mut row = Row::new(name);
+        for (pname, p) in [
+            ("lru", Policy::Lru),
+            ("lfu", Policy::LfuSeq),
+            ("lhu", Policy::Lhu),
+            ("fld", Policy::Fld),
+            ("ours", Policy::Multidim { w: weights }),
+        ] {
+            let r = replay(&ts, p, &cfg);
+            row = row.push(pname, r.penalty / base);
+        }
+        row.print();
+        rows.push(row);
+    }
+    rows
+}
+
+/// Fig 18(b): model-level vs sequence-level records (LFU is the policy
+/// the level matters for).
+pub fn fig18b() -> Vec<Row> {
+    section("Fig 18(b) — model-level vs sequence-level policies (hit ratio)");
+    let ts = mixtral_traces(53);
+    let cfg = ReplayConfig { hi_capacity: 20, lo_capacity: 28, ..Default::default() };
+    let mut rows = Vec::new();
+    for (name, p) in [
+        ("lfu", None),
+        ("lru", Some(Policy::Lru)),
+        ("fld", Some(Policy::Fld)),
+    ] {
+        let (model_lvl, seq_lvl) = match p {
+            None => (
+                replay(&ts, Policy::LfuModel, &cfg),
+                replay(&ts, Policy::LfuSeq, &cfg),
+            ),
+            Some(p) => (
+                replay(&ts, p.clone(), &ReplayConfig { seq_level: false, ..cfg.clone() }),
+                replay(&ts, p, &cfg),
+            ),
+        };
+        rows.push(
+            Row::new(name)
+                .push("model_level_hit", model_lvl.hit_ratio())
+                .push("seq_level_hit", seq_lvl.hit_ratio()),
+        );
+    }
+    super::print_rows(&rows);
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::EQ3_WEIGHTS;
+
+    #[test]
+    fn fig10_reuse_beats_theory() {
+        let rows = fig10();
+        assert!(rows[0].get("measured").unwrap() > rows[0].get("theoretical").unwrap());
+        assert!(rows[1].get("measured").unwrap() > rows[0].get("measured").unwrap());
+    }
+
+    #[test]
+    fn fig18a_ours_best_on_average() {
+        let rows = fig18a(EQ3_WEIGHTS);
+        let mean = |k: &str| {
+            rows.iter().map(|r| r.get(k).unwrap()).sum::<f64>() / rows.len() as f64
+        };
+        let ours = mean("ours");
+        assert!(ours < 1.0, "ours {ours} must beat random");
+        assert!(ours <= mean("lru") + 1e-9, "ours {ours} vs lru {}", mean("lru"));
+        assert!(ours <= mean("lfu") + 0.01, "ours {ours} vs lfu {}", mean("lfu"));
+    }
+
+    #[test]
+    fn fig18b_seq_level_helps_lfu() {
+        let rows = fig18b();
+        let lfu = &rows[0];
+        assert!(
+            lfu.get("seq_level_hit").unwrap() >= lfu.get("model_level_hit").unwrap() - 0.01,
+            "sequence-level LFU should not lose to model-level"
+        );
+    }
+}

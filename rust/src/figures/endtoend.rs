@@ -1,0 +1,257 @@
+//! Sim-scale figures: Fig 3a (time breakdown), Fig 9 (preload timelines),
+//! Fig 14 (end-to-end vs SOTA), Fig 15 (CPU cooperative), Fig 16 (dynamic
+//! loading ablation), Fig 17b (prefetch ablation).
+
+use crate::baselines::{self, EQ3_WEIGHTS};
+use crate::sim::des::{simulate_decode, SimSystem};
+use crate::sim::params::{SimHardware, SimModel};
+use crate::trace::{generate, TraceGenConfig, TraceSet};
+
+use super::{section, Row};
+
+/// The paper's four [input, output] length groups (§5.1 Metrics).
+pub const LEN_GROUPS: [(usize, u32); 4] = [(16, 32), (16, 128), (128, 32), (128, 128)];
+
+fn traces_for(model: &SimModel, n_seqs: usize, tokens: u32, seed: u64) -> TraceSet {
+    let mut cfg = if model.n_experts == 16 {
+        TraceGenConfig::phi_like()
+    } else {
+        TraceGenConfig::mixtral_like()
+    };
+    cfg.n_layers = model.n_layers;
+    cfg.seed = seed;
+    generate(&cfg, n_seqs, tokens)
+}
+
+/// Fig 3(a): expert loading dominates inference cost (RTX 4090 ~85%,
+/// Jetson Orin ~95%) — measured on a naive on-demand offloading system.
+pub fn fig3a() -> Vec<Row> {
+    section("Fig 3(a) — decode time breakdown (naive on-demand offloading)");
+    let mut rows = Vec::new();
+    // the motivation measurement runs the base fp16 model on both devices
+    for (hw, bits) in [(SimHardware::rtx4090(), 16.0), (SimHardware::orin(), 16.0)] {
+        let model = SimModel::mixtral_8x7b();
+        let mut sys = SimSystem::moe_offloading(bits);
+        sys.prefetch_depth = 0; // pure on-demand (the paper's measurement)
+        sys.name = "on-demand".into();
+        let traces = traces_for(&model, 2, 32, 11);
+        let (_, d) = simulate_decode(&sys, &hw, &model, &traces, 16, 1);
+        let load_pct = 100.0 * d.load_fraction();
+        rows.push(
+            Row::new(format!("{} / Mixtral-8x7B", hw.name))
+                .push("load%", load_pct)
+                .push("compute%", 100.0 - load_pct),
+        );
+    }
+    super::print_rows(&rows);
+    rows
+}
+
+/// Fig 9: preload timelines — decode speed under prediction-accuracy and
+/// mixed-precision conditions. Reproduces the ordering: (b) high-acc
+/// prefetch ≥ (a) no prefetch ≥ (c) low-acc prefetch, and mixed precision
+/// (d)/(e) softens the low-acc penalty.
+pub fn fig9() -> Vec<Row> {
+    section("Fig 9 — prefetch benefit/penalty vs prediction accuracy");
+    let hw = SimHardware::rtx4090();
+    let model = SimModel::mixtral_8x7b();
+    let traces = traces_for(&model, 2, 32, 13);
+    let mut rows = Vec::new();
+    let cases: [(&str, usize, f64, bool); 5] = [
+        ("(a) no prefetch, fp16", 0, 0.0, false),
+        ("(b) prefetch acc=0.95, fp16", 1, 0.95, false),
+        ("(c) prefetch acc=0.40, fp16", 1, 0.40, false),
+        ("(d) prefetch acc=0.95, mixed", 1, 0.95, true),
+        ("(e) prefetch acc=0.40, mixed", 1, 0.40, true),
+    ];
+    for (name, depth, acc, mixed) in cases {
+        let mut sys = SimSystem::hobbit(EQ3_WEIGHTS);
+        sys.name = name.into();
+        sys.prefetch_depth = depth;
+        sys.pred_acc = [acc; 4];
+        sys.dynamic = mixed;
+        if !mixed {
+            sys.lo_cache_frac = 0.0;
+        }
+        let (_, d) = simulate_decode(&sys, &hw, &model, &traces, 16, 2);
+        rows.push(Row::new(name).push("tok/s", d.tps()).push("load_wait_s", d.load_wait_time));
+    }
+    super::print_rows(&rows);
+    rows
+}
+
+/// Fig 14: end-to-end decode speed + prefill latency, HOBBIT vs SOTA, on
+/// the first two testing groups of Table 2 (Orin-int8, 4090-fp16), both
+/// models, the paper's four length groups.
+pub fn fig14() -> Vec<Row> {
+    section("Fig 14 — end-to-end vs SOTA (sim @ paper scale)");
+    let mut rows = Vec::new();
+    for (group_name, hw, systems) in [
+        ("orin-int8", SimHardware::orin(), baselines::group_orin_int8()),
+        ("4090-f16", SimHardware::rtx4090(), baselines::group_rtx4090_f16()),
+    ] {
+        for model in [SimModel::mixtral_8x7b(), SimModel::phi_moe()] {
+            for (inp, out) in LEN_GROUPS {
+                let traces = traces_for(&model, 2, out, 17 + inp as u64);
+                for sys in &systems {
+                    let (p, d) = simulate_decode(sys, &hw, &model, &traces, inp, 3);
+                    rows.push(
+                        Row::new(format!(
+                            "{group_name}/{}/[{inp},{out}]/{}",
+                            model.name, sys.name
+                        ))
+                        .push("decode_tps", d.tps())
+                        .push("prefill_s", p.latency),
+                    );
+                }
+            }
+        }
+    }
+    super::print_rows(&rows);
+    // summary speedups (the paper's headline numbers)
+    summarize_speedups(&rows, "4090-f16", "HOBBIT", &["MoE-Offloading", "MoE-Infinity"]);
+    summarize_speedups(&rows, "orin-int8", "HOBBIT", &["Llama.cpp", "MoE-Infinity"]);
+    rows
+}
+
+fn summarize_speedups(rows: &[Row], group: &str, ours: &str, baselines: &[&str]) {
+    for b in baselines {
+        let mut ratios = Vec::new();
+        for r in rows.iter().filter(|r| r.label.starts_with(group) && r.label.ends_with(ours)) {
+            let prefix = r.label.rsplit_once('/').unwrap().0;
+            if let Some(br) = rows.iter().find(|x| x.label == format!("{prefix}/{b}")) {
+                let (a, bb) = (r.get("decode_tps").unwrap(), br.get("decode_tps").unwrap());
+                if bb > 0.0 {
+                    ratios.push(a / bb);
+                }
+            }
+        }
+        if !ratios.is_empty() {
+            let mean = ratios.iter().sum::<f64>() / ratios.len() as f64;
+            println!("  -> {group}: HOBBIT vs {b}: mean decode speedup {mean:.2}x");
+        }
+    }
+}
+
+/// Fig 15: RTX 4090 + CPU cooperative computing group.
+pub fn fig15() -> Vec<Row> {
+    section("Fig 15 — CPU-GPU cooperative mode (4090 + CPU)");
+    let hw = SimHardware::rtx4090();
+    let mut rows = Vec::new();
+    for model in [SimModel::mixtral_8x7b(), SimModel::phi_moe()] {
+        for (inp, out) in LEN_GROUPS {
+            let traces = traces_for(&model, 2, out, 29 + inp as u64);
+            for sys in baselines::group_rtx4090_cpu() {
+                let (p, d) = simulate_decode(&sys, &hw, &model, &traces, inp, 5);
+                rows.push(
+                    Row::new(format!("{}/[{inp},{out}]/{}", model.name, sys.name))
+                        .push("decode_tps", d.tps())
+                        .push("prefill_s", p.latency),
+                );
+            }
+        }
+    }
+    super::print_rows(&rows);
+    rows
+}
+
+/// Fig 16: dynamic expert loading ablation — speedup of HOBBIT over
+/// HOBBIT-without-mixed-precision across all setups.
+pub fn fig16() -> Vec<Row> {
+    section("Fig 16 — dynamic (mixed-precision) expert loading speedup");
+    let mut rows = Vec::new();
+    let setups: [(&str, SimHardware, f64, f64); 3] = [
+        ("orin", SimHardware::orin(), 8.0, 2.0),
+        ("4090", SimHardware::rtx4090(), 16.0, 4.0),
+        ("4090+cpu", SimHardware::rtx4090(), 16.0, 4.0),
+    ];
+    for (name, hw, hi_bits, lo_bits) in setups {
+        for model in [SimModel::mixtral_8x7b(), SimModel::phi_moe()] {
+            let traces = traces_for(&model, 2, 64, 31);
+            let mut on = SimSystem::hobbit(EQ3_WEIGHTS);
+            on.hi_bits = hi_bits;
+            on.lo_bits = lo_bits;
+            let mut off = on.clone();
+            off.dynamic = false;
+            off.lo_cache_frac = 0.0;
+            if name == "4090+cpu" {
+                on.miss_mode = crate::sim::des::MissMode::Cooperative;
+                off.miss_mode = crate::sim::des::MissMode::Cooperative;
+            }
+            let don = simulate_decode(&on, &hw, &model, &traces, 16, 7).1;
+            let doff = simulate_decode(&off, &hw, &model, &traces, 16, 7).1;
+            rows.push(
+                Row::new(format!("{name}/{}", model.name))
+                    .push("speedup", don.tps() / doff.tps().max(1e-9)),
+            );
+        }
+    }
+    super::print_rows(&rows);
+    rows
+}
+
+/// Fig 17(b): prefetch depth sweep, with and without dynamic loading.
+pub fn fig17b() -> Vec<Row> {
+    section("Fig 17(b) — adaptive prefetching ablation (depth 0-4)");
+    let hw = SimHardware::rtx4090();
+    let mut rows = Vec::new();
+    for model in [SimModel::mixtral_8x7b(), SimModel::phi_moe()] {
+        let traces = traces_for(&model, 2, 48, 37);
+        for dynamic in [false, true] {
+            for depth in 0..=4usize {
+                let mut sys = SimSystem::hobbit(EQ3_WEIGHTS);
+                sys.dynamic = dynamic;
+                if !dynamic {
+                    sys.lo_cache_frac = 0.0;
+                }
+                sys.prefetch_depth = depth;
+                let d = simulate_decode(&sys, &hw, &model, &traces, 16, 9).1;
+                rows.push(
+                    Row::new(format!(
+                        "{}/{}/p={depth}",
+                        model.name,
+                        if dynamic { "f16+i4" } else { "f16" }
+                    ))
+                    .push("tok/s", d.tps()),
+                );
+            }
+        }
+    }
+    super::print_rows(&rows);
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig3a_loading_dominates() {
+        let rows = fig3a();
+        for r in &rows {
+            assert!(r.get("load%").unwrap() > 60.0, "{}", r.label);
+        }
+        // Orin is more load-bound than the 4090
+        assert!(rows[1].get("load%").unwrap() > rows[0].get("load%").unwrap());
+    }
+
+    #[test]
+    fn fig9_ordering() {
+        let rows = fig9();
+        let tps = |i: usize| rows[i].get("tok/s").unwrap();
+        // high-acc prefetch beats no prefetch; mixed softens low-acc penalty
+        assert!(tps(1) >= tps(0) * 0.98, "(b) {} vs (a) {}", tps(1), tps(0));
+        assert!(tps(3) >= tps(4), "(d) should beat (e)");
+        assert!(tps(4) >= tps(2), "(e) mixed should soften the (c) penalty");
+    }
+
+    #[test]
+    fn fig16_speedups_in_paper_band() {
+        // paper: 1.19x - 1.57x
+        for r in fig16() {
+            let s = r.get("speedup").unwrap();
+            assert!(s > 1.0, "{}: speedup {s}", r.label);
+            assert!(s < 3.0, "{}: speedup {s} implausible", r.label);
+        }
+    }
+}

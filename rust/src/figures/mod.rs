@@ -1,0 +1,65 @@
+//! Regenerates every table and figure of the paper's evaluation (§5) plus
+//! the motivation/analysis figures (§2-3). Each `figNN` function prints
+//! the same rows/series the paper reports and returns them for tests.
+//! Absolute numbers come from this testbed's simulator/engine; the *shape*
+//! (who wins, by what factor, where crossovers fall) is the reproduction
+//! target — see EXPERIMENTS.md for paper-vs-measured.
+//!
+//! * sim-scale figures (paper-size models over modeled PCIe/SSD links):
+//!   Fig 3a, 9, 14, 15, 16, 17b — `endtoend` module
+//! * trace/cache figures: Fig 10, 11, 18 — `analysis` module
+//! * live-engine figures (tiny models through PJRT): Fig 3b, 5, 7, 17a,
+//!   Table 3 — `real` module (requires built artifacts)
+
+pub mod analysis;
+pub mod endtoend;
+pub mod real;
+
+/// Pretty section header shared by all figure printers.
+pub fn section(title: &str) {
+    println!();
+    println!("==== {title} ====");
+}
+
+/// A printed row: label + named values (also returned for tests).
+#[derive(Debug, Clone)]
+pub struct Row {
+    pub label: String,
+    pub values: Vec<(String, f64)>,
+}
+
+impl Row {
+    pub fn new(label: impl Into<String>) -> Self {
+        Self { label: label.into(), values: Vec::new() }
+    }
+
+    pub fn push(mut self, k: &str, v: f64) -> Self {
+        self.values.push((k.to_string(), v));
+        self
+    }
+
+    pub fn get(&self, k: &str) -> Option<f64> {
+        self.values.iter().find(|(n, _)| n == k).map(|(_, v)| *v)
+    }
+
+    pub fn print(&self) {
+        print!("{:<36}", self.label);
+        for (k, v) in &self.values {
+            let vstr = if v.abs() >= 1000.0 {
+                format!("{v:.0}")
+            } else if v.abs() >= 10.0 {
+                format!("{v:.1}")
+            } else {
+                format!("{v:.3}")
+            };
+            print!(" {k}={vstr:<10}");
+        }
+        println!();
+    }
+}
+
+pub fn print_rows(rows: &[Row]) {
+    for r in rows {
+        r.print();
+    }
+}

@@ -1,0 +1,334 @@
+//! Live-engine figures (tiny models through PJRT): Fig 3(b) quality of
+//! skip-vs-quantize, Fig 5 gate statistics, Fig 7 cross-layer similarity
+//! and prediction accuracy, Fig 17(a) stacked vs sequential gating cost,
+//! Table 3 mixed-precision accuracy. These require `make artifacts`.
+
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::config::{HardwareConfig, PolicyConfig};
+use crate::engine::{Capture, Engine, EngineOptions};
+use crate::loader::scorer;
+use crate::runtime::{lit_f32, lit_to_f32};
+use crate::tensor::{kl_from_logits, topk};
+use crate::util::stats::{cosine, pearson};
+use crate::Precision;
+
+use super::{section, Row};
+
+/// Engine with an effectively-infinite cache and relaxed link (quality
+/// experiments measure numerics, not timing).
+fn quality_engine(
+    artifacts: &Path,
+    model: &str,
+    policy: PolicyConfig,
+    capture: Capture,
+) -> Result<Engine> {
+    let hw = HardwareConfig {
+        name: "quality".into(),
+        load_bw: 64e9,
+        load_latency: 0.0,
+        hi_cache_experts: 256,
+        lo_cache_experts: 256,
+        cpu_assist: false,
+        cpu_expert_time: 0.0,
+    };
+    let mut opts = EngineOptions::new(hw, policy);
+    opts.capture = capture;
+    Engine::new(artifacts, model, opts)
+}
+
+/// Teacher-forced logits over a fixed token stream.
+fn eval_logits(engine: &mut Engine, tokens: &[u32]) -> Result<Vec<Vec<f32>>> {
+    let mut kv = engine.new_sequence();
+    let mut out = Vec::with_capacity(tokens.len());
+    let mut logits = engine.prefill(&mut kv, &tokens[..1])?;
+    out.push(logits.clone());
+    for &t in &tokens[1..] {
+        logits = engine.decode_step(&mut kv, t)?;
+        out.push(logits.clone());
+    }
+    Ok(out)
+}
+
+fn eval_tokens(n: usize) -> Vec<u32> {
+    // deterministic pseudo-text bytes (BOS + printable range)
+    let mut v = vec![crate::tokenizer::BOS];
+    let mut s = 0x9E3779B97F4A7C15u64;
+    while v.len() < n {
+        s = s.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+        v.push(32 + (s >> 33) as u32 % 90);
+    }
+    v
+}
+
+/// Mean KL + top-1 + top-5 agreement of `b` against baseline `a`.
+/// (top-5 is the robust metric for the random-init tiny models, whose
+/// near-uniform logits make top-1 flip on tiny perturbations.)
+fn divergence(a: &[Vec<f32>], b: &[Vec<f32>]) -> (f64, f64, f64) {
+    let mut kl = 0.0;
+    let mut agree = 0.0;
+    let mut agree5 = 0.0;
+    for (x, y) in a.iter().zip(b) {
+        kl += kl_from_logits(x, y);
+        let ax = topk(x, 1)[0].0;
+        agree += (ax == topk(y, 1)[0].0) as u32 as f64;
+        agree5 += topk(y, 5).iter().any(|(i, _)| *i == ax) as u32 as f64;
+    }
+    let n = a.len() as f64;
+    (kl / n, agree / n, agree5 / n)
+}
+
+/// Fig 3(b): replacing unimportant experts with low-precision versions
+/// preserves quality far better than skipping them, and the gap grows
+/// with the ratio. Ratio is controlled through the T1/T2 thresholds as
+/// score quantiles (the same mechanism HOBBIT uses online).
+pub fn fig3b(artifacts: &Path, model: &str) -> Result<Vec<Row>> {
+    section("Fig 3(b) — quality impact: expert skip vs low-precision replace");
+    let tokens = eval_tokens(40);
+    // baseline: everything high precision
+    let mut base_policy = PolicyConfig::default();
+    base_policy.dynamic_loading = false;
+    let mut eng = quality_engine(artifacts, model, base_policy, Capture::none())?;
+    let base = eval_logits(&mut eng, &tokens)?;
+    drop(eng);
+
+    // score distribution from a routing capture to place quantiles
+    let mut cap_policy = PolicyConfig::default();
+    cap_policy.dynamic_loading = false;
+    let mut cap = Capture::none();
+    cap.routing = true;
+    let mut eng = quality_engine(artifacts, model, cap_policy, cap)?;
+    let _ = eval_logits(&mut eng, &tokens)?;
+    let mut scores: Vec<f64> = Vec::new();
+    for r in &eng.capture.routes {
+        for d in scorer::decide(&r.probs, eng.cfg.top_k, 2.0, 2.0, true) {
+            scores.push(d.score);
+        }
+    }
+    drop(eng);
+    scores.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let quantile = |q: f64| scores[((scores.len() - 1) as f64 * q) as usize];
+
+    let mut rows = Vec::new();
+    for ratio in [0.05, 0.10, 0.20, 0.30] {
+        let t = quantile(1.0 - ratio);
+        // replace curve: bottom `ratio` of selections -> low precision
+        let mut p = PolicyConfig::default();
+        p.t1 = t;
+        p.t2 = 1.0; // never skip
+        let mut eng = quality_engine(artifacts, model, p, Capture::none())?;
+        let quant = eval_logits(&mut eng, &tokens)?;
+        drop(eng);
+        // skip curve: bottom `ratio` of selections -> skipped
+        let mut p = PolicyConfig::default();
+        p.t1 = t;
+        p.t2 = t;
+        let mut eng = quality_engine(artifacts, model, p, Capture::none())?;
+        let skip = eval_logits(&mut eng, &tokens)?;
+        drop(eng);
+        let (kl_q, ag_q, ag5_q) = divergence(&base, &quant);
+        let (kl_s, ag_s, ag5_s) = divergence(&base, &skip);
+        rows.push(
+            Row::new(format!("ratio {:.0}%", ratio * 100.0))
+                .push("replace_kl", kl_q)
+                .push("skip_kl", kl_s)
+                .push("replace_top1", ag_q)
+                .push("skip_top1", ag_s)
+                .push("replace_top5", ag5_q)
+                .push("skip_top5", ag5_s),
+        );
+    }
+    super::print_rows(&rows);
+    Ok(rows)
+}
+
+/// Fig 5(a): Pearson correlation of ‖G(x)‖ with ‖G(x)·E(x)‖;
+/// Fig 5(b): unimportance-score distribution and the T1/T2 split.
+pub fn fig5(artifacts: &Path, model: &str) -> Result<Vec<Row>> {
+    section("Fig 5 — gating statistics");
+    let mut cap = Capture::none();
+    cap.gate_stats = true;
+    cap.routing = true;
+    let mut policy = PolicyConfig::default();
+    policy.dynamic_loading = false; // observe every selected expert in hi
+    let mut eng = quality_engine(artifacts, model, policy, cap)?;
+    let _ = eval_logits(&mut eng, &eval_tokens(48))?;
+
+    let gates: Vec<f64> = eng.capture.gates.iter().map(|g| g.gate as f64).collect();
+    let outs: Vec<f64> = eng.capture.gates.iter().map(|g| g.out_norm as f64).collect();
+    let corr = pearson(&gates, &outs);
+
+    // score distribution + the paper's T1=0.6/T2=0.9 split
+    let (mut hi, mut lo, mut skip, mut total) = (0u64, 0u64, 0u64, 0u64);
+    for r in &eng.capture.routes {
+        for d in scorer::decide(&r.probs, eng.cfg.top_k, 0.6, 0.9, true) {
+            total += 1;
+            match d.class {
+                scorer::Class::Hi => hi += 1,
+                scorer::Class::Lo => lo += 1,
+                scorer::Class::Skip => skip += 1,
+            }
+        }
+    }
+    let rows = vec![
+        Row::new("(a) corr(|G|, |G E(x)|)").push("pearson", corr),
+        Row::new("(b) split @ T1=0.6 T2=0.9")
+            .push("hi%", 100.0 * hi as f64 / total as f64)
+            .push("lo%", 100.0 * lo as f64 / total as f64)
+            .push("skip%", 100.0 * skip as f64 / total as f64),
+    ];
+    super::print_rows(&rows);
+    Ok(rows)
+}
+
+/// Fig 7: cosine similarity of gating inputs across layer offsets, and
+/// top-1 prediction accuracy when the current input drives the next
+/// layers' gates (the basis of the Stacking Computer).
+pub fn fig7(artifacts: &Path, model: &str) -> Result<Vec<Row>> {
+    section("Fig 7 — cross-layer similarity and prediction accuracy");
+    let mut cap = Capture::none();
+    cap.hidden_states = true;
+    cap.routing = true;
+    let mut eng = quality_engine(artifacts, model, PolicyConfig::default(), cap)?;
+    let _ = eval_logits(&mut eng, &eval_tokens(40))?;
+
+    let d = eng.cfg.d_model;
+    let e = eng.cfg.n_experts as usize;
+    let n_layers = eng.cfg.n_layers;
+    let eps = 1e-5f32;
+    let mut rows = Vec::new();
+    for offset in 1..=3u32 {
+        let mut sims = Vec::new();
+        let mut hits = 0u64;
+        let mut total = 0u64;
+        for h in &eng.capture.hiddens {
+            if h.layer + offset >= n_layers {
+                continue;
+            }
+            // cosine vs the same token's hidden at layer + offset
+            if let Some(h2) = eng
+                .capture
+                .hiddens
+                .iter()
+                .find(|x| x.token == h.token && x.layer == h.layer + offset)
+            {
+                sims.push(cosine(&h.hidden, &h2.hidden));
+            }
+            // offline prediction: norm with the target layer's weights,
+            // multiply by its gate matrix, top-k, compare with realized
+            let target = h.layer + offset;
+            let (_, pn) = eng.nonexpert.get(&format!("post_norm.{target}"))?;
+            let (_, wg) = eng.nonexpert.get(&format!("wg.{target}"))?;
+            let ms: f32 =
+                h.hidden.iter().map(|v| v * v).sum::<f32>() / d as f32;
+            let rinv = 1.0 / (ms + eps).sqrt();
+            let mut logits = vec![0.0f32; e];
+            for (i, lg) in logits.iter_mut().enumerate() {
+                let mut acc = 0.0f32;
+                for r in 0..d {
+                    acc += h.hidden[r] * rinv * pn[r] * wg[r * e + i];
+                }
+                *lg = acc;
+            }
+            let predicted: Vec<usize> =
+                topk(&logits, eng.cfg.top_k).iter().map(|x| x.0).collect();
+            if let Some(actual) = eng
+                .capture
+                .routes
+                .iter()
+                .find(|r| r.token == h.token && r.layer == target)
+            {
+                let actual_top = topk(&actual.probs, 1)[0].0;
+                total += 1;
+                if predicted.contains(&actual_top) {
+                    hits += 1;
+                }
+            }
+        }
+        let mean_sim = sims.iter().sum::<f64>() / sims.len().max(1) as f64;
+        rows.push(
+            Row::new(format!("next {offset}"))
+                .push("cosine", mean_sim)
+                .push("top1_pred_acc", hits as f64 / total.max(1) as f64),
+        );
+    }
+    super::print_rows(&rows);
+    Ok(rows)
+}
+
+/// Fig 17(a): the Stacking Computer's cost is ~flat in p; sequential
+/// gating grows linearly. Timed on the live PJRT executables.
+pub fn fig17a(artifacts: &Path, model: &str) -> Result<Vec<Row>> {
+    section("Fig 17(a) — stacked vs sequential gating cost (PJRT wall time)");
+    let mut rt = crate::runtime::Runtime::open(&artifacts.join(model))?;
+    let manifest_model = rt.manifest.model_json();
+    let cfg = crate::config::ModelConfig::from_manifest(&manifest_model)
+        .map_err(anyhow::Error::msg)?;
+    let d = cfg.d_model;
+    let e = cfg.n_experts as usize;
+    let mut rows = Vec::new();
+    for p in 1..=4usize {
+        for kind in ["gate", "gate_seq"] {
+            let name = format!("{kind}_p{p}_s1");
+            rt.ensure(&name)?;
+            let x = lit_f32(&[1, d], &vec![0.1; d])?;
+            let pn = lit_f32(&[p, d], &vec![1.0; p * d])?;
+            let wg = lit_f32(&[p, d, e], &vec![0.01; p * d * e])?;
+            // warmup + timed loop (p50 of per-call samples; single-core
+            // CPU timings are noisy, the median is the honest statistic)
+            for _ in 0..10 {
+                let _ = rt.execute(&name, &[&x, &pn, &wg])?;
+            }
+            let mut samples = Vec::with_capacity(200);
+            for _ in 0..200 {
+                let t0 = Instant::now();
+                let out = rt.execute(&name, &[&x, &pn, &wg])?;
+                let _ = lit_to_f32(&out[0])?;
+                samples.push(t0.elapsed().as_secs_f64());
+            }
+            samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let us = samples[samples.len() / 2] * 1e6;
+            rows.push(Row::new(format!("{kind} p={p}")).push("p50_us", us));
+        }
+    }
+    super::print_rows(&rows);
+    Ok(rows)
+}
+
+/// Table 3: model quality with mixed-precision experts — top-1 agreement
+/// and KL against the group's high-precision baseline, for both precision
+/// groups (f32-served + q8 replacements; q8-served + q2 replacements).
+pub fn table3(artifacts: &Path, model: &str) -> Result<Vec<Row>> {
+    section("Table 3 — quality with mixed-precision experts");
+    let tokens = eval_tokens(40);
+    let mut rows = Vec::new();
+    for (group, hi, lo) in [
+        ("f32 group", Precision::F32, Precision::Q8),
+        ("q8 group", Precision::Q8, Precision::Q2),
+    ] {
+        let mut base_p = PolicyConfig::default();
+        base_p.hi_precision = hi;
+        base_p.lo_precision = lo;
+        base_p.dynamic_loading = false;
+        let mut eng = quality_engine(artifacts, model, base_p.clone(), Capture::none())?;
+        let base = eval_logits(&mut eng, &tokens)?;
+        drop(eng);
+        let mut mixed_p = base_p;
+        mixed_p.dynamic_loading = true;
+        let mut eng = quality_engine(artifacts, model, mixed_p, Capture::none())?;
+        let mixed = eval_logits(&mut eng, &tokens)?;
+        drop(eng);
+        let (kl, agree, agree5) = divergence(&base, &mixed);
+        rows.push(
+            Row::new(format!("{model} {group} (+{})", lo.name()))
+                .push("top1_agreement", agree)
+                .push("top5_agreement", agree5)
+                .push("mean_kl", kl),
+        );
+    }
+    super::print_rows(&rows);
+    Ok(rows)
+}

@@ -1,0 +1,125 @@
+//! # HOBBIT — mixed-precision expert offloading for fast MoE inference
+//!
+//! Reproduction of *"HOBBIT: A Mixed Precision Expert Offloading System for
+//! Fast MoE Inference"* (cs.LG 2024) as a three-layer Rust + JAX + Pallas
+//! stack: Python/JAX authors and AOT-compiles the model (L2) and its Pallas
+//! kernels (L1) to HLO text at build time; this crate (L3) loads the
+//! artifacts through the PJRT C API and owns everything the paper calls the
+//! *system*: the dynamic expert loader, the adaptive expert predictor, the
+//! multidimensional cache manager, the memory hierarchy, and the serving
+//! coordinator. Python is never on the request path.
+//!
+//! Module map (see DESIGN.md for the paper-section correspondence):
+//!
+//! * [`runtime`] — PJRT client wrapper; loads `artifacts/*.hlo.txt`.
+//! * [`model`] — model/weight manifests, expert storage at all precisions.
+//! * [`quant`] — group quantization (byte-compatible with
+//!   `python/compile/quantize.py`).
+//! * [`memory`] — the two-tier memory hierarchy and bandwidth models.
+//! * [`cache`] — the sequence-level multidimensional expert cache (§3.4).
+//! * [`loader`] — the token-level dynamic expert loader (§3.2).
+//! * [`predictor`] — the layer-level adaptive expert prefetcher (§3.3).
+//! * [`engine`] — the per-layer inference engine over PJRT executables.
+//! * [`coordinator`] — request routing, sequence lifecycle, generation.
+//! * [`server`] — TCP serving front-end.
+//! * [`sim`] — discrete-event simulator at paper scale (figures/benches).
+//! * [`baselines`] — the six comparator systems of §5.
+//! * [`trace`] — gating-trace capture, synthetic generation, replay.
+//! * [`figures`] — regenerates every table/figure of the paper's §5.
+//! * [`util`] — offline substrates: rng, json, stats, benchkit,
+//!   property-testing (the vendored crate set has no serde/criterion/rand).
+
+pub mod baselines;
+pub mod cache;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod engine;
+pub mod figures;
+pub mod loader;
+pub mod memory;
+pub mod metrics;
+pub mod model;
+pub mod predictor;
+pub mod quant;
+pub mod runtime;
+pub mod server;
+pub mod sim;
+pub mod tensor;
+pub mod tokenizer;
+pub mod trace;
+pub mod util;
+
+/// Expert identity: (layer, expert index) — the unit of offloading.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ExpertKey {
+    pub layer: u32,
+    pub expert: u32,
+}
+
+impl ExpertKey {
+    pub fn new(layer: u32, expert: u32) -> Self {
+        Self { layer, expert }
+    }
+    /// Dense index into per-model tables.
+    pub fn index(&self, experts_per_layer: u32) -> usize {
+        (self.layer * experts_per_layer + self.expert) as usize
+    }
+}
+
+/// Expert precision classes. `F32` plays the paper's "fp16" role; `Q8` the
+/// "int4" role (4.0x fewer bytes); `Q2` the "int2" role relative to `Q8`.
+/// See DESIGN.md §Hardware-Adaptation for the mapping rationale.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Precision {
+    F32,
+    Q8,
+    Q4,
+    Q2,
+}
+
+impl Precision {
+    pub const ALL: [Precision; 4] =
+        [Precision::F32, Precision::Q8, Precision::Q4, Precision::Q2];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Precision::F32 => "f32",
+            Precision::Q8 => "q8",
+            Precision::Q4 => "q4",
+            Precision::Q2 => "q2",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Self> {
+        match s {
+            "f32" => Some(Precision::F32),
+            "q8" => Some(Precision::Q8),
+            "q4" => Some(Precision::Q4),
+            "q2" => Some(Precision::Q2),
+            _ => None,
+        }
+    }
+
+    /// Bits per weight (scales excluded) — drives the `B_l/B_h` penalty
+    /// ratio of §3.4.
+    pub fn bits(&self) -> u32 {
+        match self {
+            Precision::F32 => 32,
+            Precision::Q8 => 8,
+            Precision::Q4 => 4,
+            Precision::Q2 => 2,
+        }
+    }
+
+    /// How many weights one packed byte carries (f32 is stored as 4 bytes
+    /// each, so `pack` is only meaningful for quantized formats).
+    pub fn pack(&self) -> usize {
+        match self {
+            Precision::F32 => 1,
+            Precision::Q8 => 1,
+            Precision::Q4 => 2,
+            Precision::Q2 => 4,
+        }
+    }
+}

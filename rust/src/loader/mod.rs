@@ -1,0 +1,259 @@
+//! The Dynamic Expert Loader (§3.2, Fig 6): Expert Scorer → Task Queue →
+//! Expert Scheduler.
+//!
+//! The scheduler runs on its own thread and moves expert records from the
+//! `ExpertStore` ("next-level memory") into reserved cache slots through
+//! the bandwidth-throttled link. Faithful to the paper's memcpy
+//! observation, a transfer in flight is never preempted: an on-demand task
+//! arriving behind a started prefetch waits for it — the misprediction
+//! penalty of Fig 9. On-demand tasks do jump ahead of *queued* (not yet
+//! started) prefetches, and stale prefetches are dropped by generation.
+
+pub mod scorer;
+
+use std::collections::HashSet;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::cache::{CacheManager, Pool};
+use crate::memory::ThrottledCopier;
+use crate::metrics::LoaderStats;
+use crate::model::ExpertStore;
+use crate::{ExpertKey, Precision};
+
+/// Why a load was requested.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TaskKind {
+    OnDemand,
+    Prefetch,
+}
+
+/// One entry in the Task Queue.
+#[derive(Debug, Clone)]
+pub struct LoadTask {
+    pub id: u64,
+    pub key: ExpertKey,
+    pub precision: Precision,
+    pub pool: Pool,
+    pub kind: TaskKind,
+    /// prefetch generation (stale generations are dropped)
+    pub gen: u64,
+    /// layer being executed when the task was issued (for Eq. 3's l_i)
+    pub current_layer: u32,
+}
+
+/// Two-lane FIFO: on-demand tasks always dequeue before prefetches.
+#[derive(Default)]
+struct TaskQueue {
+    ondemand: std::collections::VecDeque<LoadTask>,
+    prefetch: std::collections::VecDeque<LoadTask>,
+    closed: bool,
+}
+
+struct Shared {
+    queue: Mutex<TaskQueue>,
+    queue_cv: Condvar,
+    done: Mutex<HashSet<u64>>,
+    done_cv: Condvar,
+    prefetch_gen: AtomicU64,
+    next_id: AtomicU64,
+    stop: AtomicBool,
+}
+
+/// Handle to the loader: issue tasks, wait for completions.
+pub struct ExpertLoader {
+    shared: Arc<Shared>,
+    pub cache: Arc<Mutex<CacheManager>>,
+    pub stats: Arc<Mutex<LoaderStats>>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl ExpertLoader {
+    pub fn start(
+        store: Arc<ExpertStore>,
+        cache: Arc<Mutex<CacheManager>>,
+        copier: Arc<ThrottledCopier>,
+    ) -> Self {
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(TaskQueue::default()),
+            queue_cv: Condvar::new(),
+            done: Mutex::new(HashSet::new()),
+            done_cv: Condvar::new(),
+            prefetch_gen: AtomicU64::new(0),
+            next_id: AtomicU64::new(1),
+            stop: AtomicBool::new(false),
+        });
+        let stats = Arc::new(Mutex::new(LoaderStats::default()));
+        let worker = Worker {
+            shared: shared.clone(),
+            store,
+            cache: cache.clone(),
+            copier,
+            stats: stats.clone(),
+        };
+        let handle = std::thread::Builder::new()
+            .name("hobbit-expert-scheduler".into())
+            .spawn(move || worker.run())
+            .expect("spawn scheduler");
+        Self { shared, cache, stats, handle: Some(handle) }
+    }
+
+    /// Enqueue a load; returns the task id to wait on (None if the expert
+    /// is already resident or incoming, or no slot could be reserved).
+    pub fn submit(
+        &self,
+        key: ExpertKey,
+        precision: Precision,
+        pool: Pool,
+        kind: TaskKind,
+        current_layer: u32,
+    ) -> Option<u64> {
+        {
+            let cache = self.cache.lock().unwrap();
+            if cache.contains(key, pool) {
+                return None;
+            }
+        }
+        let id = self.shared.next_id.fetch_add(1, Ordering::Relaxed);
+        let gen = self.shared.prefetch_gen.load(Ordering::Relaxed);
+        let task = LoadTask { id, key, precision, pool, kind, gen, current_layer };
+        let mut q = self.shared.queue.lock().unwrap();
+        match kind {
+            TaskKind::OnDemand => q.ondemand.push_back(task),
+            TaskKind::Prefetch => q.prefetch.push_back(task),
+        }
+        drop(q);
+        self.shared.queue_cv.notify_one();
+        Some(id)
+    }
+
+    /// Invalidate all queued (unstarted) prefetches from earlier tokens.
+    pub fn bump_prefetch_generation(&self) {
+        self.shared.prefetch_gen.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Block until every id in `ids` has completed. Returns wait time.
+    pub fn wait(&self, ids: &[u64]) -> Duration {
+        let t0 = Instant::now();
+        let mut done = self.shared.done.lock().unwrap();
+        loop {
+            if ids.iter().all(|id| done.contains(id)) {
+                for id in ids {
+                    done.remove(id);
+                }
+                return t0.elapsed();
+            }
+            done = self.shared.done_cv.wait(done).unwrap();
+        }
+    }
+
+    /// True when both task lanes are empty and nothing is mid-transfer
+    /// (used by drains in tests/benches).
+    pub fn is_idle(&self) -> bool {
+        let q = self.shared.queue.lock().unwrap();
+        q.ondemand.is_empty() && q.prefetch.is_empty()
+    }
+}
+
+impl Drop for ExpertLoader {
+    fn drop(&mut self) {
+        self.shared.stop.store(true, Ordering::Relaxed);
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            q.closed = true;
+        }
+        self.shared.queue_cv.notify_all();
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+struct Worker {
+    shared: Arc<Shared>,
+    store: Arc<ExpertStore>,
+    cache: Arc<Mutex<CacheManager>>,
+    copier: Arc<ThrottledCopier>,
+    stats: Arc<Mutex<LoaderStats>>,
+}
+
+impl Worker {
+    fn run(&self) {
+        loop {
+            let task = {
+                let mut q = self.shared.queue.lock().unwrap();
+                loop {
+                    if self.shared.stop.load(Ordering::Relaxed) {
+                        return;
+                    }
+                    // on-demand lane first; prefetch lane drops stale gens
+                    if let Some(t) = q.ondemand.pop_front() {
+                        break t;
+                    }
+                    let cur_gen = self.shared.prefetch_gen.load(Ordering::Relaxed);
+                    while let Some(t) = q.prefetch.front() {
+                        if t.gen < cur_gen {
+                            let stale = q.prefetch.pop_front().unwrap();
+                            // report as done so no waiter hangs
+                            self.mark_done(stale.id);
+                        } else {
+                            break;
+                        }
+                    }
+                    if let Some(t) = q.prefetch.pop_front() {
+                        break t;
+                    }
+                    if q.closed {
+                        return;
+                    }
+                    q = self.shared.queue_cv.wait(q).unwrap();
+                }
+            };
+            self.execute(task);
+        }
+    }
+
+    fn execute(&self, task: LoadTask) {
+        // reserve a destination slot
+        let reservation = {
+            let mut cache = self.cache.lock().unwrap();
+            cache.reserve(task.key, task.pool, task.current_layer)
+        };
+        let Some(res) = reservation else {
+            // already resident/incoming, or no evictable slot: done
+            self.mark_done(task.id);
+            return;
+        };
+        let record = self.store.record(task.key, task.precision);
+        {
+            // per-slot lock: the engine can read other slots meanwhile;
+            // the transfer itself is non-preemptible (cudaMemcpy model)
+            let mut buf = res.buffer.lock().unwrap();
+            debug_assert_eq!(buf.len(), record.len(), "slot/record size");
+            self.copier.transfer(record, &mut buf);
+        }
+        {
+            let mut cache = self.cache.lock().unwrap();
+            cache.commit(task.key, task.pool);
+        }
+        {
+            let mut st = self.stats.lock().unwrap();
+            let slot = crate::config::precision_slot(task.precision);
+            match task.kind {
+                TaskKind::OnDemand => st.ondemand_loads[slot] += 1,
+                TaskKind::Prefetch => st.prefetch_loads[slot] += 1,
+            }
+            st.bytes_loaded += record.len() as u64;
+        }
+        self.mark_done(task.id);
+    }
+
+    fn mark_done(&self, id: u64) {
+        let mut done = self.shared.done.lock().unwrap();
+        done.insert(id);
+        drop(done);
+        self.shared.done_cv.notify_all();
+    }
+}

@@ -1,0 +1,117 @@
+//! The Expert Scorer (§3.2, Fig 6): token-level dynamic precision
+//! decisions from gating outputs.
+//!
+//! Experts selected by the gate are ranked by normalized gate magnitude
+//! ‖G(x)‖; the *unimportance degree* of expert e_i is the prefix sum of
+//! the normalized magnitudes ranked above it (Eq. 2):
+//!
+//!   s_{e_0} = 0;   s_{e_i} = Σ_{j<i} ‖G(x)_{e_j}‖ (normalized)
+//!
+//! Thresholds split the ladder: s ≤ T1 → high precision; T1 < s ≤ T2 →
+//! low precision; s > T2 → skip. e_0 (score 0) is always high precision.
+
+use crate::tensor::topk;
+
+/// Precision class chosen for one selected expert.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Class {
+    Hi,
+    Lo,
+    Skip,
+}
+
+/// One gate-selected expert with its routing weight and precision class.
+#[derive(Debug, Clone, Copy)]
+pub struct Decision {
+    pub expert: u32,
+    /// renormalized top-k gate weight (feeds the expert FFN)
+    pub gate_weight: f32,
+    /// Eq. 2 unimportance score
+    pub score: f64,
+    pub class: Class,
+}
+
+/// Score the top-k experts of one token's gate distribution.
+///
+/// `probs` is the full softmax gate output for one token (length E);
+/// when `dynamic` is false every selected expert is classed Hi (the
+/// ablation baseline of Fig 16).
+pub fn decide(probs: &[f32], top_k: usize, t1: f64, t2: f64, dynamic: bool) -> Vec<Decision> {
+    let top = topk(probs, top_k);
+    let sum: f32 = top.iter().map(|(_, v)| *v).sum();
+    let denom = if sum > 0.0 { sum } else { 1.0 };
+    let mut out = Vec::with_capacity(top_k);
+    let mut prefix = 0.0f64;
+    for (rank, (e, v)) in top.iter().enumerate() {
+        let norm = (*v / denom) as f64;
+        let score = if rank == 0 { 0.0 } else { prefix };
+        let class = if !dynamic || score <= t1 {
+            Class::Hi
+        } else if score <= t2 {
+            Class::Lo
+        } else {
+            Class::Skip
+        };
+        out.push(Decision {
+            expert: *e as u32,
+            gate_weight: *v / denom,
+            score,
+            class,
+        });
+        prefix += norm;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn top1_always_high() {
+        // dominant first expert -> second scores 0.9+ and is skipped
+        let d = decide(&[0.95, 0.03, 0.02], 2, 0.6, 0.9, true);
+        assert_eq!(d[0].class, Class::Hi);
+        assert_eq!(d[0].score, 0.0);
+        assert_eq!(d[1].class, Class::Skip);
+        assert!(d[1].score > 0.9);
+    }
+
+    #[test]
+    fn balanced_gate_keeps_both_high() {
+        let d = decide(&[0.5, 0.5, 0.0], 2, 0.6, 0.9, true);
+        assert_eq!(d[0].class, Class::Hi);
+        assert_eq!(d[1].class, Class::Hi); // score 0.5 <= T1
+    }
+
+    #[test]
+    fn moderate_dominance_gives_low_precision() {
+        // g0 = 0.7, g1 = 0.3 normalized -> s_1 = 0.7 in (0.6, 0.9]
+        let d = decide(&[0.7, 0.3], 2, 0.6, 0.9, true);
+        assert_eq!(d[1].class, Class::Lo);
+    }
+
+    #[test]
+    fn dynamic_off_forces_high() {
+        let d = decide(&[0.95, 0.03, 0.02], 2, 0.6, 0.9, false);
+        assert!(d.iter().all(|x| x.class == Class::Hi));
+    }
+
+    #[test]
+    fn gate_weights_renormalized() {
+        let d = decide(&[0.6, 0.2, 0.2], 2, 0.6, 0.9, true);
+        let s: f32 = d.iter().map(|x| x.gate_weight).sum();
+        assert!((s - 1.0).abs() < 1e-6);
+        assert!(d[0].gate_weight > d[1].gate_weight);
+    }
+
+    #[test]
+    fn scores_monotone_in_rank() {
+        let d = decide(&[0.4, 0.3, 0.2, 0.1], 4, 0.6, 0.9, true);
+        for w in d.windows(2) {
+            assert!(w[0].score <= w[1].score);
+        }
+        // last expert's score is 1 - its own normalized weight
+        assert!((d[3].score - 0.9).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,242 @@
+//! HOBBIT leader entrypoint: serve / generate / figures / sim / selfcheck.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Result};
+
+use hobbit::baselines::{self, EQ3_WEIGHTS};
+use hobbit::cache::Policy;
+use hobbit::cli::{Args, USAGE};
+use hobbit::config::{HardwareConfig, PolicyConfig};
+use hobbit::coordinator::{Coordinator, Request};
+use hobbit::engine::Engine;
+use hobbit::figures;
+use hobbit::server::Server;
+use hobbit::sim::des::{simulate_decode, SimSystem};
+use hobbit::sim::params::{SimHardware, SimModel};
+use hobbit::trace::{generate as gen_traces, TraceGenConfig};
+
+fn main() {
+    let mut argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        print!("{USAGE}");
+        return;
+    }
+    let cmd = argv.remove(0);
+    let args = Args::parse(argv, &["all", "no-dynamic", "no-prefetch", "report"]);
+    let r = match cmd.as_str() {
+        "serve" => cmd_serve(&args),
+        "generate" => cmd_generate(&args),
+        "figures" => cmd_figures(&args),
+        "sim" => cmd_sim(&args),
+        "selfcheck" => cmd_selfcheck(&args),
+        "help" | "--help" | "-h" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        other => Err(anyhow!("unknown command '{other}'\n{USAGE}")),
+    };
+    if let Err(e) = r {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn build_engine(args: &Args) -> Result<Engine> {
+    let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts"));
+    let model = args.get_or("model", "mixtral-tiny");
+    let hw = HardwareConfig::preset(args.get_or("hardware", "rtx4090"))
+        .ok_or_else(|| anyhow!("unknown hardware preset"))?;
+    let mut opts = if args.has("no-dynamic") {
+        baselines::real_no_dynamic(hw)
+    } else if args.has("no-prefetch") {
+        baselines::real_no_prefetch(hw)
+    } else {
+        baselines::real_hobbit(hw)
+    };
+    if let Some(p) = args.get("policy") {
+        opts.cache_policy =
+            Some(Policy::from_name(p, EQ3_WEIGHTS).ok_or_else(|| anyhow!("unknown policy"))?);
+    }
+    if let Some(group) = args.get("precision-group") {
+        if group == "int8" {
+            opts.policy = PolicyConfig {
+                dynamic_loading: opts.policy.dynamic_loading,
+                prefetch_depth: opts.policy.prefetch_depth,
+                ..PolicyConfig::int8_group()
+            };
+        }
+    }
+    Engine::new(&artifacts, model, opts)
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let engine = build_engine(args)?;
+    let mut coord = Coordinator::new(engine);
+    let addr = args.get_or("addr", "127.0.0.1:7077");
+    let mut server = Server::bind(addr)?;
+    println!("hobbit serving on {} (platform: {})", server.local_addr()?, coord.engine.rt.platform());
+    let max_conns = args.get("max-conns").and_then(|v| v.parse().ok());
+    server.serve(&mut coord, max_conns)?;
+    coord.sync_report();
+    println!("{}", coord.report.to_json().to_string());
+    Ok(())
+}
+
+fn cmd_generate(args: &Args) -> Result<()> {
+    let engine = build_engine(args)?;
+    let mut coord = Coordinator::new(engine);
+    let req = Request {
+        id: 1,
+        prompt: args.get_or("prompt", "The mixture of experts").to_string(),
+        max_new_tokens: args.get_usize("max-new", 32),
+        temperature: args.get_f64("temp", 0.8) as f32,
+    };
+    let r = coord.generate(&req)?;
+    println!("generated {} tokens: {:?}", r.tokens.len(), r.text);
+    println!(
+        "prefill {:.3}s | decode {:.2} tok/s | compute {:.3}s | load-wait {:.3}s",
+        r.metrics.prefill_time.as_secs_f64(),
+        r.metrics.decode_tps(),
+        r.metrics.compute_time.as_secs_f64(),
+        r.metrics.load_wait_time.as_secs_f64(),
+    );
+    if args.has("report") {
+        coord.sync_report();
+        println!("{}", coord.report.to_json().to_string());
+    }
+    Ok(())
+}
+
+fn cmd_figures(args: &Args) -> Result<()> {
+    let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts"));
+    let model = args.get_or("model", "mixtral-tiny");
+    let which = args.get_or("fig", if args.has("all") { "all" } else { "" });
+    if which.is_empty() {
+        return Err(anyhow!("pass --fig <id> or --all"));
+    }
+    let all = which == "all" || args.has("all");
+    let want = |id: &str| all || which == id;
+
+    // trace/sim figures (no artifacts needed)
+    if want("3a") {
+        figures::endtoend::fig3a();
+    }
+    if want("9") {
+        figures::endtoend::fig9();
+    }
+    if want("10") {
+        figures::analysis::fig10();
+    }
+    if want("11") {
+        figures::analysis::fig11();
+    }
+    if want("14") {
+        figures::endtoend::fig14();
+    }
+    if want("15") {
+        figures::endtoend::fig15();
+    }
+    if want("16") {
+        figures::endtoend::fig16();
+    }
+    if want("17b") {
+        figures::endtoend::fig17b();
+    }
+    if want("18a") {
+        figures::analysis::fig18a(EQ3_WEIGHTS);
+    }
+    if want("18b") {
+        figures::analysis::fig18b();
+    }
+    // live-engine figures
+    let have_artifacts = artifacts.join(model).join("manifest.json").exists();
+    if !have_artifacts && (all || ["3b", "5", "7", "17a", "table3"].contains(&which)) {
+        eprintln!("(skipping live-engine figures: no artifacts at {})", artifacts.display());
+        return Ok(());
+    }
+    if want("3b") {
+        figures::real::fig3b(&artifacts, model)?;
+    }
+    if want("5") {
+        figures::real::fig5(&artifacts, model)?;
+    }
+    if want("7") {
+        figures::real::fig7(&artifacts, model)?;
+    }
+    if want("17a") {
+        figures::real::fig17a(&artifacts, model)?;
+    }
+    if want("table3") {
+        figures::real::table3(&artifacts, model)?;
+    }
+    Ok(())
+}
+
+fn cmd_sim(args: &Args) -> Result<()> {
+    let hw = match args.get_or("hardware", "rtx4090") {
+        "orin" => SimHardware::orin(),
+        _ => SimHardware::rtx4090(),
+    };
+    let model = match args.get_or("model", "mixtral") {
+        "phi" => SimModel::phi_moe(),
+        _ => SimModel::mixtral_8x7b(),
+    };
+    let bits = if hw.name == "JetsonOrin" { 8.0 } else { 16.0 };
+    let sys = match args.get_or("system", "hobbit") {
+        "hobbit" | "hb" => {
+            if bits == 8.0 {
+                SimSystem::hobbit_int8(EQ3_WEIGHTS)
+            } else {
+                SimSystem::hobbit(EQ3_WEIGHTS)
+            }
+        }
+        "mo" => SimSystem::moe_offloading(bits),
+        "mi" => SimSystem::moe_infinity(bits),
+        "tf" => SimSystem::dense("Transformers", bits),
+        "ds" => SimSystem::dense("DeepSpeed", bits),
+        "ll" => SimSystem::llama_cpp(bits),
+        "fd" => SimSystem::fiddler(bits),
+        other => return Err(anyhow!("unknown system '{other}'")),
+    };
+    let gen_cfg = if model.n_experts == 16 {
+        TraceGenConfig::phi_like()
+    } else {
+        TraceGenConfig::mixtral_like()
+    };
+    let traces = gen_traces(&gen_cfg, args.get_usize("seqs", 3), args.get_usize("tokens", 64) as u32);
+    let prompt = args.get_usize("prompt-len", 16);
+    let (p, d) = simulate_decode(&sys, &hw, &model, &traces, prompt, 1);
+    println!(
+        "{} / {} / {}: prefill {:.3}s, decode {:.2} tok/s (load {:.1}%, {:.1} GB moved, {} skips)",
+        sys.name,
+        hw.name,
+        model.name,
+        p.latency,
+        d.tps(),
+        100.0 * d.load_fraction(),
+        d.bytes_loaded / 1e9,
+        d.skipped,
+    );
+    Ok(())
+}
+
+fn cmd_selfcheck(args: &Args) -> Result<()> {
+    let artifacts = Path::new(args.get_or("artifacts", "artifacts")).to_path_buf();
+    let model = args.get_or("model", "mixtral-tiny");
+    println!("selfcheck: opening artifacts at {}/{model}", artifacts.display());
+    let engine = build_engine(args)?;
+    println!("  platform = {}", engine.rt.platform());
+    println!("  model    = {} ({} layers, {} experts/layer, top-{})",
+        engine.cfg.name, engine.cfg.n_layers, engine.cfg.n_experts, engine.cfg.top_k);
+    let mut coord = Coordinator::new(engine);
+    let r = coord.generate(&Request::new(0, "selfcheck", 4))?;
+    println!(
+        "  generated {} tokens, prefill {:.3}s, decode {:.2} tok/s",
+        r.tokens.len(),
+        r.metrics.prefill_time.as_secs_f64(),
+        r.metrics.decode_tps()
+    );
+    println!("selfcheck OK");
+    Ok(())
+}

@@ -1,0 +1,187 @@
+//! The two-tier memory hierarchy (Fig 2): experts move from "next-level
+//! memory" (the `ExpertStore`) into the expert cache across a
+//! bandwidth-limited link.
+//!
+//! Two transfer engines implement the same accounting:
+//!
+//! * [`ThrottledCopier`] — the *real* path: performs the actual memcpy of
+//!   the expert bytes and sleeps the remainder of `bytes/bandwidth +
+//!   latency`, emulating PCIe/SSD at a configured (scaled) rate. Transfers
+//!   are **non-preemptible once started**, matching the paper's
+//!   cudaMemcpy observation (§3.3, Fig 9) — the source of misprediction
+//!   penalties.
+//! * [`VirtualClock`] — the simulator's time source: transfers charge
+//!   virtual nanoseconds, no bytes move.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Bandwidth model of the expert-loading link.
+#[derive(Debug, Clone, Copy)]
+pub struct LinkModel {
+    pub bytes_per_s: f64,
+    pub latency_s: f64,
+}
+
+impl LinkModel {
+    pub fn transfer_time(&self, bytes: usize) -> Duration {
+        Duration::from_secs_f64(self.latency_s + bytes as f64 / self.bytes_per_s)
+    }
+}
+
+/// Real-path transfer engine: copies bytes and enforces the link rate.
+pub struct ThrottledCopier {
+    pub link: LinkModel,
+    bytes_moved: AtomicU64,
+    transfers: AtomicU64,
+}
+
+impl ThrottledCopier {
+    pub fn new(link: LinkModel) -> Self {
+        Self { link, bytes_moved: AtomicU64::new(0), transfers: AtomicU64::new(0) }
+    }
+
+    /// Copy `src` into `dst` at the modeled link rate. Blocking and
+    /// non-preemptible (cudaMemcpy semantics). Returns the wall time spent.
+    pub fn transfer(&self, src: &[u8], dst: &mut [u8]) -> Duration {
+        assert_eq!(src.len(), dst.len());
+        let t0 = Instant::now();
+        let budget = self.link.transfer_time(src.len());
+        dst.copy_from_slice(src);
+        let elapsed = t0.elapsed();
+        if elapsed < budget {
+            std::thread::sleep(budget - elapsed);
+        }
+        self.bytes_moved.fetch_add(src.len() as u64, Ordering::Relaxed);
+        self.transfers.fetch_add(1, Ordering::Relaxed);
+        t0.elapsed()
+    }
+
+    pub fn bytes_moved(&self) -> u64 {
+        self.bytes_moved.load(Ordering::Relaxed)
+    }
+
+    pub fn transfers(&self) -> u64 {
+        self.transfers.load(Ordering::Relaxed)
+    }
+}
+
+/// Virtual time source for the discrete-event simulator. Thread-safe so
+/// sim components can share it; stores nanoseconds.
+#[derive(Debug, Default)]
+pub struct VirtualClock {
+    now_ns: AtomicU64,
+}
+
+impl VirtualClock {
+    pub fn new() -> Arc<Self> {
+        Arc::new(Self::default())
+    }
+
+    pub fn now(&self) -> Duration {
+        Duration::from_nanos(self.now_ns.load(Ordering::Relaxed))
+    }
+
+    pub fn advance(&self, d: Duration) {
+        self.now_ns.fetch_add(d.as_nanos() as u64, Ordering::Relaxed);
+    }
+
+    /// Advance to `t` if it is in the future.
+    pub fn advance_to(&self, t: Duration) {
+        let t_ns = t.as_nanos() as u64;
+        let mut cur = self.now_ns.load(Ordering::Relaxed);
+        while t_ns > cur {
+            match self.now_ns.compare_exchange(cur, t_ns, Ordering::Relaxed, Ordering::Relaxed) {
+                Ok(_) => break,
+                Err(c) => cur = c,
+            }
+        }
+    }
+}
+
+/// A pinned arena of cache slots: sized at startup (the paper's expert
+/// cache is pre-allocated GPU memory), handed out by slot index. Slots of
+/// one pool all have identical record size.
+pub struct SlotArena {
+    buf: Vec<u8>,
+    slot_bytes: usize,
+    slots: usize,
+}
+
+impl SlotArena {
+    pub fn new(slots: usize, slot_bytes: usize) -> Self {
+        // u32 backing for 4-byte alignment of f32 views into slots
+        let words = (slots * slot_bytes + 3) / 4;
+        let mut v32 = vec![0u32; words];
+        let buf = unsafe {
+            let ptr = v32.as_mut_ptr() as *mut u8;
+            let cap = v32.capacity() * 4;
+            std::mem::forget(v32);
+            Vec::from_raw_parts(ptr, slots * slot_bytes, cap)
+        };
+        Self { buf, slot_bytes, slots }
+    }
+
+    pub fn slots(&self) -> usize {
+        self.slots
+    }
+
+    pub fn slot_bytes(&self) -> usize {
+        self.slot_bytes
+    }
+
+    pub fn slot(&self, i: usize) -> &[u8] {
+        assert!(i < self.slots);
+        &self.buf[i * self.slot_bytes..(i + 1) * self.slot_bytes]
+    }
+
+    pub fn slot_mut(&mut self, i: usize) -> &mut [u8] {
+        assert!(i < self.slots);
+        &mut self.buf[i * self.slot_bytes..(i + 1) * self.slot_bytes]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn link_time_math() {
+        let l = LinkModel { bytes_per_s: 1e9, latency_s: 1e-3 };
+        let t = l.transfer_time(1_000_000);
+        assert!((t.as_secs_f64() - 0.002).abs() < 1e-9);
+    }
+
+    #[test]
+    fn throttled_copy_moves_bytes_and_enforces_rate() {
+        let c = ThrottledCopier::new(LinkModel { bytes_per_s: 100e6, latency_s: 0.0 });
+        let src = vec![7u8; 1_000_000]; // 10 ms at 100 MB/s
+        let mut dst = vec![0u8; 1_000_000];
+        let t = c.transfer(&src, &mut dst);
+        assert_eq!(dst, src);
+        assert!(t.as_secs_f64() >= 0.009, "took {t:?}");
+        assert_eq!(c.bytes_moved(), 1_000_000);
+        assert_eq!(c.transfers(), 1);
+    }
+
+    #[test]
+    fn virtual_clock_advances() {
+        let clk = VirtualClock::new();
+        clk.advance(Duration::from_millis(5));
+        clk.advance_to(Duration::from_millis(3)); // no-op, in the past
+        assert_eq!(clk.now(), Duration::from_millis(5));
+        clk.advance_to(Duration::from_millis(9));
+        assert_eq!(clk.now(), Duration::from_millis(9));
+    }
+
+    #[test]
+    fn arena_slots_disjoint_and_aligned() {
+        let mut a = SlotArena::new(3, 10);
+        a.slot_mut(1).fill(0xAB);
+        assert!(a.slot(0).iter().all(|&b| b == 0));
+        assert!(a.slot(1).iter().all(|&b| b == 0xAB));
+        assert!(a.slot(2).iter().all(|&b| b == 0));
+        assert_eq!(a.slot(0).as_ptr() as usize % 4, 0);
+    }
+}

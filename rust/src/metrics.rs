@@ -1,0 +1,164 @@
+//! Serving metrics: the paper's two headline numbers (prefill latency,
+//! decode tokens/s) plus the loader/cache counters behind the ablations.
+
+use std::time::Duration;
+
+use crate::util::json::{arr, num, obj, s, Json};
+
+#[derive(Debug, Clone, Default)]
+pub struct LoaderStats {
+    /// on-demand expert loads by precision slot (f32, q8, q4, q2)
+    pub ondemand_loads: [u64; 4],
+    /// prefetch loads by precision slot
+    pub prefetch_loads: [u64; 4],
+    /// experts skipped by the T2 threshold
+    pub skipped: u64,
+    /// bytes actually moved across the simulated PCIe/SSD link
+    pub bytes_loaded: u64,
+    /// wall-time the decode loop spent blocked on on-demand loads
+    pub wait_time: Duration,
+    /// prefetch predictions that turned out correct / total
+    pub prefetch_hits: u64,
+    pub prefetch_total: u64,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct CacheStats {
+    pub hits_hi: u64,
+    pub hits_lo: u64,
+    pub misses_hi: u64,
+    pub misses_lo: u64,
+    pub evictions: u64,
+    /// §3.4 miss *penalty*: hi miss = 1.0, lo miss = B_l/B_h
+    pub miss_penalty: f64,
+}
+
+impl CacheStats {
+    pub fn hit_ratio(&self) -> f64 {
+        let hits = (self.hits_hi + self.hits_lo) as f64;
+        let total = hits + (self.misses_hi + self.misses_lo) as f64;
+        if total == 0.0 {
+            0.0
+        } else {
+            hits / total
+        }
+    }
+}
+
+/// One generation's timing record.
+#[derive(Debug, Clone, Default)]
+pub struct RequestMetrics {
+    pub prompt_tokens: usize,
+    pub generated_tokens: usize,
+    pub prefill_time: Duration,
+    pub decode_time: Duration,
+    /// time spent inside PJRT execute calls (compute)
+    pub compute_time: Duration,
+    /// time spent blocked on expert loading
+    pub load_wait_time: Duration,
+}
+
+impl RequestMetrics {
+    pub fn decode_tps(&self) -> f64 {
+        let t = self.decode_time.as_secs_f64();
+        if t <= 0.0 {
+            0.0
+        } else {
+            self.generated_tokens as f64 / t
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("prompt_tokens", num(self.prompt_tokens as f64)),
+            ("generated_tokens", num(self.generated_tokens as f64)),
+            ("prefill_s", num(self.prefill_time.as_secs_f64())),
+            ("decode_s", num(self.decode_time.as_secs_f64())),
+            ("decode_tps", num(self.decode_tps())),
+            ("compute_s", num(self.compute_time.as_secs_f64())),
+            ("load_wait_s", num(self.load_wait_time.as_secs_f64())),
+        ])
+    }
+}
+
+/// Aggregate over a run of requests, exported by `hobbit serve --report`.
+#[derive(Debug, Clone, Default)]
+pub struct RunReport {
+    pub requests: Vec<RequestMetrics>,
+    pub loader: LoaderStats,
+    pub cache: CacheStats,
+}
+
+impl RunReport {
+    pub fn mean_decode_tps(&self) -> f64 {
+        if self.requests.is_empty() {
+            return 0.0;
+        }
+        self.requests.iter().map(|r| r.decode_tps()).sum::<f64>() / self.requests.len() as f64
+    }
+
+    pub fn mean_prefill_s(&self) -> f64 {
+        if self.requests.is_empty() {
+            return 0.0;
+        }
+        self.requests.iter().map(|r| r.prefill_time.as_secs_f64()).sum::<f64>()
+            / self.requests.len() as f64
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("mean_decode_tps", num(self.mean_decode_tps())),
+            ("mean_prefill_s", num(self.mean_prefill_s())),
+            ("cache_hit_ratio", num(self.cache.hit_ratio())),
+            ("miss_penalty", num(self.cache.miss_penalty)),
+            ("bytes_loaded", num(self.loader.bytes_loaded as f64)),
+            ("skipped", num(self.loader.skipped as f64)),
+            (
+                "prefetch_accuracy",
+                num(if self.loader.prefetch_total == 0 {
+                    0.0
+                } else {
+                    self.loader.prefetch_hits as f64 / self.loader.prefetch_total as f64
+                }),
+            ),
+            ("requests", arr(self.requests.iter().map(|r| r.to_json()).collect())),
+            ("schema", s("hobbit.run_report.v1")),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tps_math() {
+        let r = RequestMetrics {
+            generated_tokens: 50,
+            decode_time: Duration::from_secs_f64(2.0),
+            ..Default::default()
+        };
+        assert!((r.decode_tps() - 25.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn hit_ratio() {
+        let c = CacheStats { hits_hi: 6, hits_lo: 2, misses_hi: 1, misses_lo: 1, ..Default::default() };
+        assert!((c.hit_ratio() - 0.8).abs() < 1e-9);
+        assert_eq!(CacheStats::default().hit_ratio(), 0.0);
+    }
+
+    #[test]
+    fn report_json_parses() {
+        let mut rep = RunReport::default();
+        rep.requests.push(RequestMetrics {
+            prompt_tokens: 16,
+            generated_tokens: 32,
+            prefill_time: Duration::from_millis(100),
+            decode_time: Duration::from_secs(1),
+            ..Default::default()
+        });
+        let j = Json::parse(&rep.to_json().to_string()).unwrap();
+        assert_eq!(j.get("requests").unwrap().as_arr().unwrap().len(), 1);
+    }
+}

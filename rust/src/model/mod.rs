@@ -1,0 +1,109 @@
+//! Model weights: the non-expert weights (always resident, Fig 2) and the
+//! expert store (the "next-level memory" tier holding every expert at
+//! every precision, exported by `python/compile/gen_weights.py`).
+
+mod weights;
+
+pub use weights::{ExpertStore, NonExpertWeights};
+
+use anyhow::Result;
+use xla::Literal;
+
+use crate::config::ModelConfig;
+use crate::runtime::{lit_f32, lit_u8};
+use crate::Precision;
+
+/// Slice an expert record (the raw bytes the loader moved into cache) into
+/// the literal arguments the `expert_{fmt}_s{S}` artifact expects:
+/// f32 -> [w1, w3, w2]; quantized -> [w1p, w1s, w3p, w3s, w2p, w2s].
+pub fn expert_literals(cfg: &ModelConfig, p: Precision, record: &[u8]) -> Result<Vec<Literal>> {
+    let d = cfg.d_model;
+    let ff = cfg.d_ff;
+    let g = cfg.quant_group;
+    let mut out = Vec::new();
+    match p {
+        Precision::F32 => {
+            let floats: &[f32] = cast_f32(record);
+            let (n1, n2) = (d * ff, ff * d);
+            anyhow::ensure!(floats.len() == 2 * n1 + n2, "f32 record size mismatch");
+            out.push(lit_f32(&[d, ff], &floats[..n1])?);
+            out.push(lit_f32(&[d, ff], &floats[n1..2 * n1])?);
+            out.push(lit_f32(&[ff, d], &floats[2 * n1..])?);
+        }
+        _ => {
+            let pack = p.pack();
+            let mut off = 0usize;
+            for (rows, cols) in [(d, ff), (d, ff), (ff, d)] {
+                let nb = rows / pack * cols;
+                out.push(lit_u8(&[rows / pack, cols], &record[off..off + nb])?);
+                off += nb;
+                let ns = rows / g * cols * 4;
+                out.push(lit_f32(&[rows / g, cols], cast_f32(&record[off..off + ns]))?);
+                off += ns;
+            }
+            anyhow::ensure!(off == record.len(), "quant record size mismatch");
+        }
+    }
+    Ok(out)
+}
+
+/// Reinterpret little-endian bytes as f32s (alignment-safe copy fallback).
+fn cast_f32(bytes: &[u8]) -> &[f32] {
+    assert_eq!(bytes.len() % 4, 0);
+    assert_eq!(bytes.as_ptr() as usize % 4, 0, "unaligned f32 view");
+    unsafe { std::slice::from_raw_parts(bytes.as_ptr() as *const f32, bytes.len() / 4) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg() -> ModelConfig {
+        ModelConfig {
+            name: "t".into(),
+            n_layers: 2,
+            d_model: 64,
+            d_ff: 128,
+            n_experts: 4,
+            top_k: 2,
+            n_heads: 4,
+            n_kv_heads: 2,
+            vocab: 260,
+            max_seq: 32,
+            quant_group: 32,
+            expert_bytes: [0; 4],
+        }
+    }
+
+    #[test]
+    fn f32_record_slicing() {
+        let cfg = tiny_cfg();
+        let n = 2 * cfg.d_model * cfg.d_ff + cfg.d_ff * cfg.d_model;
+        let floats: Vec<f32> = (0..n).map(|i| i as f32).collect();
+        let bytes: Vec<u8> =
+            floats.iter().flat_map(|f| f.to_le_bytes()).collect();
+        let lits = expert_literals(&cfg, Precision::F32, &bytes).unwrap();
+        assert_eq!(lits.len(), 3);
+        assert_eq!(lits[0].element_count(), cfg.d_model * cfg.d_ff);
+        assert_eq!(lits[2].to_vec::<f32>().unwrap()[0], (2 * cfg.d_model * cfg.d_ff) as f32);
+    }
+
+    #[test]
+    fn quant_record_slicing() {
+        let cfg = tiny_cfg();
+        let (d, ff, g) = (cfg.d_model, cfg.d_ff, cfg.quant_group);
+        for p in [Precision::Q8, Precision::Q4, Precision::Q2] {
+            let pk = p.pack();
+            let rec_len = (d / pk * ff + d / g * ff * 4) * 2 + ff / pk * d + ff / g * d * 4;
+            let rec = vec![0u8; rec_len];
+            let lits = expert_literals(&cfg, p, &rec).unwrap();
+            assert_eq!(lits.len(), 6, "{p:?}");
+        }
+    }
+
+    #[test]
+    fn bad_record_size_rejected() {
+        let cfg = tiny_cfg();
+        assert!(expert_literals(&cfg, Precision::F32, &[0u8; 16]).is_err());
+    }
+}

@@ -1,0 +1,153 @@
+//! Weight files: non-expert weights (resident in "GPU memory") and the
+//! expert store ("next-level memory": CPU RAM standing in for CPU/SSD,
+//! with transfer costs modeled by `memory::TransferEngine`).
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::config::ModelConfig;
+use crate::util::json::Json;
+use crate::{ExpertKey, Precision};
+
+/// All non-expert tensors, loaded once and kept resident (they are 4% of
+/// the model, Fig 2-b).
+pub struct NonExpertWeights {
+    data: Vec<f32>,
+    index: HashMap<String, (Vec<usize>, usize)>, // name -> (shape, f32 offset)
+}
+
+impl NonExpertWeights {
+    pub fn load(weights_dir: &Path) -> Result<Self> {
+        let man_path = weights_dir.join("weights.json");
+        let text = std::fs::read_to_string(&man_path)
+            .with_context(|| format!("reading {}", man_path.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("weights.json: {e}"))?;
+        let bytes = std::fs::read(weights_dir.join("nonexpert.bin"))?;
+        anyhow::ensure!(bytes.len() % 4 == 0);
+        let mut data = vec![0f32; bytes.len() / 4];
+        // copy to guarantee alignment
+        unsafe {
+            std::ptr::copy_nonoverlapping(
+                bytes.as_ptr(),
+                data.as_mut_ptr() as *mut u8,
+                bytes.len(),
+            );
+        }
+        let mut index = HashMap::new();
+        for ent in j.get("nonexpert").and_then(Json::as_arr).unwrap_or(&[]) {
+            let name = ent.get("name").and_then(Json::as_str).ok_or(anyhow!("bad entry"))?;
+            let shape: Vec<usize> = ent
+                .get("shape")
+                .and_then(Json::as_arr)
+                .ok_or(anyhow!("bad shape"))?
+                .iter()
+                .filter_map(Json::as_usize)
+                .collect();
+            let offset = ent.get("offset").and_then(Json::as_usize).ok_or(anyhow!("bad offset"))?;
+            anyhow::ensure!(offset % 4 == 0);
+            index.insert(name.to_string(), (shape, offset / 4));
+        }
+        Ok(Self { data, index })
+    }
+
+    /// Tensor view by name (e.g. "wq.3", "emb").
+    pub fn get(&self, name: &str) -> Result<(&[usize], &[f32])> {
+        let (shape, off) = self
+            .index
+            .get(name)
+            .ok_or_else(|| anyhow!("no non-expert tensor '{name}'"))?;
+        let n: usize = shape.iter().product();
+        if off + n > self.data.len() {
+            bail!("tensor '{name}' out of range");
+        }
+        Ok((shape, &self.data[*off..*off + n]))
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &String> {
+        self.index.keys()
+    }
+}
+
+/// Every expert at every precision, resident in host memory as the
+/// "next-level memory" tier. Records are 4-byte aligned so f32 views are
+/// valid (we own the buffers via Vec<f32> backing).
+pub struct ExpertStore {
+    cfg: ModelConfig,
+    /// per precision slot: backing buffer (f32-aligned) and record stride
+    tiers: [Tier; 4],
+}
+
+struct Tier {
+    buf: Vec<u8>,
+    record_bytes: usize,
+}
+
+fn read_aligned(path: &Path) -> Result<Vec<u8>> {
+    let raw = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    // Vec<u8> from fs::read is not guaranteed 4-aligned; re-allocate via
+    // Vec<u32> to force alignment, then transmute the storage.
+    let words = (raw.len() + 3) / 4;
+    let mut v32 = vec![0u32; words];
+    unsafe {
+        std::ptr::copy_nonoverlapping(raw.as_ptr(), v32.as_mut_ptr() as *mut u8, raw.len());
+        let ptr = v32.as_mut_ptr() as *mut u8;
+        let cap = v32.capacity() * 4;
+        std::mem::forget(v32);
+        Ok(Vec::from_raw_parts(ptr, raw.len(), cap))
+    }
+}
+
+impl ExpertStore {
+    pub fn load(weights_dir: &Path, cfg: &ModelConfig) -> Result<Self> {
+        let mut tiers = Vec::new();
+        for p in Precision::ALL {
+            let path = weights_dir.join(format!("experts_{}.bin", p.name()));
+            let buf = read_aligned(&path)?;
+            let record_bytes = cfg.bytes_for(p);
+            anyhow::ensure!(
+                buf.len() == record_bytes * cfg.total_experts(),
+                "expert file {} size mismatch: {} != {} * {}",
+                path.display(),
+                buf.len(),
+                record_bytes,
+                cfg.total_experts()
+            );
+            tiers.push(Tier { buf, record_bytes });
+        }
+        let tiers: [Tier; 4] = tiers.try_into().map_err(|_| anyhow!("tier count"))?;
+        Ok(Self { cfg: cfg.clone(), tiers })
+    }
+
+    /// Raw record bytes of one expert at one precision.
+    pub fn record(&self, key: ExpertKey, p: Precision) -> &[u8] {
+        let tier = &self.tiers[crate::config::precision_slot(p)];
+        let idx = key.index(self.cfg.n_experts);
+        &tier.buf[idx * tier.record_bytes..(idx + 1) * tier.record_bytes]
+    }
+
+    pub fn record_bytes(&self, p: Precision) -> usize {
+        self.tiers[crate::config::precision_slot(p)].record_bytes
+    }
+
+    pub fn config(&self) -> &ModelConfig {
+        &self.cfg
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn read_aligned_is_aligned() {
+        let dir = std::env::temp_dir().join("hobbit_test_align");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("x.bin");
+        std::fs::write(&p, [1u8, 2, 3, 4, 5]).unwrap();
+        let v = read_aligned(&p).unwrap();
+        assert_eq!(v, vec![1, 2, 3, 4, 5]);
+        assert_eq!(v.as_ptr() as usize % 4, 0);
+    }
+}

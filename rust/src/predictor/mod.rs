@@ -1,0 +1,241 @@
+//! The Adaptive Expert Predictor (§3.3, Fig 8).
+//!
+//! The Stacking Computer itself is the `gate_p{p}_s1` HLO artifact (all p
+//! gating matmuls in one launch — L1 kernel `kernels/gating.py`); this
+//! module owns the *decisions*: walk predicted layers outward from the
+//! current one, stop at the first layer whose predicted experts are not
+//! fully cached, issue mixed-precision prefetches for the gap, pin
+//! ("mask") predictions against eviction, and track realized accuracy.
+
+use crate::cache::{CacheManager, Pool};
+use crate::loader::scorer::{self, Class};
+use crate::tensor::topk;
+use crate::ExpertKey;
+
+/// Prefetch plan for one predicted layer.
+#[derive(Debug, Clone)]
+pub struct LayerPrediction {
+    pub layer: u32,
+    /// predicted top-k experts with their precision classes
+    pub experts: Vec<(ExpertKey, Class)>,
+}
+
+/// Rolling prediction-accuracy tracker, per layer-offset (Fig 7b).
+#[derive(Debug, Clone)]
+pub struct AccuracyTracker {
+    /// [offset-1] -> (hits, total) of top-k prediction
+    pub per_offset: Vec<(u64, u64)>,
+}
+
+impl AccuracyTracker {
+    pub fn new(max_offset: usize) -> Self {
+        Self { per_offset: vec![(0, 0); max_offset] }
+    }
+
+    pub fn record(&mut self, offset: usize, predicted: &[u32], actual: &[u32]) {
+        if offset == 0 || offset > self.per_offset.len() {
+            return;
+        }
+        let slot = &mut self.per_offset[offset - 1];
+        for a in actual {
+            slot.1 += 1;
+            if predicted.contains(a) {
+                slot.0 += 1;
+            }
+        }
+    }
+
+    pub fn accuracy(&self, offset: usize) -> f64 {
+        let (h, t) = self.per_offset[offset - 1];
+        if t == 0 {
+            0.0
+        } else {
+            h as f64 / t as f64
+        }
+    }
+}
+
+/// The predictor proper.
+pub struct Predictor {
+    pub depth: usize,
+    pub top_k: usize,
+    pub t1: f64,
+    pub t2: f64,
+    /// mixed-precision prefetching on/off (Fig 17b ablation)
+    pub dynamic: bool,
+    pub tracker: AccuracyTracker,
+    /// last predictions per absolute layer (for accuracy scoring + unpin)
+    pending: Vec<Option<Vec<u32>>>,
+}
+
+impl Predictor {
+    pub fn new(depth: usize, top_k: usize, t1: f64, t2: f64, dynamic: bool, n_layers: u32) -> Self {
+        Self {
+            depth,
+            top_k,
+            t1,
+            t2,
+            dynamic,
+            tracker: AccuracyTracker::new(depth.max(1)),
+            pending: vec![None; n_layers as usize],
+        }
+    }
+
+    /// Decide prefetches from the stacked gate output.
+    ///
+    /// `stacked_probs[j]` is the predicted gate distribution for layer
+    /// `current_layer + j` (index 0 = the current layer's real gating,
+    /// which on-demand selection consumes — not this function).
+    ///
+    /// Walks j = 1.. while the predicted experts of layer j are already
+    /// cached; the first uncovered layer yields the prefetch plan (Fig 8).
+    /// Predicted experts of *covered* layers are pinned so they survive
+    /// until use.
+    pub fn plan(
+        &mut self,
+        cache: &mut CacheManager,
+        current_layer: u32,
+        n_layers: u32,
+        stacked_probs: &[Vec<f32>],
+    ) -> Option<LayerPrediction> {
+        let mut plan = None;
+        for j in 1..stacked_probs.len() {
+            let layer = current_layer + j as u32;
+            if layer >= n_layers {
+                break;
+            }
+            let decisions =
+                scorer::decide(&stacked_probs[j], self.top_k, self.t1, self.t2, self.dynamic);
+            let mut experts = Vec::with_capacity(decisions.len());
+            let mut predicted_ids = Vec::with_capacity(decisions.len());
+            for d in &decisions {
+                let key = ExpertKey::new(layer, d.expert);
+                predicted_ids.push(d.expert);
+                experts.push((key, d.class));
+            }
+            // release pins of a superseded prediction for this layer before
+            // recording the new one (predictions refresh every token)
+            if let Some(old) = self.pending[layer as usize].take() {
+                for e in old {
+                    let key = ExpertKey::new(layer, e);
+                    cache.hi.unpin(key);
+                    cache.lo.unpin(key);
+                }
+            }
+            self.pending[layer as usize] = Some(predicted_ids);
+            // pin predictions in whichever pool they will be read from
+            let mut covered = true;
+            for (key, class) in &experts {
+                let pool = match class {
+                    Class::Hi => Pool::Hi,
+                    Class::Lo | Class::Skip => Pool::Lo,
+                };
+                if cache.contains(*key, pool) {
+                    match pool {
+                        Pool::Hi => cache.hi.pin(*key),
+                        Pool::Lo => cache.lo.pin(*key),
+                    }
+                } else if *class != Class::Skip {
+                    covered = false;
+                }
+            }
+            if !covered {
+                plan = Some(LayerPrediction { layer, experts });
+                break; // first uncovered layer is where prefetching helps
+            }
+        }
+        plan
+    }
+
+    /// Score a layer's realized top-k against the pending prediction and
+    /// release pins. Call when `layer` is actually executed.
+    pub fn observe(&mut self, cache: &mut CacheManager, layer: u32, actual_probs: &[f32]) {
+        let actual: Vec<u32> =
+            topk(actual_probs, self.top_k).iter().map(|(i, _)| *i as u32).collect();
+        if let Some(predicted) = self.pending[layer as usize].take() {
+            // offset bookkeeping: predictions always come from layer-1..layer-depth;
+            // we attribute to offset 1 (the paper reports next-1 dominant)
+            self.tracker.record(1, &predicted, &actual);
+            for e in &predicted {
+                let key = ExpertKey::new(layer, *e);
+                cache.hi.unpin(key);
+                cache.lo.unpin(key);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cache::Policy;
+
+    fn mk_cache() -> CacheManager {
+        CacheManager::new(4, 4, 8, 8, 8, 4, Policy::Lru, 0.25)
+    }
+
+    fn probs(hot: usize, e: usize) -> Vec<f32> {
+        let mut p = vec![0.02f32; e];
+        p[hot] = 0.9;
+        let s: f32 = p.iter().sum();
+        p.iter().map(|x| x / s).collect()
+    }
+
+    #[test]
+    fn plan_stops_at_first_uncovered_layer() {
+        let mut cache = mk_cache();
+        // layer 1's hot expert (0) cached; layer 2's (1) not
+        cache.reserve(ExpertKey::new(1, 0), Pool::Hi, 0).unwrap();
+        cache.commit(ExpertKey::new(1, 0), Pool::Hi);
+        // skipping class for the weak second expert: also satisfied
+        let mut pred = Predictor::new(3, 2, 0.6, 0.9, true, 4);
+        let stacked = vec![probs(0, 4), probs(0, 4), probs(1, 4), probs(2, 4)];
+        let plan = pred.plan(&mut cache, 0, 4, &stacked).expect("plan");
+        assert_eq!(plan.layer, 2);
+        assert!(plan.experts.iter().any(|(k, _)| k.expert == 1));
+    }
+
+    #[test]
+    fn plan_none_when_all_covered() {
+        let mut cache = mk_cache();
+        for l in 1..4 {
+            cache.reserve(ExpertKey::new(l, 0), Pool::Hi, 0).unwrap();
+            cache.commit(ExpertKey::new(l, 0), Pool::Hi);
+        }
+        let mut pred = Predictor::new(3, 2, 0.6, 0.9, true, 4);
+        let stacked = vec![probs(0, 4); 4];
+        assert!(pred.plan(&mut cache, 0, 4, &stacked).is_none());
+    }
+
+    #[test]
+    fn observe_tracks_accuracy_and_unpins() {
+        let mut cache = mk_cache();
+        cache.reserve(ExpertKey::new(1, 0), Pool::Hi, 0).unwrap();
+        cache.commit(ExpertKey::new(1, 0), Pool::Hi);
+        let mut pred = Predictor::new(2, 2, 0.6, 0.9, true, 4);
+        let stacked = vec![probs(0, 4), probs(0, 4)];
+        let _ = pred.plan(&mut cache, 0, 4, &stacked);
+        // actual top-2 of layer 1 includes expert 0 -> 1 hit of 2
+        pred.observe(&mut cache, 1, &probs(0, 4));
+        assert!(pred.tracker.accuracy(1) > 0.49);
+        assert!(!cache.hi.pinned_contains(ExpertKey::new(1, 0)));
+    }
+
+    #[test]
+    fn accuracy_tracker_math() {
+        let mut t = AccuracyTracker::new(2);
+        t.record(1, &[0, 1], &[1, 2]);
+        assert!((t.accuracy(1) - 0.5).abs() < 1e-12);
+        t.record(2, &[5], &[5]);
+        assert!((t.accuracy(2) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn plan_clamps_at_model_end() {
+        let mut cache = mk_cache();
+        let mut pred = Predictor::new(4, 2, 0.6, 0.9, true, 4);
+        let stacked = vec![probs(0, 4); 5];
+        // current layer 3 of 4: nothing to predict
+        assert!(pred.plan(&mut cache, 3, 4, &stacked).is_none());
+    }
+}

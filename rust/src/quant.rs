@@ -1,0 +1,216 @@
+//! Group quantization, byte-compatible with `python/compile/quantize.py`.
+//!
+//! Layout contract for W[rows, cols] quantized along rows with group G:
+//!   scales f32[rows/G, cols]
+//!   q8: i8 (two's complement, stored as u8) [rows, cols]
+//!   q4: u8[rows/2, cols], element (r,c) = (packed[r/2,c] >> 4*(r%2)) & 0xF,
+//!       value = nibble - 8
+//!   q2: u8[rows/4, cols], element (r,c) = (packed[r/4,c] >> 2*(r%4)) & 0x3,
+//!       value = (field - 2) + 0.5   (symmetric 4-level grid)
+//!
+//! The rust side quantizes only in tests/tools (the build step exports the
+//! packed experts); at runtime it *dequantizes* for verification and the
+//! CPU-assist compute mode (§4, Fig 13).
+
+use crate::Precision;
+
+/// Max representable code magnitude per format.
+fn qmax(p: Precision) -> f32 {
+    match p {
+        Precision::Q8 => 127.0,
+        Precision::Q4 => 7.0,
+        Precision::Q2 => 1.5,
+        Precision::F32 => panic!("f32 is not quantized"),
+    }
+}
+
+/// Per-(group, col) scales.
+pub fn group_scales(w: &[f32], rows: usize, cols: usize, group: usize, p: Precision) -> Vec<f32> {
+    assert_eq!(w.len(), rows * cols);
+    assert_eq!(rows % group, 0);
+    let ngroups = rows / group;
+    let mut scales = vec![0.0f32; ngroups * cols];
+    for g in 0..ngroups {
+        for c in 0..cols {
+            let mut amax = 0.0f32;
+            for r in g * group..(g + 1) * group {
+                amax = amax.max(w[r * cols + c].abs());
+            }
+            let s = amax / qmax(p);
+            scales[g * cols + c] = if s == 0.0 { 1.0 } else { s };
+        }
+    }
+    scales
+}
+
+/// Quantize + pack. Returns (packed bytes, scales).
+pub fn quantize(w: &[f32], rows: usize, cols: usize, group: usize, p: Precision) -> (Vec<u8>, Vec<f32>) {
+    let scales = group_scales(w, rows, cols, group, p);
+    let code = |r: usize, c: usize| -> i32 {
+        let s = scales[(r / group) * cols + c];
+        let q = w[r * cols + c] / s;
+        // numpy's np.round rounds half-to-even; match it bit-for-bit
+        match p {
+            Precision::Q2 => (q - 0.5).round_ties_even().clamp(-2.0, 1.0) as i32,
+            _ => q.round_ties_even().clamp(-qmax(p), qmax(p)) as i32,
+        }
+    };
+    let packed = match p {
+        Precision::Q8 => {
+            let mut out = vec![0u8; rows * cols];
+            for r in 0..rows {
+                for c in 0..cols {
+                    out[r * cols + c] = (code(r, c) as i8) as u8;
+                }
+            }
+            out
+        }
+        Precision::Q4 => {
+            let mut out = vec![0u8; rows / 2 * cols];
+            for r in 0..rows {
+                for c in 0..cols {
+                    let u = (code(r, c) + 8) as u8;
+                    out[(r / 2) * cols + c] |= u << (4 * (r % 2));
+                }
+            }
+            out
+        }
+        Precision::Q2 => {
+            let mut out = vec![0u8; rows / 4 * cols];
+            for r in 0..rows {
+                for c in 0..cols {
+                    let u = (code(r, c) + 2) as u8;
+                    out[(r / 4) * cols + c] |= u << (2 * (r % 4));
+                }
+            }
+            out
+        }
+        Precision::F32 => panic!("f32 is not quantized"),
+    };
+    (packed, scales)
+}
+
+/// Dequantize packed codes + scales back to f32.
+pub fn dequantize(
+    packed: &[u8],
+    scales: &[f32],
+    rows: usize,
+    cols: usize,
+    group: usize,
+    p: Precision,
+) -> Vec<f32> {
+    let mut out = vec![0.0f32; rows * cols];
+    for r in 0..rows {
+        for c in 0..cols {
+            let code = match p {
+                Precision::Q8 => packed[r * cols + c] as i8 as f32,
+                Precision::Q4 => ((packed[(r / 2) * cols + c] >> (4 * (r % 2))) & 0xF) as f32 - 8.0,
+                Precision::Q2 => {
+                    ((packed[(r / 4) * cols + c] >> (2 * (r % 4))) & 0x3) as f32 - 2.0 + 0.5
+                }
+                Precision::F32 => panic!("f32 is not quantized"),
+            };
+            out[r * cols + c] = code * scales[(r / group) * cols + c];
+        }
+    }
+    out
+}
+
+/// Packed byte count of a [rows, cols] matrix (codes only, no scales).
+pub fn packed_bytes(rows: usize, cols: usize, p: Precision) -> usize {
+    match p {
+        Precision::F32 => rows * cols * 4,
+        Precision::Q8 => rows * cols,
+        Precision::Q4 => rows / 2 * cols,
+        Precision::Q2 => rows / 4 * cols,
+    }
+}
+
+/// Scale float count of a [rows, cols] matrix.
+pub fn scale_count(rows: usize, cols: usize, group: usize) -> usize {
+    rows / group * cols
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::proptest_mini::check;
+    use crate::util::rng::Rng;
+
+    fn rand_w(rng: &mut Rng, rows: usize, cols: usize, scale: f32) -> Vec<f32> {
+        (0..rows * cols).map(|_| rng.normal() as f32 * scale).collect()
+    }
+
+    #[test]
+    fn q8_roundtrip_error_bound() {
+        let mut rng = Rng::new(1);
+        let (rows, cols, g) = (128, 16, 64);
+        let w = rand_w(&mut rng, rows, cols, 0.05);
+        let (packed, scales) = quantize(&w, rows, cols, g, Precision::Q8);
+        let wd = dequantize(&packed, &scales, rows, cols, g, Precision::Q8);
+        for r in 0..rows {
+            for c in 0..cols {
+                let step = scales[(r / g) * cols + c];
+                assert!((wd[r * cols + c] - w[r * cols + c]).abs() <= step * 0.5 + 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn error_ordering_q8_q4_q2() {
+        let mut rng = Rng::new(2);
+        let (rows, cols, g) = (256, 32, 64);
+        let w = rand_w(&mut rng, rows, cols, 0.05);
+        let mut errs = vec![];
+        for p in [Precision::Q8, Precision::Q4, Precision::Q2] {
+            let (packed, scales) = quantize(&w, rows, cols, g, p);
+            let wd = dequantize(&packed, &scales, rows, cols, g, p);
+            let e: f32 = wd.iter().zip(&w).map(|(a, b)| (a - b).abs()).sum::<f32>() / w.len() as f32;
+            errs.push(e);
+        }
+        assert!(errs[0] < errs[1] && errs[1] < errs[2], "{errs:?}");
+    }
+
+    #[test]
+    fn packed_sizes() {
+        assert_eq!(packed_bytes(256, 512, Precision::F32), 256 * 512 * 4);
+        assert_eq!(packed_bytes(256, 512, Precision::Q8), 256 * 512);
+        assert_eq!(packed_bytes(256, 512, Precision::Q4), 128 * 512);
+        assert_eq!(packed_bytes(256, 512, Precision::Q2), 64 * 512);
+    }
+
+    #[test]
+    fn zero_weights_finite() {
+        let w = vec![0.0f32; 64 * 4];
+        let (packed, scales) = quantize(&w, 64, 4, 64, Precision::Q2);
+        let wd = dequantize(&packed, &scales, 64, 4, 64, Precision::Q2);
+        assert!(wd.iter().all(|x| x.is_finite() && x.abs() <= 0.5));
+    }
+
+    #[test]
+    fn prop_roundtrip_within_half_step() {
+        check("quant roundtrip within half step", |rng| {
+            let rows = [64, 128, 256][rng.below(3)];
+            let cols = 1 + rng.below(12);
+            let group = [32, 64][rng.below(2)];
+            let p = [Precision::Q8, Precision::Q4, Precision::Q2][rng.below(3)];
+            let scale = (rng.f32() * 2.0).max(1e-3);
+            let w = rand_w(rng, rows, cols, scale);
+            let (packed, scales) = quantize(&w, rows, cols, group, p);
+            prop_assert!(packed.len() == packed_bytes(rows, cols, p));
+            let wd = dequantize(&packed, &scales, rows, cols, group, p);
+            for r in 0..rows {
+                for c in 0..cols {
+                    let step = scales[(r / group) * cols + c];
+                    let err = (wd[r * cols + c] - w[r * cols + c]).abs();
+                    prop_assert!(
+                        err <= step * 0.5 + 1e-5 * scale,
+                        "err {err} > half step {step} at ({r},{c}) fmt {p:?}"
+                    );
+                }
+            }
+            Ok(())
+        });
+    }
+}

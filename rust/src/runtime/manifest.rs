@@ -1,0 +1,134 @@
+//! Artifact manifest (`artifacts/<model>/manifest.json`) parsing.
+
+use std::collections::BTreeMap;
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+    U8,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "float32" => Ok(DType::F32),
+            "int32" => Ok(DType::I32),
+            "uint8" => Ok(DType::U8),
+            other => Err(format!("unsupported dtype '{other}'")),
+        }
+    }
+
+    pub fn size(&self) -> usize {
+        match self {
+            DType::F32 | DType::I32 => 4,
+            DType::U8 => 1,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub file: String,
+    pub inputs: Vec<(Vec<usize>, DType)>,
+    pub outputs: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    /// raw model section (config/mod.rs parses it into ModelConfig)
+    pub model: Json,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Self, String> {
+        let j = Json::parse(text)?;
+        let model = j.get("model").cloned().ok_or("manifest missing 'model'")?;
+        let arts = j
+            .get("artifacts")
+            .and_then(Json::as_obj)
+            .ok_or("manifest missing 'artifacts'")?;
+        let mut artifacts = BTreeMap::new();
+        for (name, a) in arts {
+            let file = a
+                .get("file")
+                .and_then(Json::as_str)
+                .ok_or_else(|| format!("artifact {name} missing file"))?
+                .to_string();
+            let mut inputs = Vec::new();
+            for inp in a.get("inputs").and_then(Json::as_arr).unwrap_or(&[]) {
+                let shape: Vec<usize> = inp
+                    .get("shape")
+                    .and_then(Json::as_arr)
+                    .ok_or("input missing shape")?
+                    .iter()
+                    .filter_map(Json::as_usize)
+                    .collect();
+                let dtype = DType::parse(
+                    inp.get("dtype").and_then(Json::as_str).ok_or("input missing dtype")?,
+                )?;
+                inputs.push((shape, dtype));
+            }
+            let outputs = a.get("outputs").and_then(Json::as_usize).unwrap_or(1);
+            artifacts.insert(name.clone(), ArtifactSpec { file, inputs, outputs });
+        }
+        Ok(Self { model, artifacts })
+    }
+
+    /// Names of all artifacts used in decode (S = 1) for a given prefetch
+    /// depth and precision pair — what the engine precompiles at startup.
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.artifacts.keys().map(|s| s.as_str())
+    }
+
+    /// Raw model section for config parsing.
+    pub fn model_json(&self) -> Json {
+        Json::Obj(
+            [("model".to_string(), self.model.clone())].into_iter().collect(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SRC: &str = r#"{
+      "model": {"name": "m"},
+      "artifacts": {
+        "attn_s1": {"file": "attn_s1.hlo.txt",
+          "inputs": [{"shape": [1, 256], "dtype": "float32"},
+                     {"shape": [], "dtype": "int32"}],
+          "outputs": 3},
+        "expert_q8_s1": {"file": "expert_q8_s1.hlo.txt",
+          "inputs": [{"shape": [256, 512], "dtype": "uint8"}],
+          "outputs": 1}
+      }}"#;
+
+    #[test]
+    fn parse_manifest() {
+        let m = Manifest::parse(SRC).unwrap();
+        assert_eq!(m.artifacts.len(), 2);
+        let a = &m.artifacts["attn_s1"];
+        assert_eq!(a.outputs, 3);
+        assert_eq!(a.inputs[0], (vec![1, 256], DType::F32));
+        assert_eq!(a.inputs[1], (vec![], DType::I32));
+        assert_eq!(m.artifacts["expert_q8_s1"].inputs[0].1, DType::U8);
+    }
+
+    #[test]
+    fn scalar_shape_is_empty_vec() {
+        let m = Manifest::parse(SRC).unwrap();
+        assert!(m.artifacts["attn_s1"].inputs[1].0.is_empty());
+    }
+
+    #[test]
+    fn dtype_sizes() {
+        assert_eq!(DType::F32.size(), 4);
+        assert_eq!(DType::U8.size(), 1);
+        assert!(DType::parse("float64").is_err());
+    }
+}

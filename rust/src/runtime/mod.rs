@@ -1,0 +1,181 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py`, compiles them once on the CPU PJRT client, and
+//! exposes typed execute helpers to the engine. One compiled executable per
+//! (artifact name); Python is never on this path.
+
+mod manifest;
+
+pub use manifest::{ArtifactSpec, DType, Manifest};
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+use xla::{ElementType, HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+/// Compiled-artifact registry for one model.
+pub struct Runtime {
+    client: PjRtClient,
+    dir: PathBuf,
+    pub manifest: Manifest,
+    execs: HashMap<String, PjRtLoadedExecutable>,
+    /// cumulative wall time inside PJRT execute calls
+    pub compute_time: std::cell::Cell<Duration>,
+    /// execute-call count per artifact (perf accounting)
+    pub calls: std::cell::RefCell<HashMap<String, u64>>,
+}
+
+impl Runtime {
+    /// Open `artifacts/<model>` and compile nothing yet (lazy per-artifact
+    /// compilation keeps startup proportional to what a run actually uses).
+    pub fn open(artifact_dir: &Path) -> Result<Self> {
+        let manifest_path = artifact_dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {}", manifest_path.display()))?;
+        let manifest = Manifest::parse(&text).map_err(|e| anyhow!("manifest: {e}"))?;
+        let client = PjRtClient::cpu()?;
+        Ok(Self {
+            client,
+            dir: artifact_dir.to_path_buf(),
+            manifest,
+            execs: HashMap::new(),
+            compute_time: std::cell::Cell::new(Duration::ZERO),
+            calls: std::cell::RefCell::new(HashMap::new()),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (and memoize) one artifact.
+    pub fn ensure(&mut self, name: &str) -> Result<()> {
+        if self.execs.contains_key(name) {
+            return Ok(());
+        }
+        let spec = self
+            .manifest
+            .artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact '{name}'"))?;
+        let path = self.dir.join(&spec.file);
+        let proto = HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        self.execs.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Compile a set of artifacts up front (used at engine startup so the
+    /// request path never JITs).
+    pub fn ensure_all<'a, I: IntoIterator<Item = &'a str>>(&mut self, names: I) -> Result<()> {
+        for n in names {
+            self.ensure(n)?;
+        }
+        Ok(())
+    }
+
+    /// Execute an artifact; returns the decomposed output tuple. Accepts
+    /// owned literals or borrows (`&[&Literal]`) so precomputed weight
+    /// literals are never deep-cloned on the request path.
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        name: &str,
+        args: &[L],
+    ) -> Result<Vec<Literal>> {
+        let exe = self
+            .execs
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not compiled (call ensure first)"))?;
+        if let Some(spec) = self.manifest.artifacts.get(name) {
+            if spec.inputs.len() != args.len() {
+                bail!(
+                    "artifact '{name}' expects {} inputs, got {}",
+                    spec.inputs.len(),
+                    args.len()
+                );
+            }
+        }
+        let t0 = Instant::now();
+        let result = exe.execute::<L>(args)?;
+        let mut root = result[0][0].to_literal_sync()?;
+        let outs = root.decompose_tuple()?;
+        self.compute_time.set(self.compute_time.get() + t0.elapsed());
+        *self.calls.borrow_mut().entry(name.to_string()).or_insert(0) += 1;
+        Ok(outs)
+    }
+
+    /// Number of compiled artifacts (diagnostics).
+    pub fn compiled_count(&self) -> usize {
+        self.execs.len()
+    }
+}
+
+// --------------------------------------------------------------------------
+// Literal construction helpers
+// --------------------------------------------------------------------------
+
+/// f32 literal with the given dims from a host slice.
+pub fn lit_f32(dims: &[usize], data: &[f32]) -> Result<Literal> {
+    let n: usize = dims.iter().product();
+    if n != data.len() {
+        bail!("lit_f32: dims {:?} need {n} elements, got {}", dims, data.len());
+    }
+    let bytes =
+        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
+    Ok(Literal::create_from_shape_and_untyped_data(ElementType::F32, dims, bytes)?)
+}
+
+/// u8 literal (packed quantized codes).
+pub fn lit_u8(dims: &[usize], data: &[u8]) -> Result<Literal> {
+    let n: usize = dims.iter().product();
+    if n != data.len() {
+        bail!("lit_u8: dims {:?} need {n} bytes, got {}", dims, data.len());
+    }
+    Ok(Literal::create_from_shape_and_untyped_data(ElementType::U8, dims, data)?)
+}
+
+/// s32 scalar literal (positions).
+pub fn lit_i32(v: i32) -> Literal {
+    Literal::scalar(v)
+}
+
+/// Copy a literal's f32 payload out to a Vec.
+pub fn lit_to_f32(lit: &Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lit_f32_roundtrip() {
+        let data = vec![1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let lit = lit_f32(&[2, 3], &data).unwrap();
+        assert_eq!(lit.element_count(), 6);
+        assert_eq!(lit_to_f32(&lit).unwrap(), data);
+    }
+
+    #[test]
+    fn lit_f32_rejects_bad_dims() {
+        assert!(lit_f32(&[2, 2], &[1.0]).is_err());
+    }
+
+    #[test]
+    fn lit_u8_roundtrip() {
+        let data = vec![0u8, 127, 128, 255];
+        let lit = lit_u8(&[4], &data).unwrap();
+        assert_eq!(lit.to_vec::<u8>().unwrap(), data);
+    }
+
+    #[test]
+    fn lit_scalar() {
+        let lit = lit_i32(42);
+        assert_eq!(lit.get_first_element::<i32>().unwrap(), 42);
+    }
+}

@@ -1,0 +1,141 @@
+//! TCP serving front-end. Line protocol (one request per line):
+//!
+//!   GEN <max_new_tokens> <temperature> <prompt…>\n
+//!   STATS\n
+//!
+//! responses are single JSON lines. The accept loop is single-threaded
+//! (batch-1 FCFS serving per the paper's evaluation protocol); connection
+//! handling never blocks generation indefinitely thanks to read timeouts.
+//! tokio is not in the offline vendor set — std::net + the loader's own
+//! scheduler thread cover the paper's concurrency needs (DESIGN.md).
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::coordinator::{Coordinator, Request};
+use crate::util::json::{num, obj, s, Json};
+
+pub struct Server {
+    listener: TcpListener,
+    next_id: u64,
+}
+
+impl Server {
+    /// Bind to `addr` (e.g. "127.0.0.1:7077"; port 0 picks a free port).
+    pub fn bind(addr: &str) -> Result<Self> {
+        let listener = TcpListener::bind(addr)?;
+        Ok(Self { listener, next_id: 1 })
+    }
+
+    pub fn local_addr(&self) -> Result<std::net::SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    /// Serve forever (or until `max_conns` connections have been handled,
+    /// for tests/benches — `None` = unbounded).
+    pub fn serve(&mut self, coord: &mut Coordinator, max_conns: Option<usize>) -> Result<()> {
+        let mut handled = 0usize;
+        loop {
+            let (stream, _peer) = self.listener.accept()?;
+            if let Err(e) = self.handle(coord, stream) {
+                eprintln!("[server] connection error: {e:#}");
+            }
+            handled += 1;
+            if let Some(m) = max_conns {
+                if handled >= m {
+                    return Ok(());
+                }
+            }
+        }
+    }
+
+    fn handle(&mut self, coord: &mut Coordinator, stream: TcpStream) -> Result<()> {
+        stream.set_read_timeout(Some(Duration::from_secs(30)))?;
+        let mut reader = BufReader::new(stream.try_clone()?);
+        let mut out = stream;
+        let mut line = String::new();
+        loop {
+            line.clear();
+            if reader.read_line(&mut line)? == 0 {
+                return Ok(()); // client closed
+            }
+            let line = line.trim_end();
+            if line.is_empty() {
+                continue;
+            }
+            let resp = self.dispatch(coord, line);
+            out.write_all(resp.to_string().as_bytes())?;
+            out.write_all(b"\n")?;
+            out.flush()?;
+        }
+    }
+
+    fn dispatch(&mut self, coord: &mut Coordinator, line: &str) -> Json {
+        let mut parts = line.splitn(4, ' ');
+        match parts.next() {
+            Some("GEN") => {
+                let max_new = parts.next().and_then(|v| v.parse::<usize>().ok());
+                let temp = parts.next().and_then(|v| v.parse::<f32>().ok());
+                let prompt = parts.next().unwrap_or("");
+                match (max_new, temp) {
+                    (Some(max_new), Some(temp)) if !prompt.is_empty() => {
+                        let id = self.next_id;
+                        self.next_id += 1;
+                        let req = Request {
+                            id,
+                            prompt: prompt.to_string(),
+                            max_new_tokens: max_new,
+                            temperature: temp,
+                        };
+                        match coord.generate(&req) {
+                            Ok(r) => obj(vec![
+                                ("id", num(r.id as f64)),
+                                ("text", s(&r.text)),
+                                ("tokens", num(r.tokens.len() as f64)),
+                                ("prefill_s", num(r.metrics.prefill_time.as_secs_f64())),
+                                ("decode_tps", num(r.metrics.decode_tps())),
+                            ]),
+                            Err(e) => err_json(&format!("{e:#}")),
+                        }
+                    }
+                    _ => err_json("usage: GEN <max_new_tokens> <temperature> <prompt>"),
+                }
+            }
+            Some("STATS") => {
+                coord.sync_report();
+                coord.report.to_json()
+            }
+            _ => err_json("unknown command (GEN | STATS)"),
+        }
+    }
+}
+
+fn err_json(msg: &str) -> Json {
+    obj(vec![("error", s(msg))])
+}
+
+/// Minimal client helper (examples/tests).
+pub fn client_request(addr: &str, line: &str) -> Result<Json> {
+    let mut stream = TcpStream::connect(addr)?;
+    stream.write_all(line.as_bytes())?;
+    stream.write_all(b"\n")?;
+    stream.flush()?;
+    let mut reader = BufReader::new(stream);
+    let mut resp = String::new();
+    reader.read_line(&mut resp)?;
+    Json::parse(resp.trim_end()).map_err(|e| anyhow::anyhow!("bad response: {e}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn err_json_shape() {
+        let j = err_json("boom");
+        assert_eq!(j.get("error").unwrap().as_str().unwrap(), "boom");
+    }
+}

@@ -1,0 +1,19 @@
+//! Discrete-event simulator of MoE expert-offloading serving at **paper
+//! scale**: Mixtral-8x7B / Phi-MoE byte sizes over RTX-4090 (PCIe 4.0) and
+//! Jetson-Orin (SSD-bound) links. The real path (engine/) proves the
+//! system end-to-end on the tiny models; this simulator regenerates the
+//! paper's evaluation figures in the paper's own regime, where an expert
+//! transfer costs tens of milliseconds and loading dominates (Fig 3a).
+//!
+//! The model has two serialized resources — the accelerator ("GPU") and
+//! the expert-loading link — and replays gating traces through the same
+//! `CacheManager`/`scorer` logic as the real engine. Transfers are
+//! non-preemptible (cudaMemcpy semantics): an on-demand miss arriving
+//! behind an in-flight prefetch waits it out, which is exactly the
+//! misprediction penalty of Fig 9.
+
+pub mod des;
+pub mod params;
+
+pub use des::{simulate_decode, simulate_prefill, DecodeResult, PrefillResult, SimSystem};
+pub use params::{SimHardware, SimModel};

@@ -1,0 +1,157 @@
+//! Minimal host-side f32 tensor for coordinator logic (residual adds,
+//! top-k over gate probs, sampling). All heavy math runs in the AOT HLO
+//! artifacts; this exists so L3 never needs a BLAS.
+
+/// Dense row-major f32 tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n = shape.iter().product();
+        Self { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        Self { shape: shape.to_vec(), data }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Row view for a 2-D tensor.
+    pub fn row(&self, r: usize) -> &[f32] {
+        let cols = *self.shape.last().unwrap();
+        &self.data[r * cols..(r + 1) * cols]
+    }
+
+    /// In-place elementwise add.
+    pub fn add_assign(&mut self, other: &Tensor) {
+        assert_eq!(self.shape, other.shape);
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
+    pub fn scale(&mut self, c: f32) {
+        for a in &mut self.data {
+            *a *= c;
+        }
+    }
+
+    /// L2 norm of the whole tensor.
+    pub fn norm(&self) -> f64 {
+        self.data.iter().map(|x| (*x as f64) * (*x as f64)).sum::<f64>().sqrt()
+    }
+}
+
+/// Softmax over a slice (numerically stable), returning a new Vec.
+pub fn softmax(xs: &[f32]) -> Vec<f32> {
+    let m = xs.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let exps: Vec<f32> = xs.iter().map(|x| (x - m).exp()).collect();
+    let s: f32 = exps.iter().sum();
+    exps.iter().map(|e| e / s).collect()
+}
+
+/// Indices and values of the k largest entries, descending.
+pub fn topk(xs: &[f32], k: usize) -> Vec<(usize, f32)> {
+    let mut idx: Vec<usize> = (0..xs.len()).collect();
+    idx.sort_by(|&a, &b| xs[b].partial_cmp(&xs[a]).unwrap_or(std::cmp::Ordering::Equal));
+    idx.into_iter().take(k).map(|i| (i, xs[i])).collect()
+}
+
+pub fn argmax(xs: &[f32]) -> usize {
+    topk(xs, 1)[0].0
+}
+
+/// Cross-entropy (nats) of `target` under `logits`.
+pub fn cross_entropy(logits: &[f32], target: usize) -> f64 {
+    let m = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
+    let lse = (logits.iter().map(|x| ((*x as f64) - m).exp()).sum::<f64>()).ln() + m;
+    lse - logits[target] as f64
+}
+
+/// KL(p || q) of two softmax distributions given their logits.
+pub fn kl_from_logits(p_logits: &[f32], q_logits: &[f32]) -> f64 {
+    let p = softmax(p_logits);
+    let q = softmax(q_logits);
+    p.iter()
+        .zip(&q)
+        .filter(|(pi, _)| **pi > 0.0)
+        .map(|(pi, qi)| *pi as f64 * ((*pi as f64) / (*qi as f64).max(1e-30)).ln())
+        .sum()
+}
+
+/// Sample from logits with temperature; t == 0 is greedy.
+pub fn sample_logits(logits: &[f32], temperature: f32, rng: &mut crate::util::rng::Rng) -> usize {
+    if temperature <= 0.0 {
+        return argmax(logits);
+    }
+    let scaled: Vec<f32> = logits.iter().map(|x| x / temperature).collect();
+    let probs = softmax(&scaled);
+    let weights: Vec<f64> = probs.iter().map(|p| *p as f64).collect();
+    rng.weighted(&weights)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn softmax_sums_to_one() {
+        let p = softmax(&[1.0, 2.0, 3.0]);
+        assert!((p.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+        assert!(p[2] > p[1] && p[1] > p[0]);
+    }
+
+    #[test]
+    fn softmax_stable_large_inputs() {
+        let p = softmax(&[1000.0, 1000.0]);
+        assert!((p[0] - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn topk_descending() {
+        let t = topk(&[0.1, 0.9, 0.5, 0.7], 3);
+        assert_eq!(t.iter().map(|x| x.0).collect::<Vec<_>>(), vec![1, 3, 2]);
+    }
+
+    #[test]
+    fn cross_entropy_of_peaked_logits_small() {
+        let ce = cross_entropy(&[10.0, -10.0], 0);
+        assert!(ce < 1e-6);
+        let ce_bad = cross_entropy(&[10.0, -10.0], 1);
+        assert!(ce_bad > 10.0);
+    }
+
+    #[test]
+    fn kl_zero_for_identical() {
+        let l = [0.3, -1.0, 2.0];
+        assert!(kl_from_logits(&l, &l).abs() < 1e-9);
+        assert!(kl_from_logits(&l, &[0.0, 0.0, 0.0]) > 0.0);
+    }
+
+    #[test]
+    fn tensor_add() {
+        let mut a = Tensor::from_vec(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Tensor::from_vec(&[2, 2], vec![10.0, 20.0, 30.0, 40.0]);
+        a.add_assign(&b);
+        assert_eq!(a.data, vec![11.0, 22.0, 33.0, 44.0]);
+        assert_eq!(a.row(1), &[33.0, 44.0]);
+    }
+
+    #[test]
+    fn greedy_sampling() {
+        let mut rng = crate::util::rng::Rng::new(0);
+        assert_eq!(sample_logits(&[0.0, 5.0, 1.0], 0.0, &mut rng), 1);
+    }
+}

@@ -1,0 +1,80 @@
+//! Byte-level tokenizer: 256 byte tokens + BOS/EOS/PAD/UNK specials.
+//! The tiny models are trained on nothing (random init), so a byte
+//! vocabulary keeps the serving path end-to-end real without shipping a
+//! BPE table (DESIGN.md substitutions).
+
+pub const BOS: u32 = 256;
+pub const EOS: u32 = 257;
+pub const PAD: u32 = 258;
+pub const UNK: u32 = 259;
+pub const VOCAB: usize = 260;
+
+#[derive(Debug, Clone, Default)]
+pub struct Tokenizer;
+
+impl Tokenizer {
+    pub fn new() -> Self {
+        Self
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        VOCAB
+    }
+
+    /// Encode text to token ids, prepending BOS.
+    pub fn encode(&self, text: &str) -> Vec<u32> {
+        let mut out = Vec::with_capacity(text.len() + 1);
+        out.push(BOS);
+        out.extend(text.bytes().map(|b| b as u32));
+        out
+    }
+
+    /// Decode token ids back to text, skipping specials; invalid UTF-8 is
+    /// replaced.
+    pub fn decode(&self, tokens: &[u32]) -> String {
+        let bytes: Vec<u8> =
+            tokens.iter().filter(|&&t| t < 256).map(|&t| t as u8).collect();
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+
+    pub fn is_special(&self, t: u32) -> bool {
+        t >= 256
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_ascii() {
+        let tk = Tokenizer::new();
+        let toks = tk.encode("hello, MoE!");
+        assert_eq!(toks[0], BOS);
+        assert_eq!(toks.len(), 12);
+        assert_eq!(tk.decode(&toks), "hello, MoE!");
+    }
+
+    #[test]
+    fn roundtrip_utf8() {
+        let tk = Tokenizer::new();
+        let s = "héllo ☕";
+        assert_eq!(tk.decode(&tk.encode(s)), s);
+    }
+
+    #[test]
+    fn specials_skipped_in_decode() {
+        let tk = Tokenizer::new();
+        assert_eq!(tk.decode(&[BOS, b'a' as u32, EOS, PAD, UNK]), "a");
+        assert!(tk.is_special(EOS));
+        assert!(!tk.is_special(65));
+    }
+
+    #[test]
+    fn all_tokens_below_vocab() {
+        let tk = Tokenizer::new();
+        for t in tk.encode("any text at all \u{1F600}") {
+            assert!((t as usize) < VOCAB);
+        }
+    }
+}

@@ -1,0 +1,358 @@
+//! Gating traces: the routing behaviour of a MoE model, as (token, layer)
+//! → gate distribution. Three sources:
+//!
+//! * **captured** from the real engine (`from_capture`);
+//! * **synthetic** from a generative model calibrated to the paper's
+//!   Fig 10 statistics (sequence-level expert preferences + temporal
+//!   correlation between consecutive tokens + cross-layer smoothness);
+//! * parsed from a JSON file (capture/replay across runs).
+//!
+//! Traces feed the cache replayer (Fig 11/18) and the paper-scale
+//! discrete-event simulator (Fig 14-17).
+
+pub mod replay;
+
+use crate::engine::RoutingObs;
+use crate::tensor::{softmax, topk};
+use crate::util::json::{arr, num, obj, Json};
+use crate::util::rng::Rng;
+
+/// Gate distribution of one (token, layer).
+#[derive(Debug, Clone)]
+pub struct GateEvent {
+    pub token: u32,
+    pub layer: u32,
+    pub probs: Vec<f32>,
+}
+
+impl GateEvent {
+    pub fn top_k(&self, k: usize) -> Vec<(usize, f32)> {
+        topk(&self.probs, k)
+    }
+}
+
+/// One sequence: events ordered token-major, layer-minor.
+#[derive(Debug, Clone)]
+pub struct SeqTrace {
+    pub n_layers: u32,
+    pub n_experts: u32,
+    pub n_tokens: u32,
+    pub events: Vec<GateEvent>,
+}
+
+impl SeqTrace {
+    pub fn event(&self, token: u32, layer: u32) -> &GateEvent {
+        let i = (token * self.n_layers + layer) as usize;
+        let e = &self.events[i];
+        debug_assert_eq!((e.token, e.layer), (token, layer));
+        e
+    }
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct TraceSet {
+    pub seqs: Vec<SeqTrace>,
+}
+
+/// Generative model parameters, defaults calibrated so the synthetic
+/// traces reproduce the paper's Fig 10 measurements on Mixtral-8x7B:
+/// top-1 reuse probability ≈ 0.4-0.6 (> theoretical 0.25) and clear
+/// sequence-level expert preferences.
+#[derive(Debug, Clone)]
+pub struct TraceGenConfig {
+    pub n_layers: u32,
+    pub n_experts: u32,
+    pub top_k: usize,
+    /// Dirichlet concentration of per-(seq, layer) expert preferences;
+    /// smaller = stronger sequence-level skew (Fig 10b).
+    pub pref_alpha: f64,
+    /// AR(1) coefficient of the token-level latent; larger = stronger
+    /// consecutive-token reuse (Fig 10a).
+    pub temporal_rho: f64,
+    /// scale of the token latent relative to the preference logits.
+    pub latent_scale: f64,
+    /// per-layer noise on the shared latent; smaller = more cross-layer
+    /// similarity (higher prefetch accuracy, Fig 7).
+    pub layer_noise: f64,
+    pub seed: u64,
+}
+
+impl TraceGenConfig {
+    pub fn mixtral_like() -> Self {
+        Self {
+            n_layers: 32,
+            n_experts: 8,
+            top_k: 2,
+            pref_alpha: 0.8,
+            temporal_rho: 0.85,
+            latent_scale: 1.2,
+            layer_noise: 0.35,
+            seed: 7,
+        }
+    }
+
+    pub fn phi_like() -> Self {
+        Self { n_experts: 16, ..Self::mixtral_like() }
+    }
+
+    /// Tiny-model shape (for replaying against the real engine's configs).
+    pub fn tiny(n_layers: u32, n_experts: u32, top_k: usize) -> Self {
+        Self { n_layers, n_experts, top_k, ..Self::mixtral_like() }
+    }
+}
+
+/// Generate `n_seqs` sequences of `n_tokens` each.
+pub fn generate(cfg: &TraceGenConfig, n_seqs: usize, n_tokens: u32) -> TraceSet {
+    let mut rng = Rng::new(cfg.seed);
+    let e = cfg.n_experts as usize;
+    let mut seqs = Vec::with_capacity(n_seqs);
+    for _ in 0..n_seqs {
+        // per-(seq, layer) preference logits from a Dirichlet draw
+        let prefs: Vec<Vec<f64>> = (0..cfg.n_layers)
+            .map(|_| {
+                rng.dirichlet(cfg.pref_alpha, e)
+                    .into_iter()
+                    .map(|p| (p.max(1e-6)).ln())
+                    .collect()
+            })
+            .collect();
+        // shared token latent (drives cross-layer similarity)
+        let mut u = vec![0.0f64; e];
+        let mut events = Vec::with_capacity((n_tokens * cfg.n_layers) as usize);
+        for t in 0..n_tokens {
+            let r = cfg.temporal_rho;
+            for ui in u.iter_mut() {
+                *ui = r * *ui + (1.0 - r * r).sqrt() * rng.normal();
+            }
+            for l in 0..cfg.n_layers {
+                let logits: Vec<f32> = (0..e)
+                    .map(|i| {
+                        (prefs[l as usize][i]
+                            + cfg.latent_scale * (u[i] + cfg.layer_noise * rng.normal()))
+                            as f32
+                    })
+                    .collect();
+                events.push(GateEvent { token: t, layer: l, probs: softmax(&logits) });
+            }
+        }
+        seqs.push(SeqTrace {
+            n_layers: cfg.n_layers,
+            n_experts: cfg.n_experts,
+            n_tokens,
+            events,
+        });
+    }
+    TraceSet { seqs }
+}
+
+/// Build a trace from engine capture (decode steps only form a clean
+/// token-major stream when capture started at token 0 of a sequence).
+pub fn from_capture(routes: &[RoutingObs], n_layers: u32, n_experts: u32) -> SeqTrace {
+    let mut events: Vec<GateEvent> = routes
+        .iter()
+        .map(|r| GateEvent {
+            token: r.token as u32,
+            layer: r.layer,
+            probs: r.probs.clone(),
+        })
+        .collect();
+    events.sort_by_key(|e| (e.token, e.layer));
+    // renumber tokens densely (prefill rows may share layer sweeps)
+    let mut n_tokens = 0u32;
+    let mut last = u32::MAX;
+    for ev in &mut events {
+        if ev.token != last {
+            last = ev.token;
+            ev.token = n_tokens;
+            n_tokens += 1;
+        } else {
+            ev.token = n_tokens - 1;
+        }
+    }
+    SeqTrace { n_layers, n_experts, n_tokens, events }
+}
+
+// ---------------------------------------------------------------------------
+// Fig 10 statistics
+// ---------------------------------------------------------------------------
+
+/// Probability that the current token's top-1 expert (per layer) is reused
+/// among the next token's top-k (Fig 10a, "top1" series).
+pub fn top1_reuse_prob(trace: &SeqTrace, k: usize) -> f64 {
+    let mut hits = 0u64;
+    let mut total = 0u64;
+    for t in 0..trace.n_tokens.saturating_sub(1) {
+        for l in 0..trace.n_layers {
+            let cur = trace.event(t, l).top_k(1)[0].0;
+            let next: Vec<usize> =
+                trace.event(t + 1, l).top_k(k).iter().map(|x| x.0).collect();
+            total += 1;
+            if next.contains(&cur) {
+                hits += 1;
+            }
+        }
+    }
+    if total == 0 {
+        0.0
+    } else {
+        hits as f64 / total as f64
+    }
+}
+
+/// Probability that at least one of the current token's top-k experts is
+/// reused in the next token's top-k (Fig 10a, "any" series).
+pub fn any_reuse_prob(trace: &SeqTrace, k: usize) -> f64 {
+    let mut hits = 0u64;
+    let mut total = 0u64;
+    for t in 0..trace.n_tokens.saturating_sub(1) {
+        for l in 0..trace.n_layers {
+            let cur: Vec<usize> = trace.event(t, l).top_k(k).iter().map(|x| x.0).collect();
+            let next: Vec<usize> =
+                trace.event(t + 1, l).top_k(k).iter().map(|x| x.0).collect();
+            total += 1;
+            if cur.iter().any(|c| next.contains(c)) {
+                hits += 1;
+            }
+        }
+    }
+    if total == 0 {
+        0.0
+    } else {
+        hits as f64 / total as f64
+    }
+}
+
+/// Per-(layer, expert) selection frequency of one sequence (Fig 10b rows).
+pub fn selection_frequency(trace: &SeqTrace, k: usize) -> Vec<Vec<f64>> {
+    let e = trace.n_experts as usize;
+    let mut freq = vec![vec![0.0; e]; trace.n_layers as usize];
+    for t in 0..trace.n_tokens {
+        for l in 0..trace.n_layers {
+            for (i, _) in trace.event(t, l).top_k(k) {
+                freq[l as usize][i] += 1.0;
+            }
+        }
+    }
+    for row in &mut freq {
+        let s: f64 = row.iter().sum();
+        if s > 0.0 {
+            for v in row.iter_mut() {
+                *v /= s;
+            }
+        }
+    }
+    freq
+}
+
+// ---------------------------------------------------------------------------
+// (de)serialization
+// ---------------------------------------------------------------------------
+
+pub fn trace_to_json(t: &SeqTrace) -> Json {
+    obj(vec![
+        ("n_layers", num(t.n_layers as f64)),
+        ("n_experts", num(t.n_experts as f64)),
+        ("n_tokens", num(t.n_tokens as f64)),
+        (
+            "events",
+            arr(t.events
+                .iter()
+                .map(|e| {
+                    arr(vec![
+                        num(e.token as f64),
+                        num(e.layer as f64),
+                        arr(e.probs.iter().map(|p| num(*p as f64)).collect()),
+                    ])
+                })
+                .collect()),
+        ),
+    ])
+}
+
+pub fn trace_from_json(j: &Json) -> Result<SeqTrace, String> {
+    let g = |k: &str| j.get(k).and_then(Json::as_usize).ok_or(format!("missing {k}"));
+    let events = j
+        .get("events")
+        .and_then(Json::as_arr)
+        .ok_or("missing events")?
+        .iter()
+        .map(|e| -> Result<GateEvent, String> {
+            Ok(GateEvent {
+                token: e.idx(0).and_then(Json::as_usize).ok_or("bad token")? as u32,
+                layer: e.idx(1).and_then(Json::as_usize).ok_or("bad layer")? as u32,
+                probs: e
+                    .idx(2)
+                    .and_then(Json::as_arr)
+                    .ok_or("bad probs")?
+                    .iter()
+                    .filter_map(Json::as_f64)
+                    .map(|x| x as f32)
+                    .collect(),
+            })
+        })
+        .collect::<Result<Vec<_>, _>>()?;
+    Ok(SeqTrace {
+        n_layers: g("n_layers")? as u32,
+        n_experts: g("n_experts")? as u32,
+        n_tokens: g("n_tokens")? as u32,
+        events,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> TraceGenConfig {
+        TraceGenConfig { n_layers: 4, n_experts: 8, ..TraceGenConfig::mixtral_like() }
+    }
+
+    #[test]
+    fn generate_shapes() {
+        let ts = generate(&small(), 2, 10);
+        assert_eq!(ts.seqs.len(), 2);
+        let t = &ts.seqs[0];
+        assert_eq!(t.events.len(), 40);
+        let e = t.event(3, 2);
+        assert_eq!((e.token, e.layer), (3, 2));
+        let s: f32 = e.probs.iter().sum();
+        assert!((s - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn temporal_locality_exceeds_theory() {
+        // Fig 10a: top-1 reuse must beat the uniform-theory 2/8 = 0.25
+        let ts = generate(&small(), 3, 64);
+        let p: f64 =
+            ts.seqs.iter().map(|s| top1_reuse_prob(s, 2)).sum::<f64>() / ts.seqs.len() as f64;
+        assert!(p > 0.30, "top1 reuse {p} not above theoretical 0.25");
+        let pa: f64 =
+            ts.seqs.iter().map(|s| any_reuse_prob(s, 2)).sum::<f64>() / ts.seqs.len() as f64;
+        assert!(pa > p, "any-reuse must exceed top1 reuse");
+    }
+
+    #[test]
+    fn sequences_have_distinct_preferences() {
+        // Fig 10b: different sequences prefer different experts
+        let ts = generate(&small(), 2, 64);
+        let f0 = selection_frequency(&ts.seqs[0], 2);
+        let f1 = selection_frequency(&ts.seqs[1], 2);
+        let mut diff = 0.0;
+        for l in 0..4 {
+            for e in 0..8 {
+                diff += (f0[l][e] - f1[l][e]).abs();
+            }
+        }
+        assert!(diff > 0.3, "sequence preference distributions too similar: {diff}");
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let ts = generate(&small(), 1, 3);
+        let j = trace_to_json(&ts.seqs[0]);
+        let t2 = trace_from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+        assert_eq!(t2.n_tokens, 3);
+        assert_eq!(t2.events.len(), ts.seqs[0].events.len());
+        assert!((t2.event(1, 1).probs[0] - ts.seqs[0].event(1, 1).probs[0]).abs() < 1e-6);
+    }
+}

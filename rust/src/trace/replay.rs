@@ -1,0 +1,204 @@
+//! Cache-policy replay: drive a `CacheManager` with the access stream of a
+//! gating trace (no bytes, no clock) and report miss penalties. This is
+//! the engine behind Fig 11 (LFU vs LHU per-expert) and Fig 18 (policy
+//! comparison, model-level vs sequence-level).
+
+use crate::cache::{CacheManager, Policy, Pool};
+use crate::loader::scorer::{self, Class};
+use crate::ExpertKey;
+
+use super::TraceSet;
+
+#[derive(Debug, Clone)]
+pub struct ReplayConfig {
+    pub top_k: usize,
+    pub t1: f64,
+    pub t2: f64,
+    /// mixed-precision decisions on (HOBBIT) or everything-hi (baselines)
+    pub dynamic: bool,
+    pub hi_capacity: usize,
+    pub lo_capacity: usize,
+    /// miss-penalty ratio B_l/B_h
+    pub penalty_ratio: f64,
+    /// reset records at sequence boundaries (sequence-level policies)
+    pub seq_level: bool,
+}
+
+impl Default for ReplayConfig {
+    fn default() -> Self {
+        Self {
+            top_k: 2,
+            t1: 0.6,
+            t2: 0.9,
+            dynamic: true,
+            hi_capacity: 16,
+            lo_capacity: 24,
+            penalty_ratio: 0.25,
+            seq_level: true,
+        }
+    }
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct ReplayResult {
+    pub accesses: u64,
+    pub hits: u64,
+    pub misses_hi: u64,
+    pub misses_lo: u64,
+    pub penalty: f64,
+    /// per-(layer, expert) miss counts [hi, lo]
+    pub per_expert_misses: Vec<[u64; 2]>,
+    pub per_expert_hits: Vec<u64>,
+}
+
+impl ReplayResult {
+    pub fn hit_ratio(&self) -> f64 {
+        if self.accesses == 0 {
+            0.0
+        } else {
+            self.hits as f64 / self.accesses as f64
+        }
+    }
+}
+
+/// Replay `traces` under `policy`.
+pub fn replay(traces: &TraceSet, policy: Policy, cfg: &ReplayConfig) -> ReplayResult {
+    let first = traces.seqs.first().expect("empty trace set");
+    let (n_layers, n_experts) = (first.n_layers, first.n_experts);
+    let mut cache = CacheManager::new(
+        n_layers,
+        n_experts,
+        cfg.hi_capacity,
+        0,
+        cfg.lo_capacity,
+        0,
+        policy,
+        cfg.penalty_ratio,
+    );
+    let mut res = ReplayResult {
+        per_expert_misses: vec![[0, 0]; (n_layers * n_experts) as usize],
+        per_expert_hits: vec![0; (n_layers * n_experts) as usize],
+        ..Default::default()
+    };
+
+    for trace in &traces.seqs {
+        if cfg.seq_level {
+            cache.reset_sequence();
+        }
+        for t in 0..trace.n_tokens {
+            cache.records.note_token();
+            for l in 0..trace.n_layers {
+                let ev = trace.event(t, l);
+                let decisions =
+                    scorer::decide(&ev.probs, cfg.top_k, cfg.t1, cfg.t2, cfg.dynamic);
+                for d in decisions {
+                    if d.class == Class::Skip {
+                        continue;
+                    }
+                    let key = ExpertKey::new(l, d.expert);
+                    let idx = key.index(n_experts) as usize;
+                    let pool = match d.class {
+                        Class::Hi => Pool::Hi,
+                        _ => Pool::Lo,
+                    };
+                    res.accesses += 1;
+                    let mut hit = cache.access(key, pool);
+                    if !hit && pool == Pool::Lo && cache.hi.contains_ready(key) {
+                        // free upgrade from the hi pool
+                        hit = true;
+                        cache.stats.misses_lo -= 1;
+                        cache.stats.miss_penalty -= cfg.penalty_ratio;
+                    }
+                    if hit {
+                        res.hits += 1;
+                        res.per_expert_hits[idx] += 1;
+                    } else {
+                        match pool {
+                            Pool::Hi => {
+                                res.misses_hi += 1;
+                                res.penalty += 1.0;
+                                res.per_expert_misses[idx][0] += 1;
+                            }
+                            Pool::Lo => {
+                                res.misses_lo += 1;
+                                res.penalty += cfg.penalty_ratio;
+                                res.per_expert_misses[idx][1] += 1;
+                            }
+                        }
+                        if let Some(r) = cache.reserve(key, pool, l) {
+                            let _ = r;
+                            cache.commit(key, pool);
+                        }
+                    }
+                    cache.note_use(key, pool);
+                }
+            }
+        }
+    }
+    res
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::{generate, TraceGenConfig};
+
+    fn traces() -> TraceSet {
+        let cfg = TraceGenConfig { n_layers: 8, n_experts: 8, ..TraceGenConfig::mixtral_like() };
+        generate(&cfg, 4, 48)
+    }
+
+    #[test]
+    fn policies_beat_random_on_penalty() {
+        let ts = traces();
+        let cfg = ReplayConfig { hi_capacity: 24, lo_capacity: 24, ..Default::default() };
+        let rand = replay(&ts, Policy::Random { seed: 3 }, &cfg);
+        let lru = replay(&ts, Policy::Lru, &cfg);
+        let multi = replay(&ts, Policy::Multidim { w: [0.65, 0.05, 0.10, 0.20] }, &cfg);
+        assert!(lru.penalty < rand.penalty, "LRU {} !< random {}", lru.penalty, rand.penalty);
+        assert!(
+            multi.penalty <= lru.penalty * 1.02,
+            "multidim {} not competitive with LRU {}",
+            multi.penalty,
+            lru.penalty
+        );
+    }
+
+    #[test]
+    fn bigger_cache_fewer_misses() {
+        let ts = traces();
+        let small = replay(
+            &ts,
+            Policy::Lru,
+            &ReplayConfig { hi_capacity: 8, lo_capacity: 8, ..Default::default() },
+        );
+        let large = replay(
+            &ts,
+            Policy::Lru,
+            &ReplayConfig { hi_capacity: 48, lo_capacity: 48, ..Default::default() },
+        );
+        assert!(large.penalty < small.penalty);
+        assert!(large.hit_ratio() > small.hit_ratio());
+    }
+
+    #[test]
+    fn full_cache_no_misses_after_warmup() {
+        let ts = traces();
+        // capacity covers every (layer, expert): only cold misses remain
+        let r = replay(
+            &ts,
+            Policy::Lru,
+            &ReplayConfig { hi_capacity: 64, lo_capacity: 64, ..Default::default() },
+        );
+        assert!((r.misses_hi + r.misses_lo) <= 64 * ts.seqs.len() as u64);
+    }
+
+    #[test]
+    fn accounting_consistent() {
+        let ts = traces();
+        let r = replay(&ts, Policy::LfuSeq, &ReplayConfig::default());
+        assert_eq!(r.accesses, r.hits + r.misses_hi + r.misses_lo);
+        let per_expert: u64 = r.per_expert_misses.iter().map(|m| m[0] + m[1]).sum();
+        assert_eq!(per_expert, r.misses_hi + r.misses_lo);
+    }
+}

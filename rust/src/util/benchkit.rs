@@ -1,0 +1,110 @@
+//! Tiny benchmark harness (criterion is not in the offline vendor set).
+//! Used by `benches/*.rs` (harness = false) and by the figures binary.
+//! Warms up, then runs timed iterations until both a minimum iteration
+//! count and a minimum wall-time are reached; reports mean/p50/p99.
+
+use std::time::Instant;
+
+use super::stats::{summarize, Summary};
+
+pub struct BenchConfig {
+    pub warmup_iters: usize,
+    pub min_iters: usize,
+    pub max_iters: usize,
+    pub min_time_s: f64,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        Self { warmup_iters: 3, min_iters: 10, max_iters: 10_000, min_time_s: 0.5 }
+    }
+}
+
+/// One benchmark result line.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub summary: Summary,
+}
+
+impl BenchResult {
+    pub fn print(&self) {
+        let s = &self.summary;
+        println!(
+            "{:<48} {:>10} {:>10} {:>10} {:>6}",
+            self.name,
+            fmt_t(s.mean),
+            fmt_t(s.p50),
+            fmt_t(s.p99),
+            s.n
+        );
+    }
+}
+
+pub fn fmt_t(seconds: f64) -> String {
+    if seconds >= 1.0 {
+        format!("{:.3} s", seconds)
+    } else if seconds >= 1e-3 {
+        format!("{:.3} ms", seconds * 1e3)
+    } else if seconds >= 1e-6 {
+        format!("{:.3} µs", seconds * 1e6)
+    } else {
+        format!("{:.1} ns", seconds * 1e9)
+    }
+}
+
+pub fn header() {
+    println!(
+        "{:<48} {:>10} {:>10} {:>10} {:>6}",
+        "benchmark", "mean", "p50", "p99", "iters"
+    );
+    println!("{}", "-".repeat(88));
+}
+
+/// Time `f` under the default config and print a table row.
+pub fn bench<F: FnMut()>(name: &str, f: F) -> BenchResult {
+    bench_cfg(name, BenchConfig::default(), f)
+}
+
+pub fn bench_cfg<F: FnMut()>(name: &str, cfg: BenchConfig, mut f: F) -> BenchResult {
+    for _ in 0..cfg.warmup_iters {
+        f();
+    }
+    let mut samples = Vec::new();
+    let t0 = Instant::now();
+    while samples.len() < cfg.min_iters
+        || (t0.elapsed().as_secs_f64() < cfg.min_time_s && samples.len() < cfg.max_iters)
+    {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64());
+    }
+    let r = BenchResult { name: name.to_string(), summary: summarize(&samples) };
+    r.print();
+    r
+}
+
+/// Prevent the optimizer from discarding a value (std::hint::black_box
+/// wrapper kept here so benches don't depend on unstable features).
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_reports() {
+        let mut n = 0u64;
+        let r = bench_cfg(
+            "noop",
+            BenchConfig { warmup_iters: 1, min_iters: 5, max_iters: 5, min_time_s: 0.0 },
+            || {
+                n = black_box(n + 1);
+            },
+        );
+        assert_eq!(r.summary.n, 5);
+        assert!(n >= 6);
+    }
+}

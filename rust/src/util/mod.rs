@@ -1,0 +1,9 @@
+//! Offline substrates: the vendored crate set contains only the `xla`
+//! dependency closure (no rand / serde / criterion / proptest), so the
+//! small pieces of those we need are implemented here.
+
+pub mod benchkit;
+pub mod json;
+pub mod proptest_mini;
+pub mod rng;
+pub mod stats;

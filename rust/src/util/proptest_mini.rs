@@ -1,0 +1,98 @@
+//! Minimal property-testing harness (proptest is not in the offline vendor
+//! set). Runs a property over N seeded random cases; on failure it reports
+//! the failing seed so the case can be replayed deterministically with
+//! `check_seeded`.
+
+use super::rng::Rng;
+
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        // HOBBIT_PROPTEST_CASES can crank this up for soak runs
+        let cases = std::env::var("HOBBIT_PROPTEST_CASES")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(64);
+        Self { cases, seed: 0x4855_4242_4954 } // "HUBBIT"
+    }
+}
+
+/// Run `prop` over `cfg.cases` generated cases. `prop` receives a fresh RNG
+/// per case and returns `Err(reason)` to fail. Panics with the failing
+/// case's seed on failure.
+pub fn check<F>(name: &str, prop: F)
+where
+    F: Fn(&mut Rng) -> Result<(), String>,
+{
+    check_cfg(name, Config::default(), prop)
+}
+
+pub fn check_cfg<F>(name: &str, cfg: Config, prop: F)
+where
+    F: Fn(&mut Rng) -> Result<(), String>,
+{
+    for case in 0..cfg.cases {
+        let case_seed = cfg.seed.wrapping_add(case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut rng = Rng::new(case_seed);
+        if let Err(reason) = prop(&mut rng) {
+            panic!(
+                "property '{name}' failed on case {case} (replay seed {case_seed:#x}): {reason}"
+            );
+        }
+    }
+}
+
+/// Replay a single failing case.
+pub fn check_seeded<F>(name: &str, seed: u64, prop: F)
+where
+    F: Fn(&mut Rng) -> Result<(), String>,
+{
+    let mut rng = Rng::new(seed);
+    if let Err(reason) = prop(&mut rng) {
+        panic!("property '{name}' failed (seed {seed:#x}): {reason}");
+    }
+}
+
+/// Assert helper for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !$cond {
+            return Err(format!($($fmt)+));
+        }
+    };
+    ($cond:expr) => {
+        if !$cond {
+            return Err(format!("assertion failed: {}", stringify!($cond)));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        check("below is in range", |rng| {
+            let n = 1 + rng.below(100);
+            let x = rng.below(n);
+            prop_assert!(x < n, "{x} >= {n}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "replay seed")]
+    fn failing_property_reports_seed() {
+        check_cfg(
+            "always fails",
+            Config { cases: 1, seed: 1 },
+            |_rng| Err("nope".into()),
+        );
+    }
+}

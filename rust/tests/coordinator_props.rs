@@ -1,0 +1,183 @@
+//! Property-based tests (proptest_mini) on coordinator-side invariants:
+//! routing/scoring, cache bookkeeping under random access streams, and
+//! predictor pin/unpin balance.
+
+use hobbit::cache::{CacheManager, Policy, Pool};
+use hobbit::loader::scorer::{self, Class};
+use hobbit::predictor::Predictor;
+use hobbit::prop_assert;
+use hobbit::tensor::softmax;
+use hobbit::util::proptest_mini::check;
+use hobbit::util::rng::Rng;
+use hobbit::ExpertKey;
+
+fn random_probs(rng: &mut Rng, e: usize) -> Vec<f32> {
+    let logits: Vec<f32> = (0..e).map(|_| rng.normal() as f32 * 2.0).collect();
+    softmax(&logits)
+}
+
+#[test]
+fn prop_scorer_invariants() {
+    check("scorer invariants", |rng| {
+        let e = 2 + rng.below(62);
+        let k = 1 + rng.below(e.min(8));
+        let t1 = rng.f64();
+        let t2 = t1 + (1.0 - t1) * rng.f64();
+        let probs = random_probs(rng, e);
+        let d = scorer::decide(&probs, k, t1, t2, true);
+        prop_assert!(d.len() == k, "got {} decisions for top-{k}", d.len());
+        // first expert always high precision
+        prop_assert!(d[0].class == Class::Hi, "rank-0 must be Hi");
+        prop_assert!(d[0].score == 0.0);
+        // scores monotone, in [0, 1]
+        for w in d.windows(2) {
+            prop_assert!(w[0].score <= w[1].score + 1e-9);
+        }
+        for x in &d {
+            prop_assert!((0.0..=1.0 + 1e-6).contains(&x.score), "score {}", x.score);
+            // class consistent with thresholds
+            let want = if x.score == 0.0 || x.score <= t1 {
+                Class::Hi
+            } else if x.score <= t2 {
+                Class::Lo
+            } else {
+                Class::Skip
+            };
+            prop_assert!(x.class == want, "class mismatch at score {}", x.score);
+        }
+        // gate weights renormalized over top-k
+        let s: f32 = d.iter().map(|x| x.gate_weight).sum();
+        prop_assert!((s - 1.0).abs() < 1e-4, "gate weights sum {s}");
+        // distinct experts
+        let mut seen: Vec<u32> = d.iter().map(|x| x.expert).collect();
+        seen.sort_unstable();
+        seen.dedup();
+        prop_assert!(seen.len() == k, "duplicate experts selected");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_cache_capacity_and_consistency() {
+    check("cache capacity + bookkeeping", |rng| {
+        let layers = 1 + rng.below(8) as u32;
+        let experts = 1 + rng.below(16) as u32;
+        let hi_cap = 1 + rng.below(12);
+        let lo_cap = 1 + rng.below(12);
+        let policy = match rng.below(5) {
+            0 => Policy::Random { seed: rng.next_u64() },
+            1 => Policy::Lru,
+            2 => Policy::LfuSeq,
+            3 => Policy::Lhu,
+            _ => Policy::Multidim { w: [0.65, 0.05, 0.10, 0.20] },
+        };
+        let mut cache =
+            CacheManager::new(layers, experts, hi_cap, 0, lo_cap, 0, policy, 0.25);
+        let mut resident_hi = std::collections::HashSet::new();
+        let mut resident_lo = std::collections::HashSet::new();
+        for step in 0..200 {
+            if step % 7 == 0 {
+                cache.records.note_token();
+            }
+            let key = ExpertKey::new(
+                rng.below(layers as usize) as u32,
+                rng.below(experts as usize) as u32,
+            );
+            let pool = if rng.below(2) == 0 { Pool::Hi } else { Pool::Lo };
+            let hit = cache.access(key, pool);
+            let resident = match pool {
+                Pool::Hi => &mut resident_hi,
+                Pool::Lo => &mut resident_lo,
+            };
+            prop_assert!(
+                hit == resident.contains(&key),
+                "hit state diverged for {key:?} {pool:?} at step {step}"
+            );
+            if !hit {
+                if let Some(r) = cache.reserve(key, pool, key.layer) {
+                    if let Some(victim) = r.evicted {
+                        prop_assert!(resident.remove(&victim), "evicted non-resident {victim:?}");
+                    }
+                    cache.commit(key, pool);
+                    resident.insert(key);
+                }
+            }
+            cache.note_use(key, pool);
+            prop_assert!(cache.hi.len() <= hi_cap, "hi pool overflow");
+            prop_assert!(cache.lo.len() <= lo_cap, "lo pool overflow");
+        }
+        // stats identity
+        let st = &cache.stats;
+        prop_assert!(
+            st.hits_hi + st.hits_lo + st.misses_hi + st.misses_lo == 200,
+            "access count mismatch"
+        );
+        let expected = st.misses_hi as f64 + st.misses_lo as f64 * 0.25;
+        prop_assert!(
+            (st.miss_penalty - expected).abs() < 1e-9,
+            "penalty {} != {expected}",
+            st.miss_penalty
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_predictor_pins_balanced() {
+    check("predictor pin/unpin balance", |rng| {
+        let layers = 4 + rng.below(6) as u32;
+        let e = 4 + rng.below(12);
+        let mut cache = CacheManager::new(layers, e as u32, 16, 0, 16, 0, Policy::Lru, 0.25);
+        // pre-populate some experts
+        for _ in 0..10 {
+            let key = ExpertKey::new(
+                rng.below(layers as usize) as u32,
+                rng.below(e) as u32,
+            );
+            if cache.reserve(key, Pool::Hi, 0).is_some() {
+                cache.commit(key, Pool::Hi);
+            }
+        }
+        let depth = 1 + rng.below(3);
+        let mut pred = Predictor::new(depth, 2, 0.6, 0.9, true, layers);
+        // simulate several decode layer sweeps
+        for l in 0..layers.saturating_sub(1) {
+            let stacked: Vec<Vec<f32>> =
+                (0..=depth).map(|_| random_probs(rng, e)).collect();
+            let _ = pred.plan(&mut cache, l, layers, &stacked);
+            pred.observe(&mut cache, l, &stacked[0]);
+        }
+        // after observing every layer, no pins may survive the sweep for
+        // layers we observed
+        for l in 0..layers {
+            let probs = random_probs(rng, e);
+            pred.observe(&mut cache, l, &probs);
+        }
+        for l in 0..layers {
+            for ei in 0..e {
+                let key = ExpertKey::new(l, ei as u32);
+                prop_assert!(
+                    !cache.hi.pinned_contains(key) && !cache.lo.pinned_contains(key),
+                    "leaked pin on {key:?}"
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_topk_selection_stable() {
+    check("topk deterministic + ordered", |rng| {
+        let e = 2 + rng.below(30);
+        let probs = random_probs(rng, e);
+        let k = 1 + rng.below(e);
+        let a = hobbit::tensor::topk(&probs, k);
+        let b = hobbit::tensor::topk(&probs, k);
+        prop_assert!(a == b, "topk not deterministic");
+        for w in a.windows(2) {
+            prop_assert!(w[0].1 >= w[1].1, "topk not descending");
+        }
+        Ok(())
+    });
+}

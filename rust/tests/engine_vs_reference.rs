@@ -1,0 +1,140 @@
+//! THE cross-language end-to-end correctness test: the rust PJRT engine
+//! (L3 over AOT-compiled L2/L1 artifacts) must reproduce the pure-JAX
+//! oracle's logits on identical weights, token by token.
+//!
+//! Requires `make artifacts` (skips cleanly otherwise).
+
+use std::path::{Path, PathBuf};
+
+use hobbit::config::{HardwareConfig, PolicyConfig};
+use hobbit::engine::{Capture, Engine, EngineOptions};
+use hobbit::util::json::Json;
+
+fn artifacts_root() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn have_artifacts(model: &str) -> bool {
+    artifacts_root().join(model).join("manifest.json").exists()
+        && artifacts_root().join("weights").join(model).join("reference_logits.json").exists()
+}
+
+fn quality_hw() -> HardwareConfig {
+    HardwareConfig {
+        name: "test".into(),
+        load_bw: 64e9,
+        load_latency: 0.0,
+        hi_cache_experts: 256,
+        lo_cache_experts: 8,
+        cpu_assist: false,
+        cpu_expert_time: 0.0,
+    }
+}
+
+fn load_reference(model: &str) -> (Vec<u32>, Vec<Vec<f64>>) {
+    let path = artifacts_root().join("weights").join(model).join("reference_logits.json");
+    let j = Json::parse(&std::fs::read_to_string(path).unwrap()).unwrap();
+    let tokens: Vec<u32> = j
+        .get("tokens")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|t| t.as_usize().unwrap() as u32)
+        .collect();
+    let logits: Vec<Vec<f64>> = j
+        .get("logits")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|row| row.as_arr().unwrap().iter().map(|v| v.as_f64().unwrap()).collect())
+        .collect();
+    (tokens, logits)
+}
+
+fn check_model(model: &str) {
+    if !have_artifacts(model) {
+        eprintln!("skipping {model}: artifacts not built");
+        return;
+    }
+    let (tokens, ref_logits) = load_reference(model);
+    // pure high-precision config: logits must match the f32 oracle
+    let policy = PolicyConfig { dynamic_loading: false, ..PolicyConfig::default() };
+    let mut opts = EngineOptions::new(quality_hw(), policy);
+    opts.capture = Capture::none();
+    let mut eng = Engine::new(&artifacts_root(), model, opts).expect("engine");
+
+    let mut kv = eng.new_sequence();
+    let mut got = Vec::with_capacity(tokens.len());
+    got.push(eng.prefill(&mut kv, &tokens[..1]).unwrap());
+    for &t in &tokens[1..] {
+        got.push(eng.decode_step(&mut kv, t).unwrap());
+    }
+
+    let mut worst = 0.0f64;
+    for (pos, (g, r)) in got.iter().zip(&ref_logits).enumerate() {
+        assert_eq!(g.len(), r.len(), "vocab mismatch at {pos}");
+        // compare argmax and normalized error
+        let scale = r.iter().map(|v| v.abs()).fold(0.0f64, f64::max).max(1e-6);
+        for (i, (a, b)) in g.iter().zip(r).enumerate() {
+            let err = ((*a as f64) - b).abs() / scale;
+            worst = worst.max(err);
+            assert!(
+                err < 2e-3,
+                "{model} pos {pos} vocab {i}: engine {a} vs reference {b} (rel {err:.2e})"
+            );
+        }
+    }
+    eprintln!("{model}: {} positions, worst relative error {worst:.2e}", got.len());
+}
+
+#[test]
+fn mixtral_tiny_matches_reference() {
+    check_model("mixtral-tiny");
+}
+
+#[test]
+fn phi_tiny_matches_reference() {
+    check_model("phi-tiny");
+}
+
+/// Chunked prefill must agree with token-by-token decode (exercises the
+/// s16/s128 artifacts + padding path against the s1 path).
+#[test]
+fn chunked_prefill_matches_decode_path() {
+    let model = "mixtral-tiny";
+    if !have_artifacts(model) {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let (tokens, _) = load_reference(model);
+    let policy = PolicyConfig { dynamic_loading: false, ..PolicyConfig::default() };
+    let mk = || {
+        Engine::new(
+            &artifacts_root(),
+            model,
+            EngineOptions::new(quality_hw(), policy.clone()),
+        )
+        .unwrap()
+    };
+    // path A: prefill all tokens at once (chunks of 16 + 1s)
+    let mut ea = mk();
+    let mut kva = ea.new_sequence();
+    let la = ea.prefill(&mut kva, &tokens).unwrap();
+    // path B: prefill 1, then decode the rest
+    let mut eb = mk();
+    let mut kvb = eb.new_sequence();
+    let mut lb = eb.prefill(&mut kvb, &tokens[..1]).unwrap();
+    for &t in &tokens[1..] {
+        lb = eb.decode_step(&mut kvb, t).unwrap();
+    }
+    let scale = lb.iter().map(|v| v.abs()).fold(0.0f32, f32::max).max(1e-6);
+    for (i, (a, b)) in la.iter().zip(&lb).enumerate() {
+        assert!(
+            (a - b).abs() / scale < 2e-3,
+            "vocab {i}: chunked {a} vs stepwise {b}"
+        );
+    }
+    let _ = Path::new("");
+}

@@ -1,0 +1,172 @@
+//! Loader/scheduler-thread integration: on-demand priority, prefetch
+//! generations, waiting semantics, and the loader's interaction with the
+//! cache under churn. Uses the real expert store (skips if artifacts are
+//! not built) with an aggressive (fast) link so tests stay quick.
+
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+
+use hobbit::cache::{CacheManager, Policy, Pool};
+use hobbit::config::ModelConfig;
+use hobbit::loader::{ExpertLoader, TaskKind};
+use hobbit::memory::{LinkModel, ThrottledCopier};
+use hobbit::model::ExpertStore;
+use hobbit::runtime::Manifest;
+use hobbit::util::rng::Rng;
+use hobbit::{ExpertKey, Precision};
+
+struct Setup {
+    cfg: ModelConfig,
+    loader: ExpertLoader,
+    cache: Arc<Mutex<CacheManager>>,
+    copier: Arc<ThrottledCopier>,
+    store: Arc<ExpertStore>,
+}
+
+fn setup(hi_cap: usize, lo_cap: usize, bw: f64) -> Option<Setup> {
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let mdir = root.join("mixtral-tiny");
+    if !mdir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    let manifest =
+        Manifest::parse(&std::fs::read_to_string(mdir.join("manifest.json")).unwrap()).unwrap();
+    let cfg = ModelConfig::from_manifest(&manifest.model_json()).unwrap();
+    let store = Arc::new(ExpertStore::load(&root.join("weights/mixtral-tiny"), &cfg).unwrap());
+    let cache = Arc::new(Mutex::new(CacheManager::new(
+        cfg.n_layers,
+        cfg.n_experts,
+        hi_cap,
+        cfg.bytes_for(Precision::F32),
+        lo_cap,
+        cfg.bytes_for(Precision::Q8),
+        Policy::Lru,
+        0.25,
+    )));
+    let copier = Arc::new(ThrottledCopier::new(LinkModel { bytes_per_s: bw, latency_s: 0.0 }));
+    let loader = ExpertLoader::start(store.clone(), cache.clone(), copier.clone());
+    Some(Setup { cfg, loader, cache, copier, store })
+}
+
+#[test]
+fn ondemand_load_completes_and_data_matches_store() {
+    let Some(s) = setup(8, 8, 8e9) else { return };
+    let key = ExpertKey::new(2, 3);
+    let id = s
+        .loader
+        .submit(key, Precision::F32, Pool::Hi, TaskKind::OnDemand, 2)
+        .expect("task submitted");
+    s.loader.wait(&[id]);
+    let cache = s.cache.lock().unwrap();
+    assert!(cache.hi.contains_ready(key));
+    let buf = cache.hi.buffer(key).unwrap();
+    let got = buf.lock().unwrap();
+    assert_eq!(&got[..], s.store.record(key, Precision::F32));
+    assert_eq!(s.copier.transfers(), 1);
+}
+
+#[test]
+fn duplicate_submit_is_deduped() {
+    let Some(s) = setup(8, 8, 8e9) else { return };
+    let key = ExpertKey::new(0, 1);
+    let id = s.loader.submit(key, Precision::F32, Pool::Hi, TaskKind::OnDemand, 0).unwrap();
+    s.loader.wait(&[id]);
+    // resident now: second submit is a no-op
+    assert!(s.loader.submit(key, Precision::F32, Pool::Hi, TaskKind::OnDemand, 0).is_none());
+    assert_eq!(s.copier.transfers(), 1);
+}
+
+#[test]
+fn stale_prefetch_generation_dropped() {
+    let Some(s) = setup(8, 8, 2e8) else { return }; // slow link: queue builds
+    // saturate the link with one on-demand first so prefetches stay queued
+    let busy =
+        s.loader.submit(ExpertKey::new(0, 0), Precision::F32, Pool::Hi, TaskKind::OnDemand, 0);
+    let mut pf_ids = Vec::new();
+    for e in 1..5 {
+        if let Some(id) = s.loader.submit(
+            ExpertKey::new(1, e),
+            Precision::Q8,
+            Pool::Lo,
+            TaskKind::Prefetch,
+            0,
+        ) {
+            pf_ids.push((e, id));
+        }
+    }
+    // invalidate everything queued
+    s.loader.bump_prefetch_generation();
+    // waiting must still terminate (stale tasks are marked done, not lost)
+    let ids: Vec<u64> = pf_ids.iter().map(|(_, id)| *id).collect();
+    if let Some(b) = busy {
+        s.loader.wait(&[b]);
+    }
+    s.loader.wait(&ids);
+}
+
+#[test]
+fn concurrent_submits_from_many_keys_all_complete() {
+    let Some(s) = setup(16, 16, 8e9) else { return };
+    let mut rng = Rng::new(7);
+    let mut ids = Vec::new();
+    for _ in 0..40 {
+        let key = ExpertKey::new(
+            rng.below(s.cfg.n_layers as usize) as u32,
+            rng.below(s.cfg.n_experts as usize) as u32,
+        );
+        let (p, pool) = if rng.below(2) == 0 {
+            (Precision::F32, Pool::Hi)
+        } else {
+            (Precision::Q8, Pool::Lo)
+        };
+        if let Some(id) = s.loader.submit(key, p, pool, TaskKind::OnDemand, key.layer) {
+            ids.push(id);
+        }
+    }
+    s.loader.wait(&ids);
+    let cache = s.cache.lock().unwrap();
+    assert!(cache.hi.len() <= 16 && cache.lo.len() <= 16);
+    let st = s.loader.stats.lock().unwrap();
+    let loads: u64 = st.ondemand_loads.iter().sum();
+    assert_eq!(loads, s.copier.transfers());
+    assert!(st.bytes_loaded > 0);
+}
+
+#[test]
+fn eviction_under_pressure_keeps_capacity_bound() {
+    let Some(s) = setup(4, 2, 8e9) else { return };
+    let mut ids = Vec::new();
+    for l in 0..s.cfg.n_layers {
+        for e in 0..s.cfg.n_experts {
+            if let Some(id) = s.loader.submit(
+                ExpertKey::new(l, e),
+                Precision::F32,
+                Pool::Hi,
+                TaskKind::OnDemand,
+                l,
+            ) {
+                ids.push(id);
+            }
+        }
+    }
+    s.loader.wait(&ids);
+    let cache = s.cache.lock().unwrap();
+    assert!(cache.hi.len() <= 4, "hi pool overflow: {}", cache.hi.len());
+    assert!(cache.stats.evictions >= 60, "evictions {}", cache.stats.evictions);
+}
+
+#[test]
+fn loader_drop_joins_cleanly_with_pending_work() {
+    let Some(s) = setup(8, 8, 1e8) else { return }; // slow
+    for e in 0..6 {
+        let _ = s.loader.submit(
+            ExpertKey::new(3, e),
+            Precision::F32,
+            Pool::Hi,
+            TaskKind::Prefetch,
+            3,
+        );
+    }
+    drop(s.loader); // must not hang or panic
+}

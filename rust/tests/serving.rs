@@ -1,0 +1,88 @@
+//! Serving-path integration: coordinator FCFS semantics and the TCP
+//! front-end, on the real engine (skips without artifacts).
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use hobbit::config::{HardwareConfig, PolicyConfig};
+use hobbit::coordinator::{Coordinator, Request};
+use hobbit::engine::{Engine, EngineOptions};
+use hobbit::server::{client_request, Server};
+
+fn artifacts_root() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn fast_hw() -> HardwareConfig {
+    HardwareConfig {
+        name: "test-fast".into(),
+        load_bw: 16e9,
+        load_latency: 0.0,
+        hi_cache_experts: 24,
+        lo_cache_experts: 24,
+        cpu_assist: false,
+        cpu_expert_time: 0.0,
+    }
+}
+
+fn mk_coord() -> Option<Coordinator> {
+    if !artifacts_root().join("mixtral-tiny/manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    let opts = EngineOptions::new(fast_hw(), PolicyConfig::default());
+    let engine = Engine::new(&artifacts_root(), "mixtral-tiny", opts).unwrap();
+    Some(Coordinator::new(engine))
+}
+
+#[test]
+fn coordinator_fcfs_drain() {
+    let Some(mut coord) = mk_coord() else { return };
+    coord.submit(Request::new(1, "first request", 4));
+    coord.submit(Request::new(2, "second request", 4));
+    assert_eq!(coord.pending(), 2);
+    let results = coord.drain().unwrap();
+    assert_eq!(results.len(), 2);
+    assert_eq!(results[0].id, 1);
+    assert_eq!(results[1].id, 2);
+    for r in &results {
+        assert!(r.tokens.len() <= 4);
+        assert!(r.metrics.prefill_time > Duration::ZERO);
+    }
+    assert_eq!(coord.report.requests.len(), 2);
+    assert!(coord.report.mean_decode_tps() > 0.0);
+}
+
+#[test]
+fn generation_respects_budget_and_determinism() {
+    let Some(mut coord) = mk_coord() else { return };
+    // greedy decoding twice -> identical outputs
+    let a = coord.generate(&Request::new(1, "determinism probe", 6)).unwrap();
+    let b = coord.generate(&Request::new(2, "determinism probe", 6)).unwrap();
+    assert_eq!(a.tokens, b.tokens, "greedy decode must be deterministic");
+    assert!(a.tokens.len() <= 6);
+}
+
+#[test]
+fn tcp_server_gen_and_stats() {
+    let Some(mut coord) = mk_coord() else { return };
+    let mut server = Server::bind("127.0.0.1:0").unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+    let addr2 = addr.clone();
+    let client = std::thread::spawn(move || {
+        // no probe connection: the listener is bound before this thread
+        // starts, so connects queue in the accept backlog; a probe would
+        // consume one of the server's max_conns slots.
+        let r = client_request(&addr2, "GEN 4 0 hello world").unwrap();
+        assert!(r.get("error").is_none(), "{r:?}");
+        assert!(r.get("decode_tps").unwrap().as_f64().unwrap() > 0.0);
+        let bad = client_request(&addr2, "NOPE").unwrap();
+        assert!(bad.get("error").is_some());
+        let stats = client_request(&addr2, "STATS").unwrap();
+        assert!(stats.get("mean_decode_tps").is_some());
+    });
+    // 3 connections: GEN, NOPE, STATS (client_request opens one per call)
+    server.serve(&mut coord, Some(3)).unwrap();
+    client.join().unwrap();
+    assert_eq!(coord.report.requests.len(), 1);
+}

@@ -1,0 +1,120 @@
+//! Cross-language storage parity: the packed expert records written by
+//! python/compile/gen_weights.py must be byte-identical to what rust's
+//! quantizer produces from the f32 records, at every precision — the
+//! layout contract both sides implement (python/tests/test_weights.py
+//! checks the same from the python end).
+
+use std::path::PathBuf;
+
+use hobbit::config::ModelConfig;
+use hobbit::model::ExpertStore;
+use hobbit::quant;
+use hobbit::runtime::Manifest;
+use hobbit::{ExpertKey, Precision};
+
+fn artifacts_root() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn load(model: &str) -> Option<(ModelConfig, ExpertStore)> {
+    let mdir = artifacts_root().join(model);
+    let wdir = artifacts_root().join("weights").join(model);
+    if !mdir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    let manifest =
+        Manifest::parse(&std::fs::read_to_string(mdir.join("manifest.json")).unwrap()).unwrap();
+    let cfg = ModelConfig::from_manifest(&manifest.model_json()).unwrap();
+    let store = ExpertStore::load(&wdir, &cfg).unwrap();
+    Some((cfg, store))
+}
+
+fn f32_mats(cfg: &ModelConfig, rec: &[u8]) -> Vec<(usize, usize, Vec<f32>)> {
+    let (d, ff) = (cfg.d_model, cfg.d_ff);
+    let floats: Vec<f32> = rec
+        .chunks_exact(4)
+        .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+        .collect();
+    let n1 = d * ff;
+    vec![
+        (d, ff, floats[..n1].to_vec()),
+        (d, ff, floats[n1..2 * n1].to_vec()),
+        (ff, d, floats[2 * n1..].to_vec()),
+    ]
+}
+
+#[test]
+fn quantized_records_match_rust_quantizer() {
+    let Some((cfg, store)) = load("mixtral-tiny") else { return };
+    let g = cfg.quant_group;
+    for key in [ExpertKey::new(0, 0), ExpertKey::new(3, 5), ExpertKey::new(7, 7)] {
+        let f32_rec = store.record(key, Precision::F32);
+        let mats = f32_mats(&cfg, f32_rec);
+        for p in [Precision::Q8, Precision::Q4, Precision::Q2] {
+            let qrec = store.record(key, p);
+            let mut off = 0usize;
+            for (rows, cols, w) in &mats {
+                let (packed, scales) = quant::quantize(w, *rows, *cols, g, p);
+                assert_eq!(
+                    &qrec[off..off + packed.len()],
+                    &packed[..],
+                    "{key:?} {p:?}: packed bytes differ"
+                );
+                off += packed.len();
+                let scale_bytes: Vec<u8> =
+                    scales.iter().flat_map(|s| s.to_le_bytes()).collect();
+                assert_eq!(
+                    &qrec[off..off + scale_bytes.len()],
+                    &scale_bytes[..],
+                    "{key:?} {p:?}: scales differ"
+                );
+                off += scale_bytes.len();
+            }
+            assert_eq!(off, qrec.len(), "{p:?} record fully consumed");
+        }
+    }
+}
+
+#[test]
+fn record_sizes_match_manifest() {
+    let Some((cfg, store)) = load("mixtral-tiny") else { return };
+    for p in Precision::ALL {
+        assert_eq!(store.record_bytes(p), cfg.bytes_for(p), "{p:?}");
+    }
+}
+
+#[test]
+fn dequantized_records_approximate_f32() {
+    let Some((cfg, store)) = load("mixtral-tiny") else { return };
+    let g = cfg.quant_group;
+    let key = ExpertKey::new(1, 2);
+    let mats = f32_mats(&cfg, store.record(key, Precision::F32));
+    let mut prev_err = 0.0f64;
+    for p in [Precision::Q8, Precision::Q4, Precision::Q2] {
+        let qrec = store.record(key, p);
+        let mut off = 0usize;
+        let mut total_err = 0.0f64;
+        let mut count = 0usize;
+        for (rows, cols, w) in &mats {
+            let nb = quant::packed_bytes(*rows, *cols, p);
+            let packed = &qrec[off..off + nb];
+            off += nb;
+            let ns = quant::scale_count(*rows, *cols, g);
+            let scales: Vec<f32> = qrec[off..off + ns * 4]
+                .chunks_exact(4)
+                .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+                .collect();
+            off += ns * 4;
+            let wd = quant::dequantize(packed, &scales, *rows, *cols, g, p);
+            for (a, b) in wd.iter().zip(w) {
+                total_err += ((a - b).abs()) as f64;
+                count += 1;
+            }
+        }
+        let mean = total_err / count as f64;
+        assert!(mean > prev_err, "{p:?} must be coarser than the previous format");
+        assert!(mean < 0.05, "{p:?} mean err {mean} too large for 0.06-scale weights");
+        prev_err = mean;
+    }
+}
