@@ -187,13 +187,24 @@ pub struct Reservation {
 }
 
 /// The Multidimensional Cache Manager (Fig 12).
+///
+/// Sequence records come in two flavours: `records` is the *merged* view
+/// over every live sequence (the policy input — the pools are shared, so
+/// eviction must see all live traffic), and `seq_records` tracks each live
+/// sequence separately so that retiring one sequence removes exactly its
+/// own LFU/LHU contributions instead of wiping every other sequence's
+/// signals (the batch-1 `reset_sequence` behaviour, which corrupts
+/// concurrent sequences).
 pub struct CacheManager {
     pub hi: CachePool,
     pub lo: CachePool,
     pub records: Records,
+    /// per-live-sequence records, keyed by scheduler sequence id
+    seq_records: HashMap<u64, Records>,
     pub policy: Policy,
     pub stats: CacheStats,
     n_layers: u32,
+    experts_per_layer: u32,
     /// miss-penalty ratio B_l/B_h of the active precision pair
     penalty_ratio: f64,
 }
@@ -213,9 +224,11 @@ impl CacheManager {
             hi: CachePool::new(hi_capacity, hi_slot_bytes),
             lo: CachePool::new(lo_capacity, lo_slot_bytes),
             records: Records::new(n_layers, experts_per_layer),
+            seq_records: HashMap::new(),
             policy,
             stats: CacheStats::default(),
             n_layers,
+            experts_per_layer,
             penalty_ratio,
         }
     }
@@ -261,7 +274,66 @@ impl CacheManager {
 
     /// Record a use (hit path or after load completes).
     pub fn note_use(&mut self, key: ExpertKey, pool: Pool) {
+        self.note_use_for(key, pool, None);
+    }
+
+    /// Record a use attributed to a live sequence (interleaved serving).
+    /// `None` updates only the merged view (the batch-1 path).
+    pub fn note_use_for(&mut self, key: ExpertKey, pool: Pool, seq: Option<u64>) {
         self.records.note_use(key, pool == Pool::Hi);
+        if let Some(s) = seq {
+            if let Some(r) = self.seq_records.get_mut(&s) {
+                r.note_use(key, pool == Pool::Hi);
+            }
+        }
+    }
+
+    /// Advance the token tick, attributed to a live sequence. The merged
+    /// tick advances on every call — recency is global when the pools are
+    /// shared — while the per-sequence tick advances only for `seq`.
+    pub fn note_token_for(&mut self, seq: Option<u64>) {
+        self.records.note_token();
+        if let Some(s) = seq {
+            if let Some(r) = self.seq_records.get_mut(&s) {
+                r.note_token();
+            }
+        }
+    }
+
+    /// Register a new live sequence (interleaved serving). Unlike
+    /// [`Self::reset_sequence`] this does NOT touch other sequences'
+    /// records — starting sequence B must not erase sequence A's LRU/LFU/
+    /// LHU signals while A is still decoding.
+    pub fn begin_sequence_id(&mut self, seq: u64) {
+        self.seq_records
+            .insert(seq, Records::new(self.n_layers, self.experts_per_layer));
+    }
+
+    /// Retire a live sequence: subtract exactly its LFU/LHU contributions
+    /// from the merged view (model-level frequency is never reset, recency
+    /// is global). When the last live sequence retires, the merged records
+    /// reset fully — equivalent to the paper's per-sequence reset.
+    pub fn end_sequence_id(&mut self, seq: u64) {
+        if let Some(r) = self.seq_records.remove(&seq) {
+            for i in 0..r.freq.len() {
+                self.records.freq[i] = self.records.freq[i].saturating_sub(r.freq[i]);
+                self.records.hi_freq[i] =
+                    self.records.hi_freq[i].saturating_sub(r.hi_freq[i]);
+            }
+        }
+        if self.seq_records.is_empty() {
+            self.records.reset_sequence();
+        }
+    }
+
+    /// Number of live (registered) sequences.
+    pub fn live_sequences(&self) -> usize {
+        self.seq_records.len()
+    }
+
+    /// Per-sequence records of a live sequence, if registered.
+    pub fn sequence_records(&self, seq: u64) -> Option<&Records> {
+        self.seq_records.get(&seq)
     }
 
     /// Reserve a slot for `key` in `pool`, evicting the lowest-priority
@@ -314,25 +386,28 @@ impl CacheManager {
     fn choose_victim(&self, pool: Pool, current_layer: u32) -> Option<ExpertKey> {
         let p = self.pool(pool);
         let mut best: Option<(f64, ExpertKey)> = None;
-        let mut pinned_best: Option<(f64, ExpertKey)> = None;
         for key in p.ready_keys() {
-            let prio = self.policy.priority(&self.records, key, current_layer, self.n_layers);
-            let slot_entry = (prio, key);
+            // pinned entries are eviction-proof: a pin marks an expert the
+            // predictor promised (or the engine is reading) — evicting it
+            // would silently invalidate the promise. With every slot
+            // pinned, `reserve` returns None and callers bypass the cache.
             if p.pinned.contains_key(&key) {
-                if pinned_best.map(|(b, _)| prio < b).unwrap_or(true) {
-                    pinned_best = Some(slot_entry);
-                }
-            } else if best.map(|(b, _)| prio < b).unwrap_or(true) {
-                best = Some(slot_entry);
+                continue;
+            }
+            let prio = self.policy.priority(&self.records, key, current_layer, self.n_layers);
+            if best.map(|(b, _)| prio < b).unwrap_or(true) {
+                best = Some((prio, key));
             }
         }
-        // prefer unpinned victims; fall back to pinned only if unavoidable
-        best.or(pinned_best).map(|(_, k)| k)
+        best.map(|(_, k)| k)
     }
 
-    /// New sequence: reset seq-level records (§3.4).
+    /// New sequence: reset seq-level records (§3.4, the batch-1 path).
+    /// Also drops any registered live-sequence records — callers mixing the
+    /// two APIs get a clean slate.
     pub fn reset_sequence(&mut self) {
         self.records.reset_sequence();
+        self.seq_records.clear();
     }
 
     pub fn penalty_ratio(&self) -> f64 {
@@ -434,5 +509,71 @@ mod tests {
         let mut m = mgr(2, 0);
         assert!(m.reserve(k(0, 0), Pool::Hi, 0).is_some());
         assert!(m.reserve(k(0, 0), Pool::Hi, 0).is_none());
+    }
+
+    #[test]
+    fn reserve_returns_none_when_every_slot_pinned() {
+        // regression: choose_victim used to fall back to evicting pinned
+        // experts, silently invalidating predictor pins
+        let mut m = mgr(2, 0);
+        for e in 0..2 {
+            m.reserve(k(0, e), Pool::Hi, 0).unwrap();
+            m.commit(k(0, e), Pool::Hi);
+            m.hi.pin(k(0, e));
+        }
+        assert!(m.reserve(k(0, 2), Pool::Hi, 0).is_none(), "pinned slot evicted");
+        assert!(m.hi.contains_ready(k(0, 0)) && m.hi.contains_ready(k(0, 1)));
+        // releasing one pin makes that slot the only legal victim again
+        m.hi.unpin(k(0, 0));
+        let r = m.reserve(k(0, 2), Pool::Hi, 0).unwrap();
+        assert_eq!(r.evicted, Some(k(0, 0)));
+    }
+
+    #[test]
+    fn live_sequences_do_not_clobber_each_other() {
+        // regression: with two live sequences, starting (or resetting for)
+        // sequence B used to wipe sequence A's LRU/LFU/LHU records
+        let mut m = mgr(4, 4);
+        m.begin_sequence_id(1);
+        m.note_token_for(Some(1));
+        m.note_use_for(k(0, 0), Pool::Hi, Some(1));
+        m.begin_sequence_id(2);
+        m.note_token_for(Some(2));
+        m.note_use_for(k(0, 1), Pool::Hi, Some(2));
+        assert_eq!(m.live_sequences(), 2);
+        // A's merged signals survive B's arrival and traffic
+        let ia = m.records.idx(k(0, 0));
+        let ib = m.records.idx(k(0, 1));
+        assert_eq!(m.records.freq[ia], 1);
+        assert_eq!(m.records.hi_freq[ia], 1);
+        assert_eq!(m.records.freq[ib], 1);
+        // per-sequence views are isolated
+        assert_eq!(m.sequence_records(1).unwrap().freq[ia], 1);
+        assert_eq!(m.sequence_records(1).unwrap().freq[ib], 0);
+        assert_eq!(m.sequence_records(2).unwrap().freq[ib], 1);
+        // retiring A subtracts exactly A's contributions
+        m.end_sequence_id(1);
+        assert_eq!(m.records.freq[ia], 0);
+        assert_eq!(m.records.freq[ib], 1);
+        // model-level frequency is never reset (Fig 18b)
+        assert_eq!(m.records.model_freq[ia], 1);
+        // last live sequence retiring resets the merged view entirely
+        m.end_sequence_id(2);
+        assert_eq!(m.records.freq[ib], 0);
+        assert_eq!(m.records.token, 0);
+        assert_eq!(m.records.model_freq[ib], 1);
+    }
+
+    #[test]
+    fn merged_tick_is_global_per_sequence_tick_is_local() {
+        let mut m = mgr(2, 2);
+        m.begin_sequence_id(7);
+        m.begin_sequence_id(8);
+        m.note_token_for(Some(7));
+        m.note_token_for(Some(7));
+        m.note_token_for(Some(8));
+        assert_eq!(m.records.token, 3);
+        assert_eq!(m.sequence_records(7).unwrap().token, 2);
+        assert_eq!(m.sequence_records(8).unwrap().token, 1);
     }
 }

@@ -67,6 +67,8 @@ COMMANDS:
   serve       start the TCP serving front-end
               --addr 127.0.0.1:7077  --model mixtral-tiny  --artifacts artifacts
               --hardware rtx4090|orin|rtx4090+cpu  --max-conns N
+              --interleaved (continuous serving: overlap one sequence's
+              expert loads with other sequences' decode)  --max-active N
   generate    run one generation from the CLI
               --model M --artifacts DIR --prompt TEXT --max-new N --temp T
               --hardware H --no-dynamic --no-prefetch --policy P

@@ -1,16 +1,31 @@
 //! The serving coordinator: request queue, sequence lifecycle, generation
-//! loop, metrics. Follows the paper's evaluation protocol — batch size 1,
-//! FCFS, prefill latency + decode tokens/s as the headline metrics (§5.1
-//! "edge-side continuous serving scenarios often focus on single-batch
-//! inference").
+//! loop, metrics.
+//!
+//! Two scheduler modes:
+//!
+//! * [`SchedulerMode::Fcfs`] — the paper's evaluation protocol: batch
+//!   size 1, FCFS, prefill latency + decode tokens/s as the headline
+//!   metrics (§5.1 "edge-side continuous serving scenarios often focus on
+//!   single-batch inference"). Every expert wait blocks in
+//!   `ExpertLoader::wait`; the report JSON is byte-identical to the
+//!   pre-scheduler format, so `figures/` and `baselines/` are unaffected.
+//! * [`SchedulerMode::Interleaved`] — continuous serving: a set of live
+//!   sequences (each with its own `KvState` and per-sequence cache
+//!   records) is decoded round-robin, and expert waits are *non-blocking*:
+//!   when sequence A's on-demand load is in flight, the scheduler advances
+//!   sequence B's decode instead of sleeping — the same latency-hiding the
+//!   paper's prefetcher performs within one sequence (§3.3), applied
+//!   across sequences. The scheduler blocks only when every live sequence
+//!   is stalled on the link at once; that residue is the *unhidden* stall
+//!   reported by the overlap-ratio metric.
 
 use std::collections::VecDeque;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use crate::engine::{Engine, KvState};
-use crate::metrics::{RequestMetrics, RunReport};
+use crate::engine::{DecodeCursor, DecodeProgress, Engine, KvState};
+use crate::metrics::{RequestMetrics, RunReport, SchedulerStats};
 use crate::tensor::sample_logits;
 use crate::tokenizer::{Tokenizer, EOS};
 use crate::util::rng::Rng;
@@ -40,13 +55,70 @@ pub struct GenerationResult {
     pub metrics: RequestMetrics,
 }
 
-/// FCFS coordinator over one engine.
+/// How queued requests are scheduled onto the engine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedulerMode {
+    /// paper-faithful batch-1 blocking FCFS (the default)
+    Fcfs,
+    /// interleaved continuous serving: round-robin decode across live
+    /// sequences, suspending at expert-load barriers instead of blocking
+    Interleaved,
+}
+
+struct QueuedRequest {
+    req: Request,
+    enqueued: Instant,
+}
+
+/// One live sequence in the interleaved scheduler.
+struct ActiveSeq {
+    req: Request,
+    /// engine/cache sequence id (per-sequence records)
+    seq: u64,
+    kv: KvState,
+    /// logits of the last completed step (next sample input)
+    logits: Vec<f32>,
+    generated: Vec<u32>,
+    /// in-flight decode token, if suspended or mid-poll
+    cursor: Option<DecodeCursor>,
+    /// per-sequence sampling stream: interleaving order must not change
+    /// any sequence's samples
+    rng: Rng,
+    // ---- metrics ----
+    enqueued: Instant,
+    queue_wait: Duration,
+    prompt_tokens: usize,
+    prefill_time: Duration,
+    prefill_load_wait: Duration,
+    /// decode stall (barrier reach → clear), hidden or not
+    load_wait: Duration,
+    /// PJRT time attributed to this sequence
+    compute: Duration,
+    decode_started: Instant,
+    ttft: Option<Duration>,
+}
+
+enum Advance {
+    Progressed,
+    Stalled,
+    Finished(GenerationResult),
+}
+
+/// Coordinator over one engine; see [`SchedulerMode`] for the two
+/// scheduling disciplines.
 pub struct Coordinator {
     pub engine: Engine,
     pub tokenizer: Tokenizer,
     pub report: RunReport,
-    queue: VecDeque<Request>,
+    pub mode: SchedulerMode,
+    /// max sequences decoded concurrently in interleaved mode
+    pub max_active: usize,
+    queue: VecDeque<QueuedRequest>,
+    active: Vec<ActiveSeq>,
+    sched: SchedulerStats,
+    busy_since: Option<Instant>,
     rng: Rng,
+    next_seq: u64,
 }
 
 impl Coordinator {
@@ -55,29 +127,60 @@ impl Coordinator {
             engine,
             tokenizer: Tokenizer::new(),
             report: RunReport::default(),
+            mode: SchedulerMode::Fcfs,
+            max_active: 4,
             queue: VecDeque::new(),
+            active: Vec::new(),
+            sched: SchedulerStats::default(),
+            busy_since: None,
             rng: Rng::new(0xC0FFEE),
+            next_seq: 1,
         }
     }
 
+    /// Convenience constructor for interleaved continuous serving.
+    pub fn interleaved(engine: Engine) -> Self {
+        let mut c = Self::new(engine);
+        c.mode = SchedulerMode::Interleaved;
+        c
+    }
+
     pub fn submit(&mut self, req: Request) {
-        self.queue.push_back(req);
+        self.queue.push_back(QueuedRequest { req, enqueued: Instant::now() });
     }
 
     pub fn pending(&self) -> usize {
         self.queue.len()
     }
 
-    /// Serve every queued request FCFS; returns the results in order.
-    pub fn drain(&mut self) -> Result<Vec<GenerationResult>> {
-        let mut out = Vec::with_capacity(self.queue.len());
-        while let Some(req) = self.queue.pop_front() {
-            out.push(self.generate(&req)?);
-        }
-        Ok(out)
+    /// Queued or live work remains.
+    pub fn has_work(&self) -> bool {
+        !self.queue.is_empty() || !self.active.is_empty()
     }
 
-    /// Run one request through prefill + decode.
+    /// Serve every queued request; returns the results. FCFS mode returns
+    /// them in submission order; interleaved mode in completion order.
+    pub fn drain(&mut self) -> Result<Vec<GenerationResult>> {
+        match self.mode {
+            SchedulerMode::Fcfs => {
+                let mut out = Vec::with_capacity(self.queue.len());
+                while let Some(q) = self.queue.pop_front() {
+                    out.push(self.generate(&q.req)?);
+                }
+                Ok(out)
+            }
+            SchedulerMode::Interleaved => {
+                let mut out = Vec::new();
+                while self.has_work() {
+                    out.extend(self.step()?);
+                }
+                self.sync_report();
+                Ok(out)
+            }
+        }
+    }
+
+    /// Run one request through prefill + decode (blocking batch-1 path).
     pub fn generate(&mut self, req: &Request) -> Result<GenerationResult> {
         let mut prompt_tokens = self.tokenizer.encode(&req.prompt);
         let budget = self.engine.cfg.max_seq.saturating_sub(req.max_new_tokens + 1);
@@ -127,12 +230,267 @@ impl Coordinator {
         })
     }
 
-    /// Pull loader/cache stats into the report.
+    // ------------------------------------------------------------------
+    // Interleaved scheduler
+    // ------------------------------------------------------------------
+
+    /// One scheduler round: admit waiting requests, advance every live
+    /// sequence one unit (a decode-poll or a new-token start), and return
+    /// any completions. Blocks only when every live sequence is stalled on
+    /// the link at once (the unhidden stall).
+    pub fn step(&mut self) -> Result<Vec<GenerationResult>> {
+        self.step_inner(true)
+    }
+
+    /// Like [`Self::step`] but never blocks — the serving front-end uses
+    /// this and parks on its own event channel instead (woken by loader
+    /// completion callbacks).
+    pub fn step_nonblocking(&mut self) -> Result<Vec<GenerationResult>> {
+        self.step_inner(false)
+    }
+
+    fn step_inner(&mut self, may_block: bool) -> Result<Vec<GenerationResult>> {
+        if self.busy_since.is_none() && self.has_work() {
+            self.busy_since = Some(Instant::now());
+        }
+        self.admit_waiting()?;
+        let mut out = Vec::new();
+        let mut progressed = false;
+        let mut i = 0;
+        while i < self.active.len() {
+            match self.advance_one(i)? {
+                // finish() removed the sequence at i: do not advance i
+                Advance::Finished(r) => {
+                    out.push(r);
+                    progressed = true;
+                }
+                Advance::Progressed => {
+                    progressed = true;
+                    i += 1;
+                }
+                Advance::Stalled => {
+                    i += 1;
+                }
+            }
+        }
+        if !progressed && may_block {
+            if let Some(idx) = self.first_stalled() {
+                // every live sequence waits on the link: nothing left to
+                // overlap, so block — the unhidden share of the load wait
+                let t0 = Instant::now();
+                let seq = &mut self.active[idx];
+                self.engine.set_active_sequence(Some(seq.seq));
+                self.engine.decode_block(seq.cursor.as_mut().unwrap());
+                self.sched.unhidden_stall += t0.elapsed();
+            }
+        }
+        if !self.has_work() {
+            if let Some(t) = self.busy_since.take() {
+                self.sched.busy_wall += t.elapsed();
+            }
+        }
+        Ok(out)
+    }
+
+    /// True when every live sequence is suspended on in-flight loads (and
+    /// there is at least one).
+    pub fn all_stalled(&self) -> bool {
+        !self.active.is_empty()
+            && self.active.iter().all(|s| {
+                s.cursor.as_ref().map(|c| c.is_pending()).unwrap_or(false)
+            })
+    }
+
+    /// Loader task ids every live sequence is suspended on (for the
+    /// serving front-end's completion-callback wakeups).
+    pub fn pending_load_ids(&self) -> Vec<u64> {
+        self.active
+            .iter()
+            .filter_map(|s| s.cursor.as_ref())
+            .flat_map(|c| c.pending_ids().iter().copied())
+            .collect()
+    }
+
+    /// Attribute externally-measured blocked time (the serving front-end
+    /// parking while all sequences stall) to the unhidden-stall metric.
+    pub fn note_unhidden_wait(&mut self, d: Duration) {
+        self.sched.unhidden_stall += d;
+    }
+
+    pub fn scheduler_stats(&self) -> &SchedulerStats {
+        &self.sched
+    }
+
+    /// Abort every live and queued request (after an engine error leaves
+    /// the scheduler state suspect): releases each live sequence's cache
+    /// records and returns the request ids so the serving front-end can
+    /// fail them individually instead of tearing the server down.
+    pub fn abort_all(&mut self) -> Vec<u64> {
+        let mut ids = Vec::with_capacity(self.active.len() + self.queue.len());
+        for mut seq in self.active.drain(..) {
+            if let Some(cur) = seq.cursor.take() {
+                self.engine.decode_abort(cur);
+            }
+            self.engine.end_sequence(seq.seq);
+            ids.push(seq.req.id);
+        }
+        for q in self.queue.drain(..) {
+            ids.push(q.req.id);
+        }
+        self.engine.set_active_sequence(None);
+        if let Some(t) = self.busy_since.take() {
+            self.sched.busy_wall += t.elapsed();
+        }
+        ids
+    }
+
+    fn first_stalled(&self) -> Option<usize> {
+        (0..self.active.len()).find(|&j| {
+            self.active[j].cursor.as_ref().map(|c| c.is_pending()).unwrap_or(false)
+        })
+    }
+
+    /// Move queued requests into the live set (up to `max_active`),
+    /// running their prefill. Prefill is chunked compute-heavy work and
+    /// stays blocking; only decode interleaves (ROADMAP: chunked-prefill
+    /// interleaving).
+    fn admit_waiting(&mut self) -> Result<()> {
+        while self.active.len() < self.max_active.max(1) && !self.queue.is_empty() {
+            let q = self.queue.pop_front().unwrap();
+            let queue_wait = q.enqueued.elapsed();
+            let mut prompt_tokens = self.tokenizer.encode(&q.req.prompt);
+            let budget =
+                self.engine.cfg.max_seq.saturating_sub(q.req.max_new_tokens + 1);
+            if prompt_tokens.len() > budget {
+                prompt_tokens.truncate(budget.max(1));
+            }
+            let seq_id = self.next_seq;
+            self.next_seq += 1;
+            let mut kv = self.engine.begin_sequence(seq_id);
+            self.engine.set_active_sequence(Some(seq_id));
+            let compute0 = self.engine.compute_time();
+            let wait0 = self.engine.load_wait;
+            let t0 = Instant::now();
+            let logits = match self.engine.prefill(&mut kv, &prompt_tokens) {
+                Ok(l) => l,
+                Err(e) => {
+                    self.engine.end_sequence(seq_id);
+                    return Err(e);
+                }
+            };
+            let prefill_time = t0.elapsed();
+            self.active.push(ActiveSeq {
+                seq: seq_id,
+                kv,
+                logits,
+                generated: Vec::with_capacity(q.req.max_new_tokens),
+                cursor: None,
+                // per-sequence stream: deterministic for a given request id
+                rng: Rng::new(0xC0FFEE ^ q.req.id),
+                enqueued: q.enqueued,
+                queue_wait,
+                prompt_tokens: prompt_tokens.len(),
+                prefill_time,
+                prefill_load_wait: self.engine.load_wait.saturating_sub(wait0),
+                load_wait: Duration::ZERO,
+                compute: self.engine.compute_time().saturating_sub(compute0),
+                decode_started: Instant::now(),
+                ttft: None,
+                req: q.req,
+            });
+        }
+        Ok(())
+    }
+
+    /// Advance sequence `i` one unit: start its next token if it is
+    /// between tokens, then poll its cursor once. Removal on completion
+    /// happens inside (via `finish`).
+    fn advance_one(&mut self, i: usize) -> Result<Advance> {
+        if self.active[i].cursor.is_none() {
+            let done = {
+                let seq = &self.active[i];
+                seq.generated.len() >= seq.req.max_new_tokens || seq.kv.remaining() == 0
+            };
+            if done {
+                return Ok(Advance::Finished(self.finish(i)));
+            }
+            let next = {
+                let seq = &mut self.active[i];
+                sample_logits(&seq.logits, seq.req.temperature, &mut seq.rng) as u32
+            };
+            if next == EOS {
+                return Ok(Advance::Finished(self.finish(i)));
+            }
+            self.active[i].generated.push(next);
+            self.engine.set_active_sequence(Some(self.active[i].seq));
+            let cursor = self.engine.decode_begin(&self.active[i].kv, next)?;
+            self.active[i].cursor = Some(cursor);
+        }
+
+        let seq_id = self.active[i].seq;
+        let mut cursor = self.active[i].cursor.take().unwrap();
+        self.engine.set_active_sequence(Some(seq_id));
+        let compute0 = self.engine.compute_time();
+        let progress = {
+            let seq = &mut self.active[i];
+            self.engine.decode_poll(&mut seq.kv, &mut cursor)
+        };
+        let dt = self.engine.compute_time().saturating_sub(compute0);
+        self.active[i].compute += dt;
+        match progress? {
+            DecodeProgress::Pending => {
+                self.active[i].cursor = Some(cursor);
+                Ok(Advance::Stalled)
+            }
+            DecodeProgress::Done(logits) => {
+                let seq = &mut self.active[i];
+                seq.load_wait += cursor.load_wait;
+                seq.logits = logits;
+                if seq.ttft.is_none() {
+                    seq.ttft = Some(seq.enqueued.elapsed());
+                }
+                Ok(Advance::Progressed)
+            }
+        }
+    }
+
+    /// Retire sequence `i`: build its result, fold its metrics into the
+    /// report and scheduler aggregates, release its cache records.
+    fn finish(&mut self, i: usize) -> GenerationResult {
+        let seq = self.active.remove(i);
+        self.engine.end_sequence(seq.seq);
+        let metrics = RequestMetrics {
+            prompt_tokens: seq.prompt_tokens,
+            generated_tokens: seq.generated.len(),
+            prefill_time: seq.prefill_time,
+            // wall latency of the decode phase, interleaving included
+            decode_time: seq.decode_started.elapsed(),
+            compute_time: seq.compute,
+            load_wait_time: seq.prefill_load_wait + seq.load_wait,
+        };
+        self.report.requests.push(metrics.clone());
+        self.sched.completed += 1;
+        self.sched.decoded_tokens += seq.generated.len() as u64;
+        self.sched.queue_wait += seq.queue_wait;
+        self.sched.ttft += seq.ttft.unwrap_or_else(|| seq.enqueued.elapsed());
+        self.sched.total_stall += seq.load_wait;
+        GenerationResult {
+            id: seq.req.id,
+            text: self.tokenizer.decode(&seq.generated),
+            tokens: seq.generated,
+            metrics,
+        }
+    }
+
+    /// Pull loader/cache stats into the report. The loader stats are the
+    /// single source of truth for prefetch accounting — the engine pushes
+    /// realized tracker hits into them as it observes each layer, so
+    /// nothing is recomputed (or clobbered) here.
     pub fn sync_report(&mut self) {
         self.report.loader = self.engine.loader.stats.lock().unwrap().clone();
         self.report.cache = self.engine.cache.lock().unwrap().stats.clone();
-        let (h, t) = self.engine.predictor.tracker.per_offset[0];
-        self.report.loader.prefetch_hits = h;
-        self.report.loader.prefetch_total = self.report.loader.prefetch_total.max(t);
+        if self.mode == SchedulerMode::Interleaved {
+            self.report.scheduler = Some(self.sched.clone());
+        }
     }
 }

@@ -11,6 +11,17 @@
 //! The engine is single-threaded on the compute side; the loader's
 //! scheduler thread moves expert bytes concurrently with compute, which is
 //! exactly the overlap the paper's prefetching exploits.
+//!
+//! Decode comes in two shapes. [`Engine::decode_step`] is the blocking
+//! batch-1 step the paper evaluates. Underneath it, each token runs as a
+//! small per-layer state machine — a [`DecodeCursor`] — that can *suspend*
+//! at the ensure-resident barrier instead of sleeping in
+//! `ExpertLoader::wait`: [`Engine::decode_begin`] embeds the token,
+//! [`Engine::decode_poll`] advances layer-by-layer until either the token's
+//! logits are ready or an on-demand expert transfer is still in flight
+//! (`DecodeProgress::Pending`). The interleaved scheduler
+//! (`coordinator::SchedulerMode::Interleaved`) exploits this to advance
+//! another sequence's decode while this one's expert bytes are on the link.
 
 mod capture;
 mod state;
@@ -18,10 +29,10 @@ mod state;
 pub use capture::{Capture, GateObs, HiddenObs, RoutingObs};
 pub use state::KvState;
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::path::Path;
 use std::sync::{Arc, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Context, Result};
 use xla::Literal;
@@ -74,6 +85,67 @@ struct LayerLits {
     gate_single: (Literal, Literal),
 }
 
+/// Routing outcome of one layer for one chunk: expert -> (precision class,
+/// per-row gate weights, min unimportance score). Ordered by expert id so
+/// FFN output accumulation — and therefore the float results — are
+/// deterministic run to run (a `HashMap` here made logits depend on hash
+/// iteration order).
+type PerExpert = BTreeMap<u32, (Class, Vec<f32>, f64)>;
+
+/// Progress of a suspended decode token.
+pub enum DecodeProgress {
+    /// an ensure-resident barrier is waiting on in-flight expert loads
+    Pending,
+    /// token finished; next-token logits
+    Done(Vec<f32>),
+}
+
+/// One layer suspended at the ensure-resident barrier.
+struct PendingLayer {
+    /// post-gate normed hidden (expert FFN input)
+    hn: Vec<f32>,
+    /// pinned experts to execute once resident
+    uses: Vec<(ExpertKey, Class, Vec<f32>)>,
+    /// loader task ids the barrier waits on
+    waits: Vec<u64>,
+    /// when the barrier was reached (stall accounting)
+    t0: Instant,
+    /// waits already consumed (via `decode_block` or `try_wait`)
+    satisfied: bool,
+}
+
+/// Per-token decode state machine: the layer cursor plus activations,
+/// suspendable at the ensure-resident barrier and resumable later.
+pub struct DecodeCursor {
+    /// next layer to execute (or the layer suspended in `pending`)
+    layer: usize,
+    /// current activations [1, d_model]
+    x: Vec<f32>,
+    /// KV position of this token (fixed for the whole token)
+    pos: i32,
+    pending: Option<PendingLayer>,
+    /// total stall attributed to this token (barrier-reach → barrier-clear,
+    /// whether hidden by other sequences' compute or not)
+    pub load_wait: Duration,
+    finished: bool,
+}
+
+impl DecodeCursor {
+    /// Loader task ids the cursor is currently suspended on (empty when
+    /// runnable).
+    pub fn pending_ids(&self) -> &[u64] {
+        match &self.pending {
+            Some(p) if !p.satisfied => &p.waits,
+            _ => &[],
+        }
+    }
+
+    /// True when suspended on unconsumed in-flight loads.
+    pub fn is_pending(&self) -> bool {
+        self.pending.as_ref().map(|p| !p.satisfied).unwrap_or(false)
+    }
+}
+
 pub struct Engine {
     pub rt: Runtime,
     pub cfg: ModelConfig,
@@ -90,10 +162,13 @@ pub struct Engine {
     layers: Vec<LayerLits>,
     emb_lit: Literal,
     final_norm_lit: Literal,
-    /// decode-loop accounting
+    /// decode-loop accounting: wall time spent *blocked* on expert loads
     pub load_wait: Duration,
     token_counter: u64,
     ffn_prefix: &'static str,
+    /// sequence whose cache records the current compute is attributed to
+    /// (interleaved serving; None on the batch-1 path)
+    current_seq: Option<u64>,
 }
 
 impl Engine {
@@ -234,13 +309,39 @@ impl Engine {
             load_wait: Duration::ZERO,
             token_counter: 0,
             ffn_prefix: if fast { "expert_fast" } else { "expert" },
+            current_seq: None,
         })
     }
 
     /// Start a new sequence: fresh KV state + per-sequence cache records.
+    /// Batch-1 semantics: resets the (global) sequence-level records, so it
+    /// must not be used while other sequences are live — interleaved
+    /// serving uses [`Self::begin_sequence`] instead.
     pub fn new_sequence(&mut self) -> KvState {
         self.cache.lock().unwrap().reset_sequence();
+        self.current_seq = None;
         KvState::new(&self.cfg)
+    }
+
+    /// Register a live sequence for interleaved serving: fresh KV state and
+    /// per-sequence cache records that do NOT clobber other live sequences.
+    pub fn begin_sequence(&mut self, seq: u64) -> KvState {
+        self.cache.lock().unwrap().begin_sequence_id(seq);
+        KvState::new(&self.cfg)
+    }
+
+    /// Retire a live sequence's cache records.
+    pub fn end_sequence(&mut self, seq: u64) {
+        if self.current_seq == Some(seq) {
+            self.current_seq = None;
+        }
+        self.cache.lock().unwrap().end_sequence_id(seq);
+    }
+
+    /// Attribute subsequent compute to `seq`'s cache records (the
+    /// scheduler's context switch; None = batch-1 global records).
+    pub fn set_active_sequence(&mut self, seq: Option<u64>) {
+        self.current_seq = seq;
     }
 
     /// Prefill `tokens`, returning the logits after the last token.
@@ -265,15 +366,390 @@ impl Engine {
         logits.ok_or_else(|| anyhow!("prefill produced no logits"))
     }
 
-    /// One decode step for `token`; returns next-token logits.
+    /// One blocking decode step for `token`; returns next-token logits.
+    /// (The paper's batch-1 path: waits in `ExpertLoader::wait` at every
+    /// ensure-resident barrier.)
     pub fn decode_step(&mut self, kv: &mut KvState, token: u32) -> Result<Vec<f32>> {
-        anyhow::ensure!(kv.remaining() >= 1, "KV cache full");
-        self.forward_chunk(kv, &[token], 1, true)?
-            .ok_or_else(|| anyhow!("decode produced no logits"))
+        let mut cur = self.decode_begin(kv, token)?;
+        loop {
+            match self.decode_poll(kv, &mut cur)? {
+                DecodeProgress::Done(logits) => return Ok(logits),
+                DecodeProgress::Pending => self.decode_block(&mut cur),
+            }
+        }
     }
 
-    /// Run `tokens` through the model with chunk-size `s` artifacts.
-    /// Padded rows (when tokens.len() < s) are masked out of routing.
+    // ------------------------------------------------------------------
+    // Suspendable decode (the interleaved scheduler's unit of work)
+    // ------------------------------------------------------------------
+
+    /// Begin one decode token: embed it and position the layer cursor.
+    pub fn decode_begin(&mut self, kv: &KvState, token: u32) -> Result<DecodeCursor> {
+        anyhow::ensure!(kv.remaining() >= 1, "KV cache full");
+        Ok(DecodeCursor {
+            layer: 0,
+            x: self.embed(&[token], 1),
+            pos: kv.pos as i32,
+            pending: None,
+            load_wait: Duration::ZERO,
+            finished: false,
+        })
+    }
+
+    /// Advance the cursor as far as possible without blocking: runs layers
+    /// until either the token completes (`Done`) or an ensure-resident
+    /// barrier's loads are still in flight (`Pending`). Never sleeps — a
+    /// `Pending` cursor costs the caller nothing but this poll.
+    pub fn decode_poll(
+        &mut self,
+        kv: &mut KvState,
+        cur: &mut DecodeCursor,
+    ) -> Result<DecodeProgress> {
+        anyhow::ensure!(!cur.finished, "decode cursor already finished");
+        loop {
+            // resolve the outstanding barrier first
+            let still_loading = match &cur.pending {
+                Some(p) => !p.satisfied && !self.loader.try_wait(&p.waits),
+                None => false,
+            };
+            if still_loading {
+                return Ok(DecodeProgress::Pending);
+            }
+            if let Some(p) = cur.pending.take() {
+                cur.load_wait += p.t0.elapsed();
+                let moe_out = self.layer_ffn(1, &p.hn, p.uses)?;
+                for (xv, mv) in cur.x.iter_mut().zip(&moe_out) {
+                    *xv += mv;
+                }
+                cur.layer += 1;
+            }
+            if cur.layer == self.cfg.n_layers as usize {
+                cur.finished = true;
+                kv.pos += 1;
+                self.token_counter += 1;
+                let logits = self.head(1, 1, &cur.x)?;
+                return Ok(DecodeProgress::Done(logits));
+            }
+
+            let li = cur.layer;
+            let li_u32 = li as u32;
+            let e = self.cfg.n_experts as usize;
+            cur.x = self.layer_attention(kv, li, 1, &cur.x, cur.pos)?;
+            let (p_eff, probs, hn) = self.layer_gate(li, 1, true, &cur.x)?;
+            let per_expert = self.layer_route(li_u32, 1, 1, &probs[..e], &cur.x);
+            self.layer_plan_prefetch(li_u32, p_eff, &probs);
+            self.layer_observe(li_u32, &probs[..e]);
+            let (uses, waits) = self.layer_ensure_resident(li_u32, &per_expert);
+            cur.pending = Some(PendingLayer {
+                hn,
+                uses,
+                waits,
+                t0: Instant::now(),
+                satisfied: false,
+            });
+            // loop: an empty/already-complete wait set clears immediately
+        }
+    }
+
+    /// Block until the cursor's outstanding loads complete (the batch-1
+    /// path, and the scheduler's nothing-else-runnable fallback). The
+    /// blocked time is *unhidden* load wait: it lands in
+    /// [`Engine::load_wait`] and the loader's `wait_time`, exactly like the
+    /// pre-scheduler blocking decode.
+    pub fn decode_block(&mut self, cur: &mut DecodeCursor) {
+        if let Some(p) = &mut cur.pending {
+            if !p.satisfied {
+                let waited = self.loader.wait(&p.waits);
+                p.satisfied = true;
+                self.load_wait += waited;
+                self.loader.stats.lock().unwrap().wait_time += waited;
+            }
+        }
+    }
+
+    /// Abandon a suspended cursor (scheduler abort path): release the
+    /// cache pins its barrier holds so the slots stay evictable. The
+    /// in-flight loads themselves are left to complete harmlessly.
+    pub fn decode_abort(&self, cur: DecodeCursor) {
+        if let Some(p) = cur.pending {
+            for (key, class, _gatew) in p.uses {
+                let (_prec, pool) = self.class_target(class);
+                self.unpin(key, pool);
+            }
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Per-layer building blocks (shared by prefill chunks and the cursor)
+    // ------------------------------------------------------------------
+
+    /// Embed `tokens` into an [s, d] activation buffer (pad rows use PAD).
+    fn embed(&self, tokens: &[u32], s: usize) -> Vec<f32> {
+        let d = self.cfg.d_model;
+        let real = tokens.len();
+        let mut x = vec![0.0f32; s * d];
+        for (r, slot) in x.chunks_mut(d).enumerate() {
+            let tok = if r < real { tokens[r] } else { crate::tokenizer::PAD } as usize;
+            slot.copy_from_slice(&self.nonexpert_emb[tok * d..(tok + 1) * d]);
+        }
+        x
+    }
+
+    /// Attention for layer `li`; returns the new activations and writes the
+    /// updated KV back into `kv`.
+    fn layer_attention(
+        &mut self,
+        kv: &mut KvState,
+        li: usize,
+        s: usize,
+        x: &[f32],
+        pos: i32,
+    ) -> Result<Vec<f32>> {
+        let d = self.cfg.d_model;
+        let x_lit = lit_f32(&[s, d], x)?;
+        let kdims = [self.cfg.max_seq, self.cfg.n_kv_heads, self.cfg.head_dim()];
+        let k_lit = lit_f32(&kdims, &kv.k[li])?;
+        let v_lit = lit_f32(&kdims, &kv.v[li])?;
+        let pos_lit = lit_i32(pos);
+        let ll = &self.layers[li];
+        let args: Vec<&Literal> = vec![
+            &x_lit, &ll.attn[0], &ll.attn[1], &ll.attn[2], &ll.attn[3], &ll.attn[4],
+            &k_lit, &v_lit, &pos_lit,
+        ];
+        let outs = self.rt.execute(&format!("attn_s{s}"), &args)?;
+        anyhow::ensure!(outs.len() == 3, "attn outputs");
+        let y = lit_to_f32(&outs[0])?;
+        kv.k[li] = lit_to_f32(&outs[1])?;
+        kv.v[li] = lit_to_f32(&outs[2])?;
+        Ok(y)
+    }
+
+    /// Gating for layer `li`: stacked on decode, single on prefill.
+    /// Returns (p_eff, probs [p_eff, s, e], normed hidden [s, d]).
+    fn layer_gate(
+        &mut self,
+        li: usize,
+        s: usize,
+        decode: bool,
+        x: &[f32],
+    ) -> Result<(usize, Vec<f32>, Vec<f32>)> {
+        let d = self.cfg.d_model;
+        let x_lit = lit_f32(&[s, d], x)?;
+        let ll = &self.layers[li];
+        if decode {
+            let (p_eff, ref pn, ref wg) = ll.gate_stack;
+            let args: Vec<&Literal> = vec![&x_lit, pn, wg];
+            let outs = self.rt.execute(&format!("gate_p{p_eff}_s1"), &args)?;
+            Ok((p_eff, lit_to_f32(&outs[0])?, lit_to_f32(&outs[1])?))
+        } else {
+            let (ref pn, ref wg) = ll.gate_single;
+            let args: Vec<&Literal> = vec![&x_lit, pn, wg];
+            let outs = self.rt.execute(&format!("gate_p1_s{s}"), &args)?;
+            Ok((1usize, lit_to_f32(&outs[0])?, lit_to_f32(&outs[1])?))
+        }
+    }
+
+    /// Route the chunk's tokens through the Expert Scorer, merging per-row
+    /// decisions into the layer's per-expert execution set.
+    fn layer_route(
+        &mut self,
+        li_u32: u32,
+        s: usize,
+        real: usize,
+        layer_probs: &[f32],
+        x: &[f32],
+    ) -> PerExpert {
+        let d = self.cfg.d_model;
+        let e = self.cfg.n_experts as usize;
+        if self.capture.hidden_states {
+            // raw gating input (attention output, pre-norm): the
+            // quantity whose cross-layer similarity Fig 7 measures
+            self.capture.hiddens.push(HiddenObs {
+                token: self.token_counter,
+                layer: li_u32,
+                hidden: x[..d].to_vec(),
+            });
+        }
+        let mut per_expert: PerExpert = BTreeMap::new();
+        for r in 0..real {
+            let row = &layer_probs[r * e..(r + 1) * e];
+            let decisions = scorer::decide(
+                row,
+                self.cfg.top_k,
+                self.policy.t1,
+                self.policy.t2,
+                self.policy.dynamic_loading,
+            );
+            if self.capture.routing {
+                self.capture.routes.push(RoutingObs {
+                    token: self.token_counter + r as u64,
+                    layer: li_u32,
+                    experts: decisions.iter().map(|dd| dd.expert).collect(),
+                    probs: row.to_vec(),
+                });
+            }
+            for dd in decisions {
+                let ent = per_expert
+                    .entry(dd.expert)
+                    .or_insert((Class::Skip, vec![0.0; s], dd.score));
+                ent.0 = max_class(ent.0, dd.class);
+                ent.1[r] = dd.gate_weight;
+                ent.2 = ent.2.min(dd.score);
+            }
+        }
+        per_expert
+    }
+
+    /// Predictor step (decode only): plan mixed-precision prefetches for
+    /// subsequent layers from the stacked gate output.
+    fn layer_plan_prefetch(&mut self, li_u32: u32, p_eff: usize, probs: &[f32]) {
+        if p_eff <= 1 || self.policy.prefetch_depth == 0 {
+            return;
+        }
+        let e = self.cfg.n_experts as usize;
+        let stacked: Vec<Vec<f32>> =
+            (0..p_eff).map(|j| probs[j * e..(j + 1) * e].to_vec()).collect();
+        self.loader.bump_prefetch_generation();
+        let mut cache = self.cache.lock().unwrap();
+        let plan = self
+            .predictor
+            .plan(&mut cache, li_u32, self.cfg.n_layers, &stacked);
+        drop(cache);
+        if let Some(plan) = plan {
+            let mut stats = self.loader.stats.lock().unwrap();
+            stats.prefetch_total += plan.experts.len() as u64;
+            drop(stats);
+            for (key, class) in plan.experts {
+                let (prec, pool) = self.class_target(class);
+                if class != Class::Skip {
+                    let _ = self.loader.submit(key, prec, pool, TaskKind::Prefetch, li_u32);
+                }
+            }
+        }
+    }
+
+    /// Score the pending prediction of this layer + release pins
+    /// (unconditional on decode: even layers with p_eff == 1 may have been
+    /// predicted from an earlier layer).
+    fn layer_observe(&mut self, li_u32: u32, layer_probs_first: &[f32]) {
+        let mut cache = self.cache.lock().unwrap();
+        self.predictor.observe(&mut cache, li_u32, layer_probs_first);
+        let hits = self.predictor.tracker.per_offset[0].0;
+        drop(cache);
+        let mut st = self.loader.stats.lock().unwrap();
+        st.prefetch_hits = hits;
+    }
+
+    /// Ensure-resident barrier: probe/pin the layer's experts, submit
+    /// on-demand loads for misses, and return the execution set plus the
+    /// loader task ids to wait on. Does NOT wait — blocking vs suspension
+    /// is the caller's policy.
+    fn layer_ensure_resident(
+        &self,
+        li_u32: u32,
+        per_expert: &PerExpert,
+    ) -> (Vec<(ExpertKey, Class, Vec<f32>)>, Vec<u64>) {
+        let mut waits: Vec<u64> = Vec::new();
+        let mut uses: Vec<(ExpertKey, Class, Vec<f32>)> = Vec::new();
+        let seq = self.current_seq;
+        let mut cache = self.cache.lock().unwrap();
+        cache.note_token_for(seq);
+        for (&expert, (class, gatew, _score)) in per_expert {
+            if *class == Class::Skip {
+                let mut st = self.loader.stats.lock().unwrap();
+                st.skipped += 1;
+                continue;
+            }
+            let key = ExpertKey::new(li_u32, expert);
+            let (_prec, pool) = self.class_target(*class);
+            let mut hit = cache.access(key, pool);
+            // a Lo request served by a resident Hi copy is a free upgrade
+            let mut eff_class = *class;
+            if !hit && pool == Pool::Lo && cache.hi.contains_ready(key) {
+                hit = true;
+                eff_class = Class::Hi;
+                cache.stats.hits_hi += 1;
+                // undo the lo-miss penalty charged by access()
+                cache.stats.misses_lo -= 1;
+                cache.stats.miss_penalty -= cache.penalty_ratio();
+            }
+            match eff_class {
+                Class::Hi => cache.hi.pin(key),
+                _ => cache.lo.pin(key),
+            }
+            uses.push((key, eff_class, gatew.clone()));
+            if !hit {
+                drop(cache);
+                let (prec, pool) = self.class_target(eff_class);
+                if let Some(id) =
+                    self.loader.submit(key, prec, pool, TaskKind::OnDemand, li_u32)
+                {
+                    waits.push(id);
+                }
+                cache = self.cache.lock().unwrap();
+            }
+        }
+        drop(cache);
+        (uses, waits)
+    }
+
+    /// Execute the layer's resident experts and return the MoE output to
+    /// add back into the residual stream.
+    fn layer_ffn(
+        &mut self,
+        s: usize,
+        hn: &[f32],
+        uses: Vec<(ExpertKey, Class, Vec<f32>)>,
+    ) -> Result<Vec<f32>> {
+        let d = self.cfg.d_model;
+        let x_norm_lit = lit_f32(&[s, d], hn)?;
+        let mut moe_out = vec![0.0f32; s * d];
+        let seq = self.current_seq;
+        for (key, class, gatew) in uses {
+            let (prec, pool) = self.class_target(class);
+            let buf = {
+                let cache = self.cache.lock().unwrap();
+                let pool_ref = match pool {
+                    Pool::Hi => &cache.hi,
+                    Pool::Lo => &cache.lo,
+                };
+                pool_ref.buffer(key)
+            };
+            let Some(buf) = buf else {
+                // evicted between load and use under extreme pressure:
+                // execute directly from next-level memory (bypass)
+                let record = self.store.record(key, prec).to_vec();
+                self.run_expert(&x_norm_lit, s, prec, &record, &gatew, &mut moe_out, key)?;
+                self.unpin(key, pool);
+                continue;
+            };
+            let record = buf.lock().unwrap().clone();
+            self.run_expert(&x_norm_lit, s, prec, &record, &gatew, &mut moe_out, key)?;
+            {
+                let mut cache = self.cache.lock().unwrap();
+                cache.note_use_for(key, pool, seq);
+            }
+            self.unpin(key, pool);
+        }
+        Ok(moe_out)
+    }
+
+    /// LM head over the final activations; returns the last real row's
+    /// logits.
+    fn head(&mut self, s: usize, real: usize, x: &[f32]) -> Result<Vec<f32>> {
+        let d = self.cfg.d_model;
+        let x_lit = lit_f32(&[s, d], x)?;
+        let args: Vec<&Literal> = vec![&x_lit, &self.final_norm_lit, &self.emb_lit];
+        let outs = self.rt.execute(&format!("head_s{s}"), &args)?;
+        let logits = lit_to_f32(&outs[0])?;
+        let v = self.cfg.vocab;
+        Ok(logits[(real - 1) * v..real * v].to_vec())
+    }
+
+    /// Run `tokens` through the model with chunk-size `s` artifacts,
+    /// blocking at every ensure-resident barrier (prefill and the batch-1
+    /// decode path). Padded rows (when tokens.len() < s) are masked out of
+    /// routing.
     fn forward_chunk(
         &mut self,
         kv: &mut KvState,
@@ -283,209 +759,29 @@ impl Engine {
     ) -> Result<Option<Vec<f32>>> {
         let real = tokens.len();
         anyhow::ensure!(real <= s);
-        let d = self.cfg.d_model;
         let e = self.cfg.n_experts as usize;
         let decode = s == 1;
 
-        // embed (pad rows use PAD)
-        let mut x = vec![0.0f32; s * d];
-        for (r, slot) in x.chunks_mut(d).enumerate() {
-            let tok = if r < real { tokens[r] } else { crate::tokenizer::PAD } as usize;
-            slot.copy_from_slice(&self.nonexpert_emb[tok * d..(tok + 1) * d]);
-        }
+        let mut x = self.embed(tokens, s);
         let pos = kv.pos as i32;
 
         for li in 0..self.cfg.n_layers as usize {
-            // ---- attention ---------------------------------------------------
-            let x_lit = lit_f32(&[s, d], &x)?;
-            let kdims = [self.cfg.max_seq, self.cfg.n_kv_heads, self.cfg.head_dim()];
-            let k_lit = lit_f32(&kdims, &kv.k[li])?;
-            let v_lit = lit_f32(&kdims, &kv.v[li])?;
-            let pos_lit = lit_i32(pos);
-            let ll = &self.layers[li];
-            let args: Vec<&Literal> = vec![
-                &x_lit, &ll.attn[0], &ll.attn[1], &ll.attn[2], &ll.attn[3], &ll.attn[4],
-                &k_lit, &v_lit, &pos_lit,
-            ];
-            let outs = self.rt.execute(&format!("attn_s{s}"), &args)?;
-            anyhow::ensure!(outs.len() == 3, "attn outputs");
-            let y = lit_to_f32(&outs[0])?;
-            kv.k[li] = lit_to_f32(&outs[1])?;
-            kv.v[li] = lit_to_f32(&outs[2])?;
-            x = y;
-
-            // ---- gating (stacked on decode; single on prefill) --------------
-            let x_lit = lit_f32(&[s, d], &x)?;
-            let (p_eff, probs, hn) = if decode {
-                let (p_eff, ref pn, ref wg) = ll.gate_stack;
-                let args: Vec<&Literal> = vec![&x_lit, pn, wg];
-                let outs = self.rt.execute(&format!("gate_p{p_eff}_s1"), &args)?;
-                (p_eff, lit_to_f32(&outs[0])?, lit_to_f32(&outs[1])?)
-            } else {
-                let (ref pn, ref wg) = ll.gate_single;
-                let args: Vec<&Literal> = vec![&x_lit, pn, wg];
-                let outs = self.rt.execute(&format!("gate_p1_s{s}"), &args)?;
-                (1usize, lit_to_f32(&outs[0])?, lit_to_f32(&outs[1])?)
-            };
-            // probs layout [p, s, e]; row-major
-            let layer_probs = &probs[..s * e];
-
-            // ---- routing + scoring -------------------------------------------
             let li_u32 = li as u32;
-            if self.capture.hidden_states {
-                // raw gating input (attention output, pre-norm): the
-                // quantity whose cross-layer similarity Fig 7 measures
-                self.capture.hiddens.push(HiddenObs {
-                    token: self.token_counter,
-                    layer: li_u32,
-                    hidden: x[..d].to_vec(),
-                });
-            }
-            let mut per_expert: HashMap<u32, (Class, Vec<f32>, f64)> = HashMap::new();
-            for r in 0..real {
-                let row = &layer_probs[r * e..(r + 1) * e];
-                let decisions = scorer::decide(
-                    row,
-                    self.cfg.top_k,
-                    self.policy.t1,
-                    self.policy.t2,
-                    self.policy.dynamic_loading,
-                );
-                if self.capture.routing {
-                    self.capture.routes.push(RoutingObs {
-                        token: self.token_counter + r as u64,
-                        layer: li_u32,
-                        experts: decisions.iter().map(|dd| dd.expert).collect(),
-                        probs: row.to_vec(),
-                    });
-                }
-                for dd in decisions {
-                    let ent = per_expert
-                        .entry(dd.expert)
-                        .or_insert((Class::Skip, vec![0.0; s], dd.score));
-                    ent.0 = max_class(ent.0, dd.class);
-                    ent.1[r] = dd.gate_weight;
-                    ent.2 = ent.2.min(dd.score);
-                }
-            }
-
-            // predictor: plan prefetches for subsequent layers (decode only)
-            if decode && p_eff > 1 && self.policy.prefetch_depth > 0 {
-                let stacked: Vec<Vec<f32>> =
-                    (0..p_eff).map(|j| probs[j * e..(j + 1) * e].to_vec()).collect();
-                self.loader.bump_prefetch_generation();
-                let mut cache = self.cache.lock().unwrap();
-                let plan =
-                    self.predictor
-                        .plan(&mut cache, li_u32, self.cfg.n_layers, &stacked);
-                drop(cache);
-                if let Some(plan) = plan {
-                    let mut stats = self.loader.stats.lock().unwrap();
-                    stats.prefetch_total += plan.experts.len() as u64;
-                    drop(stats);
-                    for (key, class) in plan.experts {
-                        let (prec, pool) = self.class_target(class);
-                        if class != Class::Skip {
-                            let _ = self.loader.submit(
-                                key,
-                                prec,
-                                pool,
-                                TaskKind::Prefetch,
-                                li_u32,
-                            );
-                        }
-                    }
-                }
-            }
+            x = self.layer_attention(kv, li, s, &x, pos)?;
+            let (p_eff, probs, hn) = self.layer_gate(li, s, decode, &x)?;
+            let per_expert = self.layer_route(li_u32, s, real, &probs[..s * e], &x);
             if decode {
-                // score the pending prediction of this layer + release pins
-                // (unconditional: even layers with p_eff == 1 may have been
-                // predicted from an earlier layer)
-                let mut cache = self.cache.lock().unwrap();
-                self.predictor.observe(&mut cache, li_u32, &layer_probs[..e]);
-                let hits = self.predictor.tracker.per_offset[0].0;
-                let mut st = self.loader.stats.lock().unwrap();
-                st.prefetch_hits = hits;
+                self.layer_plan_prefetch(li_u32, p_eff, &probs);
+                self.layer_observe(li_u32, &probs[..e]);
             }
-
-            // ---- ensure on-demand experts resident ---------------------------
-            let mut waits: Vec<u64> = Vec::new();
-            let mut uses: Vec<(ExpertKey, Class, Vec<f32>)> = Vec::new();
-            {
-                let mut cache = self.cache.lock().unwrap();
-                cache.records.note_token();
-                for (&expert, (class, gatew, _score)) in &per_expert {
-                    if *class == Class::Skip {
-                        let mut st = self.loader.stats.lock().unwrap();
-                        st.skipped += 1;
-                        continue;
-                    }
-                    let key = ExpertKey::new(li_u32, expert);
-                    let (_prec, pool) = self.class_target(*class);
-                    let mut hit = cache.access(key, pool);
-                    // a Lo request served by a resident Hi copy is a free upgrade
-                    let mut eff_class = *class;
-                    if !hit && pool == Pool::Lo && cache.hi.contains_ready(key) {
-                        hit = true;
-                        eff_class = Class::Hi;
-                        cache.stats.hits_hi += 1;
-                        // undo the lo-miss penalty charged by access()
-                        cache.stats.misses_lo -= 1;
-                        cache.stats.miss_penalty -= cache.penalty_ratio();
-                    }
-                    match eff_class {
-                        Class::Hi => cache.hi.pin(key),
-                        _ => cache.lo.pin(key),
-                    }
-                    uses.push((key, eff_class, gatew.clone()));
-                    if !hit {
-                        drop(cache);
-                        let (prec, pool) = self.class_target(eff_class);
-                        if let Some(id) =
-                            self.loader.submit(key, prec, pool, TaskKind::OnDemand, li_u32)
-                        {
-                            waits.push(id);
-                        }
-                        cache = self.cache.lock().unwrap();
-                    }
-                }
-            }
+            let (uses, waits) = self.layer_ensure_resident(li_u32, &per_expert);
             if !waits.is_empty() {
                 let waited = self.loader.wait(&waits);
                 self.load_wait += waited;
                 let mut st = self.loader.stats.lock().unwrap();
                 st.wait_time += waited;
             }
-
-            // ---- expert FFNs --------------------------------------------------
-            let x_norm_lit = lit_f32(&[s, d], &hn)?;
-            let mut moe_out = vec![0.0f32; s * d];
-            for (key, class, gatew) in uses {
-                let (prec, pool) = self.class_target(class);
-                let buf = {
-                    let cache = self.cache.lock().unwrap();
-                    let pool_ref = match pool {
-                        Pool::Hi => &cache.hi,
-                        Pool::Lo => &cache.lo,
-                    };
-                    pool_ref.buffer(key)
-                };
-                let Some(buf) = buf else {
-                    // evicted between load and use under extreme pressure:
-                    // execute directly from next-level memory (bypass)
-                    let record = self.store.record(key, prec).to_vec();
-                    self.run_expert(&x_norm_lit, s, prec, &record, &gatew, &mut moe_out, key)?;
-                    self.unpin(key, pool);
-                    continue;
-                };
-                let record = buf.lock().unwrap().clone();
-                self.run_expert(&x_norm_lit, s, prec, &record, &gatew, &mut moe_out, key)?;
-                {
-                    let mut cache = self.cache.lock().unwrap();
-                    cache.note_use(key, pool);
-                }
-                self.unpin(key, pool);
-            }
+            let moe_out = self.layer_ffn(s, &hn, uses)?;
             for (xv, mv) in x.iter_mut().zip(&moe_out) {
                 *xv += mv;
             }
@@ -497,12 +793,7 @@ impl Engine {
         if !want_logits {
             return Ok(None);
         }
-        let x_lit = lit_f32(&[s, d], &x)?;
-        let args: Vec<&Literal> = vec![&x_lit, &self.final_norm_lit, &self.emb_lit];
-        let outs = self.rt.execute(&format!("head_s{s}"), &args)?;
-        let logits = lit_to_f32(&outs[0])?;
-        let v = self.cfg.vocab;
-        Ok(Some(logits[(real - 1) * v..real * v].to_vec()))
+        Ok(Some(self.head(s, real, &x)?))
     }
 
     fn unpin(&self, key: ExpertKey, pool: Pool) {

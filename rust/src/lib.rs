@@ -20,8 +20,13 @@
 //! * [`loader`] — the token-level dynamic expert loader (§3.2).
 //! * [`predictor`] — the layer-level adaptive expert prefetcher (§3.3).
 //! * [`engine`] — the per-layer inference engine over PJRT executables.
-//! * [`coordinator`] — request routing, sequence lifecycle, generation.
-//! * [`server`] — TCP serving front-end.
+//! * [`coordinator`] — request routing, sequence lifecycle, generation;
+//!   two scheduler modes: the paper-faithful blocking batch-1 FCFS, and an
+//!   interleaved continuous scheduler that suspends a sequence at its
+//!   expert-load barrier and advances other sequences' decode meanwhile.
+//! * [`server`] — TCP serving front-end: single-threaded FCFS accept loop
+//!   (`serve`) or threaded accept + per-connection readers feeding the
+//!   interleaved scheduler over a channel (`serve_concurrent`).
 //! * [`sim`] — discrete-event simulator at paper scale (figures/benches).
 //! * [`baselines`] — the six comparator systems of §5.
 //! * [`trace`] — gating-trace capture, synthetic generation, replay.

@@ -8,11 +8,16 @@
 //! arriving behind a started prefetch waits for it — the misprediction
 //! penalty of Fig 9. On-demand tasks do jump ahead of *queued* (not yet
 //! started) prefetches, and stale prefetches are dropped by generation.
+//!
+//! Completion can be consumed three ways: blocking ([`ExpertLoader::wait`]),
+//! polling ([`ExpertLoader::try_wait`] — the interleaved scheduler's
+//! non-blocking barrier), or pushed ([`ExpertLoader::on_complete`] per-task
+//! callbacks, used by the serving front-end to wake its event loop).
 
 pub mod scorer;
 
-use std::collections::HashSet;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::collections::{HashMap, HashSet};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -52,14 +57,23 @@ struct TaskQueue {
     closed: bool,
 }
 
+/// Completion callback: invoked once with the task id when the task
+/// finishes (successfully, deduped, or dropped as stale). Callbacks must be
+/// cheap and must not call back into the loader (they can run on the
+/// scheduler thread while it holds the queue lock).
+type Callback = Box<dyn FnOnce(u64) + Send + 'static>;
+
 struct Shared {
     queue: Mutex<TaskQueue>,
     queue_cv: Condvar,
     done: Mutex<HashSet<u64>>,
     done_cv: Condvar,
+    callbacks: Mutex<HashMap<u64, Callback>>,
     prefetch_gen: AtomicU64,
     next_id: AtomicU64,
     stop: AtomicBool,
+    /// tasks popped from a lane but not yet completed (mid-transfer)
+    in_flight: AtomicUsize,
 }
 
 /// Handle to the loader: issue tasks, wait for completions.
@@ -81,9 +95,11 @@ impl ExpertLoader {
             queue_cv: Condvar::new(),
             done: Mutex::new(HashSet::new()),
             done_cv: Condvar::new(),
+            callbacks: Mutex::new(HashMap::new()),
             prefetch_gen: AtomicU64::new(0),
             next_id: AtomicU64::new(1),
             stop: AtomicBool::new(false),
+            in_flight: AtomicUsize::new(0),
         });
         let stats = Arc::new(Mutex::new(LoaderStats::default()));
         let worker = Worker {
@@ -149,11 +165,53 @@ impl ExpertLoader {
         }
     }
 
+    /// Non-blocking completion poll: true when every id in `ids` has
+    /// completed (the ids are then consumed, exactly like [`Self::wait`]).
+    /// False leaves all ids pending so the caller can poll again.
+    pub fn try_wait(&self, ids: &[u64]) -> bool {
+        if ids.is_empty() {
+            return true;
+        }
+        let mut done = self.shared.done.lock().unwrap();
+        if ids.iter().all(|id| done.contains(id)) {
+            for id in ids {
+                done.remove(id);
+            }
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Non-consuming completion probe: true once `id` has completed and
+    /// has not yet been consumed by `wait`/`try_wait`.
+    pub fn is_done(&self, id: u64) -> bool {
+        self.shared.done.lock().unwrap().contains(&id)
+    }
+
+    /// Register a completion callback for task `id`; it fires exactly once,
+    /// on the scheduler thread when the task completes, or immediately on
+    /// the caller thread if the task already completed. Register before the
+    /// id is consumed by `wait`/`try_wait` — a consumed id never fires.
+    /// Re-registering replaces (and drops) the previous callback.
+    pub fn on_complete<F: FnOnce(u64) + Send + 'static>(&self, id: u64, cb: F) {
+        self.shared.callbacks.lock().unwrap().insert(id, Box::new(cb));
+        // the worker publishes `done` before draining callbacks, so if the
+        // task raced past us we can still claim (or find gone) our entry
+        if self.shared.done.lock().unwrap().contains(&id) {
+            if let Some(cb) = self.shared.callbacks.lock().unwrap().remove(&id) {
+                cb(id);
+            }
+        }
+    }
+
     /// True when both task lanes are empty and nothing is mid-transfer
     /// (used by drains in tests/benches).
     pub fn is_idle(&self) -> bool {
         let q = self.shared.queue.lock().unwrap();
-        q.ondemand.is_empty() && q.prefetch.is_empty()
+        q.ondemand.is_empty()
+            && q.prefetch.is_empty()
+            && self.shared.in_flight.load(Ordering::SeqCst) == 0
     }
 }
 
@@ -188,8 +246,12 @@ impl Worker {
                     if self.shared.stop.load(Ordering::Relaxed) {
                         return;
                     }
-                    // on-demand lane first; prefetch lane drops stale gens
+                    // on-demand lane first; prefetch lane drops stale gens.
+                    // `in_flight` is raised inside the queue critical
+                    // section so `is_idle` never sees a popped-but-running
+                    // task as idle.
                     if let Some(t) = q.ondemand.pop_front() {
+                        self.shared.in_flight.fetch_add(1, Ordering::SeqCst);
                         break t;
                     }
                     let cur_gen = self.shared.prefetch_gen.load(Ordering::Relaxed);
@@ -203,6 +265,7 @@ impl Worker {
                         }
                     }
                     if let Some(t) = q.prefetch.pop_front() {
+                        self.shared.in_flight.fetch_add(1, Ordering::SeqCst);
                         break t;
                     }
                     if q.closed {
@@ -211,7 +274,13 @@ impl Worker {
                     q = self.shared.queue_cv.wait(q).unwrap();
                 }
             };
+            let id = task.id;
             self.execute(task);
+            // transfer fully committed: drop in-flight before waking
+            // waiters so a returned `wait` implies `is_idle` (absent new
+            // submissions)
+            self.shared.in_flight.fetch_sub(1, Ordering::SeqCst);
+            self.mark_done(id);
         }
     }
 
@@ -222,8 +291,8 @@ impl Worker {
             cache.reserve(task.key, task.pool, task.current_layer)
         };
         let Some(res) = reservation else {
-            // already resident/incoming, or no evictable slot: done
-            self.mark_done(task.id);
+            // already resident/incoming, or no evictable slot: nothing to
+            // copy (run() marks the task done)
             return;
         };
         let record = self.store.record(task.key, task.precision);
@@ -247,13 +316,18 @@ impl Worker {
             }
             st.bytes_loaded += record.len() as u64;
         }
-        self.mark_done(task.id);
     }
 
     fn mark_done(&self, id: u64) {
+        // publish completion BEFORE draining the callback: `on_complete`
+        // re-checks `done` after inserting, so whichever side loses the
+        // race still finds (exactly one of) the entry to fire
         let mut done = self.shared.done.lock().unwrap();
         done.insert(id);
         drop(done);
         self.shared.done_cv.notify_all();
+        if let Some(cb) = self.shared.callbacks.lock().unwrap().remove(&id) {
+            cb(id);
+        }
     }
 }

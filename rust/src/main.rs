@@ -8,7 +8,7 @@ use hobbit::baselines::{self, EQ3_WEIGHTS};
 use hobbit::cache::Policy;
 use hobbit::cli::{Args, USAGE};
 use hobbit::config::{HardwareConfig, PolicyConfig};
-use hobbit::coordinator::{Coordinator, Request};
+use hobbit::coordinator::{Coordinator, Request, SchedulerMode};
 use hobbit::engine::Engine;
 use hobbit::figures;
 use hobbit::server::Server;
@@ -23,7 +23,7 @@ fn main() {
         return;
     }
     let cmd = argv.remove(0);
-    let args = Args::parse(argv, &["all", "no-dynamic", "no-prefetch", "report"]);
+    let args = Args::parse(argv, &["all", "no-dynamic", "no-prefetch", "report", "interleaved"]);
     let r = match cmd.as_str() {
         "serve" => cmd_serve(&args),
         "generate" => cmd_generate(&args),
@@ -73,11 +73,25 @@ fn build_engine(args: &Args) -> Result<Engine> {
 fn cmd_serve(args: &Args) -> Result<()> {
     let engine = build_engine(args)?;
     let mut coord = Coordinator::new(engine);
+    let interleaved = args.has("interleaved");
+    if interleaved {
+        coord.mode = SchedulerMode::Interleaved;
+        coord.max_active = args.get_usize("max-active", coord.max_active);
+    }
     let addr = args.get_or("addr", "127.0.0.1:7077");
     let mut server = Server::bind(addr)?;
-    println!("hobbit serving on {} (platform: {})", server.local_addr()?, coord.engine.rt.platform());
+    println!(
+        "hobbit serving on {} (platform: {}, scheduler: {})",
+        server.local_addr()?,
+        coord.engine.rt.platform(),
+        if interleaved { "interleaved" } else { "fcfs" },
+    );
     let max_conns = args.get("max-conns").and_then(|v| v.parse().ok());
-    server.serve(&mut coord, max_conns)?;
+    if interleaved {
+        server.serve_concurrent(&mut coord, max_conns)?;
+    } else {
+        server.serve(&mut coord, max_conns)?;
+    }
     coord.sync_report();
     println!("{}", coord.report.to_json().to_string());
     Ok(())

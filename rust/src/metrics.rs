@@ -81,12 +81,92 @@ impl RequestMetrics {
     }
 }
 
+/// Interleaved-scheduler aggregates (queue wait, TTFT, aggregate decode
+/// throughput, and the overlap ratio — the fraction of load-wait hidden by
+/// other sequences' compute). Absent (None in [`RunReport`]) on the
+/// paper-faithful batch-1 FCFS path, so that mode's report JSON is
+/// byte-identical to the pre-scheduler format.
+#[derive(Debug, Clone, Default)]
+pub struct SchedulerStats {
+    /// requests completed by the interleaved scheduler
+    pub completed: u64,
+    /// tokens decoded across all completed requests
+    pub decoded_tokens: u64,
+    /// Σ submit → admission (prefill start) over completed requests
+    pub queue_wait: Duration,
+    /// Σ submit → first generated token over completed requests
+    pub ttft: Duration,
+    /// Σ per-sequence decode stall (ensure-resident barrier reach → clear),
+    /// hidden or not
+    pub total_stall: Duration,
+    /// stall the scheduler could NOT hide: every live sequence was waiting
+    /// on the link at once, so it blocked in `ExpertLoader::wait`
+    pub unhidden_stall: Duration,
+    /// wall time with at least one sequence queued or active
+    pub busy_wall: Duration,
+}
+
+impl SchedulerStats {
+    /// Aggregate decode throughput: tokens decoded per busy wall second
+    /// (across all interleaved sequences — the serving headline number).
+    pub fn aggregate_decode_tps(&self) -> f64 {
+        let t = self.busy_wall.as_secs_f64();
+        if t <= 0.0 {
+            0.0
+        } else {
+            self.decoded_tokens as f64 / t
+        }
+    }
+
+    /// Fraction of total decode stall hidden by advancing other sequences:
+    /// `1 - unhidden/total`. 0 when nothing stalled (or nothing was hidden).
+    pub fn overlap_ratio(&self) -> f64 {
+        let total = self.total_stall.as_secs_f64();
+        if total <= 0.0 {
+            return 0.0;
+        }
+        (1.0 - self.unhidden_stall.as_secs_f64() / total).max(0.0)
+    }
+
+    pub fn mean_queue_wait_s(&self) -> f64 {
+        if self.completed == 0 {
+            0.0
+        } else {
+            self.queue_wait.as_secs_f64() / self.completed as f64
+        }
+    }
+
+    pub fn mean_ttft_s(&self) -> f64 {
+        if self.completed == 0 {
+            0.0
+        } else {
+            self.ttft.as_secs_f64() / self.completed as f64
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("completed", num(self.completed as f64)),
+            ("decoded_tokens", num(self.decoded_tokens as f64)),
+            ("mean_queue_wait_s", num(self.mean_queue_wait_s())),
+            ("mean_ttft_s", num(self.mean_ttft_s())),
+            ("aggregate_decode_tps", num(self.aggregate_decode_tps())),
+            ("overlap_ratio", num(self.overlap_ratio())),
+            ("total_stall_s", num(self.total_stall.as_secs_f64())),
+            ("unhidden_stall_s", num(self.unhidden_stall.as_secs_f64())),
+            ("busy_wall_s", num(self.busy_wall.as_secs_f64())),
+        ])
+    }
+}
+
 /// Aggregate over a run of requests, exported by `hobbit serve --report`.
 #[derive(Debug, Clone, Default)]
 pub struct RunReport {
     pub requests: Vec<RequestMetrics>,
     pub loader: LoaderStats,
     pub cache: CacheStats,
+    /// interleaved-scheduler aggregates; None on the batch-1 FCFS path
+    pub scheduler: Option<SchedulerStats>,
 }
 
 impl RunReport {
@@ -106,7 +186,7 @@ impl RunReport {
     }
 
     pub fn to_json(&self) -> Json {
-        obj(vec![
+        let mut pairs = vec![
             ("mean_decode_tps", num(self.mean_decode_tps())),
             ("mean_prefill_s", num(self.mean_prefill_s())),
             ("cache_hit_ratio", num(self.cache.hit_ratio())),
@@ -122,8 +202,13 @@ impl RunReport {
                 }),
             ),
             ("requests", arr(self.requests.iter().map(|r| r.to_json()).collect())),
-            ("schema", s("hobbit.run_report.v1")),
-        ])
+        ];
+        // interleaved mode only: batch-1 FCFS reports stay byte-identical
+        if let Some(sch) = &self.scheduler {
+            pairs.push(("serving", sch.to_json()));
+        }
+        pairs.push(("schema", s("hobbit.run_report.v1")));
+        obj(pairs)
     }
 }
 
@@ -146,6 +231,38 @@ mod tests {
         let c = CacheStats { hits_hi: 6, hits_lo: 2, misses_hi: 1, misses_lo: 1, ..Default::default() };
         assert!((c.hit_ratio() - 0.8).abs() < 1e-9);
         assert_eq!(CacheStats::default().hit_ratio(), 0.0);
+    }
+
+    #[test]
+    fn scheduler_stats_math() {
+        let s = SchedulerStats {
+            completed: 4,
+            decoded_tokens: 80,
+            queue_wait: Duration::from_secs(2),
+            ttft: Duration::from_secs(4),
+            total_stall: Duration::from_secs_f64(1.0),
+            unhidden_stall: Duration::from_secs_f64(0.25),
+            busy_wall: Duration::from_secs(8),
+        };
+        assert!((s.aggregate_decode_tps() - 10.0).abs() < 1e-9);
+        assert!((s.overlap_ratio() - 0.75).abs() < 1e-9);
+        assert!((s.mean_queue_wait_s() - 0.5).abs() < 1e-9);
+        assert!((s.mean_ttft_s() - 1.0).abs() < 1e-9);
+        // degenerate cases stay finite
+        let z = SchedulerStats::default();
+        assert_eq!(z.aggregate_decode_tps(), 0.0);
+        assert_eq!(z.overlap_ratio(), 0.0);
+        assert_eq!(z.mean_ttft_s(), 0.0);
+    }
+
+    #[test]
+    fn serving_section_only_in_interleaved_reports() {
+        let mut rep = RunReport::default();
+        let fcfs = rep.to_json().to_string();
+        assert!(!fcfs.contains("\"serving\""), "FCFS report grew a serving key");
+        rep.scheduler = Some(SchedulerStats::default());
+        let j = Json::parse(&rep.to_json().to_string()).unwrap();
+        assert!(j.get("serving").unwrap().get("overlap_ratio").is_some());
     }
 
     #[test]

@@ -45,7 +45,13 @@ impl AccuracyTracker {
         }
     }
 
+    /// Realized accuracy at `offset` (1-based, like [`Self::record`]).
+    /// Out-of-range offsets — including 0 — report 0.0 instead of
+    /// panicking on the `offset - 1` index.
     pub fn accuracy(&self, offset: usize) -> f64 {
+        if offset == 0 || offset > self.per_offset.len() {
+            return 0.0;
+        }
         let (h, t) = self.per_offset[offset - 1];
         if t == 0 {
             0.0
@@ -228,6 +234,20 @@ mod tests {
         assert!((t.accuracy(1) - 0.5).abs() < 1e-12);
         t.record(2, &[5], &[5]);
         assert!((t.accuracy(2) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn accuracy_out_of_range_offsets_do_not_panic() {
+        // regression: offset 0 and offset > len used to index out of bounds
+        let mut t = AccuracyTracker::new(2);
+        t.record(1, &[0], &[0]);
+        assert_eq!(t.accuracy(0), 0.0);
+        assert_eq!(t.accuracy(3), 0.0);
+        assert_eq!(t.accuracy(usize::MAX), 0.0);
+        // record() already guarded these; accuracy() now matches
+        t.record(0, &[0], &[0]);
+        t.record(9, &[0], &[0]);
+        assert!((t.accuracy(1) - 1.0).abs() < 1e-12);
     }
 
     #[test]

@@ -3,24 +3,60 @@
 //!   GEN <max_new_tokens> <temperature> <prompt…>\n
 //!   STATS\n
 //!
-//! responses are single JSON lines. The accept loop is single-threaded
-//! (batch-1 FCFS serving per the paper's evaluation protocol); connection
-//! handling never blocks generation indefinitely thanks to read timeouts.
-//! tokio is not in the offline vendor set — std::net + the loader's own
-//! scheduler thread cover the paper's concurrency needs (DESIGN.md).
+//! responses are single JSON lines. Two serving disciplines:
+//!
+//! * [`Server::serve`] — the paper's batch-1 FCFS protocol: a
+//!   single-threaded accept loop, one request at a time on the caller's
+//!   thread.
+//! * [`Server::serve_concurrent`] — continuous serving: an acceptor thread
+//!   plus one reader thread per connection feed the interleaved scheduler
+//!   through an mpsc event channel; the engine stays on the caller's
+//!   thread (PJRT state is not `Send`), and each completion is routed back
+//!   to its connection through a per-request response channel. While every
+//!   live sequence is stalled on the expert-load link, the scheduler parks
+//!   on the same channel and is woken by loader completion callbacks
+//!   (`ExpertLoader::on_complete`) or by new connections — it never spins.
+//!
+//! tokio is not in the offline vendor set — std::net/std::thread/mpsc plus
+//! the loader's own scheduler thread cover the concurrency needs
+//! (DESIGN.md).
 
+use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
-use std::time::Duration;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use crate::coordinator::{Coordinator, Request};
+use crate::coordinator::{Coordinator, GenerationResult, Request, SchedulerMode};
 use crate::util::json::{num, obj, s, Json};
 
 pub struct Server {
     listener: TcpListener,
     next_id: u64,
+}
+
+/// A parsed protocol line.
+enum Parsed {
+    Gen(Request),
+    Stats,
+}
+
+/// Commands flowing from connection threads to the scheduler thread.
+enum Command {
+    Gen { req: Request, resp: mpsc::Sender<Json> },
+    Stats { resp: mpsc::Sender<Json> },
+}
+
+/// Everything that can wake the scheduler thread.
+enum Event {
+    Cmd(Command),
+    /// a loader completion callback fired (some stalled sequence may run)
+    Wake,
+    /// a connection finished (max_conns accounting)
+    ConnClosed,
 }
 
 impl Server {
@@ -35,7 +71,8 @@ impl Server {
     }
 
     /// Serve forever (or until `max_conns` connections have been handled,
-    /// for tests/benches — `None` = unbounded).
+    /// for tests/benches — `None` = unbounded). Batch-1 FCFS: connections
+    /// are handled one at a time on the caller's thread.
     pub fn serve(&mut self, coord: &mut Coordinator, max_conns: Option<usize>) -> Result<()> {
         let mut handled = 0usize;
         loop {
@@ -50,6 +87,124 @@ impl Server {
                 }
             }
         }
+    }
+
+    /// Serve with the interleaved scheduler: concurrent connections each
+    /// get a reader thread; their requests decode round-robin on the
+    /// caller's thread, overlapping one sequence's expert loads with the
+    /// others' compute. Stops after `max_conns` connections have been
+    /// accepted *and* fully served (`None` = forever).
+    pub fn serve_concurrent(
+        &mut self,
+        coord: &mut Coordinator,
+        max_conns: Option<usize>,
+    ) -> Result<()> {
+        coord.mode = SchedulerMode::Interleaved;
+        let listener = self.listener.try_clone()?;
+        let (tx, rx) = mpsc::channel::<Event>();
+        let wake_tx = tx.clone();
+        let ids = Arc::new(AtomicU64::new(self.next_id));
+
+        let ids_acceptor = ids.clone();
+        let acceptor = std::thread::spawn(move || {
+            let mut handled = 0usize;
+            loop {
+                let Ok((stream, _peer)) = listener.accept() else { break };
+                let conn_tx = tx.clone();
+                let conn_ids = ids_acceptor.clone();
+                std::thread::spawn(move || {
+                    if let Err(e) = handle_conn(stream, conn_tx, conn_ids) {
+                        eprintln!("[server] connection error: {e:#}");
+                    }
+                });
+                handled += 1;
+                if let Some(m) = max_conns {
+                    if handled >= m {
+                        break;
+                    }
+                }
+            }
+        });
+
+        let mut responders: HashMap<u64, mpsc::Sender<Json>> = HashMap::new();
+        let mut closed = 0usize;
+        loop {
+            // ingest everything already queued, without blocking
+            while let Ok(ev) = rx.try_recv() {
+                handle_event(coord, ev, &mut responders, &mut closed);
+            }
+            let finished = max_conns.map(|m| closed >= m).unwrap_or(false);
+            if finished && !coord.has_work() && responders.is_empty() {
+                break;
+            }
+            if !coord.has_work() {
+                // idle: park until the next connection event
+                match rx.recv() {
+                    Ok(ev) => handle_event(coord, ev, &mut responders, &mut closed),
+                    Err(_) => break,
+                }
+                continue;
+            }
+            if coord.all_stalled() {
+                // every live sequence waits on the link: nothing to
+                // overlap. Park on the event channel — loader completion
+                // callbacks (or new connections) wake us. Parked time is
+                // the unhidden share of the load wait. Only genuinely
+                // in-flight ids are armed: a barrier whose loads partially
+                // completed would otherwise fire its callback immediately
+                // and turn the park into a hot spin.
+                let mut armed = false;
+                for id in coord.pending_load_ids() {
+                    if coord.engine.loader.is_done(id) {
+                        continue;
+                    }
+                    armed = true;
+                    let wtx = wake_tx.clone();
+                    coord.engine.loader.on_complete(id, move |_| {
+                        let _ = wtx.send(Event::Wake);
+                    });
+                }
+                if armed {
+                    let t0 = Instant::now();
+                    match rx.recv() {
+                        Ok(ev) => {
+                            coord.note_unhidden_wait(t0.elapsed());
+                            handle_event(coord, ev, &mut responders, &mut closed);
+                        }
+                        Err(_) => break,
+                    }
+                }
+                // !armed: every awaited load already completed — the next
+                // step's try_wait will clear the barriers without parking
+            }
+            // an engine error on one request must not tear down the whole
+            // server (the FCFS path replies err_json per request too):
+            // fail the affected requests individually and keep accepting
+            match coord.step_nonblocking() {
+                Ok(results) => {
+                    for r in results {
+                        if let Some(resp) = responders.remove(&r.id) {
+                            let _ = resp.send(gen_json(&r));
+                        }
+                    }
+                }
+                Err(e) => {
+                    eprintln!("[server] scheduler error: {e:#}");
+                    let msg = format!("{e:#}");
+                    for id in coord.abort_all() {
+                        if let Some(resp) = responders.remove(&id) {
+                            let _ = resp.send(err_json(&msg));
+                        }
+                    }
+                }
+            }
+        }
+        self.next_id = ids.load(Ordering::Relaxed);
+        if max_conns.is_some() {
+            let _ = acceptor.join();
+        }
+        coord.sync_report();
+        Ok(())
     }
 
     fn handle(&mut self, coord: &mut Coordinator, stream: TcpStream) -> Result<()> {
@@ -74,43 +229,125 @@ impl Server {
     }
 
     fn dispatch(&mut self, coord: &mut Coordinator, line: &str) -> Json {
-        let mut parts = line.splitn(4, ' ');
-        match parts.next() {
-            Some("GEN") => {
-                let max_new = parts.next().and_then(|v| v.parse::<usize>().ok());
-                let temp = parts.next().and_then(|v| v.parse::<f32>().ok());
-                let prompt = parts.next().unwrap_or("");
-                match (max_new, temp) {
-                    (Some(max_new), Some(temp)) if !prompt.is_empty() => {
-                        let id = self.next_id;
-                        self.next_id += 1;
-                        let req = Request {
-                            id,
-                            prompt: prompt.to_string(),
-                            max_new_tokens: max_new,
-                            temperature: temp,
-                        };
-                        match coord.generate(&req) {
-                            Ok(r) => obj(vec![
-                                ("id", num(r.id as f64)),
-                                ("text", s(&r.text)),
-                                ("tokens", num(r.tokens.len() as f64)),
-                                ("prefill_s", num(r.metrics.prefill_time.as_secs_f64())),
-                                ("decode_tps", num(r.metrics.decode_tps())),
-                            ]),
-                            Err(e) => err_json(&format!("{e:#}")),
-                        }
-                    }
-                    _ => err_json("usage: GEN <max_new_tokens> <temperature> <prompt>"),
-                }
-            }
-            Some("STATS") => {
+        let ids = AtomicU64::new(self.next_id);
+        let parsed = parse_line(line, &ids);
+        self.next_id = ids.into_inner();
+        match parsed {
+            Ok(Parsed::Gen(req)) => match coord.generate(&req) {
+                Ok(r) => gen_json(&r),
+                Err(e) => err_json(&format!("{e:#}")),
+            },
+            Ok(Parsed::Stats) => {
                 coord.sync_report();
                 coord.report.to_json()
             }
-            _ => err_json("unknown command (GEN | STATS)"),
+            Err(msg) => err_json(msg),
         }
     }
+}
+
+/// Parse one protocol line; GEN draws a fresh request id from `ids`.
+fn parse_line(line: &str, ids: &AtomicU64) -> Result<Parsed, &'static str> {
+    let mut parts = line.splitn(4, ' ');
+    match parts.next() {
+        Some("GEN") => {
+            let max_new = parts.next().and_then(|v| v.parse::<usize>().ok());
+            let temp = parts.next().and_then(|v| v.parse::<f32>().ok());
+            let prompt = parts.next().unwrap_or("");
+            match (max_new, temp) {
+                (Some(max_new), Some(temp)) if !prompt.is_empty() => {
+                    let id = ids.fetch_add(1, Ordering::Relaxed);
+                    Ok(Parsed::Gen(Request {
+                        id,
+                        prompt: prompt.to_string(),
+                        max_new_tokens: max_new,
+                        temperature: temp,
+                    }))
+                }
+                _ => Err("usage: GEN <max_new_tokens> <temperature> <prompt>"),
+            }
+        }
+        Some("STATS") => Ok(Parsed::Stats),
+        _ => Err("unknown command (GEN | STATS)"),
+    }
+}
+
+/// Per-connection reader thread: parse lines, forward commands to the
+/// scheduler, write each routed response back in order.
+fn handle_conn(
+    stream: TcpStream,
+    tx: mpsc::Sender<Event>,
+    ids: Arc<AtomicU64>,
+) -> Result<()> {
+    stream.set_read_timeout(Some(Duration::from_secs(30)))?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut out = stream;
+    let mut line = String::new();
+    let result: Result<()> = loop {
+        line.clear();
+        match reader.read_line(&mut line) {
+            Ok(0) => break Ok(()), // client closed
+            Ok(_) => {}
+            Err(e) => break Err(e.into()),
+        }
+        let trimmed = line.trim_end();
+        if trimmed.is_empty() {
+            continue;
+        }
+        let resp = match parse_line(trimmed, &ids) {
+            Ok(parsed) => {
+                let (rtx, rrx) = mpsc::channel::<Json>();
+                let cmd = match parsed {
+                    Parsed::Gen(req) => Command::Gen { req, resp: rtx },
+                    Parsed::Stats => Command::Stats { resp: rtx },
+                };
+                if tx.send(Event::Cmd(cmd)).is_err() {
+                    err_json("server shutting down")
+                } else {
+                    rrx.recv().unwrap_or_else(|_| err_json("server shutting down"))
+                }
+            }
+            Err(msg) => err_json(msg),
+        };
+        if out.write_all(resp.to_string().as_bytes()).is_err() {
+            break Ok(());
+        }
+        let _ = out.write_all(b"\n");
+        let _ = out.flush();
+    };
+    // always account the close so max_conns bookkeeping terminates
+    let _ = tx.send(Event::ConnClosed);
+    result
+}
+
+fn handle_event(
+    coord: &mut Coordinator,
+    ev: Event,
+    responders: &mut HashMap<u64, mpsc::Sender<Json>>,
+    closed: &mut usize,
+) {
+    match ev {
+        Event::Cmd(Command::Gen { req, resp }) => {
+            responders.insert(req.id, resp);
+            coord.submit(req);
+        }
+        Event::Cmd(Command::Stats { resp }) => {
+            coord.sync_report();
+            let _ = resp.send(coord.report.to_json());
+        }
+        Event::Wake => {}
+        Event::ConnClosed => *closed += 1,
+    }
+}
+
+fn gen_json(r: &GenerationResult) -> Json {
+    obj(vec![
+        ("id", num(r.id as f64)),
+        ("text", s(&r.text)),
+        ("tokens", num(r.tokens.len() as f64)),
+        ("prefill_s", num(r.metrics.prefill_time.as_secs_f64())),
+        ("decode_tps", num(r.metrics.decode_tps())),
+    ])
 }
 
 fn err_json(msg: &str) -> Json {
@@ -137,5 +374,24 @@ mod tests {
     fn err_json_shape() {
         let j = err_json("boom");
         assert_eq!(j.get("error").unwrap().as_str().unwrap(), "boom");
+    }
+
+    #[test]
+    fn parse_line_roundtrip() {
+        let ids = AtomicU64::new(7);
+        match parse_line("GEN 8 0.5 hello there world", &ids).unwrap() {
+            Parsed::Gen(r) => {
+                assert_eq!(r.id, 7);
+                assert_eq!(r.max_new_tokens, 8);
+                assert!((r.temperature - 0.5).abs() < 1e-6);
+                assert_eq!(r.prompt, "hello there world");
+            }
+            _ => panic!("expected GEN"),
+        }
+        assert!(matches!(parse_line("STATS", &ids), Ok(Parsed::Stats)));
+        assert!(parse_line("GEN 8", &ids).is_err());
+        assert!(parse_line("NOPE", &ids).is_err());
+        // prompt keeps internal spaces past the 4th split
+        assert_eq!(ids.load(Ordering::Relaxed), 8);
     }
 }

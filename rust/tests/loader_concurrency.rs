@@ -157,6 +157,65 @@ fn eviction_under_pressure_keeps_capacity_bound() {
 }
 
 #[test]
+fn is_idle_false_while_transfer_in_flight() {
+    // regression: is_idle only checked the two queue lanes, so a popped
+    // task still copying made the loader claim idle mid-transfer
+    let Some(s) = setup(8, 8, 1e7) else { return }; // ~150ms per f32 expert
+    assert!(s.loader.is_idle());
+    let key = ExpertKey::new(1, 1);
+    let id = s
+        .loader
+        .submit(key, Precision::F32, Pool::Hi, TaskKind::OnDemand, 1)
+        .expect("task submitted");
+    // give the scheduler thread time to pop the task: the lanes are empty
+    // again but the throttled copy is still running
+    std::thread::sleep(std::time::Duration::from_millis(30));
+    assert!(!s.loader.is_idle(), "mid-transfer loader claimed idle");
+    s.loader.wait(&[id]);
+    assert!(s.loader.is_idle(), "loader not idle after wait returned");
+    assert!(s.cache.lock().unwrap().hi.contains_ready(key));
+}
+
+#[test]
+fn try_wait_polls_without_blocking() {
+    let Some(s) = setup(8, 8, 1e7) else { return }; // slow link
+    let key = ExpertKey::new(2, 0);
+    let id = s
+        .loader
+        .submit(key, Precision::F32, Pool::Hi, TaskKind::OnDemand, 2)
+        .expect("task submitted");
+    assert!(!s.loader.try_wait(&[id]), "150ms load reported complete instantly");
+    while !s.loader.try_wait(&[id]) {
+        std::thread::sleep(std::time::Duration::from_millis(5));
+    }
+    // the empty set is trivially complete
+    assert!(s.loader.try_wait(&[]));
+    assert!(s.cache.lock().unwrap().hi.contains_ready(key));
+}
+
+#[test]
+fn completion_callback_fires_exactly_once_per_registration() {
+    let Some(s) = setup(8, 8, 8e9) else { return };
+    let id = s
+        .loader
+        .submit(ExpertKey::new(0, 2), Precision::F32, Pool::Hi, TaskKind::OnDemand, 0)
+        .expect("task submitted");
+    let (tx, rx) = std::sync::mpsc::channel();
+    s.loader.on_complete(id, move |done| {
+        let _ = tx.send(done);
+    });
+    let got = rx.recv_timeout(std::time::Duration::from_secs(10)).expect("callback fired");
+    assert_eq!(got, id);
+    assert!(rx.try_recv().is_err(), "callback fired twice");
+    // registering after completion fires immediately (id not yet consumed)
+    let (tx2, rx2) = std::sync::mpsc::channel();
+    s.loader.on_complete(id, move |done| {
+        let _ = tx2.send(done);
+    });
+    assert_eq!(rx2.try_recv().unwrap(), id);
+}
+
+#[test]
 fn loader_drop_joins_cleanly_with_pending_work() {
     let Some(s) = setup(8, 8, 1e8) else { return }; // slow
     for e in 0..6 {
