@@ -12,7 +12,7 @@ use hobbit::baselines;
 use hobbit::config::HardwareConfig;
 use hobbit::coordinator::{Coordinator, Request, SchedulerMode};
 use hobbit::engine::Engine;
-use hobbit::metrics::SchedulerStats;
+use hobbit::metrics::RunReport;
 
 /// Slow link + tiny cache: the regime where expert loading dominates
 /// decode (Fig 3a) and blocking FCFS leaves the engine idle.
@@ -38,7 +38,7 @@ const PROMPTS: [&str; 6] = [
 ];
 const MAX_NEW: usize = 12;
 
-fn run(mode: SchedulerMode) -> (f64, usize, Option<SchedulerStats>) {
+fn run(mode: SchedulerMode) -> (f64, usize, RunReport) {
     let engine = Engine::new(
         &PathBuf::from("artifacts"),
         "mixtral-tiny",
@@ -55,7 +55,7 @@ fn run(mode: SchedulerMode) -> (f64, usize, Option<SchedulerStats>) {
     let wall = t0.elapsed().as_secs_f64();
     let tokens: usize = results.iter().map(|r| r.tokens.len()).sum();
     coord.sync_report();
-    (wall, tokens, coord.report.scheduler.clone())
+    (wall, tokens, coord.report.clone())
 }
 
 fn main() {
@@ -77,13 +77,13 @@ fn main() {
         "fcfs         {fcfs_tokens:>4} tok in {fcfs_wall:>6.2}s  -> {fcfs_tps:>6.2} tok/s aggregate"
     );
 
-    let (il_wall, il_tokens, sch) = run(SchedulerMode::Interleaved);
+    let (il_wall, il_tokens, rep) = run(SchedulerMode::Interleaved);
     let il_tps = il_tokens as f64 / il_wall;
     println!(
         "interleaved  {il_tokens:>4} tok in {il_wall:>6.2}s  -> {il_tps:>6.2} tok/s aggregate"
     );
 
-    let sch = sch.expect("interleaved run reports scheduler stats");
+    let sch = rep.scheduler.clone().expect("interleaved run reports scheduler stats");
     println!(
         "\nspeedup {:.2}x | overlap ratio {:.2} | stall {:.2}s total, {:.2}s unhidden | mean ttft {:.3}s | mean queue wait {:.3}s",
         il_tps / fcfs_tps,
@@ -92,6 +92,10 @@ fn main() {
         sch.unhidden_stall.as_secs_f64(),
         sch.mean_ttft_s(),
         sch.mean_queue_wait_s(),
+    );
+    println!(
+        "cross-sequence load dedup: {} of {} on-demand requests joined an in-flight transfer",
+        rep.loader.dedup_hits, rep.loader.dedup_total,
     );
     if il_tps <= fcfs_tps {
         eprintln!("WARNING: interleaved did not beat FCFS on this host/config");

@@ -154,16 +154,29 @@ impl CachePool {
         self.map.is_empty()
     }
 
-    pub fn pin(&mut self, key: ExpertKey) {
+    /// Pin `key` against eviction (counts stack: predictions and barrier
+    /// uses may overlap). Returns whether the key currently maps to a slot
+    /// (ready or loading) — pinning ahead of a load is legal (the pin
+    /// protects the slot once reserved), but a call site that believes the
+    /// key is resident should `debug_assert!` the return so a mis-keyed
+    /// pin cannot silently leave the real slot evictable.
+    pub fn pin(&mut self, key: ExpertKey) -> bool {
         *self.pinned.entry(key).or_insert(0) += 1;
+        self.map.contains_key(&key)
     }
 
-    pub fn unpin(&mut self, key: ExpertKey) {
+    /// Release one pin of `key`. Returns whether a pin existed — false
+    /// means the unpin was mis-keyed (or unbalanced) and silently changed
+    /// nothing; call sites `debug_assert!` it.
+    pub fn unpin(&mut self, key: ExpertKey) -> bool {
         if let Some(c) = self.pinned.get_mut(&key) {
             *c -= 1;
             if *c == 0 {
                 self.pinned.remove(&key);
             }
+            true
+        } else {
+            false
         }
     }
 
@@ -527,6 +540,22 @@ mod tests {
         m.hi.unpin(k(0, 0));
         let r = m.reserve(k(0, 2), Pool::Hi, 0).unwrap();
         assert_eq!(r.evicted, Some(k(0, 0)));
+    }
+
+    #[test]
+    fn pin_unpin_report_slot_presence_and_balance() {
+        let mut m = mgr(1, 1);
+        // pinning ahead of the load is legal but reports no live slot yet
+        assert!(!m.hi.pin(k(0, 0)));
+        assert!(m.hi.unpin(k(0, 0)));
+        m.reserve(k(0, 0), Pool::Hi, 0).unwrap();
+        m.commit(k(0, 0), Pool::Hi);
+        assert!(m.hi.pin(k(0, 0)), "pin of a resident key must see its slot");
+        assert!(m.hi.unpin(k(0, 0)));
+        // unbalanced unpin reports false instead of silently no-op'ing
+        assert!(!m.hi.unpin(k(0, 0)));
+        // mis-keyed pool: no pin there either
+        assert!(!m.lo.unpin(k(0, 0)));
     }
 
     #[test]

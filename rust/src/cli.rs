@@ -69,6 +69,9 @@ COMMANDS:
               --hardware rtx4090|orin|rtx4090+cpu  --max-conns N
               --interleaved (continuous serving: overlap one sequence's
               expert loads with other sequences' decode)  --max-active N
+              --policy rr|sjf (interleaved fairness: round-robin, or
+              shortest-remaining-tokens first; cache-policy names still
+              work here too, e.g. --policy lru)
   generate    run one generation from the CLI
               --model M --artifacts DIR --prompt TEXT --max-new N --temp T
               --hardware H --no-dynamic --no-prefetch --policy P

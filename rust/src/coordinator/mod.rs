@@ -6,12 +6,13 @@
 //! * [`SchedulerMode::Fcfs`] — the paper's evaluation protocol: batch
 //!   size 1, FCFS, prefill latency + decode tokens/s as the headline
 //!   metrics (§5.1 "edge-side continuous serving scenarios often focus on
-//!   single-batch inference"). Every expert wait blocks in
-//!   `ExpertLoader::wait`; the report JSON is byte-identical to the
-//!   pre-scheduler format, so `figures/` and `baselines/` are unaffected.
+//!   single-batch inference"). Every expert wait blocks on its residency
+//!   tickets; the report JSON is byte-identical to the pre-scheduler
+//!   format, so `figures/` and `baselines/` are unaffected.
 //! * [`SchedulerMode::Interleaved`] — continuous serving: a set of live
-//!   sequences (each with its own `KvState` and per-sequence cache
-//!   records) is decoded round-robin, and expert waits are *non-blocking*:
+//!   sequences (each with its own `KvState` and per-sequence residency
+//!   session) is decoded round-robin (or shortest-job-first with
+//!   [`SchedPolicy::Sjf`]), and expert waits are *non-blocking*:
 //!   when sequence A's on-demand load is in flight, the scheduler advances
 //!   sequence B's decode instead of sleeping — the same latency-hiding the
 //!   paper's prefetcher performs within one sequence (§3.3), applied
@@ -26,6 +27,7 @@ use anyhow::Result;
 
 use crate::engine::{DecodeCursor, DecodeProgress, Engine, KvState};
 use crate::metrics::{RequestMetrics, RunReport, SchedulerStats};
+use crate::residency::{SequenceSession, Ticket};
 use crate::tensor::sample_logits;
 use crate::tokenizer::{Tokenizer, EOS};
 use crate::util::rng::Rng;
@@ -60,9 +62,42 @@ pub struct GenerationResult {
 pub enum SchedulerMode {
     /// paper-faithful batch-1 blocking FCFS (the default)
     Fcfs,
-    /// interleaved continuous serving: round-robin decode across live
+    /// interleaved continuous serving: decode interleaved across live
     /// sequences, suspending at expert-load barriers instead of blocking
     Interleaved,
+}
+
+/// Which live sequence the interleaved scheduler advances next (the
+/// fairness knob; `hobbit serve --interleaved --policy {rr,sjf}`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedPolicy {
+    /// advance every live sequence one unit per round (the default)
+    RoundRobin,
+    /// shortest-job-first: each round advances only the runnable sequence
+    /// with the fewest remaining tokens; stalled sequences overlap their
+    /// loads underneath it
+    Sjf,
+}
+
+impl SchedPolicy {
+    pub fn from_name(s: &str) -> Option<Self> {
+        match s {
+            "rr" | "round-robin" => Some(SchedPolicy::RoundRobin),
+            "sjf" | "shortest-job-first" => Some(SchedPolicy::Sjf),
+            _ => None,
+        }
+    }
+}
+
+/// SJF selection over (remaining_tokens, stalled) snapshots: the runnable
+/// sequence with the fewest remaining tokens (first on ties, for
+/// determinism). None when every sequence is stalled (or none exist).
+pub(crate) fn sjf_pick(seqs: &[(usize, bool)]) -> Option<usize> {
+    seqs.iter()
+        .enumerate()
+        .filter(|(_, (_, stalled))| !stalled)
+        .min_by_key(|(_, (remaining, _))| *remaining)
+        .map(|(i, _)| i)
 }
 
 struct QueuedRequest {
@@ -73,8 +108,10 @@ struct QueuedRequest {
 /// One live sequence in the interleaved scheduler.
 struct ActiveSeq {
     req: Request,
-    /// engine/cache sequence id (per-sequence records)
-    seq: u64,
+    /// RAII residency session: per-sequence cache records + prefetch
+    /// generation scope, retired when this sequence drops (finish, error,
+    /// or abort alike)
+    session: SequenceSession,
     kv: KvState,
     /// logits of the last completed step (next sample input)
     logits: Vec<f32>,
@@ -111,6 +148,8 @@ pub struct Coordinator {
     pub tokenizer: Tokenizer,
     pub report: RunReport,
     pub mode: SchedulerMode,
+    /// fairness policy of the interleaved scheduler
+    pub sched_policy: SchedPolicy,
     /// max sequences decoded concurrently in interleaved mode
     pub max_active: usize,
     queue: VecDeque<QueuedRequest>,
@@ -118,7 +157,6 @@ pub struct Coordinator {
     sched: SchedulerStats,
     busy_since: Option<Instant>,
     rng: Rng,
-    next_seq: u64,
 }
 
 impl Coordinator {
@@ -128,13 +166,13 @@ impl Coordinator {
             tokenizer: Tokenizer::new(),
             report: RunReport::default(),
             mode: SchedulerMode::Fcfs,
+            sched_policy: SchedPolicy::RoundRobin,
             max_active: 4,
             queue: VecDeque::new(),
             active: Vec::new(),
             sched: SchedulerStats::default(),
             busy_since: None,
             rng: Rng::new(0xC0FFEE),
-            next_seq: 1,
         }
     }
 
@@ -256,20 +294,52 @@ impl Coordinator {
         self.admit_waiting()?;
         let mut out = Vec::new();
         let mut progressed = false;
-        let mut i = 0;
-        while i < self.active.len() {
-            match self.advance_one(i)? {
-                // finish() removed the sequence at i: do not advance i
-                Advance::Finished(r) => {
-                    out.push(r);
-                    progressed = true;
+        match self.sched_policy {
+            SchedPolicy::RoundRobin => {
+                let mut i = 0;
+                while i < self.active.len() {
+                    match self.advance_one(i)? {
+                        // finish() removed the sequence at i: do not advance i
+                        Advance::Finished(r) => {
+                            out.push(r);
+                            progressed = true;
+                        }
+                        Advance::Progressed => {
+                            progressed = true;
+                            i += 1;
+                        }
+                        Advance::Stalled => {
+                            i += 1;
+                        }
+                    }
                 }
-                Advance::Progressed => {
-                    progressed = true;
-                    i += 1;
-                }
-                Advance::Stalled => {
-                    i += 1;
+            }
+            SchedPolicy::Sjf => {
+                // advance only the runnable sequence closest to completion;
+                // stalled sequences keep their loads in flight underneath.
+                // One unit per round keeps the serving event loop live.
+                let snapshot: Vec<(usize, bool)> = self
+                    .active
+                    .iter()
+                    .map(|s| {
+                        // is_blocked, not is_pending: a cursor whose loads
+                        // all completed is runnable (its next poll clears
+                        // the barrier) and must be selectable, or SJF
+                        // livelocks with every sequence "stalled"
+                        let stalled =
+                            s.cursor.as_ref().map(|c| c.is_blocked()).unwrap_or(false);
+                        (s.req.max_new_tokens.saturating_sub(s.generated.len()), stalled)
+                    })
+                    .collect();
+                if let Some(i) = sjf_pick(&snapshot) {
+                    match self.advance_one(i)? {
+                        Advance::Finished(r) => {
+                            out.push(r);
+                            progressed = true;
+                        }
+                        Advance::Progressed => progressed = true,
+                        Advance::Stalled => {}
+                    }
                 }
             }
         }
@@ -279,7 +349,7 @@ impl Coordinator {
                 // overlap, so block — the unhidden share of the load wait
                 let t0 = Instant::now();
                 let seq = &mut self.active[idx];
-                self.engine.set_active_sequence(Some(seq.seq));
+                self.engine.set_active_sequence(Some(seq.session.id()));
                 self.engine.decode_block(seq.cursor.as_mut().unwrap());
                 self.sched.unhidden_stall += t0.elapsed();
             }
@@ -301,13 +371,13 @@ impl Coordinator {
             })
     }
 
-    /// Loader task ids every live sequence is suspended on (for the
-    /// serving front-end's completion-callback wakeups).
-    pub fn pending_load_ids(&self) -> Vec<u64> {
+    /// Residency tickets every live sequence is suspended on (for the
+    /// serving front-end's completion wakeups).
+    pub fn pending_tickets(&self) -> Vec<Ticket> {
         self.active
             .iter()
             .filter_map(|s| s.cursor.as_ref())
-            .flat_map(|c| c.pending_ids().iter().copied())
+            .flat_map(|c| c.pending_tickets().iter().cloned())
             .collect()
     }
 
@@ -322,17 +392,18 @@ impl Coordinator {
     }
 
     /// Abort every live and queued request (after an engine error leaves
-    /// the scheduler state suspect): releases each live sequence's cache
-    /// records and returns the request ids so the serving front-end can
-    /// fail them individually instead of tearing the server down.
+    /// the scheduler state suspect): releases each live sequence's barrier
+    /// pins and — via its dropped session — its cache records, and returns
+    /// the request ids so the serving front-end can fail them individually
+    /// instead of tearing the server down.
     pub fn abort_all(&mut self) -> Vec<u64> {
         let mut ids = Vec::with_capacity(self.active.len() + self.queue.len());
         for mut seq in self.active.drain(..) {
             if let Some(cur) = seq.cursor.take() {
                 self.engine.decode_abort(cur);
             }
-            self.engine.end_sequence(seq.seq);
             ids.push(seq.req.id);
+            // seq drops here: its SequenceSession retires the records
         }
         for q in self.queue.drain(..) {
             ids.push(q.req.id);
@@ -364,23 +435,22 @@ impl Coordinator {
             if prompt_tokens.len() > budget {
                 prompt_tokens.truncate(budget.max(1));
             }
-            let seq_id = self.next_seq;
-            self.next_seq += 1;
-            let mut kv = self.engine.begin_sequence(seq_id);
-            self.engine.set_active_sequence(Some(seq_id));
+            let (session, mut kv) = self.engine.begin_session();
+            self.engine.set_active_sequence(Some(session.id()));
             let compute0 = self.engine.compute_time();
             let wait0 = self.engine.load_wait;
             let t0 = Instant::now();
             let logits = match self.engine.prefill(&mut kv, &prompt_tokens) {
                 Ok(l) => l,
                 Err(e) => {
-                    self.engine.end_sequence(seq_id);
+                    // session drops here, retiring its records
+                    self.engine.set_active_sequence(None);
                     return Err(e);
                 }
             };
             let prefill_time = t0.elapsed();
             self.active.push(ActiveSeq {
-                seq: seq_id,
+                session,
                 kv,
                 logits,
                 generated: Vec::with_capacity(q.req.max_new_tokens),
@@ -422,12 +492,12 @@ impl Coordinator {
                 return Ok(Advance::Finished(self.finish(i)));
             }
             self.active[i].generated.push(next);
-            self.engine.set_active_sequence(Some(self.active[i].seq));
+            self.engine.set_active_sequence(Some(self.active[i].session.id()));
             let cursor = self.engine.decode_begin(&self.active[i].kv, next)?;
             self.active[i].cursor = Some(cursor);
         }
 
-        let seq_id = self.active[i].seq;
+        let seq_id = self.active[i].session.id();
         let mut cursor = self.active[i].cursor.take().unwrap();
         self.engine.set_active_sequence(Some(seq_id));
         let compute0 = self.engine.compute_time();
@@ -454,11 +524,13 @@ impl Coordinator {
         }
     }
 
-    /// Retire sequence `i`: build its result, fold its metrics into the
-    /// report and scheduler aggregates, release its cache records.
+    /// Retire sequence `i`: build its result and fold its metrics into the
+    /// report and scheduler aggregates. The sequence's cache records and
+    /// prefetch scope are released by its session dropping at the end of
+    /// this function.
     fn finish(&mut self, i: usize) -> GenerationResult {
         let seq = self.active.remove(i);
-        self.engine.end_sequence(seq.seq);
+        self.engine.set_active_sequence(None);
         let metrics = RequestMetrics {
             prompt_tokens: seq.prompt_tokens,
             generated_tokens: seq.generated.len(),
@@ -487,10 +559,35 @@ impl Coordinator {
     /// realized tracker hits into them as it observes each layer, so
     /// nothing is recomputed (or clobbered) here.
     pub fn sync_report(&mut self) {
-        self.report.loader = self.engine.loader.stats.lock().unwrap().clone();
-        self.report.cache = self.engine.cache.lock().unwrap().stats.clone();
+        self.report.loader = self.engine.residency.loader_stats();
+        self.report.cache = self.engine.residency.cache_stats();
         if self.mode == SchedulerMode::Interleaved {
             self.report.scheduler = Some(self.sched.clone());
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sjf_picks_shortest_runnable() {
+        // (remaining tokens, stalled)
+        assert_eq!(sjf_pick(&[(8, false), (3, false), (5, false)]), Some(1));
+        // stalled sequences are skipped even when shortest
+        assert_eq!(sjf_pick(&[(8, false), (3, true), (5, false)]), Some(2));
+        // ties resolve to the first (submission order) for determinism
+        assert_eq!(sjf_pick(&[(4, false), (4, false)]), Some(0));
+        // nothing runnable
+        assert_eq!(sjf_pick(&[(1, true), (2, true)]), None);
+        assert_eq!(sjf_pick(&[]), None);
+    }
+
+    #[test]
+    fn sched_policy_names() {
+        assert_eq!(SchedPolicy::from_name("rr"), Some(SchedPolicy::RoundRobin));
+        assert_eq!(SchedPolicy::from_name("sjf"), Some(SchedPolicy::Sjf));
+        assert_eq!(SchedPolicy::from_name("lru"), None);
     }
 }

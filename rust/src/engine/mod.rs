@@ -12,13 +12,20 @@
 //! scheduler thread moves expert bytes concurrently with compute, which is
 //! exactly the overlap the paper's prefetching exploits.
 //!
+//! All three mechanisms reach the expert pools through one API: the
+//! [`crate::residency::ExpertResidency`] facade (`Engine::residency`),
+//! which owns the loader + cache + predictor interaction, hands out typed
+//! [`Ticket`]s for in-flight loads, and scopes per-sequence state in RAII
+//! [`SequenceSession`]s. The engine never touches `ExpertLoader::submit`
+//! or `CacheManager::reserve` directly.
+//!
 //! Decode comes in two shapes. [`Engine::decode_step`] is the blocking
 //! batch-1 step the paper evaluates. Underneath it, each token runs as a
 //! small per-layer state machine — a [`DecodeCursor`] — that can *suspend*
-//! at the ensure-resident barrier instead of sleeping in
-//! `ExpertLoader::wait`: [`Engine::decode_begin`] embeds the token,
-//! [`Engine::decode_poll`] advances layer-by-layer until either the token's
-//! logits are ready or an on-demand expert transfer is still in flight
+//! at the ensure-resident barrier instead of blocking on its tickets:
+//! [`Engine::decode_begin`] embeds the token, [`Engine::decode_poll`]
+//! advances layer-by-layer until either the token's logits are ready or an
+//! on-demand expert transfer is still in flight
 //! (`DecodeProgress::Pending`). The interleaved scheduler
 //! (`coordinator::SchedulerMode::Interleaved`) exploits this to advance
 //! another sequence's decode while this one's expert bytes are on the link.
@@ -40,10 +47,11 @@ use xla::Literal;
 use crate::cache::{CacheManager, Policy, Pool};
 use crate::config::{HardwareConfig, ModelConfig, PolicyConfig};
 use crate::loader::scorer::{self, Class};
-use crate::loader::{ExpertLoader, TaskKind};
+use crate::loader::GLOBAL_SCOPE;
 use crate::memory::{LinkModel, ThrottledCopier};
 use crate::model::{expert_literals, ExpertStore, NonExpertWeights};
 use crate::predictor::Predictor;
+use crate::residency::{ExpertResidency, SequenceSession, Ticket, TicketSet};
 use crate::runtime::{lit_f32, lit_i32, lit_to_f32, Runtime};
 use crate::{ExpertKey, Precision};
 
@@ -106,11 +114,11 @@ struct PendingLayer {
     hn: Vec<f32>,
     /// pinned experts to execute once resident
     uses: Vec<(ExpertKey, Class, Vec<f32>)>,
-    /// loader task ids the barrier waits on
-    waits: Vec<u64>,
+    /// residency tickets the barrier waits on
+    waits: TicketSet,
     /// when the barrier was reached (stall accounting)
     t0: Instant,
-    /// waits already consumed (via `decode_block` or `try_wait`)
+    /// waits already resolved (via `decode_block` or a ready poll)
     satisfied: bool,
 }
 
@@ -131,11 +139,11 @@ pub struct DecodeCursor {
 }
 
 impl DecodeCursor {
-    /// Loader task ids the cursor is currently suspended on (empty when
+    /// Residency tickets the cursor is currently suspended on (empty when
     /// runnable).
-    pub fn pending_ids(&self) -> &[u64] {
+    pub fn pending_tickets(&self) -> &[Ticket] {
         match &self.pending {
-            Some(p) if !p.satisfied => &p.waits,
+            Some(p) if !p.satisfied => p.waits.tickets(),
             _ => &[],
         }
     }
@@ -143,6 +151,18 @@ impl DecodeCursor {
     /// True when suspended on unconsumed in-flight loads.
     pub fn is_pending(&self) -> bool {
         self.pending.as_ref().map(|p| !p.satisfied).unwrap_or(false)
+    }
+
+    /// True when suspended AND at least one awaited load is still moving:
+    /// a cursor whose tickets all completed is runnable (the next poll
+    /// clears its barrier without blocking), which `is_pending` cannot
+    /// see. Schedulers that *select* rather than sweep (SJF) must use
+    /// this, or a ready-to-run sequence parks forever.
+    pub fn is_blocked(&self) -> bool {
+        self.pending
+            .as_ref()
+            .map(|p| !p.satisfied && !p.waits.all_ready())
+            .unwrap_or(false)
     }
 }
 
@@ -152,9 +172,9 @@ pub struct Engine {
     pub policy: PolicyConfig,
     pub hardware: HardwareConfig,
     pub store: Arc<ExpertStore>,
-    pub cache: Arc<Mutex<CacheManager>>,
-    pub loader: ExpertLoader,
-    pub predictor: Predictor,
+    /// the session-scoped residency facade (loader + cache + predictor):
+    /// the ONLY path through which experts become resident
+    pub residency: ExpertResidency,
     pub capture: Capture,
     /// retained for instrumentation (Fig 7 offline prediction accuracy)
     pub nonexpert: NonExpertWeights,
@@ -281,7 +301,6 @@ impl Engine {
             bytes_per_s: opts.hardware.load_bw,
             latency_s: opts.hardware.load_latency,
         }));
-        let loader = ExpertLoader::start(store.clone(), cache.clone(), copier);
         let predictor = Predictor::new(
             depth,
             cfg.top_k,
@@ -290,6 +309,8 @@ impl Engine {
             opts.policy.dynamic_loading,
             cfg.n_layers,
         );
+        let residency =
+            ExpertResidency::new(store.clone(), cache, copier, predictor, hi, lo);
 
         Ok(Self {
             rt,
@@ -297,9 +318,7 @@ impl Engine {
             policy: opts.policy,
             hardware: opts.hardware,
             store,
-            cache,
-            loader,
-            predictor,
+            residency,
             capture: opts.capture,
             nonexpert,
             nonexpert_emb,
@@ -316,26 +335,18 @@ impl Engine {
     /// Start a new sequence: fresh KV state + per-sequence cache records.
     /// Batch-1 semantics: resets the (global) sequence-level records, so it
     /// must not be used while other sequences are live — interleaved
-    /// serving uses [`Self::begin_sequence`] instead.
+    /// serving uses [`Self::begin_session`] instead.
     pub fn new_sequence(&mut self) -> KvState {
-        self.cache.lock().unwrap().reset_sequence();
+        self.residency.reset_batch1();
         self.current_seq = None;
         KvState::new(&self.cfg)
     }
 
-    /// Register a live sequence for interleaved serving: fresh KV state and
-    /// per-sequence cache records that do NOT clobber other live sequences.
-    pub fn begin_sequence(&mut self, seq: u64) -> KvState {
-        self.cache.lock().unwrap().begin_sequence_id(seq);
-        KvState::new(&self.cfg)
-    }
-
-    /// Retire a live sequence's cache records.
-    pub fn end_sequence(&mut self, seq: u64) {
-        if self.current_seq == Some(seq) {
-            self.current_seq = None;
-        }
-        self.cache.lock().unwrap().end_sequence_id(seq);
+    /// Register a live sequence for interleaved serving: an RAII residency
+    /// session (per-sequence cache records + private prefetch-generation
+    /// scope, both retired when the session drops) and fresh KV state.
+    pub fn begin_session(&self) -> (SequenceSession, KvState) {
+        (self.residency.begin_session(), KvState::new(&self.cfg))
     }
 
     /// Attribute subsequent compute to `seq`'s cache records (the
@@ -367,7 +378,7 @@ impl Engine {
     }
 
     /// One blocking decode step for `token`; returns next-token logits.
-    /// (The paper's batch-1 path: waits in `ExpertLoader::wait` at every
+    /// (The paper's batch-1 path: blocks on the residency tickets at every
     /// ensure-resident barrier.)
     pub fn decode_step(&mut self, kv: &mut KvState, token: u32) -> Result<Vec<f32>> {
         let mut cur = self.decode_begin(kv, token)?;
@@ -409,7 +420,7 @@ impl Engine {
         loop {
             // resolve the outstanding barrier first
             let still_loading = match &cur.pending {
-                Some(p) => !p.satisfied && !self.loader.try_wait(&p.waits),
+                Some(p) => !p.satisfied && !p.waits.all_ready(),
                 None => false,
             };
             if still_loading {
@@ -459,10 +470,9 @@ impl Engine {
     pub fn decode_block(&mut self, cur: &mut DecodeCursor) {
         if let Some(p) = &mut cur.pending {
             if !p.satisfied {
-                let waited = self.loader.wait(&p.waits);
+                let waited = self.residency.wait(&p.waits);
                 p.satisfied = true;
                 self.load_wait += waited;
-                self.loader.stats.lock().unwrap().wait_time += waited;
             }
         }
     }
@@ -474,7 +484,7 @@ impl Engine {
         if let Some(p) = cur.pending {
             for (key, class, _gatew) in p.uses {
                 let (_prec, pool) = self.class_target(class);
-                self.unpin(key, pool);
+                self.residency.release(key, pool);
             }
         }
     }
@@ -601,7 +611,9 @@ impl Engine {
     }
 
     /// Predictor step (decode only): plan mixed-precision prefetches for
-    /// subsequent layers from the stacked gate output.
+    /// subsequent layers from the stacked gate output, under the active
+    /// sequence's generation scope so other sequences' queued prefetches
+    /// survive this token.
     fn layer_plan_prefetch(&mut self, li_u32: u32, p_eff: usize, probs: &[f32]) {
         if p_eff <= 1 || self.policy.prefetch_depth == 0 {
             return;
@@ -609,88 +621,34 @@ impl Engine {
         let e = self.cfg.n_experts as usize;
         let stacked: Vec<Vec<f32>> =
             (0..p_eff).map(|j| probs[j * e..(j + 1) * e].to_vec()).collect();
-        self.loader.bump_prefetch_generation();
-        let mut cache = self.cache.lock().unwrap();
-        let plan = self
-            .predictor
-            .plan(&mut cache, li_u32, self.cfg.n_layers, &stacked);
-        drop(cache);
-        if let Some(plan) = plan {
-            let mut stats = self.loader.stats.lock().unwrap();
-            stats.prefetch_total += plan.experts.len() as u64;
-            drop(stats);
-            for (key, class) in plan.experts {
-                let (prec, pool) = self.class_target(class);
-                if class != Class::Skip {
-                    let _ = self.loader.submit(key, prec, pool, TaskKind::Prefetch, li_u32);
-                }
-            }
-        }
+        let scope = self.current_seq.unwrap_or(GLOBAL_SCOPE);
+        self.residency.plan_prefetch(scope, li_u32, self.cfg.n_layers, &stacked);
     }
 
     /// Score the pending prediction of this layer + release pins
     /// (unconditional on decode: even layers with p_eff == 1 may have been
     /// predicted from an earlier layer).
     fn layer_observe(&mut self, li_u32: u32, layer_probs_first: &[f32]) {
-        let mut cache = self.cache.lock().unwrap();
-        self.predictor.observe(&mut cache, li_u32, layer_probs_first);
-        let hits = self.predictor.tracker.per_offset[0].0;
-        drop(cache);
-        let mut st = self.loader.stats.lock().unwrap();
-        st.prefetch_hits = hits;
+        self.residency.observe(li_u32, layer_probs_first);
     }
 
-    /// Ensure-resident barrier: probe/pin the layer's experts, submit
-    /// on-demand loads for misses, and return the execution set plus the
-    /// loader task ids to wait on. Does NOT wait — blocking vs suspension
-    /// is the caller's policy.
+    /// Ensure-resident barrier: hand the layer's routed experts to the
+    /// residency facade, which probes/pins, submits (or joins) on-demand
+    /// loads for misses, and returns the execution set plus the tickets to
+    /// wait on. Does NOT wait — blocking vs suspension is the caller's
+    /// policy.
     fn layer_ensure_resident(
         &self,
         li_u32: u32,
         per_expert: &PerExpert,
-    ) -> (Vec<(ExpertKey, Class, Vec<f32>)>, Vec<u64>) {
-        let mut waits: Vec<u64> = Vec::new();
-        let mut uses: Vec<(ExpertKey, Class, Vec<f32>)> = Vec::new();
-        let seq = self.current_seq;
-        let mut cache = self.cache.lock().unwrap();
-        cache.note_token_for(seq);
-        for (&expert, (class, gatew, _score)) in per_expert {
-            if *class == Class::Skip {
-                let mut st = self.loader.stats.lock().unwrap();
-                st.skipped += 1;
-                continue;
-            }
-            let key = ExpertKey::new(li_u32, expert);
-            let (_prec, pool) = self.class_target(*class);
-            let mut hit = cache.access(key, pool);
-            // a Lo request served by a resident Hi copy is a free upgrade
-            let mut eff_class = *class;
-            if !hit && pool == Pool::Lo && cache.hi.contains_ready(key) {
-                hit = true;
-                eff_class = Class::Hi;
-                cache.stats.hits_hi += 1;
-                // undo the lo-miss penalty charged by access()
-                cache.stats.misses_lo -= 1;
-                cache.stats.miss_penalty -= cache.penalty_ratio();
-            }
-            match eff_class {
-                Class::Hi => cache.hi.pin(key),
-                _ => cache.lo.pin(key),
-            }
-            uses.push((key, eff_class, gatew.clone()));
-            if !hit {
-                drop(cache);
-                let (prec, pool) = self.class_target(eff_class);
-                if let Some(id) =
-                    self.loader.submit(key, prec, pool, TaskKind::OnDemand, li_u32)
-                {
-                    waits.push(id);
-                }
-                cache = self.cache.lock().unwrap();
-            }
-        }
-        drop(cache);
-        (uses, waits)
+    ) -> (Vec<(ExpertKey, Class, Vec<f32>)>, TicketSet) {
+        let demands: Vec<(ExpertKey, Class, Vec<f32>)> = per_expert
+            .iter()
+            .map(|(&expert, (class, gatew, _score))| {
+                (ExpertKey::new(li_u32, expert), *class, gatew.clone())
+            })
+            .collect();
+        self.residency.acquire(li_u32, demands, self.current_seq)
     }
 
     /// Execute the layer's resident experts and return the MoE output to
@@ -707,29 +665,20 @@ impl Engine {
         let seq = self.current_seq;
         for (key, class, gatew) in uses {
             let (prec, pool) = self.class_target(class);
-            let buf = {
-                let cache = self.cache.lock().unwrap();
-                let pool_ref = match pool {
-                    Pool::Hi => &cache.hi,
-                    Pool::Lo => &cache.lo,
-                };
-                pool_ref.buffer(key)
-            };
+            let buf = self.residency.buffer(key, pool);
             let Some(buf) = buf else {
-                // evicted between load and use under extreme pressure:
-                // execute directly from next-level memory (bypass)
+                // evicted between load and use under extreme pressure (or
+                // the joined load was dropped as stale): execute directly
+                // from next-level memory (bypass)
                 let record = self.store.record(key, prec).to_vec();
                 self.run_expert(&x_norm_lit, s, prec, &record, &gatew, &mut moe_out, key)?;
-                self.unpin(key, pool);
+                self.residency.release(key, pool);
                 continue;
             };
             let record = buf.lock().unwrap().clone();
             self.run_expert(&x_norm_lit, s, prec, &record, &gatew, &mut moe_out, key)?;
-            {
-                let mut cache = self.cache.lock().unwrap();
-                cache.note_use_for(key, pool, seq);
-            }
-            self.unpin(key, pool);
+            self.residency.note_use(key, pool, seq);
+            self.residency.release(key, pool);
         }
         Ok(moe_out)
     }
@@ -776,10 +725,8 @@ impl Engine {
             }
             let (uses, waits) = self.layer_ensure_resident(li_u32, &per_expert);
             if !waits.is_empty() {
-                let waited = self.loader.wait(&waits);
+                let waited = self.residency.wait(&waits);
                 self.load_wait += waited;
-                let mut st = self.loader.stats.lock().unwrap();
-                st.wait_time += waited;
             }
             let moe_out = self.layer_ffn(s, &hn, uses)?;
             for (xv, mv) in x.iter_mut().zip(&moe_out) {
@@ -794,14 +741,6 @@ impl Engine {
             return Ok(None);
         }
         Ok(Some(self.head(s, real, &x)?))
-    }
-
-    fn unpin(&self, key: ExpertKey, pool: Pool) {
-        let mut cache = self.cache.lock().unwrap();
-        match pool {
-            Pool::Hi => cache.hi.unpin(key),
-            Pool::Lo => cache.lo.unpin(key),
-        }
     }
 
     fn run_expert(
@@ -849,10 +788,7 @@ impl Engine {
 
     /// Map a scorer class to (precision, pool) under the active config.
     fn class_target(&self, class: Class) -> (Precision, Pool) {
-        match class {
-            Class::Hi => (self.policy.hi_precision, Pool::Hi),
-            Class::Lo | Class::Skip => (self.policy.lo_precision, Pool::Lo),
-        }
+        self.residency.class_target(class)
     }
 
     /// Compute-time spent inside PJRT (for Fig 3a-real).

@@ -19,6 +19,11 @@
 //! * [`cache`] — the sequence-level multidimensional expert cache (§3.4).
 //! * [`loader`] — the token-level dynamic expert loader (§3.2).
 //! * [`predictor`] — the layer-level adaptive expert prefetcher (§3.3).
+//! * [`residency`] — the session-scoped facade unifying loader + cache +
+//!   predictor: typed load tickets, a cross-sequence shared wait-set with
+//!   dedup accounting, RAII sequence sessions, and per-sequence prefetch
+//!   generations. The only API through which the engine and coordinator
+//!   make experts resident.
 //! * [`engine`] — the per-layer inference engine over PJRT executables.
 //! * [`coordinator`] — request routing, sequence lifecycle, generation;
 //!   two scheduler modes: the paper-faithful blocking batch-1 FCFS, and an
@@ -47,6 +52,7 @@ pub mod metrics;
 pub mod model;
 pub mod predictor;
 pub mod quant;
+pub mod residency;
 pub mod runtime;
 pub mod server;
 pub mod sim;

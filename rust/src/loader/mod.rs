@@ -7,12 +7,24 @@
 //! observation, a transfer in flight is never preempted: an on-demand task
 //! arriving behind a started prefetch waits for it — the misprediction
 //! penalty of Fig 9. On-demand tasks do jump ahead of *queued* (not yet
-//! started) prefetches, and stale prefetches are dropped by generation.
+//! started) prefetches — [`ExpertLoader::promote_to_ondemand`] moves a
+//! queued prefetch into the priority lane when an on-demand request joins
+//! it — and stale prefetches are dropped by generation.
+//!
+//! Prefetch generations are **scoped**: each live sequence bumps its own
+//! entry in the [`GenTable`] (scope = sequence id; scope 0 is the global
+//! batch-1 stream), so one sequence's token advance no longer invalidates
+//! other sequences' queued prefetches. A retired scope is marked
+//! `u64::MAX`, which makes every queued prefetch of that sequence stale;
+//! the worker garbage-collects retired entries when its prefetch lane
+//! drains.
 //!
 //! Completion can be consumed three ways: blocking ([`ExpertLoader::wait`]),
-//! polling ([`ExpertLoader::try_wait`] — the interleaved scheduler's
-//! non-blocking barrier), or pushed ([`ExpertLoader::on_complete`] per-task
-//! callbacks, used by the serving front-end to wake its event loop).
+//! polling ([`ExpertLoader::try_wait`]), or pushed ([`ExpertLoader::on_complete`]
+//! per-task callbacks). The residency facade (`residency::ExpertResidency`)
+//! is the intended client of the push path: it registers a *consuming*
+//! callback per task so the done-set stays bounded without anyone calling
+//! `wait`.
 
 pub mod scorer;
 
@@ -35,6 +47,15 @@ pub enum TaskKind {
     Prefetch,
 }
 
+/// The global (batch-1) prefetch-generation scope; live sequences use
+/// their sequence id.
+pub const GLOBAL_SCOPE: u64 = 0;
+
+/// Per-scope prefetch generation table, shared between the submit path,
+/// the worker's staleness check, and sequence retirement (`u64::MAX`
+/// marks a retired scope).
+pub type GenTable = Arc<Mutex<HashMap<u64, u64>>>;
+
 /// One entry in the Task Queue.
 #[derive(Debug, Clone)]
 pub struct LoadTask {
@@ -45,6 +66,8 @@ pub struct LoadTask {
     pub kind: TaskKind,
     /// prefetch generation (stale generations are dropped)
     pub gen: u64,
+    /// generation scope this task was issued under (sequence id; 0 = global)
+    pub scope: u64,
     /// layer being executed when the task was issued (for Eq. 3's l_i)
     pub current_layer: u32,
 }
@@ -59,8 +82,8 @@ struct TaskQueue {
 
 /// Completion callback: invoked once with the task id when the task
 /// finishes (successfully, deduped, or dropped as stale). Callbacks must be
-/// cheap and must not call back into the loader (they can run on the
-/// scheduler thread while it holds the queue lock).
+/// cheap and must not re-enter the loader's callback registration (they run
+/// on the scheduler thread).
 type Callback = Box<dyn FnOnce(u64) + Send + 'static>;
 
 struct Shared {
@@ -68,12 +91,34 @@ struct Shared {
     queue_cv: Condvar,
     done: Mutex<HashSet<u64>>,
     done_cv: Condvar,
-    callbacks: Mutex<HashMap<u64, Callback>>,
-    prefetch_gen: AtomicU64,
+    /// id -> (callback, consume-done-entry-after-firing)
+    callbacks: Mutex<HashMap<u64, (Callback, bool)>>,
+    gens: GenTable,
     next_id: AtomicU64,
     stop: AtomicBool,
     /// tasks popped from a lane but not yet completed (mid-transfer)
     in_flight: AtomicUsize,
+}
+
+impl Shared {
+    /// Publish completion BEFORE draining the callback: `on_complete`
+    /// re-checks `done` after inserting, so whichever side loses the race
+    /// still finds (exactly one of) the entry to fire. The callbacks lock
+    /// is NOT held while the callback runs.
+    fn complete(&self, id: u64) {
+        {
+            let mut done = self.done.lock().unwrap();
+            done.insert(id);
+        }
+        self.done_cv.notify_all();
+        let cb = self.callbacks.lock().unwrap().remove(&id);
+        if let Some((cb, consume)) = cb {
+            cb(id);
+            if consume {
+                self.done.lock().unwrap().remove(&id);
+            }
+        }
+    }
 }
 
 /// Handle to the loader: issue tasks, wait for completions.
@@ -96,7 +141,7 @@ impl ExpertLoader {
             done: Mutex::new(HashSet::new()),
             done_cv: Condvar::new(),
             callbacks: Mutex::new(HashMap::new()),
-            prefetch_gen: AtomicU64::new(0),
+            gens: Arc::new(Mutex::new(HashMap::new())),
             next_id: AtomicU64::new(1),
             stop: AtomicBool::new(false),
             in_flight: AtomicUsize::new(0),
@@ -116,8 +161,8 @@ impl ExpertLoader {
         Self { shared, cache, stats, handle: Some(handle) }
     }
 
-    /// Enqueue a load; returns the task id to wait on (None if the expert
-    /// is already resident or incoming, or no slot could be reserved).
+    /// Enqueue a load in the global generation scope; returns the task id
+    /// to wait on (None if the expert is already resident or incoming).
     pub fn submit(
         &self,
         key: ExpertKey,
@@ -126,6 +171,20 @@ impl ExpertLoader {
         kind: TaskKind,
         current_layer: u32,
     ) -> Option<u64> {
+        self.submit_scoped(key, precision, pool, kind, current_layer, GLOBAL_SCOPE)
+    }
+
+    /// Enqueue a load under a specific prefetch-generation scope (the
+    /// issuing sequence's id; [`GLOBAL_SCOPE`] for the batch-1 path).
+    pub fn submit_scoped(
+        &self,
+        key: ExpertKey,
+        precision: Precision,
+        pool: Pool,
+        kind: TaskKind,
+        current_layer: u32,
+        scope: u64,
+    ) -> Option<u64> {
         {
             let cache = self.cache.lock().unwrap();
             if cache.contains(key, pool) {
@@ -133,8 +192,11 @@ impl ExpertLoader {
             }
         }
         let id = self.shared.next_id.fetch_add(1, Ordering::Relaxed);
-        let gen = self.shared.prefetch_gen.load(Ordering::Relaxed);
-        let task = LoadTask { id, key, precision, pool, kind, gen, current_layer };
+        let gen = {
+            let gens = self.shared.gens.lock().unwrap();
+            gens.get(&scope).copied().unwrap_or(0)
+        };
+        let task = LoadTask { id, key, precision, pool, kind, gen, scope, current_layer };
         let mut q = self.shared.queue.lock().unwrap();
         match kind {
             TaskKind::OnDemand => q.ondemand.push_back(task),
@@ -145,9 +207,62 @@ impl ExpertLoader {
         Some(id)
     }
 
-    /// Invalidate all queued (unstarted) prefetches from earlier tokens.
+    /// Invalidate all queued (unstarted) prefetches of the global scope.
     pub fn bump_prefetch_generation(&self) {
-        self.shared.prefetch_gen.fetch_add(1, Ordering::Relaxed);
+        self.bump_prefetch_generation_for(GLOBAL_SCOPE);
+    }
+
+    /// Invalidate all queued (unstarted) prefetches issued under `scope`
+    /// by earlier tokens of that sequence. Other scopes are unaffected.
+    pub fn bump_prefetch_generation_for(&self, scope: u64) {
+        let mut gens = self.shared.gens.lock().unwrap();
+        let e = gens.entry(scope).or_insert(0);
+        *e = e.saturating_add(1);
+    }
+
+    /// Shared handle to the per-scope generation table (sequence
+    /// retirement marks its scope `u64::MAX` through this).
+    pub fn gen_table(&self) -> GenTable {
+        self.shared.gens.clone()
+    }
+
+    /// Re-stamp a *queued* prefetch task with `scope`'s current generation
+    /// (a fresh prefetch request joined it). Without this, a re-planned
+    /// prefetch that joins its own previous-token task — now stale after
+    /// the planner's generation bump — would be silently dropped instead
+    /// of loaded. Returns false when the task already started or
+    /// completed (the join then resolves off the real transfer).
+    pub fn refresh_prefetch(&self, id: u64, scope: u64) -> bool {
+        let cur = {
+            let gens = self.shared.gens.lock().unwrap();
+            gens.get(&scope).copied().unwrap_or(0)
+        };
+        let mut q = self.shared.queue.lock().unwrap();
+        if let Some(t) = q.prefetch.iter_mut().find(|t| t.id == id) {
+            t.scope = scope;
+            t.gen = cur;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Move a *queued* prefetch task into the on-demand lane (an on-demand
+    /// request joined it). Returns false when the task already started or
+    /// completed — a started transfer is non-preemptible (cudaMemcpy
+    /// semantics), so the joiner simply waits it out.
+    pub fn promote_to_ondemand(&self, id: u64) -> bool {
+        let mut q = self.shared.queue.lock().unwrap();
+        if let Some(pos) = q.prefetch.iter().position(|t| t.id == id) {
+            let mut t = q.prefetch.remove(pos).expect("position valid");
+            t.kind = TaskKind::OnDemand;
+            q.ondemand.push_back(t);
+            drop(q);
+            self.shared.queue_cv.notify_one();
+            true
+        } else {
+            false
+        }
     }
 
     /// Block until every id in `ids` has completed. Returns wait time.
@@ -195,12 +310,28 @@ impl ExpertLoader {
     /// id is consumed by `wait`/`try_wait` — a consumed id never fires.
     /// Re-registering replaces (and drops) the previous callback.
     pub fn on_complete<F: FnOnce(u64) + Send + 'static>(&self, id: u64, cb: F) {
-        self.shared.callbacks.lock().unwrap().insert(id, Box::new(cb));
+        self.register_callback(id, Box::new(cb), false);
+    }
+
+    /// Like [`Self::on_complete`], but the done-set entry is consumed when
+    /// the callback fires, so completion state does not accumulate for ids
+    /// nobody will `wait` on (the residency facade's contract).
+    pub fn on_complete_consume<F: FnOnce(u64) + Send + 'static>(&self, id: u64, cb: F) {
+        self.register_callback(id, Box::new(cb), true);
+    }
+
+    fn register_callback(&self, id: u64, cb: Callback, consume: bool) {
+        self.shared.callbacks.lock().unwrap().insert(id, (cb, consume));
         // the worker publishes `done` before draining callbacks, so if the
         // task raced past us we can still claim (or find gone) our entry
-        if self.shared.done.lock().unwrap().contains(&id) {
-            if let Some(cb) = self.shared.callbacks.lock().unwrap().remove(&id) {
+        let already = self.shared.done.lock().unwrap().contains(&id);
+        if already {
+            let cb = self.shared.callbacks.lock().unwrap().remove(&id);
+            if let Some((cb, consume)) = cb {
                 cb(id);
+                if consume {
+                    self.shared.done.lock().unwrap().remove(&id);
+                }
             }
         }
     }
@@ -254,15 +385,38 @@ impl Worker {
                         self.shared.in_flight.fetch_add(1, Ordering::SeqCst);
                         break t;
                     }
-                    let cur_gen = self.shared.prefetch_gen.load(Ordering::Relaxed);
-                    while let Some(t) = q.prefetch.front() {
-                        if t.gen < cur_gen {
-                            let stale = q.prefetch.pop_front().unwrap();
-                            // report as done so no waiter hangs
-                            self.mark_done(stale.id);
-                        } else {
-                            break;
+                    let mut stale: Vec<u64> = Vec::new();
+                    {
+                        let mut gens = self.shared.gens.lock().unwrap();
+                        while let Some(t) = q.prefetch.front() {
+                            let cur = gens.get(&t.scope).copied().unwrap_or(0);
+                            if t.gen < cur {
+                                let dropped = q.prefetch.pop_front().unwrap();
+                                stale.push(dropped.id);
+                            } else {
+                                break;
+                            }
                         }
+                        // retired scopes (u64::MAX) are only referenced by
+                        // queued prefetches; an empty lane proves none
+                        // remain, so GC here — a busy on-demand lane must
+                        // not starve the table (one entry per retired
+                        // sequence otherwise accumulates forever)
+                        if q.prefetch.is_empty() {
+                            gens.retain(|_, g| *g != u64::MAX);
+                        }
+                    }
+                    if !stale.is_empty() {
+                        // report as done so no waiter hangs. Completion
+                        // callbacks may take locks of their own (the
+                        // residency wait-set), so fire them OUTSIDE the
+                        // queue critical section.
+                        drop(q);
+                        for id in stale {
+                            self.shared.complete(id);
+                        }
+                        q = self.shared.queue.lock().unwrap();
+                        continue;
                     }
                     if let Some(t) = q.prefetch.pop_front() {
                         self.shared.in_flight.fetch_add(1, Ordering::SeqCst);
@@ -280,7 +434,7 @@ impl Worker {
             // waiters so a returned `wait` implies `is_idle` (absent new
             // submissions)
             self.shared.in_flight.fetch_sub(1, Ordering::SeqCst);
-            self.mark_done(id);
+            self.shared.complete(id);
         }
     }
 
@@ -315,19 +469,6 @@ impl Worker {
                 TaskKind::Prefetch => st.prefetch_loads[slot] += 1,
             }
             st.bytes_loaded += record.len() as u64;
-        }
-    }
-
-    fn mark_done(&self, id: u64) {
-        // publish completion BEFORE draining the callback: `on_complete`
-        // re-checks `done` after inserting, so whichever side loses the
-        // race still finds (exactly one of) the entry to fire
-        let mut done = self.shared.done.lock().unwrap();
-        done.insert(id);
-        drop(done);
-        self.shared.done_cv.notify_all();
-        if let Some(cb) = self.shared.callbacks.lock().unwrap().remove(&id) {
-            cb(id);
         }
     }
 }

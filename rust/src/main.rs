@@ -8,7 +8,7 @@ use hobbit::baselines::{self, EQ3_WEIGHTS};
 use hobbit::cache::Policy;
 use hobbit::cli::{Args, USAGE};
 use hobbit::config::{HardwareConfig, PolicyConfig};
-use hobbit::coordinator::{Coordinator, Request, SchedulerMode};
+use hobbit::coordinator::{Coordinator, Request, SchedPolicy, SchedulerMode};
 use hobbit::engine::Engine;
 use hobbit::figures;
 use hobbit::server::Server;
@@ -42,7 +42,10 @@ fn main() {
     }
 }
 
-fn build_engine(args: &Args) -> Result<Engine> {
+/// `allow_sched_policy`: whether `--policy rr|sjf` is meaningful for the
+/// calling command (`serve --interleaved`); everywhere else those names
+/// are rejected instead of silently doing nothing.
+fn build_engine(args: &Args, allow_sched_policy: bool) -> Result<Engine> {
     let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts"));
     let model = args.get_or("model", "mixtral-tiny");
     let hw = HardwareConfig::preset(args.get_or("hardware", "rtx4090"))
@@ -55,8 +58,21 @@ fn build_engine(args: &Args) -> Result<Engine> {
         baselines::real_hobbit(hw)
     };
     if let Some(p) = args.get("policy") {
-        opts.cache_policy =
-            Some(Policy::from_name(p, EQ3_WEIGHTS).ok_or_else(|| anyhow!("unknown policy"))?);
+        // scheduler fairness names (rr/sjf) are handled by `serve`, not
+        // the cache-policy table
+        if SchedPolicy::from_name(p).is_some() {
+            if !allow_sched_policy {
+                return Err(anyhow!(
+                    "--policy {p} is a scheduler policy and applies to \
+                     `serve --interleaved` only (cache policies: \
+                     lru|lfu|lfu-model|lhu|fld|random|multidim)"
+                ));
+            }
+        } else {
+            opts.cache_policy = Some(
+                Policy::from_name(p, EQ3_WEIGHTS).ok_or_else(|| anyhow!("unknown policy"))?,
+            );
+        }
     }
     if let Some(group) = args.get("precision-group") {
         if group == "int8" {
@@ -71,12 +87,22 @@ fn build_engine(args: &Args) -> Result<Engine> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
-    let engine = build_engine(args)?;
-    let mut coord = Coordinator::new(engine);
     let interleaved = args.has("interleaved");
+    let sched = args.get("policy").and_then(SchedPolicy::from_name);
+    if sched.is_some() && !interleaved {
+        return Err(anyhow!(
+            "--policy {} schedules interleaved serving; add --interleaved",
+            args.get("policy").unwrap_or_default()
+        ));
+    }
+    let engine = build_engine(args, true)?;
+    let mut coord = Coordinator::new(engine);
     if interleaved {
         coord.mode = SchedulerMode::Interleaved;
         coord.max_active = args.get_usize("max-active", coord.max_active);
+        if let Some(p) = sched {
+            coord.sched_policy = p;
+        }
     }
     let addr = args.get_or("addr", "127.0.0.1:7077");
     let mut server = Server::bind(addr)?;
@@ -84,7 +110,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "hobbit serving on {} (platform: {}, scheduler: {})",
         server.local_addr()?,
         coord.engine.rt.platform(),
-        if interleaved { "interleaved" } else { "fcfs" },
+        match (interleaved, coord.sched_policy) {
+            (false, _) => "fcfs",
+            (true, SchedPolicy::RoundRobin) => "interleaved/rr",
+            (true, SchedPolicy::Sjf) => "interleaved/sjf",
+        },
     );
     let max_conns = args.get("max-conns").and_then(|v| v.parse().ok());
     if interleaved {
@@ -98,7 +128,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
 }
 
 fn cmd_generate(args: &Args) -> Result<()> {
-    let engine = build_engine(args)?;
+    let engine = build_engine(args, false)?;
     let mut coord = Coordinator::new(engine);
     let req = Request {
         id: 1,
@@ -239,7 +269,7 @@ fn cmd_selfcheck(args: &Args) -> Result<()> {
     let artifacts = Path::new(args.get_or("artifacts", "artifacts")).to_path_buf();
     let model = args.get_or("model", "mixtral-tiny");
     println!("selfcheck: opening artifacts at {}/{model}", artifacts.display());
-    let engine = build_engine(args)?;
+    let engine = build_engine(args, false)?;
     println!("  platform = {}", engine.rt.platform());
     println!("  model    = {} ({} layers, {} experts/layer, top-{})",
         engine.cfg.name, engine.cfg.n_layers, engine.cfg.n_experts, engine.cfg.top_k);

@@ -20,6 +20,13 @@ pub struct LoaderStats {
     /// prefetch predictions that turned out correct / total
     pub prefetch_hits: u64,
     pub prefetch_total: u64,
+    /// on-demand load requests that joined an already in-flight task for
+    /// the same (expert, pool) instead of submitting a duplicate — the
+    /// cross-sequence shared wait-set at work (serving metric; the FCFS
+    /// report does not carry it)
+    pub dedup_hits: u64,
+    /// total on-demand load requests that reached the residency wait-set
+    pub dedup_total: u64,
 }
 
 #[derive(Debug, Clone, Default)]
@@ -203,9 +210,16 @@ impl RunReport {
             ),
             ("requests", arr(self.requests.iter().map(|r| r.to_json()).collect())),
         ];
-        // interleaved mode only: batch-1 FCFS reports stay byte-identical
+        // interleaved mode only: batch-1 FCFS reports stay byte-identical.
+        // Cross-sequence dedup counters live in LoaderStats but are a
+        // serving phenomenon, so they surface here.
         if let Some(sch) = &self.scheduler {
-            pairs.push(("serving", sch.to_json()));
+            let mut serving = sch.to_json();
+            if let Json::Obj(m) = &mut serving {
+                m.insert("dedup_hits".into(), num(self.loader.dedup_hits as f64));
+                m.insert("dedup_total".into(), num(self.loader.dedup_total as f64));
+            }
+            pairs.push(("serving", serving));
         }
         pairs.push(("schema", s("hobbit.run_report.v1")));
         obj(pairs)
@@ -258,11 +272,17 @@ mod tests {
     #[test]
     fn serving_section_only_in_interleaved_reports() {
         let mut rep = RunReport::default();
+        rep.loader.dedup_hits = 3;
+        rep.loader.dedup_total = 7;
         let fcfs = rep.to_json().to_string();
         assert!(!fcfs.contains("\"serving\""), "FCFS report grew a serving key");
+        assert!(!fcfs.contains("dedup"), "FCFS report grew dedup keys");
         rep.scheduler = Some(SchedulerStats::default());
         let j = Json::parse(&rep.to_json().to_string()).unwrap();
-        assert!(j.get("serving").unwrap().get("overlap_ratio").is_some());
+        let serving = j.get("serving").unwrap();
+        assert!(serving.get("overlap_ratio").is_some());
+        assert_eq!(serving.get("dedup_hits").unwrap().as_f64().unwrap(), 3.0);
+        assert_eq!(serving.get("dedup_total").unwrap().as_f64().unwrap(), 7.0);
     }
 
     #[test]

@@ -61,6 +61,16 @@ impl AccuracyTracker {
     }
 }
 
+/// One layer's outstanding prediction: the predicted expert ids (accuracy
+/// scoring) and exactly the (key, pool) pins taken for them (release).
+/// Tracking pins explicitly — instead of blindly unpinning both pools —
+/// keeps every `CachePool::unpin` matched to a real pin, which the pools
+/// now assert.
+struct PendingPrediction {
+    experts: Vec<u32>,
+    pinned: Vec<(ExpertKey, Pool)>,
+}
+
 /// The predictor proper.
 pub struct Predictor {
     pub depth: usize,
@@ -71,7 +81,7 @@ pub struct Predictor {
     pub dynamic: bool,
     pub tracker: AccuracyTracker,
     /// last predictions per absolute layer (for accuracy scoring + unpin)
-    pending: Vec<Option<Vec<u32>>>,
+    pending: Vec<Option<PendingPrediction>>,
 }
 
 impl Predictor {
@@ -83,7 +93,7 @@ impl Predictor {
             t2,
             dynamic,
             tracker: AccuracyTracker::new(depth.max(1)),
-            pending: vec![None; n_layers as usize],
+            pending: (0..n_layers).map(|_| None).collect(),
         }
     }
 
@@ -122,29 +132,30 @@ impl Predictor {
             // release pins of a superseded prediction for this layer before
             // recording the new one (predictions refresh every token)
             if let Some(old) = self.pending[layer as usize].take() {
-                for e in old {
-                    let key = ExpertKey::new(layer, e);
-                    cache.hi.unpin(key);
-                    cache.lo.unpin(key);
-                }
+                release_pins(cache, &old.pinned);
             }
-            self.pending[layer as usize] = Some(predicted_ids);
-            // pin predictions in whichever pool they will be read from
+            // pin predictions in whichever pool they will be read from,
+            // remembering exactly what was pinned for balanced release
             let mut covered = true;
+            let mut pinned: Vec<(ExpertKey, Pool)> = Vec::new();
             for (key, class) in &experts {
                 let pool = match class {
                     Class::Hi => Pool::Hi,
                     Class::Lo | Class::Skip => Pool::Lo,
                 };
                 if cache.contains(*key, pool) {
-                    match pool {
+                    let live = match pool {
                         Pool::Hi => cache.hi.pin(*key),
                         Pool::Lo => cache.lo.pin(*key),
-                    }
+                    };
+                    debug_assert!(live, "predicted {key:?} vanished between probe and pin");
+                    pinned.push((*key, pool));
                 } else if *class != Class::Skip {
                     covered = false;
                 }
             }
+            self.pending[layer as usize] =
+                Some(PendingPrediction { experts: predicted_ids, pinned });
             if !covered {
                 plan = Some(LayerPrediction { layer, experts });
                 break; // first uncovered layer is where prefetching helps
@@ -158,16 +169,24 @@ impl Predictor {
     pub fn observe(&mut self, cache: &mut CacheManager, layer: u32, actual_probs: &[f32]) {
         let actual: Vec<u32> =
             topk(actual_probs, self.top_k).iter().map(|(i, _)| *i as u32).collect();
-        if let Some(predicted) = self.pending[layer as usize].take() {
+        if let Some(p) = self.pending[layer as usize].take() {
             // offset bookkeeping: predictions always come from layer-1..layer-depth;
             // we attribute to offset 1 (the paper reports next-1 dominant)
-            self.tracker.record(1, &predicted, &actual);
-            for e in &predicted {
-                let key = ExpertKey::new(layer, *e);
-                cache.hi.unpin(key);
-                cache.lo.unpin(key);
-            }
+            self.tracker.record(1, &p.experts, &actual);
+            release_pins(cache, &p.pinned);
         }
+    }
+}
+
+/// Release exactly the pins a prediction took; every unpin must find a
+/// matching pin (the pools report and we assert).
+fn release_pins(cache: &mut CacheManager, pinned: &[(ExpertKey, Pool)]) {
+    for (key, pool) in pinned {
+        let had_pin = match pool {
+            Pool::Hi => cache.hi.unpin(*key),
+            Pool::Lo => cache.lo.unpin(*key),
+        };
+        debug_assert!(had_pin, "prediction unpin without matching pin for {key:?}");
     }
 }
 

@@ -1,0 +1,551 @@
+//! Expert residency: one session-scoped facade over the loader, the cache
+//! manager, and the predictor.
+//!
+//! HOBBIT's three techniques — token-level dynamic loading (§3.2),
+//! layer-level prefetching (§3.3), sequence-level caching (§3.4) — are one
+//! hierarchy in the paper, and [`ExpertResidency`] is that hierarchy's
+//! single entry point: the engine and coordinator never touch
+//! `ExpertLoader::submit`/`wait` or `CacheManager::reserve`/`commit`
+//! directly. The facade adds the cross-sequence machinery the raw parts
+//! cannot express:
+//!
+//! * **Typed tickets** — [`Ticket`] replaces the raw `u64` task-id lists
+//!   threaded through the decode cursor: a ticket knows its expert, pool,
+//!   precision, and kind, is cheap to clone, and supports polling
+//!   ([`Ticket::is_ready`]), blocking ([`TicketSet::block`] via
+//!   [`ExpertResidency::wait`]), and push wakeups ([`Ticket::on_ready`]).
+//! * **Shared wait-set** — two sequences missing on the same expert share
+//!   one load task: the second request *joins* the first's ticket instead
+//!   of silently bouncing off the loader's dedup (`dedup_hits`/
+//!   `dedup_total` in `LoaderStats` count exactly these joins). An
+//!   on-demand join of a *queued* prefetch promotes it to the priority
+//!   lane; a *started* transfer is joined as-is (non-preemptible, Fig 9).
+//! * **RAII sessions** — [`SequenceSession`] scopes a live sequence's
+//!   cache records and prefetch generation: dropping the session retires
+//!   its records and marks its generation scope stale, so nothing leaks
+//!   when a request completes, errors, or is aborted.
+//! * **Scoped prefetch generations** — each session bumps its own
+//!   generation, so one sequence's token advance no longer cancels other
+//!   sequences' queued prefetches (the old global bump did).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::cache::{CacheManager, Pool};
+use crate::loader::scorer::Class;
+use crate::loader::{ExpertLoader, GenTable, TaskKind, GLOBAL_SCOPE};
+use crate::memory::ThrottledCopier;
+use crate::metrics::{CacheStats, LoaderStats};
+use crate::model::ExpertStore;
+use crate::predictor::Predictor;
+use crate::{ExpertKey, Precision};
+
+/// One expert the barrier decided to execute: key, effective precision
+/// class, and the per-row gate weights to apply.
+pub type ExpertUse = (ExpertKey, Class, Vec<f32>);
+
+// ---------------------------------------------------------------------
+// Tickets
+// ---------------------------------------------------------------------
+
+struct LoadStateInner {
+    done: bool,
+    /// push-subscribers (serving front-end wakeups); fired on completion
+    waiters: Vec<Box<dyn FnOnce() + Send>>,
+}
+
+/// Shared completion state of one load task. Unlike the loader's done-set,
+/// readiness is *non-consuming*: any number of tickets can observe it.
+struct LoadState {
+    task_id: u64,
+    inner: Mutex<LoadStateInner>,
+    cv: Condvar,
+}
+
+impl LoadState {
+    fn new(task_id: u64) -> Arc<Self> {
+        Arc::new(Self {
+            task_id,
+            inner: Mutex::new(LoadStateInner { done: false, waiters: Vec::new() }),
+            cv: Condvar::new(),
+        })
+    }
+
+    fn complete(&self) {
+        let waiters = {
+            let mut g = self.inner.lock().unwrap();
+            g.done = true;
+            std::mem::take(&mut g.waiters)
+        };
+        self.cv.notify_all();
+        for w in waiters {
+            w();
+        }
+    }
+
+    fn is_done(&self) -> bool {
+        self.inner.lock().unwrap().done
+    }
+
+    fn block(&self) {
+        let mut g = self.inner.lock().unwrap();
+        while !g.done {
+            g = self.cv.wait(g).unwrap();
+        }
+    }
+
+    /// Register a wakeup; false (not registered) if already complete.
+    fn subscribe(&self, cb: Box<dyn FnOnce() + Send>) -> bool {
+        let mut g = self.inner.lock().unwrap();
+        if g.done {
+            return false;
+        }
+        g.waiters.push(cb);
+        true
+    }
+}
+
+/// Typed handle to one in-flight expert load. Clones share completion
+/// state, so any number of sequences can wait on the same transfer.
+#[derive(Clone)]
+pub struct Ticket {
+    key: ExpertKey,
+    pool: Pool,
+    precision: Precision,
+    kind: TaskKind,
+    state: Arc<LoadState>,
+}
+
+impl Ticket {
+    pub fn key(&self) -> ExpertKey {
+        self.key
+    }
+
+    pub fn pool(&self) -> Pool {
+        self.pool
+    }
+
+    pub fn precision(&self) -> Precision {
+        self.precision
+    }
+
+    pub fn kind(&self) -> TaskKind {
+        self.kind
+    }
+
+    /// Loader task id (diagnostics only — residency owns the lifecycle).
+    pub fn task_id(&self) -> u64 {
+        self.state.task_id
+    }
+
+    /// Non-consuming readiness poll.
+    pub fn is_ready(&self) -> bool {
+        self.state.is_done()
+    }
+
+    /// Register a push wakeup, fired once when the load completes (on the
+    /// scheduler thread). Returns false — and does NOT register — when the
+    /// load already completed: the caller should not park on it.
+    pub fn on_ready<F: FnOnce() + Send + 'static>(&self, cb: F) -> bool {
+        self.state.subscribe(Box::new(cb))
+    }
+}
+
+impl std::fmt::Debug for Ticket {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Ticket")
+            .field("key", &self.key)
+            .field("pool", &self.pool)
+            .field("precision", &self.precision)
+            .field("kind", &self.kind)
+            .field("task_id", &self.state.task_id)
+            .field("ready", &self.is_ready())
+            .finish()
+    }
+}
+
+/// The tickets one ensure-resident barrier waits on.
+#[derive(Debug, Default)]
+pub struct TicketSet {
+    tickets: Vec<Ticket>,
+}
+
+impl TicketSet {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, t: Ticket) {
+        self.tickets.push(t);
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tickets.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.tickets.len()
+    }
+
+    pub fn tickets(&self) -> &[Ticket] {
+        &self.tickets
+    }
+
+    /// Non-consuming poll: true when every ticket's load has completed.
+    pub fn all_ready(&self) -> bool {
+        self.tickets.iter().all(|t| t.is_ready())
+    }
+
+    fn block(&self) -> Duration {
+        let t0 = Instant::now();
+        for t in &self.tickets {
+            t.state.block();
+        }
+        t0.elapsed()
+    }
+}
+
+// ---------------------------------------------------------------------
+// Sessions
+// ---------------------------------------------------------------------
+
+/// RAII handle to one live sequence's residency state: per-sequence cache
+/// records (LRU/LFU/LHU) and a private prefetch-generation scope. Dropping
+/// the session retires both — on completion, error, or abort alike — so
+/// the `begin_sequence_id`/`end_sequence_id` pairing can no longer be
+/// forgotten.
+pub struct SequenceSession {
+    seq: u64,
+    cache: Arc<Mutex<CacheManager>>,
+    gens: GenTable,
+}
+
+impl SequenceSession {
+    /// The sequence id (cache-record key and prefetch-generation scope).
+    pub fn id(&self) -> u64 {
+        self.seq
+    }
+}
+
+impl Drop for SequenceSession {
+    fn drop(&mut self) {
+        self.cache.lock().unwrap().end_sequence_id(self.seq);
+        // retire the generation scope: every queued prefetch of this
+        // sequence becomes stale; the loader GCs the entry once its
+        // prefetch lane drains
+        self.gens.lock().unwrap().insert(self.seq, u64::MAX);
+    }
+}
+
+// ---------------------------------------------------------------------
+// The facade
+// ---------------------------------------------------------------------
+
+/// The session-scoped residency facade: owns the loader + cache manager +
+/// predictor interaction and is the only API the engine and coordinator
+/// use to make experts resident.
+pub struct ExpertResidency {
+    loader: ExpertLoader,
+    cache: Arc<Mutex<CacheManager>>,
+    predictor: Predictor,
+    /// shared wait-set: (key, pool) of every load between submission and
+    /// completion; a second requester joins the existing entry's ticket
+    inflight: Arc<Mutex<HashMap<(ExpertKey, Pool), Arc<LoadState>>>>,
+    gens: GenTable,
+    next_seq: AtomicU64,
+    hi: Precision,
+    lo: Precision,
+}
+
+impl ExpertResidency {
+    pub fn new(
+        store: Arc<ExpertStore>,
+        cache: Arc<Mutex<CacheManager>>,
+        copier: Arc<ThrottledCopier>,
+        predictor: Predictor,
+        hi: Precision,
+        lo: Precision,
+    ) -> Self {
+        let loader = ExpertLoader::start(store, cache.clone(), copier);
+        let gens = loader.gen_table();
+        Self {
+            loader,
+            cache,
+            predictor,
+            inflight: Arc::new(Mutex::new(HashMap::new())),
+            gens,
+            next_seq: AtomicU64::new(1),
+            hi,
+            lo,
+        }
+    }
+
+    /// Map a scorer class to (precision, pool) under the active config.
+    pub fn class_target(&self, class: Class) -> (Precision, Pool) {
+        match class {
+            Class::Hi => (self.hi, Pool::Hi),
+            Class::Lo | Class::Skip => (self.lo, Pool::Lo),
+        }
+    }
+
+    // ---- sessions ----------------------------------------------------
+
+    /// Register a live sequence: fresh per-sequence cache records and a
+    /// private prefetch-generation scope, both retired when the returned
+    /// session drops.
+    pub fn begin_session(&self) -> SequenceSession {
+        let seq = self.next_seq.fetch_add(1, Ordering::Relaxed);
+        self.cache.lock().unwrap().begin_sequence_id(seq);
+        SequenceSession { seq, cache: self.cache.clone(), gens: self.gens.clone() }
+    }
+
+    /// Batch-1 sequence reset (§3.4): wipes the merged sequence-level
+    /// records. Must not be used while sessions are live.
+    pub fn reset_batch1(&self) {
+        self.cache.lock().unwrap().reset_sequence();
+    }
+
+    /// Number of live (registered) sequence sessions.
+    pub fn live_sequences(&self) -> usize {
+        self.cache.lock().unwrap().live_sequences()
+    }
+
+    // ---- the ensure-resident barrier ---------------------------------
+
+    /// Make one layer's routed experts resident: probe/pin each demanded
+    /// expert, submit (or join) on-demand loads for misses, and return the
+    /// execution set plus the tickets to wait on. Does NOT wait — blocking
+    /// vs suspension is the caller's policy. `seq` attributes cache-record
+    /// traffic to a live session (None = the batch-1 global records).
+    pub fn acquire(
+        &self,
+        layer: u32,
+        demands: Vec<(ExpertKey, Class, Vec<f32>)>,
+        seq: Option<u64>,
+    ) -> (Vec<ExpertUse>, TicketSet) {
+        let scope = seq.unwrap_or(GLOBAL_SCOPE);
+        let mut waits = TicketSet::new();
+        let mut uses: Vec<ExpertUse> = Vec::new();
+        let mut cache = self.cache.lock().unwrap();
+        cache.note_token_for(seq);
+        for (key, class, gatew) in demands {
+            if class == Class::Skip {
+                let mut st = self.loader.stats.lock().unwrap();
+                st.skipped += 1;
+                continue;
+            }
+            let (_prec, pool) = self.class_target(class);
+            let mut hit = cache.access(key, pool);
+            // a Lo request served by a resident Hi copy is a free upgrade
+            let mut eff_class = class;
+            if !hit && pool == Pool::Lo && cache.hi.contains_ready(key) {
+                hit = true;
+                eff_class = Class::Hi;
+                cache.stats.hits_hi += 1;
+                // undo the lo-miss penalty charged by access()
+                cache.stats.misses_lo -= 1;
+                cache.stats.miss_penalty -= cache.penalty_ratio();
+            }
+            let pinned = match eff_class {
+                Class::Hi => cache.hi.pin(key),
+                _ => cache.lo.pin(key),
+            };
+            debug_assert!(!hit || pinned, "hit on {key:?} must pin a live slot");
+            uses.push((key, eff_class, gatew));
+            if !hit {
+                drop(cache);
+                let (prec, pool) = self.class_target(eff_class);
+                if let Some(t) =
+                    self.request_load(key, prec, pool, TaskKind::OnDemand, layer, scope)
+                {
+                    waits.push(t);
+                }
+                cache = self.cache.lock().unwrap();
+            }
+        }
+        drop(cache);
+        (uses, waits)
+    }
+
+    /// Submit a load — or join the in-flight one for the same
+    /// (expert, pool). Returns None when the expert is already resident.
+    fn request_load(
+        &self,
+        key: ExpertKey,
+        precision: Precision,
+        pool: Pool,
+        kind: TaskKind,
+        layer: u32,
+        scope: u64,
+    ) -> Option<Ticket> {
+        let mut inflight = self.inflight.lock().unwrap();
+        if kind == TaskKind::OnDemand {
+            self.loader.stats.lock().unwrap().dedup_total += 1;
+        }
+        if let Some(state) = inflight.get(&(key, pool)) {
+            let state = state.clone();
+            drop(inflight);
+            match kind {
+                TaskKind::OnDemand => {
+                    self.loader.stats.lock().unwrap().dedup_hits += 1;
+                    // paper semantics: an on-demand arrival jumps a queued
+                    // prefetch into the priority lane; a started transfer
+                    // is joined as-is (non-preemptible, Fig 9)
+                    self.loader.promote_to_ondemand(state.task_id);
+                }
+                TaskKind::Prefetch => {
+                    // a re-planned prefetch joining its own previous-token
+                    // task: re-stamp it with the requester's current
+                    // generation so the planner's bump doesn't doom it
+                    self.loader.refresh_prefetch(state.task_id, scope);
+                }
+            }
+            return Some(Ticket { key, pool, precision, kind, state });
+        }
+        let id = self.loader.submit_scoped(key, precision, pool, kind, layer, scope)?;
+        let state = LoadState::new(id);
+        inflight.insert((key, pool), state.clone());
+        drop(inflight);
+        // exactly-once completion hook: clear the wait-set entry, then
+        // resolve the shared state (the loader-side done marker is
+        // consumed so it cannot accumulate)
+        let inflight_arc = self.inflight.clone();
+        let st = state.clone();
+        self.loader.on_complete_consume(id, move |_| {
+            {
+                let mut map = inflight_arc.lock().unwrap();
+                let stale = map
+                    .get(&(key, pool))
+                    .map(|s| s.task_id == st.task_id)
+                    .unwrap_or(false);
+                if stale {
+                    map.remove(&(key, pool));
+                }
+            }
+            st.complete();
+        });
+        Some(Ticket { key, pool, precision, kind, state })
+    }
+
+    /// Block until every ticket in `waits` resolves; the blocked time is
+    /// charged to the loader's `wait_time` (the unhidden-stall metric on
+    /// the batch-1 path). Returns the wall time spent.
+    pub fn wait(&self, waits: &TicketSet) -> Duration {
+        let waited = waits.block();
+        self.loader.stats.lock().unwrap().wait_time += waited;
+        waited
+    }
+
+    // ---- post-barrier accessors (FFN execution path) -----------------
+
+    /// Slot buffer of a resident expert (None if it was never committed —
+    /// e.g. its load was dropped as stale — or was evicted under extreme
+    /// pressure; callers then bypass the cache).
+    pub fn buffer(&self, key: ExpertKey, pool: Pool) -> Option<Arc<Mutex<Vec<u8>>>> {
+        let cache = self.cache.lock().unwrap();
+        match pool {
+            Pool::Hi => cache.hi.buffer(key),
+            Pool::Lo => cache.lo.buffer(key),
+        }
+    }
+
+    /// Record a realized use for the replacement policy, attributed to a
+    /// live session (None = batch-1 records).
+    pub fn note_use(&self, key: ExpertKey, pool: Pool, seq: Option<u64>) {
+        self.cache.lock().unwrap().note_use_for(key, pool, seq);
+    }
+
+    /// Release the pin `acquire` took on an expert (after executing it, or
+    /// when a suspended cursor is aborted).
+    pub fn release(&self, key: ExpertKey, pool: Pool) {
+        let mut cache = self.cache.lock().unwrap();
+        let had_pin = match pool {
+            Pool::Hi => cache.hi.unpin(key),
+            Pool::Lo => cache.lo.unpin(key),
+        };
+        debug_assert!(had_pin, "unbalanced unpin for {key:?} in {pool:?}");
+    }
+
+    // ---- predictor (layer-level prefetching) -------------------------
+
+    /// Predictor step: invalidate the scope's queued prefetches from the
+    /// previous token, plan mixed-precision prefetches from the stacked
+    /// gate output, and submit them under the scope's generation.
+    pub fn plan_prefetch(
+        &mut self,
+        scope: u64,
+        current_layer: u32,
+        n_layers: u32,
+        stacked: &[Vec<f32>],
+    ) {
+        self.loader.bump_prefetch_generation_for(scope);
+        let mut cache = self.cache.lock().unwrap();
+        let plan = self.predictor.plan(&mut cache, current_layer, n_layers, stacked);
+        drop(cache);
+        if let Some(plan) = plan {
+            {
+                let mut stats = self.loader.stats.lock().unwrap();
+                stats.prefetch_total += plan.experts.len() as u64;
+            }
+            for (key, class) in plan.experts {
+                if class != Class::Skip {
+                    let (prec, pool) = self.class_target(class);
+                    let _ = self.request_load(
+                        key,
+                        prec,
+                        pool,
+                        TaskKind::Prefetch,
+                        current_layer,
+                        scope,
+                    );
+                }
+            }
+        }
+    }
+
+    /// Score the pending prediction of an executed layer and release its
+    /// pins; pushes realized tracker hits into the loader stats (single
+    /// source of truth for prefetch accounting).
+    pub fn observe(&mut self, layer: u32, layer_probs_first: &[f32]) {
+        let mut cache = self.cache.lock().unwrap();
+        self.predictor.observe(&mut cache, layer, layer_probs_first);
+        let hits = self.predictor.tracker.per_offset[0].0;
+        drop(cache);
+        self.loader.stats.lock().unwrap().prefetch_hits = hits;
+    }
+
+    /// Prefetch depth of the active predictor (0 = prefetching off).
+    pub fn prefetch_depth(&self) -> usize {
+        self.predictor.depth
+    }
+
+    // ---- introspection ------------------------------------------------
+
+    /// Snapshot of the loader counters (report sync, benches).
+    pub fn loader_stats(&self) -> LoaderStats {
+        self.loader.stats.lock().unwrap().clone()
+    }
+
+    /// Snapshot of the cache counters (report sync, benches).
+    pub fn cache_stats(&self) -> CacheStats {
+        self.cache.lock().unwrap().stats.clone()
+    }
+
+    /// Realized prefetch accuracy at layer-offset `offset` (Fig 7b).
+    pub fn prefetch_accuracy(&self, offset: usize) -> f64 {
+        self.predictor.tracker.accuracy(offset)
+    }
+
+    /// Shared cache handle (tests and figures; the request path goes
+    /// through the facade's own methods).
+    pub fn cache_handle(&self) -> Arc<Mutex<CacheManager>> {
+        self.cache.clone()
+    }
+
+    /// True when no load is queued or mid-transfer (drains in benches).
+    pub fn is_idle(&self) -> bool {
+        self.loader.is_idle()
+    }
+}

@@ -14,14 +14,15 @@
 //!   thread (PJRT state is not `Send`), and each completion is routed back
 //!   to its connection through a per-request response channel. While every
 //!   live sequence is stalled on the expert-load link, the scheduler parks
-//!   on the same channel and is woken by loader completion callbacks
-//!   (`ExpertLoader::on_complete`) or by new connections — it never spins.
+//!   on the same channel and is woken by residency-ticket completion
+//!   wakeups (`residency::Ticket::on_ready`) or by new connections — it
+//!   never spins.
 //!
 //! tokio is not in the offline vendor set — std::net/std::thread/mpsc plus
 //! the loader's own scheduler thread cover the concurrency needs
 //! (DESIGN.md).
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -127,6 +128,9 @@ impl Server {
         });
 
         let mut responders: HashMap<u64, mpsc::Sender<Json>> = HashMap::new();
+        // load tasks that already carry one of our wake callbacks: arming
+        // is once per task, not once per park (waiters accumulate)
+        let mut armed_ids: HashSet<u64> = HashSet::new();
         let mut closed = 0usize;
         loop {
             // ingest everything already queued, without blocking
@@ -147,22 +151,37 @@ impl Server {
             }
             if coord.all_stalled() {
                 // every live sequence waits on the link: nothing to
-                // overlap. Park on the event channel — loader completion
-                // callbacks (or new connections) wake us. Parked time is
+                // overlap. Park on the event channel — ticket completion
+                // wakeups (or new connections) wake us. Parked time is
                 // the unhidden share of the load wait. Only genuinely
-                // in-flight ids are armed: a barrier whose loads partially
-                // completed would otherwise fire its callback immediately
-                // and turn the park into a hot spin.
+                // in-flight tickets arm (`on_ready` refuses completed
+                // ones): a barrier whose loads partially completed would
+                // otherwise wake immediately and turn the park into a hot
+                // spin.
+                let tickets = coord.pending_tickets();
+                let current: HashSet<u64> = tickets.iter().map(|t| t.task_id()).collect();
+                armed_ids.retain(|id| current.contains(id));
                 let mut armed = false;
-                for id in coord.pending_load_ids() {
-                    if coord.engine.loader.is_done(id) {
+                for ticket in tickets {
+                    // a completed ticket must NOT count as armed — its
+                    // wake already fired (and may be drained); the next
+                    // step's poll clears its barrier without parking
+                    if ticket.is_ready() {
                         continue;
                     }
-                    armed = true;
+                    // still-armed in-flight tickets from an earlier park
+                    // keep their callback; parking on them is safe
+                    if armed_ids.contains(&ticket.task_id()) {
+                        armed = true;
+                        continue;
+                    }
                     let wtx = wake_tx.clone();
-                    coord.engine.loader.on_complete(id, move |_| {
+                    if ticket.on_ready(move || {
                         let _ = wtx.send(Event::Wake);
-                    });
+                    }) {
+                        armed_ids.insert(ticket.task_id());
+                        armed = true;
+                    }
                 }
                 if armed {
                     let t0 = Instant::now();

@@ -513,19 +513,20 @@ impl<'a> SimRun<'a> {
     }
 
     fn pin(&mut self, key: ExpertKey, hi: PoolKey) {
-        match pool_of(hi) {
+        let _present = match pool_of(hi) {
             Pool::Hi => self.cache.hi.pin(key),
             Pool::Lo => self.cache.lo.pin(key),
-        }
+        };
         self.pinned.push((key, hi));
     }
 
     fn release_pins(&mut self) {
         for (key, hi) in self.pinned.drain(..) {
-            match pool_of(hi) {
+            let had_pin = match pool_of(hi) {
                 Pool::Hi => self.cache.hi.unpin(key),
                 Pool::Lo => self.cache.lo.unpin(key),
-            }
+            };
+            debug_assert!(had_pin, "sim unpin without matching pin for {key:?}");
         }
     }
 

@@ -1,0 +1,269 @@
+//! Residency-facade integration: the cross-sequence shared wait-set
+//! (one load task per shared miss, both sequences resume), per-sequence
+//! prefetch-generation scoping (one sequence's token advance must not
+//! invalidate another's queued prefetch), on-demand promotion of queued
+//! prefetches, ticket wakeups, and RAII session retirement.
+//!
+//! These tests synthesize a tiny expert store on disk, so they run — and
+//! gate CI — without the AOT artifacts the engine tests need.
+
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use hobbit::cache::{CacheManager, Policy, Pool};
+use hobbit::config::ModelConfig;
+use hobbit::loader::scorer::Class;
+use hobbit::memory::{LinkModel, ThrottledCopier};
+use hobbit::model::ExpertStore;
+use hobbit::predictor::Predictor;
+use hobbit::residency::ExpertResidency;
+use hobbit::{ExpertKey, Precision};
+
+fn tiny_cfg() -> ModelConfig {
+    ModelConfig {
+        name: "residency-test".into(),
+        n_layers: 4,
+        d_model: 8,
+        d_ff: 16,
+        n_experts: 4,
+        top_k: 2,
+        n_heads: 2,
+        n_kv_heads: 1,
+        vocab: 64,
+        max_seq: 32,
+        quant_group: 8,
+        // synthetic on-wire record sizes (only consistency matters here)
+        expert_bytes: [4096, 1024, 512, 256],
+    }
+}
+
+/// Write a synthetic expert store (every expert at every precision) so the
+/// loader has real bytes to move without the AOT compile step.
+fn synth_store(cfg: &ModelConfig, dir: &Path) -> Arc<ExpertStore> {
+    std::fs::create_dir_all(dir).unwrap();
+    for p in Precision::ALL {
+        let n = cfg.bytes_for(p) * cfg.total_experts();
+        let bytes: Vec<u8> = (0..n).map(|i| (i % 251) as u8).collect();
+        std::fs::write(dir.join(format!("experts_{}.bin", p.name())), bytes).unwrap();
+    }
+    Arc::new(ExpertStore::load(dir, cfg).unwrap())
+}
+
+/// Residency facade over a synthetic store; `bw` throttles the link so
+/// transfers stay observable mid-flight.
+fn mk_residency(
+    cfg: &ModelConfig,
+    hi_cap: usize,
+    lo_cap: usize,
+    bw: f64,
+    name: &str,
+) -> (ExpertResidency, Arc<ThrottledCopier>) {
+    let dir = std::env::temp_dir().join(format!("hobbit_residency_{name}"));
+    let store = synth_store(cfg, &dir);
+    let cache = Arc::new(Mutex::new(CacheManager::new(
+        cfg.n_layers,
+        cfg.n_experts,
+        hi_cap,
+        cfg.bytes_for(Precision::F32),
+        lo_cap,
+        cfg.bytes_for(Precision::Q8),
+        Policy::Lru,
+        0.25,
+    )));
+    let copier = Arc::new(ThrottledCopier::new(LinkModel { bytes_per_s: bw, latency_s: 0.0 }));
+    let predictor = Predictor::new(2, cfg.top_k, 0.6, 0.9, true, cfg.n_layers);
+    let resid = ExpertResidency::new(
+        store,
+        cache,
+        copier.clone(),
+        predictor,
+        Precision::F32,
+        Precision::Q8,
+    );
+    (resid, copier)
+}
+
+/// Gate distribution sharply peaked on `hot`: rank-0 is Hi, rank-1 scores
+/// ~0.98 > T2 and is skipped, so each plan submits exactly one prefetch.
+fn hot_probs(hot: usize, e: usize) -> Vec<f32> {
+    let mut p = vec![0.02f32; e];
+    p[hot] = 0.9;
+    let s: f32 = p.iter().sum();
+    p.iter().map(|x| x / s).collect()
+}
+
+fn drain(resid: &ExpertResidency) {
+    while !resid.is_idle() {
+        std::thread::sleep(Duration::from_millis(5));
+    }
+}
+
+#[test]
+fn shared_miss_produces_single_load_and_both_sequences_resume() {
+    let cfg = tiny_cfg();
+    // ~200ms per f32 expert: the transfer is still in flight when the
+    // second sequence misses on it
+    let (resid, copier) = mk_residency(&cfg, 4, 4, 2e4, "sharedmiss");
+    let sa = resid.begin_session();
+    let sb = resid.begin_session();
+    assert_eq!(resid.live_sequences(), 2);
+
+    let key = ExpertKey::new(0, 1);
+    let (uses_a, waits_a) = resid.acquire(0, vec![(key, Class::Hi, vec![1.0])], Some(sa.id()));
+    assert_eq!(uses_a.len(), 1);
+    assert_eq!(waits_a.len(), 1, "first miss must submit a load");
+    let (uses_b, waits_b) = resid.acquire(0, vec![(key, Class::Hi, vec![1.0])], Some(sb.id()));
+    assert_eq!(uses_b.len(), 1);
+    assert_eq!(
+        waits_b.len(),
+        1,
+        "second sequence must subscribe to the in-flight load, not bounce off"
+    );
+
+    // both barriers resolve off the same transfer
+    resid.wait(&waits_a);
+    resid.wait(&waits_b);
+    assert!(waits_a.all_ready() && waits_b.all_ready());
+    assert_eq!(copier.transfers(), 1, "a shared miss must move bytes exactly once");
+    let st = resid.loader_stats();
+    assert_eq!(st.dedup_total, 2);
+    assert_eq!(st.dedup_hits, 1);
+
+    // both sequences execute from the shared copy and release their pins
+    assert!(resid.buffer(key, Pool::Hi).is_some());
+    resid.note_use(key, Pool::Hi, Some(sa.id()));
+    resid.release(key, Pool::Hi);
+    resid.note_use(key, Pool::Hi, Some(sb.id()));
+    resid.release(key, Pool::Hi);
+
+    // RAII retirement: dropping the sessions releases their records
+    drop(sa);
+    drop(sb);
+    assert_eq!(resid.live_sequences(), 0);
+}
+
+#[test]
+fn token_advance_does_not_invalidate_other_sequences_prefetch() {
+    let cfg = tiny_cfg();
+    let (mut resid, copier) = mk_residency(&cfg, 8, 8, 2e4, "genscope");
+    let sa = resid.begin_session();
+    let sb = resid.begin_session();
+
+    // occupy the link so both prefetches stay *queued*
+    let blocker = ExpertKey::new(0, 3);
+    let (_u, od_waits) =
+        resid.acquire(0, vec![(blocker, Class::Hi, vec![1.0])], Some(sa.id()));
+    assert_eq!(od_waits.len(), 1);
+
+    // A plans a prefetch for layer 1 expert 0; B for layer 2 expert 2
+    let e = cfg.n_experts as usize;
+    resid.plan_prefetch(sa.id(), 0, cfg.n_layers, &[hot_probs(3, e), hot_probs(0, e)]);
+    resid.plan_prefetch(sb.id(), 1, cfg.n_layers, &[hot_probs(3, e), hot_probs(2, e)]);
+
+    // A's next token arrives: bumps ONLY A's generation (a length-1 stack
+    // plans nothing; the bump still invalidates A's queued prefetches)
+    resid.plan_prefetch(sa.id(), 1, cfg.n_layers, &[hot_probs(3, e)]);
+
+    resid.wait(&od_waits);
+    drain(&resid);
+
+    // B's queued prefetch survived A's token advance...
+    assert!(
+        resid.buffer(ExpertKey::new(2, 2), Pool::Hi).is_some(),
+        "sequence B's queued prefetch was invalidated by sequence A's token advance"
+    );
+    // ...while A's own stale prefetch was dropped without moving bytes
+    assert!(resid.buffer(ExpertKey::new(1, 0), Pool::Hi).is_none());
+    assert_eq!(copier.transfers(), 2, "blocker + B's prefetch only");
+    drop(sa);
+    drop(sb);
+}
+
+#[test]
+fn replanned_prefetch_joins_its_queued_task_and_survives_own_bump() {
+    // regression: token t queues a prefetch for E; token t+1 bumps the
+    // scope's generation and re-predicts E. The new request joins the
+    // queued task — which must be re-stamped fresh, not left to die as
+    // stale (that would silently lose every correlated prefetch while the
+    // link is busy, exactly when prefetching matters).
+    let cfg = tiny_cfg();
+    let (mut resid, copier) = mk_residency(&cfg, 8, 8, 2e4, "replan");
+    let sa = resid.begin_session();
+
+    let blocker = ExpertKey::new(0, 3);
+    let (_u, od_waits) =
+        resid.acquire(0, vec![(blocker, Class::Hi, vec![1.0])], Some(sa.id()));
+    let e = cfg.n_experts as usize;
+    // token t: prefetch (1, 0) queued behind the blocker
+    resid.plan_prefetch(sa.id(), 0, cfg.n_layers, &[hot_probs(3, e), hot_probs(0, e)]);
+    // token t+1: generation bump + the same prediction again
+    resid.plan_prefetch(sa.id(), 0, cfg.n_layers, &[hot_probs(3, e), hot_probs(0, e)]);
+
+    resid.wait(&od_waits);
+    drain(&resid);
+    assert!(
+        resid.buffer(ExpertKey::new(1, 0), Pool::Hi).is_some(),
+        "re-planned prefetch was dropped as stale instead of re-stamped"
+    );
+    assert_eq!(copier.transfers(), 2, "blocker + exactly one prefetch transfer");
+    drop(sa);
+}
+
+#[test]
+fn ondemand_join_promotes_queued_prefetch_to_priority_lane() {
+    let cfg = tiny_cfg();
+    let (mut resid, copier) = mk_residency(&cfg, 8, 8, 2e4, "promote");
+    let sa = resid.begin_session();
+    let sb = resid.begin_session();
+
+    // occupy the link, then queue B's prefetch for (2, 2)
+    let blocker = ExpertKey::new(0, 3);
+    let (_u, od_waits) =
+        resid.acquire(0, vec![(blocker, Class::Hi, vec![1.0])], Some(sa.id()));
+    let e = cfg.n_experts as usize;
+    resid.plan_prefetch(sb.id(), 1, cfg.n_layers, &[hot_probs(3, e), hot_probs(2, e)]);
+
+    // A now *needs* (2, 2): it joins B's queued prefetch, which is
+    // promoted into the on-demand lane (paper: on-demand jumps ahead of
+    // queued prefetches; started transfers are never preempted)
+    let need = ExpertKey::new(2, 2);
+    let (_ua, waits_a) = resid.acquire(2, vec![(need, Class::Hi, vec![1.0])], Some(sa.id()));
+    assert_eq!(waits_a.len(), 1);
+    resid.wait(&od_waits);
+    resid.wait(&waits_a);
+    drain(&resid);
+
+    assert!(resid.buffer(need, Pool::Hi).is_some());
+    assert_eq!(copier.transfers(), 2, "join must not duplicate the transfer");
+    let st = resid.loader_stats();
+    assert_eq!(st.dedup_hits, 1, "the join is a dedup hit");
+    // the promoted task executed as on-demand (priority lane)
+    assert_eq!(st.ondemand_loads.iter().sum::<u64>(), 2);
+    assert_eq!(st.prefetch_loads.iter().sum::<u64>(), 0);
+    resid.release(need, Pool::Hi);
+    resid.release(blocker, Pool::Hi);
+    drop(sa);
+    drop(sb);
+}
+
+#[test]
+fn ticket_wakeups_fire_on_completion_and_refuse_after() {
+    let cfg = tiny_cfg();
+    let (resid, _copier) = mk_residency(&cfg, 4, 4, 2e4, "wakeup");
+    let key = ExpertKey::new(3, 0);
+    let (_u, waits) = resid.acquire(3, vec![(key, Class::Hi, vec![1.0])], None);
+    assert_eq!(waits.len(), 1);
+    let ticket = waits.tickets()[0].clone();
+    assert!(!ticket.is_ready(), "200ms transfer reported ready instantly");
+
+    let (tx, rx) = std::sync::mpsc::channel();
+    assert!(ticket.on_ready(move || {
+        let _ = tx.send(());
+    }), "in-flight ticket must accept a wakeup");
+    rx.recv_timeout(Duration::from_secs(10)).expect("wakeup fired");
+    assert!(ticket.is_ready());
+    // a completed ticket refuses new wakeups so callers don't park on it
+    assert!(!ticket.on_ready(|| {}));
+    resid.release(key, Pool::Hi);
+}
