@@ -83,10 +83,11 @@ fn main() {
         "expert_f32_s128".into(),
     ];
     for name in &names {
-        if engine.rt.ensure(name).is_err() {
+        if engine.runtime_mut().expect("PJRT engine").ensure(name).is_err() {
             continue;
         }
-        let spec = engine.rt.manifest.artifacts.get(name).unwrap().clone();
+        let rt = engine.runtime().expect("PJRT engine");
+        let spec = rt.manifest.artifacts.get(name).unwrap().clone();
         let args: Vec<xla::Literal> = spec
             .inputs
             .iter()
@@ -104,7 +105,7 @@ fn main() {
             })
             .collect();
         bench(&format!("artifact {name}"), || {
-            let _ = engine.rt.execute(name, &args).unwrap();
+            let _ = rt.execute(name, &args).unwrap();
         });
     }
 

@@ -29,7 +29,7 @@ fn main() -> anyhow::Result<()> {
         engine.cfg.n_layers,
         engine.cfg.n_experts,
         engine.cfg.top_k,
-        engine.rt.platform()
+        engine.platform()
     );
 
     let mut coord = Coordinator::new(engine);

@@ -184,6 +184,12 @@ impl CachePool {
         self.pinned.contains_key(&key)
     }
 
+    /// Total outstanding pin count across all keys (leak detection: a
+    /// balanced pin/unpin history leaves this at zero).
+    pub fn pinned_count(&self) -> u32 {
+        self.pinned.values().sum()
+    }
+
     pub fn ready_keys(&self) -> impl Iterator<Item = ExpertKey> + '_ {
         self.state.iter().filter_map(|s| match s {
             SlotState::Ready(k) => Some(*k),
@@ -540,6 +546,21 @@ mod tests {
         m.hi.unpin(k(0, 0));
         let r = m.reserve(k(0, 2), Pool::Hi, 0).unwrap();
         assert_eq!(r.evicted, Some(k(0, 0)));
+    }
+
+    #[test]
+    fn pinned_count_tracks_stacked_pins() {
+        let mut m = mgr(2, 0);
+        assert_eq!(m.hi.pinned_count(), 0);
+        m.hi.pin(k(0, 0));
+        m.hi.pin(k(0, 0));
+        m.hi.pin(k(0, 1));
+        assert_eq!(m.hi.pinned_count(), 3);
+        m.hi.unpin(k(0, 0));
+        assert_eq!(m.hi.pinned_count(), 2);
+        m.hi.unpin(k(0, 0));
+        m.hi.unpin(k(0, 1));
+        assert_eq!(m.hi.pinned_count(), 0);
     }
 
     #[test]

@@ -72,6 +72,10 @@ COMMANDS:
               --policy rr|sjf (interleaved fairness: round-robin, or
               shortest-remaining-tokens first; cache-policy names still
               work here too, e.g. --policy lru)
+              --max-batch N (true batched decode: gang up to N runnable
+              sequences into one launch, padded to the nearest compiled
+              width in {2,4,8}, with ONE merged expert acquire per layer;
+              requires --interleaved, N <= 8)
   generate    run one generation from the CLI
               --model M --artifacts DIR --prompt TEXT --max-new N --temp T
               --hardware H --no-dynamic --no-prefetch --policy P

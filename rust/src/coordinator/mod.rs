@@ -19,15 +19,29 @@
 //!   across sequences. The scheduler blocks only when every live sequence
 //!   is stalled on the link at once; that residue is the *unhidden* stall
 //!   reported by the overlap-ratio metric.
+//!
+//! With `--max-batch N` (N > 1), the interleaved scheduler additionally
+//! performs **true batched decode**: each round it gangs up to N runnable,
+//! non-blocked sequences into one [`BatchCursor`] step (padded to the
+//! nearest compiled launch width in {2, 4, 8}) so concurrency becomes
+//! FLOP *and* load sharing — per layer the group issues a single merged
+//! `ExpertResidency::acquire` for the union of its routed experts and
+//! parks on one ticket set. Group membership follows the fairness policy
+//! (rr: submission order; sjf: shortest-remaining first); sequences beyond
+//! N, and rows *evicted* from a group because their expert loads blocked
+//! while the rest was runnable, continue on the solo interleaved path.
 
 use std::collections::VecDeque;
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use crate::engine::{DecodeCursor, DecodeProgress, Engine, KvState};
+use crate::engine::{
+    BatchCursor, BatchItem, BatchProgress, DecodeCursor, DecodeProgress, Engine, KvState,
+};
 use crate::metrics::{RequestMetrics, RunReport, SchedulerStats};
 use crate::residency::{SequenceSession, Ticket};
+use crate::runtime::MAX_DECODE_BATCH;
 use crate::tensor::sample_logits;
 use crate::tokenizer::{Tokenizer, EOS};
 use crate::util::rng::Rng;
@@ -118,6 +132,9 @@ struct ActiveSeq {
     generated: Vec<u32>,
     /// in-flight decode token, if suspended or mid-poll
     cursor: Option<DecodeCursor>,
+    /// true while this sequence rides the live batched group (its KV state
+    /// is inside the group's `BatchCursor`; the solo loops must skip it)
+    in_batch: bool,
     /// per-sequence sampling stream: interleaving order must not change
     /// any sequence's samples
     rng: Rng,
@@ -141,6 +158,14 @@ enum Advance {
     Finished(GenerationResult),
 }
 
+/// Outcome of the between-token lifecycle step ([`Coordinator::next_token`]).
+enum TokenStep {
+    /// budget/KV exhausted or EOS sampled: the sequence was finished
+    Finished(GenerationResult),
+    /// the sampled token, already committed to `generated`
+    Token(u32),
+}
+
 /// Coordinator over one engine; see [`SchedulerMode`] for the two
 /// scheduling disciplines.
 pub struct Coordinator {
@@ -152,8 +177,14 @@ pub struct Coordinator {
     pub sched_policy: SchedPolicy,
     /// max sequences decoded concurrently in interleaved mode
     pub max_active: usize,
+    /// max sequences ganged into one batched decode step (1 = solo
+    /// time-multiplexing only; capped at the largest compiled launch
+    /// width, `runtime::MAX_DECODE_BATCH`)
+    pub max_batch: usize,
     queue: VecDeque<QueuedRequest>,
     active: Vec<ActiveSeq>,
+    /// the in-flight batched decode step, if one is ganged up
+    group: Option<BatchCursor>,
     sched: SchedulerStats,
     busy_since: Option<Instant>,
     rng: Rng,
@@ -168,8 +199,10 @@ impl Coordinator {
             mode: SchedulerMode::Fcfs,
             sched_policy: SchedPolicy::RoundRobin,
             max_active: 4,
+            max_batch: 1,
             queue: VecDeque::new(),
             active: Vec::new(),
+            group: None,
             sched: SchedulerStats::default(),
             busy_since: None,
             rng: Rng::new(0xC0FFEE),
@@ -294,10 +327,22 @@ impl Coordinator {
         self.admit_waiting()?;
         let mut out = Vec::new();
         let mut progressed = false;
+        // batched decode: advance the in-flight group, then gang the next
+        // one from the between-token sequences BEFORE the solo loops see
+        // them (or the solo loops would consume every candidate)
+        if self.mode == SchedulerMode::Interleaved && self.max_batch > 1 {
+            progressed |= self.step_group()?;
+            progressed |= self.form_group(&mut out)?;
+        }
         match self.sched_policy {
             SchedPolicy::RoundRobin => {
                 let mut i = 0;
                 while i < self.active.len() {
+                    if self.active[i].in_batch {
+                        // its token rides the batched group this round
+                        i += 1;
+                        continue;
+                    }
                     match self.advance_one(i)? {
                         // finish() removed the sequence at i: do not advance i
                         Advance::Finished(r) => {
@@ -325,9 +370,10 @@ impl Coordinator {
                         // is_blocked, not is_pending: a cursor whose loads
                         // all completed is runnable (its next poll clears
                         // the barrier) and must be selectable, or SJF
-                        // livelocks with every sequence "stalled"
-                        let stalled =
-                            s.cursor.as_ref().map(|c| c.is_blocked()).unwrap_or(false);
+                        // livelocks with every sequence "stalled".
+                        // Group members are not solo-selectable at all.
+                        let stalled = s.in_batch
+                            || s.cursor.as_ref().map(|c| c.is_blocked()).unwrap_or(false);
                         (s.req.max_new_tokens.saturating_sub(s.generated.len()), stalled)
                     })
                     .collect();
@@ -344,10 +390,18 @@ impl Coordinator {
             }
         }
         if !progressed && may_block {
-            if let Some(idx) = self.first_stalled() {
+            let t0 = Instant::now();
+            if self.group.as_ref().map(|g| g.is_pending()).unwrap_or(false) {
+                // the whole group (and every solo sequence) waits on the
+                // link: block on the merged barrier
+                let mut cur = self.group.take().unwrap();
+                self.engine.set_active_sequence(None);
+                self.engine.decode_block_batch(&mut cur);
+                self.group = Some(cur);
+                self.sched.unhidden_stall += t0.elapsed();
+            } else if let Some(idx) = self.first_stalled() {
                 // every live sequence waits on the link: nothing left to
                 // overlap, so block — the unhidden share of the load wait
-                let t0 = Instant::now();
                 let seq = &mut self.active[idx];
                 self.engine.set_active_sequence(Some(seq.session.id()));
                 self.engine.decode_block(seq.cursor.as_mut().unwrap());
@@ -362,23 +416,193 @@ impl Coordinator {
         Ok(out)
     }
 
-    /// True when every live sequence is suspended on in-flight loads (and
-    /// there is at least one).
-    pub fn all_stalled(&self) -> bool {
-        !self.active.is_empty()
-            && self.active.iter().all(|s| {
-                s.cursor.as_ref().map(|c| c.is_pending()).unwrap_or(false)
+    // ------------------------------------------------------------------
+    // Batched decode (group formation + stepping)
+    // ------------------------------------------------------------------
+
+    fn index_of(&self, id: u64) -> Option<usize> {
+        self.active.iter().position(|s| s.session.id() == id)
+    }
+
+    /// Gang up to `max_batch` between-token sequences into one batched
+    /// decode step. Membership order follows the fairness policy: rr takes
+    /// submission order, sjf the shortest remaining first. Sequences that
+    /// turn out finished (budget/EOS) are completed here instead; a lone
+    /// survivor starts a solo cursor (its token is already sampled).
+    fn form_group(&mut self, out: &mut Vec<GenerationResult>) -> Result<bool> {
+        if self.group.is_some() {
+            return Ok(false);
+        }
+        let limit = self.max_batch.min(MAX_DECODE_BATCH);
+        let mut ids: Vec<(u64, usize)> = self
+            .active
+            .iter()
+            .filter(|s| !s.in_batch && s.cursor.is_none())
+            .map(|s| {
+                (s.session.id(), s.req.max_new_tokens.saturating_sub(s.generated.len()))
             })
+            .collect();
+        if self.sched_policy == SchedPolicy::Sjf {
+            ids.sort_by_key(|&(_, rem)| rem);
+        }
+        let mut progressed = false;
+        let mut picked: Vec<(u64, u32)> = Vec::new();
+        for (id, _) in ids {
+            if picked.len() == limit {
+                break;
+            }
+            let Some(i) = self.index_of(id) else { continue };
+            match self.next_token(i) {
+                TokenStep::Finished(r) => {
+                    out.push(r);
+                    progressed = true;
+                }
+                TokenStep::Token(next) => picked.push((id, next)),
+            }
+        }
+        match picked.len() {
+            0 => Ok(progressed),
+            1 => {
+                // a group of one is just the solo path — but its token is
+                // already sampled, so start the cursor here (the solo
+                // loops would re-sample)
+                let (id, tok) = picked[0];
+                let i = self.index_of(id).expect("picked sequence is live");
+                self.engine.set_active_sequence(Some(id));
+                let cursor = self.engine.decode_begin(&self.active[i].kv, tok)?;
+                self.active[i].cursor = Some(cursor);
+                Ok(true)
+            }
+            n => {
+                let mut items = Vec::with_capacity(n);
+                for &(id, tok) in &picked {
+                    let i = self.index_of(id).expect("picked sequence is live");
+                    let seq = &mut self.active[i];
+                    seq.in_batch = true;
+                    let kv = std::mem::replace(&mut seq.kv, KvState::empty());
+                    items.push(BatchItem { seq: Some(id), token: tok, kv });
+                }
+                self.engine.set_active_sequence(None);
+                let cur = self.engine.decode_begin_batch(items)?;
+                self.sched.batch_steps += 1;
+                self.sched.batch_rows += n as u64;
+                self.sched.padded_slots += (cur.width() - n) as u64;
+                self.group = Some(cur);
+                Ok(true)
+            }
+        }
+    }
+
+    /// Advance the in-flight batched group one poll. On `Pending`, rows
+    /// whose own loads block while some row is runnable are evicted onto
+    /// the solo path (they park on exactly their ticket subset); the rest
+    /// of the group keeps going. On `Done`, every row's logits/KV return
+    /// to its sequence (completions happen at the next formation, via
+    /// [`Self::next_token`]).
+    fn step_group(&mut self) -> Result<bool> {
+        let Some(mut cur) = self.group.take() else { return Ok(false) };
+        self.engine.set_active_sequence(None);
+        let compute0 = self.engine.compute_time();
+        let progress = match self.engine.decode_poll_batch(&mut cur) {
+            Ok(p) => p,
+            Err(e) => {
+                // release the merged barrier's per-row pins before
+                // surfacing the error — the server survives scheduler
+                // errors, and leaked pins would make those slots
+                // eviction-proof for the life of the process
+                self.engine.decode_abort_batch(cur);
+                return Err(e);
+            }
+        };
+        let dt = self.engine.compute_time().saturating_sub(compute0);
+        // attribute the shared launch evenly across the riding sequences
+        let alive = cur.rows_alive().max(1) as u32;
+        let share = dt / alive;
+        for r in 0..cur.rows() {
+            if let Some(id) = cur.row_seq_alive(r) {
+                if let Some(i) = self.index_of(id) {
+                    self.active[i].compute += share;
+                }
+            }
+        }
+        match progress {
+            BatchProgress::Pending => {
+                let mut evicted = false;
+                if cur.any_row_runnable() {
+                    for r in 0..cur.rows() {
+                        if !cur.row_blocked(r) {
+                            continue;
+                        }
+                        let carved = self.engine.decode_evict_row(&mut cur, r);
+                        if let Some((seq_id, kv, solo)) = carved {
+                            self.sched.batch_evictions += 1;
+                            evicted = true;
+                            let id = seq_id.expect("group rows carry session ids");
+                            if let Some(i) = self.index_of(id) {
+                                let seq = &mut self.active[i];
+                                seq.kv = kv;
+                                seq.cursor = Some(solo);
+                                seq.in_batch = false;
+                            }
+                        }
+                    }
+                }
+                if cur.rows_alive() == 0 {
+                    self.engine.decode_abort_batch(cur);
+                } else {
+                    self.group = Some(cur);
+                }
+                Ok(evicted)
+            }
+            BatchProgress::Done(rows) => {
+                let shared_wait = cur.load_wait;
+                for done in rows {
+                    let id = done.seq.expect("group rows carry session ids");
+                    if let Some(i) = self.index_of(id) {
+                        let seq = &mut self.active[i];
+                        seq.kv = done.kv;
+                        seq.logits = done.logits;
+                        seq.in_batch = false;
+                        seq.load_wait += shared_wait;
+                        if seq.ttft.is_none() {
+                            seq.ttft = Some(seq.enqueued.elapsed());
+                        }
+                    }
+                }
+                Ok(true)
+            }
+        }
+    }
+
+    /// True when every live sequence is suspended on in-flight loads (and
+    /// there is at least one). Group members count as stalled only while
+    /// the whole group is blocked — a group with a runnable row makes
+    /// progress next step (directly or by evicting the blocked rows).
+    pub fn all_stalled(&self) -> bool {
+        let solos_stalled = self.active.iter().filter(|s| !s.in_batch).all(|s| {
+            s.cursor.as_ref().map(|c| c.is_pending()).unwrap_or(false)
+        });
+        let group_stalled = match &self.group {
+            Some(g) => g.is_pending() && !g.any_row_runnable(),
+            None => true,
+        };
+        !self.active.is_empty() && solos_stalled && group_stalled
     }
 
     /// Residency tickets every live sequence is suspended on (for the
-    /// serving front-end's completion wakeups).
+    /// serving front-end's completion wakeups), the batched group's merged
+    /// barrier included.
     pub fn pending_tickets(&self) -> Vec<Ticket> {
-        self.active
+        let mut tickets: Vec<Ticket> = self
+            .active
             .iter()
             .filter_map(|s| s.cursor.as_ref())
             .flat_map(|c| c.pending_tickets().iter().cloned())
-            .collect()
+            .collect();
+        if let Some(g) = &self.group {
+            tickets.extend(g.pending_tickets().iter().cloned());
+        }
+        tickets
     }
 
     /// Attribute externally-measured blocked time (the serving front-end
@@ -397,6 +621,11 @@ impl Coordinator {
     /// the request ids so the serving front-end can fail them individually
     /// instead of tearing the server down.
     pub fn abort_all(&mut self) -> Vec<u64> {
+        if let Some(cur) = self.group.take() {
+            // release the group's per-row cache pins; its rows' sessions
+            // retire when their ActiveSeqs drain below
+            self.engine.decode_abort_batch(cur);
+        }
         let mut ids = Vec::with_capacity(self.active.len() + self.queue.len());
         for mut seq in self.active.drain(..) {
             if let Some(cur) = seq.cursor.take() {
@@ -455,6 +684,7 @@ impl Coordinator {
                 logits,
                 generated: Vec::with_capacity(q.req.max_new_tokens),
                 cursor: None,
+                in_batch: false,
                 // per-sequence stream: deterministic for a given request id
                 rng: Rng::new(0xC0FFEE ^ q.req.id),
                 enqueued: q.enqueued,
@@ -472,26 +702,38 @@ impl Coordinator {
         Ok(())
     }
 
+    /// The between-token lifecycle, shared by the solo path and batch
+    /// formation so the two can never drift: finish the sequence when its
+    /// budget/KV is exhausted or it samples EOS; otherwise commit the
+    /// sampled token to `generated` and hand it back for decoding.
+    fn next_token(&mut self, i: usize) -> TokenStep {
+        let done = {
+            let seq = &self.active[i];
+            seq.generated.len() >= seq.req.max_new_tokens || seq.kv.remaining() == 0
+        };
+        if done {
+            return TokenStep::Finished(self.finish(i));
+        }
+        let next = {
+            let seq = &mut self.active[i];
+            sample_logits(&seq.logits, seq.req.temperature, &mut seq.rng) as u32
+        };
+        if next == EOS {
+            return TokenStep::Finished(self.finish(i));
+        }
+        self.active[i].generated.push(next);
+        TokenStep::Token(next)
+    }
+
     /// Advance sequence `i` one unit: start its next token if it is
     /// between tokens, then poll its cursor once. Removal on completion
     /// happens inside (via `finish`).
     fn advance_one(&mut self, i: usize) -> Result<Advance> {
         if self.active[i].cursor.is_none() {
-            let done = {
-                let seq = &self.active[i];
-                seq.generated.len() >= seq.req.max_new_tokens || seq.kv.remaining() == 0
+            let next = match self.next_token(i) {
+                TokenStep::Finished(r) => return Ok(Advance::Finished(r)),
+                TokenStep::Token(t) => t,
             };
-            if done {
-                return Ok(Advance::Finished(self.finish(i)));
-            }
-            let next = {
-                let seq = &mut self.active[i];
-                sample_logits(&seq.logits, seq.req.temperature, &mut seq.rng) as u32
-            };
-            if next == EOS {
-                return Ok(Advance::Finished(self.finish(i)));
-            }
-            self.active[i].generated.push(next);
             self.engine.set_active_sequence(Some(self.active[i].session.id()));
             let cursor = self.engine.decode_begin(&self.active[i].kv, next)?;
             self.active[i].cursor = Some(cursor);
@@ -507,7 +749,16 @@ impl Coordinator {
         };
         let dt = self.engine.compute_time().saturating_sub(compute0);
         self.active[i].compute += dt;
-        match progress? {
+        let progress = match progress {
+            Ok(p) => p,
+            Err(e) => {
+                // same contract as the batched path: release the barrier's
+                // pins before surfacing the error the server will survive
+                self.engine.decode_abort(cursor);
+                return Err(e);
+            }
+        };
+        match progress {
             DecodeProgress::Pending => {
                 self.active[i].cursor = Some(cursor);
                 Ok(Advance::Stalled)

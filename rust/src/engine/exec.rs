@@ -1,0 +1,782 @@
+//! Compute executors: the engine's per-layer math units behind one
+//! dispatch point.
+//!
+//! The engine composes four units per layer — attention, stacked gating,
+//! expert FFN, LM head. [`Exec`] is the seam between that composition and
+//! *how* the units run:
+//!
+//! * [`PjrtExec`] — the production path: AOT-compiled HLO artifacts
+//!   executed through the PJRT C API (moved here from `Engine`). Batched
+//!   decode widths ({2, 4, 8}) run as one launch when the manifest carries
+//!   the `*_s{w}` variants and fall back to per-row s=1 launches when it
+//!   does not (`runtime::Manifest::decode_batch_widths`); the fallback is
+//!   bit-identical per row, so batching never changes a sequence's logits.
+//! * [`RefExec`] — pure-Rust reference kernels mirroring
+//!   `python/compile/model.py` (RMSNorm + RoPE GQA attention, softmax
+//!   gating, SwiGLU experts with group-dequant, tied-embedding head).
+//!   Needs no artifacts, so the batched-decode regression suite — and CI —
+//!   can drive the full engine/coordinator/residency stack from a
+//!   synthesized weight directory (`model::synth`). Every op is computed
+//!   row-independently in a fixed accumulation order, which is what makes
+//!   the batch-vs-sequential equivalence tests exact (bit-identical), not
+//!   approximate.
+//!
+//! Attention is per-row even in a batched decode step: each sequence has
+//! its own KV cache and position, which the `attn_s{w}` artifact signature
+//! (one cache, consecutive positions) cannot express. Gate, expert FFN,
+//! and head batch across the padded launch width.
+
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Context, Result};
+use xla::Literal;
+
+use crate::config::ModelConfig;
+use crate::model::{expert_literals, NonExpertWeights};
+use crate::quant;
+use crate::runtime::{lit_f32, lit_i32, lit_to_f32, Runtime};
+use crate::tensor::softmax;
+use crate::{ExpertKey, Precision};
+
+use super::{EngineOptions, KvState};
+
+/// Norm epsilon / RoPE base of the compiled models
+/// (`python/compile/configs.py` defaults; not carried by the manifest).
+const NORM_EPS: f32 = 1e-5;
+const ROPE_THETA: f32 = 10000.0;
+
+/// One executor behind the engine: either the AOT PJRT artifacts or the
+/// pure-Rust reference kernels.
+pub(crate) enum Exec {
+    Pjrt(PjrtExec),
+    Reference(RefExec),
+}
+
+impl Exec {
+    /// Attention for layer `li` over `s` rows of one sequence (prefill
+    /// chunk or a single decode row); updates `kv` in place.
+    pub fn attn(
+        &mut self,
+        li: usize,
+        s: usize,
+        x: &[f32],
+        kv: &mut KvState,
+        pos: i32,
+    ) -> Result<Vec<f32>> {
+        match self {
+            Exec::Pjrt(e) => e.attn(li, s, x, kv, pos),
+            Exec::Reference(e) => e.attn(li, s, x, kv, pos),
+        }
+    }
+
+    /// Gating for layer `li`: stacked (Stacking Computer) on decode,
+    /// single on prefill. Returns (p_eff, probs [p_eff, s, e], normed
+    /// hidden [s, d]). `live` marks the rows whose outputs the caller
+    /// will read (None = all): per-row fallbacks and the reference
+    /// kernels skip dead/padding rows, leaving zeros.
+    pub fn gate(
+        &mut self,
+        li: usize,
+        s: usize,
+        decode: bool,
+        x: &[f32],
+        live: Option<&[bool]>,
+    ) -> Result<(usize, Vec<f32>, Vec<f32>)> {
+        match self {
+            Exec::Pjrt(e) => e.gate(li, s, decode, x, live),
+            Exec::Reference(e) => e.gate(li, s, decode, x, live),
+        }
+    }
+
+    /// One expert's weighted SwiGLU FFN over `s` rows; `gatew[r] == 0`
+    /// rows are not routed here and contribute zero.
+    pub fn expert(
+        &mut self,
+        s: usize,
+        prec: Precision,
+        record: &[u8],
+        hn: &[f32],
+        gatew: &[f32],
+        key: ExpertKey,
+    ) -> Result<Vec<f32>> {
+        match self {
+            Exec::Pjrt(e) => e.expert(s, prec, record, hn, gatew, key),
+            Exec::Reference(e) => e.expert(s, prec, record, hn, gatew),
+        }
+    }
+
+    /// LM head over `s` rows: final norm + tied-embedding logits
+    /// [s, vocab]. `live` as in [`Self::gate`].
+    pub fn head(&mut self, s: usize, x: &[f32], live: Option<&[bool]>) -> Result<Vec<f32>> {
+        match self {
+            Exec::Pjrt(e) => e.head(s, x, live),
+            Exec::Reference(e) => e.head(s, x, live),
+        }
+    }
+
+    pub fn platform(&self) -> String {
+        match self {
+            Exec::Pjrt(e) => e.rt.platform(),
+            Exec::Reference(_) => "reference-cpu".to_string(),
+        }
+    }
+
+    /// Cumulative wall time inside the executor's compute calls.
+    pub fn compute_time(&self) -> Duration {
+        match self {
+            Exec::Pjrt(e) => e.rt.compute_time.get(),
+            Exec::Reference(e) => e.compute.get(),
+        }
+    }
+
+    /// Decode widths served as one native launch (vs the per-row
+    /// fallback). The reference kernels batch natively at every width.
+    pub fn batched_widths(&self) -> &[usize] {
+        match self {
+            Exec::Pjrt(e) => &e.batched,
+            Exec::Reference(e) => &e.batched,
+        }
+    }
+
+    pub fn runtime(&self) -> Option<&Runtime> {
+        match self {
+            Exec::Pjrt(e) => Some(&e.rt),
+            Exec::Reference(_) => None,
+        }
+    }
+
+    pub fn runtime_mut(&mut self) -> Option<&mut Runtime> {
+        match self {
+            Exec::Pjrt(e) => Some(&mut e.rt),
+            Exec::Reference(_) => None,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// PJRT executor (the production path)
+// ---------------------------------------------------------------------
+
+/// Precomputed per-layer literal sets (built once; the request path never
+/// re-creates weight literals — perf-critical).
+struct LayerLits {
+    attn: [Literal; 5], // norm, wq, wk, wv, wo
+    /// decode gate stack for this layer: (p_eff, pn[p,d], wg[p,d,E])
+    gate_stack: (usize, Literal, Literal),
+    /// prefill gate (p = 1)
+    gate_single: (Literal, Literal),
+}
+
+pub(crate) struct PjrtExec {
+    pub(crate) rt: Runtime,
+    cfg: ModelConfig,
+    layers: Vec<LayerLits>,
+    emb_lit: Literal,
+    final_norm_lit: Literal,
+    pub(crate) ffn_prefix: &'static str,
+    /// sequence-chunk widths with compiled artifacts (s=1 + prefill)
+    chunk_s: Vec<usize>,
+    /// batched decode widths with a full compiled variant set
+    batched: Vec<usize>,
+}
+
+impl PjrtExec {
+    pub fn new(
+        mut rt: Runtime,
+        cfg: &ModelConfig,
+        nonexpert: &NonExpertWeights,
+        opts: &EngineOptions,
+    ) -> Result<Self> {
+        // ---- compile the artifacts this configuration uses ----------------
+        let hi = opts.policy.hi_precision;
+        let lo = opts.policy.lo_precision;
+        // older artifact sets may not carry the fast lowerings
+        let fast = opts.use_fast_ffn
+            && rt.manifest.artifacts.contains_key("expert_fast_f32_s1");
+        let ffn_prefix = if fast { "expert_fast" } else { "expert" };
+        let depth = opts.policy.prefetch_depth;
+        let stack_p = (depth + 1).min(4).max(1);
+        let mut names: Vec<String> = Vec::new();
+        for s in [1usize, 16, 128] {
+            names.push(format!("attn_s{s}"));
+            names.push(format!("head_s{s}"));
+            names.push(format!("{ffn_prefix}_{}_s{s}", hi.name()));
+            names.push(format!("{ffn_prefix}_{}_s{s}", lo.name()));
+        }
+        for p in 1..=stack_p {
+            names.push(format!("gate_p{p}_s1"));
+        }
+        for s in [16usize, 128] {
+            names.push(format!("gate_p1_s{s}"));
+        }
+        // batched decode variants, where the artifact set carries them
+        let batched =
+            rt.manifest.decode_batch_widths(stack_p, ffn_prefix, hi.name(), lo.name());
+        for &w in &batched {
+            names.push(format!("head_s{w}"));
+            names.push(format!("{ffn_prefix}_{}_s{w}", hi.name()));
+            names.push(format!("{ffn_prefix}_{}_s{w}", lo.name()));
+            for p in 1..=stack_p {
+                names.push(format!("gate_p{p}_s{w}"));
+            }
+        }
+        rt.ensure_all(names.iter().map(|s| s.as_str()))?;
+
+        // ---- per-layer literals -------------------------------------------
+        let l = cfg.n_layers as usize;
+        let mut layers = Vec::with_capacity(l);
+        for li in 0..l {
+            let mk = |name: &str| -> Result<Literal> {
+                let (shape, data) = nonexpert.get(name)?;
+                lit_f32(shape, data)
+            };
+            let attn = [
+                mk(&format!("attn_norm.{li}"))?,
+                mk(&format!("wq.{li}"))?,
+                mk(&format!("wk.{li}"))?,
+                mk(&format!("wv.{li}"))?,
+                mk(&format!("wo.{li}"))?,
+            ];
+            // decode gate stack: layers li .. li+p_eff-1
+            let p_eff = stack_p.min(l - li);
+            let mut pn = Vec::with_capacity(p_eff * cfg.d_model);
+            let mut wg = Vec::with_capacity(p_eff * cfg.d_model * cfg.n_experts as usize);
+            for j in 0..p_eff {
+                let (_, pnj) = nonexpert.get(&format!("post_norm.{}", li + j))?;
+                pn.extend_from_slice(pnj);
+                let (_, wgj) = nonexpert.get(&format!("wg.{}", li + j))?;
+                wg.extend_from_slice(wgj);
+            }
+            let e = cfg.n_experts as usize;
+            let gate_stack = (
+                p_eff,
+                lit_f32(&[p_eff, cfg.d_model], &pn)?,
+                lit_f32(&[p_eff, cfg.d_model, e], &wg)?,
+            );
+            let (_, pn0) = nonexpert.get(&format!("post_norm.{li}"))?;
+            let (_, wg0) = nonexpert.get(&format!("wg.{li}"))?;
+            let gate_single = (
+                lit_f32(&[1, cfg.d_model], pn0)?,
+                lit_f32(&[1, cfg.d_model, e], wg0)?,
+            );
+            layers.push(LayerLits { attn, gate_stack, gate_single });
+        }
+
+        let (emb_shape, emb) = nonexpert.get("emb")?;
+        let emb_lit = lit_f32(emb_shape, emb)?;
+        let (_, fnorm) = nonexpert.get("final_norm")?;
+        let final_norm_lit = lit_f32(&[cfg.d_model], fnorm)?;
+
+        let mut chunk_s = vec![1usize, 16, 128];
+        chunk_s.extend(batched.iter().copied());
+
+        Ok(Self {
+            rt,
+            cfg: cfg.clone(),
+            layers,
+            emb_lit,
+            final_norm_lit,
+            ffn_prefix,
+            chunk_s,
+            batched,
+        })
+    }
+
+    /// Whether a single launch of width `s` is compiled.
+    fn has_width(&self, s: usize) -> bool {
+        self.chunk_s.contains(&s)
+    }
+
+    fn attn(
+        &mut self,
+        li: usize,
+        s: usize,
+        x: &[f32],
+        kv: &mut KvState,
+        pos: i32,
+    ) -> Result<Vec<f32>> {
+        let d = self.cfg.d_model;
+        let x_lit = lit_f32(&[s, d], x)?;
+        let kdims = [self.cfg.max_seq, self.cfg.n_kv_heads, self.cfg.head_dim()];
+        let k_lit = lit_f32(&kdims, &kv.k[li])?;
+        let v_lit = lit_f32(&kdims, &kv.v[li])?;
+        let pos_lit = lit_i32(pos);
+        let ll = &self.layers[li];
+        let args: Vec<&Literal> = vec![
+            &x_lit, &ll.attn[0], &ll.attn[1], &ll.attn[2], &ll.attn[3], &ll.attn[4],
+            &k_lit, &v_lit, &pos_lit,
+        ];
+        let outs = self.rt.execute(&format!("attn_s{s}"), &args)?;
+        anyhow::ensure!(outs.len() == 3, "attn outputs");
+        let y = lit_to_f32(&outs[0])?;
+        kv.k[li] = lit_to_f32(&outs[1])?;
+        kv.v[li] = lit_to_f32(&outs[2])?;
+        Ok(y)
+    }
+
+    fn gate(
+        &mut self,
+        li: usize,
+        s: usize,
+        decode: bool,
+        x: &[f32],
+        live: Option<&[bool]>,
+    ) -> Result<(usize, Vec<f32>, Vec<f32>)> {
+        let d = self.cfg.d_model;
+        let e = self.cfg.n_experts as usize;
+        if decode {
+            let (p_eff, ref pn, ref wg) = self.layers[li].gate_stack;
+            if s == 1 || self.batched.contains(&s) {
+                let x_lit = lit_f32(&[s, d], x)?;
+                let args: Vec<&Literal> = vec![&x_lit, pn, wg];
+                let outs = self.rt.execute(&format!("gate_p{p_eff}_s{s}"), &args)?;
+                return Ok((p_eff, lit_to_f32(&outs[0])?, lit_to_f32(&outs[1])?));
+            }
+            // batched width with no compiled variant: per-row s=1 launches,
+            // stitched into the [p_eff, s, e] layout (bit-identical per
+            // row); padding/dead rows are not worth a launch
+            let mut probs = vec![0.0f32; p_eff * s * e];
+            let mut hn = vec![0.0f32; s * d];
+            for r in 0..s {
+                if live.map(|m| !m[r]).unwrap_or(false) {
+                    continue;
+                }
+                let x_lit = lit_f32(&[1, d], &x[r * d..(r + 1) * d])?;
+                let args: Vec<&Literal> = vec![&x_lit, pn, wg];
+                let outs = self.rt.execute(&format!("gate_p{p_eff}_s1"), &args)?;
+                let pr = lit_to_f32(&outs[0])?;
+                let hr = lit_to_f32(&outs[1])?;
+                for j in 0..p_eff {
+                    probs[j * s * e + r * e..j * s * e + (r + 1) * e]
+                        .copy_from_slice(&pr[j * e..(j + 1) * e]);
+                }
+                hn[r * d..(r + 1) * d].copy_from_slice(&hr);
+            }
+            Ok((p_eff, probs, hn))
+        } else {
+            let (ref pn, ref wg) = self.layers[li].gate_single;
+            let x_lit = lit_f32(&[s, d], x)?;
+            let args: Vec<&Literal> = vec![&x_lit, pn, wg];
+            let outs = self.rt.execute(&format!("gate_p1_s{s}"), &args)?;
+            Ok((1usize, lit_to_f32(&outs[0])?, lit_to_f32(&outs[1])?))
+        }
+    }
+
+    fn expert(
+        &mut self,
+        s: usize,
+        prec: Precision,
+        record: &[u8],
+        hn: &[f32],
+        gatew: &[f32],
+        key: ExpertKey,
+    ) -> Result<Vec<f32>> {
+        let d = self.cfg.d_model;
+        if self.has_width(s) {
+            let name = format!("{}_{}_s{s}", self.ffn_prefix, prec.name());
+            let mut args: Vec<Literal> = Vec::with_capacity(8);
+            args.push(lit_f32(&[s, d], hn)?);
+            args.extend(expert_literals(&self.cfg, prec, record)?);
+            args.push(lit_f32(&[s], gatew)?);
+            let outs = self
+                .rt
+                .execute(&name, &args)
+                .with_context(|| format!("expert {key:?} via {name}"))?;
+            return lit_to_f32(&outs[0]);
+        }
+        // padded width with no compiled variant: one s=1 launch per routed
+        // row (zero-weight rows contribute zero and are skipped)
+        let name = format!("{}_{}_s1", self.ffn_prefix, prec.name());
+        let wlits = expert_literals(&self.cfg, prec, record)?;
+        let mut out = vec![0.0f32; s * d];
+        for r in 0..s {
+            if gatew[r] == 0.0 {
+                continue;
+            }
+            let x_lit = lit_f32(&[1, d], &hn[r * d..(r + 1) * d])?;
+            let gw_lit = lit_f32(&[1], &gatew[r..r + 1])?;
+            let mut args: Vec<&Literal> = Vec::with_capacity(8);
+            args.push(&x_lit);
+            args.extend(wlits.iter());
+            args.push(&gw_lit);
+            let outs = self
+                .rt
+                .execute(&name, &args)
+                .with_context(|| format!("expert {key:?} via {name} (row {r})"))?;
+            let y = lit_to_f32(&outs[0])?;
+            out[r * d..(r + 1) * d].copy_from_slice(&y);
+        }
+        Ok(out)
+    }
+
+    fn head(&mut self, s: usize, x: &[f32], live: Option<&[bool]>) -> Result<Vec<f32>> {
+        let d = self.cfg.d_model;
+        let v = self.cfg.vocab;
+        if self.has_width(s) {
+            let x_lit = lit_f32(&[s, d], x)?;
+            let args: Vec<&Literal> = vec![&x_lit, &self.final_norm_lit, &self.emb_lit];
+            let outs = self.rt.execute(&format!("head_s{s}"), &args)?;
+            return lit_to_f32(&outs[0]);
+        }
+        let mut out = vec![0.0f32; s * v];
+        for r in 0..s {
+            if live.map(|m| !m[r]).unwrap_or(false) {
+                continue;
+            }
+            let x_lit = lit_f32(&[1, d], &x[r * d..(r + 1) * d])?;
+            let args: Vec<&Literal> = vec![&x_lit, &self.final_norm_lit, &self.emb_lit];
+            let outs = self.rt.execute("head_s1", &args)?;
+            let y = lit_to_f32(&outs[0])?;
+            out[r * v..(r + 1) * v].copy_from_slice(&y);
+        }
+        Ok(out)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Reference executor (pure Rust, artifact-free)
+// ---------------------------------------------------------------------
+
+pub(crate) struct RefExec {
+    cfg: ModelConfig,
+    stack_p: usize,
+    emb: Vec<f32>,            // [v, d]
+    final_norm: Vec<f32>,     // [d]
+    attn_norm: Vec<Vec<f32>>, // per layer [d]
+    wq: Vec<Vec<f32>>,        // per layer [d, h*hd]
+    wk: Vec<Vec<f32>>,        // per layer [d, hkv*hd]
+    wv: Vec<Vec<f32>>,        // per layer [d, hkv*hd]
+    wo: Vec<Vec<f32>>,        // per layer [h*hd, d]
+    post_norm: Vec<Vec<f32>>, // per layer [d]
+    wg: Vec<Vec<f32>>,        // per layer [d, e]
+    batched: Vec<usize>,
+    compute: std::cell::Cell<Duration>,
+}
+
+/// out[r, c] = sum_i x[r, i] * w[i, c] with a fixed (ascending-i)
+/// accumulation order — determinism is the point, not speed.
+fn matmul(x: &[f32], w: &[f32], rows: usize, inner: usize, cols: usize) -> Vec<f32> {
+    debug_assert_eq!(x.len(), rows * inner);
+    debug_assert_eq!(w.len(), inner * cols);
+    let mut out = vec![0.0f32; rows * cols];
+    for r in 0..rows {
+        let xr = &x[r * inner..(r + 1) * inner];
+        let or = &mut out[r * cols..(r + 1) * cols];
+        for (i, xv) in xr.iter().enumerate() {
+            if *xv == 0.0 {
+                // skipping exact-zero terms adds exact zeros — identical sum
+                continue;
+            }
+            let wrow = &w[i * cols..(i + 1) * cols];
+            for (o, wv) in or.iter_mut().zip(wrow) {
+                *o += xv * wv;
+            }
+        }
+    }
+    out
+}
+
+fn rmsnorm_row(x: &[f32], w: &[f32]) -> Vec<f32> {
+    let var = x.iter().map(|v| v * v).sum::<f32>() / x.len() as f32;
+    let r = 1.0 / (var + NORM_EPS).sqrt();
+    x.iter().zip(w).map(|(xv, wv)| xv * r * wv).collect()
+}
+
+fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+/// Rotary embedding of one row's heads in place: q is [n_heads, hd].
+fn rope_row(q: &mut [f32], n_heads: usize, hd: usize, pos: f32) {
+    let half = hd / 2;
+    for h in 0..n_heads {
+        let head = &mut q[h * hd..(h + 1) * hd];
+        for i in 0..half {
+            let freq = 1.0 / ROPE_THETA.powf(i as f32 / half as f32);
+            let t = pos * freq;
+            let (sin, cos) = t.sin_cos();
+            let a = head[i];
+            let b = head[half + i];
+            head[i] = a * cos - b * sin;
+            head[half + i] = a * sin + b * cos;
+        }
+    }
+}
+
+fn le_f32(bytes: &[u8]) -> Vec<f32> {
+    bytes.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect()
+}
+
+impl RefExec {
+    pub fn new(cfg: &ModelConfig, nonexpert: &NonExpertWeights, stack_p: usize) -> Result<Self> {
+        let l = cfg.n_layers as usize;
+        let grab = |name: &str| -> Result<Vec<f32>> {
+            let (_, data) = nonexpert.get(name)?;
+            Ok(data.to_vec())
+        };
+        let mut attn_norm = Vec::with_capacity(l);
+        let mut wq = Vec::with_capacity(l);
+        let mut wk = Vec::with_capacity(l);
+        let mut wv = Vec::with_capacity(l);
+        let mut wo = Vec::with_capacity(l);
+        let mut post_norm = Vec::with_capacity(l);
+        let mut wg = Vec::with_capacity(l);
+        for li in 0..l {
+            attn_norm.push(grab(&format!("attn_norm.{li}"))?);
+            wq.push(grab(&format!("wq.{li}"))?);
+            wk.push(grab(&format!("wk.{li}"))?);
+            wv.push(grab(&format!("wv.{li}"))?);
+            wo.push(grab(&format!("wo.{li}"))?);
+            post_norm.push(grab(&format!("post_norm.{li}"))?);
+            wg.push(grab(&format!("wg.{li}"))?);
+        }
+        Ok(Self {
+            cfg: cfg.clone(),
+            stack_p: stack_p.clamp(1, 4),
+            emb: grab("emb")?,
+            final_norm: grab("final_norm")?,
+            attn_norm,
+            wq,
+            wk,
+            wv,
+            wo,
+            post_norm,
+            wg,
+            batched: crate::runtime::DECODE_BATCH_WIDTHS.to_vec(),
+            compute: std::cell::Cell::new(Duration::ZERO),
+        })
+    }
+
+    fn clock<T>(&self, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.compute.set(self.compute.get() + t0.elapsed());
+        out
+    }
+
+    fn attn(
+        &mut self,
+        li: usize,
+        s: usize,
+        x: &[f32],
+        kv: &mut KvState,
+        pos: i32,
+    ) -> Result<Vec<f32>> {
+        anyhow::ensure!(li < self.attn_norm.len(), "layer {li} out of range");
+        let cfg = self.cfg.clone();
+        let t0 = Instant::now();
+        let d = cfg.d_model;
+        let (h, hkv, hd) = (cfg.n_heads, cfg.n_kv_heads, cfg.head_dim());
+        let rep = h / hkv;
+        let mut hn = vec![0.0f32; s * d];
+        for r in 0..s {
+            hn[r * d..(r + 1) * d]
+                .copy_from_slice(&rmsnorm_row(&x[r * d..(r + 1) * d], &self.attn_norm[li]));
+        }
+        let mut q = matmul(&hn, &self.wq[li], s, d, h * hd);
+        let mut kx = matmul(&hn, &self.wk[li], s, d, hkv * hd);
+        let vx = matmul(&hn, &self.wv[li], s, d, hkv * hd);
+        for r in 0..s {
+            let p = (pos + r as i32) as f32;
+            rope_row(&mut q[r * h * hd..(r + 1) * h * hd], h, hd, p);
+            rope_row(&mut kx[r * hkv * hd..(r + 1) * hkv * hd], hkv, hd, p);
+        }
+        // write the new keys/values into the cache at pos..pos+s
+        for r in 0..s {
+            let at = (pos as usize + r) * hkv * hd;
+            kv.k[li][at..at + hkv * hd].copy_from_slice(&kx[r * hkv * hd..(r + 1) * hkv * hd]);
+            kv.v[li][at..at + hkv * hd].copy_from_slice(&vx[r * hkv * hd..(r + 1) * hkv * hd]);
+        }
+        let scale = 1.0 / (hd as f32).sqrt();
+        let mut ctx = vec![0.0f32; s * h * hd];
+        for r in 0..s {
+            // causal + length mask: row r (absolute pos+r) sees keys <= pos+r
+            let visible = pos as usize + r + 1;
+            for qh in 0..h {
+                let g = qh / rep;
+                let qrow = &q[(r * h + qh) * hd..(r * h + qh + 1) * hd];
+                let mut scores = vec![0.0f32; visible];
+                for (tt, sc) in scores.iter_mut().enumerate() {
+                    let krow = &kv.k[li][(tt * hkv + g) * hd..(tt * hkv + g + 1) * hd];
+                    *sc = qrow.iter().zip(krow).map(|(a, b)| a * b).sum::<f32>() * scale;
+                }
+                let probs = softmax(&scores);
+                let orow = &mut ctx[(r * h + qh) * hd..(r * h + qh + 1) * hd];
+                for (tt, p) in probs.iter().enumerate() {
+                    let vrow = &kv.v[li][(tt * hkv + g) * hd..(tt * hkv + g + 1) * hd];
+                    for (o, vv) in orow.iter_mut().zip(vrow) {
+                        *o += p * vv;
+                    }
+                }
+            }
+        }
+        let proj = matmul(&ctx, &self.wo[li], s, h * hd, d);
+        let y: Vec<f32> = x.iter().zip(&proj).map(|(a, b)| a + b).collect();
+        self.compute.set(self.compute.get() + t0.elapsed());
+        Ok(y)
+    }
+
+    fn gate(
+        &mut self,
+        li: usize,
+        s: usize,
+        decode: bool,
+        x: &[f32],
+        live: Option<&[bool]>,
+    ) -> Result<(usize, Vec<f32>, Vec<f32>)> {
+        anyhow::ensure!(li < self.post_norm.len(), "layer {li} out of range");
+        let l = self.cfg.n_layers as usize;
+        let d = self.cfg.d_model;
+        let e = self.cfg.n_experts as usize;
+        let p_eff = if decode { self.stack_p.min(l - li).max(1) } else { 1 };
+        let dead = |r: usize| live.map(|m| !m[r]).unwrap_or(false);
+        self.clock(|| {
+            let mut probs = vec![0.0f32; p_eff * s * e];
+            for j in 0..p_eff {
+                let lw = li + j;
+                for r in 0..s {
+                    if dead(r) {
+                        continue;
+                    }
+                    let hnr = rmsnorm_row(&x[r * d..(r + 1) * d], &self.post_norm[lw]);
+                    let logits = matmul(&hnr, &self.wg[lw], 1, d, e);
+                    probs[j * s * e + r * e..j * s * e + (r + 1) * e]
+                        .copy_from_slice(&softmax(&logits));
+                }
+            }
+            let mut hn0 = vec![0.0f32; s * d];
+            for r in 0..s {
+                if dead(r) {
+                    continue;
+                }
+                hn0[r * d..(r + 1) * d]
+                    .copy_from_slice(&rmsnorm_row(&x[r * d..(r + 1) * d], &self.post_norm[li]));
+            }
+            Ok((p_eff, probs, hn0))
+        })
+    }
+
+    /// Slice + (if quantized) group-dequantize an expert record into its
+    /// three SwiGLU matrices, mirroring `model::expert_literals`.
+    fn parse_record(&self, prec: Precision, record: &[u8]) -> Result<[Vec<f32>; 3]> {
+        let d = self.cfg.d_model;
+        let ff = self.cfg.d_ff;
+        let g = self.cfg.quant_group;
+        match prec {
+            Precision::F32 => {
+                let floats = le_f32(record);
+                let n1 = d * ff;
+                let n2 = ff * d;
+                anyhow::ensure!(floats.len() == 2 * n1 + n2, "f32 record size mismatch");
+                Ok([
+                    floats[..n1].to_vec(),
+                    floats[n1..2 * n1].to_vec(),
+                    floats[2 * n1..].to_vec(),
+                ])
+            }
+            _ => {
+                let pack = prec.pack();
+                let mut off = 0usize;
+                let mut out: Vec<Vec<f32>> = Vec::with_capacity(3);
+                for (rows, cols) in [(d, ff), (d, ff), (ff, d)] {
+                    let nb = rows / pack * cols;
+                    let packed = &record[off..off + nb];
+                    off += nb;
+                    let ns = rows / g * cols * 4;
+                    let scales = le_f32(&record[off..off + ns]);
+                    off += ns;
+                    out.push(quant::dequantize(packed, &scales, rows, cols, g, prec));
+                }
+                anyhow::ensure!(off == record.len(), "quant record size mismatch");
+                out.try_into().map_err(|_| anyhow!("record matrix count"))
+            }
+        }
+    }
+
+    fn expert(
+        &mut self,
+        s: usize,
+        prec: Precision,
+        record: &[u8],
+        hn: &[f32],
+        gatew: &[f32],
+    ) -> Result<Vec<f32>> {
+        let [w1, w3, w2] = self.parse_record(prec, record)?;
+        let d = self.cfg.d_model;
+        let ff = self.cfg.d_ff;
+        self.clock(|| {
+            let mut out = vec![0.0f32; s * d];
+            for r in 0..s {
+                if gatew[r] == 0.0 {
+                    continue;
+                }
+                let xr = &hn[r * d..(r + 1) * d];
+                let a = matmul(xr, &w1, 1, d, ff);
+                let b = matmul(xr, &w3, 1, d, ff);
+                let hrow: Vec<f32> =
+                    a.iter().zip(&b).map(|(av, bv)| silu(*av) * bv).collect();
+                let y = matmul(&hrow, &w2, 1, ff, d);
+                for (o, yv) in out[r * d..(r + 1) * d].iter_mut().zip(&y) {
+                    *o = yv * gatew[r];
+                }
+            }
+            Ok(out)
+        })
+    }
+
+    fn head(&mut self, s: usize, x: &[f32], live: Option<&[bool]>) -> Result<Vec<f32>> {
+        let d = self.cfg.d_model;
+        let v = self.cfg.vocab;
+        self.clock(|| {
+            let mut out = vec![0.0f32; s * v];
+            for r in 0..s {
+                if live.map(|m| !m[r]).unwrap_or(false) {
+                    continue;
+                }
+                let hnr = rmsnorm_row(&x[r * d..(r + 1) * d], &self.final_norm);
+                let orow = &mut out[r * v..(r + 1) * v];
+                for (t, o) in orow.iter_mut().enumerate() {
+                    *o = hnr.iter().zip(&self.emb[t * d..(t + 1) * d]).map(|(a, b)| a * b).sum();
+                }
+            }
+            Ok(out)
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_identity() {
+        // 2x2 identity leaves rows unchanged
+        let w = vec![1.0, 0.0, 0.0, 1.0];
+        let x = vec![3.0, -2.0, 0.5, 7.0];
+        assert_eq!(matmul(&x, &w, 2, 2, 2), x);
+    }
+
+    #[test]
+    fn rmsnorm_unit_scale() {
+        let x = vec![2.0f32, -2.0];
+        let w = vec![1.0f32, 1.0];
+        let y = rmsnorm_row(&x, &w);
+        // var = 4, rsqrt(4 + eps) ~ 0.5
+        assert!((y[0] - 1.0).abs() < 1e-3 && (y[1] + 1.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn rope_preserves_norm() {
+        let mut q = vec![1.0f32, 0.0, 0.0, 1.0]; // one head, hd=4
+        let n0: f32 = q.iter().map(|v| v * v).sum();
+        rope_row(&mut q, 1, 4, 3.0);
+        let n1: f32 = q.iter().map(|v| v * v).sum();
+        assert!((n0 - n1).abs() < 1e-4, "rotation must preserve norm");
+    }
+
+    #[test]
+    fn silu_matches_definition() {
+        assert_eq!(silu(0.0), 0.0);
+        assert!((silu(1.0) - 1.0 / (1.0 + (-1.0f32).exp())).abs() < 1e-7);
+    }
+}

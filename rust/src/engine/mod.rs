@@ -1,4 +1,4 @@
-//! The inference engine: composes the AOT PJRT artifacts (attention,
+//! The inference engine: composes the per-layer compute units (attention,
 //! stacked gating, expert FFNs, LM head) into prefill/decode steps, with
 //! the paper's three mechanisms wired in:
 //!
@@ -8,6 +8,10 @@
 //!   experts and the predictor issues mixed-precision prefetches (§3.3);
 //! * the **Multidimensional Cache Manager** owns eviction (§3.4).
 //!
+//! The compute units run behind the [`exec`] seam: the production path is
+//! the AOT PJRT artifacts (`exec::PjrtExec`); the artifact-free reference
+//! kernels (`exec::RefExec`, [`Engine::new_reference`]) drive the same
+//! engine from a synthesized weight directory for the regression suites.
 //! The engine is single-threaded on the compute side; the loader's
 //! scheduler thread moves expert bytes concurrently with compute, which is
 //! exactly the overlap the paper's prefetching exploits.
@@ -19,41 +23,55 @@
 //! [`SequenceSession`]s. The engine never touches `ExpertLoader::submit`
 //! or `CacheManager::reserve` directly.
 //!
-//! Decode comes in two shapes. [`Engine::decode_step`] is the blocking
-//! batch-1 step the paper evaluates. Underneath it, each token runs as a
-//! small per-layer state machine — a [`DecodeCursor`] — that can *suspend*
-//! at the ensure-resident barrier instead of blocking on its tickets:
-//! [`Engine::decode_begin`] embeds the token, [`Engine::decode_poll`]
-//! advances layer-by-layer until either the token's logits are ready or an
-//! on-demand expert transfer is still in flight
-//! (`DecodeProgress::Pending`). The interleaved scheduler
-//! (`coordinator::SchedulerMode::Interleaved`) exploits this to advance
-//! another sequence's decode while this one's expert bytes are on the link.
+//! Decode comes in three shapes:
+//!
+//! * [`Engine::decode_step`] — the blocking batch-1 step the paper
+//!   evaluates.
+//! * [`Engine::decode_begin`]/[`Engine::decode_poll`] — the suspendable
+//!   per-token state machine ([`DecodeCursor`]) the interleaved scheduler
+//!   time-multiplexes: it parks at the ensure-resident barrier
+//!   (`DecodeProgress::Pending`) instead of blocking.
+//! * [`Engine::decode_begin_batch`]/[`Engine::decode_poll_batch`] — *true
+//!   batched decode* ([`BatchCursor`]): one token for a whole group of
+//!   sequences, padded to the nearest compiled launch width in {2, 4, 8}.
+//!   Per layer the engine computes the union of routed experts across the
+//!   batch and issues a single merged `ExpertResidency::acquire_merged`,
+//!   parking the whole group on one `TicketSet` — cross-sequence load
+//!   sharing, not just latency hiding. Attention stays per-row (each
+//!   sequence owns its KV cache and position); gate/expert/head launch at
+//!   batch width when the artifact set carries the `*_s{2,4,8}` variants
+//!   and fall back to bit-identical per-row s=1 launches when it does not.
+//!   A row whose loads block while the rest of the group is runnable is
+//!   *evicted* into a solo [`DecodeCursor`]
+//!   ([`Engine::decode_evict_row`]), taking exactly its own ticket subset
+//!   and cache pins with it.
 
 mod capture;
+mod exec;
 mod state;
 
 pub use capture::{Capture, GateObs, HiddenObs, RoutingObs};
 pub use state::KvState;
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, HashMap};
 use std::path::Path;
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, Context, Result};
-use xla::Literal;
+use anyhow::{anyhow, Result};
 
 use crate::cache::{CacheManager, Policy, Pool};
 use crate::config::{HardwareConfig, ModelConfig, PolicyConfig};
 use crate::loader::scorer::{self, Class};
 use crate::loader::GLOBAL_SCOPE;
 use crate::memory::{LinkModel, ThrottledCopier};
-use crate::model::{expert_literals, ExpertStore, NonExpertWeights};
+use crate::model::{ExpertStore, NonExpertWeights};
 use crate::predictor::Predictor;
-use crate::residency::{ExpertResidency, SequenceSession, Ticket, TicketSet};
-use crate::runtime::{lit_f32, lit_i32, lit_to_f32, Runtime};
+use crate::residency::{ExpertResidency, MergedUse, SequenceSession, Ticket, TicketSet};
+use crate::runtime::{pad_batch_width, Runtime, MAX_DECODE_BATCH};
 use crate::{ExpertKey, Precision};
+
+use exec::{Exec, PjrtExec, RefExec};
 
 /// Prefill chunk sizes with compiled artifacts, largest first.
 pub const PREFILL_CHUNKS: [usize; 3] = [128, 16, 1];
@@ -81,16 +99,6 @@ impl EngineOptions {
             use_fast_ffn: true,
         }
     }
-}
-
-/// Precomputed per-layer literal sets (built once; the request path never
-/// re-creates weight literals — perf-critical).
-struct LayerLits {
-    attn: [Literal; 5], // norm, wq, wk, wv, wo
-    /// decode gate stack for this layer: (p_eff, pn[p,d], wg[p,d,E])
-    gate_stack: (usize, Literal, Literal),
-    /// prefill gate (p = 1)
-    gate_single: (Literal, Literal),
 }
 
 /// Routing outcome of one layer for one chunk: expert -> (precision class,
@@ -131,6 +139,10 @@ pub struct DecodeCursor {
     x: Vec<f32>,
     /// KV position of this token (fixed for the whole token)
     pos: i32,
+    /// capture token id, reserved at begin so a suspended token's
+    /// observations stay under one id however long other sequences (or a
+    /// batch eviction) interleave with it
+    token_id: u64,
     pending: Option<PendingLayer>,
     /// total stall attributed to this token (barrier-reach → barrier-clear,
     /// whether hidden by other sequences' compute or not)
@@ -166,8 +178,159 @@ impl DecodeCursor {
     }
 }
 
+// ---------------------------------------------------------------------
+// Batched decode
+// ---------------------------------------------------------------------
+
+/// One sequence's slot in a batched decode step: the token to decode and
+/// ownership of its KV state for the duration of the step.
+pub struct BatchItem {
+    /// live session id (cache-record attribution; None = unattributed)
+    pub seq: Option<u64>,
+    pub token: u32,
+    pub kv: KvState,
+}
+
+/// A finished row of a batched step.
+pub struct BatchDone {
+    pub seq: Option<u64>,
+    pub kv: KvState,
+    pub logits: Vec<f32>,
+}
+
+/// Progress of a suspended batched decode step.
+pub enum BatchProgress {
+    /// the merged ensure-resident barrier is waiting on in-flight loads
+    Pending,
+    /// every remaining row finished; per-row logits + returned KV states
+    Done(Vec<BatchDone>),
+}
+
+struct BatchRow {
+    seq: Option<u64>,
+    kv: KvState,
+    pos: i32,
+    /// false once the row was evicted into a solo cursor
+    alive: bool,
+}
+
+/// One batched layer suspended at the *merged* ensure-resident barrier.
+struct PendingBatch {
+    /// post-gate normed hidden [s, d]
+    hn: Vec<f32>,
+    /// unique (expert, class) execution set with per-row gate weights
+    uses: Vec<MergedUse>,
+    /// per row: indices into `waits` the row's own demands wait on
+    row_tickets: Vec<Vec<usize>>,
+    /// per row: (expert, effective class) it demanded — pin bookkeeping
+    /// for eviction/abort
+    row_demands: Vec<Vec<(ExpertKey, Class)>>,
+    waits: TicketSet,
+    t0: Instant,
+    satisfied: bool,
+}
+
+/// The batched decode state machine: one token for a group of sequences,
+/// padded to launch width `s`, sharing one merged residency barrier per
+/// layer.
+pub struct BatchCursor {
+    layer: usize,
+    /// activations [s, d]; rows >= n (padding) and evicted rows are dead
+    x: Vec<f32>,
+    /// padded launch width (2, 4, or 8)
+    s: usize,
+    rows: Vec<BatchRow>,
+    /// capture token-id base: ids `token_base..token_base+rows` were
+    /// reserved at `decode_begin_batch`, so row r's observations
+    /// (hidden/routing/gate) share one stable id across the whole step
+    token_base: u64,
+    pending: Option<PendingBatch>,
+    /// shared stall of the group (barrier reach → clear), accrued once;
+    /// every row waited through it
+    pub load_wait: Duration,
+    finished: bool,
+}
+
+impl BatchCursor {
+    /// Padded launch width.
+    pub fn width(&self) -> usize {
+        self.s
+    }
+
+    /// Real rows at formation (evicted rows included).
+    pub fn rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn rows_alive(&self) -> usize {
+        self.rows.iter().filter(|r| r.alive).count()
+    }
+
+    /// Session id of row `r` if it is still in the batch.
+    pub fn row_seq_alive(&self, r: usize) -> Option<u64> {
+        self.rows.get(r).filter(|row| row.alive).and_then(|row| row.seq)
+    }
+
+    /// Tickets the merged barrier is suspended on (empty when runnable).
+    pub fn pending_tickets(&self) -> &[Ticket] {
+        match &self.pending {
+            Some(p) if !p.satisfied => p.waits.tickets(),
+            _ => &[],
+        }
+    }
+
+    /// True when suspended on an unconsumed merged barrier.
+    pub fn is_pending(&self) -> bool {
+        self.pending.as_ref().map(|p| !p.satisfied).unwrap_or(false)
+    }
+
+    /// True when suspended AND at least one awaited load is still moving.
+    pub fn is_blocked(&self) -> bool {
+        self.pending
+            .as_ref()
+            .map(|p| !p.satisfied && !p.waits.all_ready())
+            .unwrap_or(false)
+    }
+
+    /// True when row `r` is alive, the barrier is unresolved, and at least
+    /// one of the row's *own* awaited loads is still moving. Such a row is
+    /// a candidate for eviction when the rest of the group is runnable.
+    pub fn row_blocked(&self, r: usize) -> bool {
+        let Some(row) = self.rows.get(r) else { return false };
+        if !row.alive {
+            return false;
+        }
+        match &self.pending {
+            Some(p) if !p.satisfied => p.row_tickets[r]
+                .iter()
+                .any(|&ti| !p.waits.tickets()[ti].is_ready()),
+            _ => false,
+        }
+    }
+
+    /// Launch-width mask of the rows actually carrying sequences (padding
+    /// and evicted rows are false) — the executor skips the rest in its
+    /// per-row fallbacks.
+    fn live_mask(&self) -> Vec<bool> {
+        (0..self.s)
+            .map(|r| self.rows.get(r).map(|row| row.alive).unwrap_or(false))
+            .collect()
+    }
+
+    /// True when some alive row's own waits have all completed — the group
+    /// can make progress (directly, or after evicting the blocked rows).
+    pub fn any_row_runnable(&self) -> bool {
+        match &self.pending {
+            Some(p) if !p.satisfied => (0..self.rows.len())
+                .any(|r| self.rows[r].alive && !self.row_blocked(r)),
+            // no unresolved barrier: the next poll advances everyone
+            _ => true,
+        }
+    }
+}
+
 pub struct Engine {
-    pub rt: Runtime,
+    exec: Exec,
     pub cfg: ModelConfig,
     pub policy: PolicyConfig,
     pub hardware: HardwareConfig,
@@ -179,13 +342,9 @@ pub struct Engine {
     /// retained for instrumentation (Fig 7 offline prediction accuracy)
     pub nonexpert: NonExpertWeights,
     nonexpert_emb: Vec<f32>,
-    layers: Vec<LayerLits>,
-    emb_lit: Literal,
-    final_norm_lit: Literal,
     /// decode-loop accounting: wall time spent *blocked* on expert loads
     pub load_wait: Duration,
     token_counter: u64,
-    ffn_prefix: &'static str,
     /// sequence whose cache records the current compute is attributed to
     /// (interleaved serving; None on the batch-1 path)
     current_seq: Option<u64>,
@@ -196,93 +355,53 @@ impl Engine {
     pub fn new(artifacts_root: &Path, model: &str, opts: EngineOptions) -> Result<Self> {
         let art_dir = artifacts_root.join(model);
         let weights_dir = artifacts_root.join("weights").join(model);
-        let mut rt = Runtime::open(&art_dir)?;
+        let rt = Runtime::open(&art_dir)?;
         let cfg = ModelConfig::from_manifest(&rt.manifest.model_json())
             .map_err(|e| anyhow!("model config: {e}"))?;
         opts.policy.validate().map_err(|e| anyhow!("policy: {e}"))?;
+        let nonexpert = NonExpertWeights::load(&weights_dir)?;
+        let store = Arc::new(ExpertStore::load(&weights_dir, &cfg)?);
+        let exec = Exec::Pjrt(PjrtExec::new(rt, &cfg, &nonexpert, &opts)?);
+        Self::assemble(exec, cfg, opts, store, nonexpert)
+    }
+
+    /// Build an engine over the pure-Rust reference kernels from a weight
+    /// directory alone — no AOT artifacts, no PJRT. The compute units
+    /// mirror `python/compile/model.py` row-for-row, so batched and
+    /// sequential decode are bit-identical by construction; the loader,
+    /// cache, predictor, and schedulers above them are the *real* ones.
+    /// This is what the artifact-free regression suites (and CI) drive.
+    pub fn new_reference(
+        weights_dir: &Path,
+        cfg: ModelConfig,
+        opts: EngineOptions,
+    ) -> Result<Self> {
+        opts.policy.validate().map_err(|e| anyhow!("policy: {e}"))?;
+        let nonexpert = NonExpertWeights::load(weights_dir)?;
+        let store = Arc::new(ExpertStore::load(weights_dir, &cfg)?);
+        let stack_p = (opts.policy.prefetch_depth + 1).min(4);
+        let exec = Exec::Reference(RefExec::new(&cfg, &nonexpert, stack_p)?);
+        Self::assemble(exec, cfg, opts, store, nonexpert)
+    }
+
+    /// Shared tail of the constructors: cache + loader + predictor +
+    /// residency facade over an already-built executor.
+    fn assemble(
+        exec: Exec,
+        cfg: ModelConfig,
+        opts: EngineOptions,
+        store: Arc<ExpertStore>,
+        nonexpert: NonExpertWeights,
+    ) -> Result<Self> {
         anyhow::ensure!(
             opts.hardware.hi_cache_experts >= cfg.top_k,
             "hi cache must hold at least top_k experts"
         );
-
-        let nonexpert = NonExpertWeights::load(&weights_dir)?;
-        let store = Arc::new(ExpertStore::load(&weights_dir, &cfg)?);
-
-        // ---- compile the artifacts this configuration uses -----------------
         let hi = opts.policy.hi_precision;
         let lo = opts.policy.lo_precision;
-        // older artifact sets may not carry the fast lowerings
-        let fast = opts.use_fast_ffn
-            && rt.manifest.artifacts.contains_key("expert_fast_f32_s1");
-        let ffn_prefix = if fast { "expert_fast" } else { "expert" };
-        let mut names: Vec<String> = Vec::new();
-        for s in [1usize, 16, 128] {
-            names.push(format!("attn_s{s}"));
-            names.push(format!("head_s{s}"));
-            names.push(format!("{ffn_prefix}_{}_s{s}", hi.name()));
-            names.push(format!("{ffn_prefix}_{}_s{s}", lo.name()));
-        }
-        let depth = opts.policy.prefetch_depth;
-        for p in 1..=(depth + 1).min(4) {
-            names.push(format!("gate_p{p}_s1"));
-        }
-        for s in [16usize, 128] {
-            names.push(format!("gate_p1_s{s}"));
-        }
-        rt.ensure_all(names.iter().map(|s| s.as_str()))?;
-
-        // ---- per-layer literals --------------------------------------------
-        let l = cfg.n_layers as usize;
-        let stack_p = (depth + 1).min(4).max(1);
-        let mut layers = Vec::with_capacity(l);
-        for li in 0..l {
-            let get2 = |name: &str| -> Result<(Vec<usize>, Vec<f32>)> {
-                let (shape, data) = nonexpert.get(name)?;
-                Ok((shape.to_vec(), data.to_vec()))
-            };
-            let mk = |name: &str| -> Result<Literal> {
-                let (shape, data) = get2(name)?;
-                lit_f32(&shape, &data)
-            };
-            let attn = [
-                mk(&format!("attn_norm.{li}"))?,
-                mk(&format!("wq.{li}"))?,
-                mk(&format!("wk.{li}"))?,
-                mk(&format!("wv.{li}"))?,
-                mk(&format!("wo.{li}"))?,
-            ];
-            // decode gate stack: layers li .. li+p_eff-1
-            let p_eff = stack_p.min(l - li);
-            let mut pn = Vec::with_capacity(p_eff * cfg.d_model);
-            let mut wg = Vec::with_capacity(p_eff * cfg.d_model * cfg.n_experts as usize);
-            for j in 0..p_eff {
-                let (_, pnj) = nonexpert.get(&format!("post_norm.{}", li + j))?;
-                pn.extend_from_slice(pnj);
-                let (_, wgj) = nonexpert.get(&format!("wg.{}", li + j))?;
-                wg.extend_from_slice(wgj);
-            }
-            let e = cfg.n_experts as usize;
-            let gate_stack = (
-                p_eff,
-                lit_f32(&[p_eff, cfg.d_model], &pn)?,
-                lit_f32(&[p_eff, cfg.d_model, e], &wg)?,
-            );
-            let (_, pn0) = nonexpert.get(&format!("post_norm.{li}"))?;
-            let (_, wg0) = nonexpert.get(&format!("wg.{li}"))?;
-            let gate_single = (
-                lit_f32(&[1, cfg.d_model], pn0)?,
-                lit_f32(&[1, cfg.d_model, e], wg0)?,
-            );
-            layers.push(LayerLits { attn, gate_stack, gate_single });
-        }
-
-        let (emb_shape, emb) = nonexpert.get("emb")?;
-        let emb_lit = lit_f32(emb_shape, emb)?;
+        let (_, emb) = nonexpert.get("emb")?;
         let nonexpert_emb = emb.to_vec();
-        let (_, fnorm) = nonexpert.get("final_norm")?;
-        let final_norm_lit = lit_f32(&[cfg.d_model], fnorm)?;
 
-        // ---- cache + loader -------------------------------------------------
         let penalty_ratio = opts.policy.penalty_ratio(&cfg);
         let cache_policy = opts.cache_policy.clone().unwrap_or(Policy::Multidim {
             w: [opts.policy.w_lru, opts.policy.w_lfu, opts.policy.w_lhu, opts.policy.w_fld],
@@ -302,7 +421,7 @@ impl Engine {
             latency_s: opts.hardware.load_latency,
         }));
         let predictor = Predictor::new(
-            depth,
+            opts.policy.prefetch_depth,
             cfg.top_k,
             opts.policy.t1,
             opts.policy.t2,
@@ -313,7 +432,7 @@ impl Engine {
             ExpertResidency::new(store.clone(), cache, copier, predictor, hi, lo);
 
         Ok(Self {
-            rt,
+            exec,
             cfg,
             policy: opts.policy,
             hardware: opts.hardware,
@@ -322,14 +441,32 @@ impl Engine {
             capture: opts.capture,
             nonexpert,
             nonexpert_emb,
-            layers,
-            emb_lit,
-            final_norm_lit,
             load_wait: Duration::ZERO,
             token_counter: 0,
-            ffn_prefix: if fast { "expert_fast" } else { "expert" },
             current_seq: None,
         })
+    }
+
+    /// Executor platform name ("cpu"/"cuda" via PJRT, or "reference-cpu").
+    pub fn platform(&self) -> String {
+        self.exec.platform()
+    }
+
+    /// The PJRT runtime, when this engine runs on one (None on the
+    /// reference executor). Benches poke raw artifacts through this.
+    pub fn runtime(&self) -> Option<&Runtime> {
+        self.exec.runtime()
+    }
+
+    pub fn runtime_mut(&mut self) -> Option<&mut Runtime> {
+        self.exec.runtime_mut()
+    }
+
+    /// Decode widths the executor serves as one native launch; other
+    /// widths fall back to per-row s=1 launches (same logits, less FLOP
+    /// sharing).
+    pub fn native_batch_widths(&self) -> &[usize] {
+        self.exec.batched_widths()
     }
 
     /// Start a new sequence: fresh KV state + per-sequence cache records.
@@ -397,10 +534,17 @@ impl Engine {
     /// Begin one decode token: embed it and position the layer cursor.
     pub fn decode_begin(&mut self, kv: &KvState, token: u32) -> Result<DecodeCursor> {
         anyhow::ensure!(kv.remaining() >= 1, "KV cache full");
+        // reserve the capture token id now: on the blocking batch-1 path
+        // this matches the old increment-at-completion numbering exactly,
+        // and on the interleaved path it keeps a suspended token's
+        // observations under one id
+        let token_id = self.token_counter;
+        self.token_counter += 1;
         Ok(DecodeCursor {
             layer: 0,
             x: self.embed(&[token], 1),
             pos: kv.pos as i32,
+            token_id,
             pending: None,
             load_wait: Duration::ZERO,
             finished: false,
@@ -428,7 +572,7 @@ impl Engine {
             }
             if let Some(p) = cur.pending.take() {
                 cur.load_wait += p.t0.elapsed();
-                let moe_out = self.layer_ffn(1, &p.hn, p.uses)?;
+                let moe_out = self.layer_ffn(1, &p.hn, p.uses, cur.token_id)?;
                 for (xv, mv) in cur.x.iter_mut().zip(&moe_out) {
                     *xv += mv;
                 }
@@ -437,7 +581,7 @@ impl Engine {
             if cur.layer == self.cfg.n_layers as usize {
                 cur.finished = true;
                 kv.pos += 1;
-                self.token_counter += 1;
+                // the capture token id was reserved at decode_begin
                 let logits = self.head(1, 1, &cur.x)?;
                 return Ok(DecodeProgress::Done(logits));
             }
@@ -446,8 +590,8 @@ impl Engine {
             let li_u32 = li as u32;
             let e = self.cfg.n_experts as usize;
             cur.x = self.layer_attention(kv, li, 1, &cur.x, cur.pos)?;
-            let (p_eff, probs, hn) = self.layer_gate(li, 1, true, &cur.x)?;
-            let per_expert = self.layer_route(li_u32, 1, 1, &probs[..e], &cur.x);
+            let (p_eff, probs, hn) = self.layer_gate(li, 1, true, &cur.x, None)?;
+            let per_expert = self.layer_route(li_u32, 1, 1, &probs[..e], &cur.x, cur.token_id);
             self.layer_plan_prefetch(li_u32, p_eff, &probs);
             self.layer_observe(li_u32, &probs[..e]);
             let (uses, waits) = self.layer_ensure_resident(li_u32, &per_expert);
@@ -490,7 +634,338 @@ impl Engine {
     }
 
     // ------------------------------------------------------------------
-    // Per-layer building blocks (shared by prefill chunks and the cursor)
+    // Batched decode (the coordinator's group unit of work)
+    // ------------------------------------------------------------------
+
+    /// Begin one batched decode step for a group of runnable sequences
+    /// (one token each). Takes ownership of each row's KV state for the
+    /// duration; `BatchProgress::Done` (or eviction/abort) hands it back.
+    /// The group pads to the nearest compiled launch width in {2, 4, 8}.
+    pub fn decode_begin_batch(&mut self, items: Vec<BatchItem>) -> Result<BatchCursor> {
+        anyhow::ensure!(
+            (2..=MAX_DECODE_BATCH).contains(&items.len()),
+            "batch of {} (want 2..={MAX_DECODE_BATCH})",
+            items.len()
+        );
+        for it in &items {
+            anyhow::ensure!(it.kv.remaining() >= 1, "KV cache full in batch");
+        }
+        let s = pad_batch_width(items.len()).expect("len checked above");
+        let tokens: Vec<u32> = items.iter().map(|it| it.token).collect();
+        let x = self.embed(&tokens, s);
+        let rows: Vec<BatchRow> = items
+            .into_iter()
+            .map(|it| BatchRow { pos: it.kv.pos as i32, seq: it.seq, kv: it.kv, alive: true })
+            .collect();
+        // reserve one capture token id per row up front: a later step's
+        // base can then never collide with this step's per-row ids, even
+        // when rows are evicted mid-step
+        let token_base = self.token_counter;
+        self.token_counter += rows.len() as u64;
+        Ok(BatchCursor {
+            layer: 0,
+            x,
+            s,
+            rows,
+            token_base,
+            pending: None,
+            load_wait: Duration::ZERO,
+            finished: false,
+        })
+    }
+
+    /// Advance the batched cursor as far as possible without blocking.
+    /// Per layer: per-row attention (each sequence's own KV), one gate
+    /// launch over the padded width, per-row routing/prefetch, then ONE
+    /// merged residency acquire for the union of routed experts and one
+    /// FFN launch per unique (expert, class). `Pending` means the merged
+    /// barrier still has bytes on the link.
+    pub fn decode_poll_batch(&mut self, cur: &mut BatchCursor) -> Result<BatchProgress> {
+        anyhow::ensure!(!cur.finished, "batch cursor already finished");
+        let d = self.cfg.d_model;
+        loop {
+            let still_loading = match &cur.pending {
+                Some(p) => !p.satisfied && !p.waits.all_ready(),
+                None => false,
+            };
+            if still_loading {
+                return Ok(BatchProgress::Pending);
+            }
+            if let Some(p) = cur.pending.take() {
+                cur.load_wait += p.t0.elapsed();
+                let moe_out = self.layer_ffn_batch(cur.s, &p.hn, p.uses, cur.token_base)?;
+                for (xv, mv) in cur.x.iter_mut().zip(&moe_out) {
+                    *xv += mv;
+                }
+                cur.layer += 1;
+            }
+            if cur.layer == self.cfg.n_layers as usize {
+                cur.finished = true;
+                let live = cur.live_mask();
+                let logits_all = self.exec.head(cur.s, &cur.x, Some(&live))?;
+                let v = self.cfg.vocab;
+                let mut done = Vec::new();
+                for (r, row) in cur.rows.iter_mut().enumerate() {
+                    if !row.alive {
+                        continue;
+                    }
+                    row.kv.pos += 1;
+                    // token ids were reserved at decode_begin_batch
+                    done.push(BatchDone {
+                        seq: row.seq,
+                        kv: std::mem::replace(&mut row.kv, KvState::empty()),
+                        logits: logits_all[r * v..(r + 1) * v].to_vec(),
+                    });
+                }
+                return Ok(BatchProgress::Done(done));
+            }
+
+            let li = cur.layer;
+            let li_u32 = li as u32;
+            let e = self.cfg.n_experts as usize;
+            let s = cur.s;
+
+            // per-row attention: each sequence owns its KV cache/position
+            for r in 0..cur.rows.len() {
+                if !cur.rows[r].alive {
+                    continue;
+                }
+                let x_row: Vec<f32> = cur.x[r * d..(r + 1) * d].to_vec();
+                let pos = cur.rows[r].pos;
+                let y = {
+                    let row = &mut cur.rows[r];
+                    self.layer_attention(&mut row.kv, li, 1, &x_row, pos)?
+                };
+                cur.x[r * d..(r + 1) * d].copy_from_slice(&y);
+            }
+
+            // one gate launch over the padded width (pad/dead rows are
+            // masked out of the per-row fallbacks)
+            let live = cur.live_mask();
+            let (p_eff, probs, hn) = self.layer_gate(li, s, true, &cur.x, Some(&live))?;
+
+            // per-row routing into the merged (expert, class) union
+            let mut merged: BTreeMap<(u32, u8), MergedUse> = BTreeMap::new();
+            let mut batch_seqs: Vec<Option<u64>> = Vec::with_capacity(cur.rows.len());
+            for (r, row) in cur.rows.iter().enumerate() {
+                if !row.alive {
+                    continue;
+                }
+                batch_seqs.push(row.seq);
+                let row_probs = &probs[r * e..(r + 1) * e];
+                // reserved per-row token ids, consistent with the GateObs
+                // stream layer_ffn_batch emits for the same step
+                if self.capture.hidden_states {
+                    self.capture.hiddens.push(HiddenObs {
+                        token: cur.token_base + r as u64,
+                        layer: li_u32,
+                        hidden: cur.x[r * d..(r + 1) * d].to_vec(),
+                    });
+                }
+                let decisions = scorer::decide(
+                    row_probs,
+                    self.cfg.top_k,
+                    self.policy.t1,
+                    self.policy.t2,
+                    self.policy.dynamic_loading,
+                );
+                if self.capture.routing {
+                    self.capture.routes.push(RoutingObs {
+                        token: cur.token_base + r as u64,
+                        layer: li_u32,
+                        experts: decisions.iter().map(|dd| dd.expert).collect(),
+                        probs: row_probs.to_vec(),
+                    });
+                }
+                for dd in decisions {
+                    let ent =
+                        merged.entry((dd.expert, class_rank(dd.class))).or_insert_with(|| {
+                            MergedUse {
+                                key: ExpertKey::new(li_u32, dd.expert),
+                                class: dd.class,
+                                gatew: vec![0.0; s],
+                                rows: Vec::new(),
+                                seqs: Vec::new(),
+                            }
+                        });
+                    ent.gatew[r] = dd.gate_weight;
+                    ent.rows.push(r);
+                    ent.seqs.push(row.seq);
+                }
+            }
+
+            // per-row predictor step under each row's own generation scope
+            if p_eff > 1 && self.policy.prefetch_depth > 0 {
+                for (r, row) in cur.rows.iter().enumerate() {
+                    if !row.alive {
+                        continue;
+                    }
+                    let stacked: Vec<Vec<f32>> = (0..p_eff)
+                        .map(|j| probs[j * s * e + r * e..j * s * e + (r + 1) * e].to_vec())
+                        .collect();
+                    let scope = row.seq.unwrap_or(GLOBAL_SCOPE);
+                    self.residency.plan_prefetch(scope, li_u32, self.cfg.n_layers, &stacked);
+                }
+            }
+            for (r, row) in cur.rows.iter().enumerate() {
+                if !row.alive {
+                    continue;
+                }
+                self.residency.observe(li_u32, &probs[r * e..(r + 1) * e]);
+            }
+
+            // ONE merged acquire for the whole group
+            let demands: Vec<MergedUse> = merged.into_values().collect();
+            let (uses, waits) = self.residency.acquire_merged(li_u32, demands, &batch_seqs);
+
+            // map each row to its subset of the shared ticket set
+            let mut ticket_idx: HashMap<(ExpertKey, Pool), usize> = HashMap::new();
+            for (i, t) in waits.tickets().iter().enumerate() {
+                ticket_idx.insert((t.key(), t.pool()), i);
+            }
+            let mut row_tickets: Vec<Vec<usize>> = vec![Vec::new(); cur.rows.len()];
+            let mut row_demands: Vec<Vec<(ExpertKey, Class)>> =
+                vec![Vec::new(); cur.rows.len()];
+            for u in &uses {
+                let (_prec, pool) = self.class_target(u.class);
+                let ti = ticket_idx.get(&(u.key, pool)).copied();
+                for &r in &u.rows {
+                    if let Some(i) = ti {
+                        row_tickets[r].push(i);
+                    }
+                    row_demands[r].push((u.key, u.class));
+                }
+            }
+            cur.pending = Some(PendingBatch {
+                hn,
+                uses,
+                row_tickets,
+                row_demands,
+                waits,
+                t0: Instant::now(),
+                satisfied: false,
+            });
+            // loop: an empty/already-complete wait set clears immediately
+        }
+    }
+
+    /// Block until the batch's merged barrier resolves (the scheduler's
+    /// nothing-else-runnable fallback). Blocked time is unhidden stall.
+    pub fn decode_block_batch(&mut self, cur: &mut BatchCursor) {
+        if let Some(p) = &mut cur.pending {
+            if !p.satisfied {
+                let waited = self.residency.wait(&p.waits);
+                p.satisfied = true;
+                self.load_wait += waited;
+            }
+        }
+    }
+
+    /// Evict a blocked row from a suspended batch so the rest of the group
+    /// does not stall on its loads. The row leaves with exactly its own
+    /// share of the shared barrier — a solo [`DecodeCursor`] parked on its
+    /// ticket subset, its gate weights and cache pins carved out of the
+    /// merged execution set — and the batch's barrier drops every ticket
+    /// no remaining row demands (without this, one cold expert would stall
+    /// the whole group anyway). Returns the row's session id, its KV state
+    /// (hand it back to the sequence), and the solo continuation. None if
+    /// the row is not evictable (already finished, dead, or no barrier).
+    pub fn decode_evict_row(
+        &self,
+        cur: &mut BatchCursor,
+        row: usize,
+    ) -> Option<(Option<u64>, KvState, DecodeCursor)> {
+        if cur.finished || row >= cur.rows.len() || !cur.rows[row].alive {
+            return None;
+        }
+        let d = self.cfg.d_model;
+        let layer = cur.layer;
+        let shared_wait = cur.load_wait;
+        let p = cur.pending.as_mut()?;
+        if p.satisfied {
+            return None;
+        }
+        // carve the row's demands out of the merged execution set
+        let mut solo_uses: Vec<(ExpertKey, Class, Vec<f32>)> = Vec::new();
+        for u in p.uses.iter_mut() {
+            if let Some(i) = u.rows.iter().position(|&r| r == row) {
+                solo_uses.push((u.key, u.class, vec![u.gatew[row]]));
+                u.rows.remove(i);
+                u.seqs.remove(i);
+                u.gatew[row] = 0.0;
+            }
+        }
+        p.uses.retain(|u| !u.rows.is_empty());
+        // the solo continuation waits on exactly the row's ticket subset
+        let mut solo_waits = TicketSet::new();
+        for &ti in &p.row_tickets[row] {
+            solo_waits.push(p.waits.tickets()[ti].clone());
+        }
+        p.row_tickets[row].clear();
+        p.row_demands[row].clear();
+        // drop shared-barrier tickets no remaining row demands, remapping
+        // the surviving rows' indices
+        let needed: std::collections::BTreeSet<usize> =
+            p.row_tickets.iter().flatten().copied().collect();
+        if needed.len() != p.waits.len() {
+            let old = p.waits.tickets().to_vec();
+            let mut remap: HashMap<usize, usize> = HashMap::new();
+            let mut kept = TicketSet::new();
+            for (ni, &oi) in needed.iter().enumerate() {
+                remap.insert(oi, ni);
+                kept.push(old[oi].clone());
+            }
+            for rt in p.row_tickets.iter_mut() {
+                for idx in rt.iter_mut() {
+                    *idx = remap[idx];
+                }
+            }
+            p.waits = kept;
+        }
+        let pending = PendingLayer {
+            hn: p.hn[row * d..(row + 1) * d].to_vec(),
+            uses: solo_uses,
+            waits: solo_waits,
+            t0: p.t0,
+            satisfied: false,
+        };
+        let row_state = &mut cur.rows[row];
+        row_state.alive = false;
+        let kv = std::mem::replace(&mut row_state.kv, KvState::empty());
+        let cursor = DecodeCursor {
+            layer,
+            x: cur.x[row * d..(row + 1) * d].to_vec(),
+            pos: row_state.pos,
+            // the row keeps the token id reserved for it at batch begin,
+            // so its capture stream stays whole across the eviction
+            token_id: cur.token_base + row as u64,
+            pending: Some(pending),
+            // earlier layers' shared stall: the row waited through it too
+            load_wait: shared_wait,
+            finished: false,
+        };
+        Some((row_state.seq, kv, cursor))
+    }
+
+    /// Abandon a suspended batch cursor (scheduler abort path): release
+    /// every remaining row's cache pins. In-flight loads complete
+    /// harmlessly; the rows' KV states are dropped with the cursor.
+    pub fn decode_abort_batch(&self, cur: BatchCursor) {
+        if let Some(p) = cur.pending {
+            for (r, demands) in p.row_demands.iter().enumerate() {
+                if !cur.rows[r].alive {
+                    continue;
+                }
+                for (key, class) in demands {
+                    let (_prec, pool) = self.class_target(*class);
+                    self.residency.release(*key, pool);
+                }
+            }
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Per-layer building blocks (shared by prefill chunks and the cursors)
     // ------------------------------------------------------------------
 
     /// Embed `tokens` into an [s, d] activation buffer (pad rows use PAD).
@@ -515,48 +990,22 @@ impl Engine {
         x: &[f32],
         pos: i32,
     ) -> Result<Vec<f32>> {
-        let d = self.cfg.d_model;
-        let x_lit = lit_f32(&[s, d], x)?;
-        let kdims = [self.cfg.max_seq, self.cfg.n_kv_heads, self.cfg.head_dim()];
-        let k_lit = lit_f32(&kdims, &kv.k[li])?;
-        let v_lit = lit_f32(&kdims, &kv.v[li])?;
-        let pos_lit = lit_i32(pos);
-        let ll = &self.layers[li];
-        let args: Vec<&Literal> = vec![
-            &x_lit, &ll.attn[0], &ll.attn[1], &ll.attn[2], &ll.attn[3], &ll.attn[4],
-            &k_lit, &v_lit, &pos_lit,
-        ];
-        let outs = self.rt.execute(&format!("attn_s{s}"), &args)?;
-        anyhow::ensure!(outs.len() == 3, "attn outputs");
-        let y = lit_to_f32(&outs[0])?;
-        kv.k[li] = lit_to_f32(&outs[1])?;
-        kv.v[li] = lit_to_f32(&outs[2])?;
-        Ok(y)
+        self.exec.attn(li, s, x, kv, pos)
     }
 
     /// Gating for layer `li`: stacked on decode, single on prefill.
     /// Returns (p_eff, probs [p_eff, s, e], normed hidden [s, d]).
+    /// `live` marks the launch rows actually carrying sequences (None =
+    /// all; the batched step excludes padding and evicted rows).
     fn layer_gate(
         &mut self,
         li: usize,
         s: usize,
         decode: bool,
         x: &[f32],
+        live: Option<&[bool]>,
     ) -> Result<(usize, Vec<f32>, Vec<f32>)> {
-        let d = self.cfg.d_model;
-        let x_lit = lit_f32(&[s, d], x)?;
-        let ll = &self.layers[li];
-        if decode {
-            let (p_eff, ref pn, ref wg) = ll.gate_stack;
-            let args: Vec<&Literal> = vec![&x_lit, pn, wg];
-            let outs = self.rt.execute(&format!("gate_p{p_eff}_s1"), &args)?;
-            Ok((p_eff, lit_to_f32(&outs[0])?, lit_to_f32(&outs[1])?))
-        } else {
-            let (ref pn, ref wg) = ll.gate_single;
-            let args: Vec<&Literal> = vec![&x_lit, pn, wg];
-            let outs = self.rt.execute(&format!("gate_p1_s{s}"), &args)?;
-            Ok((1usize, lit_to_f32(&outs[0])?, lit_to_f32(&outs[1])?))
-        }
+        self.exec.gate(li, s, decode, x, live)
     }
 
     /// Route the chunk's tokens through the Expert Scorer, merging per-row
@@ -568,6 +1017,7 @@ impl Engine {
         real: usize,
         layer_probs: &[f32],
         x: &[f32],
+        token_base: u64,
     ) -> PerExpert {
         let d = self.cfg.d_model;
         let e = self.cfg.n_experts as usize;
@@ -575,7 +1025,7 @@ impl Engine {
             // raw gating input (attention output, pre-norm): the
             // quantity whose cross-layer similarity Fig 7 measures
             self.capture.hiddens.push(HiddenObs {
-                token: self.token_counter,
+                token: token_base,
                 layer: li_u32,
                 hidden: x[..d].to_vec(),
             });
@@ -592,7 +1042,7 @@ impl Engine {
             );
             if self.capture.routing {
                 self.capture.routes.push(RoutingObs {
-                    token: self.token_counter + r as u64,
+                    token: token_base + r as u64,
                     layer: li_u32,
                     experts: decisions.iter().map(|dd| dd.expert).collect(),
                     probs: row.to_vec(),
@@ -658,39 +1108,97 @@ impl Engine {
         s: usize,
         hn: &[f32],
         uses: Vec<(ExpertKey, Class, Vec<f32>)>,
+        token_base: u64,
     ) -> Result<Vec<f32>> {
         let d = self.cfg.d_model;
-        let x_norm_lit = lit_f32(&[s, d], hn)?;
         let mut moe_out = vec![0.0f32; s * d];
         let seq = self.current_seq;
+        // an executor error must not leak the remaining uses' pins (the
+        // barrier is already consumed, so nobody else can release them):
+        // keep walking the use list releasing, then surface the error
+        let mut first_err: Option<anyhow::Error> = None;
         for (key, class, gatew) in uses {
             let (prec, pool) = self.class_target(class);
-            let buf = self.residency.buffer(key, pool);
-            let Some(buf) = buf else {
-                // evicted between load and use under extreme pressure (or
-                // the joined load was dropped as stale): execute directly
-                // from next-level memory (bypass)
-                let record = self.store.record(key, prec).to_vec();
-                self.run_expert(&x_norm_lit, s, prec, &record, &gatew, &mut moe_out, key)?;
-                self.residency.release(key, pool);
-                continue;
-            };
-            let record = buf.lock().unwrap().clone();
-            self.run_expert(&x_norm_lit, s, prec, &record, &gatew, &mut moe_out, key)?;
-            self.residency.note_use(key, pool, seq);
+            if first_err.is_none() {
+                let buf = self.residency.buffer(key, pool);
+                // a missing buffer means the slot was evicted between load
+                // and use under extreme pressure (or the joined load was
+                // dropped as stale): execute directly from next-level
+                // memory (bypass), without a cache-record use
+                let bypass = buf.is_none();
+                let record: Vec<u8> = match buf {
+                    Some(b) => b.lock().unwrap().clone(),
+                    None => self.store.record(key, prec).to_vec(),
+                };
+                match self.exec_expert(s, prec, &record, hn, &gatew, key, token_base) {
+                    Ok(y) => {
+                        accumulate(&mut moe_out, &y);
+                        if !bypass {
+                            self.residency.note_use(key, pool, seq);
+                        }
+                    }
+                    Err(e) => first_err = Some(e),
+                }
+            }
             self.residency.release(key, pool);
         }
-        Ok(moe_out)
+        match first_err {
+            None => Ok(moe_out),
+            Some(e) => Err(e),
+        }
+    }
+
+    /// Execute the batch's merged execution set: one launch per unique
+    /// (expert, class) over the padded width, with cache records
+    /// attributed per demanding sequence and one pin released per
+    /// demanding row (mirroring `acquire_merged`'s per-row pins).
+    fn layer_ffn_batch(
+        &mut self,
+        s: usize,
+        hn: &[f32],
+        uses: Vec<MergedUse>,
+        token_base: u64,
+    ) -> Result<Vec<f32>> {
+        let d = self.cfg.d_model;
+        let mut moe_out = vec![0.0f32; s * d];
+        // same contract as layer_ffn: release every remaining use's
+        // per-row pins even when one expert launch errors
+        let mut first_err: Option<anyhow::Error> = None;
+        for u in uses {
+            let (prec, pool) = self.class_target(u.class);
+            if first_err.is_none() {
+                let buf = self.residency.buffer(u.key, pool);
+                let bypass = buf.is_none();
+                let record: Vec<u8> = match buf {
+                    Some(b) => b.lock().unwrap().clone(),
+                    None => self.store.record(u.key, prec).to_vec(),
+                };
+                match self.exec_expert(s, prec, &record, hn, &u.gatew, u.key, token_base) {
+                    Ok(y) => {
+                        accumulate(&mut moe_out, &y);
+                        if !bypass {
+                            for seq in &u.seqs {
+                                self.residency.note_use(u.key, pool, *seq);
+                            }
+                        }
+                    }
+                    Err(e) => first_err = Some(e),
+                }
+            }
+            for _ in &u.rows {
+                self.residency.release(u.key, pool);
+            }
+        }
+        match first_err {
+            None => Ok(moe_out),
+            Some(e) => Err(e),
+        }
     }
 
     /// LM head over the final activations; returns the last real row's
     /// logits.
     fn head(&mut self, s: usize, real: usize, x: &[f32]) -> Result<Vec<f32>> {
-        let d = self.cfg.d_model;
-        let x_lit = lit_f32(&[s, d], x)?;
-        let args: Vec<&Literal> = vec![&x_lit, &self.final_norm_lit, &self.emb_lit];
-        let outs = self.rt.execute(&format!("head_s{s}"), &args)?;
-        let logits = lit_to_f32(&outs[0])?;
+        let logits = self.exec.head(s, x, None)?;
         let v = self.cfg.vocab;
         Ok(logits[(real - 1) * v..real * v].to_vec())
     }
@@ -717,8 +1225,9 @@ impl Engine {
         for li in 0..self.cfg.n_layers as usize {
             let li_u32 = li as u32;
             x = self.layer_attention(kv, li, s, &x, pos)?;
-            let (p_eff, probs, hn) = self.layer_gate(li, s, decode, &x)?;
-            let per_expert = self.layer_route(li_u32, s, real, &probs[..s * e], &x);
+            let (p_eff, probs, hn) = self.layer_gate(li, s, decode, &x, None)?;
+            let per_expert =
+                self.layer_route(li_u32, s, real, &probs[..s * e], &x, self.token_counter);
             if decode {
                 self.layer_plan_prefetch(li_u32, p_eff, &probs);
                 self.layer_observe(li_u32, &probs[..e]);
@@ -728,7 +1237,7 @@ impl Engine {
                 let waited = self.residency.wait(&waits);
                 self.load_wait += waited;
             }
-            let moe_out = self.layer_ffn(s, &hn, uses)?;
+            let moe_out = self.layer_ffn(s, &hn, uses, self.token_counter)?;
             for (xv, mv) in x.iter_mut().zip(&moe_out) {
                 *xv += mv;
             }
@@ -743,26 +1252,20 @@ impl Engine {
         Ok(Some(self.head(s, real, &x)?))
     }
 
-    fn run_expert(
+    /// One expert FFN launch through the executor, plus the Fig-5 capture
+    /// channel (weighted output norms per routed row, ids `token_base + r`).
+    #[allow(clippy::too_many_arguments)]
+    fn exec_expert(
         &mut self,
-        x_norm_lit: &Literal,
         s: usize,
         prec: Precision,
         record: &[u8],
+        hn: &[f32],
         gatew: &[f32],
-        moe_out: &mut [f32],
         key: ExpertKey,
-    ) -> Result<()> {
-        let mut args: Vec<Literal> = Vec::with_capacity(8);
-        args.push(x_norm_lit.clone());
-        args.extend(expert_literals(&self.cfg, prec, record)?);
-        args.push(lit_f32(&[s], gatew)?);
-        let name = format!("{}_{}_s{s}", self.ffn_prefix, prec.name());
-        let outs = self
-            .rt
-            .execute(&name, &args)
-            .with_context(|| format!("expert {key:?} via {name}"))?;
-        let y = lit_to_f32(&outs[0])?;
+        token_base: u64,
+    ) -> Result<Vec<f32>> {
+        let y = self.exec.expert(s, prec, record, hn, gatew, key)?;
         if self.capture.gate_stats {
             let d = self.cfg.d_model;
             for (r, w) in gatew.iter().enumerate() {
@@ -772,7 +1275,7 @@ impl Engine {
                         row.iter().map(|v| (*v as f64) * (*v as f64)).sum::<f64>().sqrt();
                     self.capture.gates.push(GateObs {
                         key,
-                        token: self.token_counter + r as u64,
+                        token: token_base + r as u64,
                         gate: *w,
                         out_norm: norm as f32,
                         score: 0.0,
@@ -780,10 +1283,7 @@ impl Engine {
                 }
             }
         }
-        for (o, yv) in moe_out.iter_mut().zip(&y) {
-            *o += yv;
-        }
-        Ok(())
+        Ok(y)
     }
 
     /// Map a scorer class to (precision, pool) under the active config.
@@ -791,9 +1291,15 @@ impl Engine {
         self.residency.class_target(class)
     }
 
-    /// Compute-time spent inside PJRT (for Fig 3a-real).
+    /// Compute-time spent inside the executor (for Fig 3a-real).
     pub fn compute_time(&self) -> Duration {
-        self.rt.compute_time.get()
+        self.exec.compute_time()
+    }
+}
+
+fn accumulate(acc: &mut [f32], y: &[f32]) {
+    for (o, yv) in acc.iter_mut().zip(y) {
+        *o += yv;
     }
 }
 
@@ -803,5 +1309,16 @@ fn max_class(a: Class, b: Class) -> Class {
         (Hi, _) | (_, Hi) => Hi,
         (Lo, _) | (_, Lo) => Lo,
         _ => Skip,
+    }
+}
+
+/// Deterministic merge order for the batched execution set: experts
+/// ascending, Hi before Lo before Skip — each row's accumulation order
+/// then matches its solo decode exactly.
+fn class_rank(c: Class) -> u8 {
+    match c {
+        Class::Hi => 0,
+        Class::Lo => 1,
+        Class::Skip => 2,
     }
 }

@@ -24,6 +24,13 @@ impl KvState {
         }
     }
 
+    /// Zero-capacity placeholder, used to move a live sequence's KV state
+    /// into a batched decode cursor without reallocating (the cursor hands
+    /// it back on completion or eviction). Never valid for compute.
+    pub fn empty() -> Self {
+        Self { k: Vec::new(), v: Vec::new(), pos: 0, max_seq: 0 }
+    }
+
     pub fn remaining(&self) -> usize {
         self.max_seq.saturating_sub(self.pos)
     }

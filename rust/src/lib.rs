@@ -24,11 +24,18 @@
 //!   dedup accounting, RAII sequence sessions, and per-sequence prefetch
 //!   generations. The only API through which the engine and coordinator
 //!   make experts resident.
-//! * [`engine`] — the per-layer inference engine over PJRT executables.
+//! * [`engine`] — the per-layer inference engine; compute units run
+//!   behind an executor seam (AOT PJRT artifacts, or pure-Rust reference
+//!   kernels for artifact-free testing), with three decode shapes:
+//!   blocking batch-1, the suspendable per-sequence cursor, and true
+//!   batched decode (one padded {2,4,8}-wide step per group with a single
+//!   merged residency acquire per layer).
 //! * [`coordinator`] — request routing, sequence lifecycle, generation;
 //!   two scheduler modes: the paper-faithful blocking batch-1 FCFS, and an
 //!   interleaved continuous scheduler that suspends a sequence at its
-//!   expert-load barrier and advances other sequences' decode meanwhile.
+//!   expert-load barrier and advances other sequences' decode meanwhile —
+//!   or, with `--max-batch N`, gangs runnable sequences into one batched
+//!   launch and evicts rows whose loads block.
 //! * [`server`] — TCP serving front-end: single-threaded FCFS accept loop
 //!   (`serve`) or threaded accept + per-connection readers feeding the
 //!   interleaved scheduler over a channel (`serve_concurrent`).

@@ -11,6 +11,7 @@ use hobbit::config::{HardwareConfig, PolicyConfig};
 use hobbit::coordinator::{Coordinator, Request, SchedPolicy, SchedulerMode};
 use hobbit::engine::Engine;
 use hobbit::figures;
+use hobbit::runtime::MAX_DECODE_BATCH;
 use hobbit::server::Server;
 use hobbit::sim::des::{simulate_decode, SimSystem};
 use hobbit::sim::params::{SimHardware, SimModel};
@@ -95,11 +96,25 @@ fn cmd_serve(args: &Args) -> Result<()> {
             args.get("policy").unwrap_or_default()
         ));
     }
+    let max_batch = args.get_usize("max-batch", 1);
+    if max_batch > 1 && !interleaved {
+        return Err(anyhow!(
+            "--max-batch batches the interleaved scheduler; add --interleaved"
+        ));
+    }
+    if !(1..=MAX_DECODE_BATCH).contains(&max_batch) {
+        return Err(anyhow!(
+            "--max-batch must be in 1..={MAX_DECODE_BATCH} (largest compiled launch width)"
+        ));
+    }
     let engine = build_engine(args, true)?;
     let mut coord = Coordinator::new(engine);
     if interleaved {
         coord.mode = SchedulerMode::Interleaved;
         coord.max_active = args.get_usize("max-active", coord.max_active);
+        coord.max_batch = max_batch;
+        // a batch wider than the live-set cap can never fill
+        coord.max_active = coord.max_active.max(coord.max_batch);
         if let Some(p) = sched {
             coord.sched_policy = p;
         }
@@ -107,13 +122,22 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let addr = args.get_or("addr", "127.0.0.1:7077");
     let mut server = Server::bind(addr)?;
     println!(
-        "hobbit serving on {} (platform: {}, scheduler: {})",
+        "hobbit serving on {} (platform: {}, scheduler: {}{})",
         server.local_addr()?,
-        coord.engine.rt.platform(),
+        coord.engine.platform(),
         match (interleaved, coord.sched_policy) {
             (false, _) => "fcfs",
             (true, SchedPolicy::RoundRobin) => "interleaved/rr",
             (true, SchedPolicy::Sjf) => "interleaved/sjf",
+        },
+        if coord.max_batch > 1 {
+            format!(
+                ", max-batch {} (native widths {:?})",
+                coord.max_batch,
+                coord.engine.native_batch_widths()
+            )
+        } else {
+            String::new()
         },
     );
     let max_conns = args.get("max-conns").and_then(|v| v.parse().ok());
@@ -270,7 +294,7 @@ fn cmd_selfcheck(args: &Args) -> Result<()> {
     let model = args.get_or("model", "mixtral-tiny");
     println!("selfcheck: opening artifacts at {}/{model}", artifacts.display());
     let engine = build_engine(args, false)?;
-    println!("  platform = {}", engine.rt.platform());
+    println!("  platform = {}", engine.platform());
     println!("  model    = {} ({} layers, {} experts/layer, top-{})",
         engine.cfg.name, engine.cfg.n_layers, engine.cfg.n_experts, engine.cfg.top_k);
     let mut coord = Coordinator::new(engine);

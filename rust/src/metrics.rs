@@ -27,6 +27,14 @@ pub struct LoaderStats {
     pub dedup_hits: u64,
     /// total on-demand load requests that reached the residency wait-set
     pub dedup_total: u64,
+    /// merged ensure-resident barriers issued by batched decode: one per
+    /// (batch, layer)
+    pub merged_acquires: u64,
+    /// unique (expert, class) entries across all merged acquires
+    pub merged_unique: u64,
+    /// per-row expert demands folded into merged acquires (>= unique;
+    /// the gap is the in-batch load sharing)
+    pub merged_demands: u64,
 }
 
 #[derive(Debug, Clone, Default)]
@@ -111,6 +119,15 @@ pub struct SchedulerStats {
     pub unhidden_stall: Duration,
     /// wall time with at least one sequence queued or active
     pub busy_wall: Duration,
+    /// batched decode steps launched (`--max-batch` > 1)
+    pub batch_steps: u64,
+    /// sequences carried by those steps (occupancy numerator)
+    pub batch_rows: u64,
+    /// launch slots wasted on padding to the compiled width {2, 4, 8}
+    pub padded_slots: u64,
+    /// rows evicted from a batch because their loads blocked while the
+    /// rest of the group was runnable
+    pub batch_evictions: u64,
 }
 
 impl SchedulerStats {
@@ -151,6 +168,16 @@ impl SchedulerStats {
         }
     }
 
+    /// Mean sequences per batched decode step (1.0 when batching never
+    /// engaged — occupancy > 1 is the "real FLOP sharing" signal).
+    pub fn batch_occupancy(&self) -> f64 {
+        if self.batch_steps == 0 {
+            1.0
+        } else {
+            self.batch_rows as f64 / self.batch_steps as f64
+        }
+    }
+
     pub fn to_json(&self) -> Json {
         obj(vec![
             ("completed", num(self.completed as f64)),
@@ -162,6 +189,10 @@ impl SchedulerStats {
             ("total_stall_s", num(self.total_stall.as_secs_f64())),
             ("unhidden_stall_s", num(self.unhidden_stall.as_secs_f64())),
             ("busy_wall_s", num(self.busy_wall.as_secs_f64())),
+            ("batch_steps", num(self.batch_steps as f64)),
+            ("batch_occupancy", num(self.batch_occupancy())),
+            ("padded_slots", num(self.padded_slots as f64)),
+            ("batch_evictions", num(self.batch_evictions as f64)),
         ])
     }
 }
@@ -218,6 +249,18 @@ impl RunReport {
             if let Json::Obj(m) = &mut serving {
                 m.insert("dedup_hits".into(), num(self.loader.dedup_hits as f64));
                 m.insert("dedup_total".into(), num(self.loader.dedup_total as f64));
+                m.insert(
+                    "merged_acquires".into(),
+                    num(self.loader.merged_acquires as f64),
+                );
+                m.insert(
+                    "merged_unique_experts".into(),
+                    num(self.loader.merged_unique as f64),
+                );
+                m.insert(
+                    "merged_demands".into(),
+                    num(self.loader.merged_demands as f64),
+                );
             }
             pairs.push(("serving", serving));
         }
@@ -283,6 +326,35 @@ mod tests {
         assert!(serving.get("overlap_ratio").is_some());
         assert_eq!(serving.get("dedup_hits").unwrap().as_f64().unwrap(), 3.0);
         assert_eq!(serving.get("dedup_total").unwrap().as_f64().unwrap(), 7.0);
+    }
+
+    #[test]
+    fn batch_stats_surface_only_in_serving_section() {
+        let mut rep = RunReport::default();
+        rep.loader.merged_acquires = 12;
+        rep.loader.merged_unique = 20;
+        rep.loader.merged_demands = 31;
+        let fcfs = rep.to_json().to_string();
+        assert!(!fcfs.contains("merged"), "FCFS report grew merged-acquire keys");
+        assert!(!fcfs.contains("batch"), "FCFS report grew batch keys");
+        rep.scheduler = Some(SchedulerStats {
+            batch_steps: 4,
+            batch_rows: 10,
+            padded_slots: 3,
+            batch_evictions: 1,
+            ..Default::default()
+        });
+        let j = Json::parse(&rep.to_json().to_string()).unwrap();
+        let serving = j.get("serving").unwrap();
+        assert_eq!(serving.get("batch_steps").unwrap().as_f64().unwrap(), 4.0);
+        assert!((serving.get("batch_occupancy").unwrap().as_f64().unwrap() - 2.5).abs() < 1e-9);
+        assert_eq!(serving.get("padded_slots").unwrap().as_f64().unwrap(), 3.0);
+        assert_eq!(serving.get("batch_evictions").unwrap().as_f64().unwrap(), 1.0);
+        assert_eq!(serving.get("merged_acquires").unwrap().as_f64().unwrap(), 12.0);
+        assert_eq!(serving.get("merged_unique_experts").unwrap().as_f64().unwrap(), 20.0);
+        assert_eq!(serving.get("merged_demands").unwrap().as_f64().unwrap(), 31.0);
+        // occupancy degenerates to 1.0 when batching never engaged
+        assert_eq!(SchedulerStats::default().batch_occupancy(), 1.0);
     }
 
     #[test]

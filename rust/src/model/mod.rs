@@ -2,6 +2,7 @@
 //! expert store (the "next-level memory" tier holding every expert at
 //! every precision, exported by `python/compile/gen_weights.py`).
 
+pub mod synth;
 mod weights;
 
 pub use weights::{ExpertStore, NonExpertWeights};

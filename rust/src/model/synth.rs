@@ -1,0 +1,211 @@
+//! Synthesized model weights: writes a complete on-disk weight directory
+//! (`weights.json` + `nonexpert.bin` + `experts_{f32,q8,q4,q2}.bin`) for a
+//! tiny random-but-deterministic model, byte-compatible with the formats
+//! `python/compile/gen_weights.py` exports.
+//!
+//! This is what makes the batched-decode regression suite artifact-free:
+//! `Engine::new_reference` + a synthesized directory drive the *real*
+//! loader/cache/predictor/scheduler stack — only the AOT compile step is
+//! bypassed. The quantized tiers are packed with `quant::quantize`, so the
+//! mixed-precision paths (records, scales, dequant) are real too.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::config::ModelConfig;
+use crate::quant;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::Precision;
+
+/// A tiny model shape for the artifact-free suites. The vocab matches the
+/// byte tokenizer (`tokenizer::VOCAB`) so the serving path is end-to-end
+/// real; `expert_bytes` is derived from the layout below.
+pub fn tiny_model_config(name: &str) -> ModelConfig {
+    let (d, ff, g) = (16usize, 32usize, 16usize);
+    let mut cfg = ModelConfig {
+        name: name.into(),
+        n_layers: 3,
+        d_model: d,
+        d_ff: ff,
+        n_experts: 4,
+        top_k: 2,
+        n_heads: 2,
+        n_kv_heads: 1,
+        vocab: crate::tokenizer::VOCAB,
+        max_seq: 64,
+        quant_group: g,
+        expert_bytes: [0; 4],
+    };
+    for p in Precision::ALL {
+        cfg.expert_bytes[crate::config::precision_slot(p)] = expert_record_bytes(&cfg, p);
+    }
+    cfg
+}
+
+/// On-wire record size of one expert at one precision under the
+/// `[w1, w3, w2]` (f32) / `[w1p, w1s, w3p, w3s, w2p, w2s]` (quant) layout
+/// that `model::expert_literals` slices.
+pub fn expert_record_bytes(cfg: &ModelConfig, p: Precision) -> usize {
+    let (d, ff, g) = (cfg.d_model, cfg.d_ff, cfg.quant_group);
+    match p {
+        Precision::F32 => (2 * d * ff + ff * d) * 4,
+        _ => [(d, ff), (d, ff), (ff, d)]
+            .iter()
+            .map(|&(rows, cols)| {
+                quant::packed_bytes(rows, cols, p) + quant::scale_count(rows, cols, g) * 4
+            })
+            .sum(),
+    }
+}
+
+fn push_f32(buf: &mut Vec<u8>, data: &[f32]) {
+    for v in data {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+/// Deterministic random weights with magnitudes that keep softmax gates
+/// and logits well-conditioned (roughly orthogonal-init scale).
+fn rand_mat(rng: &mut Rng, rows: usize, cols: usize, scale: f64) -> Vec<f32> {
+    (0..rows * cols).map(|_| (rng.normal() * scale) as f32).collect()
+}
+
+/// Write the whole synthesized model (non-expert weights + every expert
+/// at every precision) under `dir`. Deterministic in `seed`.
+pub fn write_synth_model(dir: &Path, cfg: &ModelConfig, seed: u64) -> Result<()> {
+    std::fs::create_dir_all(dir)
+        .with_context(|| format!("creating {}", dir.display()))?;
+    let d = cfg.d_model;
+    let ff = cfg.d_ff;
+    let e = cfg.n_experts as usize;
+    let l = cfg.n_layers as usize;
+    let (h, hkv, hd) = (cfg.n_heads, cfg.n_kv_heads, cfg.head_dim());
+    let mut rng = Rng::new(seed);
+    let wscale = 1.0 / (d as f64).sqrt();
+
+    // ---- non-expert weights -------------------------------------------
+    let mut bin: Vec<u8> = Vec::new();
+    let mut entries: Vec<Json> = Vec::new();
+    let mut put = |name: String, shape: Vec<usize>, data: &[f32], bin: &mut Vec<u8>| {
+        let mut obj = std::collections::BTreeMap::new();
+        obj.insert("name".to_string(), Json::Str(name));
+        obj.insert(
+            "shape".to_string(),
+            Json::Arr(shape.iter().map(|&s| Json::Num(s as f64)).collect()),
+        );
+        obj.insert("offset".to_string(), Json::Num(bin.len() as f64));
+        entries.push(Json::Obj(obj));
+        push_f32(bin, data);
+    };
+
+    let emb = rand_mat(&mut rng, cfg.vocab, d, wscale);
+    put("emb".into(), vec![cfg.vocab, d], &emb, &mut bin);
+    let final_norm: Vec<f32> = (0..d).map(|_| 1.0 + rng.normal() as f32 * 0.02).collect();
+    put("final_norm".into(), vec![d], &final_norm, &mut bin);
+    for li in 0..l {
+        let norm: Vec<f32> = (0..d).map(|_| 1.0 + rng.normal() as f32 * 0.02).collect();
+        put(format!("attn_norm.{li}"), vec![d], &norm, &mut bin);
+        let wq = rand_mat(&mut rng, d, h * hd, wscale);
+        put(format!("wq.{li}"), vec![d, h * hd], &wq, &mut bin);
+        let wk = rand_mat(&mut rng, d, hkv * hd, wscale);
+        put(format!("wk.{li}"), vec![d, hkv * hd], &wk, &mut bin);
+        let wv = rand_mat(&mut rng, d, hkv * hd, wscale);
+        put(format!("wv.{li}"), vec![d, hkv * hd], &wv, &mut bin);
+        let wo = rand_mat(&mut rng, h * hd, d, wscale);
+        put(format!("wo.{li}"), vec![h * hd, d], &wo, &mut bin);
+        let pn: Vec<f32> = (0..d).map(|_| 1.0 + rng.normal() as f32 * 0.02).collect();
+        put(format!("post_norm.{li}"), vec![d], &pn, &mut bin);
+        // gate spread wide enough that routing differs across tokens
+        let wg = rand_mat(&mut rng, d, e, wscale * 2.0);
+        put(format!("wg.{li}"), vec![d, e], &wg, &mut bin);
+    }
+    let mut manifest = std::collections::BTreeMap::new();
+    manifest.insert("nonexpert".to_string(), Json::Arr(entries));
+    std::fs::write(dir.join("weights.json"), Json::Obj(manifest).to_string())?;
+    std::fs::write(dir.join("nonexpert.bin"), &bin)?;
+
+    // ---- expert store (every precision) -------------------------------
+    let g = cfg.quant_group;
+    let mut tiers: [Vec<u8>; 4] = [Vec::new(), Vec::new(), Vec::new(), Vec::new()];
+    for _li in 0..l {
+        for _ei in 0..e {
+            let w1 = rand_mat(&mut rng, d, ff, wscale);
+            let w3 = rand_mat(&mut rng, d, ff, wscale);
+            let w2 = rand_mat(&mut rng, ff, d, 1.0 / (ff as f64).sqrt());
+            for p in Precision::ALL {
+                let tier = &mut tiers[crate::config::precision_slot(p)];
+                match p {
+                    Precision::F32 => {
+                        push_f32(tier, &w1);
+                        push_f32(tier, &w3);
+                        push_f32(tier, &w2);
+                    }
+                    _ => {
+                        for (w, rows, cols) in
+                            [(&w1, d, ff), (&w3, d, ff), (&w2, ff, d)]
+                        {
+                            let (packed, scales) = quant::quantize(w, rows, cols, g, p);
+                            tier.extend_from_slice(&packed);
+                            push_f32(tier, &scales);
+                        }
+                    }
+                }
+            }
+        }
+    }
+    for p in Precision::ALL {
+        let tier = &tiers[crate::config::precision_slot(p)];
+        debug_assert_eq!(tier.len(), cfg.bytes_for(p) * cfg.total_experts());
+        std::fs::write(dir.join(format!("experts_{}.bin", p.name())), tier)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{ExpertStore, NonExpertWeights};
+
+    #[test]
+    fn synth_model_roundtrips_through_the_real_loaders() {
+        let cfg = tiny_model_config("synth-roundtrip");
+        let dir = std::env::temp_dir().join("hobbit_synth_roundtrip");
+        write_synth_model(&dir, &cfg, 42).unwrap();
+        let ne = NonExpertWeights::load(&dir).unwrap();
+        let (shape, emb) = ne.get("emb").unwrap();
+        assert_eq!(shape, &[cfg.vocab, cfg.d_model][..]);
+        assert!(emb.iter().all(|v| v.is_finite()));
+        let (shape, _) = ne.get("wg.2").unwrap();
+        assert_eq!(shape, &[cfg.d_model, cfg.n_experts as usize][..]);
+        let store = ExpertStore::load(&dir, &cfg).unwrap();
+        for p in Precision::ALL {
+            let rec = store.record(crate::ExpertKey::new(2, 3), p);
+            assert_eq!(rec.len(), cfg.bytes_for(p));
+        }
+    }
+
+    #[test]
+    fn record_bytes_match_quant_layout() {
+        let cfg = tiny_model_config("synth-bytes");
+        // f32: three matrices of floats
+        let (d, ff) = (cfg.d_model, cfg.d_ff);
+        assert_eq!(cfg.bytes_for(Precision::F32), (2 * d * ff + ff * d) * 4);
+        // quantized tiers shrink monotonically
+        assert!(cfg.bytes_for(Precision::Q8) > cfg.bytes_for(Precision::Q4));
+        assert!(cfg.bytes_for(Precision::Q4) > cfg.bytes_for(Precision::Q2));
+    }
+
+    #[test]
+    fn synth_is_deterministic_in_seed() {
+        let cfg = tiny_model_config("synth-det");
+        let d1 = std::env::temp_dir().join("hobbit_synth_det1");
+        let d2 = std::env::temp_dir().join("hobbit_synth_det2");
+        write_synth_model(&d1, &cfg, 7).unwrap();
+        write_synth_model(&d2, &cfg, 7).unwrap();
+        let a = std::fs::read(d1.join("experts_f32.bin")).unwrap();
+        let b = std::fs::read(d2.join("experts_f32.bin")).unwrap();
+        assert_eq!(a, b);
+    }
+}

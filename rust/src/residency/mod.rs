@@ -46,6 +46,24 @@ use crate::{ExpertKey, Precision};
 /// class, and the per-row gate weights to apply.
 pub type ExpertUse = (ExpertKey, Class, Vec<f32>);
 
+/// One entry of a batched step's *merged* ensure-resident barrier: a
+/// unique (expert, precision class) demanded by one or more rows of the
+/// launch. [`ExpertResidency::acquire_merged`] probes/pins/loads it once
+/// for the whole batch and the engine executes it once at launch width.
+#[derive(Debug, Clone)]
+pub struct MergedUse {
+    pub key: ExpertKey,
+    /// requested class going in; *effective* class coming out (a Lo
+    /// request served by a resident Hi copy is upgraded, like `acquire`)
+    pub class: Class,
+    /// per-launch-row gate weights (zero = row not routed to this expert)
+    pub gatew: Vec<f32>,
+    /// demanding rows' launch indices (parallel to `seqs`)
+    pub rows: Vec<usize>,
+    /// demanding rows' sessions, for cache-record attribution
+    pub seqs: Vec<Option<u64>>,
+}
+
 // ---------------------------------------------------------------------
 // Tickets
 // ---------------------------------------------------------------------
@@ -336,34 +354,148 @@ impl ExpertResidency {
                 st.skipped += 1;
                 continue;
             }
-            let (_prec, pool) = self.class_target(class);
-            let mut hit = cache.access(key, pool);
-            // a Lo request served by a resident Hi copy is a free upgrade
-            let mut eff_class = class;
-            if !hit && pool == Pool::Lo && cache.hi.contains_ready(key) {
-                hit = true;
-                eff_class = Class::Hi;
-                cache.stats.hits_hi += 1;
-                // undo the lo-miss penalty charged by access()
-                cache.stats.misses_lo -= 1;
-                cache.stats.miss_penalty -= cache.penalty_ratio();
+            let (c, eff_class) = self.acquire_one(cache, key, class, 1, layer, scope, &mut waits);
+            cache = c;
+            uses.push((key, eff_class, gatew));
+        }
+        drop(cache);
+        (uses, waits)
+    }
+
+    /// The per-demand core both barriers share: probe (with hit/miss
+    /// accounting), the Lo-request-served-by-a-resident-Hi-copy upgrade,
+    /// one cache pin per demanding row, and the submit-or-join of the load
+    /// on a miss. `m` is the demand's multiplicity — the number of rows
+    /// behind it (1 on the solo path); rows beyond the first replicate the
+    /// probe accounting and count as dedup joins of the shared task.
+    /// Takes and returns the cache guard because a load submission must
+    /// release it (lock order: never hold the cache lock into the loader).
+    #[allow(clippy::too_many_arguments)]
+    fn acquire_one<'a>(
+        &'a self,
+        mut cache: std::sync::MutexGuard<'a, CacheManager>,
+        key: ExpertKey,
+        class: Class,
+        m: usize,
+        layer: u32,
+        scope: u64,
+        waits: &mut TicketSet,
+    ) -> (std::sync::MutexGuard<'a, CacheManager>, Class) {
+        let (_prec, pool) = self.class_target(class);
+        let first_hit = cache.access(key, pool);
+        let mut hit = first_hit;
+        // a Lo request served by a resident Hi copy is a free upgrade
+        let mut eff_class = class;
+        if !first_hit && pool == Pool::Lo && cache.hi.contains_ready(key) {
+            hit = true;
+            eff_class = Class::Hi;
+            cache.stats.hits_hi += 1;
+            // undo the lo-miss penalty charged by access()
+            cache.stats.misses_lo -= 1;
+            cache.stats.miss_penalty -= cache.penalty_ratio();
+        }
+        // rows 2..m see the same outcome the instant after the first
+        // probe; replicate the per-access accounting for them
+        for _ in 1..m {
+            if hit {
+                match eff_class {
+                    Class::Hi => cache.stats.hits_hi += 1,
+                    _ => cache.stats.hits_lo += 1,
+                }
+            } else {
+                match pool {
+                    Pool::Hi => {
+                        cache.stats.misses_hi += 1;
+                        cache.stats.miss_penalty += 1.0;
+                    }
+                    Pool::Lo => {
+                        cache.stats.misses_lo += 1;
+                        cache.stats.miss_penalty += cache.penalty_ratio();
+                    }
+                }
             }
-            let pinned = match eff_class {
+        }
+        // one pin per demanding row, all released by that row's FFN
+        // execution (solo, batched, or post-eviction solo)
+        let mut pinned = true;
+        for _ in 0..m {
+            pinned = match eff_class {
                 Class::Hi => cache.hi.pin(key),
                 _ => cache.lo.pin(key),
             };
-            debug_assert!(!hit || pinned, "hit on {key:?} must pin a live slot");
-            uses.push((key, eff_class, gatew));
-            if !hit {
-                drop(cache);
-                let (prec, pool) = self.class_target(eff_class);
-                if let Some(t) =
-                    self.request_load(key, prec, pool, TaskKind::OnDemand, layer, scope)
-                {
-                    waits.push(t);
-                }
-                cache = self.cache.lock().unwrap();
+        }
+        debug_assert!(!hit || pinned, "hit on {key:?} must pin a live slot");
+        if !hit {
+            drop(cache);
+            let (prec, pool) = self.class_target(eff_class);
+            if let Some(t) =
+                self.request_load(key, prec, pool, TaskKind::OnDemand, layer, scope)
+            {
+                waits.push(t);
             }
+            // the other m-1 demanding rows joined the same task — the
+            // in-batch share of the dedup accounting
+            if m > 1 {
+                let mut st = self.loader.stats.lock().unwrap();
+                st.dedup_total += (m - 1) as u64;
+                st.dedup_hits += (m - 1) as u64;
+            }
+            cache = self.cache.lock().unwrap();
+        }
+        (cache, eff_class)
+    }
+
+    /// The batched step's merged ensure-resident barrier: one call per
+    /// (batch, layer). Each entry of `demands` is a unique
+    /// (expert, class) with the rows that routed it; the facade
+    ///
+    /// * probes and (per demanding row) pins each expert exactly once,
+    /// * submits — or joins — exactly one load task per unique cache-miss
+    ///   expert, counting the in-batch duplicates as dedup joins
+    ///   (`dedup_hits`/`dedup_total` account for every duplicate, the same
+    ///   as a cross-sequence join on the solo path),
+    /// * advances the token tick of every participating session once.
+    ///
+    /// Pin counts are per demanding row (they stack), so a row evicted
+    /// from the batch mid-barrier can release exactly its own pins and
+    /// the remaining rows keep theirs. Returns the execution set (classes
+    /// upgraded where a Hi copy serves a Lo request) plus the tickets to
+    /// wait on; like `acquire`, it never waits.
+    pub fn acquire_merged(
+        &self,
+        layer: u32,
+        demands: Vec<MergedUse>,
+        batch_seqs: &[Option<u64>],
+    ) -> (Vec<MergedUse>, TicketSet) {
+        let mut waits = TicketSet::new();
+        let mut uses: Vec<MergedUse> = Vec::with_capacity(demands.len());
+        let mut cache = self.cache.lock().unwrap();
+        for s in batch_seqs {
+            cache.note_token_for(*s);
+        }
+        {
+            let mut st = self.loader.stats.lock().unwrap();
+            st.merged_acquires += 1;
+            st.merged_unique +=
+                demands.iter().filter(|d| d.class != Class::Skip).count() as u64;
+            st.merged_demands += demands
+                .iter()
+                .filter(|d| d.class != Class::Skip)
+                .map(|d| d.rows.len() as u64)
+                .sum::<u64>();
+        }
+        let scope = batch_seqs.first().copied().flatten().unwrap_or(GLOBAL_SCOPE);
+        for mut d in demands {
+            let m = d.rows.len().max(1);
+            if d.class == Class::Skip {
+                self.loader.stats.lock().unwrap().skipped += m as u64;
+                continue;
+            }
+            let (c, eff_class) =
+                self.acquire_one(cache, d.key, d.class, m, layer, scope, &mut waits);
+            cache = c;
+            d.class = eff_class;
+            uses.push(d);
         }
         drop(cache);
         (uses, waits)

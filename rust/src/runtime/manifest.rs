@@ -1,8 +1,28 @@
-//! Artifact manifest (`artifacts/<model>/manifest.json`) parsing.
+//! Artifact manifest (`artifacts/<model>/manifest.json`) parsing, plus
+//! decode s-variant resolution: which batched launch widths the artifact
+//! set actually carries, and how a batch of n sequences pads to them.
 
 use std::collections::BTreeMap;
 
 use crate::util::json::Json;
+
+/// Batched-decode launch widths the AOT compiler may emit
+/// (`attn/gate/expert_*_s{2,4,8}`); a batch of n pads to the smallest one
+/// that fits ([`pad_batch_width`]).
+pub const DECODE_BATCH_WIDTHS: [usize; 3] = [2, 4, 8];
+
+/// Largest decode batch one launch can carry.
+pub const MAX_DECODE_BATCH: usize = 8;
+
+/// Smallest compiled-size launch width that fits a batch of `n` runnable
+/// sequences (the padding rule of batched decode). None when `n` exceeds
+/// [`MAX_DECODE_BATCH`] or is not a real batch (n < 2).
+pub fn pad_batch_width(n: usize) -> Option<usize> {
+    if n < 2 {
+        return None;
+    }
+    DECODE_BATCH_WIDTHS.iter().copied().find(|&w| w >= n)
+}
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum DType {
@@ -84,6 +104,38 @@ impl Manifest {
         self.artifacts.keys().map(|s| s.as_str())
     }
 
+    /// Whether the `{base}_s{s}` variant of an artifact is present.
+    pub fn has_variant(&self, base: &str, s: usize) -> bool {
+        self.artifacts.contains_key(&format!("{base}_s{s}"))
+    }
+
+    /// Which batched-decode launch widths this artifact set fully covers:
+    /// a width counts only when *every* unit of the decode step exists at
+    /// that width — the gate stacks `gate_p{1..=stack_p}_s{w}`, both
+    /// precision classes of the expert FFN, and the LM head. (Attention is
+    /// per-row even in a batched step: each sequence has its own KV cache
+    /// and position, which the `attn_s{w}` signature cannot express.)
+    /// Widths missing any unit fall back to s=1 launches at runtime — the
+    /// merged residency acquire still happens once per (batch, layer).
+    pub fn decode_batch_widths(
+        &self,
+        stack_p: usize,
+        ffn_prefix: &str,
+        hi: &str,
+        lo: &str,
+    ) -> Vec<usize> {
+        DECODE_BATCH_WIDTHS
+            .iter()
+            .copied()
+            .filter(|&w| {
+                (1..=stack_p.max(1)).all(|p| self.has_variant(&format!("gate_p{p}"), w))
+                    && self.has_variant(&format!("{ffn_prefix}_{hi}"), w)
+                    && self.has_variant(&format!("{ffn_prefix}_{lo}"), w)
+                    && self.has_variant("head", w)
+            })
+            .collect()
+    }
+
     /// Raw model section for config parsing.
     pub fn model_json(&self) -> Json {
         Json::Obj(
@@ -130,5 +182,51 @@ mod tests {
         assert_eq!(DType::F32.size(), 4);
         assert_eq!(DType::U8.size(), 1);
         assert!(DType::parse("float64").is_err());
+    }
+
+    #[test]
+    fn pad_width_resolution() {
+        assert_eq!(pad_batch_width(2), Some(2));
+        assert_eq!(pad_batch_width(3), Some(4));
+        assert_eq!(pad_batch_width(4), Some(4));
+        assert_eq!(pad_batch_width(5), Some(8));
+        assert_eq!(pad_batch_width(8), Some(8));
+        // not a batch / beyond the largest compiled width
+        assert_eq!(pad_batch_width(0), None);
+        assert_eq!(pad_batch_width(1), None);
+        assert_eq!(pad_batch_width(9), None);
+    }
+
+    fn variant_manifest(names: &[&str]) -> Manifest {
+        let arts: Vec<String> = names
+            .iter()
+            .map(|n| format!(r#""{n}": {{"file": "{n}.hlo.txt", "inputs": [], "outputs": 1}}"#))
+            .collect();
+        let src = format!(r#"{{"model": {{"name": "m"}}, "artifacts": {{{}}}}}"#, arts.join(","));
+        Manifest::parse(&src).unwrap()
+    }
+
+    #[test]
+    fn batch_width_requires_full_decode_set() {
+        // a typical seed artifact set: s1/s16/s128 only -> no batched widths
+        let m = variant_manifest(&[
+            "gate_p1_s1", "gate_p2_s1", "expert_fast_f32_s1", "expert_fast_q8_s1", "head_s1",
+            "head_s16", "head_s128",
+        ]);
+        assert!(m.decode_batch_widths(2, "expert_fast", "f32", "q8").is_empty());
+        assert!(m.has_variant("head", 16));
+        assert!(!m.has_variant("gate_p2", 4));
+
+        // a full s4 decode set resolves exactly {4}
+        let m = variant_manifest(&[
+            "gate_p1_s4", "gate_p2_s4", "expert_fast_f32_s4", "expert_fast_q8_s4", "head_s4",
+        ]);
+        assert_eq!(m.decode_batch_widths(2, "expert_fast", "f32", "q8"), vec![4]);
+
+        // a width missing one gate depth of the stack is not usable
+        let m = variant_manifest(&[
+            "gate_p2_s4", "expert_fast_f32_s4", "expert_fast_q8_s4", "head_s4",
+        ]);
+        assert!(m.decode_batch_widths(2, "expert_fast", "f32", "q8").is_empty());
     }
 }

@@ -5,7 +5,9 @@
 
 mod manifest;
 
-pub use manifest::{ArtifactSpec, DType, Manifest};
+pub use manifest::{
+    pad_batch_width, ArtifactSpec, DType, Manifest, DECODE_BATCH_WIDTHS, MAX_DECODE_BATCH,
+};
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};

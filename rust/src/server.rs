@@ -223,6 +223,19 @@ impl Server {
             let _ = acceptor.join();
         }
         coord.sync_report();
+        if coord.max_batch > 1 {
+            // batched-decode shutdown summary: did concurrency actually
+            // become FLOP/load sharing? (occupancy > 1 says yes)
+            let sch = coord.scheduler_stats();
+            eprintln!(
+                "[server] batched decode: {} steps, occupancy {:.2}, {} padded slots, \
+                 {} evictions",
+                sch.batch_steps,
+                sch.batch_occupancy(),
+                sch.padded_slots,
+                sch.batch_evictions,
+            );
+        }
         Ok(())
     }
 

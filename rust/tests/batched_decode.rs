@@ -1,0 +1,364 @@
+//! Batched-decode regression suite: batching must NEVER change logits.
+//!
+//! Everything here runs artifact-free on a synthesized model
+//! (`model::synth`) through the pure-Rust reference executor
+//! (`Engine::new_reference`), so it gates CI without the AOT compile
+//! step. The loader, cache, predictor, residency facade, and both
+//! schedulers are the real ones; the reference kernels compute every op
+//! row-independently in a fixed order, so the batch-vs-sequential
+//! comparisons below are **bit-identical**, not tolerance-based.
+//!
+//! Coverage:
+//! * engine-level: decoding K sequences as one `BatchCursor` step stream
+//!   produces bit-identical per-sequence logits to `decode_step`-ing them
+//!   one at a time, for K in {2, 3 (padded to 4), 8};
+//! * coordinator-level: `--max-batch K` completions equal the FCFS
+//!   reference under both rr and sjf, with batch occupancy > 1 and one
+//!   merged acquire per (batch, layer) in the serving stats;
+//! * eviction: a row whose loads block mid-group leaves the batch without
+//!   stalling the others, finishes solo with identical logits, and every
+//!   cache pin is released (no leaks).
+
+use std::path::{Path, PathBuf};
+
+use hobbit::config::{HardwareConfig, PolicyConfig};
+use hobbit::coordinator::{Coordinator, Request, SchedPolicy};
+use hobbit::engine::{BatchItem, BatchProgress, DecodeProgress, Engine, EngineOptions, KvState};
+use hobbit::model::synth::{tiny_model_config, write_synth_model};
+use hobbit::tokenizer::BOS;
+use hobbit::util::json::Json;
+
+const SEED: u64 = 0xBA7C4;
+
+fn synth_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("hobbit_batched_{name}"));
+    let cfg = tiny_model_config(name);
+    write_synth_model(&dir, &cfg, SEED).expect("synth model");
+    dir
+}
+
+fn fast_hw() -> HardwareConfig {
+    HardwareConfig {
+        name: "batched-fast".into(),
+        load_bw: 1e9,
+        load_latency: 0.0,
+        hi_cache_experts: 12, // every expert of the tiny model fits
+        lo_cache_experts: 12,
+        cpu_assist: false,
+        cpu_expert_time: 0.0,
+    }
+}
+
+/// Offload-bound: small cache + a link slow enough (~3ms per f32 expert)
+/// that merged acquires genuinely wait on the wire.
+fn offload_hw() -> HardwareConfig {
+    HardwareConfig {
+        name: "batched-offload".into(),
+        load_bw: 2e6,
+        load_latency: 0.0,
+        hi_cache_experts: 6,
+        lo_cache_experts: 6,
+        cpu_assist: false,
+        cpu_expert_time: 0.0,
+    }
+}
+
+/// Dynamic loading off: every routed expert executes in high precision,
+/// so logits depend only on each row's own token history — cache state,
+/// link speed, batching, and scheduling order must not change them.
+fn quality_policy(prefetch_depth: usize) -> PolicyConfig {
+    PolicyConfig { dynamic_loading: false, prefetch_depth, ..PolicyConfig::default() }
+}
+
+fn mk_engine(name: &str, dir: &Path, hw: HardwareConfig, prefetch: usize) -> Engine {
+    let cfg = tiny_model_config(name);
+    Engine::new_reference(dir, cfg, EngineOptions::new(hw, quality_policy(prefetch)))
+        .expect("reference engine")
+}
+
+/// Deterministic per-row token streams (byte tokens, all < 256).
+fn stream(row: usize, step: usize) -> u32 {
+    (65 + ((row * 31 + step * 7) % 190)) as u32
+}
+
+fn prompt_tokens(row: usize) -> Vec<u32> {
+    vec![BOS, (70 + row as u32) % 256]
+}
+
+/// Ground truth: each row decoded alone with the blocking batch-1 step.
+fn sequential_logits(
+    name: &str,
+    dir: &Path,
+    rows: usize,
+    steps: usize,
+) -> Vec<Vec<Vec<f32>>> {
+    let mut eng = mk_engine(name, dir, fast_hw(), 2);
+    (0..rows)
+        .map(|r| {
+            let mut kv = eng.new_sequence();
+            eng.prefill(&mut kv, &prompt_tokens(r)).expect("prefill");
+            (0..steps)
+                .map(|j| eng.decode_step(&mut kv, stream(r, j)).expect("decode"))
+                .collect()
+        })
+        .collect()
+}
+
+fn batch_equivalence(rows: usize, expect_width: usize) {
+    let name = format!("eq{rows}");
+    let dir = synth_dir(&name);
+    let steps = 5usize;
+    let reference = sequential_logits(&name, &dir, rows, steps);
+
+    // batched engine under offload pressure: merged acquires really wait
+    let mut eng = mk_engine(&name, &dir, offload_hw(), 2);
+    let mut kvs: Vec<Option<KvState>> = (0..rows)
+        .map(|r| {
+            let mut kv = eng.new_sequence();
+            eng.prefill(&mut kv, &prompt_tokens(r)).expect("prefill");
+            Some(kv)
+        })
+        .collect();
+    for j in 0..steps {
+        let items: Vec<BatchItem> = (0..rows)
+            .map(|r| BatchItem {
+                seq: None,
+                token: stream(r, j),
+                kv: kvs[r].take().expect("kv present"),
+            })
+            .collect();
+        let mut cur = eng.decode_begin_batch(items).expect("begin batch");
+        assert_eq!(cur.width(), expect_width, "batch of {rows} pads to {expect_width}");
+        let done = loop {
+            match eng.decode_poll_batch(&mut cur).expect("poll batch") {
+                BatchProgress::Done(d) => break d,
+                BatchProgress::Pending => eng.decode_block_batch(&mut cur),
+            }
+        };
+        assert_eq!(done.len(), rows);
+        for (r, d) in done.into_iter().enumerate() {
+            assert_eq!(
+                d.logits, reference[r][j],
+                "row {r} step {j}: batched logits diverged from sequential"
+            );
+            kvs[r] = Some(d.kv);
+        }
+    }
+    // one merged acquire per (batch step, layer)
+    let st = eng.residency.loader_stats();
+    let n_layers = eng.cfg.n_layers as u64;
+    assert_eq!(st.merged_acquires, steps as u64 * n_layers);
+    assert!(st.merged_demands >= st.merged_unique);
+}
+
+#[test]
+fn batch_of_2_matches_sequential_bitwise() {
+    batch_equivalence(2, 2);
+}
+
+#[test]
+fn batch_of_3_pads_to_4_and_matches_sequential_bitwise() {
+    batch_equivalence(3, 4);
+}
+
+#[test]
+fn batch_of_8_matches_sequential_bitwise() {
+    batch_equivalence(8, 8);
+}
+
+// ---------------------------------------------------------------------
+// Coordinator-level equivalence (rr + sjf) and serving stats
+// ---------------------------------------------------------------------
+
+const PROMPTS: [&str; 8] = [
+    "alpha request one",
+    "bravo request two",
+    "charlie request three",
+    "delta request four",
+    "echo request five",
+    "foxtrot request six",
+    "golf request seven",
+    "hotel request eight",
+];
+
+/// FCFS batch-1 ground truth on a fresh reference engine.
+fn reference_results(name: &str, dir: &Path, k: usize, max_new: usize) -> Vec<Vec<u32>> {
+    let eng = mk_engine(name, dir, fast_hw(), 2);
+    let mut coord = Coordinator::new(eng);
+    (0..k)
+        .map(|i| {
+            coord
+                .generate(&Request::new(i as u64 + 1, PROMPTS[i], max_new))
+                .expect("generate")
+                .tokens
+        })
+        .collect()
+}
+
+fn coordinator_equivalence(k: usize, policy: SchedPolicy) {
+    let name = format!("coord{k}{:?}", policy == SchedPolicy::Sjf);
+    let dir = synth_dir(&name);
+    let max_new = 6usize;
+    let reference = reference_results(&name, &dir, k, max_new);
+
+    let eng = mk_engine(&name, &dir, offload_hw(), 2);
+    let mut coord = Coordinator::interleaved(eng);
+    coord.sched_policy = policy;
+    coord.max_active = k;
+    coord.max_batch = k;
+    for (i, p) in PROMPTS.iter().take(k).enumerate() {
+        coord.submit(Request::new(i as u64 + 1, *p, max_new));
+    }
+    let mut results = coord.drain().expect("drain");
+    assert_eq!(results.len(), k);
+    results.sort_by_key(|r| r.id);
+    for (r, want) in results.iter().zip(&reference) {
+        assert_eq!(
+            &r.tokens, want,
+            "request {}: batched decode diverged from the batch-1 reference",
+            r.id
+        );
+    }
+
+    // batching actually engaged, and each batch issued one merged acquire
+    // per layer
+    let sch = coord.scheduler_stats().clone();
+    assert!(sch.batch_steps > 0, "no batched steps with max_batch {k}");
+    assert!(
+        sch.batch_occupancy() > 1.0,
+        "occupancy {} with {k} concurrent sequences",
+        sch.batch_occupancy()
+    );
+    coord.sync_report();
+    let n_layers = coord.engine.cfg.n_layers as u64;
+    assert_eq!(coord.report.loader.merged_acquires, sch.batch_steps * n_layers);
+
+    // stats surface under the serving key
+    let j = Json::parse(&coord.report.to_json().to_string()).unwrap();
+    let serving = j.get("serving").expect("serving section");
+    assert!(serving.get("batch_occupancy").unwrap().as_f64().unwrap() > 1.0);
+    assert!(serving.get("merged_acquires").unwrap().as_f64().unwrap() > 0.0);
+}
+
+#[test]
+fn coordinator_rr_batched_matches_reference_k2() {
+    coordinator_equivalence(2, SchedPolicy::RoundRobin);
+}
+
+#[test]
+fn coordinator_rr_batched_matches_reference_k3_padded() {
+    coordinator_equivalence(3, SchedPolicy::RoundRobin);
+}
+
+#[test]
+fn coordinator_rr_batched_matches_reference_k8() {
+    coordinator_equivalence(8, SchedPolicy::RoundRobin);
+}
+
+#[test]
+fn coordinator_sjf_batched_matches_reference_k3_padded() {
+    coordinator_equivalence(3, SchedPolicy::Sjf);
+}
+
+#[test]
+fn coordinator_sjf_batched_matches_reference_k8() {
+    coordinator_equivalence(8, SchedPolicy::Sjf);
+}
+
+// ---------------------------------------------------------------------
+// Eviction under blocking: the satellite fix
+// ---------------------------------------------------------------------
+
+/// A row whose expert loads are still on the link is evicted from the
+/// batch; the survivor finishes WITHOUT waiting on the evicted row's
+/// tickets, the evicted row finishes solo, both bit-identical to their
+/// sequential references, and no cache pin leaks. Prefetch is off so the
+/// pin ledger isolates the batch/merged-acquire accounting.
+#[test]
+fn blocked_row_evicts_without_stalling_or_leaking_pins() {
+    let name = "evict";
+    let dir = synth_dir(name);
+    // sequential references (fresh engine, fast link)
+    let reference: Vec<Vec<f32>> = {
+        let mut eng = mk_engine(name, &dir, fast_hw(), 0);
+        (0..2)
+            .map(|r| {
+                let mut kv = eng.new_sequence();
+                eng.decode_step(&mut kv, stream(r, 0)).expect("decode")
+            })
+            .collect()
+    };
+
+    // ~120ms per f32 expert: layer-0 misses are guaranteed mid-flight
+    let slow = HardwareConfig { load_bw: 5e4, ..offload_hw() };
+    let mut eng = mk_engine(name, &dir, slow, 0);
+    let items: Vec<BatchItem> = (0..2)
+        .map(|r| BatchItem { seq: None, token: stream(r, 0), kv: KvState::new(&eng.cfg) })
+        .collect();
+    let mut cur = eng.decode_begin_batch(items).expect("begin");
+    let progress = eng.decode_poll_batch(&mut cur).expect("poll");
+    assert!(
+        matches!(progress, BatchProgress::Pending),
+        "cold cache over a 120ms/expert link must suspend the batch"
+    );
+    assert!(cur.row_blocked(1), "row 1's loads are on the link");
+    let tickets_before = cur.pending_tickets().len();
+
+    let (seq, mut kv1, mut solo) =
+        eng.decode_evict_row(&mut cur, 1).expect("blocked row is evictable");
+    assert_eq!(seq, None);
+    assert_eq!(cur.rows_alive(), 1, "evicted row left the group");
+    assert!(
+        cur.pending_tickets().len() <= tickets_before,
+        "the batch must not keep waiting on the evicted row's own tickets"
+    );
+    // a second eviction of the same row is refused
+    assert!(eng.decode_evict_row(&mut cur, 1).is_none());
+
+    // the survivor finishes on the batch path
+    let done = loop {
+        match eng.decode_poll_batch(&mut cur).expect("poll") {
+            BatchProgress::Done(d) => break d,
+            BatchProgress::Pending => eng.decode_block_batch(&mut cur),
+        }
+    };
+    assert_eq!(done.len(), 1);
+    assert_eq!(done[0].logits, reference[0], "survivor diverged after eviction");
+    assert_eq!(done[0].kv.pos, 1);
+
+    // the evicted row finishes solo on its carved-out barrier
+    let logits1 = loop {
+        match eng.decode_poll(&mut kv1, &mut solo).expect("solo poll") {
+            DecodeProgress::Done(l) => break l,
+            DecodeProgress::Pending => eng.decode_block(&mut solo),
+        }
+    };
+    assert_eq!(logits1, reference[1], "evicted row diverged from sequential");
+    assert_eq!(kv1.pos, 1);
+
+    // no leaked pins anywhere (the pin ledger is balanced per row)
+    let cache = eng.residency.cache_handle();
+    let c = cache.lock().unwrap();
+    assert_eq!(c.hi.pinned_count(), 0, "leaked hi-pool pins");
+    assert_eq!(c.lo.pinned_count(), 0, "leaked lo-pool pins");
+}
+
+/// Aborting a suspended batch releases every remaining row's pins.
+#[test]
+fn batch_abort_releases_all_pins() {
+    let name = "abort";
+    let dir = synth_dir(name);
+    let slow = HardwareConfig { load_bw: 5e4, ..offload_hw() };
+    let mut eng = mk_engine(name, &dir, slow, 0);
+    let items: Vec<BatchItem> = (0..4)
+        .map(|r| BatchItem { seq: None, token: stream(r, 0), kv: KvState::new(&eng.cfg) })
+        .collect();
+    let mut cur = eng.decode_begin_batch(items).expect("begin");
+    let progress = eng.decode_poll_batch(&mut cur).expect("poll");
+    assert!(matches!(progress, BatchProgress::Pending));
+    eng.decode_abort_batch(cur);
+    let cache = eng.residency.cache_handle();
+    let c = cache.lock().unwrap();
+    assert_eq!(c.hi.pinned_count(), 0, "abort leaked hi-pool pins");
+    assert_eq!(c.lo.pinned_count(), 0, "abort leaked lo-pool pins");
+}

@@ -2,11 +2,14 @@
 //! (one load task per shared miss, both sequences resume), per-sequence
 //! prefetch-generation scoping (one sequence's token advance must not
 //! invalidate another's queued prefetch), on-demand promotion of queued
-//! prefetches, ticket wakeups, and RAII session retirement.
+//! prefetches, ticket wakeups, RAII session retirement, and the batched
+//! scheduler's merged acquire (exactly one load per unique cache-miss
+//! expert; dedup accounting covers every in-batch duplicate).
 //!
 //! These tests synthesize a tiny expert store on disk, so they run — and
 //! gate CI — without the AOT artifacts the engine tests need.
 
+use std::collections::BTreeMap;
 use std::path::Path;
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
@@ -17,7 +20,9 @@ use hobbit::loader::scorer::Class;
 use hobbit::memory::{LinkModel, ThrottledCopier};
 use hobbit::model::ExpertStore;
 use hobbit::predictor::Predictor;
-use hobbit::residency::ExpertResidency;
+use hobbit::prop_assert;
+use hobbit::residency::{ExpertResidency, MergedUse};
+use hobbit::util::proptest_mini::{check_cfg, Config};
 use hobbit::{ExpertKey, Precision};
 
 fn tiny_cfg() -> ModelConfig {
@@ -245,6 +250,150 @@ fn ondemand_join_promotes_queued_prefetch_to_priority_lane() {
     resid.release(blocker, Pool::Hi);
     drop(sa);
     drop(sb);
+}
+
+#[test]
+fn merged_acquire_issues_single_load_per_unique_miss() {
+    // deterministic two-row union on a cold cache: rows share (0,1) in Hi,
+    // row 1 additionally wants (0,2) in Lo -> exactly 2 transfers
+    let cfg = tiny_cfg();
+    let (resid, copier) = mk_residency(&cfg, 8, 8, 1e9, "mergebasic");
+    let shared = ExpertKey::new(0, 1);
+    let solo = ExpertKey::new(0, 2);
+    let demands = vec![
+        MergedUse {
+            key: shared,
+            class: Class::Hi,
+            gatew: vec![0.6, 0.7],
+            rows: vec![0, 1],
+            seqs: vec![None, None],
+        },
+        MergedUse {
+            key: solo,
+            class: Class::Lo,
+            gatew: vec![0.0, 0.3],
+            rows: vec![1],
+            seqs: vec![None],
+        },
+    ];
+    let (uses, waits) = resid.acquire_merged(0, demands, &[None, None]);
+    assert_eq!(uses.len(), 2);
+    assert_eq!(waits.len(), 2, "one ticket per unique cache-miss (expert, pool)");
+    resid.wait(&waits);
+    drain(&resid);
+    assert_eq!(copier.transfers(), 2, "in-batch duplicate must not move extra bytes");
+    let st = resid.loader_stats();
+    assert_eq!(st.merged_acquires, 1);
+    assert_eq!(st.merged_unique, 2);
+    assert_eq!(st.merged_demands, 3);
+    // 3 on-demand demands reached the wait-set; the duplicate is a dedup hit
+    assert_eq!(st.dedup_total, 3);
+    assert_eq!(st.dedup_hits, 1);
+    // pins are per demanding row: shared carries 2, solo carries 1
+    resid.release(shared, Pool::Hi);
+    resid.release(shared, Pool::Hi);
+    resid.release(solo, Pool::Lo);
+    let cache = resid.cache_handle();
+    let c = cache.lock().unwrap();
+    assert_eq!(c.hi.pinned_count() + c.lo.pinned_count(), 0);
+}
+
+#[test]
+fn prop_merged_acquire_dedup_accounts_for_every_duplicate() {
+    // For random routing unions across a batch: exactly one load task per
+    // unique cache-miss (expert, pool), and dedup_hits/dedup_total account
+    // for every in-batch duplicate.
+    check_cfg(
+        "merged acquire dedup accounting",
+        Config { cases: 16, seed: 0xB47C_4ED },
+        |rng| {
+            let cfg = tiny_cfg();
+            let name = format!("mergeprop{}", rng.below(1 << 30));
+            let (resid, copier) = mk_residency(&cfg, 16, 16, 1e9, &name);
+            let batch = 2 + rng.below(7); // 2..=8 rows
+            let e = cfg.n_experts as usize;
+            // rows route top-k-style picks over random layers/experts
+            let mut union: BTreeMap<(u32, u32, bool), (Vec<usize>, Vec<f32>)> =
+                BTreeMap::new();
+            for row in 0..batch {
+                let layer = rng.below(cfg.n_layers as usize) as u32;
+                for _ in 0..cfg.top_k {
+                    let expert = rng.below(e) as u32;
+                    // precision class by expert parity: a key never appears
+                    // in both pools, so the Lo-request-upgraded-by-Hi-copy
+                    // path cannot race the loader thread mid-acquire (the
+                    // counts below stay exact)
+                    let hi = expert % 2 == 0;
+                    let ent = union
+                        .entry((layer, expert, hi))
+                        .or_insert_with(|| (Vec::new(), vec![0.0; batch]));
+                    if !ent.0.contains(&row) {
+                        ent.0.push(row);
+                        ent.1[row] = 0.5;
+                    }
+                }
+            }
+            let demands: Vec<MergedUse> = union
+                .into_iter()
+                .map(|((layer, expert, hi), (rows, gatew))| MergedUse {
+                    key: ExpertKey::new(layer, expert),
+                    class: if hi { Class::Hi } else { Class::Lo },
+                    gatew,
+                    seqs: vec![None; rows.len()],
+                    rows,
+                })
+                .collect();
+            let unique = demands.len() as u64;
+            let total: u64 = demands.iter().map(|d| d.rows.len() as u64).sum();
+            let seqs: Vec<Option<u64>> = vec![None; batch];
+            let releases: Vec<(ExpertKey, Class, usize)> =
+                demands.iter().map(|d| (d.key, d.class, d.rows.len())).collect();
+            let (uses, waits) = resid.acquire_merged(0, demands, &seqs);
+            prop_assert!(uses.len() as u64 == unique);
+            // cold cache: every unique (expert, pool) is a miss -> one task
+            prop_assert!(
+                waits.len() as u64 == unique,
+                "{} tickets for {unique} unique misses",
+                waits.len()
+            );
+            resid.wait(&waits);
+            drain(&resid);
+            prop_assert!(
+                copier.transfers() as u64 == unique,
+                "{} transfers for {unique} unique misses",
+                copier.transfers()
+            );
+            let st = resid.loader_stats();
+            prop_assert!(st.merged_unique == unique);
+            prop_assert!(st.merged_demands == total);
+            // every demand reached the wait-set; every duplicate is a join
+            prop_assert!(
+                st.dedup_total == total,
+                "dedup_total {} != demands {total}",
+                st.dedup_total
+            );
+            prop_assert!(
+                st.dedup_hits == total - unique,
+                "dedup_hits {} != duplicates {}",
+                st.dedup_hits,
+                total - unique
+            );
+            // release one pin per demanding row: the ledger balances
+            for (key, class, m) in releases {
+                let pool = if class == Class::Hi { Pool::Hi } else { Pool::Lo };
+                for _ in 0..m {
+                    resid.release(key, pool);
+                }
+            }
+            let cache = resid.cache_handle();
+            let c = cache.lock().unwrap();
+            prop_assert!(
+                c.hi.pinned_count() + c.lo.pinned_count() == 0,
+                "leaked pins after balanced release"
+            );
+            Ok(())
+        },
+    );
 }
 
 #[test]
