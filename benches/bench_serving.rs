@@ -4,15 +4,27 @@
 //! transfers). Reports aggregate decode tok/s for both and the
 //! overlap-ratio metric (fraction of load stall hidden by other
 //! sequences' compute) for the interleaved run.
+//!
+//! Also runs the **late long-prompt admission** scenario (artifact-free,
+//! on the reference executor + synthesized model): live sequences decode
+//! steadily while a 300-token prompt is admitted, blocking vs chunked.
+//! Blocking admission inserts the whole prefill into every live
+//! sequence's inter-token gap; the chunked `PrefillCursor` bounds that
+//! gap by ~one chunk's work. The p50/p99/max inter-token latencies of
+//! the live sequences during the admission window quantify it (the DES
+//! mirror is `sim::des::simulate_admission`).
 
 use std::path::PathBuf;
 use std::time::Instant;
 
 use hobbit::baselines;
-use hobbit::config::HardwareConfig;
+use hobbit::config::{HardwareConfig, PolicyConfig};
 use hobbit::coordinator::{Coordinator, Request, SchedulerMode};
-use hobbit::engine::Engine;
+use hobbit::engine::{Engine, EngineOptions, KvState, PrefillProgress};
 use hobbit::metrics::RunReport;
+use hobbit::model::synth::{tiny_model_config, write_synth_model};
+use hobbit::tokenizer::BOS;
+use hobbit::util::stats::summarize;
 
 /// Slow link + tiny cache: the regime where expert loading dominates
 /// decode (Fig 3a) and blocking FCFS leaves the engine idle.
@@ -58,13 +70,163 @@ fn run(mode: SchedulerMode) -> (f64, usize, RunReport) {
     (wall, tokens, coord.report.clone())
 }
 
+// ---------------------------------------------------------------------
+// Late long-prompt admission (artifact-free, reference executor)
+// ---------------------------------------------------------------------
+
+const ADMIT_LIVE: usize = 3;
+const ADMIT_PROMPT: usize = 300;
+
+/// Offload-bound reference engine over a synthesized model: ~3 ms per
+/// f32 expert on the link, a cache smaller than the working set, dynamic
+/// loading off (logits stay bit-identical whichever admission path runs).
+fn admission_engine(tag: &str) -> Engine {
+    let dir = std::env::temp_dir().join(format!("hobbit_bench_admit_{tag}"));
+    let mut cfg = tiny_model_config("bench-admit");
+    cfg.max_seq = 512;
+    write_synth_model(&dir, &cfg, 0xBE7C4).expect("synth model");
+    let hw = HardwareConfig {
+        name: "bench-admit".into(),
+        load_bw: 2e6,
+        load_latency: 0.0,
+        hi_cache_experts: 6,
+        lo_cache_experts: 6,
+        cpu_assist: false,
+        cpu_expert_time: 0.0,
+    };
+    let policy =
+        PolicyConfig { dynamic_loading: false, prefetch_depth: 2, ..PolicyConfig::default() };
+    Engine::new_reference(&dir, cfg, EngineOptions::new(hw, policy))
+        .expect("reference engine")
+}
+
+fn admit_token(row: usize, step: usize) -> u32 {
+    (65 + ((row * 31 + step * 7) % 190)) as u32
+}
+
+/// Decode one token on every live sequence; records each sequence's
+/// inter-token gap into `gaps` when `record` is set.
+#[allow(clippy::too_many_arguments)]
+fn decode_round(
+    eng: &mut Engine,
+    kvs: &mut [KvState],
+    steps: &mut [usize],
+    last: &mut [Instant],
+    gaps: &mut Vec<f64>,
+    record: bool,
+) {
+    for r in 0..kvs.len() {
+        let t = admit_token(r, steps[r]);
+        let _ = eng.decode_step(&mut kvs[r], t).expect("decode");
+        steps[r] += 1;
+        if record {
+            gaps.push(last[r].elapsed().as_secs_f64());
+        }
+        last[r] = Instant::now();
+    }
+}
+
+/// Run the scenario once: warm live decode, admit a 300-token prompt
+/// (blocking or chunked), keep decoding. Returns the live sequences'
+/// inter-token gaps over the admission window (+2 settle rounds) and the
+/// admission's wall latency.
+fn late_admission(chunked: bool) -> (Vec<f64>, f64) {
+    let mut eng = admission_engine(if chunked { "chunked" } else { "blocking" });
+    let mut kvs: Vec<KvState> = Vec::with_capacity(ADMIT_LIVE);
+    for r in 0..ADMIT_LIVE {
+        let mut kv = eng.new_sequence();
+        eng.prefill(&mut kv, &[BOS, 70 + r as u32]).expect("live prefill");
+        kvs.push(kv);
+    }
+    let mut steps = vec![0usize; ADMIT_LIVE];
+    let mut last = vec![Instant::now(); ADMIT_LIVE];
+    let mut gaps: Vec<f64> = Vec::new();
+    // steady state before the admission
+    for _ in 0..3 {
+        decode_round(&mut eng, &mut kvs, &mut steps, &mut last, &mut gaps, false);
+    }
+
+    let long_prompt: Vec<u32> = (0..ADMIT_PROMPT as u32)
+        .map(|i| 65 + (i * 13) % 190)
+        .collect();
+    let mut kv_new = eng.new_sequence();
+    let t_admit = Instant::now();
+    if chunked {
+        // the interleaved scheduler's shape: one chunk per slice, live
+        // decode between slices, park-resolution when loads lag
+        let mut cur = eng.prefill_begin(&kv_new, &long_prompt).expect("prefill begin");
+        loop {
+            match eng.prefill_poll(&mut kv_new, &mut cur).expect("prefill poll") {
+                PrefillProgress::Done(_) => break,
+                PrefillProgress::Chunk { .. } | PrefillProgress::Pending => {
+                    if steps[0] < 400 {
+                        decode_round(
+                            &mut eng, &mut kvs, &mut steps, &mut last, &mut gaps, true,
+                        );
+                    } else {
+                        // KV safety valve (never hit in practice)
+                        eng.prefill_block(&mut cur);
+                    }
+                }
+            }
+        }
+    } else {
+        // blocking admission: live decode sits idle for the whole prefill
+        let _ = eng.prefill(&mut kv_new, &long_prompt).expect("prefill");
+    }
+    let admit_wall = t_admit.elapsed().as_secs_f64();
+    // settle rounds: the blocking variant's stall lands in these gaps
+    for _ in 0..2 {
+        decode_round(&mut eng, &mut kvs, &mut steps, &mut last, &mut gaps, true);
+    }
+    (gaps, admit_wall)
+}
+
+fn admission_scenario() {
+    println!(
+        "== late long-prompt admission: {ADMIT_LIVE} live seqs, {ADMIT_PROMPT}-token \
+         prompt, reference executor ==\n"
+    );
+    let (bg, bw) = late_admission(false);
+    let (cg, cw) = late_admission(true);
+    let bs = summarize(&bg);
+    let cs = summarize(&cg);
+    println!(
+        "blocking  admission {bw:>6.2}s | live inter-token p50 {:>7.1}ms  p99 {:>7.1}ms  \
+         max {:>7.1}ms",
+        bs.p50 * 1e3,
+        bs.p99 * 1e3,
+        bs.max * 1e3,
+    );
+    println!(
+        "chunked   admission {cw:>6.2}s | live inter-token p50 {:>7.1}ms  p99 {:>7.1}ms  \
+         max {:>7.1}ms",
+        cs.p50 * 1e3,
+        cs.p99 * 1e3,
+        cs.max * 1e3,
+    );
+    if cs.max > 0.0 {
+        println!(
+            "\ndecode stall bound during admission: {:.1}x lower p99, {:.1}x lower max \
+             (O(full prefill) -> O(one chunk))",
+            bs.p99 / cs.p99.max(1e-9),
+            bs.max / cs.max.max(1e-9),
+        );
+    }
+    if bs.max <= cs.max {
+        eprintln!("WARNING: chunked admission did not reduce the worst live-seq gap");
+    }
+}
+
 fn main() {
+    admission_scenario();
+
     if !PathBuf::from("artifacts/mixtral-tiny/manifest.json").exists() {
-        eprintln!("artifacts not built; skipping serving bench");
+        eprintln!("\nartifacts not built; skipping the FCFS-vs-interleaved serving bench");
         return;
     }
     println!(
-        "== serving bench: {} requests x {} tokens, offload-bound ({} GB/s, hi cache {}) ==\n",
+        "\n== serving bench: {} requests x {} tokens, offload-bound ({} GB/s, hi cache {}) ==\n",
         PROMPTS.len(),
         MAX_NEW,
         offload_hw().load_bw / 1e9,
@@ -97,6 +259,19 @@ fn main() {
         "cross-sequence load dedup: {} of {} on-demand requests joined an in-flight transfer",
         rep.loader.dedup_hits, rep.loader.dedup_total,
     );
+    println!(
+        "chunked prefill: {} slices, {:.1}ms stall, chunks 128/16/1 = {}/{}/{}",
+        sch.prefill_slices,
+        sch.prefill_stall.as_secs_f64() * 1e3,
+        sch.prefill_chunks[0],
+        sch.prefill_chunks[1],
+        sch.prefill_chunks[2],
+    );
+    // the full serving section (the report's "serving" key), prefill-slice
+    // stats included — what `hobbit serve --report` emits
+    if let Some(serving) = rep.to_json().get("serving") {
+        println!("serving: {}", serving.to_string());
+    }
     if il_tps <= fcfs_tps {
         eprintln!("WARNING: interleaved did not beat FCFS on this host/config");
     }

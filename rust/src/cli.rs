@@ -69,13 +69,18 @@ COMMANDS:
               --hardware rtx4090|orin|rtx4090+cpu  --max-conns N
               --interleaved (continuous serving: overlap one sequence's
               expert loads with other sequences' decode)  --max-active N
-              --policy rr|sjf (interleaved fairness: round-robin, or
-              shortest-remaining-tokens first; cache-policy names still
-              work here too, e.g. --policy lru)
+              --policy rr|sjf|token-budget (interleaved fairness:
+              round-robin, shortest-remaining-tokens first, or rr with a
+              per-round decode-token quantum set by --token-budget N;
+              cache-policy names still work here too, e.g. --policy lru)
               --max-batch N (true batched decode: gang up to N runnable
               sequences into one launch, padded to the nearest compiled
               width in {2,4,8}, with ONE merged expert acquire per layer;
               requires --interleaved, N <= 8)
+              --no-chunked-prefill (run each admission's whole prefill
+              blocking instead of slicing it into 128/16/1 chunks that
+              interleave with live decode)  --prefill-first (give prefill
+              slices the engine before decode work each round)
   generate    run one generation from the CLI
               --model M --artifacts DIR --prompt TEXT --max-new N --temp T
               --hardware H --no-dynamic --no-prefetch --policy P

@@ -30,6 +30,23 @@
 //! (rr: submission order; sjf: shortest-remaining first); sequences beyond
 //! N, and rows *evicted* from a group because their expert loads blocked
 //! while the rest was runnable, continue on the solo interleaved path.
+//!
+//! **Chunked-prefill interleaving** (default in interleaved mode): an
+//! admitted request enters the live set as a *Prefilling* sequence — a
+//! suspendable [`PrefillCursor`] whose `PREFILL_CHUNKS`-sized chunks are
+//! first-class schedulable slices alongside decode, under the same
+//! rr/sjf/token-budget policies. A prefill chunk parks at its
+//! ensure-resident barrier instead of blocking, so live solo cursors and
+//! batched-decode groups keep stepping while the chunk's experts stream
+//! in, and the next chunk's layer-0 loads are kicked across each chunk
+//! boundary — a long prompt's admission no longer inflates other users'
+//! inter-token latency beyond ~one chunk's work. The
+//! [`Coordinator::prefill_first`] knob flips prefill/decode priority
+//! (default: decode first); [`Coordinator::chunked_prefill`] = false
+//! restores the pre-chunking blocking admission for A/B runs. Prefill
+//! errors — on either admission path — fail only their own request
+//! ([`Coordinator::take_failures`]); the scheduler loop keeps serving
+//! everyone else.
 
 use std::collections::VecDeque;
 use std::time::{Duration, Instant};
@@ -38,6 +55,7 @@ use anyhow::Result;
 
 use crate::engine::{
     BatchCursor, BatchItem, BatchProgress, DecodeCursor, DecodeProgress, Engine, KvState,
+    PrefillCursor, PrefillProgress, PREFILL_CHUNKS,
 };
 use crate::metrics::{RequestMetrics, RunReport, SchedulerStats};
 use crate::residency::{SequenceSession, Ticket};
@@ -91,6 +109,11 @@ pub enum SchedPolicy {
     /// with the fewest remaining tokens; stalled sequences overlap their
     /// loads underneath it
     Sjf,
+    /// round-robin at token granularity: each round a sequence may
+    /// complete up to [`Coordinator::token_budget`] decode tokens before
+    /// the turn passes on (a configurable fairness quantum; budget 1 is
+    /// strict per-token round-robin)
+    TokenBudget,
 }
 
 impl SchedPolicy {
@@ -98,6 +121,7 @@ impl SchedPolicy {
         match s {
             "rr" | "round-robin" => Some(SchedPolicy::RoundRobin),
             "sjf" | "shortest-job-first" => Some(SchedPolicy::Sjf),
+            "token-budget" | "tb" => Some(SchedPolicy::TokenBudget),
             _ => None,
         }
     }
@@ -127,9 +151,13 @@ struct ActiveSeq {
     /// or abort alike)
     session: SequenceSession,
     kv: KvState,
-    /// logits of the last completed step (next sample input)
+    /// logits of the last completed step (next sample input); empty while
+    /// the sequence is still prefilling
     logits: Vec<f32>,
     generated: Vec<u32>,
+    /// in-flight chunked prefill (the *Prefilling* state): the sequence is
+    /// not decodable until this completes
+    prefill: Option<PrefillCursor>,
     /// in-flight decode token, if suspended or mid-poll
     cursor: Option<DecodeCursor>,
     /// true while this sequence rides the live batched group (its KV state
@@ -142,6 +170,9 @@ struct ActiveSeq {
     enqueued: Instant,
     queue_wait: Duration,
     prompt_tokens: usize,
+    /// admission (prefill start) instant — chunked prefill's wall latency
+    /// runs from here to the cursor's completion
+    prefill_started: Instant,
     prefill_time: Duration,
     prefill_load_wait: Duration,
     /// decode stall (barrier reach → clear), hidden or not
@@ -156,6 +187,18 @@ enum Advance {
     Progressed,
     Stalled,
     Finished(GenerationResult),
+}
+
+/// Outcome of one prefill slice ([`Coordinator::step_prefill_one`]).
+enum PrefillOutcome {
+    /// a chunk boundary was crossed, or the prefill completed (the
+    /// sequence is decodable next round)
+    Progressed,
+    /// parked at the chunk's ensure-resident barrier
+    Stalled,
+    /// the prefill errored: the sequence was removed and its request
+    /// failed individually (see [`Coordinator::take_failures`])
+    Failed,
 }
 
 /// Outcome of the between-token lifecycle step ([`Coordinator::next_token`]).
@@ -181,6 +224,23 @@ pub struct Coordinator {
     /// time-multiplexing only; capped at the largest compiled launch
     /// width, `runtime::MAX_DECODE_BATCH`)
     pub max_batch: usize,
+    /// chunked-prefill interleaving (interleaved mode only, default on):
+    /// admission is non-blocking and prefill chunks are schedulable slices
+    /// alongside decode. false = run the whole prefill at admission,
+    /// blocking the scheduler (the pre-chunking behavior, kept for A/B
+    /// comparison — `serve --no-chunked-prefill`)
+    pub chunked_prefill: bool,
+    /// prefill/decode priority knob: true gives prefill slices the engine
+    /// before decode work each round (drain admissions fast, at the cost
+    /// of live sequences' inter-token latency); false (default) steps
+    /// decode first so admission never delays a runnable token
+    pub prefill_first: bool,
+    /// decode tokens one sequence may complete per round under
+    /// [`SchedPolicy::TokenBudget`] (>= 1)
+    pub token_budget: usize,
+    /// per-request failures (admission/prefill errors) awaiting
+    /// [`Self::take_failures`]
+    failed: Vec<(u64, String)>,
     queue: VecDeque<QueuedRequest>,
     active: Vec<ActiveSeq>,
     /// the in-flight batched decode step, if one is ganged up
@@ -200,6 +260,10 @@ impl Coordinator {
             sched_policy: SchedPolicy::RoundRobin,
             max_active: 4,
             max_batch: 1,
+            chunked_prefill: true,
+            prefill_first: false,
+            token_budget: 1,
+            failed: Vec::new(),
             queue: VecDeque::new(),
             active: Vec::new(),
             group: None,
@@ -246,6 +310,9 @@ impl Coordinator {
                     out.extend(self.step()?);
                 }
                 self.sync_report();
+                // per-request prefill failures are isolated, not fatal:
+                // they are absent from `out` (each was logged when it
+                // happened); callers collect them via `take_failures`
                 Ok(out)
             }
         }
@@ -324,9 +391,15 @@ impl Coordinator {
         if self.busy_since.is_none() && self.has_work() {
             self.busy_since = Some(Instant::now());
         }
-        self.admit_waiting()?;
+        self.admit_waiting();
         let mut out = Vec::new();
         let mut progressed = false;
+        // prefill-priority: admissions' chunks take the engine before any
+        // decode work this round (rr/token-budget sweep; under sjf the
+        // selection below handles it)
+        if self.prefill_first && self.sched_policy != SchedPolicy::Sjf {
+            progressed |= self.step_prefills()?;
+        }
         // batched decode: advance the in-flight group, then gang the next
         // one from the between-token sequences BEFORE the solo loops see
         // them (or the solo loops would consume every candidate)
@@ -335,26 +408,46 @@ impl Coordinator {
             progressed |= self.form_group(&mut out)?;
         }
         match self.sched_policy {
-            SchedPolicy::RoundRobin => {
+            SchedPolicy::RoundRobin | SchedPolicy::TokenBudget => {
+                // token-budget is rr with a configurable per-round token
+                // quantum: a sequence keeps the engine until it completes
+                // `budget` tokens or stalls. Plain rr IS budget 1 — one
+                // advance_one per turn with identical outcome handling
+                let budget = match self.sched_policy {
+                    SchedPolicy::TokenBudget => self.token_budget.max(1),
+                    _ => 1,
+                };
                 let mut i = 0;
                 while i < self.active.len() {
-                    if self.active[i].in_batch {
-                        // its token rides the batched group this round
+                    if self.active[i].in_batch || self.active[i].prefill.is_some() {
+                        // its token rides the batched group this round, or
+                        // the sequence is still prefilling (sliced in
+                        // step_prefills, not decodable yet)
                         i += 1;
                         continue;
                     }
-                    match self.advance_one(i)? {
-                        // finish() removed the sequence at i: do not advance i
-                        Advance::Finished(r) => {
-                            out.push(r);
-                            progressed = true;
-                        }
-                        Advance::Progressed => {
-                            progressed = true;
-                            i += 1;
-                        }
-                        Advance::Stalled => {
-                            i += 1;
+                    let mut tokens_done = 0usize;
+                    loop {
+                        match self.advance_one(i)? {
+                            // finish() removed the sequence at i: the
+                            // outer loop re-examines i, no increment
+                            Advance::Finished(r) => {
+                                out.push(r);
+                                progressed = true;
+                                break;
+                            }
+                            Advance::Progressed => {
+                                progressed = true;
+                                tokens_done += 1;
+                                if tokens_done >= budget {
+                                    i += 1;
+                                    break;
+                                }
+                            }
+                            Advance::Stalled => {
+                                i += 1;
+                                break;
+                            }
                         }
                     }
                 }
@@ -363,6 +456,9 @@ impl Coordinator {
                 // advance only the runnable sequence closest to completion;
                 // stalled sequences keep their loads in flight underneath.
                 // One unit per round keeps the serving event loop live.
+                // Prefilling sequences are first-class candidates: their
+                // remaining work counts the unprefilled prompt tokens, and
+                // winning the pick buys them one chunk slice.
                 let snapshot: Vec<(usize, bool)> = self
                     .active
                     .iter()
@@ -373,21 +469,51 @@ impl Coordinator {
                         // livelocks with every sequence "stalled".
                         // Group members are not solo-selectable at all.
                         let stalled = s.in_batch
+                            || s.prefill.as_ref().map(|c| c.is_blocked()).unwrap_or(false)
                             || s.cursor.as_ref().map(|c| c.is_blocked()).unwrap_or(false);
-                        (s.req.max_new_tokens.saturating_sub(s.generated.len()), stalled)
+                        let remaining = s.req.max_new_tokens.saturating_sub(s.generated.len())
+                            + s.prefill.as_ref().map(|c| c.remaining()).unwrap_or(0);
+                        (remaining, stalled)
                     })
                     .collect();
-                if let Some(i) = sjf_pick(&snapshot) {
-                    match self.advance_one(i)? {
-                        Advance::Finished(r) => {
-                            out.push(r);
-                            progressed = true;
+                // prefill-priority under sjf: a runnable prefill preempts
+                // the decode pick
+                let pick = if self.prefill_first {
+                    self.active
+                        .iter()
+                        .position(|s| {
+                            s.prefill.as_ref().map(|c| !c.is_blocked()).unwrap_or(false)
+                        })
+                        .or_else(|| sjf_pick(&snapshot))
+                } else {
+                    sjf_pick(&snapshot)
+                };
+                if let Some(i) = pick {
+                    if self.active[i].prefill.is_some() {
+                        match self.step_prefill_one(i)? {
+                            PrefillOutcome::Progressed | PrefillOutcome::Failed => {
+                                progressed = true;
+                            }
+                            PrefillOutcome::Stalled => {}
                         }
-                        Advance::Progressed => progressed = true,
-                        Advance::Stalled => {}
+                    } else {
+                        match self.advance_one(i)? {
+                            Advance::Finished(r) => {
+                                out.push(r);
+                                progressed = true;
+                            }
+                            Advance::Progressed => progressed = true,
+                            Advance::Stalled => {}
+                        }
                     }
                 }
             }
+        }
+        // decode-priority (the default): prefill slices run on whatever
+        // rounds remain after decode work — but they always run, so
+        // admission progresses whenever decode is stalled or idle
+        if !self.prefill_first && self.sched_policy != SchedPolicy::Sjf {
+            progressed |= self.step_prefills()?;
         }
         if !progressed && may_block {
             let t0 = Instant::now();
@@ -404,7 +530,11 @@ impl Coordinator {
                 // overlap, so block — the unhidden share of the load wait
                 let seq = &mut self.active[idx];
                 self.engine.set_active_sequence(Some(seq.session.id()));
-                self.engine.decode_block(seq.cursor.as_mut().unwrap());
+                if let Some(pf) = seq.prefill.as_mut() {
+                    self.engine.prefill_block(pf);
+                } else {
+                    self.engine.decode_block(seq.cursor.as_mut().unwrap());
+                }
                 self.sched.unhidden_stall += t0.elapsed();
             }
         }
@@ -437,7 +567,7 @@ impl Coordinator {
         let mut ids: Vec<(u64, usize)> = self
             .active
             .iter()
-            .filter(|s| !s.in_batch && s.cursor.is_none())
+            .filter(|s| !s.in_batch && s.cursor.is_none() && s.prefill.is_none())
             .map(|s| {
                 (s.session.id(), s.req.max_new_tokens.saturating_sub(s.generated.len()))
             })
@@ -580,7 +710,8 @@ impl Coordinator {
     /// progress next step (directly or by evicting the blocked rows).
     pub fn all_stalled(&self) -> bool {
         let solos_stalled = self.active.iter().filter(|s| !s.in_batch).all(|s| {
-            s.cursor.as_ref().map(|c| c.is_pending()).unwrap_or(false)
+            s.prefill.as_ref().map(|c| c.is_pending()).unwrap_or(false)
+                || s.cursor.as_ref().map(|c| c.is_pending()).unwrap_or(false)
         });
         let group_stalled = match &self.group {
             Some(g) => g.is_pending() && !g.any_row_runnable(),
@@ -599,6 +730,12 @@ impl Coordinator {
             .filter_map(|s| s.cursor.as_ref())
             .flat_map(|c| c.pending_tickets().iter().cloned())
             .collect();
+        tickets.extend(
+            self.active
+                .iter()
+                .filter_map(|s| s.prefill.as_ref())
+                .flat_map(|c| c.pending_tickets().iter().cloned()),
+        );
         if let Some(g) = &self.group {
             tickets.extend(g.pending_tickets().iter().cloned());
         }
@@ -627,7 +764,16 @@ impl Coordinator {
             self.engine.decode_abort_batch(cur);
         }
         let mut ids = Vec::with_capacity(self.active.len() + self.queue.len());
-        for mut seq in self.active.drain(..) {
+        for mut seq in std::mem::take(&mut self.active) {
+            if let Some(pf) = seq.prefill.take() {
+                // the aborted prefill's partial work still counts in the
+                // serving stats (same as the per-request error path), then
+                // the chunk barrier's pins drain exactly like batch
+                // eviction drains a row's
+                self.sched.prefill_stall += pf.load_wait;
+                self.fold_chunk_widths(pf.chunk_widths());
+                self.engine.prefill_abort(pf);
+            }
             if let Some(cur) = seq.cursor.take() {
                 self.engine.decode_abort(cur);
             }
@@ -646,15 +792,21 @@ impl Coordinator {
 
     fn first_stalled(&self) -> Option<usize> {
         (0..self.active.len()).find(|&j| {
-            self.active[j].cursor.as_ref().map(|c| c.is_pending()).unwrap_or(false)
+            let s = &self.active[j];
+            s.prefill.as_ref().map(|c| c.is_pending()).unwrap_or(false)
+                || s.cursor.as_ref().map(|c| c.is_pending()).unwrap_or(false)
         })
     }
 
-    /// Move queued requests into the live set (up to `max_active`),
-    /// running their prefill. Prefill is chunked compute-heavy work and
-    /// stays blocking; only decode interleaves (ROADMAP: chunked-prefill
-    /// interleaving).
-    fn admit_waiting(&mut self) -> Result<()> {
+    /// Move queued requests into the live set (up to `max_active`). With
+    /// [`Self::chunked_prefill`] (the default) admission is *non-blocking*:
+    /// the sequence enters the Prefilling state and its chunks become
+    /// schedulable slices ([`Self::step_prefills`]) — decode of live
+    /// sequences never stalls behind a long prompt. Without it, the whole
+    /// prefill runs here, blocking the round (the pre-chunking behavior).
+    /// Either way a prefill error fails only its own request (recorded for
+    /// [`Self::take_failures`]); the scheduler keeps running.
+    fn admit_waiting(&mut self) {
         while self.active.len() < self.max_active.max(1) && !self.queue.is_empty() {
             let q = self.queue.pop_front().unwrap();
             let queue_wait = q.enqueued.elapsed();
@@ -669,20 +821,34 @@ impl Coordinator {
             let compute0 = self.engine.compute_time();
             let wait0 = self.engine.load_wait;
             let t0 = Instant::now();
-            let logits = match self.engine.prefill(&mut kv, &prompt_tokens) {
-                Ok(l) => l,
-                Err(e) => {
-                    // session drops here, retiring its records
-                    self.engine.set_active_sequence(None);
-                    return Err(e);
+            let (prefill, logits, prefill_time) = if self.chunked_prefill {
+                let cursor = match self.engine.prefill_begin(&kv, &prompt_tokens) {
+                    Ok(c) => c,
+                    Err(e) => {
+                        // fail only this request; the session drops here,
+                        // retiring its records
+                        self.engine.set_active_sequence(None);
+                        self.fail_request(q.req.id, format!("{e:#}"));
+                        continue;
+                    }
+                };
+                (Some(cursor), Vec::new(), Duration::ZERO)
+            } else {
+                match self.engine.prefill(&mut kv, &prompt_tokens) {
+                    Ok(l) => (None, l, t0.elapsed()),
+                    Err(e) => {
+                        self.engine.set_active_sequence(None);
+                        self.fail_request(q.req.id, format!("{e:#}"));
+                        continue;
+                    }
                 }
             };
-            let prefill_time = t0.elapsed();
             self.active.push(ActiveSeq {
                 session,
                 kv,
                 logits,
                 generated: Vec::with_capacity(q.req.max_new_tokens),
+                prefill,
                 cursor: None,
                 in_batch: false,
                 // per-sequence stream: deterministic for a given request id
@@ -690,6 +856,7 @@ impl Coordinator {
                 enqueued: q.enqueued,
                 queue_wait,
                 prompt_tokens: prompt_tokens.len(),
+                prefill_started: t0,
                 prefill_time,
                 prefill_load_wait: self.engine.load_wait.saturating_sub(wait0),
                 load_wait: Duration::ZERO,
@@ -699,7 +866,117 @@ impl Coordinator {
                 req: q.req,
             });
         }
-        Ok(())
+    }
+
+    /// One prefill slice for every Prefilling sequence (the rr/token-budget
+    /// sweep; sjf picks a single one instead). Returns whether any slice
+    /// progressed.
+    fn step_prefills(&mut self) -> Result<bool> {
+        let mut progressed = false;
+        let mut i = 0;
+        while i < self.active.len() {
+            if self.active[i].prefill.is_none() {
+                i += 1;
+                continue;
+            }
+            match self.step_prefill_one(i)? {
+                PrefillOutcome::Progressed => {
+                    progressed = true;
+                    i += 1;
+                }
+                PrefillOutcome::Stalled => {
+                    i += 1;
+                }
+                PrefillOutcome::Failed => {
+                    // removed at i: do not advance i
+                    progressed = true;
+                }
+            }
+        }
+        Ok(progressed)
+    }
+
+    /// Advance sequence `i`'s prefill one slice: poll its cursor, which
+    /// runs at most one chunk (parking at the ensure-resident barrier, and
+    /// kicking the next chunk's layer-0 loads across the boundary). On
+    /// completion the sequence becomes decodable and the TTFT clock keeps
+    /// running from submission, as before. On error the sequence is
+    /// removed, its chunk pins drained, and the request failed
+    /// individually.
+    fn step_prefill_one(&mut self, i: usize) -> Result<PrefillOutcome> {
+        let seq_id = self.active[i].session.id();
+        let mut cursor = self.active[i].prefill.take().expect("sequence is prefilling");
+        self.engine.set_active_sequence(Some(seq_id));
+        let compute0 = self.engine.compute_time();
+        let progress = {
+            let seq = &mut self.active[i];
+            self.engine.prefill_poll(&mut seq.kv, &mut cursor)
+        };
+        let dt = self.engine.compute_time().saturating_sub(compute0);
+        self.active[i].compute += dt;
+        let progress = match progress {
+            Ok(p) => p,
+            Err(e) => {
+                // same contract as decode: drain the barrier's pins, then
+                // fail only this request — serving survives. Its partial
+                // work still counts in the serving stats (like abort_all)
+                self.sched.prefill_stall += cursor.load_wait;
+                self.fold_chunk_widths(cursor.chunk_widths());
+                self.engine.prefill_abort(cursor);
+                let seq = self.active.remove(i);
+                self.engine.set_active_sequence(None);
+                self.fail_request(seq.req.id, format!("{e:#}"));
+                return Ok(PrefillOutcome::Failed);
+            }
+        };
+        match progress {
+            PrefillProgress::Pending => {
+                self.active[i].prefill = Some(cursor);
+                Ok(PrefillOutcome::Stalled)
+            }
+            PrefillProgress::Chunk { .. } => {
+                self.sched.prefill_slices += 1;
+                self.active[i].prefill = Some(cursor);
+                Ok(PrefillOutcome::Progressed)
+            }
+            PrefillProgress::Done(logits) => {
+                self.sched.prefill_slices += 1;
+                self.sched.prefill_stall += cursor.load_wait;
+                self.fold_chunk_widths(cursor.chunk_widths());
+                let seq = &mut self.active[i];
+                seq.prefill_load_wait += cursor.load_wait;
+                seq.prefill_time = seq.prefill_started.elapsed();
+                seq.logits = logits;
+                seq.decode_started = Instant::now();
+                // cursor dropped: the sequence is decodable next round
+                Ok(PrefillOutcome::Progressed)
+            }
+        }
+    }
+
+    /// Fold a finished (or aborted) prefill's chunk widths into the
+    /// serving histogram, indexed parallel to `PREFILL_CHUNKS`.
+    fn fold_chunk_widths(&mut self, widths: &[usize]) {
+        for w in widths {
+            if let Some(slot) = PREFILL_CHUNKS.iter().position(|c| c == w) {
+                self.sched.prefill_chunks[slot] += 1;
+            }
+        }
+    }
+
+    /// Record a per-request prefill failure: logged once here, counted,
+    /// and queued for [`Self::take_failures`].
+    fn fail_request(&mut self, id: u64, msg: String) {
+        eprintln!("[coordinator] request {id} failed in prefill: {msg}");
+        self.sched.prefill_failures += 1;
+        self.failed.push((id, msg));
+    }
+
+    /// Per-request failures (admission/prefill errors) since the last
+    /// call. The serving front-end responds to each on its own channel;
+    /// one bad request no longer tears down serving for everyone.
+    pub fn take_failures(&mut self) -> Vec<(u64, String)> {
+        std::mem::take(&mut self.failed)
     }
 
     /// The between-token lifecycle, shared by the solo path and batch
@@ -839,6 +1116,11 @@ mod tests {
     fn sched_policy_names() {
         assert_eq!(SchedPolicy::from_name("rr"), Some(SchedPolicy::RoundRobin));
         assert_eq!(SchedPolicy::from_name("sjf"), Some(SchedPolicy::Sjf));
+        assert_eq!(
+            SchedPolicy::from_name("token-budget"),
+            Some(SchedPolicy::TokenBudget)
+        );
+        assert_eq!(SchedPolicy::from_name("tb"), Some(SchedPolicy::TokenBudget));
         assert_eq!(SchedPolicy::from_name("lru"), None);
     }
 }

@@ -76,6 +76,24 @@ use exec::{Exec, PjrtExec, RefExec};
 /// Prefill chunk sizes with compiled artifacts, largest first.
 pub const PREFILL_CHUNKS: [usize; 3] = [128, 16, 1];
 
+/// Largest [`PREFILL_CHUNKS`] width that fits `remaining` prompt tokens —
+/// the greedy split step every prefill path (blocking, chunked cursor,
+/// and the DES admission model) takes.
+pub fn next_prefill_chunk(remaining: usize) -> usize {
+    *PREFILL_CHUNKS.iter().find(|&&c| c <= remaining).unwrap_or(&1usize)
+}
+
+/// The full greedy 128/16/1 chunk schedule for a prompt.
+pub fn prefill_chunk_schedule(mut prompt_len: usize) -> Vec<usize> {
+    let mut out = Vec::new();
+    while prompt_len > 0 {
+        let c = next_prefill_chunk(prompt_len);
+        out.push(c);
+        prompt_len -= c;
+    }
+    out
+}
+
 pub struct EngineOptions {
     pub hardware: HardwareConfig,
     pub policy: PolicyConfig,
@@ -113,6 +131,19 @@ pub enum DecodeProgress {
     /// an ensure-resident barrier is waiting on in-flight expert loads
     Pending,
     /// token finished; next-token logits
+    Done(Vec<f32>),
+}
+
+/// Progress of a suspended chunked prefill ([`PrefillCursor`]).
+pub enum PrefillProgress {
+    /// the current chunk's ensure-resident barrier is waiting on loads
+    Pending,
+    /// a chunk boundary was crossed: `done` of `total` prompt tokens are
+    /// through every layer, and the next chunk's layer-0 expert loads were
+    /// kicked before returning (they stream while the scheduler runs other
+    /// sequences' decode). One `Chunk` per poll = one scheduler slice.
+    Chunk { done: usize, total: usize },
+    /// prefill finished; logits after the last prompt token
     Done(Vec<f32>),
 }
 
@@ -175,6 +206,102 @@ impl DecodeCursor {
             .as_ref()
             .map(|p| !p.satisfied && !p.waits.all_ready())
             .unwrap_or(false)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Chunked prefill
+// ---------------------------------------------------------------------
+
+/// One prefill chunk mid-flight: the layer cursor plus activations of a
+/// `PREFILL_CHUNKS`-wide slice of the prompt.
+struct ChunkState {
+    /// launch width (128, 16, or 1 — prefill chunks are never padded:
+    /// the greedy split always fills the chosen width exactly)
+    s: usize,
+    /// real tokens in this chunk (== `s`; kept for the head/KV commit)
+    real: usize,
+    /// next layer to execute (or the layer suspended in `pending`)
+    layer: usize,
+    /// current activations [s, d]
+    x: Vec<f32>,
+    /// KV position of the chunk's first token
+    pos: i32,
+    /// capture token-id base, reserved at chunk start
+    token_base: u64,
+    pending: Option<PendingLayer>,
+}
+
+/// Suspendable chunked prefill: the prompt advances one
+/// `PREFILL_CHUNKS`-sized chunk per scheduler slice, parking at each
+/// layer's ensure-resident barrier (`PrefillProgress::Pending`) instead of
+/// blocking — the scheduler steps live decode sequences while a chunk's
+/// experts stream in. Mirrors [`DecodeCursor`]; the blocking
+/// [`Engine::prefill`] stays as the FCFS batch-1 path.
+pub struct PrefillCursor {
+    tokens: Vec<u32>,
+    /// prompt tokens already through every layer (committed to KV)
+    done: usize,
+    /// the chunk mid-flight, if any
+    chunk: Option<ChunkState>,
+    /// widths of completed chunk launches, in execution order (the
+    /// scheduler's chunk histogram reads this at completion)
+    chunk_widths: Vec<usize>,
+    /// total stall attributed to this prefill (barrier reach → clear,
+    /// whether hidden by other sequences' compute or not)
+    pub load_wait: Duration,
+    finished: bool,
+}
+
+impl PrefillCursor {
+    /// Residency tickets the cursor is currently suspended on (empty when
+    /// runnable).
+    pub fn pending_tickets(&self) -> &[Ticket] {
+        match self.chunk.as_ref().and_then(|c| c.pending.as_ref()) {
+            Some(p) if !p.satisfied => p.waits.tickets(),
+            _ => &[],
+        }
+    }
+
+    /// True when suspended on unconsumed in-flight loads.
+    pub fn is_pending(&self) -> bool {
+        self.chunk
+            .as_ref()
+            .and_then(|c| c.pending.as_ref())
+            .map(|p| !p.satisfied)
+            .unwrap_or(false)
+    }
+
+    /// True when suspended AND at least one awaited load is still moving
+    /// (see [`DecodeCursor::is_blocked`] for why selecting schedulers need
+    /// this rather than `is_pending`).
+    pub fn is_blocked(&self) -> bool {
+        self.chunk
+            .as_ref()
+            .and_then(|c| c.pending.as_ref())
+            .map(|p| !p.satisfied && !p.waits.all_ready())
+            .unwrap_or(false)
+    }
+
+    /// Prompt tokens already through every layer.
+    pub fn prefilled(&self) -> usize {
+        self.done
+    }
+
+    /// Total prompt tokens this cursor is prefilling.
+    pub fn total(&self) -> usize {
+        self.tokens.len()
+    }
+
+    /// Prompt tokens not yet through every layer (SJF treats these as the
+    /// sequence's extra remaining work).
+    pub fn remaining(&self) -> usize {
+        self.tokens.len() - self.done
+    }
+
+    /// Widths of the chunks completed so far, in execution order.
+    pub fn chunk_widths(&self) -> &[usize] {
+        &self.chunk_widths
     }
 }
 
@@ -499,11 +626,7 @@ impl Engine {
         let mut i = 0usize;
         let mut logits = None;
         while i < tokens.len() {
-            let remaining = tokens.len() - i;
-            let chunk = *PREFILL_CHUNKS
-                .iter()
-                .find(|&&c| c <= remaining)
-                .unwrap_or(&1usize);
+            let chunk = next_prefill_chunk(tokens.len() - i);
             let is_last = i + chunk >= tokens.len();
             let out = self.forward_chunk(kv, &tokens[i..i + chunk], chunk, is_last)?;
             if is_last {
@@ -629,6 +752,191 @@ impl Engine {
             for (key, class, _gatew) in p.uses {
                 let (_prec, pool) = self.class_target(class);
                 self.residency.release(key, pool);
+            }
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Suspendable chunked prefill (the scheduler's admission unit of work)
+    // ------------------------------------------------------------------
+
+    /// Begin a chunked prefill of `tokens`: validation only — the first
+    /// chunk embeds lazily at the first poll, so admission itself costs
+    /// nothing (non-blocking admission in the interleaved scheduler).
+    pub fn prefill_begin(&mut self, kv: &KvState, tokens: &[u32]) -> Result<PrefillCursor> {
+        anyhow::ensure!(!tokens.is_empty(), "empty prompt");
+        anyhow::ensure!(tokens.len() <= kv.remaining(), "prompt exceeds KV capacity");
+        Ok(PrefillCursor {
+            tokens: tokens.to_vec(),
+            done: 0,
+            chunk: None,
+            chunk_widths: Vec::new(),
+            load_wait: Duration::ZERO,
+            finished: false,
+        })
+    }
+
+    /// Start the cursor's next chunk: greedy `PREFILL_CHUNKS` split (the
+    /// same split the blocking [`Engine::prefill`] takes, so the two paths
+    /// run identical launches), capture ids reserved up front.
+    fn prefill_chunk_begin(&mut self, kv: &KvState, cur: &PrefillCursor) -> ChunkState {
+        let s = next_prefill_chunk(cur.tokens.len() - cur.done);
+        let toks = &cur.tokens[cur.done..cur.done + s];
+        let token_base = self.token_counter;
+        self.token_counter += s as u64;
+        ChunkState {
+            s,
+            real: s,
+            layer: 0,
+            x: self.embed(toks, s),
+            pos: kv.pos as i32,
+            token_base,
+            pending: None,
+        }
+    }
+
+    /// Advance the prefill as far as one chunk boundary without blocking:
+    /// runs layers until the current chunk's barrier has loads in flight
+    /// (`Pending`), the chunk completes (`Chunk` — after kicking the next
+    /// chunk's layer-0 loads across the boundary so they stream during
+    /// other sequences' decode), or the whole prompt is through (`Done`).
+    /// One chunk per poll keeps live decode's inter-token latency bounded
+    /// by one chunk's work, not the whole admission.
+    pub fn prefill_poll(
+        &mut self,
+        kv: &mut KvState,
+        cur: &mut PrefillCursor,
+    ) -> Result<PrefillProgress> {
+        anyhow::ensure!(!cur.finished, "prefill cursor already finished");
+        let mut crossed = false;
+        loop {
+            if cur.chunk.is_none() {
+                let ch = self.prefill_chunk_begin(kv, cur);
+                cur.chunk = Some(ch);
+            }
+            let still_loading = {
+                let ch = cur.chunk.as_ref().unwrap();
+                match &ch.pending {
+                    Some(p) => !p.satisfied && !p.waits.all_ready(),
+                    None => false,
+                }
+            };
+            if still_loading {
+                return Ok(if crossed {
+                    PrefillProgress::Chunk { done: cur.done, total: cur.tokens.len() }
+                } else {
+                    PrefillProgress::Pending
+                });
+            }
+            if crossed && cur.chunk.as_ref().unwrap().pending.is_some() {
+                // the next chunk's layer-0 loads are issued (and may even
+                // be resident already): the slice ends at the boundary
+                // regardless, so decode gets the engine back. This branch
+                // is only reachable with an all-ready barrier (in-flight
+                // loads returned above), so resolve its stall clock NOW —
+                // the inter-slice scheduling gap is not load stall
+                let ch = cur.chunk.as_mut().unwrap();
+                if let Some(p) = ch.pending.as_mut() {
+                    if !p.satisfied {
+                        cur.load_wait += p.t0.elapsed();
+                        p.satisfied = true;
+                    }
+                }
+                return Ok(PrefillProgress::Chunk {
+                    done: cur.done,
+                    total: cur.tokens.len(),
+                });
+            }
+            // resolve the cleared barrier: execute the layer's experts
+            {
+                let ch = cur.chunk.as_mut().unwrap();
+                if let Some(p) = ch.pending.take() {
+                    // stall (reach → clear) was already accrued if the
+                    // barrier resolved earlier (boundary kick / block)
+                    if !p.satisfied {
+                        cur.load_wait += p.t0.elapsed();
+                    }
+                    let moe_out = self.layer_ffn(ch.s, &p.hn, p.uses, ch.token_base)?;
+                    for (xv, mv) in ch.x.iter_mut().zip(&moe_out) {
+                        *xv += mv;
+                    }
+                    ch.layer += 1;
+                }
+            }
+            if cur.chunk.as_ref().unwrap().layer == self.cfg.n_layers as usize {
+                // chunk complete: commit its tokens to the sequence
+                let ch = cur.chunk.take().unwrap();
+                kv.pos += ch.real;
+                cur.done += ch.real;
+                cur.chunk_widths.push(ch.s);
+                if cur.done == cur.tokens.len() {
+                    cur.finished = true;
+                    let logits = self.head(ch.s, ch.real, &ch.x)?;
+                    return Ok(PrefillProgress::Done(logits));
+                }
+                // loop once more: beginning the next chunk and running its
+                // layer 0 to the barrier is the cross-boundary prefetch kick
+                crossed = true;
+                continue;
+            }
+            // run the next layer of the current chunk up to its barrier
+            let ch = cur.chunk.as_mut().unwrap();
+            let li = ch.layer;
+            let li_u32 = li as u32;
+            let e = self.cfg.n_experts as usize;
+            let s = ch.s;
+            // width-1 remainder chunks take the decode path end to end
+            // (stacked gate + prefetch + observe), exactly like the
+            // blocking prefill's 1-wide chunks
+            let decode = s == 1;
+            ch.x = self.layer_attention(kv, li, s, &ch.x, ch.pos)?;
+            let (p_eff, probs, hn) = self.layer_gate(li, s, decode, &ch.x, None)?;
+            let per_expert =
+                self.layer_route(li_u32, s, ch.real, &probs[..s * e], &ch.x, ch.token_base);
+            if decode {
+                self.layer_plan_prefetch(li_u32, p_eff, &probs);
+                self.layer_observe(li_u32, &probs[..e]);
+            }
+            let (uses, waits) = self.layer_ensure_resident_chunk(li_u32, &per_expert);
+            ch.pending = Some(PendingLayer {
+                hn,
+                uses,
+                waits,
+                t0: Instant::now(),
+                satisfied: false,
+            });
+            // loop: an empty/already-complete wait set clears immediately
+        }
+    }
+
+    /// Block until the prefill cursor's outstanding loads complete (the
+    /// scheduler's nothing-else-runnable fallback). Blocked time is
+    /// unhidden stall, same contract as [`Engine::decode_block`].
+    pub fn prefill_block(&mut self, cur: &mut PrefillCursor) {
+        if let Some(ch) = &mut cur.chunk {
+            if let Some(p) = &mut ch.pending {
+                if !p.satisfied {
+                    let waited = self.residency.wait(&p.waits);
+                    // the cursor's stall clock stops when the barrier
+                    // clears (the next poll must not re-charge it)
+                    cur.load_wait += p.t0.elapsed();
+                    p.satisfied = true;
+                    self.load_wait += waited;
+                }
+            }
+        }
+    }
+
+    /// Abandon a suspended prefill (abort/error paths): release the cache
+    /// pins its chunk barrier holds, exactly like batch eviction drains a
+    /// row's pins. In-flight loads complete harmlessly.
+    pub fn prefill_abort(&self, cur: PrefillCursor) {
+        if let Some(ch) = cur.chunk {
+            if let Some(p) = ch.pending {
+                for (key, class, _gatew) in p.uses {
+                    let (_prec, pool) = self.class_target(class);
+                    self.residency.release(key, pool);
+                }
             }
         }
     }
@@ -1099,6 +1407,29 @@ impl Engine {
             })
             .collect();
         self.residency.acquire(li_u32, demands, self.current_seq)
+    }
+
+    /// The chunked-prefill ensure-resident barrier: like
+    /// [`Self::layer_ensure_resident`], but hands the residency facade the
+    /// per-expert row multiplicity (how many chunk rows routed each
+    /// expert) so the in-chunk load sharing is accounted — prefill's
+    /// near-all-expert union is the merged-acquire story at chunk width.
+    /// Class decisions and pins are identical to the blocking path (one
+    /// pin per expert, released by the chunk's FFN execution), so the two
+    /// prefill implementations stay bit-equivalent.
+    fn layer_ensure_resident_chunk(
+        &self,
+        li_u32: u32,
+        per_expert: &PerExpert,
+    ) -> (Vec<(ExpertKey, Class, Vec<f32>)>, TicketSet) {
+        let demands: Vec<(ExpertKey, Class, Vec<f32>, usize)> = per_expert
+            .iter()
+            .map(|(&expert, (class, gatew, _score))| {
+                let rows = gatew.iter().filter(|w| **w != 0.0).count().max(1);
+                (ExpertKey::new(li_u32, expert), *class, gatew.clone(), rows)
+            })
+            .collect();
+        self.residency.acquire_chunk(li_u32, demands, self.current_seq)
     }
 
     /// Execute the layer's resident experts and return the MoE output to

@@ -24,7 +24,18 @@ fn main() {
         return;
     }
     let cmd = argv.remove(0);
-    let args = Args::parse(argv, &["all", "no-dynamic", "no-prefetch", "report", "interleaved"]);
+    let args = Args::parse(
+        argv,
+        &[
+            "all",
+            "no-dynamic",
+            "no-prefetch",
+            "report",
+            "interleaved",
+            "no-chunked-prefill",
+            "prefill-first",
+        ],
+    );
     let r = match cmd.as_str() {
         "serve" => cmd_serve(&args),
         "generate" => cmd_generate(&args),
@@ -118,6 +129,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
         if let Some(p) = sched {
             coord.sched_policy = p;
         }
+        coord.chunked_prefill = !args.has("no-chunked-prefill");
+        coord.prefill_first = args.has("prefill-first");
+        coord.token_budget = args.get_usize("token-budget", coord.token_budget).max(1);
     }
     let addr = args.get_or("addr", "127.0.0.1:7077");
     let mut server = Server::bind(addr)?;
@@ -129,6 +143,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             (false, _) => "fcfs",
             (true, SchedPolicy::RoundRobin) => "interleaved/rr",
             (true, SchedPolicy::Sjf) => "interleaved/sjf",
+            (true, SchedPolicy::TokenBudget) => "interleaved/token-budget",
         },
         if coord.max_batch > 1 {
             format!(

@@ -35,6 +35,14 @@ pub struct LoaderStats {
     /// per-row expert demands folded into merged acquires (>= unique;
     /// the gap is the in-batch load sharing)
     pub merged_demands: u64,
+    /// merged ensure-resident barriers issued by chunked prefill: one per
+    /// (chunk, layer). The blocking FCFS prefill never bumps these.
+    pub prefill_merged_acquires: u64,
+    /// unique experts across all chunked-prefill merged acquires
+    pub prefill_merged_unique: u64,
+    /// per-row expert demands folded into chunked-prefill acquires
+    /// (>= unique; the gap is the in-chunk load sharing)
+    pub prefill_merged_demands: u64,
 }
 
 #[derive(Debug, Clone, Default)]
@@ -128,6 +136,18 @@ pub struct SchedulerStats {
     /// rows evicted from a batch because their loads blocked while the
     /// rest of the group was runnable
     pub batch_evictions: u64,
+    /// prefill slices executed by the chunked-admission path (one slice =
+    /// one chunk boundary crossed or prefill completed)
+    pub prefill_slices: u64,
+    /// Σ prefill-chunk stall (ensure-resident barrier reach → clear),
+    /// hidden by other sequences' decode or not
+    pub prefill_stall: Duration,
+    /// completed prefill chunks by launch width, parallel to
+    /// `engine::PREFILL_CHUNKS` ([128, 16, 1])
+    pub prefill_chunks: [u64; 3],
+    /// admissions whose prefill errored: the request failed individually
+    /// and serving kept running
+    pub prefill_failures: u64,
 }
 
 impl SchedulerStats {
@@ -193,6 +213,12 @@ impl SchedulerStats {
             ("batch_occupancy", num(self.batch_occupancy())),
             ("padded_slots", num(self.padded_slots as f64)),
             ("batch_evictions", num(self.batch_evictions as f64)),
+            ("prefill_slices", num(self.prefill_slices as f64)),
+            ("prefill_stall_ms", num(self.prefill_stall.as_secs_f64() * 1e3)),
+            ("prefill_chunks_128", num(self.prefill_chunks[0] as f64)),
+            ("prefill_chunks_16", num(self.prefill_chunks[1] as f64)),
+            ("prefill_chunks_1", num(self.prefill_chunks[2] as f64)),
+            ("prefill_failures", num(self.prefill_failures as f64)),
         ])
     }
 }
@@ -261,6 +287,18 @@ impl RunReport {
                     "merged_demands".into(),
                     num(self.loader.merged_demands as f64),
                 );
+                m.insert(
+                    "prefill_merged_acquires".into(),
+                    num(self.loader.prefill_merged_acquires as f64),
+                );
+                m.insert(
+                    "prefill_merged_unique".into(),
+                    num(self.loader.prefill_merged_unique as f64),
+                );
+                m.insert(
+                    "prefill_merged_demands".into(),
+                    num(self.loader.prefill_merged_demands as f64),
+                );
             }
             pairs.push(("serving", serving));
         }
@@ -300,6 +338,7 @@ mod tests {
             total_stall: Duration::from_secs_f64(1.0),
             unhidden_stall: Duration::from_secs_f64(0.25),
             busy_wall: Duration::from_secs(8),
+            ..Default::default()
         };
         assert!((s.aggregate_decode_tps() - 10.0).abs() < 1e-9);
         assert!((s.overlap_ratio() - 0.75).abs() < 1e-9);
@@ -355,6 +394,37 @@ mod tests {
         assert_eq!(serving.get("merged_demands").unwrap().as_f64().unwrap(), 31.0);
         // occupancy degenerates to 1.0 when batching never engaged
         assert_eq!(SchedulerStats::default().batch_occupancy(), 1.0);
+    }
+
+    #[test]
+    fn prefill_stats_surface_only_in_serving_section() {
+        let mut rep = RunReport::default();
+        rep.loader.prefill_merged_acquires = 9;
+        rep.loader.prefill_merged_unique = 18;
+        rep.loader.prefill_merged_demands = 40;
+        let fcfs = rep.to_json().to_string();
+        assert!(!fcfs.contains("prefill_merged"), "FCFS report grew prefill-merged keys");
+        assert!(!fcfs.contains("prefill_slices"), "FCFS report grew prefill-slice keys");
+        rep.scheduler = Some(SchedulerStats {
+            prefill_slices: 5,
+            prefill_stall: Duration::from_millis(12),
+            prefill_chunks: [2, 1, 4],
+            prefill_failures: 1,
+            ..Default::default()
+        });
+        let j = Json::parse(&rep.to_json().to_string()).unwrap();
+        let serving = j.get("serving").unwrap();
+        assert_eq!(serving.get("prefill_slices").unwrap().as_f64().unwrap(), 5.0);
+        assert!(
+            (serving.get("prefill_stall_ms").unwrap().as_f64().unwrap() - 12.0).abs() < 1e-6
+        );
+        assert_eq!(serving.get("prefill_chunks_128").unwrap().as_f64().unwrap(), 2.0);
+        assert_eq!(serving.get("prefill_chunks_16").unwrap().as_f64().unwrap(), 1.0);
+        assert_eq!(serving.get("prefill_chunks_1").unwrap().as_f64().unwrap(), 4.0);
+        assert_eq!(serving.get("prefill_failures").unwrap().as_f64().unwrap(), 1.0);
+        assert_eq!(serving.get("prefill_merged_acquires").unwrap().as_f64().unwrap(), 9.0);
+        assert_eq!(serving.get("prefill_merged_unique").unwrap().as_f64().unwrap(), 18.0);
+        assert_eq!(serving.get("prefill_merged_demands").unwrap().as_f64().unwrap(), 40.0);
     }
 
     #[test]

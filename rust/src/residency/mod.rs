@@ -501,6 +501,42 @@ impl ExpertResidency {
         (uses, waits)
     }
 
+    /// The chunked-prefill ensure-resident barrier: one call per
+    /// (chunk, layer). Each demand is a unique expert with the chunk's
+    /// per-row gate weights and its row multiplicity — the number of
+    /// chunk rows routed to it. Like [`Self::acquire`] it probes, pins
+    /// (once per expert: the chunk executes each expert once at chunk
+    /// width and releases exactly one pin), and submits-or-joins one load
+    /// per unique miss; additionally the in-chunk sharing is counted in
+    /// the prefill-merged ledger (`prefill_merged_*` in `LoaderStats`,
+    /// surfaced under the `"serving"` report key — the blocking
+    /// [`Self::acquire`] path never bumps these, so FCFS reports are
+    /// unchanged). Never waits.
+    pub fn acquire_chunk(
+        &self,
+        layer: u32,
+        demands: Vec<(ExpertKey, Class, Vec<f32>, usize)>,
+        seq: Option<u64>,
+    ) -> (Vec<ExpertUse>, TicketSet) {
+        {
+            let mut st = self.loader.stats.lock().unwrap();
+            st.prefill_merged_acquires += 1;
+            st.prefill_merged_unique +=
+                demands.iter().filter(|d| d.1 != Class::Skip).count() as u64;
+            st.prefill_merged_demands += demands
+                .iter()
+                .filter(|d| d.1 != Class::Skip)
+                .map(|d| d.3 as u64)
+                .sum::<u64>();
+        }
+        // delegate the probe/pin/load walk to `acquire` itself: the two
+        // prefill paths share one implementation by construction, so a fix
+        // to the pin/upgrade logic can never miss the chunked path
+        let plain: Vec<(ExpertKey, Class, Vec<f32>)> =
+            demands.into_iter().map(|(key, class, gatew, _rows)| (key, class, gatew)).collect();
+        self.acquire(layer, plain, seq)
+    }
+
     /// Submit a load — or join the in-flight one for the same
     /// (expert, pool). Returns None when the expert is already resident.
     fn request_load(

@@ -217,12 +217,35 @@ impl Server {
                     }
                 }
             }
+            // prefill errors fail only their own request: the scheduler
+            // logged and recorded them and kept running — answer each on
+            // its channel
+            for (id, msg) in coord.take_failures() {
+                if let Some(resp) = responders.remove(&id) {
+                    let _ = resp.send(err_json(&msg));
+                }
+            }
         }
         self.next_id = ids.load(Ordering::Relaxed);
         if max_conns.is_some() {
             let _ = acceptor.join();
         }
         coord.sync_report();
+        {
+            let sch = coord.scheduler_stats();
+            if sch.prefill_slices > 0 {
+                eprintln!(
+                    "[server] chunked prefill: {} slices ({} stall ms), chunks \
+                     128/16/1 = {}/{}/{}, {} failures",
+                    sch.prefill_slices,
+                    (sch.prefill_stall.as_secs_f64() * 1e3).round(),
+                    sch.prefill_chunks[0],
+                    sch.prefill_chunks[1],
+                    sch.prefill_chunks[2],
+                    sch.prefill_failures,
+                );
+            }
+        }
         if coord.max_batch > 1 {
             // batched-decode shutdown summary: did concurrency actually
             // become FLOP/load sharing? (occupancy > 1 says yes)

@@ -823,6 +823,105 @@ pub fn simulate_decode_batch(
     (pre, dec)
 }
 
+// ---------------------------------------------------------------------
+// Chunked-prefill admission (interleaved-prefill model)
+// ---------------------------------------------------------------------
+
+/// Greedy `engine::PREFILL_CHUNKS` split of a prompt — THE chunk
+/// schedule: delegates to the engine's own
+/// [`crate::engine::prefill_chunk_schedule`], so the DES model can never
+/// drift from what the blocking prefill and `PrefillCursor` execute.
+pub fn chunk_split(prompt_len: usize) -> Vec<usize> {
+    crate::engine::prefill_chunk_schedule(prompt_len)
+}
+
+/// One decode token's GPU occupancy at sim scale (attention + top-k
+/// experts across every layer; the link is not the bottleneck modeled
+/// here — the admission model isolates the *scheduling* stall).
+pub fn decode_token_time(hw: &SimHardware, model: &SimModel) -> f64 {
+    model.n_layers as f64 * (hw.attn_time + model.top_k as f64 * hw.expert_time)
+}
+
+/// GPU occupancy of one prefill chunk of width `c`.
+pub fn prefill_chunk_time(hw: &SimHardware, model: &SimModel, c: usize) -> f64 {
+    model.n_layers as f64 * c as f64 * hw.prefill_token_time
+}
+
+/// Inter-token latency of live decode sequences while a late long-prompt
+/// admission runs.
+#[derive(Debug, Clone, Default)]
+pub struct AdmissionResult {
+    /// worst inter-token gap any live sequence observed (s)
+    pub max_gap: f64,
+    /// p50 / p99 inter-token gap across all live-sequence tokens (s)
+    pub p50_gap: f64,
+    pub p99_gap: f64,
+    /// full prefill latency of the admitted prompt (s)
+    pub prefill_latency: f64,
+    /// chunks the prompt splits into
+    pub chunks: usize,
+}
+
+/// The interleaved-prefill admission model: `live` sequences decode
+/// round-robin on one serialized GPU; at a fixed point a `prompt_len`
+/// admission arrives. `chunked = false` models the blocking scheduler
+/// (the whole prefill runs before decode resumes — every live sequence
+/// eats an O(full prefill) gap); `chunked = true` models the
+/// `PrefillCursor` scheduler (one chunk per slice, a decode round between
+/// slices — the gap is bounded by ~one chunk + one round). Deterministic;
+/// mirrors `benches/bench_serving.rs`'s real-engine scenario at paper
+/// scale.
+pub fn simulate_admission(
+    hw: &SimHardware,
+    model: &SimModel,
+    live: usize,
+    prompt_len: usize,
+    decode_tokens_after: usize,
+    chunked: bool,
+) -> AdmissionResult {
+    assert!(live > 0, "admission model needs at least one live sequence");
+    let tau_d = decode_token_time(hw, model);
+    let chunks = chunk_split(prompt_len);
+    let prefill_latency: f64 =
+        chunks.iter().map(|&c| prefill_chunk_time(hw, model, c)).sum();
+
+    let mut t = 0.0f64;
+    let mut last = vec![0.0f64; live];
+    let mut gaps: Vec<f64> = Vec::new();
+    let decode_round = |t: &mut f64, last: &mut [f64], gaps: &mut Vec<f64>| {
+        for s in 0..live {
+            *t += tau_d;
+            gaps.push(*t - last[s]);
+            last[s] = *t;
+        }
+    };
+    // steady-state rounds before the admission
+    for _ in 0..3 {
+        decode_round(&mut t, &mut last, &mut gaps);
+    }
+    if chunked {
+        // one chunk per scheduler slice, a full decode round in between
+        for &c in &chunks {
+            t += prefill_chunk_time(hw, model, c);
+            decode_round(&mut t, &mut last, &mut gaps);
+        }
+    } else {
+        // blocking admission: decode resumes only after the whole prefill
+        t += prefill_latency;
+    }
+    for _ in 0..decode_tokens_after.max(1) {
+        decode_round(&mut t, &mut last, &mut gaps);
+    }
+    let summary = crate::util::stats::summarize(&gaps);
+    AdmissionResult {
+        max_gap: summary.max,
+        p50_gap: summary.p50,
+        p99_gap: summary.p99,
+        prefill_latency,
+        chunks: chunks.len(),
+    }
+}
+
 /// Prefill-only helper.
 pub fn simulate_prefill(
     sys: &SimSystem,
@@ -915,6 +1014,58 @@ mod tests {
         let d = run.decode_batch(&rows, 0.0);
         // short row drops out of the lockstep; long row finishes alone
         assert_eq!(d.tokens, 8 + 24);
+    }
+
+    #[test]
+    fn chunk_split_follows_prefill_chunks() {
+        assert_eq!(chunk_split(1), vec![1]);
+        assert_eq!(chunk_split(16), vec![16]);
+        assert_eq!(chunk_split(129), vec![128, 1]);
+        let mut want = vec![128, 128, 16, 16];
+        want.extend_from_slice(&[1; 12]);
+        assert_eq!(chunk_split(300), want);
+        assert_eq!(chunk_split(300).iter().sum::<usize>(), 300);
+    }
+
+    #[test]
+    fn chunked_admission_bounds_decode_stall_to_one_chunk() {
+        let hw = SimHardware::rtx4090();
+        let model = SimModel::mixtral_8x7b();
+        let live = 3usize;
+        let prompt = 1024usize; // 8 chunks of 128
+        let blocking = simulate_admission(&hw, &model, live, prompt, 4, false);
+        let chunked = simulate_admission(&hw, &model, live, prompt, 4, true);
+        assert_eq!(blocking.chunks, 8);
+        assert!(
+            (blocking.prefill_latency - chunked.prefill_latency).abs() < 1e-12,
+            "chunking must not change total prefill work"
+        );
+        // blocking: some live sequence's gap contains the WHOLE prefill
+        assert!(
+            blocking.max_gap >= blocking.prefill_latency,
+            "blocking max gap {} < prefill {}",
+            blocking.max_gap,
+            blocking.prefill_latency
+        );
+        // chunked: the stall bound drops from O(full prefill) to O(one
+        // chunk): worst gap <= one 128-chunk + one full decode round
+        let bound = prefill_chunk_time(&hw, &model, 128)
+            + live as f64 * decode_token_time(&hw, &model)
+            + 1e-12;
+        assert!(
+            chunked.max_gap <= bound,
+            "chunked max gap {} exceeds one-chunk bound {}",
+            chunked.max_gap,
+            bound
+        );
+        assert!(chunked.p99_gap <= bound);
+        // and it is far below the blocking stall on a long prompt
+        assert!(
+            blocking.max_gap > 4.0 * chunked.max_gap,
+            "blocking {} vs chunked {}",
+            blocking.max_gap,
+            chunked.max_gap
+        );
     }
 
     #[test]

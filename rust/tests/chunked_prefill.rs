@@ -1,0 +1,395 @@
+//! Chunked-prefill regression suite: slicing prefill must NEVER change
+//! the model's output.
+//!
+//! Everything here runs artifact-free on a synthesized model
+//! (`model::synth`) through the pure-Rust reference executor
+//! (`Engine::new_reference`), like `batched_decode.rs` — the loader,
+//! cache, predictor, residency facade, and both schedulers are the real
+//! ones, so this suite gates CI without the AOT compile step.
+//!
+//! Coverage:
+//! * engine-level: driving a `PrefillCursor` to completion (poll → park →
+//!   resume, the interleaved scheduler's shape) produces **bit-identical**
+//!   final logits AND identical KV state to the blocking `Engine::prefill`,
+//!   for prompt lengths {1, 16, 129, 300} spanning every `PREFILL_CHUNKS`
+//!   width mix, and stays identical through subsequent decode steps;
+//! * coordinator-level: interleaved serving with chunked admission (the
+//!   default), under rr, sjf and the new token-budget policy, completes
+//!   every request bit-identically to the FCFS batch-1 reference while
+//!   admitting a long prompt mid-flight — with prefill-slice stats in the
+//!   `"serving"` report section;
+//! * lifecycle: aborting a sequence mid-prefill-chunk (engine abort and
+//!   coordinator `abort_all` alike) releases every cache pin, and a
+//!   prefill error fails only its own request instead of tearing down the
+//!   scheduler loop.
+
+use std::path::{Path, PathBuf};
+
+use hobbit::config::{HardwareConfig, ModelConfig, PolicyConfig};
+use hobbit::coordinator::{Coordinator, Request, SchedPolicy};
+use hobbit::engine::{prefill_chunk_schedule, Engine, EngineOptions, PrefillProgress};
+use hobbit::model::synth::{tiny_model_config, write_synth_model};
+use hobbit::util::json::Json;
+
+const SEED: u64 = 0xCF1115;
+
+/// The tiny synth shape with a KV budget large enough for 300-token
+/// prompts (weights do not depend on `max_seq`).
+fn big_cfg(name: &str) -> ModelConfig {
+    let mut cfg = tiny_model_config(name);
+    cfg.max_seq = 512;
+    cfg
+}
+
+fn synth_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("hobbit_chunked_{name}"));
+    let cfg = big_cfg(name);
+    write_synth_model(&dir, &cfg, SEED).expect("synth model");
+    dir
+}
+
+fn fast_hw() -> HardwareConfig {
+    HardwareConfig {
+        name: "chunked-fast".into(),
+        load_bw: 1e9,
+        load_latency: 0.0,
+        hi_cache_experts: 12, // every expert of the tiny model fits
+        lo_cache_experts: 12,
+        cpu_assist: false,
+        cpu_expert_time: 0.0,
+    }
+}
+
+/// Offload-bound: small cache + a link slow enough (~3ms per f32 expert)
+/// that chunk barriers genuinely wait on the wire.
+fn offload_hw() -> HardwareConfig {
+    HardwareConfig {
+        name: "chunked-offload".into(),
+        load_bw: 2e6,
+        load_latency: 0.0,
+        hi_cache_experts: 6,
+        lo_cache_experts: 6,
+        cpu_assist: false,
+        cpu_expert_time: 0.0,
+    }
+}
+
+/// Dynamic loading off: every routed expert executes in high precision,
+/// so logits depend only on the token history — chunking, interleaving
+/// order, link speed, and cache pressure must not change them.
+fn quality_policy(prefetch_depth: usize) -> PolicyConfig {
+    PolicyConfig { dynamic_loading: false, prefetch_depth, ..PolicyConfig::default() }
+}
+
+fn mk_engine(name: &str, dir: &Path, hw: HardwareConfig, prefetch: usize) -> Engine {
+    Engine::new_reference(dir, big_cfg(name), EngineOptions::new(hw, quality_policy(prefetch)))
+        .expect("reference engine")
+}
+
+fn prompt_tokens(len: usize) -> Vec<u32> {
+    (0..len as u32).map(|i| 65 + (i * 13) % 190).collect()
+}
+
+fn decode_stream(step: usize) -> u32 {
+    (65 + (step * 7) % 190) as u32
+}
+
+/// The greedy 128/16/1 split both prefill paths must take — the engine's
+/// own schedule helper (its literal values are pinned by
+/// `sim::des::tests::chunk_split_follows_prefill_chunks`).
+fn expected_chunks(len: usize) -> Vec<usize> {
+    prefill_chunk_schedule(len)
+}
+
+// ---------------------------------------------------------------------
+// Engine-level bit-equivalence
+// ---------------------------------------------------------------------
+
+#[test]
+fn chunked_prefill_matches_blocking_bitwise() {
+    for &plen in &[1usize, 16, 129, 300] {
+        let name = format!("eq{plen}");
+        let dir = synth_dir(&name);
+        let toks = prompt_tokens(plen);
+        let decode_steps = 3usize;
+
+        // blocking reference on a fast link
+        let mut eng_a = mk_engine(&name, &dir, fast_hw(), 2);
+        let mut kv_a = eng_a.new_sequence();
+        let logits_a = eng_a.prefill(&mut kv_a, &toks).expect("blocking prefill");
+        let decode_a: Vec<Vec<f32>> = (0..decode_steps)
+            .map(|j| eng_a.decode_step(&mut kv_a, decode_stream(j)).expect("decode"))
+            .collect();
+
+        // chunked under offload pressure, driven like the scheduler:
+        // poll; park at barriers; block only when nothing else is runnable
+        let mut eng_b = mk_engine(&name, &dir, offload_hw(), 2);
+        let mut kv_b = eng_b.new_sequence();
+        let mut cur = eng_b.prefill_begin(&kv_b, &toks).expect("prefill begin");
+        let mut slices = 0usize;
+        let logits_b = loop {
+            match eng_b.prefill_poll(&mut kv_b, &mut cur).expect("prefill poll") {
+                PrefillProgress::Done(l) => {
+                    slices += 1;
+                    break l;
+                }
+                PrefillProgress::Chunk { done, total } => {
+                    slices += 1;
+                    assert!(done < total, "Chunk after the last chunk");
+                    assert_eq!(total, plen);
+                    assert_eq!(done, cur.prefilled());
+                }
+                PrefillProgress::Pending => {
+                    assert!(cur.is_pending());
+                    eng_b.prefill_block(&mut cur);
+                }
+            }
+        };
+
+        assert_eq!(
+            logits_b, logits_a,
+            "prompt {plen}: chunked prefill logits diverged from blocking"
+        );
+        assert_eq!(kv_b.pos, kv_a.pos, "prompt {plen}: KV position diverged");
+        assert_eq!(kv_b.k, kv_a.k, "prompt {plen}: K cache diverged");
+        assert_eq!(kv_b.v, kv_a.v, "prompt {plen}: V cache diverged");
+
+        // one slice per chunk, widths following the greedy 128/16/1 split
+        let want = expected_chunks(plen);
+        assert_eq!(slices, want.len(), "prompt {plen}: one slice per chunk");
+        assert_eq!(cur.chunk_widths(), &want[..], "prompt {plen}: chunk widths");
+
+        // the prefill-class merged acquires happened: one per (chunk, layer)
+        let st = eng_b.residency.loader_stats();
+        let n_layers = big_cfg(&name).n_layers as u64;
+        assert_eq!(st.prefill_merged_acquires, want.len() as u64 * n_layers);
+        assert!(st.prefill_merged_demands >= st.prefill_merged_unique);
+        // the blocking path never bumps the prefill-merged ledger
+        assert_eq!(eng_a.residency.loader_stats().prefill_merged_acquires, 0);
+
+        // the KV state keeps decoding identically after a chunked prefill
+        for (j, want_logits) in decode_a.iter().enumerate() {
+            let got = eng_b.decode_step(&mut kv_b, decode_stream(j)).expect("decode");
+            assert_eq!(
+                &got, want_logits,
+                "prompt {plen}: decode step {j} diverged after chunked prefill"
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Coordinator-level equivalence with a long admission mid-flight
+// ---------------------------------------------------------------------
+
+const SHORT_PROMPTS: [&str; 3] = [
+    "alpha request one",
+    "bravo request two",
+    "charlie request three",
+];
+
+fn long_prompt_text() -> String {
+    // 299 bytes + BOS = 300 tokens: chunks 128/128/16/16/1x12
+    "x".repeat(299)
+}
+
+/// FCFS batch-1 ground truth on a fresh reference engine.
+fn reference_results(name: &str, dir: &Path, max_new: usize) -> Vec<Vec<u32>> {
+    let eng = mk_engine(name, dir, fast_hw(), 2);
+    let mut coord = Coordinator::new(eng);
+    let mut out = Vec::new();
+    for (i, p) in SHORT_PROMPTS.iter().enumerate() {
+        out.push(
+            coord
+                .generate(&Request::new(i as u64 + 1, *p, max_new))
+                .expect("generate")
+                .tokens,
+        );
+    }
+    out.push(
+        coord
+            .generate(&Request::new(99, long_prompt_text(), max_new))
+            .expect("generate long")
+            .tokens,
+    );
+    out
+}
+
+fn coordinator_equivalence(policy: SchedPolicy, token_budget: usize) {
+    let name = format!("coord{policy:?}{token_budget}").to_lowercase();
+    let dir = synth_dir(&name);
+    let max_new = 5usize;
+    let reference = reference_results(&name, &dir, max_new);
+
+    let eng = mk_engine(&name, &dir, offload_hw(), 2);
+    let mut coord = Coordinator::interleaved(eng);
+    coord.sched_policy = policy;
+    coord.token_budget = token_budget;
+    coord.max_active = 4;
+    assert!(coord.chunked_prefill, "chunked prefill is the interleaved default");
+    for (i, p) in SHORT_PROMPTS.iter().enumerate() {
+        coord.submit(Request::new(i as u64 + 1, *p, max_new));
+    }
+    // the late long-prompt admission rides alongside the live short ones
+    coord.submit(Request::new(99, long_prompt_text(), max_new));
+    let mut results = coord.drain().expect("drain");
+    assert!(coord.take_failures().is_empty(), "no request may fail");
+    assert_eq!(results.len(), SHORT_PROMPTS.len() + 1);
+    results.sort_by_key(|r| r.id);
+    for (r, want) in results.iter().zip(&reference) {
+        assert_eq!(
+            &r.tokens, want,
+            "request {}: chunked interleaved serving diverged from the FCFS reference",
+            r.id
+        );
+    }
+
+    // prefill really was sliced: at least one slice per chunk of the long
+    // prompt, and the 128/16/1 histogram saw every width
+    let sch = coord.scheduler_stats().clone();
+    assert!(
+        sch.prefill_slices >= 16,
+        "only {} prefill slices for a 300-token admission",
+        sch.prefill_slices
+    );
+    assert!(sch.prefill_chunks[0] >= 2, "no 128-wide chunks recorded");
+    assert!(sch.prefill_chunks[1] >= 2, "no 16-wide chunks recorded");
+    assert!(sch.prefill_chunks[2] >= 12, "no 1-wide chunks recorded");
+    assert_eq!(sch.prefill_failures, 0);
+
+    // ... and surfaced under the serving report key
+    coord.sync_report();
+    let j = Json::parse(&coord.report.to_json().to_string()).unwrap();
+    let serving = j.get("serving").expect("serving section");
+    assert!(serving.get("prefill_slices").unwrap().as_f64().unwrap() >= 16.0);
+    assert!(serving.get("prefill_stall_ms").unwrap().as_f64().unwrap() >= 0.0);
+    assert!(serving.get("prefill_chunks_128").unwrap().as_f64().unwrap() >= 2.0);
+    assert!(serving.get("prefill_merged_acquires").unwrap().as_f64().unwrap() > 0.0);
+}
+
+#[test]
+fn coordinator_rr_chunked_matches_reference() {
+    coordinator_equivalence(SchedPolicy::RoundRobin, 1);
+}
+
+#[test]
+fn coordinator_sjf_chunked_matches_reference() {
+    coordinator_equivalence(SchedPolicy::Sjf, 1);
+}
+
+#[test]
+fn coordinator_token_budget_chunked_matches_reference() {
+    coordinator_equivalence(SchedPolicy::TokenBudget, 2);
+}
+
+#[test]
+fn prefill_first_knob_matches_reference() {
+    let name = "prio";
+    let dir = synth_dir(name);
+    let max_new = 4usize;
+    let reference = reference_results(name, &dir, max_new);
+    let eng = mk_engine(name, &dir, offload_hw(), 2);
+    let mut coord = Coordinator::interleaved(eng);
+    coord.prefill_first = true;
+    for (i, p) in SHORT_PROMPTS.iter().enumerate() {
+        coord.submit(Request::new(i as u64 + 1, *p, max_new));
+    }
+    coord.submit(Request::new(99, long_prompt_text(), max_new));
+    let mut results = coord.drain().expect("drain");
+    results.sort_by_key(|r| r.id);
+    for (r, want) in results.iter().zip(&reference) {
+        assert_eq!(&r.tokens, want, "request {}: prefill-first diverged", r.id);
+    }
+}
+
+// ---------------------------------------------------------------------
+// Lifecycle: pin leaks and failure isolation
+// ---------------------------------------------------------------------
+
+/// Aborting mid-prefill-chunk (loads still on the link) releases every
+/// cache pin the chunk barrier held. Prefetch off so the pin ledger
+/// isolates the chunk-acquire accounting.
+#[test]
+fn aborting_mid_prefill_chunk_releases_pins() {
+    let name = "abort";
+    let dir = synth_dir(name);
+    // ~120ms per f32 expert: the first chunk's misses are mid-flight
+    let slow = HardwareConfig { load_bw: 5e4, ..offload_hw() };
+    let mut eng = mk_engine(name, &dir, slow, 0);
+    let mut kv = eng.new_sequence();
+    let mut cur = eng.prefill_begin(&kv, &prompt_tokens(16)).expect("begin");
+    let progress = eng.prefill_poll(&mut kv, &mut cur).expect("poll");
+    assert!(
+        matches!(progress, PrefillProgress::Pending),
+        "cold cache over a 120ms/expert link must suspend the chunk"
+    );
+    assert!(cur.is_pending() && cur.is_blocked());
+    assert!(!cur.pending_tickets().is_empty());
+    eng.prefill_abort(cur);
+    let cache = eng.residency.cache_handle();
+    let c = cache.lock().unwrap();
+    assert_eq!(c.hi.pinned_count(), 0, "abort leaked hi-pool pins");
+    assert_eq!(c.lo.pinned_count(), 0, "abort leaked lo-pool pins");
+}
+
+/// `Coordinator::abort_all` drains a sequence suspended mid-prefill-chunk
+/// exactly like batch eviction drains a row: no pin survives.
+#[test]
+fn coordinator_abort_all_drains_prefill_pins() {
+    let name = "abortall";
+    let dir = synth_dir(name);
+    let slow = HardwareConfig { load_bw: 5e4, ..offload_hw() };
+    let eng = mk_engine(name, &dir, slow, 0);
+    let mut coord = Coordinator::interleaved(eng);
+    coord.submit(Request::new(1, long_prompt_text(), 4));
+    // a few non-blocking rounds: admission + the first chunk's barrier
+    for _ in 0..3 {
+        let _ = coord.step_nonblocking().expect("step");
+    }
+    assert!(
+        !coord.pending_tickets().is_empty(),
+        "the prefill chunk should be parked on in-flight loads"
+    );
+    let ids = coord.abort_all();
+    assert_eq!(ids, vec![1]);
+    let cache = coord.engine.residency.cache_handle();
+    let c = cache.lock().unwrap();
+    assert_eq!(c.hi.pinned_count(), 0, "abort_all leaked hi-pool pins");
+    assert_eq!(c.lo.pinned_count(), 0, "abort_all leaked lo-pool pins");
+}
+
+/// A prefill error fails only its own request: the scheduler loop keeps
+/// running (drain returns Ok) and the failure is reported per-request for
+/// the serving front-end — on the chunked AND the blocking admission
+/// path. (A zero-capacity KV budget makes every prefill fail
+/// deterministically.)
+#[test]
+fn prefill_error_fails_only_that_request() {
+    for chunked in [true, false] {
+        let name = format!("fail{chunked}");
+        let dir = std::env::temp_dir().join(format!("hobbit_chunked_{name}"));
+        let mut cfg = tiny_model_config(&name);
+        cfg.max_seq = 0; // no KV budget: prefill must error, not panic
+        write_synth_model(&dir, &cfg, SEED).expect("synth model");
+        let eng =
+            Engine::new_reference(&dir, cfg, EngineOptions::new(fast_hw(), quality_policy(0)))
+                .expect("reference engine");
+        let mut coord = Coordinator::interleaved(eng);
+        coord.chunked_prefill = chunked;
+        coord.submit(Request::new(7, "doomed request", 2));
+        // the loop must survive the error instead of propagating it
+        let results = coord.drain().expect("drain survives a prefill error");
+        assert!(results.is_empty());
+        let failures = coord.take_failures();
+        assert_eq!(failures.len(), 1, "exactly one failed request (chunked={chunked})");
+        assert_eq!(failures[0].0, 7);
+        assert!(
+            failures[0].1.contains("KV capacity"),
+            "failure carries the prefill error: {}",
+            failures[0].1
+        );
+        assert_eq!(coord.scheduler_stats().prefill_failures, 1);
+        // failures drain exactly once
+        assert!(coord.take_failures().is_empty());
+    }
+}
