@@ -1,21 +1,133 @@
 //! Loader/memory-hierarchy bench: transfer engine rates, task queue
-//! round-trip latency, and the scheduler thread's on-demand vs prefetch
-//! lane behaviour under load (the Fig 6/9 machinery).
+//! round-trip latency, the scheduler's on-demand vs prefetch lane
+//! behaviour under load (the Fig 6/9 machinery) — and the
+//! **misprediction-penalty scenario**: an on-demand miss arriving just
+//! behind a wrong, already-started prefetch, monolithic (the paper's
+//! non-preemptible memcpy) vs the chunked preemptible pipeline.
+//!
+//! The misprediction scenario is artifact-free (synthesized expert
+//! store), so it runs everywhere; pipeline counters are printed under a
+//! `"serving"`-style side key — the FCFS `RunReport` JSON never carries
+//! them.
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
 use hobbit::cache::{CacheManager, Policy, Pool};
-use hobbit::config::ModelConfig;
+use hobbit::config::{IoConfig, ModelConfig};
 use hobbit::loader::{ExpertLoader, TaskKind};
 use hobbit::memory::{LinkModel, ThrottledCopier};
+use hobbit::model::synth::{tiny_store_config, write_synth_expert_store};
 use hobbit::model::ExpertStore;
 use hobbit::runtime::Manifest;
 use hobbit::util::benchkit::{bench, header};
+use hobbit::util::json::obj;
 use hobbit::{ExpertKey, Precision};
+
+// ---------------------------------------------------------------------
+// Misprediction-penalty scenario (artifact-free, synthesized store)
+// ---------------------------------------------------------------------
+
+fn synth_store(cfg: &ModelConfig, dir: &Path) -> Arc<ExpertStore> {
+    write_synth_expert_store(dir, cfg).expect("synth store");
+    Arc::new(ExpertStore::load(dir, cfg).unwrap())
+}
+
+struct Rig {
+    loader: ExpertLoader,
+    copier: Arc<ThrottledCopier>,
+}
+
+fn mk_rig(bw: f64, io: IoConfig, name: &str) -> Rig {
+    let cfg = tiny_store_config("bench-pipeline");
+    let dir = std::env::temp_dir().join(format!("hobbit_bench_pipeline_{name}"));
+    let store = synth_store(&cfg, &dir);
+    let cache = Arc::new(Mutex::new(CacheManager::new(
+        cfg.n_layers,
+        cfg.n_experts,
+        8,
+        cfg.bytes_for(Precision::F32),
+        8,
+        cfg.bytes_for(Precision::Q8),
+        Policy::Lru,
+        0.25,
+    )));
+    let copier = Arc::new(ThrottledCopier::new(LinkModel { bytes_per_s: bw, latency_s: 0.0 }));
+    let loader = ExpertLoader::start_with(store, cache, copier.clone(), io);
+    Rig { loader, copier }
+}
+
+/// One run: a wrong prefetch starts, the on-demand miss lands mid-flight;
+/// returns (miss time-to-ready, link drain wall time).
+fn mispredict_once(rig: &Rig, transfer: Duration) -> (Duration, Duration) {
+    let t_all = Instant::now();
+    let pf = rig
+        .loader
+        .submit(ExpertKey::new(0, 0), Precision::F32, Pool::Hi, TaskKind::Prefetch, 0)
+        .expect("prefetch");
+    // the miss arrives ~15% into the prefetch transfer
+    std::thread::sleep(transfer.mul_f64(0.15));
+    let t0 = Instant::now();
+    let od = rig
+        .loader
+        .submit(ExpertKey::new(1, 1), Precision::F32, Pool::Hi, TaskKind::OnDemand, 1)
+        .expect("on-demand");
+    rig.loader.wait(&[od]);
+    let wait = t0.elapsed();
+    rig.loader.wait(&[pf]);
+    (wait, t_all.elapsed())
+}
+
+fn misprediction_scenario() {
+    const BW: f64 = 1e5; // 4096-byte f32 record = ~41 ms on the link
+    let transfer = Duration::from_secs_f64(4096.0 / BW);
+    println!(
+        "== misprediction penalty: on-demand miss behind a just-started wrong prefetch =="
+    );
+    let mono = mk_rig(BW, IoConfig { lanes: 1, chunk_bytes: usize::MAX }, "mono");
+    let pipe = mk_rig(BW, IoConfig { lanes: 1, chunk_bytes: 1024 }, "pipe");
+    let (mono_wait, mono_drain) = mispredict_once(&mono, transfer);
+    let (pipe_wait, pipe_drain) = mispredict_once(&pipe, transfer);
+    let chunk_t = 1024.0 / BW;
+    println!(
+        "monolithic (non-preemptible)  miss ready in {:>6.1} ms   drain {:>6.1} ms",
+        mono_wait.as_secs_f64() * 1e3,
+        mono_drain.as_secs_f64() * 1e3,
+    );
+    println!(
+        "chunked pipeline (1024 B)     miss ready in {:>6.1} ms   drain {:>6.1} ms",
+        pipe_wait.as_secs_f64() * 1e3,
+        pipe_drain.as_secs_f64() * 1e3,
+    );
+    let mono_stall = (mono_wait.as_secs_f64() - transfer.as_secs_f64()).max(1e-9);
+    let pipe_stall = (pipe_wait.as_secs_f64() - transfer.as_secs_f64()).max(1e-9);
+    println!(
+        "stall behind the prefetch: {:.1} ms -> {:.1} ms ({:.1}x lower; one-chunk bound {:.1} ms)",
+        mono_stall * 1e3,
+        pipe_stall * 1e3,
+        mono_stall / pipe_stall,
+        chunk_t * 1e3,
+    );
+    println!(
+        "bytes moved: monolithic {} / pipeline {} (bandwidth conserved)",
+        mono.copier.bytes_moved(),
+        pipe.copier.bytes_moved(),
+    );
+    // pipeline counters under the "serving"-style side key (the FCFS
+    // RunReport JSON never carries these)
+    let st = pipe.loader.stats.lock().unwrap().clone();
+    println!("{}", obj(vec![("serving", st.pipeline_json())]).to_string());
+    if pipe_stall * 4.0 > mono_stall {
+        eprintln!("WARNING: chunked pipeline did not cut the misprediction stall >= 4x");
+    }
+    println!();
+}
 
 fn main() {
     header();
+
+    misprediction_scenario();
 
     // raw throttled-copy rates at the modeled links
     for (label, bw) in [("16 GB/s", 16e9), ("1.5 GB/s", 1.5e9)] {
@@ -40,7 +152,7 @@ fn main() {
     let store =
         Arc::new(ExpertStore::load(&root.join("weights/mixtral-tiny"), &cfg).unwrap());
 
-    // loader round-trip: submit -> scheduler thread -> commit -> wait
+    // loader round-trip: submit -> lane thread -> commit -> wait
     let cache = Arc::new(Mutex::new(CacheManager::new(
         cfg.n_layers,
         cfg.n_experts,

@@ -267,6 +267,15 @@ fn main() {
         sch.prefill_chunks[1],
         sch.prefill_chunks[2],
     );
+    println!(
+        "transfer pipeline: {} preemptions, {} in-flight promotions, {} no-slot drops, \
+         time-to-ready ondemand {:.1}ms / prefetch {:.1}ms",
+        rep.loader.preemptions,
+        rep.loader.inflight_promotions,
+        rep.loader.noslot_drops,
+        rep.loader.mean_ondemand_ready_ms(),
+        rep.loader.mean_prefetch_ready_ms(),
+    );
     // the full serving section (the report's "serving" key), prefill-slice
     // stats included — what `hobbit serve --report` emits
     if let Some(serving) = rep.to_json().get("serving") {

@@ -69,9 +69,11 @@ COMMANDS:
               --hardware rtx4090|orin|rtx4090+cpu  --max-conns N
               --interleaved (continuous serving: overlap one sequence's
               expert loads with other sequences' decode)  --max-active N
-              --policy rr|sjf|token-budget (interleaved fairness:
-              round-robin, shortest-remaining-tokens first, or rr with a
-              per-round decode-token quantum set by --token-budget N;
+              --policy rr|sjf|token-budget|deadline (interleaved fairness:
+              round-robin, shortest-remaining-tokens first, rr with a
+              per-round decode-token quantum set by --token-budget N, or
+              TTFT-deadline-aware prefill priority with the budget set by
+              --ttft-deadline-ms N [500];
               cache-policy names still work here too, e.g. --policy lru)
               --max-batch N (true batched decode: gang up to N runnable
               sequences into one launch, padded to the nearest compiled
@@ -81,6 +83,10 @@ COMMANDS:
               blocking instead of slicing it into 128/16/1 chunks that
               interleave with live decode)  --prefill-first (give prefill
               slices the engine before decode work each round)
+              --io-lanes N (parallel expert-transfer lanes splitting the
+              link bandwidth by weighted fair share [2])
+              --io-chunk-bytes N (transfer preemption granularity: a
+              prefetch yields to on-demand work between chunks [262144])
   generate    run one generation from the CLI
               --model M --artifacts DIR --prompt TEXT --max-new N --temp T
               --hardware H --no-dynamic --no-prefetch --policy P

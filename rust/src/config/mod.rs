@@ -144,6 +144,50 @@ impl HardwareConfig {
     }
 }
 
+/// Transfer-pipeline knobs: how the expert loader drives the link.
+///
+/// The loader executes each transfer as a sequence of `chunk_bytes`-sized
+/// chunks with a preemption checkpoint between chunks (a prefetch yields
+/// to pending on-demand work there), across `lanes` parallel lanes that
+/// split the link's `bytes_per_s` by weighted fair share (total bandwidth
+/// is conserved — see `memory::LinkArbiter`). `hobbit serve/generate`
+/// expose these as `--io-lanes` / `--io-chunk-bytes`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct IoConfig {
+    /// parallel transfer lanes sharing the link (>= 1)
+    pub lanes: usize,
+    /// preemption granularity: bytes copied between checkpoints (>= 1)
+    pub chunk_bytes: usize,
+}
+
+impl Default for IoConfig {
+    /// The chunked pipeline: 2 lanes, 256 KiB chunks — an on-demand miss
+    /// behind a mispredicted in-flight prefetch waits at most one chunk
+    /// instead of the whole expert (Fig 9's penalty, removed).
+    fn default() -> Self {
+        Self { lanes: 2, chunk_bytes: 256 * 1024 }
+    }
+}
+
+impl IoConfig {
+    /// One lane: transfers serialize exactly like the pre-pipeline loader
+    /// (chunking still bounds how long the lane is non-preemptible).
+    /// The compat default of `ExpertLoader::start`/`ExpertResidency::new`.
+    pub fn single_lane() -> Self {
+        Self { lanes: 1, ..Self::default() }
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.lanes == 0 {
+            return Err("io lanes must be >= 1".into());
+        }
+        if self.chunk_bytes == 0 {
+            return Err("io chunk bytes must be >= 1".into());
+        }
+        Ok(())
+    }
+}
+
 /// HOBBIT policy knobs (paper defaults in parentheses).
 #[derive(Debug, Clone)]
 pub struct PolicyConfig {
@@ -264,6 +308,17 @@ mod tests {
         assert_eq!(p.t1, 0.5);
         assert_eq!(p.prefetch_depth, 3);
         assert_eq!(p.w_lru, PolicyConfig::default().w_lru);
+    }
+
+    #[test]
+    fn io_config_defaults_and_validation() {
+        let io = IoConfig::default();
+        assert_eq!(io.lanes, 2);
+        assert_eq!(io.chunk_bytes, 256 * 1024);
+        io.validate().unwrap();
+        assert_eq!(IoConfig::single_lane().lanes, 1);
+        assert!(IoConfig { lanes: 0, chunk_bytes: 1 }.validate().is_err());
+        assert!(IoConfig { lanes: 1, chunk_bytes: 0 }.validate().is_err());
     }
 
     #[test]

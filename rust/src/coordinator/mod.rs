@@ -114,6 +114,14 @@ pub enum SchedPolicy {
     /// the turn passes on (a configurable fairness quantum; budget 1 is
     /// strict per-token round-robin)
     TokenBudget,
+    /// TTFT-deadline-aware (SLO) fairness: decode-first round-robin —
+    /// until a Prefilling sequence burns most of its
+    /// [`Coordinator::ttft_deadline`] budget, at which point prefill
+    /// slices preempt decode (earliest admission first, i.e. EDF under a
+    /// uniform deadline) until the at-risk admission produces its first
+    /// token. Live decode pays at most the prefill-chunk bound PR 4
+    /// established, and only when an SLO is actually at risk.
+    Deadline,
 }
 
 impl SchedPolicy {
@@ -122,9 +130,21 @@ impl SchedPolicy {
             "rr" | "round-robin" => Some(SchedPolicy::RoundRobin),
             "sjf" | "shortest-job-first" => Some(SchedPolicy::Sjf),
             "token-budget" | "tb" => Some(SchedPolicy::TokenBudget),
+            "deadline" | "edf" => Some(SchedPolicy::Deadline),
             _ => None,
         }
     }
+}
+
+/// Deadline-policy urgency over (time-since-submit, is-prefilling)
+/// snapshots: true when any Prefilling sequence has burned 75% or more of
+/// the uniform TTFT budget — prefill slices then preempt decode. The 25%
+/// lead leaves room for the slices themselves (a reactive check at 100%
+/// would only fire after the SLO was already missed).
+pub(crate) fn ttft_deadline_urgent(seqs: &[(Duration, bool)], deadline: Duration) -> bool {
+    seqs.iter().any(|&(waited, prefilling)| {
+        prefilling && waited.as_secs_f64() * 4.0 >= deadline.as_secs_f64() * 3.0
+    })
 }
 
 /// SJF selection over (remaining_tokens, stalled) snapshots: the runnable
@@ -238,6 +258,10 @@ pub struct Coordinator {
     /// decode tokens one sequence may complete per round under
     /// [`SchedPolicy::TokenBudget`] (>= 1)
     pub token_budget: usize,
+    /// uniform TTFT budget under [`SchedPolicy::Deadline`]: once a
+    /// Prefilling sequence has waited 75% of this since submission, its
+    /// prefill slices preempt decode (`--ttft-deadline-ms`)
+    pub ttft_deadline: Duration,
     /// per-request failures (admission/prefill errors) awaiting
     /// [`Self::take_failures`]
     failed: Vec<(u64, String)>,
@@ -263,6 +287,7 @@ impl Coordinator {
             chunked_prefill: true,
             prefill_first: false,
             token_budget: 1,
+            ttft_deadline: Duration::from_millis(500),
             failed: Vec::new(),
             queue: VecDeque::new(),
             active: Vec::new(),
@@ -396,8 +421,12 @@ impl Coordinator {
         let mut progressed = false;
         // prefill-priority: admissions' chunks take the engine before any
         // decode work this round (rr/token-budget sweep; under sjf the
-        // selection below handles it)
-        if self.prefill_first && self.sched_policy != SchedPolicy::Sjf {
+        // selection below handles it). The deadline policy flips to
+        // prefill-first dynamically, exactly while an admission's TTFT
+        // budget is at risk.
+        let prefill_priority = self.prefill_first
+            || (self.sched_policy == SchedPolicy::Deadline && self.deadline_urgent());
+        if prefill_priority && self.sched_policy != SchedPolicy::Sjf {
             progressed |= self.step_prefills()?;
         }
         // batched decode: advance the in-flight group, then gang the next
@@ -408,7 +437,7 @@ impl Coordinator {
             progressed |= self.form_group(&mut out)?;
         }
         match self.sched_policy {
-            SchedPolicy::RoundRobin | SchedPolicy::TokenBudget => {
+            SchedPolicy::RoundRobin | SchedPolicy::TokenBudget | SchedPolicy::Deadline => {
                 // token-budget is rr with a configurable per-round token
                 // quantum: a sequence keeps the engine until it completes
                 // `budget` tokens or stalls. Plain rr IS budget 1 — one
@@ -512,7 +541,7 @@ impl Coordinator {
         // decode-priority (the default): prefill slices run on whatever
         // rounds remain after decode work — but they always run, so
         // admission progresses whenever decode is stalled or idle
-        if !self.prefill_first && self.sched_policy != SchedPolicy::Sjf {
+        if !prefill_priority && self.sched_policy != SchedPolicy::Sjf {
             progressed |= self.step_prefills()?;
         }
         if !progressed && may_block {
@@ -868,9 +897,22 @@ impl Coordinator {
         }
     }
 
+    /// True when any Prefilling sequence has burned most of its TTFT
+    /// budget (the deadline policy's preemption trigger).
+    fn deadline_urgent(&self) -> bool {
+        let snapshot: Vec<(Duration, bool)> = self
+            .active
+            .iter()
+            .map(|s| (s.enqueued.elapsed(), s.prefill.is_some()))
+            .collect();
+        ttft_deadline_urgent(&snapshot, self.ttft_deadline)
+    }
+
     /// One prefill slice for every Prefilling sequence (the rr/token-budget
-    /// sweep; sjf picks a single one instead). Returns whether any slice
-    /// progressed.
+    /// sweep; sjf picks a single one instead). Sweeps in live-set order,
+    /// which is admission order — under the uniform TTFT deadline that IS
+    /// earliest-deadline-first, so the deadline policy needs no re-sort.
+    /// Returns whether any slice progressed.
     fn step_prefills(&mut self) -> Result<bool> {
         let mut progressed = false;
         let mut i = 0;
@@ -1121,6 +1163,26 @@ mod tests {
             Some(SchedPolicy::TokenBudget)
         );
         assert_eq!(SchedPolicy::from_name("tb"), Some(SchedPolicy::TokenBudget));
+        assert_eq!(SchedPolicy::from_name("deadline"), Some(SchedPolicy::Deadline));
+        assert_eq!(SchedPolicy::from_name("edf"), Some(SchedPolicy::Deadline));
         assert_eq!(SchedPolicy::from_name("lru"), None);
+    }
+
+    #[test]
+    fn deadline_urgency_trips_at_three_quarters_of_budget() {
+        let d = Duration::from_millis(400);
+        // no prefilling sequences: never urgent, however long they waited
+        assert!(!ttft_deadline_urgent(&[(Duration::from_secs(9), false)], d));
+        // a fresh admission is not urgent
+        assert!(!ttft_deadline_urgent(&[(Duration::from_millis(100), true)], d));
+        // 75% of the budget burned: preempt decode now
+        assert!(ttft_deadline_urgent(&[(Duration::from_millis(300), true)], d));
+        assert!(ttft_deadline_urgent(&[(Duration::from_millis(900), true)], d));
+        // any single at-risk admission flips the round
+        assert!(ttft_deadline_urgent(
+            &[(Duration::from_millis(10), true), (Duration::from_millis(350), true)],
+            d
+        ));
+        assert!(!ttft_deadline_urgent(&[], d));
     }
 }

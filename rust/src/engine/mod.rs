@@ -61,7 +61,7 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, Result};
 
 use crate::cache::{CacheManager, Policy, Pool};
-use crate::config::{HardwareConfig, ModelConfig, PolicyConfig};
+use crate::config::{HardwareConfig, IoConfig, ModelConfig, PolicyConfig};
 use crate::loader::scorer::{self, Class};
 use crate::loader::GLOBAL_SCOPE;
 use crate::memory::{LinkModel, ThrottledCopier};
@@ -105,6 +105,9 @@ pub struct EngineOptions {
     /// instead of the interpret-mode Pallas ones (§Perf: ~11x on the CPU
     /// PJRT client; on a real TPU the Pallas kernels are the fast path)
     pub use_fast_ffn: bool,
+    /// transfer-pipeline knobs: lanes + preemption chunk size
+    /// (`--io-lanes` / `--io-chunk-bytes`; default 2 lanes, 256 KiB)
+    pub io: IoConfig,
 }
 
 impl EngineOptions {
@@ -115,6 +118,7 @@ impl EngineOptions {
             cache_policy: None,
             capture: Capture::none(),
             use_fast_ffn: true,
+            io: IoConfig::default(),
         }
     }
 }
@@ -524,6 +528,7 @@ impl Engine {
             opts.hardware.hi_cache_experts >= cfg.top_k,
             "hi cache must hold at least top_k experts"
         );
+        opts.io.validate().map_err(|e| anyhow!("io config: {e}"))?;
         let hi = opts.policy.hi_precision;
         let lo = opts.policy.lo_precision;
         let (_, emb) = nonexpert.get("emb")?;
@@ -555,8 +560,15 @@ impl Engine {
             opts.policy.dynamic_loading,
             cfg.n_layers,
         );
-        let residency =
-            ExpertResidency::new(store.clone(), cache, copier, predictor, hi, lo);
+        let residency = ExpertResidency::with_io(
+            store.clone(),
+            cache,
+            copier,
+            predictor,
+            hi,
+            lo,
+            opts.io.clone(),
+        );
 
         Ok(Self {
             exec,

@@ -1,41 +1,61 @@
 //! The Dynamic Expert Loader (§3.2, Fig 6): Expert Scorer → Task Queue →
-//! Expert Scheduler.
+//! Expert Scheduler — since the transfer pipeline, a **chunked,
+//! multi-lane, bandwidth-arbitrated** scheduler.
 //!
-//! The scheduler runs on its own thread and moves expert records from the
+//! `IoConfig::lanes` worker threads move expert records from the
 //! `ExpertStore` ("next-level memory") into reserved cache slots through
-//! the bandwidth-throttled link. Faithful to the paper's memcpy
-//! observation, a transfer in flight is never preempted: an on-demand task
-//! arriving behind a started prefetch waits for it — the misprediction
-//! penalty of Fig 9. On-demand tasks do jump ahead of *queued* (not yet
-//! started) prefetches — [`ExpertLoader::promote_to_ondemand`] moves a
-//! queued prefetch into the priority lane when an on-demand request joins
-//! it — and stale prefetches are dropped by generation.
+//! the shared link (`memory::LinkArbiter` splits `bytes_per_s` by
+//! weighted fair share, so total bandwidth is conserved and on-demand
+//! chunks outrank prefetch chunks 4:1). Each task executes as a sequence
+//! of `IoConfig::chunk_bytes` chunks with a **preemption checkpoint**
+//! between chunks:
+//!
+//! * a prefetch task *yields* mid-transfer when the on-demand lane is
+//!   non-empty — partial progress is kept (the resume offset travels with
+//!   the task, the slot stays `Loading`), and the task resumes from its
+//!   offset once the on-demand work drains;
+//! * [`promote_to_ondemand`](LoaderIo::promote_to_ondemand) now succeeds
+//!   for *started* prefetches too: the running task's remaining chunks are
+//!   re-prioritized to the on-demand weight at the next checkpoint.
+//!
+//! The paper modeled a started transfer as non-preemptible (§3.3, Fig 9),
+//! so a mispredicted prefetch in flight delayed every on-demand miss
+//! behind it by up to a full expert transfer; chunking turns that penalty
+//! into O(one chunk). A *chunk* is still non-preemptible (one DMA call).
 //!
 //! Prefetch generations are **scoped**: each live sequence bumps its own
 //! entry in the [`GenTable`] (scope = sequence id; scope 0 is the global
 //! batch-1 stream), so one sequence's token advance no longer invalidates
 //! other sequences' queued prefetches. A retired scope is marked
 //! `u64::MAX`, which makes every queued prefetch of that sequence stale;
-//! the worker garbage-collects retired entries when its prefetch lane
-//! drains.
+//! the workers garbage-collect retired entries when the prefetch lane
+//! drains. Dropping a stale *preempted* prefetch aborts its reservation,
+//! so a partially filled slot can never leak as `Loading` forever (and is
+//! never committed).
 //!
-//! Completion can be consumed three ways: blocking ([`ExpertLoader::wait`]),
-//! polling ([`ExpertLoader::try_wait`]), or pushed ([`ExpertLoader::on_complete`]
-//! per-task callbacks). The residency facade (`residency::ExpertResidency`)
-//! is the intended client of the push path: it registers a *consuming*
-//! callback per task so the done-set stays bounded without anyone calling
-//! `wait`.
+//! Completion carries a [`LoadOutcome`]: `Fulfilled` (bytes committed, or
+//! already resident/incoming), `NoSlot` (every candidate slot pinned or
+//! mid-load — nothing was copied, the expert is NOT resident; counted in
+//! `LoaderStats::noslot_drops`), or `Stale` (dropped prefetch). It can be
+//! consumed three ways: blocking ([`LoaderIo::wait`]), polling
+//! ([`LoaderIo::try_wait`]), or pushed ([`LoaderIo::on_complete`] /
+//! [`LoaderIo::on_complete_consume_outcome`] per-task callbacks). The
+//! residency facade is the intended client of the push path: it registers
+//! a *consuming* outcome callback per task so the done-set stays bounded,
+//! and re-acquires on `NoSlot` instead of letting ticket waiters resume
+//! believing the expert resident.
 
 pub mod scorer;
 
-use std::collections::{HashMap, HashSet};
+use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::cache::{CacheManager, Pool};
-use crate::memory::ThrottledCopier;
+use crate::config::IoConfig;
+use crate::memory::{ThrottledCopier, ONDEMAND_WEIGHT, PREFETCH_WEIGHT};
 use crate::metrics::LoaderStats;
 use crate::model::ExpertStore;
 use crate::{ExpertKey, Precision};
@@ -47,14 +67,38 @@ pub enum TaskKind {
     Prefetch,
 }
 
+/// How a load task completed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LoadOutcome {
+    /// bytes committed into the cache, or the expert was already
+    /// resident/incoming when the task ran
+    Fulfilled,
+    /// every candidate slot was pinned or mid-load: nothing was copied and
+    /// the expert is NOT resident — waiters must re-acquire or bypass
+    NoSlot,
+    /// dropped as a stale prefetch (generation bump / retired scope)
+    Stale,
+}
+
 /// The global (batch-1) prefetch-generation scope; live sequences use
 /// their sequence id.
 pub const GLOBAL_SCOPE: u64 = 0;
 
 /// Per-scope prefetch generation table, shared between the submit path,
-/// the worker's staleness check, and sequence retirement (`u64::MAX`
+/// the workers' staleness check, and sequence retirement (`u64::MAX`
 /// marks a retired scope).
 pub type GenTable = Arc<Mutex<HashMap<u64, u64>>>;
+
+/// Partial progress of a preempted chunked transfer: the resume offset
+/// travels with the task, and holding the slot buffer keeps the
+/// reservation's destination stable while the task waits to resume (the
+/// slot itself stays `Loading` — it is only committed once `offset`
+/// reaches the record length).
+#[derive(Debug, Clone)]
+struct Resume {
+    offset: usize,
+    buffer: Arc<Mutex<Vec<u8>>>,
+}
 
 /// One entry in the Task Queue.
 #[derive(Debug, Clone)]
@@ -70,26 +114,45 @@ pub struct LoadTask {
     pub scope: u64,
     /// layer being executed when the task was issued (for Eq. 3's l_i)
     pub current_layer: u32,
+    /// partial progress of a preempted transfer (None = not yet started)
+    resume: Option<Resume>,
+    /// submit instant (per-kind time-to-ready accounting). Reset when a
+    /// prefetch is promoted, so `ondemand_ready` measures the joiner's
+    /// wait — not the prefetch's whole speculative lifetime.
+    submitted: Instant,
 }
 
-/// Two-lane FIFO: on-demand tasks always dequeue before prefetches.
+/// Per-running-task control block, guarded by the queue mutex so
+/// [`LoaderIo::promote_to_ondemand`] and the executing worker's
+/// checkpoint reads are atomic with queue membership.
+#[derive(Default)]
+struct RunCtl {
+    /// an on-demand join asked for the remaining chunks at priority
+    promote: bool,
+}
+
+/// Two-lane FIFO plus the running set: on-demand tasks always dequeue
+/// before prefetches.
 #[derive(Default)]
 struct TaskQueue {
-    ondemand: std::collections::VecDeque<LoadTask>,
-    prefetch: std::collections::VecDeque<LoadTask>,
+    ondemand: VecDeque<LoadTask>,
+    prefetch: VecDeque<LoadTask>,
+    /// tasks currently executing on a lane
+    running: HashMap<u64, RunCtl>,
     closed: bool,
 }
 
-/// Completion callback: invoked once with the task id when the task
-/// finishes (successfully, deduped, or dropped as stale). Callbacks must be
-/// cheap and must not re-enter the loader's callback registration (they run
-/// on the scheduler thread).
-type Callback = Box<dyn FnOnce(u64) + Send + 'static>;
+/// Completion callback: invoked once with the task id and outcome when
+/// the task finishes (fulfilled, deduped, slotless, or dropped as stale).
+/// Callbacks run on a lane thread with no loader lock held, so they may
+/// submit follow-up tasks and register new callbacks — but must stay
+/// cheap (they sit on a transfer lane's critical path).
+type Callback = Box<dyn FnOnce(u64, LoadOutcome) + Send + 'static>;
 
 struct Shared {
     queue: Mutex<TaskQueue>,
     queue_cv: Condvar,
-    done: Mutex<HashSet<u64>>,
+    done: Mutex<HashMap<u64, LoadOutcome>>,
     done_cv: Condvar,
     /// id -> (callback, consume-done-entry-after-firing)
     callbacks: Mutex<HashMap<u64, (Callback, bool)>>,
@@ -105,15 +168,15 @@ impl Shared {
     /// re-checks `done` after inserting, so whichever side loses the race
     /// still finds (exactly one of) the entry to fire. The callbacks lock
     /// is NOT held while the callback runs.
-    fn complete(&self, id: u64) {
+    fn complete(&self, id: u64, outcome: LoadOutcome) {
         {
             let mut done = self.done.lock().unwrap();
-            done.insert(id);
+            done.insert(id, outcome);
         }
         self.done_cv.notify_all();
         let cb = self.callbacks.lock().unwrap().remove(&id);
         if let Some((cb, consume)) = cb {
-            cb(id);
+            cb(id, outcome);
             if consume {
                 self.done.lock().unwrap().remove(&id);
             }
@@ -121,46 +184,18 @@ impl Shared {
     }
 }
 
-/// Handle to the loader: issue tasks, wait for completions.
-pub struct ExpertLoader {
+/// Cloneable handle to the loader's submit/wait/callback surface. The
+/// residency facade keeps one inside completion callbacks so a `NoSlot`
+/// completion can re-acquire without owning the [`ExpertLoader`] (which
+/// also owns the lane threads).
+#[derive(Clone)]
+pub struct LoaderIo {
     shared: Arc<Shared>,
-    pub cache: Arc<Mutex<CacheManager>>,
+    cache: Arc<Mutex<CacheManager>>,
     pub stats: Arc<Mutex<LoaderStats>>,
-    handle: Option<JoinHandle<()>>,
 }
 
-impl ExpertLoader {
-    pub fn start(
-        store: Arc<ExpertStore>,
-        cache: Arc<Mutex<CacheManager>>,
-        copier: Arc<ThrottledCopier>,
-    ) -> Self {
-        let shared = Arc::new(Shared {
-            queue: Mutex::new(TaskQueue::default()),
-            queue_cv: Condvar::new(),
-            done: Mutex::new(HashSet::new()),
-            done_cv: Condvar::new(),
-            callbacks: Mutex::new(HashMap::new()),
-            gens: Arc::new(Mutex::new(HashMap::new())),
-            next_id: AtomicU64::new(1),
-            stop: AtomicBool::new(false),
-            in_flight: AtomicUsize::new(0),
-        });
-        let stats = Arc::new(Mutex::new(LoaderStats::default()));
-        let worker = Worker {
-            shared: shared.clone(),
-            store,
-            cache: cache.clone(),
-            copier,
-            stats: stats.clone(),
-        };
-        let handle = std::thread::Builder::new()
-            .name("hobbit-expert-scheduler".into())
-            .spawn(move || worker.run())
-            .expect("spawn scheduler");
-        Self { shared, cache, stats, handle: Some(handle) }
-    }
-
+impl LoaderIo {
     /// Enqueue a load in the global generation scope; returns the task id
     /// to wait on (None if the expert is already resident or incoming).
     pub fn submit(
@@ -196,7 +231,18 @@ impl ExpertLoader {
             let gens = self.shared.gens.lock().unwrap();
             gens.get(&scope).copied().unwrap_or(0)
         };
-        let task = LoadTask { id, key, precision, pool, kind, gen, scope, current_layer };
+        let task = LoadTask {
+            id,
+            key,
+            precision,
+            pool,
+            kind,
+            gen,
+            scope,
+            current_layer,
+            resume: None,
+            submitted: Instant::now(),
+        };
         let mut q = self.shared.queue.lock().unwrap();
         match kind {
             TaskKind::OnDemand => q.ondemand.push_back(task),
@@ -230,8 +276,10 @@ impl ExpertLoader {
     /// (a fresh prefetch request joined it). Without this, a re-planned
     /// prefetch that joins its own previous-token task — now stale after
     /// the planner's generation bump — would be silently dropped instead
-    /// of loaded. Returns false when the task already started or
-    /// completed (the join then resolves off the real transfer).
+    /// of loaded. A preempted (partially transferred) task waiting in the
+    /// lane is re-stamped the same way. Returns false when the task is
+    /// currently executing or completed (the join then resolves off the
+    /// real transfer — running tasks never re-check their generation).
     pub fn refresh_prefetch(&self, id: u64, scope: u64) -> bool {
         let cur = {
             let gens = self.shared.gens.lock().unwrap();
@@ -247,22 +295,32 @@ impl ExpertLoader {
         }
     }
 
-    /// Move a *queued* prefetch task into the on-demand lane (an on-demand
-    /// request joined it). Returns false when the task already started or
-    /// completed — a started transfer is non-preemptible (cudaMemcpy
-    /// semantics), so the joiner simply waits it out.
+    /// Re-prioritize a prefetch an on-demand request joined. A *queued*
+    /// task (preempted-partial included) moves into the on-demand lane; a
+    /// *started* task has its remaining chunks re-weighted to on-demand
+    /// priority at the next chunk checkpoint — the paper's non-preemptible
+    /// transfer (Fig 9) used to make this impossible, so the joiner ate
+    /// the whole in-flight transfer. Returns false only when the task
+    /// already completed.
     pub fn promote_to_ondemand(&self, id: u64) -> bool {
         let mut q = self.shared.queue.lock().unwrap();
         if let Some(pos) = q.prefetch.iter().position(|t| t.id == id) {
             let mut t = q.prefetch.remove(pos).expect("position valid");
             t.kind = TaskKind::OnDemand;
+            t.submitted = Instant::now();
             q.ondemand.push_back(t);
             drop(q);
             self.shared.queue_cv.notify_one();
-            true
-        } else {
-            false
+            return true;
         }
+        if q.ondemand.iter().any(|t| t.id == id) {
+            return true; // already at priority
+        }
+        if let Some(ctl) = q.running.get_mut(&id) {
+            ctl.promote = true;
+            return true;
+        }
+        false
     }
 
     /// Block until every id in `ids` has completed. Returns wait time.
@@ -270,7 +328,7 @@ impl ExpertLoader {
         let t0 = Instant::now();
         let mut done = self.shared.done.lock().unwrap();
         loop {
-            if ids.iter().all(|id| done.contains(id)) {
+            if ids.iter().all(|id| done.contains_key(id)) {
                 for id in ids {
                     done.remove(id);
                 }
@@ -288,7 +346,7 @@ impl ExpertLoader {
             return true;
         }
         let mut done = self.shared.done.lock().unwrap();
-        if ids.iter().all(|id| done.contains(id)) {
+        if ids.iter().all(|id| done.contains_key(id)) {
             for id in ids {
                 done.remove(id);
             }
@@ -301,22 +359,33 @@ impl ExpertLoader {
     /// Non-consuming completion probe: true once `id` has completed and
     /// has not yet been consumed by `wait`/`try_wait`.
     pub fn is_done(&self, id: u64) -> bool {
-        self.shared.done.lock().unwrap().contains(&id)
+        self.shared.done.lock().unwrap().contains_key(&id)
     }
 
     /// Register a completion callback for task `id`; it fires exactly once,
-    /// on the scheduler thread when the task completes, or immediately on
-    /// the caller thread if the task already completed. Register before the
+    /// on a lane thread when the task completes, or immediately on the
+    /// caller thread if the task already completed. Register before the
     /// id is consumed by `wait`/`try_wait` — a consumed id never fires.
     /// Re-registering replaces (and drops) the previous callback.
     pub fn on_complete<F: FnOnce(u64) + Send + 'static>(&self, id: u64, cb: F) {
-        self.register_callback(id, Box::new(cb), false);
+        self.register_callback(id, Box::new(move |id: u64, _: LoadOutcome| cb(id)), false);
     }
 
     /// Like [`Self::on_complete`], but the done-set entry is consumed when
     /// the callback fires, so completion state does not accumulate for ids
     /// nobody will `wait` on (the residency facade's contract).
     pub fn on_complete_consume<F: FnOnce(u64) + Send + 'static>(&self, id: u64, cb: F) {
+        self.register_callback(id, Box::new(move |id: u64, _: LoadOutcome| cb(id)), true);
+    }
+
+    /// Consuming completion callback that also receives the
+    /// [`LoadOutcome`] — how the residency facade tells a fulfilled load
+    /// from a `NoSlot` drop it must re-acquire.
+    pub fn on_complete_consume_outcome<F: FnOnce(u64, LoadOutcome) + Send + 'static>(
+        &self,
+        id: u64,
+        cb: F,
+    ) {
         self.register_callback(id, Box::new(cb), true);
     }
 
@@ -324,11 +393,11 @@ impl ExpertLoader {
         self.shared.callbacks.lock().unwrap().insert(id, (cb, consume));
         // the worker publishes `done` before draining callbacks, so if the
         // task raced past us we can still claim (or find gone) our entry
-        let already = self.shared.done.lock().unwrap().contains(&id);
-        if already {
+        let already = self.shared.done.lock().unwrap().get(&id).copied();
+        if let Some(outcome) = already {
             let cb = self.shared.callbacks.lock().unwrap().remove(&id);
             if let Some((cb, consume)) = cb {
-                cb(id);
+                cb(id, outcome);
                 if consume {
                     self.shared.done.lock().unwrap().remove(&id);
                 }
@@ -346,26 +415,120 @@ impl ExpertLoader {
     }
 }
 
+/// Handle to the loader: issue tasks, wait for completions. Owns the lane
+/// threads and derefs to the cloneable [`LoaderIo`] surface, so every
+/// submit/wait/callback method is reachable directly on the loader.
+pub struct ExpertLoader {
+    io: LoaderIo,
+    pub cache: Arc<Mutex<CacheManager>>,
+    pub stats: Arc<Mutex<LoaderStats>>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl std::ops::Deref for ExpertLoader {
+    type Target = LoaderIo;
+
+    fn deref(&self) -> &LoaderIo {
+        &self.io
+    }
+}
+
+impl ExpertLoader {
+    /// Single-lane compat constructor (the pre-pipeline serialization:
+    /// one worker, transfers FIFO). Chunking still applies within the
+    /// lane. Engine construction passes an explicit [`IoConfig`] through
+    /// [`Self::start_with`] instead.
+    pub fn start(
+        store: Arc<ExpertStore>,
+        cache: Arc<Mutex<CacheManager>>,
+        copier: Arc<ThrottledCopier>,
+    ) -> Self {
+        Self::start_with(store, cache, copier, IoConfig::single_lane())
+    }
+
+    /// Start the loader with `io.lanes` worker lanes executing tasks as
+    /// `io.chunk_bytes`-sized chunks over the shared link.
+    pub fn start_with(
+        store: Arc<ExpertStore>,
+        cache: Arc<Mutex<CacheManager>>,
+        copier: Arc<ThrottledCopier>,
+        io: IoConfig,
+    ) -> Self {
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(TaskQueue::default()),
+            queue_cv: Condvar::new(),
+            done: Mutex::new(HashMap::new()),
+            done_cv: Condvar::new(),
+            callbacks: Mutex::new(HashMap::new()),
+            gens: Arc::new(Mutex::new(HashMap::new())),
+            next_id: AtomicU64::new(1),
+            stop: AtomicBool::new(false),
+            in_flight: AtomicUsize::new(0),
+        });
+        let stats = Arc::new(Mutex::new(LoaderStats::default()));
+        let lanes = io.lanes.max(1);
+        let chunk_bytes = io.chunk_bytes.max(1);
+        let mut handles = Vec::with_capacity(lanes);
+        for lane in 0..lanes {
+            let worker = Worker {
+                shared: shared.clone(),
+                store: store.clone(),
+                cache: cache.clone(),
+                copier: copier.clone(),
+                stats: stats.clone(),
+                chunk_bytes,
+                lanes,
+            };
+            let handle = std::thread::Builder::new()
+                .name(format!("hobbit-io-lane-{lane}"))
+                .spawn(move || worker.run())
+                .expect("spawn io lane");
+            handles.push(handle);
+        }
+        let io = LoaderIo { shared, cache: cache.clone(), stats: stats.clone() };
+        Self { io, cache, stats, handles }
+    }
+
+    /// The cloneable submit/wait/callback surface (completion callbacks
+    /// use this to re-acquire after a `NoSlot` drop).
+    pub fn io(&self) -> LoaderIo {
+        self.io.clone()
+    }
+}
+
 impl Drop for ExpertLoader {
     fn drop(&mut self) {
-        self.shared.stop.store(true, Ordering::Relaxed);
+        self.io.shared.stop.store(true, Ordering::Relaxed);
         {
-            let mut q = self.shared.queue.lock().unwrap();
+            let mut q = self.io.shared.queue.lock().unwrap();
             q.closed = true;
         }
-        self.shared.queue_cv.notify_all();
-        if let Some(h) = self.handle.take() {
+        self.io.shared.queue_cv.notify_all();
+        for h in self.handles.drain(..) {
             let _ = h.join();
         }
     }
 }
 
+/// One transfer lane.
 struct Worker {
     shared: Arc<Shared>,
     store: Arc<ExpertStore>,
     cache: Arc<Mutex<CacheManager>>,
     copier: Arc<ThrottledCopier>,
     stats: Arc<Mutex<LoaderStats>>,
+    chunk_bytes: usize,
+    /// total lane count (preemption checkpoints only yield when every
+    /// lane is busy — an idle lane will take the on-demand work itself)
+    lanes: usize,
+}
+
+/// What one `execute` call did with its task.
+enum Step {
+    Done(LoadOutcome),
+    /// preemption checkpoint fired: partial progress kept, task goes back
+    /// to the front of the prefetch lane
+    Yielded(LoadTask),
 }
 
 impl Worker {
@@ -378,21 +541,23 @@ impl Worker {
                         return;
                     }
                     // on-demand lane first; prefetch lane drops stale gens.
-                    // `in_flight` is raised inside the queue critical
-                    // section so `is_idle` never sees a popped-but-running
-                    // task as idle.
+                    // `in_flight` is raised and the running entry inserted
+                    // inside the queue critical section so `is_idle` never
+                    // sees a popped-but-running task as idle and
+                    // `promote_to_ondemand` always finds the task in
+                    // exactly one place.
                     if let Some(t) = q.ondemand.pop_front() {
+                        q.running.insert(t.id, RunCtl::default());
                         self.shared.in_flight.fetch_add(1, Ordering::SeqCst);
                         break t;
                     }
-                    let mut stale: Vec<u64> = Vec::new();
+                    let mut stale: Vec<LoadTask> = Vec::new();
                     {
                         let mut gens = self.shared.gens.lock().unwrap();
                         while let Some(t) = q.prefetch.front() {
                             let cur = gens.get(&t.scope).copied().unwrap_or(0);
                             if t.gen < cur {
-                                let dropped = q.prefetch.pop_front().unwrap();
-                                stale.push(dropped.id);
+                                stale.push(q.prefetch.pop_front().unwrap());
                             } else {
                                 break;
                             }
@@ -410,15 +575,21 @@ impl Worker {
                         // report as done so no waiter hangs. Completion
                         // callbacks may take locks of their own (the
                         // residency wait-set), so fire them OUTSIDE the
-                        // queue critical section.
+                        // queue critical section. A preempted task's
+                        // partially filled slot is aborted, never left
+                        // `Loading` (and never committed).
                         drop(q);
-                        for id in stale {
-                            self.shared.complete(id);
+                        for t in stale {
+                            if t.resume.is_some() {
+                                self.cache.lock().unwrap().abort(t.key, t.pool);
+                            }
+                            self.shared.complete(t.id, LoadOutcome::Stale);
                         }
                         q = self.shared.queue.lock().unwrap();
                         continue;
                     }
                     if let Some(t) = q.prefetch.pop_front() {
+                        q.running.insert(t.id, RunCtl::default());
                         self.shared.in_flight.fetch_add(1, Ordering::SeqCst);
                         break t;
                     }
@@ -429,46 +600,155 @@ impl Worker {
                 }
             };
             let id = task.id;
-            self.execute(task);
-            // transfer fully committed: drop in-flight before waking
-            // waiters so a returned `wait` implies `is_idle` (absent new
-            // submissions)
-            self.shared.in_flight.fetch_sub(1, Ordering::SeqCst);
-            self.shared.complete(id);
+            match self.execute(task) {
+                Step::Done(outcome) => {
+                    {
+                        let mut q = self.shared.queue.lock().unwrap();
+                        q.running.remove(&id);
+                    }
+                    // transfer fully resolved: drop in-flight before waking
+                    // waiters so a returned `wait` implies `is_idle`
+                    // (absent new submissions)
+                    self.shared.in_flight.fetch_sub(1, Ordering::SeqCst);
+                    self.shared.complete(id, outcome);
+                }
+                Step::Yielded(mut task) => {
+                    // back to the FRONT of the prefetch lane: it resumes
+                    // (from its offset) as soon as the on-demand work that
+                    // preempted it drains. running-removal, requeue, and
+                    // the in-flight drop share one critical section so the
+                    // task is always findable and never counted idle. A
+                    // promotion that raced in after the checkpoint read is
+                    // honored here instead of lost.
+                    let mut q = self.shared.queue.lock().unwrap();
+                    let promoted =
+                        q.running.remove(&id).map(|c| c.promote).unwrap_or(false);
+                    if promoted {
+                        task.kind = TaskKind::OnDemand;
+                        task.submitted = Instant::now();
+                        q.ondemand.push_back(task);
+                    } else {
+                        q.prefetch.push_front(task);
+                    }
+                    self.shared.in_flight.fetch_sub(1, Ordering::SeqCst);
+                    drop(q);
+                    self.shared.queue_cv.notify_one();
+                }
+            }
         }
     }
 
-    fn execute(&self, task: LoadTask) {
-        // reserve a destination slot
-        let reservation = {
-            let mut cache = self.cache.lock().unwrap();
-            cache.reserve(task.key, task.pool, task.current_layer)
-        };
-        let Some(res) = reservation else {
-            // already resident/incoming, or no evictable slot: nothing to
-            // copy (run() marks the task done)
-            return;
+    fn execute(&self, mut task: LoadTask) -> Step {
+        // resolve the destination: a fresh reservation, or the preempted
+        // transfer's kept buffer + offset
+        let (buffer, start_off) = match task.resume.take() {
+            Some(r) => (r.buffer, r.offset),
+            None => {
+                let reservation = {
+                    let mut cache = self.cache.lock().unwrap();
+                    cache.reserve(task.key, task.pool, task.current_layer)
+                };
+                match reservation {
+                    Some(res) => (res.buffer, 0),
+                    None => {
+                        // distinguish "already resident/incoming" (nothing
+                        // to copy) from "no evictable slot". The latter
+                        // used to complete silently, so ticket waiters
+                        // resumed believing the expert resident — now it
+                        // completes as NoSlot and the residency facade
+                        // re-acquires.
+                        let present = {
+                            let cache = self.cache.lock().unwrap();
+                            cache.contains(task.key, task.pool)
+                        };
+                        if present {
+                            return Step::Done(LoadOutcome::Fulfilled);
+                        }
+                        self.stats.lock().unwrap().noslot_drops += 1;
+                        return Step::Done(LoadOutcome::NoSlot);
+                    }
+                }
+            }
         };
         let record = self.store.record(task.key, task.precision);
-        {
-            // per-slot lock: the engine can read other slots meanwhile;
-            // the transfer itself is non-preemptible (cudaMemcpy model)
-            let mut buf = res.buffer.lock().unwrap();
-            debug_assert_eq!(buf.len(), record.len(), "slot/record size");
-            self.copier.transfer(record, &mut buf);
+        let weight = match task.kind {
+            TaskKind::OnDemand => ONDEMAND_WEIGHT,
+            TaskKind::Prefetch => PREFETCH_WEIGHT,
+        };
+        let grant = self.copier.lane(weight);
+        // DMA setup cost: once per transfer start and per preemption resume
+        self.copier.charge_latency();
+        let mut off = start_off;
+        while off < record.len() {
+            let n = self.chunk_bytes.min(record.len() - off);
+            // copy the chunk under the slot lock, then charge the shared
+            // link time WITHOUT it: cache readers of other requests never
+            // block behind a modeled PCIe stall
+            let t0 = Instant::now();
+            {
+                let mut buf = buffer.lock().unwrap();
+                debug_assert_eq!(buf.len(), record.len(), "slot/record size");
+                buf[off..off + n].copy_from_slice(&record[off..off + n]);
+            }
+            self.copier.charge_chunk(&grant, n, t0.elapsed());
+            off += n;
+            if off >= record.len() {
+                break;
+            }
+            // ---- preemption checkpoint (between chunks) ----
+            if task.kind == TaskKind::Prefetch {
+                let mut q = self.shared.queue.lock().unwrap();
+                let promoted = q
+                    .running
+                    .get_mut(&task.id)
+                    .map(|c| std::mem::take(&mut c.promote))
+                    .unwrap_or(false);
+                if promoted {
+                    drop(q);
+                    // an on-demand join re-prioritizes the REMAINING
+                    // chunks in place: switch kind and lane weight, keep
+                    // copying (the clock restarts so time-to-ready
+                    // measures the joiner's wait)
+                    task.kind = TaskKind::OnDemand;
+                    task.submitted = Instant::now();
+                    grant.set_weight(ONDEMAND_WEIGHT);
+                    self.stats.lock().unwrap().inflight_promotions += 1;
+                    continue;
+                }
+                // yield only when EVERY lane is busy: with an idle lane
+                // around, the waiting on-demand task is (about to be)
+                // picked up there, and yielding would just re-pay the DMA
+                // setup latency on resume for nothing — the weighted
+                // arbiter already squeezes this lane's share
+                if !q.ondemand.is_empty() && q.running.len() >= self.lanes {
+                    drop(q);
+                    self.stats.lock().unwrap().preemptions += 1;
+                    task.resume = Some(Resume { offset: off, buffer });
+                    return Step::Yielded(task);
+                }
+            }
         }
+        drop(grant);
         {
             let mut cache = self.cache.lock().unwrap();
             cache.commit(task.key, task.pool);
         }
+        self.copier.note_transfer();
         {
             let mut st = self.stats.lock().unwrap();
             let slot = crate::config::precision_slot(task.precision);
             match task.kind {
-                TaskKind::OnDemand => st.ondemand_loads[slot] += 1,
-                TaskKind::Prefetch => st.prefetch_loads[slot] += 1,
+                TaskKind::OnDemand => {
+                    st.ondemand_loads[slot] += 1;
+                    st.ondemand_ready += task.submitted.elapsed();
+                }
+                TaskKind::Prefetch => {
+                    st.prefetch_loads[slot] += 1;
+                    st.prefetch_ready += task.submitted.elapsed();
+                }
             }
             st.bytes_loaded += record.len() as u64;
         }
+        Step::Done(LoadOutcome::Fulfilled)
     }
 }

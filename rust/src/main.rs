@@ -95,6 +95,11 @@ fn build_engine(args: &Args, allow_sched_policy: bool) -> Result<Engine> {
             };
         }
     }
+    // transfer-pipeline knobs: lanes sharing the link + preemption
+    // granularity (defaults: 2 lanes, 256 KiB chunks)
+    opts.io.lanes = args.get_usize("io-lanes", opts.io.lanes);
+    opts.io.chunk_bytes = args.get_usize("io-chunk-bytes", opts.io.chunk_bytes);
+    opts.io.validate().map_err(|e| anyhow!("{e}"))?;
     Engine::new(&artifacts, model, opts)
 }
 
@@ -132,6 +137,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
         coord.chunked_prefill = !args.has("no-chunked-prefill");
         coord.prefill_first = args.has("prefill-first");
         coord.token_budget = args.get_usize("token-budget", coord.token_budget).max(1);
+        coord.ttft_deadline = std::time::Duration::from_millis(
+            args.get_usize("ttft-deadline-ms", coord.ttft_deadline.as_millis() as usize)
+                .max(1) as u64,
+        );
     }
     let addr = args.get_or("addr", "127.0.0.1:7077");
     let mut server = Server::bind(addr)?;
@@ -144,6 +153,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             (true, SchedPolicy::RoundRobin) => "interleaved/rr",
             (true, SchedPolicy::Sjf) => "interleaved/sjf",
             (true, SchedPolicy::TokenBudget) => "interleaved/token-budget",
+            (true, SchedPolicy::Deadline) => "interleaved/deadline",
         },
         if coord.max_batch > 1 {
             format!(

@@ -6,16 +6,30 @@
 //!
 //! * [`ThrottledCopier`] — the *real* path: performs the actual memcpy of
 //!   the expert bytes and sleeps the remainder of `bytes/bandwidth +
-//!   latency`, emulating PCIe/SSD at a configured (scaled) rate. Transfers
-//!   are **non-preemptible once started**, matching the paper's
-//!   cudaMemcpy observation (§3.3, Fig 9) — the source of misprediction
-//!   penalties.
+//!   latency`, emulating PCIe/SSD at a configured (scaled) rate. Since the
+//!   chunked pipeline, the copier is built on a [`LinkArbiter`]: any
+//!   number of lanes may charge chunk-granular transfer time against ONE
+//!   shared link budget, splitting `bytes_per_s` by weighted fair share —
+//!   total bandwidth is conserved, and on-demand chunks carry a higher
+//!   weight ([`ONDEMAND_WEIGHT`]) than prefetch chunks
+//!   ([`PREFETCH_WEIGHT`]). A *chunk* is still non-preemptible (the
+//!   cudaMemcpy observation of §3.3/Fig 9 applies per DMA call), but the
+//!   loader's checkpoints between chunks turn the paper's misprediction
+//!   penalty from O(expert bytes) into O(one chunk).
 //! * [`VirtualClock`] — the simulator's time source: transfers charge
 //!   virtual nanoseconds, no bytes move.
 
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
+
+/// Fair-share weight of an on-demand lane: a decode stall outranks
+/// speculation 4:1 when both are on the link at once.
+pub const ONDEMAND_WEIGHT: f64 = 4.0;
+
+/// Fair-share weight of a prefetch lane.
+pub const PREFETCH_WEIGHT: f64 = 1.0;
 
 /// Bandwidth model of the expert-loading link.
 #[derive(Debug, Clone, Copy)]
@@ -30,32 +44,164 @@ impl LinkModel {
     }
 }
 
-/// Real-path transfer engine: copies bytes and enforces the link rate.
+/// Shared-bandwidth arbiter over one link.
+///
+/// Each busy lane registers a [`LaneGrant`] with a weight; a chunk charged
+/// by one lane takes `bytes / (bytes_per_s * weight / Σ active weights)`,
+/// so concurrent lanes *split* the link instead of each modeling a private
+/// full-rate copy — N lanes move N records in the same wall time one lane
+/// moves them serially (bandwidth conservation), while the weighted split
+/// lets on-demand chunks squeeze prefetch chunks without starving them.
+/// The share is sampled at chunk-charge time; chunks are small relative
+/// to lane churn, so the approximation error is bounded by one chunk.
+pub struct LinkArbiter {
+    link: LinkModel,
+    /// grant id -> weight of every lane currently mid-task
+    active: Mutex<HashMap<u64, f64>>,
+    next_grant: AtomicU64,
+}
+
+impl LinkArbiter {
+    pub fn new(link: LinkModel) -> Self {
+        Self { link, active: Mutex::new(HashMap::new()), next_grant: AtomicU64::new(1) }
+    }
+
+    pub fn link(&self) -> LinkModel {
+        self.link
+    }
+
+    /// Register a busy lane at `weight`; dropping the grant retires it.
+    pub fn begin(&self, weight: f64) -> LaneGrant<'_> {
+        let id = self.next_grant.fetch_add(1, Ordering::Relaxed);
+        self.active.lock().unwrap().insert(id, weight.max(1e-9));
+        LaneGrant { arb: self, id }
+    }
+
+    fn share_of(&self, id: u64) -> f64 {
+        let active = self.active.lock().unwrap();
+        let mine = active.get(&id).copied().unwrap_or(1.0);
+        let total: f64 = active.values().sum();
+        if total <= 0.0 {
+            1.0
+        } else {
+            mine / total
+        }
+    }
+
+    fn set_weight(&self, id: u64, weight: f64) {
+        if let Some(w) = self.active.lock().unwrap().get_mut(&id) {
+            *w = weight.max(1e-9);
+        }
+    }
+
+    fn retire(&self, id: u64) {
+        self.active.lock().unwrap().remove(&id);
+    }
+}
+
+/// One busy lane's registration with the arbiter (RAII: dropping frees
+/// the lane's bandwidth share for the others).
+pub struct LaneGrant<'a> {
+    arb: &'a LinkArbiter,
+    id: u64,
+}
+
+impl LaneGrant<'_> {
+    /// This lane's fair share of the link at this instant (0, 1].
+    pub fn share(&self) -> f64 {
+        self.arb.share_of(self.id)
+    }
+
+    /// Re-weight the lane mid-task (a started prefetch promoted to
+    /// on-demand re-prioritizes its remaining chunks).
+    pub fn set_weight(&self, weight: f64) {
+        self.arb.set_weight(self.id, weight);
+    }
+
+    /// Link-time budget of a `bytes` chunk at the current fair share
+    /// (excludes the per-transfer setup latency).
+    pub fn chunk_time(&self, bytes: usize) -> Duration {
+        let bw = self.arb.link.bytes_per_s * self.share();
+        Duration::from_secs_f64(bytes as f64 / bw.max(1e-9))
+    }
+}
+
+impl Drop for LaneGrant<'_> {
+    fn drop(&mut self) {
+        self.arb.retire(self.id);
+    }
+}
+
+/// Real-path transfer engine: copies bytes and enforces the link rate
+/// through the shared [`LinkArbiter`].
 pub struct ThrottledCopier {
     pub link: LinkModel,
+    arbiter: LinkArbiter,
     bytes_moved: AtomicU64,
     transfers: AtomicU64,
 }
 
 impl ThrottledCopier {
     pub fn new(link: LinkModel) -> Self {
-        Self { link, bytes_moved: AtomicU64::new(0), transfers: AtomicU64::new(0) }
+        Self {
+            link,
+            arbiter: LinkArbiter::new(link),
+            bytes_moved: AtomicU64::new(0),
+            transfers: AtomicU64::new(0),
+        }
     }
 
-    /// Copy `src` into `dst` at the modeled link rate. Blocking and
-    /// non-preemptible (cudaMemcpy semantics). Returns the wall time spent.
+    /// Copy `src` into `dst` at the modeled link rate, as ONE chunk on one
+    /// lane: blocking and non-preemptible (the pre-pipeline cudaMemcpy
+    /// semantics — the loader's chunked path uses [`Self::lane`] +
+    /// [`Self::charge_chunk`] instead). Returns the wall time spent.
     pub fn transfer(&self, src: &[u8], dst: &mut [u8]) -> Duration {
         assert_eq!(src.len(), dst.len());
         let t0 = Instant::now();
-        let budget = self.link.transfer_time(src.len());
+        let grant = self.arbiter.begin(ONDEMAND_WEIGHT);
         dst.copy_from_slice(src);
+        let budget =
+            Duration::from_secs_f64(self.link.latency_s) + grant.chunk_time(src.len());
         let elapsed = t0.elapsed();
         if elapsed < budget {
             std::thread::sleep(budget - elapsed);
         }
+        drop(grant);
         self.bytes_moved.fetch_add(src.len() as u64, Ordering::Relaxed);
         self.transfers.fetch_add(1, Ordering::Relaxed);
         t0.elapsed()
+    }
+
+    /// Register a busy lane at `weight` for a chunked transfer.
+    pub fn lane(&self, weight: f64) -> LaneGrant<'_> {
+        self.arbiter.begin(weight)
+    }
+
+    /// Sleep the fixed per-transfer setup latency (DMA setup / syscall);
+    /// charged once per transfer start or preemption resume.
+    pub fn charge_latency(&self) {
+        if self.link.latency_s > 0.0 {
+            std::thread::sleep(Duration::from_secs_f64(self.link.latency_s));
+        }
+    }
+
+    /// Charge one already-copied chunk of `bytes` against the shared link
+    /// budget: sleeps the remainder of the lane's fair-share time beyond
+    /// `spent` (the wall time the memcpy itself took) and accounts the
+    /// bytes. Called WITHOUT the destination slot's lock held, so cache
+    /// readers of other slots never block behind a modeled PCIe stall.
+    pub fn charge_chunk(&self, grant: &LaneGrant<'_>, bytes: usize, spent: Duration) {
+        let budget = grant.chunk_time(bytes);
+        if spent < budget {
+            std::thread::sleep(budget - spent);
+        }
+        self.bytes_moved.fetch_add(bytes as u64, Ordering::Relaxed);
+    }
+
+    /// Count one completed (possibly multi-chunk, possibly resumed)
+    /// transfer.
+    pub fn note_transfer(&self) {
+        self.transfers.fetch_add(1, Ordering::Relaxed);
     }
 
     pub fn bytes_moved(&self) -> u64 {
@@ -162,6 +308,39 @@ mod tests {
         assert_eq!(dst, src);
         assert!(t.as_secs_f64() >= 0.009, "took {t:?}");
         assert_eq!(c.bytes_moved(), 1_000_000);
+        assert_eq!(c.transfers(), 1);
+    }
+
+    #[test]
+    fn arbiter_fair_share_math() {
+        let arb = LinkArbiter::new(LinkModel { bytes_per_s: 1e6, latency_s: 0.0 });
+        let a = arb.begin(ONDEMAND_WEIGHT);
+        assert!((a.share() - 1.0).abs() < 1e-12, "lone lane owns the link");
+        let b = arb.begin(PREFETCH_WEIGHT);
+        assert!((a.share() - 0.8).abs() < 1e-12, "4:1 weighted split");
+        assert!((b.share() - 0.2).abs() < 1e-12);
+        // shares always sum to 1: total bandwidth is conserved
+        assert!((a.share() + b.share() - 1.0).abs() < 1e-12);
+        // a chunk charged at 20% share takes 5x the full-rate time
+        let full = b.chunk_time(1000).as_secs_f64();
+        assert!((full - 0.005).abs() < 1e-9, "got {full}");
+        // promotion re-weights in place
+        b.set_weight(ONDEMAND_WEIGHT);
+        assert!((b.share() - 0.5).abs() < 1e-12);
+        drop(a);
+        assert!((b.share() - 1.0).abs() < 1e-12, "retired lane frees its share");
+    }
+
+    #[test]
+    fn charge_chunk_sleeps_shared_budget() {
+        let c = ThrottledCopier::new(LinkModel { bytes_per_s: 1e6, latency_s: 0.0 });
+        let lane = c.lane(PREFETCH_WEIGHT);
+        let t0 = Instant::now();
+        c.charge_chunk(&lane, 10_000, Duration::ZERO); // 10 ms at 1 MB/s
+        assert!(t0.elapsed().as_secs_f64() >= 0.009);
+        assert_eq!(c.bytes_moved(), 10_000);
+        assert_eq!(c.transfers(), 0, "chunks are not transfers");
+        c.note_transfer();
         assert_eq!(c.transfers(), 1);
     }
 

@@ -43,6 +43,69 @@ pub struct LoaderStats {
     /// per-row expert demands folded into chunked-prefill acquires
     /// (>= unique; the gap is the in-chunk load sharing)
     pub prefill_merged_demands: u64,
+    /// prefetch transfers that yielded mid-flight at a chunk checkpoint
+    /// because on-demand work was waiting (partial progress kept)
+    pub preemptions: u64,
+    /// *started* prefetch transfers whose remaining chunks were
+    /// re-prioritized to the on-demand weight by a join (promotion used to
+    /// fail for started transfers — the Fig 9 penalty)
+    pub inflight_promotions: u64,
+    /// load tasks that completed WITHOUT a slot (every candidate pinned or
+    /// mid-load): nothing was copied and the expert is not resident — the
+    /// residency facade re-acquires instead of letting waiters execute on
+    /// a stale slot
+    pub noslot_drops: u64,
+    /// Σ submit → committed of on-demand transfers (time-to-ready). A
+    /// promoted prefetch restarts its clock at promotion, so this
+    /// measures the joiner's wait, not the speculative lifetime.
+    pub ondemand_ready: Duration,
+    /// Σ submit → committed of prefetch transfers
+    pub prefetch_ready: Duration,
+}
+
+impl LoaderStats {
+    /// On-demand transfers committed (all precisions).
+    pub fn ondemand_count(&self) -> u64 {
+        self.ondemand_loads.iter().sum()
+    }
+
+    /// Prefetch transfers committed (all precisions).
+    pub fn prefetch_count(&self) -> u64 {
+        self.prefetch_loads.iter().sum()
+    }
+
+    /// Mean submit → committed latency of on-demand transfers (ms).
+    pub fn mean_ondemand_ready_ms(&self) -> f64 {
+        let n = self.ondemand_count();
+        if n == 0 {
+            0.0
+        } else {
+            self.ondemand_ready.as_secs_f64() * 1e3 / n as f64
+        }
+    }
+
+    /// Mean submit → committed latency of prefetch transfers (ms).
+    pub fn mean_prefetch_ready_ms(&self) -> f64 {
+        let n = self.prefetch_count();
+        if n == 0 {
+            0.0
+        } else {
+            self.prefetch_ready.as_secs_f64() * 1e3 / n as f64
+        }
+    }
+
+    /// The transfer-pipeline counters as a JSON object — folded into the
+    /// interleaved report's `"serving"` key (never the FCFS top level) and
+    /// printed standalone by `bench_loader` under the same side key.
+    pub fn pipeline_json(&self) -> Json {
+        obj(vec![
+            ("preemptions", num(self.preemptions as f64)),
+            ("inflight_promotions", num(self.inflight_promotions as f64)),
+            ("noslot_drops", num(self.noslot_drops as f64)),
+            ("mean_ondemand_ready_ms", num(self.mean_ondemand_ready_ms())),
+            ("mean_prefetch_ready_ms", num(self.mean_prefetch_ready_ms())),
+        ])
+    }
 }
 
 #[derive(Debug, Clone, Default)]
@@ -299,6 +362,13 @@ impl RunReport {
                     "prefill_merged_demands".into(),
                     num(self.loader.prefill_merged_demands as f64),
                 );
+                // the transfer-pipeline counters ride along (never at the
+                // FCFS top level)
+                if let Json::Obj(p) = self.loader.pipeline_json() {
+                    for (k, v) in p {
+                        m.insert(k, v);
+                    }
+                }
             }
             pairs.push(("serving", serving));
         }
@@ -425,6 +495,38 @@ mod tests {
         assert_eq!(serving.get("prefill_merged_acquires").unwrap().as_f64().unwrap(), 9.0);
         assert_eq!(serving.get("prefill_merged_unique").unwrap().as_f64().unwrap(), 18.0);
         assert_eq!(serving.get("prefill_merged_demands").unwrap().as_f64().unwrap(), 40.0);
+    }
+
+    #[test]
+    fn pipeline_stats_surface_only_in_serving_section() {
+        let mut rep = RunReport::default();
+        rep.loader.preemptions = 5;
+        rep.loader.inflight_promotions = 2;
+        rep.loader.noslot_drops = 1;
+        rep.loader.ondemand_loads = [4, 0, 0, 0];
+        rep.loader.ondemand_ready = Duration::from_millis(40);
+        rep.loader.prefetch_loads = [0, 2, 0, 0];
+        rep.loader.prefetch_ready = Duration::from_millis(30);
+        let fcfs = rep.to_json().to_string();
+        assert!(!fcfs.contains("preemptions"), "FCFS report grew pipeline keys");
+        assert!(!fcfs.contains("noslot"), "FCFS report grew pipeline keys");
+        rep.scheduler = Some(SchedulerStats::default());
+        let j = Json::parse(&rep.to_json().to_string()).unwrap();
+        let serving = j.get("serving").unwrap();
+        assert_eq!(serving.get("preemptions").unwrap().as_f64().unwrap(), 5.0);
+        assert_eq!(serving.get("inflight_promotions").unwrap().as_f64().unwrap(), 2.0);
+        assert_eq!(serving.get("noslot_drops").unwrap().as_f64().unwrap(), 1.0);
+        assert!(
+            (serving.get("mean_ondemand_ready_ms").unwrap().as_f64().unwrap() - 10.0).abs()
+                < 1e-9
+        );
+        assert!(
+            (serving.get("mean_prefetch_ready_ms").unwrap().as_f64().unwrap() - 15.0).abs()
+                < 1e-9
+        );
+        // degenerate means stay finite
+        assert_eq!(LoaderStats::default().mean_ondemand_ready_ms(), 0.0);
+        assert_eq!(LoaderStats::default().mean_prefetch_ready_ms(), 0.0);
     }
 
     #[test]

@@ -72,6 +72,43 @@ fn rand_mat(rng: &mut Rng, rows: usize, cols: usize, scale: f64) -> Vec<f32> {
     (0..rows * cols).map(|_| (rng.normal() * scale) as f32).collect()
 }
 
+/// A tiny *store-only* shape for the loader/transfer-pipeline suites:
+/// synthetic on-wire record sizes, no attention dims ever exercised —
+/// only consistency with [`write_synth_expert_store`] matters. (The
+/// residency suite predates this helper and carries its own copy.)
+pub fn tiny_store_config(name: &str) -> ModelConfig {
+    ModelConfig {
+        name: name.into(),
+        n_layers: 4,
+        d_model: 8,
+        d_ff: 16,
+        n_experts: 4,
+        top_k: 2,
+        n_heads: 2,
+        n_kv_heads: 1,
+        vocab: 64,
+        max_seq: 32,
+        quant_group: 8,
+        expert_bytes: [4096, 1024, 512, 256],
+    }
+}
+
+/// Write only the per-precision expert record files (`experts_*.bin`) —
+/// enough for `ExpertStore::load` to move real bytes, not for engine
+/// construction (use [`write_synth_model`] for that). Deterministic byte
+/// pattern, so suites can compare transferred bytes against the store.
+pub fn write_synth_expert_store(dir: &Path, cfg: &ModelConfig) -> Result<()> {
+    std::fs::create_dir_all(dir)
+        .with_context(|| format!("creating {}", dir.display()))?;
+    for p in Precision::ALL {
+        let n = cfg.bytes_for(p) * cfg.total_experts();
+        let bytes: Vec<u8> = (0..n).map(|i| (i % 251) as u8).collect();
+        std::fs::write(dir.join(format!("experts_{}.bin", p.name())), bytes)
+            .with_context(|| format!("writing experts_{}.bin", p.name()))?;
+    }
+    Ok(())
+}
+
 /// Write the whole synthesized model (non-expert weights + every expert
 /// at every precision) under `dir`. Deterministic in `seed`.
 pub fn write_synth_model(dir: &Path, cfg: &ModelConfig, seed: u64) -> Result<()> {

@@ -18,8 +18,10 @@
 //!   one load task: the second request *joins* the first's ticket instead
 //!   of silently bouncing off the loader's dedup (`dedup_hits`/
 //!   `dedup_total` in `LoaderStats` count exactly these joins). An
-//!   on-demand join of a *queued* prefetch promotes it to the priority
-//!   lane; a *started* transfer is joined as-is (non-preemptible, Fig 9).
+//!   on-demand join of a prefetch promotes it to the priority lane —
+//!   *queued* tasks move lanes, and since the chunked pipeline a *started*
+//!   transfer's remaining chunks are re-prioritized too (Fig 9's
+//!   non-preemptible penalty, removed).
 //! * **RAII sessions** — [`SequenceSession`] scopes a live sequence's
 //!   cache records and prefetch generation: dropping the session retires
 //!   its records and marks its generation scope stale, so nothing leaks
@@ -29,13 +31,14 @@
 //!   sequences' queued prefetches (the old global bump did).
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::cache::{CacheManager, Pool};
+use crate::config::IoConfig;
 use crate::loader::scorer::Class;
-use crate::loader::{ExpertLoader, GenTable, TaskKind, GLOBAL_SCOPE};
+use crate::loader::{ExpertLoader, GenTable, LoadOutcome, LoaderIo, TaskKind, GLOBAL_SCOPE};
 use crate::memory::ThrottledCopier;
 use crate::metrics::{CacheStats, LoaderStats};
 use crate::model::ExpertStore;
@@ -76,8 +79,15 @@ struct LoadStateInner {
 
 /// Shared completion state of one load task. Unlike the loader's done-set,
 /// readiness is *non-consuming*: any number of tickets can observe it.
+/// `task_id` is atomic because a `NoSlot` completion re-acquires under the
+/// same state: the retry submits a fresh loader task and re-points the
+/// shared state at it, so joiners keep promoting/joining the live task.
 struct LoadState {
-    task_id: u64,
+    task_id: AtomicU64,
+    /// false once the state resolved WITHOUT the expert becoming resident
+    /// (a `NoSlot` drop that exhausted its re-acquire budget) — readers
+    /// then bypass the cache
+    unfulfilled: AtomicBool,
     inner: Mutex<LoadStateInner>,
     cv: Condvar,
 }
@@ -85,13 +95,21 @@ struct LoadState {
 impl LoadState {
     fn new(task_id: u64) -> Arc<Self> {
         Arc::new(Self {
-            task_id,
+            task_id: AtomicU64::new(task_id),
+            unfulfilled: AtomicBool::new(false),
             inner: Mutex::new(LoadStateInner { done: false, waiters: Vec::new() }),
             cv: Condvar::new(),
         })
     }
 
-    fn complete(&self) {
+    fn task_id(&self) -> u64 {
+        self.task_id.load(Ordering::SeqCst)
+    }
+
+    fn complete(&self, fulfilled: bool) {
+        if !fulfilled {
+            self.unfulfilled.store(true, Ordering::SeqCst);
+        }
         let waiters = {
             let mut g = self.inner.lock().unwrap();
             g.done = true;
@@ -153,14 +171,23 @@ impl Ticket {
         self.kind
     }
 
-    /// Loader task id (diagnostics only — residency owns the lifecycle).
+    /// Loader task id (diagnostics only — residency owns the lifecycle;
+    /// a `NoSlot` re-acquire re-points the shared state at a fresh task).
     pub fn task_id(&self) -> u64 {
-        self.state.task_id
+        self.state.task_id()
     }
 
     /// Non-consuming readiness poll.
     pub fn is_ready(&self) -> bool {
         self.state.is_done()
+    }
+
+    /// False when the load resolved WITHOUT the expert becoming resident
+    /// (every re-acquire attempt found no evictable slot). Waiters still
+    /// wake — execution then bypasses the cache and reads next-level
+    /// memory directly — but must not treat the slot as live.
+    pub fn is_fulfilled(&self) -> bool {
+        !self.state.unfulfilled.load(Ordering::SeqCst)
     }
 
     /// Register a push wakeup, fired once when the load completes (on the
@@ -178,7 +205,7 @@ impl std::fmt::Debug for Ticket {
             .field("pool", &self.pool)
             .field("precision", &self.precision)
             .field("kind", &self.kind)
-            .field("task_id", &self.state.task_id)
+            .field("task_id", &self.state.task_id())
             .field("ready", &self.is_ready())
             .finish()
     }
@@ -261,6 +288,91 @@ impl Drop for SequenceSession {
 // The facade
 // ---------------------------------------------------------------------
 
+/// How many times a `NoSlot` completion re-acquires before the state
+/// resolves unfulfilled (waiters then bypass the cache). A no-slot drop is
+/// usually transient — pins release as soon as the pinning rows execute —
+/// but a bounded budget keeps a pathologically pinned pool from wedging
+/// its waiters forever.
+const NOSLOT_REACQUIRES: u32 = 3;
+
+/// The shared wait-set: (key, pool) of every load between submission and
+/// completion.
+type InflightMap = Arc<Mutex<HashMap<(ExpertKey, Pool), Arc<LoadState>>>>;
+
+/// Exactly-once completion hook for one loader task: clear the wait-set
+/// entry, then resolve the shared state (the loader-side done marker is
+/// consumed so it cannot accumulate).
+///
+/// This is where the facade fixes the silent no-slot completion: a task
+/// that finished [`LoadOutcome::NoSlot`] left the expert non-resident, so
+/// instead of waking ticket waiters — who would then execute off a slot
+/// that does not exist — the facade *re-acquires*: it submits a fresh
+/// on-demand task for the same (expert, pool) under the same shared
+/// state, re-points `task_id` at it (so joiners keep promoting the live
+/// task), and installs this hook again with one less retry. Only when the
+/// budget is exhausted does the state resolve unfulfilled
+/// ([`Ticket::is_fulfilled`] = false); execution then bypasses the cache.
+/// A free function (not a method) because it must re-install itself from
+/// inside the completion callback, where no `&self` exists.
+#[allow(clippy::too_many_arguments)]
+fn install_completion(
+    io: LoaderIo,
+    inflight: InflightMap,
+    key: ExpertKey,
+    precision: Precision,
+    pool: Pool,
+    kind: TaskKind,
+    layer: u32,
+    scope: u64,
+    state: Arc<LoadState>,
+    reacquires: u32,
+) {
+    let id = state.task_id();
+    let io_retry = io.clone();
+    io.on_complete_consume_outcome(id, move |_, outcome| {
+        let mut fulfilled = outcome == LoadOutcome::Fulfilled;
+        if outcome == LoadOutcome::NoSlot && kind == TaskKind::OnDemand && reacquires > 0 {
+            // re-acquire: a fresh task gets a fresh reserve() attempt
+            // (pins may have released since)
+            if let Some(new_id) =
+                io_retry.submit_scoped(key, precision, pool, kind, layer, scope)
+            {
+                state.task_id.store(new_id, Ordering::SeqCst);
+                install_completion(
+                    io_retry,
+                    inflight,
+                    key,
+                    precision,
+                    pool,
+                    kind,
+                    layer,
+                    scope,
+                    state,
+                    reacquires - 1,
+                );
+                return;
+            }
+            // submit found the expert resident/incoming after all (a
+            // concurrent load landed between the drop and the retry):
+            // that IS fulfillment
+            fulfilled = true;
+        }
+        {
+            let mut map = inflight.lock().unwrap();
+            let ours = map
+                .get(&(key, pool))
+                .map(|s| Arc::ptr_eq(s, &state))
+                .unwrap_or(false);
+            if ours {
+                map.remove(&(key, pool));
+            }
+        }
+        // NoSlot (out of retries) and Stale alike leave the expert
+        // non-resident: waiters wake but must not trust the slot
+        state.complete(fulfilled);
+    });
+}
+
 /// The session-scoped residency facade: owns the loader + cache manager +
 /// predictor interaction and is the only API the engine and coordinator
 /// use to make experts resident.
@@ -268,9 +380,9 @@ pub struct ExpertResidency {
     loader: ExpertLoader,
     cache: Arc<Mutex<CacheManager>>,
     predictor: Predictor,
-    /// shared wait-set: (key, pool) of every load between submission and
-    /// completion; a second requester joins the existing entry's ticket
-    inflight: Arc<Mutex<HashMap<(ExpertKey, Pool), Arc<LoadState>>>>,
+    /// shared wait-set; a second requester joins the existing entry's
+    /// ticket instead of submitting a duplicate load
+    inflight: InflightMap,
     gens: GenTable,
     next_seq: AtomicU64,
     hi: Precision,
@@ -278,6 +390,9 @@ pub struct ExpertResidency {
 }
 
 impl ExpertResidency {
+    /// Single-lane compat constructor (the pre-pipeline transfer
+    /// serialization); the engine passes its configured [`IoConfig`]
+    /// through [`Self::with_io`] instead.
     pub fn new(
         store: Arc<ExpertStore>,
         cache: Arc<Mutex<CacheManager>>,
@@ -286,7 +401,21 @@ impl ExpertResidency {
         hi: Precision,
         lo: Precision,
     ) -> Self {
-        let loader = ExpertLoader::start(store, cache.clone(), copier);
+        Self::with_io(store, cache, copier, predictor, hi, lo, IoConfig::single_lane())
+    }
+
+    /// Build the facade over a loader running `io.lanes` transfer lanes
+    /// at `io.chunk_bytes` preemption granularity.
+    pub fn with_io(
+        store: Arc<ExpertStore>,
+        cache: Arc<Mutex<CacheManager>>,
+        copier: Arc<ThrottledCopier>,
+        predictor: Predictor,
+        hi: Precision,
+        lo: Precision,
+        io: IoConfig,
+    ) -> Self {
+        let loader = ExpertLoader::start_with(store, cache.clone(), copier, io);
         let gens = loader.gen_table();
         Self {
             loader,
@@ -558,16 +687,17 @@ impl ExpertResidency {
             match kind {
                 TaskKind::OnDemand => {
                     self.loader.stats.lock().unwrap().dedup_hits += 1;
-                    // paper semantics: an on-demand arrival jumps a queued
-                    // prefetch into the priority lane; a started transfer
-                    // is joined as-is (non-preemptible, Fig 9)
-                    self.loader.promote_to_ondemand(state.task_id);
+                    // an on-demand arrival jumps a queued prefetch into
+                    // the priority lane — and since the chunked pipeline,
+                    // a *started* prefetch's remaining chunks are
+                    // re-prioritized too (the Fig 9 penalty, removed)
+                    self.loader.promote_to_ondemand(state.task_id());
                 }
                 TaskKind::Prefetch => {
                     // a re-planned prefetch joining its own previous-token
                     // task: re-stamp it with the requester's current
                     // generation so the planner's bump doesn't doom it
-                    self.loader.refresh_prefetch(state.task_id, scope);
+                    self.loader.refresh_prefetch(state.task_id(), scope);
                 }
             }
             return Some(Ticket { key, pool, precision, kind, state });
@@ -576,24 +706,18 @@ impl ExpertResidency {
         let state = LoadState::new(id);
         inflight.insert((key, pool), state.clone());
         drop(inflight);
-        // exactly-once completion hook: clear the wait-set entry, then
-        // resolve the shared state (the loader-side done marker is
-        // consumed so it cannot accumulate)
-        let inflight_arc = self.inflight.clone();
-        let st = state.clone();
-        self.loader.on_complete_consume(id, move |_| {
-            {
-                let mut map = inflight_arc.lock().unwrap();
-                let stale = map
-                    .get(&(key, pool))
-                    .map(|s| s.task_id == st.task_id)
-                    .unwrap_or(false);
-                if stale {
-                    map.remove(&(key, pool));
-                }
-            }
-            st.complete();
-        });
+        install_completion(
+            self.loader.io(),
+            self.inflight.clone(),
+            key,
+            precision,
+            pool,
+            kind,
+            layer,
+            scope,
+            state.clone(),
+            NOSLOT_REACQUIRES,
+        );
         Some(Ticket { key, pool, precision, kind, state })
     }
 

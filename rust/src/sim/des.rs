@@ -922,6 +922,64 @@ pub fn simulate_admission(
     }
 }
 
+// ---------------------------------------------------------------------
+// Chunked multi-lane transfer pipeline (misprediction-penalty model)
+// ---------------------------------------------------------------------
+
+/// Outcome of the misprediction-penalty scenario: an on-demand miss
+/// arrives just behind a wrong prefetch whose transfer already started
+/// (the §3.3/Fig 9 worst case).
+#[derive(Debug, Clone, Default)]
+pub struct MispredictResult {
+    /// arrival → ready of the on-demand expert (the decode stall)
+    pub ondemand_wait: f64,
+    /// wall time until the link drains (both transfers complete)
+    pub drain: f64,
+    /// total bytes moved across the link
+    pub bytes_moved: f64,
+}
+
+/// Mirror of the loader's chunked transfer pipeline at DES scale (single
+/// lane — the worst case; extra lanes only shrink the wait further): a
+/// mispredicted prefetch of `prefetch_bytes` starts at t = 0, and the
+/// on-demand miss of `ondemand_bytes` arrives at `arrive` (mid-transfer).
+///
+/// `preemptible = false` models the paper's non-preemptible memcpy: the
+/// miss waits out the entire in-flight prefetch. `preemptible = true`
+/// models the chunked pipeline: the prefetch yields at the first
+/// `chunk_bytes` checkpoint after the arrival (a chunk itself is one
+/// non-preemptible DMA call), the on-demand transfer runs, and the
+/// prefetch resumes from its kept offset — so the penalty is O(one chunk)
+/// instead of O(prefetch bytes), while the drain time and total bytes are
+/// identical (the pipeline is work-conserving).
+pub fn simulate_misprediction(
+    bw: f64,
+    prefetch_bytes: f64,
+    ondemand_bytes: f64,
+    chunk_bytes: f64,
+    arrive: f64,
+    preemptible: bool,
+) -> MispredictResult {
+    let p_total = prefetch_bytes / bw;
+    let d_total = ondemand_bytes / bw;
+    let chunk = (chunk_bytes.max(1.0) / bw).min(p_total.max(1e-12));
+    let arrive = arrive.clamp(0.0, p_total);
+    let (ondemand_start, resume_left) = if preemptible {
+        // the checkpoint at the end of the chunk in flight when the miss
+        // arrives (a chunk is one non-preemptible DMA call)
+        let boundary = (((arrive / chunk).floor() + 1.0) * chunk).min(p_total);
+        (boundary, p_total - boundary)
+    } else {
+        (p_total, 0.0)
+    };
+    let ready = ondemand_start + d_total;
+    MispredictResult {
+        ondemand_wait: ready - arrive,
+        drain: ready + resume_left,
+        bytes_moved: prefetch_bytes + ondemand_bytes,
+    }
+}
+
 /// Prefill-only helper.
 pub fn simulate_prefill(
     sys: &SimSystem,
@@ -1066,6 +1124,53 @@ mod tests {
             blocking.max_gap,
             chunked.max_gap
         );
+    }
+
+    #[test]
+    fn chunked_preemption_bounds_misprediction_penalty() {
+        let bw = 1.5e9; // the rtx4090-real link
+        let expert = 1_572_864.0; // one f32 tiny expert
+        let chunk = 262_144.0; // the default --io-chunk-bytes
+        let arrive = 0.5 * chunk / bw; // miss lands mid first chunk
+        let mono = simulate_misprediction(bw, expert, expert, chunk, arrive, false);
+        let pipe = simulate_misprediction(bw, expert, expert, chunk, arrive, true);
+        // work conservation: same bytes, same drain time either way —
+        // chunking changes WHEN bytes arrive, never what (or how much)
+        assert_eq!(mono.bytes_moved, pipe.bytes_moved);
+        assert!((mono.drain - pipe.drain).abs() < 1e-12);
+        let d = expert / bw;
+        let chunk_t = chunk / bw;
+        // non-preemptible: the miss eats ~the whole in-flight prefetch
+        assert!(mono.ondemand_wait >= d + (expert - chunk) / bw);
+        // chunked: at most one chunk + the on-demand transfer itself
+        assert!(
+            pipe.ondemand_wait <= chunk_t + d + 1e-12,
+            "pipelined wait {} exceeds one-chunk bound {}",
+            pipe.ondemand_wait,
+            chunk_t + d
+        );
+        // the stall behind the prefetch (wait minus the miss's own
+        // transfer) drops >= 4x at the default chunk size (6 chunks per
+        // expert -> ~11x here)
+        let stall_mono = mono.ondemand_wait - d;
+        let stall_pipe = pipe.ondemand_wait - d;
+        assert!(stall_pipe > 0.0);
+        assert!(
+            stall_mono >= 4.0 * stall_pipe,
+            "stall {} vs {} (expected >= 4x drop)",
+            stall_mono,
+            stall_pipe
+        );
+    }
+
+    #[test]
+    fn misprediction_model_degenerate_cases_stay_finite() {
+        // chunk larger than the record: preemption can't help (one DMA)
+        let r = simulate_misprediction(1e9, 1000.0, 1000.0, 1e9, 0.0, true);
+        assert!((r.ondemand_wait - 2e-6).abs() < 1e-12);
+        // arrival after the prefetch finished: no queueing either way
+        let late = simulate_misprediction(1e9, 1000.0, 500.0, 100.0, 1.0, false);
+        assert!((late.ondemand_wait - 5e-7).abs() < 1e-12);
     }
 
     #[test]

@@ -1,0 +1,478 @@
+//! Transfer-pipeline regression suite: the chunked, multi-lane,
+//! bandwidth-arbitrated expert loader (preemptible prefetches, shared
+//! fair-share link, no-slot re-acquire, and the TTFT-deadline scheduler
+//! policy that rides on it).
+//!
+//! Everything here is artifact-free: loader-level tests synthesize a tiny
+//! expert store on disk (like `residency.rs`), the coordinator-level test
+//! drives the pure-Rust reference engine over a `model::synth` weight
+//! directory (like `chunked_prefill.rs`). Timing assertions use modeled
+//! link sleeps in the hundreds of milliseconds with generous slack, so
+//! they hold in debug and release CI alike.
+//!
+//! Coverage (the pipeline's contract):
+//! * chunked transfers are byte-identical to monolithic ones;
+//! * an on-demand task issued mid-prefetch becomes ready within ~one
+//!   chunk + its own transfer instead of waiting out the prefetch;
+//! * concurrent lanes split — never multiply — the link bandwidth;
+//! * a preempted transfer's slot stays `Loading` (never committed
+//!   partial) and resumes to a byte-identical commit;
+//! * `promote_to_ondemand` re-prioritizes *started* prefetches;
+//! * a no-slot completion is counted and the residency facade re-acquires
+//!   instead of waking waiters onto a non-resident expert;
+//! * `--policy deadline` serves bit-identically to the FCFS reference.
+
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use hobbit::cache::{CacheManager, Policy, Pool};
+use hobbit::config::{HardwareConfig, IoConfig, ModelConfig, PolicyConfig};
+use hobbit::coordinator::{Coordinator, Request, SchedPolicy};
+use hobbit::engine::{Engine, EngineOptions};
+use hobbit::loader::scorer::Class;
+use hobbit::loader::{ExpertLoader, TaskKind};
+use hobbit::memory::{LinkModel, ThrottledCopier};
+use hobbit::model::synth::{
+    tiny_model_config, tiny_store_config, write_synth_expert_store, write_synth_model,
+};
+use hobbit::model::ExpertStore;
+use hobbit::predictor::Predictor;
+use hobbit::residency::ExpertResidency;
+use hobbit::{ExpertKey, Precision};
+
+fn tiny_cfg() -> ModelConfig {
+    tiny_store_config("pipeline-test")
+}
+
+/// Synthetic expert store (every expert at every precision) so the loader
+/// has real bytes to move without the AOT compile step.
+fn synth_store(cfg: &ModelConfig, dir: &Path) -> Arc<ExpertStore> {
+    write_synth_expert_store(dir, cfg).expect("synth store");
+    Arc::new(ExpertStore::load(dir, cfg).unwrap())
+}
+
+struct Rig {
+    loader: ExpertLoader,
+    cache: Arc<Mutex<CacheManager>>,
+    copier: Arc<ThrottledCopier>,
+    store: Arc<ExpertStore>,
+}
+
+/// Loader over a synthetic store with explicit pipeline knobs; `bw`
+/// throttles the link so transfers stay observable mid-flight.
+fn mk_loader(hi_cap: usize, lo_cap: usize, bw: f64, io: IoConfig, name: &str) -> Rig {
+    let cfg = tiny_cfg();
+    let dir = std::env::temp_dir().join(format!("hobbit_pipeline_{name}"));
+    let store = synth_store(&cfg, &dir);
+    let cache = Arc::new(Mutex::new(CacheManager::new(
+        cfg.n_layers,
+        cfg.n_experts,
+        hi_cap,
+        cfg.bytes_for(Precision::F32),
+        lo_cap,
+        cfg.bytes_for(Precision::Q8),
+        Policy::Lru,
+        0.25,
+    )));
+    let copier = Arc::new(ThrottledCopier::new(LinkModel { bytes_per_s: bw, latency_s: 0.0 }));
+    let loader = ExpertLoader::start_with(store.clone(), cache.clone(), copier.clone(), io);
+    Rig { loader, cache, copier, store }
+}
+
+/// Residency facade over a synthetic store with explicit pipeline knobs.
+fn mk_residency(
+    hi_cap: usize,
+    lo_cap: usize,
+    bw: f64,
+    io: IoConfig,
+    name: &str,
+) -> ExpertResidency {
+    let cfg = tiny_cfg();
+    let dir = std::env::temp_dir().join(format!("hobbit_pipeline_{name}"));
+    let store = synth_store(&cfg, &dir);
+    let cache = Arc::new(Mutex::new(CacheManager::new(
+        cfg.n_layers,
+        cfg.n_experts,
+        hi_cap,
+        cfg.bytes_for(Precision::F32),
+        lo_cap,
+        cfg.bytes_for(Precision::Q8),
+        Policy::Lru,
+        0.25,
+    )));
+    let copier = Arc::new(ThrottledCopier::new(LinkModel { bytes_per_s: bw, latency_s: 0.0 }));
+    let predictor = Predictor::new(2, cfg.top_k, 0.6, 0.9, true, cfg.n_layers);
+    ExpertResidency::with_io(store, cache, copier, predictor, Precision::F32, Precision::Q8, io)
+}
+
+// ---------------------------------------------------------------------
+// (a) byte equivalence: chunking changes WHEN bytes arrive, never what
+// ---------------------------------------------------------------------
+
+#[test]
+fn chunked_transfer_is_byte_identical_to_monolithic() {
+    // fine chunking (4096-byte records in 128-byte chunks) across 2 lanes
+    let chunked = mk_loader(
+        8,
+        8,
+        1e8,
+        IoConfig { lanes: 2, chunk_bytes: 128 },
+        "bytes_chunked",
+    );
+    // one lane, chunk >= record: the pre-pipeline monolithic transfer
+    let mono = mk_loader(
+        8,
+        8,
+        1e8,
+        IoConfig { lanes: 1, chunk_bytes: usize::MAX },
+        "bytes_mono",
+    );
+    let picks = [
+        (ExpertKey::new(0, 0), Precision::F32, Pool::Hi),
+        (ExpertKey::new(1, 2), Precision::F32, Pool::Hi),
+        (ExpertKey::new(2, 1), Precision::Q8, Pool::Lo),
+        (ExpertKey::new(3, 3), Precision::Q8, Pool::Lo),
+    ];
+    for rig in [&chunked, &mono] {
+        let mut ids = Vec::new();
+        for &(key, prec, pool) in &picks {
+            if let Some(id) = rig.loader.submit(key, prec, pool, TaskKind::OnDemand, key.layer)
+            {
+                ids.push(id);
+            }
+        }
+        rig.loader.wait(&ids);
+    }
+    for &(key, prec, pool) in &picks {
+        let want = chunked.store.record(key, prec).to_vec();
+        for rig in [&chunked, &mono] {
+            let cache = rig.cache.lock().unwrap();
+            let pool_ref = match pool {
+                Pool::Hi => &cache.hi,
+                Pool::Lo => &cache.lo,
+            };
+            assert!(pool_ref.contains_ready(key), "{key:?} not committed");
+            let buf = pool_ref.buffer(key).unwrap();
+            let got = buf.lock().unwrap();
+            assert_eq!(&got[..], &want[..], "bytes diverged for {key:?}");
+        }
+    }
+    // accounting: both moved exactly the same bytes
+    assert_eq!(chunked.copier.bytes_moved(), mono.copier.bytes_moved());
+    assert_eq!(chunked.copier.transfers(), mono.copier.transfers());
+}
+
+// ---------------------------------------------------------------------
+// (b) preemption bound: the misprediction penalty is O(one chunk)
+// ---------------------------------------------------------------------
+
+/// One f32 record (4096 B) at 1e4 B/s takes ~410 ms; a 256-byte chunk
+/// ~26 ms. The bound below would be violated by the old non-preemptible
+/// loader (~350 ms of leftover prefetch + ~410 ms own transfer ≈ 760 ms).
+#[test]
+fn ondemand_issued_mid_prefetch_ready_within_one_chunk_plus_own_transfer() {
+    let rig = mk_loader(
+        8,
+        8,
+        1e4,
+        IoConfig { lanes: 1, chunk_bytes: 256 },
+        "preempt_bound",
+    );
+    let wrong = ExpertKey::new(0, 0); // the mispredicted prefetch
+    let miss = ExpertKey::new(1, 1); // the on-demand miss behind it
+    let pf = rig
+        .loader
+        .submit(wrong, Precision::F32, Pool::Hi, TaskKind::Prefetch, 0)
+        .expect("prefetch submitted");
+    // let the transfer get well underway (~2 chunks in)
+    std::thread::sleep(Duration::from_millis(60));
+    let t0 = Instant::now();
+    let od = rig
+        .loader
+        .submit(miss, Precision::F32, Pool::Hi, TaskKind::OnDemand, 1)
+        .expect("on-demand submitted");
+    rig.loader.wait(&[od]);
+    let wait = t0.elapsed();
+    // one chunk (~26 ms) + own transfer (~410 ms) + generous slack
+    assert!(
+        wait < Duration::from_millis(620),
+        "on-demand waited {wait:?} behind an in-flight prefetch (preemption broken)"
+    );
+    let st = rig.loader.stats.lock().unwrap().clone();
+    assert!(st.preemptions >= 1, "no preemption recorded");
+    drop(st);
+    // the preempted prefetch still completes, byte-identical
+    rig.loader.wait(&[pf]);
+    let cache = rig.cache.lock().unwrap();
+    for key in [wrong, miss] {
+        let buf = cache.hi.buffer(key).expect("committed");
+        let got = buf.lock().unwrap();
+        assert_eq!(&got[..], rig.store.record(key, Precision::F32));
+    }
+    drop(cache);
+    assert_eq!(rig.copier.bytes_moved(), 2 * 4096, "work conservation");
+    assert_eq!(rig.copier.transfers(), 2);
+}
+
+// ---------------------------------------------------------------------
+// (c) bandwidth conservation: lanes split the link, never multiply it
+// ---------------------------------------------------------------------
+
+#[test]
+fn lanes_conserve_total_link_bandwidth() {
+    // two records at 4e4 B/s = ~102 ms each at full rate, ~205 ms serial.
+    // Two lanes move them concurrently at half rate each: the drain must
+    // still take ~the serial time (each lane would finish in ~102 ms if
+    // lanes multiplied bandwidth — the bug this pins against).
+    let rig = mk_loader(
+        8,
+        8,
+        4e4,
+        IoConfig { lanes: 2, chunk_bytes: 256 },
+        "conserve",
+    );
+    let serial = Duration::from_secs_f64(2.0 * 4096.0 / 4e4);
+    let t0 = Instant::now();
+    let a = rig
+        .loader
+        .submit(ExpertKey::new(0, 0), Precision::F32, Pool::Hi, TaskKind::OnDemand, 0)
+        .unwrap();
+    let b = rig
+        .loader
+        .submit(ExpertKey::new(0, 1), Precision::F32, Pool::Hi, TaskKind::OnDemand, 0)
+        .unwrap();
+    rig.loader.wait(&[a, b]);
+    let wall = t0.elapsed();
+    assert!(
+        wall.as_secs_f64() >= 0.75 * serial.as_secs_f64(),
+        "two lanes drained 2 records in {wall:?} — lanes are multiplying bandwidth \
+         (serial time {serial:?})"
+    );
+    assert!(
+        wall.as_secs_f64() <= 2.0 * serial.as_secs_f64(),
+        "two lanes took {wall:?} for {serial:?} of work — arbiter over-throttles"
+    );
+    assert_eq!(rig.copier.bytes_moved(), 2 * 4096);
+}
+
+// ---------------------------------------------------------------------
+// (d) partial progress: a preempted slot stays Loading, never committed
+// ---------------------------------------------------------------------
+
+#[test]
+fn preempted_transfer_keeps_slot_incoming_and_resumes_to_identical_commit() {
+    let rig = mk_loader(
+        8,
+        8,
+        1e4,
+        IoConfig { lanes: 1, chunk_bytes: 256 },
+        "partial",
+    );
+    let pf_key = ExpertKey::new(2, 0);
+    let od_key = ExpertKey::new(3, 1);
+    let pf = rig
+        .loader
+        .submit(pf_key, Precision::F32, Pool::Hi, TaskKind::Prefetch, 2)
+        .expect("prefetch submitted");
+    std::thread::sleep(Duration::from_millis(60)); // mid-transfer
+    let od = rig
+        .loader
+        .submit(od_key, Precision::F32, Pool::Hi, TaskKind::OnDemand, 3)
+        .expect("on-demand submitted");
+    // while the on-demand transfer runs (~410 ms), the preempted prefetch
+    // must be parked partial: reserved (Loading) but NOT readable
+    std::thread::sleep(Duration::from_millis(150));
+    {
+        let cache = rig.cache.lock().unwrap();
+        assert!(
+            !cache.hi.contains_ready(pf_key),
+            "a partially transferred slot surfaced as Ready"
+        );
+        assert!(
+            cache.hi.is_loading(pf_key),
+            "the preempted transfer lost its reservation"
+        );
+        assert!(cache.hi.buffer(pf_key).is_none(), "partial buffer readable");
+    }
+    rig.loader.wait(&[od, pf]);
+    let cache = rig.cache.lock().unwrap();
+    assert!(cache.hi.contains_ready(pf_key));
+    let buf = cache.hi.buffer(pf_key).unwrap();
+    let got = buf.lock().unwrap();
+    assert_eq!(
+        &got[..],
+        rig.store.record(pf_key, Precision::F32),
+        "resumed transfer committed different bytes"
+    );
+}
+
+// ---------------------------------------------------------------------
+// (e) started-prefetch promotion
+// ---------------------------------------------------------------------
+
+#[test]
+fn promote_reprioritizes_a_started_prefetch() {
+    let rig = mk_loader(
+        8,
+        8,
+        1e4,
+        IoConfig { lanes: 1, chunk_bytes: 256 },
+        "promote_started",
+    );
+    let key = ExpertKey::new(1, 3);
+    let id = rig
+        .loader
+        .submit(key, Precision::F32, Pool::Hi, TaskKind::Prefetch, 1)
+        .expect("prefetch submitted");
+    std::thread::sleep(Duration::from_millis(60)); // well into the transfer
+    assert!(
+        rig.loader.promote_to_ondemand(id),
+        "promotion of a STARTED prefetch must succeed (it re-prioritizes \
+         the remaining chunks)"
+    );
+    rig.loader.wait(&[id]);
+    let st = rig.loader.stats.lock().unwrap().clone();
+    assert_eq!(st.inflight_promotions, 1, "promotion not applied mid-flight");
+    assert_eq!(st.ondemand_loads.iter().sum::<u64>(), 1, "committed as on-demand");
+    assert_eq!(st.prefetch_loads.iter().sum::<u64>(), 0);
+    // promotion of a completed task reports false
+    assert!(!rig.loader.promote_to_ondemand(id));
+}
+
+// ---------------------------------------------------------------------
+// (f) no-slot drops: counted, and the facade re-acquires
+// ---------------------------------------------------------------------
+
+#[test]
+fn noslot_drop_is_counted_and_facade_reacquires() {
+    // hi pool of ONE slot: once A is resident and pinned, B's load has no
+    // evictable victim
+    let resid = mk_residency(
+        1,
+        4,
+        1e8,
+        IoConfig { lanes: 1, chunk_bytes: 1024 },
+        "noslot",
+    );
+    let a = ExpertKey::new(0, 0);
+    let b = ExpertKey::new(0, 1);
+    let (_ua, wa) = resid.acquire(0, vec![(a, Class::Hi, vec![1.0])], None);
+    resid.wait(&wa);
+    assert!(resid.buffer(a, Pool::Hi).is_some());
+
+    // B: probe misses, the load finds every slot pinned -> NoSlot drops
+    // (counted once per re-acquire attempt), ticket resolves unfulfilled
+    let (_ub, wb) = resid.acquire(0, vec![(b, Class::Hi, vec![1.0])], None);
+    assert_eq!(wb.len(), 1);
+    resid.wait(&wb);
+    let t = &wb.tickets()[0];
+    assert!(t.is_ready(), "waiters must wake even without a slot");
+    assert!(
+        !t.is_fulfilled(),
+        "a no-slot completion must not claim the expert resident"
+    );
+    assert!(
+        resid.buffer(b, Pool::Hi).is_none(),
+        "no bytes were moved; executing would read a stale slot"
+    );
+    let st = resid.loader_stats();
+    assert!(
+        st.noslot_drops >= 2,
+        "every re-acquire attempt must be counted (got {})",
+        st.noslot_drops
+    );
+
+    // drop the pins (the barrier's release path) and re-acquire: the slot
+    // frees and the load now lands
+    resid.release(a, Pool::Hi);
+    resid.release(b, Pool::Hi);
+    let (_ub2, wb2) = resid.acquire(1, vec![(b, Class::Hi, vec![1.0])], None);
+    resid.wait(&wb2);
+    assert!(wb2.is_empty() || wb2.tickets()[0].is_fulfilled());
+    assert!(
+        resid.buffer(b, Pool::Hi).is_some(),
+        "re-acquire after pin release must load the expert"
+    );
+    resid.release(b, Pool::Hi);
+}
+
+// ---------------------------------------------------------------------
+// (g) deadline policy: scheduling must never change results
+// ---------------------------------------------------------------------
+
+const SHORT_PROMPTS: [&str; 3] =
+    ["alpha request one", "bravo request two", "charlie request three"];
+
+fn big_cfg(name: &str) -> ModelConfig {
+    let mut cfg = tiny_model_config(name);
+    cfg.max_seq = 512;
+    cfg
+}
+
+fn mk_engine(name: &str, dir: &Path, load_bw: f64) -> Engine {
+    let hw = HardwareConfig {
+        name: name.into(),
+        load_bw,
+        load_latency: 0.0,
+        hi_cache_experts: 6,
+        lo_cache_experts: 6,
+        cpu_assist: false,
+        cpu_expert_time: 0.0,
+    };
+    // dynamic loading off: logits depend only on token history, so
+    // scheduling policy must not change them
+    let policy =
+        PolicyConfig { dynamic_loading: false, prefetch_depth: 2, ..PolicyConfig::default() };
+    Engine::new_reference(dir, big_cfg(name), EngineOptions::new(hw, policy))
+        .expect("reference engine")
+}
+
+#[test]
+fn deadline_policy_serves_bit_identically_to_fcfs() {
+    let name = "deadline_equiv";
+    let dir: PathBuf = std::env::temp_dir().join(format!("hobbit_pipeline_{name}"));
+    write_synth_model(&dir, &big_cfg(name), 0xD34D11).expect("synth model");
+    let max_new = 5usize;
+    let long_prompt = "x".repeat(299); // 300 tokens with BOS
+
+    // FCFS batch-1 ground truth
+    let mut reference = Vec::new();
+    {
+        let eng = mk_engine(name, &dir, 1e9);
+        let mut coord = Coordinator::new(eng);
+        for (i, p) in SHORT_PROMPTS.iter().enumerate() {
+            reference
+                .push(coord.generate(&Request::new(i as u64 + 1, *p, max_new)).unwrap().tokens);
+        }
+        let long_req = Request::new(99, long_prompt.clone(), max_new);
+        reference.push(coord.generate(&long_req).unwrap().tokens);
+    }
+
+    // interleaved + deadline policy, offload-bound, tight TTFT budget so
+    // the urgency path genuinely engages for the long admission
+    let eng = mk_engine(name, &dir, 2e6);
+    let mut coord = Coordinator::interleaved(eng);
+    coord.sched_policy = SchedPolicy::Deadline;
+    coord.ttft_deadline = Duration::from_millis(1);
+    coord.max_active = 4;
+    for (i, p) in SHORT_PROMPTS.iter().enumerate() {
+        coord.submit(Request::new(i as u64 + 1, *p, max_new));
+    }
+    coord.submit(Request::new(99, long_prompt, max_new));
+    let mut results = coord.drain().expect("drain");
+    assert!(coord.take_failures().is_empty(), "no request may fail");
+    assert_eq!(results.len(), SHORT_PROMPTS.len() + 1);
+    results.sort_by_key(|r| r.id);
+    for (r, want) in results.iter().zip(&reference) {
+        assert_eq!(
+            &r.tokens, want,
+            "request {}: deadline-policy serving diverged from the FCFS reference",
+            r.id
+        );
+    }
+    // the long admission's prefill really was sliced under the policy
+    let sch = coord.scheduler_stats().clone();
+    assert!(sch.prefill_slices >= 16, "only {} prefill slices", sch.prefill_slices);
+    assert_eq!(sch.prefill_failures, 0);
+}
