@@ -15,16 +15,29 @@
 //! mirror is `sim::des::simulate_admission`).
 
 use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use hobbit::baselines;
-use hobbit::config::{HardwareConfig, PolicyConfig};
+use hobbit::cache::{CacheManager, Policy, Pool};
+use hobbit::config::{HardwareConfig, IoConfig, PolicyConfig};
 use hobbit::coordinator::{Coordinator, Request, SchedulerMode};
 use hobbit::engine::{Engine, EngineOptions, KvState, PrefillProgress};
+use hobbit::loader::scorer::Class;
+use hobbit::memory::{LinkModel, ThrottledCopier};
 use hobbit::metrics::RunReport;
-use hobbit::model::synth::{tiny_model_config, write_synth_model};
+use hobbit::model::synth::{
+    tiny_model_config, tiny_store_config, write_synth_expert_store, write_synth_model,
+};
+use hobbit::model::ExpertStore;
+use hobbit::predictor::{AccuracyTracker, Predictor};
+use hobbit::residency::ExpertResidency;
+use hobbit::sim::des::simulate_progressive_fetch;
 use hobbit::tokenizer::BOS;
+use hobbit::trace::replay::{replay, ReplayConfig};
+use hobbit::trace::{generate, TraceGenConfig};
 use hobbit::util::stats::summarize;
+use hobbit::{ExpertKey, Precision};
 
 /// Slow link + tiny cache: the regime where expert loading dominates
 /// decode (Fig 3a) and blocking FCFS leaves the engine idle.
@@ -218,8 +231,166 @@ fn admission_scenario() {
     }
 }
 
+// ---------------------------------------------------------------------
+// Accuracy-vs-latency: the progressive precision-floor sweep
+// (artifact-free: real residency/loader/link over a synthetic store)
+// ---------------------------------------------------------------------
+
+/// Slow enough (~20 ms per f32 expert) that the per-precision transfer
+/// time dominates the measured acquire wall time.
+const FLOOR_BW: f64 = 2e5;
+
+/// Measured time-to-first-usable of a cold on-demand miss with the fetch
+/// floor pinned to `pin`: one acquire per expert of the tiny synthetic
+/// store, averaged. The residency facade, loader lanes, and throttled
+/// link are the real ones.
+fn measured_ttfu(pin: Precision) -> f64 {
+    let cfg = tiny_store_config("bench-floor");
+    let dir = std::env::temp_dir().join(format!("hobbit_bench_floor_{}", pin.name()));
+    write_synth_expert_store(&dir, &cfg).expect("synth store");
+    let store = Arc::new(ExpertStore::load(&dir, &cfg).expect("store"));
+    let cache = Arc::new(Mutex::new(CacheManager::new(
+        cfg.n_layers,
+        cfg.n_experts,
+        16,
+        cfg.bytes_for(Precision::F32),
+        4,
+        cfg.bytes_for(Precision::Q8),
+        Policy::Lru,
+        0.25,
+    )));
+    let copier =
+        Arc::new(ThrottledCopier::new(LinkModel { bytes_per_s: FLOOR_BW, latency_s: 0.0 }));
+    let predictor = Predictor::new(2, cfg.top_k, 0.6, 0.9, true, cfg.n_layers);
+    let resid = ExpertResidency::with_io(
+        store,
+        cache,
+        copier,
+        predictor,
+        Precision::F32,
+        Precision::Q8,
+        IoConfig { lanes: 2, chunk_bytes: 1024 },
+    )
+    .with_precision_mode(Some(pin), false, 0.6);
+    let mut total = 0.0;
+    let mut n = 0u32;
+    for layer in 0..cfg.n_layers {
+        for expert in 0..cfg.n_experts {
+            let key = ExpertKey::new(layer, expert);
+            let t0 = Instant::now();
+            let (_u, w) = resid.acquire(layer, vec![(key, Class::Hi, vec![1.0], 1.0)], None);
+            resid.wait(&w);
+            total += t0.elapsed().as_secs_f64();
+            resid.release(key, Pool::Hi);
+            n += 1;
+        }
+    }
+    total / n as f64
+}
+
+/// Next-layer top-k gate prediction accuracy over the trace (the quality
+/// signal the prefetcher rides; `AccuracyTracker` is the engine's own
+/// Fig 7b tracker).
+fn gate_prediction_accuracy(ts: &hobbit::trace::TraceSet, k: usize) -> f64 {
+    let mut tracker = AccuracyTracker::new(1);
+    for s in &ts.seqs {
+        for t in 0..s.n_tokens {
+            for l in 0..s.n_layers.saturating_sub(1) {
+                let cur: Vec<u32> =
+                    s.event(t, l).top_k(k).iter().map(|x| x.0 as u32).collect();
+                let nxt: Vec<u32> =
+                    s.event(t, l + 1).top_k(k).iter().map(|x| x.0 as u32).collect();
+                tracker.record(1, &cur, &nxt);
+            }
+        }
+    }
+    tracker.accuracy(1)
+}
+
+/// For each candidate fetch floor: measured TTFU (pinned acquire), the
+/// DES model's TTFU for the same staged lo->hi stream, and the cache
+/// replay's miss penalty when a lo miss costs `bytes(p)/bytes(f32)`.
+/// Quantifies the accuracy-vs-latency trade progressive streaming
+/// schedules over. Counters surface under the report's "serving" key
+/// only — the FCFS RunReport stays byte-stable.
+fn progressive_floor_scenario() {
+    let cfg = tiny_store_config("bench-floor");
+    let hi_bytes = cfg.bytes_for(Precision::F32) as f64;
+    println!(
+        "\n== progressive floor sweep: accuracy vs time-to-first-usable \
+         ({:.0} KB/s link, {} B f32 record) ==\n",
+        FLOOR_BW / 1e3,
+        hi_bytes,
+    );
+    let ts = generate(
+        &TraceGenConfig { n_layers: 8, n_experts: 8, ..TraceGenConfig::mixtral_like() },
+        4,
+        48,
+    );
+    let gate_acc = gate_prediction_accuracy(&ts, 2);
+    let mut rows: Vec<String> = Vec::new();
+    let mut ttfus: Vec<(Precision, f64)> = Vec::new();
+    for p in Precision::ALL {
+        let ttfu = measured_ttfu(p);
+        ttfus.push((p, ttfu));
+        let model = simulate_progressive_fetch(
+            FLOOR_BW,
+            0.0,
+            cfg.bytes_for(p) as f64,
+            hi_bytes,
+            1024.0,
+            false,
+        );
+        let rep = replay(
+            &ts,
+            Policy::Multidim { w: [0.65, 0.05, 0.10, 0.20] },
+            &ReplayConfig {
+                penalty_ratio: cfg.bytes_for(p) as f64 / hi_bytes,
+                ..ReplayConfig::default()
+            },
+        );
+        println!(
+            "{:>4}  ttfu {:>7.2}ms (model {:>7.2}ms) | replay miss penalty {:>7.2}, \
+             hit ratio {:.3}",
+            p.name(),
+            ttfu * 1e3,
+            model.time_to_first_usable * 1e3,
+            rep.penalty,
+            rep.hit_ratio(),
+        );
+        rows.push(format!(
+            "{{\"precision\":\"{}\",\"ttfu_ms\":{:.3},\"model_ttfu_ms\":{:.3},\
+             \"miss_penalty\":{:.2},\"hit_ratio\":{:.4}}}",
+            p.name(),
+            ttfu * 1e3,
+            model.time_to_first_usable * 1e3,
+            rep.penalty,
+            rep.hit_ratio(),
+        ));
+    }
+    let floor_ttfu = |p: Precision| {
+        ttfus.iter().find(|(q, _)| *q == p).map(|(_, t)| *t).unwrap_or(0.0)
+    };
+    let f32_ttfu = floor_ttfu(Precision::F32);
+    let q4_ttfu = floor_ttfu(Precision::Q4);
+    println!(
+        "\ngate top-2 next-layer prediction accuracy {gate_acc:.3} | \
+         q4 floor cuts first-usable {:.1}x vs hi-only",
+        f32_ttfu / q4_ttfu.max(1e-9),
+    );
+    // the same counters the server emits — "serving" key only
+    println!(
+        "serving: {{\"progressive_floor\":[{}],\"gate_top2_accuracy\":{gate_acc:.4}}}",
+        rows.join(","),
+    );
+    if q4_ttfu >= f32_ttfu {
+        eprintln!("WARNING: a narrower floor did not reduce time-to-first-usable");
+    }
+}
+
 fn main() {
     admission_scenario();
+    progressive_floor_scenario();
 
     if !PathBuf::from("artifacts/mixtral-tiny/manifest.json").exists() {
         eprintln!("\nartifacts not built; skipping the FCFS-vs-interleaved serving bench");

@@ -27,7 +27,7 @@ use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
 use crate::metrics::CacheStats;
-use crate::ExpertKey;
+use crate::{ExpertKey, Precision};
 
 /// Which pool an expert version lives in.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -104,6 +104,12 @@ pub struct CachePool {
     state: Vec<SlotState>,
     map: HashMap<ExpertKey, usize>,
     buffers: Vec<Arc<Mutex<Vec<u8>>>>,
+    /// resident tier of each slot's bytes: `None` = the pool's native
+    /// precision (the pre-progressive contract, and what `commit` sets);
+    /// `Some(p)` = a progressive load left precision-`p` bytes in the slot
+    /// (the record occupies a *prefix* of the slot buffer when `p` is
+    /// narrower than the pool's native precision)
+    tiers: Vec<Option<Precision>>,
     pinned: HashMap<ExpertKey, u32>, // pin count (predictions may stack)
 }
 
@@ -115,6 +121,7 @@ impl CachePool {
             buffers: (0..capacity)
                 .map(|_| Arc::new(Mutex::new(vec![0u8; slot_bytes])))
                 .collect(),
+            tiers: vec![None; capacity],
             pinned: HashMap::new(),
         }
     }
@@ -141,6 +148,30 @@ impl CachePool {
         let &slot = self.map.get(&key)?;
         if self.state[slot] == SlotState::Ready(key) {
             Some(self.buffers[slot].clone())
+        } else {
+            None
+        }
+    }
+
+    /// Slot buffer plus the resident tier of its bytes (`None` tier = the
+    /// pool's native precision). Readers that clone record bytes must read
+    /// the tier and the bytes under ONE cache lock ([`CacheManager`]'s
+    /// callers hold it) so an in-place upgrade can never tear a
+    /// tier/bytes pair.
+    pub fn buffer_tier(&self, key: ExpertKey) -> Option<(Arc<Mutex<Vec<u8>>>, Option<Precision>)> {
+        let &slot = self.map.get(&key)?;
+        if self.state[slot] == SlotState::Ready(key) {
+            Some((self.buffers[slot].clone(), self.tiers[slot]))
+        } else {
+            None
+        }
+    }
+
+    /// Resident tier of a ready expert (`None` tier = pool native).
+    pub fn resident_tier(&self, key: ExpertKey) -> Option<Option<Precision>> {
+        let &slot = self.map.get(&key)?;
+        if self.state[slot] == SlotState::Ready(key) {
+            Some(self.tiers[slot])
         } else {
             None
         }
@@ -378,17 +409,59 @@ impl CacheManager {
         let _ = n_layers;
         let p = self.pool_mut(pool);
         p.state[slot] = SlotState::Loading(key);
+        p.tiers[slot] = None;
         p.map.insert(key, slot);
         Some(Reservation { slot, buffer: p.buffers[slot].clone(), evicted })
     }
 
-    /// Mark a reserved slot as filled and readable.
+    /// Mark a reserved slot as filled and readable at the pool's native
+    /// precision (the pre-progressive contract).
     pub fn commit(&mut self, key: ExpertKey, pool: Pool) {
+        self.commit_tier(key, pool, None);
+    }
+
+    /// Mark a reserved slot as filled and readable, recording the tier of
+    /// the bytes it holds (`None` = pool native). A progressive lo-first
+    /// load commits its floor precision here; the slot becomes usable
+    /// immediately, at that tier.
+    pub fn commit_tier(&mut self, key: ExpertKey, pool: Pool, tier: Option<Precision>) {
         let p = self.pool_mut(pool);
         if let Some(&slot) = p.map.get(&key) {
             debug_assert_eq!(p.state[slot], SlotState::Loading(key));
             p.state[slot] = SlotState::Ready(key);
+            p.tiers[slot] = tier;
         }
+    }
+
+    /// Atomically upgrade a READY slot's bytes in place: copy the fully
+    /// staged `record` (streamed into private memory off the critical
+    /// path) into the slot buffer and flip the tier, all under the one
+    /// cache lock the caller holds — readers clone (tier, bytes) under the
+    /// same lock, so they observe either the old tier with the old bytes
+    /// or the new tier with the new bytes, never a mix. Returns false —
+    /// and changes nothing — when the slot is no longer `Ready(key)` (it
+    /// was evicted or is being refilled): the upgrade aborts and whatever
+    /// tier is resident stays valid. In-flight compute is never
+    /// invalidated either way, because executors clone the record bytes
+    /// out before computing.
+    pub fn commit_upgrade(
+        &mut self,
+        key: ExpertKey,
+        pool: Pool,
+        tier: Option<Precision>,
+        record: &[u8],
+    ) -> bool {
+        let p = self.pool_mut(pool);
+        let Some(&slot) = p.map.get(&key) else { return false };
+        if p.state[slot] != SlotState::Ready(key) {
+            return false;
+        }
+        let mut buf = p.buffers[slot].lock().unwrap();
+        debug_assert!(buf.len() >= record.len(), "upgrade record exceeds slot");
+        buf[..record.len()].copy_from_slice(record);
+        drop(buf);
+        p.tiers[slot] = tier;
+        true
     }
 
     /// Abort a reservation (load failed / cancelled before starting).
@@ -612,6 +685,32 @@ mod tests {
         assert_eq!(m.records.freq[ib], 0);
         assert_eq!(m.records.token, 0);
         assert_eq!(m.records.model_freq[ib], 1);
+    }
+
+    #[test]
+    fn tier_lifecycle_commit_upgrade_and_abort() {
+        let mut m = mgr(1, 0);
+        let r = m.reserve(k(0, 0), Pool::Hi, 0).unwrap();
+        r.buffer.lock().unwrap().fill(0x11);
+        m.commit_tier(k(0, 0), Pool::Hi, Some(Precision::Q8));
+        assert_eq!(m.hi.resident_tier(k(0, 0)), Some(Some(Precision::Q8)));
+        let (_, tier) = m.hi.buffer_tier(k(0, 0)).unwrap();
+        assert_eq!(tier, Some(Precision::Q8));
+        // in-place upgrade to the pool's native tier flips bytes + tier
+        let hi_bytes = vec![0x22u8; 8];
+        assert!(m.commit_upgrade(k(0, 0), Pool::Hi, None, &hi_bytes));
+        assert_eq!(m.hi.resident_tier(k(0, 0)), Some(None));
+        let (buf, _) = m.hi.buffer_tier(k(0, 0)).unwrap();
+        assert_eq!(&buf.lock().unwrap()[..8], &hi_bytes[..]);
+        // evicted slot: upgrade aborts, the new occupant is untouched
+        let r = m.reserve(k(0, 1), Pool::Hi, 0).unwrap();
+        assert_eq!(r.evicted, Some(k(0, 0)));
+        assert!(!m.commit_upgrade(k(0, 0), Pool::Hi, None, &hi_bytes));
+        // a slot mid-refill (Loading) also refuses the stale upgrade
+        assert!(!m.commit_upgrade(k(0, 1), Pool::Hi, None, &hi_bytes));
+        m.commit(k(0, 1), Pool::Hi);
+        // reserve reset the tier for the new occupant
+        assert_eq!(m.hi.resident_tier(k(0, 1)), Some(None));
     }
 
     #[test]

@@ -87,6 +87,11 @@ COMMANDS:
               link bandwidth by weighted fair share [2])
               --io-chunk-bytes N (transfer preemption granularity: a
               prefetch yields to on-demand work between chunks [262144])
+              --progressive (stream hi-pool misses low-bits-first: the
+              expert is usable at the lo tier while the hi record upgrades
+              it in place from the prefetch lane)
+              --pin-precision f32|q8|q4|q2 (freeze the per-acquire fetch
+              precision; excludes --progressive)
   generate    run one generation from the CLI
               --model M --artifacts DIR --prompt TEXT --max-new N --temp T
               --hardware H --no-dynamic --no-prefetch --policy P

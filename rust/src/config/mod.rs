@@ -206,6 +206,19 @@ pub struct PolicyConfig {
     /// high-precision format and its low-precision replacement.
     pub hi_precision: Precision,
     pub lo_precision: Precision,
+    /// progressive low-bits-first streaming: a criticality-class cache
+    /// miss may stream its `lo_precision` record first (usable as soon as
+    /// it lands) and upgrade to `hi_precision` as a background
+    /// continuation. The per-acquire floor decision weighs criticality,
+    /// TTFT-deadline slack, and link pressure. Off = the pre-progressive
+    /// behavior (every hi-pool miss streams the full hi record).
+    pub progressive: bool,
+    /// freeze the per-acquire precision choice: every hi-pool fetch
+    /// streams exactly this precision, no staging, no upgrades
+    /// (`--pin-precision`; pinning `hi_precision` reproduces the
+    /// non-progressive byte stream bit-for-bit). Lo-pool fetches always
+    /// use `lo_precision` — their slots are sized for it.
+    pub pin_precision: Option<Precision>,
 }
 
 impl Default for PolicyConfig {
@@ -222,6 +235,8 @@ impl Default for PolicyConfig {
             w_fld: 0.20,
             hi_precision: Precision::F32,
             lo_precision: Precision::Q8,
+            progressive: false,
+            pin_precision: None,
         }
     }
 }
@@ -254,6 +269,15 @@ impl PolicyConfig {
         if self.prefetch_depth > 4 {
             return Err("prefetch depth > 4 has no compiled gate artifact".into());
         }
+        if let Some(p) = self.pin_precision {
+            // the pinned record must fit the hi pool's native-sized slots
+            if p.bits() > self.hi_precision.bits() {
+                return Err("pin precision wider than hi precision".into());
+            }
+            if self.progressive {
+                return Err("pin-precision freezes the choice; drop --progressive".into());
+            }
+        }
         Ok(())
     }
 
@@ -275,6 +299,12 @@ impl PolicyConfig {
         }
         if let Some(p) = j.get("lo_precision").and_then(Json::as_str) {
             cfg.lo_precision = Precision::from_name(p).ok_or("bad lo_precision")?;
+        }
+        if let Some(b) = j.get("progressive").and_then(Json::as_bool) {
+            cfg.progressive = b;
+        }
+        if let Some(p) = j.get("pin_precision").and_then(Json::as_str) {
+            cfg.pin_precision = Some(Precision::from_name(p).ok_or("bad pin_precision")?);
         }
         cfg.validate()?;
         Ok(cfg)
@@ -308,6 +338,30 @@ mod tests {
         assert_eq!(p.t1, 0.5);
         assert_eq!(p.prefetch_depth, 3);
         assert_eq!(p.w_lru, PolicyConfig::default().w_lru);
+    }
+
+    #[test]
+    fn policy_precision_mode_validation() {
+        let mut p = PolicyConfig::default();
+        p.pin_precision = Some(Precision::F32);
+        p.validate().unwrap();
+        p.pin_precision = Some(Precision::Q4);
+        p.validate().unwrap();
+        p.progressive = true;
+        assert!(p.validate().is_err(), "pin + progressive must conflict");
+        p.pin_precision = None;
+        p.validate().unwrap();
+        // pin wider than the hi pool's slots cannot fit
+        let mut p = PolicyConfig::int8_group();
+        p.pin_precision = Some(Precision::F32);
+        assert!(p.validate().is_err(), "pin wider than hi must fail");
+        let j = Json::parse(r#"{"progressive": true}"#).unwrap();
+        assert!(PolicyConfig::from_json(&j).unwrap().progressive);
+        let j = Json::parse(r#"{"pin_precision": "q8"}"#).unwrap();
+        assert_eq!(
+            PolicyConfig::from_json(&j).unwrap().pin_precision,
+            Some(Precision::Q8)
+        );
     }
 
     #[test]

@@ -424,8 +424,15 @@ impl Coordinator {
         // selection below handles it). The deadline policy flips to
         // prefill-first dynamically, exactly while an admission's TTFT
         // budget is at risk.
-        let prefill_priority = self.prefill_first
-            || (self.sched_policy == SchedPolicy::Deadline && self.deadline_urgent());
+        let deadline_urgent =
+            self.sched_policy == SchedPolicy::Deadline && self.deadline_urgent();
+        // publish TTFT urgency to the residency facade: while an
+        // admission's budget is at risk, progressive hi-pool misses floor
+        // at the lo precision (time-to-first-usable over fidelity)
+        if self.sched_policy == SchedPolicy::Deadline {
+            self.engine.residency.set_deadline_urgent(deadline_urgent);
+        }
+        let prefill_priority = self.prefill_first || deadline_urgent;
         if prefill_priority && self.sched_policy != SchedPolicy::Sjf {
             progressed |= self.step_prefills()?;
         }

@@ -196,12 +196,22 @@ impl PjrtExec {
         let ffn_prefix = if fast { "expert_fast" } else { "expert" };
         let depth = opts.policy.prefetch_depth;
         let stack_p = (depth + 1).min(4).max(1);
+        // a pinned fetch precision may be a third tier (neither hi nor
+        // lo): its FFN variants must be compiled too, or tier-at-use
+        // execution would have no artifact to launch
+        let mut precs = vec![hi, lo];
+        if let Some(p) = opts.policy.pin_precision {
+            if !precs.contains(&p) {
+                precs.push(p);
+            }
+        }
         let mut names: Vec<String> = Vec::new();
         for s in [1usize, 16, 128] {
             names.push(format!("attn_s{s}"));
             names.push(format!("head_s{s}"));
-            names.push(format!("{ffn_prefix}_{}_s{s}", hi.name()));
-            names.push(format!("{ffn_prefix}_{}_s{s}", lo.name()));
+            for p in &precs {
+                names.push(format!("{ffn_prefix}_{}_s{s}", p.name()));
+            }
         }
         for p in 1..=stack_p {
             names.push(format!("gate_p{p}_s1"));
@@ -214,8 +224,9 @@ impl PjrtExec {
             rt.manifest.decode_batch_widths(stack_p, ffn_prefix, hi.name(), lo.name());
         for &w in &batched {
             names.push(format!("head_s{w}"));
-            names.push(format!("{ffn_prefix}_{}_s{w}", hi.name()));
-            names.push(format!("{ffn_prefix}_{}_s{w}", lo.name()));
+            for p in &precs {
+                names.push(format!("{ffn_prefix}_{}_s{w}", p.name()));
+            }
             for p in 1..=stack_p {
                 names.push(format!("gate_p{p}_s{w}"));
             }

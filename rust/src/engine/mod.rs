@@ -568,6 +568,11 @@ impl Engine {
             hi,
             lo,
             opts.io.clone(),
+        )
+        .with_precision_mode(
+            opts.policy.pin_precision,
+            opts.policy.progressive,
+            opts.policy.t1,
         );
 
         Ok(Self {
@@ -1106,11 +1111,14 @@ impl Engine {
                                 gatew: vec![0.0; s],
                                 rows: Vec::new(),
                                 seqs: Vec::new(),
+                                score: dd.score,
                             }
                         });
                     ent.gatew[r] = dd.gate_weight;
                     ent.rows.push(r);
                     ent.seqs.push(row.seq);
+                    // the group's most critical row decides the floor
+                    ent.score = ent.score.min(dd.score);
                 }
             }
 
@@ -1412,10 +1420,12 @@ impl Engine {
         li_u32: u32,
         per_expert: &PerExpert,
     ) -> (Vec<(ExpertKey, Class, Vec<f32>)>, TicketSet) {
-        let demands: Vec<(ExpertKey, Class, Vec<f32>)> = per_expert
+        // the scorer's unimportance score rides along: residency's
+        // progressive plan reads it as the criticality input
+        let demands: Vec<crate::residency::Demand> = per_expert
             .iter()
-            .map(|(&expert, (class, gatew, _score))| {
-                (ExpertKey::new(li_u32, expert), *class, gatew.clone())
+            .map(|(&expert, (class, gatew, score))| {
+                (ExpertKey::new(li_u32, expert), *class, gatew.clone(), *score)
             })
             .collect();
         self.residency.acquire(li_u32, demands, self.current_seq)
@@ -1434,11 +1444,11 @@ impl Engine {
         li_u32: u32,
         per_expert: &PerExpert,
     ) -> (Vec<(ExpertKey, Class, Vec<f32>)>, TicketSet) {
-        let demands: Vec<(ExpertKey, Class, Vec<f32>, usize)> = per_expert
+        let demands: Vec<(ExpertKey, Class, Vec<f32>, f64, usize)> = per_expert
             .iter()
-            .map(|(&expert, (class, gatew, _score))| {
+            .map(|(&expert, (class, gatew, score))| {
                 let rows = gatew.iter().filter(|w| **w != 0.0).count().max(1);
-                (ExpertKey::new(li_u32, expert), *class, gatew.clone(), rows)
+                (ExpertKey::new(li_u32, expert), *class, gatew.clone(), *score, rows)
             })
             .collect();
         self.residency.acquire_chunk(li_u32, demands, self.current_seq)
@@ -1463,15 +1473,18 @@ impl Engine {
         for (key, class, gatew) in uses {
             let (prec, pool) = self.class_target(class);
             if first_err.is_none() {
-                let buf = self.residency.buffer(key, pool);
-                // a missing buffer means the slot was evicted between load
+                // execute at whatever tier the slot holds right now: a
+                // progressive slot may still be at its lo floor while the
+                // background upgrade streams in
+                let resident = self.residency.resident_record(key, pool);
+                // a missing record means the slot was evicted between load
                 // and use under extreme pressure (or the joined load was
                 // dropped as stale): execute directly from next-level
                 // memory (bypass), without a cache-record use
-                let bypass = buf.is_none();
-                let record: Vec<u8> = match buf {
-                    Some(b) => b.lock().unwrap().clone(),
-                    None => self.store.record(key, prec).to_vec(),
+                let bypass = resident.is_none();
+                let (prec, record): (Precision, Vec<u8>) = match resident {
+                    Some((tier, bytes)) => (tier, bytes),
+                    None => (prec, self.store.record(key, prec).to_vec()),
                 };
                 match self.exec_expert(s, prec, &record, hn, &gatew, key, token_base) {
                     Ok(y) => {
@@ -1510,11 +1523,12 @@ impl Engine {
         for u in uses {
             let (prec, pool) = self.class_target(u.class);
             if first_err.is_none() {
-                let buf = self.residency.buffer(u.key, pool);
-                let bypass = buf.is_none();
-                let record: Vec<u8> = match buf {
-                    Some(b) => b.lock().unwrap().clone(),
-                    None => self.store.record(u.key, prec).to_vec(),
+                // tier-at-use, same contract as layer_ffn
+                let resident = self.residency.resident_record(u.key, pool);
+                let bypass = resident.is_none();
+                let (prec, record): (Precision, Vec<u8>) = match resident {
+                    Some((tier, bytes)) => (tier, bytes),
+                    None => (prec, self.store.record(u.key, prec).to_vec()),
                 };
                 match self.exec_expert(s, prec, &record, hn, &u.gatew, u.key, token_base) {
                     Ok(y) => {

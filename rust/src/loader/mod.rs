@@ -114,6 +114,17 @@ pub struct LoadTask {
     pub scope: u64,
     /// layer being executed when the task was issued (for Eq. 3's l_i)
     pub current_layer: u32,
+    /// staged (progressive) load: once `precision` commits and the ticket
+    /// resolves, stream this precision's record as a background
+    /// continuation on the prefetch lane and upgrade the slot in place
+    pub upgrade_to: Option<Precision>,
+    /// this task IS an upgrade continuation: the slot is already `Ready`
+    /// at a narrower tier, bytes stream into private staging memory and
+    /// land via `CacheManager::commit_upgrade`. Exempt from prefetch
+    /// staleness (dropping one only costs quality, but generations bump
+    /// every token — upgrades would otherwise never run); nobody waits on
+    /// it, so it completes without a done-set entry.
+    upgrade: bool,
     /// partial progress of a preempted transfer (None = not yet started)
     resume: Option<Resume>,
     /// submit instant (per-kind time-to-ready accounting). Reset when a
@@ -220,6 +231,25 @@ impl LoaderIo {
         current_layer: u32,
         scope: u64,
     ) -> Option<u64> {
+        self.submit_staged(key, precision, None, pool, kind, current_layer, scope)
+    }
+
+    /// Enqueue a *staged* (progressive) load: the `precision` record
+    /// streams first and commits the slot usable at that tier; when
+    /// `upgrade_to` is `Some`, the wider record then streams as a
+    /// background continuation on the prefetch lane and upgrades the slot
+    /// in place. `submit_scoped` is the `upgrade_to: None` special case.
+    #[allow(clippy::too_many_arguments)]
+    pub fn submit_staged(
+        &self,
+        key: ExpertKey,
+        precision: Precision,
+        upgrade_to: Option<Precision>,
+        pool: Pool,
+        kind: TaskKind,
+        current_layer: u32,
+        scope: u64,
+    ) -> Option<u64> {
         {
             let cache = self.cache.lock().unwrap();
             if cache.contains(key, pool) {
@@ -240,6 +270,8 @@ impl LoaderIo {
             gen,
             scope,
             current_layer,
+            upgrade_to,
+            upgrade: false,
             resume: None,
             submitted: Instant::now(),
         };
@@ -556,7 +588,11 @@ impl Worker {
                         let mut gens = self.shared.gens.lock().unwrap();
                         while let Some(t) = q.prefetch.front() {
                             let cur = gens.get(&t.scope).copied().unwrap_or(0);
-                            if t.gen < cur {
+                            // upgrade continuations are staleness-exempt:
+                            // generations bump every token, but an upgrade
+                            // targets an already-resident slot, not a
+                            // prediction that can go stale
+                            if !t.upgrade && t.gen < cur {
                                 stale.push(q.prefetch.pop_front().unwrap());
                             } else {
                                 break;
@@ -600,6 +636,7 @@ impl Worker {
                 }
             };
             let id = task.id;
+            let is_upgrade = task.upgrade;
             match self.execute(task) {
                 Step::Done(outcome) => {
                     {
@@ -610,7 +647,13 @@ impl Worker {
                     // waiters so a returned `wait` implies `is_idle`
                     // (absent new submissions)
                     self.shared.in_flight.fetch_sub(1, Ordering::SeqCst);
-                    self.shared.complete(id, outcome);
+                    if is_upgrade {
+                        // nobody waits on an upgrade continuation — no
+                        // done-set entry to leak; wake idle-drain pollers
+                        self.shared.done_cv.notify_all();
+                    } else {
+                        self.shared.complete(id, outcome);
+                    }
                 }
                 Step::Yielded(mut task) => {
                     // back to the FRONT of the prefetch lane: it resumes
@@ -639,10 +682,30 @@ impl Worker {
     }
 
     fn execute(&self, mut task: LoadTask) -> Step {
-        // resolve the destination: a fresh reservation, or the preempted
-        // transfer's kept buffer + offset
+        // resolve the destination: a fresh reservation, the preempted
+        // transfer's kept buffer + offset, or — for an upgrade
+        // continuation — private staging memory (the slot stays readable
+        // at its current tier the whole time)
         let (buffer, start_off) = match task.resume.take() {
             Some(r) => (r.buffer, r.offset),
+            None if task.upgrade => {
+                // early abort: the slot the upgrade targets may already be
+                // gone (evicted) or refilled — don't burn link time on it
+                let live = {
+                    let cache = self.cache.lock().unwrap();
+                    let pool = match task.pool {
+                        Pool::Hi => &cache.hi,
+                        Pool::Lo => &cache.lo,
+                    };
+                    pool.resident_tier(task.key).is_some()
+                };
+                if !live {
+                    self.stats.lock().unwrap().upgrades_aborted += 1;
+                    return Step::Done(LoadOutcome::Fulfilled);
+                }
+                let n = self.store.record_bytes(task.precision);
+                (Arc::new(Mutex::new(vec![0u8; n])), 0)
+            }
             None => {
                 let reservation = {
                     let mut cache = self.cache.lock().unwrap();
@@ -687,7 +750,10 @@ impl Worker {
             let t0 = Instant::now();
             {
                 let mut buf = buffer.lock().unwrap();
-                debug_assert_eq!(buf.len(), record.len(), "slot/record size");
+                // a progressive floor record occupies a prefix of the
+                // (native-precision-sized) slot; upgrades stage exactly
+                // record.len()
+                debug_assert!(buf.len() >= record.len(), "slot/record size");
                 buf[off..off + n].copy_from_slice(&record[off..off + n]);
             }
             self.copier.charge_chunk(&grant, n, t0.elapsed());
@@ -729,9 +795,29 @@ impl Worker {
             }
         }
         drop(grant);
+        if task.upgrade {
+            // land the fully staged record atomically; a false return
+            // means the slot moved on (evicted/refilled) — the narrower
+            // tier that is (or was) resident stays valid, nothing torn
+            let staged = buffer.lock().unwrap();
+            let committed = {
+                let mut cache = self.cache.lock().unwrap();
+                cache.commit_upgrade(task.key, task.pool, Some(task.precision), &staged)
+            };
+            drop(staged);
+            self.copier.note_transfer();
+            let mut st = self.stats.lock().unwrap();
+            if committed {
+                st.upgrades_committed += 1;
+            } else {
+                st.upgrades_aborted += 1;
+            }
+            st.bytes_loaded += record.len() as u64;
+            return Step::Done(LoadOutcome::Fulfilled);
+        }
         {
             let mut cache = self.cache.lock().unwrap();
-            cache.commit(task.key, task.pool);
+            cache.commit_tier(task.key, task.pool, Some(task.precision));
         }
         self.copier.note_transfer();
         {
@@ -748,6 +834,32 @@ impl Worker {
                 }
             }
             st.bytes_loaded += record.len() as u64;
+            if task.upgrade_to.is_some() {
+                st.progressive_loads += 1;
+            }
+        }
+        // the staged continuation: stream the wider record on the
+        // prefetch lane (background weight) and upgrade the slot in place
+        if let Some(up) = task.upgrade_to {
+            let id = self.shared.next_id.fetch_add(1, Ordering::Relaxed);
+            let cont = LoadTask {
+                id,
+                key: task.key,
+                precision: up,
+                pool: task.pool,
+                kind: TaskKind::Prefetch,
+                gen: 0,
+                scope: task.scope,
+                current_layer: task.current_layer,
+                upgrade_to: None,
+                upgrade: true,
+                resume: None,
+                submitted: Instant::now(),
+            };
+            let mut q = self.shared.queue.lock().unwrap();
+            q.prefetch.push_back(cont);
+            drop(q);
+            self.shared.queue_cv.notify_one();
         }
         Step::Done(LoadOutcome::Fulfilled)
     }

@@ -34,6 +34,7 @@ fn main() {
             "interleaved",
             "no-chunked-prefill",
             "prefill-first",
+            "progressive",
         ],
     );
     let r = match cmd.as_str() {
@@ -100,6 +101,17 @@ fn build_engine(args: &Args, allow_sched_policy: bool) -> Result<Engine> {
     opts.io.lanes = args.get_usize("io-lanes", opts.io.lanes);
     opts.io.chunk_bytes = args.get_usize("io-chunk-bytes", opts.io.chunk_bytes);
     opts.io.validate().map_err(|e| anyhow!("{e}"))?;
+    // precision scheduling: freeze the per-acquire fetch precision, or
+    // stream low-bits-first with background upgrades (mutually exclusive;
+    // PolicyConfig::validate rejects the combination)
+    if let Some(name) = args.get("pin-precision") {
+        let p = hobbit::Precision::from_name(name)
+            .ok_or_else(|| anyhow!("unknown precision '{name}' (f32|q8|q4|q2)"))?;
+        opts.policy.pin_precision = Some(p);
+    }
+    if args.has("progressive") {
+        opts.policy.progressive = true;
+    }
     Engine::new(&artifacts, model, opts)
 }
 

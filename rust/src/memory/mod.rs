@@ -97,6 +97,12 @@ impl LinkArbiter {
     fn retire(&self, id: u64) {
         self.active.lock().unwrap().remove(&id);
     }
+
+    /// Number of lanes currently mid-task (the link-pressure signal the
+    /// residency facade feeds its precision-floor decision).
+    pub fn active_lanes(&self) -> usize {
+        self.active.lock().unwrap().len()
+    }
 }
 
 /// One busy lane's registration with the arbiter (RAII: dropping frees
@@ -202,6 +208,12 @@ impl ThrottledCopier {
     /// transfer.
     pub fn note_transfer(&self) {
         self.transfers.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Lanes currently mid-transfer on the shared link (queue-pressure
+    /// proxy: more busy lanes = less fair-share bandwidth for a new miss).
+    pub fn active_lanes(&self) -> usize {
+        self.arbiter.active_lanes()
     }
 
     pub fn bytes_moved(&self) -> u64 {

@@ -61,6 +61,16 @@ pub struct LoaderStats {
     pub ondemand_ready: Duration,
     /// Σ submit → committed of prefetch transfers
     pub prefetch_ready: Duration,
+    /// staged (lo-bits-first) loads: the floor record committed and a
+    /// background upgrade continuation was enqueued. `ondemand_ready`
+    /// then measures time-to-first-USABLE, not time-to-full-precision.
+    pub progressive_loads: u64,
+    /// upgrade continuations that landed (slot flipped to the wider tier
+    /// in place)
+    pub upgrades_committed: u64,
+    /// upgrade continuations that aborted (slot evicted/refilled before
+    /// the staged bytes landed — the narrower resident tier stays valid)
+    pub upgrades_aborted: u64,
 }
 
 impl LoaderStats {
@@ -104,6 +114,9 @@ impl LoaderStats {
             ("noslot_drops", num(self.noslot_drops as f64)),
             ("mean_ondemand_ready_ms", num(self.mean_ondemand_ready_ms())),
             ("mean_prefetch_ready_ms", num(self.mean_prefetch_ready_ms())),
+            ("progressive_loads", num(self.progressive_loads as f64)),
+            ("upgrades_committed", num(self.upgrades_committed as f64)),
+            ("upgrades_aborted", num(self.upgrades_aborted as f64)),
         ])
     }
 }
@@ -507,12 +520,20 @@ mod tests {
         rep.loader.ondemand_ready = Duration::from_millis(40);
         rep.loader.prefetch_loads = [0, 2, 0, 0];
         rep.loader.prefetch_ready = Duration::from_millis(30);
+        rep.loader.progressive_loads = 3;
+        rep.loader.upgrades_committed = 2;
+        rep.loader.upgrades_aborted = 1;
         let fcfs = rep.to_json().to_string();
         assert!(!fcfs.contains("preemptions"), "FCFS report grew pipeline keys");
         assert!(!fcfs.contains("noslot"), "FCFS report grew pipeline keys");
+        assert!(!fcfs.contains("progressive"), "FCFS report grew progressive keys");
+        assert!(!fcfs.contains("upgrades"), "FCFS report grew upgrade keys");
         rep.scheduler = Some(SchedulerStats::default());
         let j = Json::parse(&rep.to_json().to_string()).unwrap();
         let serving = j.get("serving").unwrap();
+        assert_eq!(serving.get("progressive_loads").unwrap().as_f64().unwrap(), 3.0);
+        assert_eq!(serving.get("upgrades_committed").unwrap().as_f64().unwrap(), 2.0);
+        assert_eq!(serving.get("upgrades_aborted").unwrap().as_f64().unwrap(), 1.0);
         assert_eq!(serving.get("preemptions").unwrap().as_f64().unwrap(), 5.0);
         assert_eq!(serving.get("inflight_promotions").unwrap().as_f64().unwrap(), 2.0);
         assert_eq!(serving.get("noslot_drops").unwrap().as_f64().unwrap(), 1.0);

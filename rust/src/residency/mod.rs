@@ -49,6 +49,14 @@ use crate::{ExpertKey, Precision};
 /// class, and the per-row gate weights to apply.
 pub type ExpertUse = (ExpertKey, Class, Vec<f32>);
 
+/// One expert demanded of an ensure-resident barrier: the routing decision
+/// plus the scorer's criticality (unimportance) score — plumbed through so
+/// the facade's precision-floor decision sees it instead of re-deriving it
+/// from gate probs at every call site. Lower score = more critical
+/// (`loader/scorer.rs::Decision`); demands folded from several rows carry
+/// the minimum (most critical) score.
+pub type Demand = (ExpertKey, Class, Vec<f32>, f64);
+
 /// One entry of a batched step's *merged* ensure-resident barrier: a
 /// unique (expert, precision class) demanded by one or more rows of the
 /// launch. [`ExpertResidency::acquire_merged`] probes/pins/loads it once
@@ -65,6 +73,9 @@ pub struct MergedUse {
     pub rows: Vec<usize>,
     /// demanding rows' sessions, for cache-record attribution
     pub seqs: Vec<Option<u64>>,
+    /// minimum (most critical) scorer unimportance score across the
+    /// demanding rows — the precision-floor input
+    pub score: f64,
 }
 
 // ---------------------------------------------------------------------
@@ -320,6 +331,7 @@ fn install_completion(
     inflight: InflightMap,
     key: ExpertKey,
     precision: Precision,
+    upgrade_to: Option<Precision>,
     pool: Pool,
     kind: TaskKind,
     layer: u32,
@@ -333,9 +345,9 @@ fn install_completion(
         let mut fulfilled = outcome == LoadOutcome::Fulfilled;
         if outcome == LoadOutcome::NoSlot && kind == TaskKind::OnDemand && reacquires > 0 {
             // re-acquire: a fresh task gets a fresh reserve() attempt
-            // (pins may have released since)
+            // (pins may have released since); a staged plan stays staged
             if let Some(new_id) =
-                io_retry.submit_scoped(key, precision, pool, kind, layer, scope)
+                io_retry.submit_staged(key, precision, upgrade_to, pool, kind, layer, scope)
             {
                 state.task_id.store(new_id, Ordering::SeqCst);
                 install_completion(
@@ -343,6 +355,7 @@ fn install_completion(
                     inflight,
                     key,
                     precision,
+                    upgrade_to,
                     pool,
                     kind,
                     layer,
@@ -387,6 +400,21 @@ pub struct ExpertResidency {
     next_seq: AtomicU64,
     hi: Precision,
     lo: Precision,
+    /// next-level memory (tier byte sizes + the engine's bypass reads)
+    store: Arc<ExpertStore>,
+    /// shared link (arbiter queue depth = the link-pressure floor input)
+    copier: Arc<ThrottledCopier>,
+    /// progressive lo-bits-first streaming enabled (`PolicyConfig`)
+    progressive: bool,
+    /// frozen per-acquire choice (`--pin-precision`); None = dynamic
+    pin: Option<Precision>,
+    /// the scorer's T1 threshold: the Hi-class score band is `[0, t1]`,
+    /// and the floor decision treats the band's upper half as
+    /// lower-tier-tolerant
+    score_t1: f64,
+    /// the serving deadline policy reports TTFT urgency here; an urgent
+    /// acquire lowers its precision floor to get usable bytes sooner
+    deadline_urgent: AtomicBool,
 }
 
 impl ExpertResidency {
@@ -415,7 +443,7 @@ impl ExpertResidency {
         lo: Precision,
         io: IoConfig,
     ) -> Self {
-        let loader = ExpertLoader::start_with(store, cache.clone(), copier, io);
+        let loader = ExpertLoader::start_with(store.clone(), cache.clone(), copier.clone(), io);
         let gens = loader.gen_table();
         Self {
             loader,
@@ -426,7 +454,31 @@ impl ExpertResidency {
             next_seq: AtomicU64::new(1),
             hi,
             lo,
+            store,
+            copier,
+            progressive: false,
+            pin: None,
+            score_t1: 0.6,
+            deadline_urgent: AtomicBool::new(false),
         }
+    }
+
+    /// Set the precision scheduling mode: `pin` freezes every hi-pool
+    /// fetch at one precision (no staging); `progressive` enables the
+    /// lo-bits-first staged streaming (mutually exclusive — validated by
+    /// `PolicyConfig::validate`; pin wins here if both are set). `t1` is
+    /// the scorer's Hi-class threshold, the criticality scale of
+    /// the floor decision.
+    pub fn with_precision_mode(
+        mut self,
+        pin: Option<Precision>,
+        progressive: bool,
+        t1: f64,
+    ) -> Self {
+        self.pin = pin;
+        self.progressive = progressive && pin.is_none();
+        self.score_t1 = t1;
+        self
     }
 
     /// Map a scorer class to (precision, pool) under the active config.
@@ -434,6 +486,43 @@ impl ExpertResidency {
         match class {
             Class::Hi => (self.hi, Pool::Hi),
             Class::Lo | Class::Skip => (self.lo, Pool::Lo),
+        }
+    }
+
+    /// Report TTFT-deadline urgency (the serving deadline policy's 75%
+    /// budget trip). While set, hi-pool misses floor at the lo precision.
+    pub fn set_deadline_urgent(&self, urgent: bool) {
+        self.deadline_urgent.store(urgent, Ordering::Relaxed);
+    }
+
+    /// Plan the fetch for a hi-pool miss: the start (floor) precision and
+    /// the background upgrade target, decided per acquire from
+    ///
+    /// * **criticality** — the scorer's unimportance score: within the Hi
+    ///   class, a score in the upper half of the `[0, t1]` band marks an
+    ///   expert whose contribution tolerates a briefly-lower tier;
+    /// * **deadline slack** — TTFT urgency reported by the serving
+    ///   deadline policy ([`Self::set_deadline_urgent`]);
+    /// * **link pressure** — busy lanes on the shared link arbiter: a miss
+    ///   that would fair-share the link with other transfers reaches
+    ///   usability far sooner at the lo byte count.
+    ///
+    /// A pinned precision freezes the choice; with progressive off the
+    /// plan is always (hi, no upgrade) — the pre-progressive byte stream.
+    fn plan_fetch(&self, score: f64) -> (Precision, Option<Precision>) {
+        if let Some(p) = self.pin {
+            return (p, None);
+        }
+        if !self.progressive || self.lo.bits() >= self.hi.bits() {
+            return (self.hi, None);
+        }
+        let urgent = self.deadline_urgent.load(Ordering::Relaxed);
+        let pressured = self.copier.active_lanes() >= 1;
+        let tolerant = score > 0.5 * self.score_t1;
+        if urgent || pressured || tolerant {
+            (self.lo, Some(self.hi))
+        } else {
+            (self.hi, None)
         }
     }
 
@@ -469,7 +558,7 @@ impl ExpertResidency {
     pub fn acquire(
         &self,
         layer: u32,
-        demands: Vec<(ExpertKey, Class, Vec<f32>)>,
+        demands: Vec<Demand>,
         seq: Option<u64>,
     ) -> (Vec<ExpertUse>, TicketSet) {
         let scope = seq.unwrap_or(GLOBAL_SCOPE);
@@ -477,13 +566,14 @@ impl ExpertResidency {
         let mut uses: Vec<ExpertUse> = Vec::new();
         let mut cache = self.cache.lock().unwrap();
         cache.note_token_for(seq);
-        for (key, class, gatew) in demands {
+        for (key, class, gatew, score) in demands {
             if class == Class::Skip {
                 let mut st = self.loader.stats.lock().unwrap();
                 st.skipped += 1;
                 continue;
             }
-            let (c, eff_class) = self.acquire_one(cache, key, class, 1, layer, scope, &mut waits);
+            let (c, eff_class) =
+                self.acquire_one(cache, key, class, score, 1, layer, scope, &mut waits);
             cache = c;
             uses.push((key, eff_class, gatew));
         }
@@ -505,6 +595,7 @@ impl ExpertResidency {
         mut cache: std::sync::MutexGuard<'a, CacheManager>,
         key: ExpertKey,
         class: Class,
+        score: f64,
         m: usize,
         layer: u32,
         scope: u64,
@@ -557,9 +648,15 @@ impl ExpertResidency {
         if !hit {
             drop(cache);
             let (prec, pool) = self.class_target(eff_class);
-            if let Some(t) =
-                self.request_load(key, prec, pool, TaskKind::OnDemand, layer, scope)
-            {
+            // hi-pool misses consult the progressive plan (floor precision
+            // + background upgrade); lo-pool slots are sized for lo only
+            let (start, upgrade_to) = match pool {
+                Pool::Hi => self.plan_fetch(score),
+                Pool::Lo => (prec, None),
+            };
+            if let Some(t) = self.request_load(
+                key, start, upgrade_to, pool, TaskKind::OnDemand, layer, scope,
+            ) {
                 waits.push(t);
             }
             // the other m-1 demanding rows joined the same task — the
@@ -621,7 +718,7 @@ impl ExpertResidency {
                 continue;
             }
             let (c, eff_class) =
-                self.acquire_one(cache, d.key, d.class, m, layer, scope, &mut waits);
+                self.acquire_one(cache, d.key, d.class, d.score, m, layer, scope, &mut waits);
             cache = c;
             d.class = eff_class;
             uses.push(d);
@@ -644,7 +741,7 @@ impl ExpertResidency {
     pub fn acquire_chunk(
         &self,
         layer: u32,
-        demands: Vec<(ExpertKey, Class, Vec<f32>, usize)>,
+        demands: Vec<(ExpertKey, Class, Vec<f32>, f64, usize)>,
         seq: Option<u64>,
     ) -> (Vec<ExpertUse>, TicketSet) {
         {
@@ -655,23 +752,27 @@ impl ExpertResidency {
             st.prefill_merged_demands += demands
                 .iter()
                 .filter(|d| d.1 != Class::Skip)
-                .map(|d| d.3 as u64)
+                .map(|d| d.4 as u64)
                 .sum::<u64>();
         }
         // delegate the probe/pin/load walk to `acquire` itself: the two
         // prefill paths share one implementation by construction, so a fix
         // to the pin/upgrade logic can never miss the chunked path
-        let plain: Vec<(ExpertKey, Class, Vec<f32>)> =
-            demands.into_iter().map(|(key, class, gatew, _rows)| (key, class, gatew)).collect();
+        let plain: Vec<Demand> = demands
+            .into_iter()
+            .map(|(key, class, gatew, score, _rows)| (key, class, gatew, score))
+            .collect();
         self.acquire(layer, plain, seq)
     }
 
     /// Submit a load — or join the in-flight one for the same
     /// (expert, pool). Returns None when the expert is already resident.
+    #[allow(clippy::too_many_arguments)]
     fn request_load(
         &self,
         key: ExpertKey,
         precision: Precision,
+        upgrade_to: Option<Precision>,
         pool: Pool,
         kind: TaskKind,
         layer: u32,
@@ -702,7 +803,8 @@ impl ExpertResidency {
             }
             return Some(Ticket { key, pool, precision, kind, state });
         }
-        let id = self.loader.submit_scoped(key, precision, pool, kind, layer, scope)?;
+        let id =
+            self.loader.submit_staged(key, precision, upgrade_to, pool, kind, layer, scope)?;
         let state = LoadState::new(id);
         inflight.insert((key, pool), state.clone());
         drop(inflight);
@@ -711,6 +813,7 @@ impl ExpertResidency {
             self.inflight.clone(),
             key,
             precision,
+            upgrade_to,
             pool,
             kind,
             layer,
@@ -741,6 +844,31 @@ impl ExpertResidency {
             Pool::Hi => cache.hi.buffer(key),
             Pool::Lo => cache.lo.buffer(key),
         }
+    }
+
+    /// Snapshot the resident tier and its exact record bytes for a Ready
+    /// expert. A progressive slot may hold a narrower record than the
+    /// pool's native precision (as a prefix of the slot), so callers that
+    /// execute must read (tier, bytes) as one atomic pair: the clone
+    /// happens with the slot buffer locked under the cache lock — the
+    /// same order `commit_upgrade` uses — so an in-place upgrade can
+    /// never be observed half-applied. Returns None when the expert is
+    /// not Ready (callers then bypass the cache as before).
+    pub fn resident_record(&self, key: ExpertKey, pool: Pool) -> Option<(Precision, Vec<u8>)> {
+        let cache = self.cache.lock().unwrap();
+        let p = match pool {
+            Pool::Hi => &cache.hi,
+            Pool::Lo => &cache.lo,
+        };
+        let (buf, tier) = p.buffer_tier(key)?;
+        let prec = tier.unwrap_or(match pool {
+            Pool::Hi => self.hi,
+            Pool::Lo => self.lo,
+        });
+        let n = self.store.record_bytes(prec);
+        let guard = buf.lock().unwrap();
+        debug_assert!(guard.len() >= n, "slot smaller than resident record");
+        Some((prec, guard[..n].to_vec()))
     }
 
     /// Record a realized use for the replacement policy, attributed to a
@@ -787,6 +915,7 @@ impl ExpertResidency {
                     let _ = self.request_load(
                         key,
                         prec,
+                        None,
                         pool,
                         TaskKind::Prefetch,
                         current_layer,

@@ -76,9 +76,16 @@ fn offload_hw() -> HardwareConfig {
 
 /// Dynamic loading off: every routed expert executes in high precision,
 /// so logits depend only on the token history — chunking, interleaving
-/// order, link speed, and cache pressure must not change them.
+/// order, link speed, and cache pressure must not change them. The fetch
+/// precision is pinned to the hi format so the per-acquire precision
+/// choice can never perturb this bit-equivalence suite.
 fn quality_policy(prefetch_depth: usize) -> PolicyConfig {
-    PolicyConfig { dynamic_loading: false, prefetch_depth, ..PolicyConfig::default() }
+    PolicyConfig {
+        dynamic_loading: false,
+        prefetch_depth,
+        pin_precision: Some(hobbit::Precision::F32),
+        ..PolicyConfig::default()
+    }
 }
 
 fn mk_engine(name: &str, dir: &Path, hw: HardwareConfig, prefetch: usize) -> Engine {

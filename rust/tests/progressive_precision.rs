@@ -1,0 +1,296 @@
+//! Progressive low-bits-first streaming regression suite: a hi-pool miss
+//! may stream its lo-precision record first (the ticket resolves and the
+//! expert is usable the moment the lo tier lands) while the hi record
+//! upgrades the slot in place from the prefetch lane.
+//!
+//! Everything here is artifact-free: a synthetic expert store on disk
+//! (like `residency.rs` / `transfer_pipeline.rs`) gives the loader real
+//! bytes to move, and a throttled link keeps transfers observable
+//! mid-flight. Timing assertions use modeled link sleeps in the hundreds
+//! of milliseconds with generous slack, so they hold in debug and
+//! release CI alike.
+//!
+//! Coverage (the progressive contract):
+//! * a tolerant hi-pool miss is usable within the LO-record stall bound,
+//!   at the lo tier, with exactly the store's lo bytes — while the hi
+//!   upgrade still streams in the background;
+//! * the background upgrade commits bytes identical to a direct hi load,
+//!   without any further acquire;
+//! * an upgrade orphaned by eviction aborts without touching the slot's
+//!   new occupant, and the pin ledger stays balanced;
+//! * `--pin-precision` freezes the choice: pinning the hi format is
+//!   byte-identical to the legacy non-progressive stream (same bytes,
+//!   same transfer count, zero staged loads) even when progressive mode
+//!   is requested, and pinning a narrower format streams exactly that
+//!   record;
+//! * a critical miss (low unimportance score) on an idle link still
+//!   streams hi directly — progressive never taxes the critical path;
+//! * TTFT-deadline urgency lowers the fetch floor even for critical
+//!   misses.
+
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use hobbit::cache::{CacheManager, Policy, Pool};
+use hobbit::config::{IoConfig, ModelConfig};
+use hobbit::loader::scorer::Class;
+use hobbit::memory::{LinkModel, ThrottledCopier};
+use hobbit::model::synth::{tiny_store_config, write_synth_expert_store};
+use hobbit::model::ExpertStore;
+use hobbit::predictor::Predictor;
+use hobbit::residency::ExpertResidency;
+use hobbit::{ExpertKey, Precision};
+
+/// On-wire record sizes of `tiny_store_config`: F32 = 4096 B, Q8 = 1024 B,
+/// Q4 = 512 B (pinned by `model::synth`).
+fn tiny_cfg() -> ModelConfig {
+    tiny_store_config("progressive-test")
+}
+
+/// Synthetic expert store (every expert at every precision) so the loader
+/// has real bytes to move without the AOT compile step.
+fn synth_store(cfg: &ModelConfig, dir: &Path) -> Arc<ExpertStore> {
+    write_synth_expert_store(dir, cfg).expect("synth store");
+    Arc::new(ExpertStore::load(dir, cfg).unwrap())
+}
+
+/// Residency facade in an explicit precision mode; `bw` throttles the
+/// link so transfers stay observable mid-flight.
+fn mk_residency(
+    hi_cap: usize,
+    bw: f64,
+    pin: Option<Precision>,
+    progressive: bool,
+    name: &str,
+) -> (ExpertResidency, Arc<ThrottledCopier>, Arc<ExpertStore>) {
+    let cfg = tiny_cfg();
+    let dir = std::env::temp_dir().join(format!("hobbit_progressive_{name}"));
+    let store = synth_store(&cfg, &dir);
+    let cache = Arc::new(Mutex::new(CacheManager::new(
+        cfg.n_layers,
+        cfg.n_experts,
+        hi_cap,
+        cfg.bytes_for(Precision::F32),
+        4,
+        cfg.bytes_for(Precision::Q8),
+        Policy::Lru,
+        0.25,
+    )));
+    let copier = Arc::new(ThrottledCopier::new(LinkModel { bytes_per_s: bw, latency_s: 0.0 }));
+    let predictor = Predictor::new(2, cfg.top_k, 0.6, 0.9, true, cfg.n_layers);
+    let resid = ExpertResidency::with_io(
+        store.clone(),
+        cache,
+        copier.clone(),
+        predictor,
+        Precision::F32,
+        Precision::Q8,
+        IoConfig { lanes: 2, chunk_bytes: 256 },
+    )
+    .with_precision_mode(pin, progressive, 0.6);
+    (resid, copier, store)
+}
+
+/// Spin until the loader drains (including upgrade continuations, which
+/// hold the prefetch queue / in-flight count until they land).
+fn drain(resid: &ExpertResidency) {
+    let t0 = Instant::now();
+    while !resid.is_idle() {
+        assert!(t0.elapsed() < Duration::from_secs(30), "loader never drained");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+}
+
+// ---------------------------------------------------------------------
+// (a) time-to-first-usable is bounded by the LO record, and the
+//     background upgrade commits bytes identical to a direct hi load
+// ---------------------------------------------------------------------
+
+/// At 1e4 B/s the lo record (1024 B) takes ~102 ms and the hi record
+/// (4096 B) ~410 ms. The old hi-only loader could not resolve the ticket
+/// under ~410 ms; the progressive one must do it in ~lo time.
+#[test]
+fn tolerant_miss_usable_within_lo_record_stall_bound_then_upgrades() {
+    let (resid, copier, store) = mk_residency(8, 1e4, None, true, "ttfu");
+    let key = ExpertKey::new(0, 1);
+    let t0 = Instant::now();
+    // unimportance score 1.0 > 0.5 * T1: squarely in the tolerant band
+    let (uses, waits) = resid.acquire(0, vec![(key, Class::Hi, vec![1.0], 1.0)], None);
+    assert_eq!(uses.len(), 1);
+    assert_eq!(waits.len(), 1, "the miss must submit a load");
+    resid.wait(&waits);
+    let ttfu = t0.elapsed();
+    assert!(
+        ttfu < Duration::from_millis(300),
+        "time-to-first-usable {ttfu:?} is not bounded by the ~102 ms lo record \
+         (the ~410 ms hi-only stall is back)"
+    );
+
+    // usable NOW, at the lo tier, with exactly the store's lo bytes —
+    // while the hi upgrade is still streaming in the background
+    let (tier, bytes) = resid.resident_record(key, Pool::Hi).expect("resident at the lo tier");
+    assert_eq!(tier, Precision::Q8, "the floor tier must be the lo precision");
+    assert_eq!(&bytes[..], store.record(key, Precision::Q8), "lo tier bytes diverged");
+    assert_eq!(resid.loader_stats().progressive_loads, 1);
+
+    // the upgrade lands on its own — no further acquire — and the slot
+    // then holds the hi record bit-for-bit
+    drain(&resid);
+    let (tier, bytes) = resid.resident_record(key, Pool::Hi).expect("still resident");
+    assert_eq!(tier, Precision::F32, "background upgrade never flipped the tier");
+    assert_eq!(
+        &bytes[..],
+        store.record(key, Precision::F32),
+        "upgraded bytes differ from a direct hi load"
+    );
+    let st = resid.loader_stats();
+    assert_eq!(st.upgrades_committed, 1);
+    assert_eq!(st.upgrades_aborted, 0);
+    // lo record + hi upgrade, nothing more
+    assert_eq!(copier.bytes_moved(), 1024 + 4096);
+    resid.release(key, Pool::Hi);
+}
+
+// ---------------------------------------------------------------------
+// (b) an upgrade orphaned by eviction aborts; the new occupant and the
+//     pin ledger stay intact
+// ---------------------------------------------------------------------
+
+#[test]
+fn orphaned_upgrade_aborts_without_touching_the_new_occupant() {
+    // ONE hi slot at 1e5 B/s: A's lo record lands in ~10 ms, its ~41 ms
+    // hi upgrade is still streaming when B steals the slot
+    let (resid, _copier, store) = mk_residency(1, 1e5, None, true, "orphan");
+    let a = ExpertKey::new(0, 0);
+    let b = ExpertKey::new(0, 1);
+    let (_ua, wa) = resid.acquire(0, vec![(a, Class::Hi, vec![1.0], 1.0)], None);
+    resid.wait(&wa);
+    assert_eq!(
+        resid.resident_record(a, Pool::Hi).expect("A resident").0,
+        Precision::Q8,
+        "A must be usable at the lo tier while its upgrade streams"
+    );
+    resid.release(a, Pool::Hi);
+
+    // B evicts A from the only slot mid-upgrade
+    let (_ub, wb) = resid.acquire(0, vec![(b, Class::Hi, vec![1.0], 1.0)], None);
+    resid.wait(&wb);
+    drain(&resid);
+
+    let st = resid.loader_stats();
+    assert_eq!(st.progressive_loads, 2, "both misses staged lo-first");
+    assert_eq!(st.upgrades_aborted, 1, "A's orphaned upgrade must abort");
+    assert_eq!(st.upgrades_committed, 1, "B's own upgrade must still land");
+    assert!(resid.buffer(a, Pool::Hi).is_none(), "evicted expert resurfaced");
+    let (tier, bytes) = resid.resident_record(b, Pool::Hi).expect("B resident");
+    assert_eq!(tier, Precision::F32);
+    assert_eq!(&bytes[..], store.record(b, Precision::F32), "the abort tore B's slot");
+    resid.release(b, Pool::Hi);
+    let cache = resid.cache_handle();
+    let c = cache.lock().unwrap();
+    assert_eq!(c.hi.pinned_count() + c.lo.pinned_count(), 0, "leaked pins");
+}
+
+// ---------------------------------------------------------------------
+// (c) --pin-precision freezes the choice
+// ---------------------------------------------------------------------
+
+/// Pinning the hi format reproduces the legacy non-progressive byte
+/// stream bit-for-bit — even when progressive mode is *requested* (the
+/// pin wins; `PolicyConfig::validate` rejects the combination upstream,
+/// the facade coerces it defensively).
+#[test]
+fn pin_hi_is_byte_identical_to_the_legacy_stream() {
+    let (pinned, cp_pin, store) = mk_residency(8, 1e6, Some(Precision::F32), true, "pin_hi");
+    let (legacy, cp_leg, _) = mk_residency(8, 1e6, None, false, "legacy");
+    let key = ExpertKey::new(1, 2);
+    // a maximally tolerant score: progressive mode WOULD stage lo-first
+    for r in [&pinned, &legacy] {
+        let (_u, w) = r.acquire(1, vec![(key, Class::Hi, vec![1.0], 1.0)], None);
+        r.wait(&w);
+        drain(r);
+    }
+    let (tier_p, bytes_p) = pinned.resident_record(key, Pool::Hi).expect("pinned resident");
+    let (tier_l, bytes_l) = legacy.resident_record(key, Pool::Hi).expect("legacy resident");
+    assert_eq!(tier_p, Precision::F32);
+    assert_eq!(tier_l, Precision::F32);
+    assert_eq!(bytes_p, bytes_l, "pinned-hi bytes diverged from the legacy stream");
+    assert_eq!(&bytes_p[..], store.record(key, Precision::F32));
+    for (r, cp) in [(&pinned, &cp_pin), (&legacy, &cp_leg)] {
+        let st = r.loader_stats();
+        assert_eq!(st.progressive_loads, 0, "a pinned fetch must never stage");
+        assert_eq!(st.upgrades_committed + st.upgrades_aborted, 0);
+        assert_eq!(cp.bytes_moved(), 4096, "exactly the hi record, once");
+        assert_eq!(cp.transfers(), 1);
+        r.release(key, Pool::Hi);
+    }
+}
+
+/// Pinning a narrower format streams exactly that record into the hi
+/// pool's (native-sized) slots — no staging, no upgrade.
+#[test]
+fn pin_narrow_streams_exactly_the_pinned_record() {
+    let (resid, copier, store) = mk_residency(8, 1e6, Some(Precision::Q4), true, "pin_q4");
+    let key = ExpertKey::new(2, 0);
+    let (_u, w) = resid.acquire(2, vec![(key, Class::Hi, vec![1.0], 1.0)], None);
+    resid.wait(&w);
+    drain(&resid);
+    let (tier, bytes) = resid.resident_record(key, Pool::Hi).expect("resident");
+    assert_eq!(tier, Precision::Q4);
+    assert_eq!(&bytes[..], store.record(key, Precision::Q4));
+    let st = resid.loader_stats();
+    assert_eq!(st.progressive_loads, 0);
+    assert_eq!(st.upgrades_committed + st.upgrades_aborted, 0);
+    assert_eq!(copier.bytes_moved(), 512, "exactly the q4 record");
+    resid.release(key, Pool::Hi);
+}
+
+// ---------------------------------------------------------------------
+// (d) the per-acquire floor decision: criticality and deadline slack
+// ---------------------------------------------------------------------
+
+/// A critical miss (score 0, idle link, no deadline pressure) streams the
+/// hi record directly: progressive mode must never tax the critical path
+/// with a staged load it does not need.
+#[test]
+fn critical_miss_on_idle_link_streams_hi_directly() {
+    let (resid, copier, store) = mk_residency(8, 1e6, None, true, "critical");
+    let key = ExpertKey::new(2, 3);
+    let (_u, w) = resid.acquire(2, vec![(key, Class::Hi, vec![1.0], 0.0)], None);
+    resid.wait(&w);
+    drain(&resid);
+    let (tier, bytes) = resid.resident_record(key, Pool::Hi).expect("resident");
+    assert_eq!(tier, Precision::F32, "a critical miss must land at the hi tier");
+    assert_eq!(&bytes[..], store.record(key, Precision::F32));
+    let st = resid.loader_stats();
+    assert_eq!(st.progressive_loads, 0, "no staged load on the critical path");
+    assert_eq!(st.upgrades_committed + st.upgrades_aborted, 0);
+    assert_eq!(copier.bytes_moved(), 4096);
+    resid.release(key, Pool::Hi);
+}
+
+/// TTFT-deadline urgency lowers the fetch floor even for a critical
+/// score: under deadline pressure, first-usable beats first-exact.
+#[test]
+fn deadline_urgency_lowers_the_fetch_floor() {
+    let (resid, _copier, _store) = mk_residency(8, 1e6, None, true, "urgent");
+    resid.set_deadline_urgent(true);
+    let key = ExpertKey::new(3, 0);
+    let (_u, w) = resid.acquire(3, vec![(key, Class::Hi, vec![1.0], 0.0)], None);
+    resid.wait(&w);
+    drain(&resid);
+    let st = resid.loader_stats();
+    assert_eq!(st.progressive_loads, 1, "deadline urgency must stage lo-first");
+    assert_eq!(st.upgrades_committed, 1, "the upgrade still lands in the background");
+    // urgency is a latch the coordinator publishes per step; clearing it
+    // restores the hi-direct default
+    resid.set_deadline_urgent(false);
+    let key2 = ExpertKey::new(3, 1);
+    let (_u2, w2) = resid.acquire(3, vec![(key2, Class::Hi, vec![1.0], 0.0)], None);
+    resid.wait(&w2);
+    drain(&resid);
+    assert_eq!(resid.loader_stats().progressive_loads, 1, "cleared urgency staged again");
+    resid.release(key, Pool::Hi);
+    resid.release(key2, Pool::Hi);
+}

@@ -115,10 +115,10 @@ fn shared_miss_produces_single_load_and_both_sequences_resume() {
     assert_eq!(resid.live_sequences(), 2);
 
     let key = ExpertKey::new(0, 1);
-    let (uses_a, waits_a) = resid.acquire(0, vec![(key, Class::Hi, vec![1.0])], Some(sa.id()));
+    let (uses_a, waits_a) = resid.acquire(0, vec![(key, Class::Hi, vec![1.0], 0.0)], Some(sa.id()));
     assert_eq!(uses_a.len(), 1);
     assert_eq!(waits_a.len(), 1, "first miss must submit a load");
-    let (uses_b, waits_b) = resid.acquire(0, vec![(key, Class::Hi, vec![1.0])], Some(sb.id()));
+    let (uses_b, waits_b) = resid.acquire(0, vec![(key, Class::Hi, vec![1.0], 0.0)], Some(sb.id()));
     assert_eq!(uses_b.len(), 1);
     assert_eq!(
         waits_b.len(),
@@ -158,7 +158,7 @@ fn token_advance_does_not_invalidate_other_sequences_prefetch() {
     // occupy the link so both prefetches stay *queued*
     let blocker = ExpertKey::new(0, 3);
     let (_u, od_waits) =
-        resid.acquire(0, vec![(blocker, Class::Hi, vec![1.0])], Some(sa.id()));
+        resid.acquire(0, vec![(blocker, Class::Hi, vec![1.0], 0.0)], Some(sa.id()));
     assert_eq!(od_waits.len(), 1);
 
     // A plans a prefetch for layer 1 expert 0; B for layer 2 expert 2
@@ -198,7 +198,7 @@ fn replanned_prefetch_joins_its_queued_task_and_survives_own_bump() {
 
     let blocker = ExpertKey::new(0, 3);
     let (_u, od_waits) =
-        resid.acquire(0, vec![(blocker, Class::Hi, vec![1.0])], Some(sa.id()));
+        resid.acquire(0, vec![(blocker, Class::Hi, vec![1.0], 0.0)], Some(sa.id()));
     let e = cfg.n_experts as usize;
     // token t: prefetch (1, 0) queued behind the blocker
     resid.plan_prefetch(sa.id(), 0, cfg.n_layers, &[hot_probs(3, e), hot_probs(0, e)]);
@@ -225,7 +225,7 @@ fn ondemand_join_promotes_queued_prefetch_to_priority_lane() {
     // occupy the link, then queue B's prefetch for (2, 2)
     let blocker = ExpertKey::new(0, 3);
     let (_u, od_waits) =
-        resid.acquire(0, vec![(blocker, Class::Hi, vec![1.0])], Some(sa.id()));
+        resid.acquire(0, vec![(blocker, Class::Hi, vec![1.0], 0.0)], Some(sa.id()));
     let e = cfg.n_experts as usize;
     resid.plan_prefetch(sb.id(), 1, cfg.n_layers, &[hot_probs(3, e), hot_probs(2, e)]);
 
@@ -233,7 +233,7 @@ fn ondemand_join_promotes_queued_prefetch_to_priority_lane() {
     // promoted into the on-demand lane (paper: on-demand jumps ahead of
     // queued prefetches; started transfers are never preempted)
     let need = ExpertKey::new(2, 2);
-    let (_ua, waits_a) = resid.acquire(2, vec![(need, Class::Hi, vec![1.0])], Some(sa.id()));
+    let (_ua, waits_a) = resid.acquire(2, vec![(need, Class::Hi, vec![1.0], 0.0)], Some(sa.id()));
     assert_eq!(waits_a.len(), 1);
     resid.wait(&od_waits);
     resid.wait(&waits_a);
@@ -267,6 +267,7 @@ fn merged_acquire_issues_single_load_per_unique_miss() {
             gatew: vec![0.6, 0.7],
             rows: vec![0, 1],
             seqs: vec![None, None],
+            score: 0.0,
         },
         MergedUse {
             key: solo,
@@ -274,6 +275,7 @@ fn merged_acquire_issues_single_load_per_unique_miss() {
             gatew: vec![0.0, 0.3],
             rows: vec![1],
             seqs: vec![None],
+            score: 0.0,
         },
     ];
     let (uses, waits) = resid.acquire_merged(0, demands, &[None, None]);
@@ -341,6 +343,7 @@ fn prop_merged_acquire_dedup_accounts_for_every_duplicate() {
                     gatew,
                     seqs: vec![None; rows.len()],
                     rows,
+                    score: 0.0,
                 })
                 .collect();
             let unique = demands.len() as u64;
@@ -401,7 +404,7 @@ fn ticket_wakeups_fire_on_completion_and_refuse_after() {
     let cfg = tiny_cfg();
     let (resid, _copier) = mk_residency(&cfg, 4, 4, 2e4, "wakeup");
     let key = ExpertKey::new(3, 0);
-    let (_u, waits) = resid.acquire(3, vec![(key, Class::Hi, vec![1.0])], None);
+    let (_u, waits) = resid.acquire(3, vec![(key, Class::Hi, vec![1.0], 0.0)], None);
     assert_eq!(waits.len(), 1);
     let ticket = waits.tickets()[0].clone();
     assert!(!ticket.is_ready(), "200ms transfer reported ready instantly");

@@ -357,13 +357,13 @@ fn noslot_drop_is_counted_and_facade_reacquires() {
     );
     let a = ExpertKey::new(0, 0);
     let b = ExpertKey::new(0, 1);
-    let (_ua, wa) = resid.acquire(0, vec![(a, Class::Hi, vec![1.0])], None);
+    let (_ua, wa) = resid.acquire(0, vec![(a, Class::Hi, vec![1.0], 0.0)], None);
     resid.wait(&wa);
     assert!(resid.buffer(a, Pool::Hi).is_some());
 
     // B: probe misses, the load finds every slot pinned -> NoSlot drops
     // (counted once per re-acquire attempt), ticket resolves unfulfilled
-    let (_ub, wb) = resid.acquire(0, vec![(b, Class::Hi, vec![1.0])], None);
+    let (_ub, wb) = resid.acquire(0, vec![(b, Class::Hi, vec![1.0], 0.0)], None);
     assert_eq!(wb.len(), 1);
     resid.wait(&wb);
     let t = &wb.tickets()[0];
@@ -387,7 +387,7 @@ fn noslot_drop_is_counted_and_facade_reacquires() {
     // frees and the load now lands
     resid.release(a, Pool::Hi);
     resid.release(b, Pool::Hi);
-    let (_ub2, wb2) = resid.acquire(1, vec![(b, Class::Hi, vec![1.0])], None);
+    let (_ub2, wb2) = resid.acquire(1, vec![(b, Class::Hi, vec![1.0], 0.0)], None);
     resid.wait(&wb2);
     assert!(wb2.is_empty() || wb2.tickets()[0].is_fulfilled());
     assert!(
@@ -421,9 +421,15 @@ fn mk_engine(name: &str, dir: &Path, load_bw: f64) -> Engine {
         cpu_expert_time: 0.0,
     };
     // dynamic loading off: logits depend only on token history, so
-    // scheduling policy must not change them
-    let policy =
-        PolicyConfig { dynamic_loading: false, prefetch_depth: 2, ..PolicyConfig::default() };
+    // scheduling policy must not change them. The fetch precision is
+    // pinned to the hi format: this equivalence suite compares byte
+    // streams, so the per-acquire precision choice must be frozen.
+    let policy = PolicyConfig {
+        dynamic_loading: false,
+        prefetch_depth: 2,
+        pin_precision: Some(Precision::F32),
+        ..PolicyConfig::default()
+    };
     Engine::new_reference(dir, big_cfg(name), EngineOptions::new(hw, policy))
         .expect("reference engine")
 }
