@@ -13,6 +13,13 @@
 //! gap by ~one chunk's work. The p50/p99/max inter-token latencies of
 //! the live sequences during the admission window quantify it (the DES
 //! mirror is `sim::des::simulate_admission`).
+//!
+//! And the **remote expert tier** scenario (also artifact-free): a real
+//! in-process shard server owning half the synthetic store's experts,
+//! fetched through the `TieredStore` over the modeled network link class
+//! — local-DRAM vs cold-peer vs staged sweeps, the remote counters the
+//! serving report surfaces, and the N nodes x M users DES sweep
+//! (`sim::des::simulate_remote_cluster`).
 
 use std::path::PathBuf;
 use std::sync::{Arc, Mutex};
@@ -388,9 +395,132 @@ fn progressive_floor_scenario() {
     }
 }
 
+// ---------------------------------------------------------------------
+// Remote expert tier: peer fetch vs local DRAM (artifact-free: a real
+// shard server on localhost + the modeled network link class)
+// ---------------------------------------------------------------------
+
+/// Modeled peer link: ~1 GB/s with a small RTT, so a cold peer fetch is
+/// visibly dearer than a DRAM borrow but the bench stays quick.
+const NET_BW: f64 = 1e9;
+const NET_LAT: f64 = 100e-6;
+
+/// Two-way shard over the tiny synthetic store: the local node owns the
+/// bottom half of the flat expert space, an in-process [`ShardServer`]
+/// owns the top half. Times a full sweep of the store through the
+/// [`TieredStore`] three ways — local-only (DRAM borrows), cold remote
+/// (half the records stream from the peer over the network link class),
+/// warm remote (the peer half answered by the staged side-cache) — then
+/// prints the remote counters the serving report surfaces, and the
+/// N nodes x M users DES sweep (`sim::des::simulate_remote_cluster`).
+fn remote_scenario() {
+    use hobbit::config::{PeerSpec, RemoteConfig};
+    use hobbit::memory::ONDEMAND_WEIGHT;
+    use hobbit::remote::{RetryPolicy, ShardServer, ShardSpec, TieredStore};
+    use hobbit::sim::des::simulate_remote_cluster;
+
+    let cfg = tiny_store_config("bench-remote");
+    let dir = std::env::temp_dir().join("hobbit_bench_remote");
+    write_synth_expert_store(&dir, &cfg).expect("synth store");
+    let store = Arc::new(ExpertStore::load(&dir, &cfg).expect("store"));
+    let half = cfg.total_experts() / 2;
+    let peer_shard = ShardSpec::parse(&format!("{half}-{}", cfg.total_experts() - 1)).unwrap();
+    let server = ShardServer::bind("127.0.0.1:0", store.clone(), peer_shard.clone(), 16 * 1024)
+        .expect("shard server");
+    let addr = server.serve_background().to_string();
+    let rc = RemoteConfig {
+        local_shard: ShardSpec::parse(&format!("0-{}", half - 1)).unwrap(),
+        peers: vec![PeerSpec { addr, shard: peer_shard }],
+        net_bw: NET_BW,
+        net_latency: NET_LAT,
+        retry: RetryPolicy::fast(),
+        ..RemoteConfig::default()
+    };
+    let tiered = TieredStore::from_config(store.clone(), &rc, &dir).expect("tiered store");
+    let local = TieredStore::local_only(store.clone());
+
+    let keys: Vec<ExpertKey> = (0..cfg.n_layers)
+        .flat_map(|l| (0..cfg.n_experts).map(move |e| ExpertKey::new(l, e)))
+        .collect();
+    let sweep = |ts: &TieredStore| {
+        let t0 = Instant::now();
+        for &k in &keys {
+            let _ = ts.fetch(k, Precision::F32, ONDEMAND_WEIGHT);
+        }
+        t0.elapsed().as_secs_f64()
+    };
+    println!(
+        "\n== remote expert tier: 2-way shard, {} experts, peer fetch over a modeled \
+         {:.1} GB/s link ==\n",
+        cfg.total_experts(),
+        NET_BW / 1e9,
+    );
+    let t_local = sweep(&local);
+    let t_cold = sweep(&tiered);
+    let t_warm = sweep(&tiered);
+    println!("local DRAM          full sweep {:>7.2}ms", t_local * 1e3);
+    println!("cold  ({half} via peer)  full sweep {:>7.2}ms", t_cold * 1e3);
+    println!("warm  (staged)      full sweep {:>7.2}ms", t_warm * 1e3);
+
+    let probe = ExpertKey::new(cfg.n_layers - 1, cfg.n_experts - 1);
+    let identical = tiered.fetch(probe, Precision::Q8, ONDEMAND_WEIGHT).as_slice()
+        == store.record(probe, Precision::Q8);
+    println!("remote record bytes identical to local store: {identical}");
+    let c = tiered.counters();
+    // the same counters `hobbit serve` emits — "serving" key only
+    println!(
+        "serving: {{\"remote_fetches\":{},\"remote_bytes\":{},\"remote_retries\":{},\
+         \"peer_failovers\":{},\"remote_staged_hits\":{},\"disk_fetches\":{}}}",
+        c.remote_fetches, c.remote_bytes, c.remote_retries, c.peer_failovers, c.staged_hits,
+        c.disk_fetches,
+    );
+    if !identical {
+        eprintln!("WARNING: peer-served record differed from the local store");
+    }
+    if t_cold <= t_local {
+        eprintln!("WARNING: cold peer fetches were not dearer than DRAM borrows");
+    }
+
+    // the DES mirror: M users pinned round-robin across N nodes, each
+    // node with its own PCIe link and its own network link (the second
+    // link class — peer traffic never shows up as PCIe pressure)
+    const DES_USERS: usize = 8;
+    const DES_TOKENS: usize = 64;
+    println!(
+        "\n== DES remote-cluster sweep: {DES_USERS} users x {DES_TOKENS} tokens, \
+         1.5 MB experts, PCIe 1.5 GB/s, net {:.0} Gb/s ==\n",
+        NET_BW * 8.0 / 1e9,
+    );
+    for n_nodes in [1usize, 2, 4] {
+        let r = simulate_remote_cluster(
+            n_nodes,
+            DES_USERS,
+            DES_TOKENS,
+            1_572_864.0,
+            0.3,
+            0.5,
+            2e-3,
+            (1.5e9, 30e-6),
+            (NET_BW, NET_LAT),
+            2,
+            7,
+        );
+        println!(
+            "nodes {n_nodes}: {:>7.1} tok/s | remote fetches {:>4}, staged hits {:>4}, \
+             net {:>6.1} MB, net util {:.2}",
+            r.tps(),
+            r.remote_fetches,
+            r.staged_hits,
+            r.net_bytes / 1e6,
+            r.net_utilization(n_nodes),
+        );
+    }
+}
+
 fn main() {
     admission_scenario();
     progressive_floor_scenario();
+    remote_scenario();
 
     if !PathBuf::from("artifacts/mixtral-tiny/manifest.json").exists() {
         eprintln!("\nartifacts not built; skipping the FCFS-vs-interleaved serving bench");

@@ -92,6 +92,18 @@ COMMANDS:
               it in place from the prefetch lane)
               --pin-precision f32|q8|q4|q2 (freeze the per-acquire fetch
               precision; excludes --progressive)
+              --shard SPEC (experts resident in this node's DRAM, as flat
+              indices: 'all', 'none', or ranges '0-31,48,64-95')
+              --peers host:port=SPEC;host:port=SPEC (peer shard servers;
+              requires --shard; local+peer shards must partition the
+              model's experts disjointly and completely)
+              --net-gbps G (modeled network link bandwidth for peer
+              fetches — a second link class, independent of the PCIe
+              budget [1])
+  shard-serve run one expert shard server (the peer side of --peers)
+              --weights DIR (weight directory with manifest.json)
+              --shard SPEC [all]  --addr 127.0.0.1:0
+              --net-chunk-bytes N (streaming chunk size [65536])
   generate    run one generation from the CLI
               --model M --artifacts DIR --prompt TEXT --max-new N --temp T
               --hardware H --no-dynamic --no-prefetch --policy P

@@ -4,6 +4,10 @@
 //! Everything is JSON-loadable so experiments are reproducible from files;
 //! presets mirror the paper's three testbeds (Table 2).
 
+use std::time::Duration;
+
+use crate::remote::transport::RetryPolicy;
+use crate::remote::ShardSpec;
 use crate::util::json::Json;
 use crate::Precision;
 
@@ -66,6 +70,36 @@ impl ModelConfig {
             quant_group: g("quant_group")? as usize,
             expert_bytes,
         })
+    }
+
+    /// Inverse of [`Self::from_manifest`]: render the shape as a
+    /// manifest document (`{"model": {...}}`). A shard server started on
+    /// a bare weights directory reads the model shape back from this.
+    pub fn to_manifest_json(&self) -> Json {
+        use std::collections::BTreeMap;
+        let mut eb = BTreeMap::new();
+        for p in Precision::ALL {
+            eb.insert(
+                p.name().to_string(),
+                Json::Num(self.expert_bytes[precision_slot(p)] as f64),
+            );
+        }
+        let mut m = BTreeMap::new();
+        m.insert("name".to_string(), Json::Str(self.name.clone()));
+        m.insert("n_layers".to_string(), Json::Num(self.n_layers as f64));
+        m.insert("d_model".to_string(), Json::Num(self.d_model as f64));
+        m.insert("d_ff".to_string(), Json::Num(self.d_ff as f64));
+        m.insert("n_experts".to_string(), Json::Num(self.n_experts as f64));
+        m.insert("top_k".to_string(), Json::Num(self.top_k as f64));
+        m.insert("n_heads".to_string(), Json::Num(self.n_heads as f64));
+        m.insert("n_kv_heads".to_string(), Json::Num(self.n_kv_heads as f64));
+        m.insert("vocab".to_string(), Json::Num(self.vocab as f64));
+        m.insert("max_seq".to_string(), Json::Num(self.max_seq as f64));
+        m.insert("quant_group".to_string(), Json::Num(self.quant_group as f64));
+        m.insert("expert_bytes".to_string(), Json::Obj(eb));
+        let mut root = BTreeMap::new();
+        root.insert("model".to_string(), Json::Obj(m));
+        Json::Obj(root)
     }
 }
 
@@ -185,6 +219,112 @@ impl IoConfig {
             return Err("io chunk bytes must be >= 1".into());
         }
         Ok(())
+    }
+}
+
+/// One remote peer: its address and the expert shard it serves.
+#[derive(Debug, Clone)]
+pub struct PeerSpec {
+    pub addr: String,
+    pub shard: ShardSpec,
+}
+
+/// The remote expert tier (`--peers` / `--shard` / `--net-gbps`): which
+/// experts live locally, which peers own the rest, and the model of the
+/// network link class they are fetched over. Validated at startup —
+/// overlapping or incomplete shard assignments are a config error, never
+/// a runtime miss.
+#[derive(Debug, Clone)]
+pub struct RemoteConfig {
+    /// flat expert indices served from local DRAM
+    pub local_shard: ShardSpec,
+    /// peer shard servers; together with `local_shard` they must exactly
+    /// partition the flat expert space
+    pub peers: Vec<PeerSpec>,
+    /// network link bandwidth (bytes/s) — its own `LinkArbiter` budget,
+    /// independent of the PCIe link
+    pub net_bw: f64,
+    /// network per-transfer latency (s): connect + request overhead model
+    pub net_latency: f64,
+    /// bound of the staged peer->DRAM side-cache, in records
+    pub staged_capacity: usize,
+    /// network streaming granularity (client read chunks)
+    pub chunk_bytes: usize,
+    /// connect/read timeouts and retry budget per remote fetch
+    pub retry: RetryPolicy,
+    /// circuit-breaker cooldown after a peer exhausts its retries
+    pub cooldown: Duration,
+}
+
+impl Default for RemoteConfig {
+    fn default() -> Self {
+        Self {
+            local_shard: ShardSpec::all(),
+            peers: Vec::new(),
+            net_bw: crate::memory::LinkModel::from_gbps(1.0, 0.0).bytes_per_s,
+            net_latency: 200e-6,
+            staged_capacity: 32,
+            chunk_bytes: 64 * 1024,
+            retry: RetryPolicy::default(),
+            cooldown: Duration::from_secs(2),
+        }
+    }
+}
+
+impl RemoteConfig {
+    /// Build from the CLI surface. `peers` is `addr=spec;addr=spec` (`;`
+    /// separates peers because shard specs use `,` internally), `shard`
+    /// is the local [`ShardSpec`], `net_gbps` the network budget in
+    /// gigabits/s. Returns `None` when neither sharding flag is given
+    /// (single-node mode).
+    pub fn from_flags(
+        peers: Option<&str>,
+        shard: Option<&str>,
+        net_gbps: Option<f64>,
+    ) -> Result<Option<Self>, String> {
+        if peers.is_none() && shard.is_none() {
+            return Ok(None);
+        }
+        let mut rc = Self::default();
+        if let Some(s) = shard {
+            rc.local_shard = ShardSpec::parse(s)?;
+        }
+        if let Some(ps) = peers {
+            for ent in ps.split(';').filter(|e| !e.trim().is_empty()) {
+                let (addr, spec) = ent
+                    .split_once('=')
+                    .ok_or_else(|| format!("peer '{ent}' must be host:port=shard-spec"))?;
+                let addr = addr.trim().to_string();
+                if !addr.contains(':') {
+                    return Err(format!("peer address '{addr}' must be host:port"));
+                }
+                rc.peers.push(PeerSpec { addr, shard: ShardSpec::parse(spec)? });
+            }
+            if shard.is_none() {
+                return Err("--peers requires --shard (the local shard)".into());
+            }
+        }
+        if let Some(g) = net_gbps {
+            if g <= 0.0 {
+                return Err("--net-gbps must be > 0".into());
+            }
+            rc.net_bw = crate::memory::LinkModel::from_gbps(g, 0.0).bytes_per_s;
+        }
+        Ok(Some(rc))
+    }
+
+    /// The startup gate: local + peer shards must exactly partition the
+    /// `total_experts`-sized flat index space, and the link model must be
+    /// sane.
+    pub fn validate(&self, total_experts: usize) -> Result<(), String> {
+        if self.net_bw <= 0.0 {
+            return Err("network bandwidth must be > 0".into());
+        }
+        if self.chunk_bytes == 0 {
+            return Err("network chunk bytes must be >= 1".into());
+        }
+        let shards: Vec<&ShardSpec> = self.peers.iter().map(|p| &p.shard).collect();
+        ShardSpec::validate_partition(&self.local_shard, &shards, total_experts)
     }
 }
 
@@ -381,6 +521,55 @@ mod tests {
         assert!(HardwareConfig::preset("orin").is_some());
         assert!(HardwareConfig::preset("rtx4090+cpu").unwrap().cpu_assist);
         assert!(HardwareConfig::preset("nope").is_none());
+    }
+
+    #[test]
+    fn manifest_json_round_trips() {
+        let cfg = crate::model::synth::tiny_model_config("manifest-rt");
+        let j = Json::parse(&cfg.to_manifest_json().to_string()).unwrap();
+        let back = ModelConfig::from_manifest(&j).unwrap();
+        assert_eq!(back.name, cfg.name);
+        assert_eq!(back.n_layers, cfg.n_layers);
+        assert_eq!(back.expert_bytes, cfg.expert_bytes);
+        assert_eq!(back.top_k, cfg.top_k);
+        assert_eq!(back.vocab, cfg.vocab);
+    }
+
+    #[test]
+    fn remote_config_flag_parsing_and_validation() {
+        assert!(RemoteConfig::from_flags(None, None, None).unwrap().is_none());
+        let rc = RemoteConfig::from_flags(
+            Some("127.0.0.1:7001=0-5;127.0.0.1:7002=6-11"),
+            Some("none"),
+            Some(10.0),
+        )
+        .unwrap()
+        .unwrap();
+        assert_eq!(rc.peers.len(), 2);
+        assert!(rc.local_shard.is_none());
+        assert!((rc.net_bw - 10.0e9 / 8.0).abs() < 1.0);
+        rc.validate(12).unwrap();
+        // incomplete partition rejected at startup
+        let rc = RemoteConfig::from_flags(Some("127.0.0.1:7001=0-5"), Some("none"), None)
+            .unwrap()
+            .unwrap();
+        let err = rc.validate(12).unwrap_err();
+        assert!(err.contains("incomplete"), "{err}");
+        // overlapping partition rejected
+        let rc = RemoteConfig::from_flags(Some("127.0.0.1:7001=0-11"), Some("0-3"), None)
+            .unwrap()
+            .unwrap();
+        assert!(rc.validate(12).unwrap_err().contains("overlap"));
+        // malformed flags
+        assert!(RemoteConfig::from_flags(Some("noport=0-5"), Some("none"), None).is_err());
+        assert!(RemoteConfig::from_flags(Some("127.0.0.1:7001=0-5"), None, None).is_err());
+        assert!(RemoteConfig::from_flags(None, Some("all"), Some(-1.0)).is_err());
+        // --shard all alone is the single-node degenerate case
+        RemoteConfig::from_flags(None, Some("all"), None)
+            .unwrap()
+            .unwrap()
+            .validate(12)
+            .unwrap();
     }
 
     #[test]

@@ -61,12 +61,13 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, Result};
 
 use crate::cache::{CacheManager, Policy, Pool};
-use crate::config::{HardwareConfig, IoConfig, ModelConfig, PolicyConfig};
+use crate::config::{HardwareConfig, IoConfig, ModelConfig, PolicyConfig, RemoteConfig};
 use crate::loader::scorer::{self, Class};
 use crate::loader::GLOBAL_SCOPE;
-use crate::memory::{LinkModel, ThrottledCopier};
+use crate::memory::{LinkModel, ThrottledCopier, ONDEMAND_WEIGHT};
 use crate::model::{ExpertStore, NonExpertWeights};
 use crate::predictor::Predictor;
+use crate::remote::TieredStore;
 use crate::residency::{ExpertResidency, MergedUse, SequenceSession, Ticket, TicketSet};
 use crate::runtime::{pad_batch_width, Runtime, MAX_DECODE_BATCH};
 use crate::{ExpertKey, Precision};
@@ -108,6 +109,10 @@ pub struct EngineOptions {
     /// transfer-pipeline knobs: lanes + preemption chunk size
     /// (`--io-lanes` / `--io-chunk-bytes`; default 2 lanes, 256 KiB)
     pub io: IoConfig,
+    /// remote expert tier (`--peers`/`--shard`/`--net-gbps`): this node's
+    /// local DRAM shard, the peer shard servers, and the network link
+    /// budget. None = every expert local (the single-node hierarchy).
+    pub remote: Option<RemoteConfig>,
 }
 
 impl EngineOptions {
@@ -119,6 +124,7 @@ impl EngineOptions {
             capture: Capture::none(),
             use_fast_ffn: true,
             io: IoConfig::default(),
+            remote: None,
         }
     }
 }
@@ -493,7 +499,7 @@ impl Engine {
         let nonexpert = NonExpertWeights::load(&weights_dir)?;
         let store = Arc::new(ExpertStore::load(&weights_dir, &cfg)?);
         let exec = Exec::Pjrt(PjrtExec::new(rt, &cfg, &nonexpert, &opts)?);
-        Self::assemble(exec, cfg, opts, store, nonexpert)
+        Self::assemble(exec, cfg, opts, store, nonexpert, &weights_dir)
     }
 
     /// Build an engine over the pure-Rust reference kernels from a weight
@@ -512,17 +518,20 @@ impl Engine {
         let store = Arc::new(ExpertStore::load(weights_dir, &cfg)?);
         let stack_p = (opts.policy.prefetch_depth + 1).min(4);
         let exec = Exec::Reference(RefExec::new(&cfg, &nonexpert, stack_p)?);
-        Self::assemble(exec, cfg, opts, store, nonexpert)
+        Self::assemble(exec, cfg, opts, store, nonexpert, weights_dir)
     }
 
     /// Shared tail of the constructors: cache + loader + predictor +
-    /// residency facade over an already-built executor.
+    /// residency facade over an already-built executor. `weights_dir` is
+    /// the remote tier's disk fallback (peer-down failover reads expert
+    /// records straight from the weight files there).
     fn assemble(
         exec: Exec,
         cfg: ModelConfig,
         opts: EngineOptions,
         store: Arc<ExpertStore>,
         nonexpert: NonExpertWeights,
+        weights_dir: &Path,
     ) -> Result<Self> {
         anyhow::ensure!(
             opts.hardware.hi_cache_experts >= cfg.top_k,
@@ -560,8 +569,18 @@ impl Engine {
             opts.policy.dynamic_loading,
             cfg.n_layers,
         );
-        let residency = ExpertResidency::with_io(
-            store.clone(),
+        // The next-level store: local DRAM only, or — with a remote
+        // config — the tiered hierarchy whose misses walk staged-cache →
+        // peer shard servers → the weight files on disk.
+        let tiered = match &opts.remote {
+            Some(rc) => Arc::new(
+                TieredStore::from_config(store.clone(), rc, weights_dir)
+                    .map_err(|e| anyhow!("remote tier: {e}"))?,
+            ),
+            None => Arc::new(TieredStore::local_only(store.clone())),
+        };
+        let residency = ExpertResidency::with_tiered(
+            tiered,
             cache,
             copier,
             predictor,
@@ -1484,7 +1503,10 @@ impl Engine {
                 let bypass = resident.is_none();
                 let (prec, record): (Precision, Vec<u8>) = match resident {
                     Some((tier, bytes)) => (tier, bytes),
-                    None => (prec, self.store.record(key, prec).to_vec()),
+                    None => (
+                        prec,
+                        self.residency.store().fetch_owned(key, prec, ONDEMAND_WEIGHT),
+                    ),
                 };
                 match self.exec_expert(s, prec, &record, hn, &gatew, key, token_base) {
                     Ok(y) => {
@@ -1528,7 +1550,10 @@ impl Engine {
                 let bypass = resident.is_none();
                 let (prec, record): (Precision, Vec<u8>) = match resident {
                     Some((tier, bytes)) => (tier, bytes),
-                    None => (prec, self.store.record(u.key, prec).to_vec()),
+                    None => (
+                        prec,
+                        self.residency.store().fetch_owned(u.key, prec, ONDEMAND_WEIGHT),
+                    ),
                 };
                 match self.exec_expert(s, prec, &record, hn, &u.gatew, u.key, token_base) {
                     Ok(y) => {

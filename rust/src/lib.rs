@@ -36,6 +36,10 @@
 //!   expert-load barrier and advances other sequences' decode meanwhile —
 //!   or, with `--max-batch N`, gangs runnable sequences into one batched
 //!   launch and evicts rows whose loads block.
+//! * [`remote`] — the remote expert tier: expert shard servers speaking
+//!   the `EXPERT` line protocol, a timeout/retry TCP transport, and the
+//!   tiered store extending the hierarchy to HBM ← DRAM ← peer ← disk
+//!   with network bandwidth as a second link class.
 //! * [`server`] — TCP serving front-end: single-threaded FCFS accept loop
 //!   (`serve`) or threaded accept + per-connection readers feeding the
 //!   interleaved scheduler over a channel (`serve_concurrent`).
@@ -59,6 +63,7 @@ pub mod metrics;
 pub mod model;
 pub mod predictor;
 pub mod quant;
+pub mod remote;
 pub mod residency;
 pub mod runtime;
 pub mod server;

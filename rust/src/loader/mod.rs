@@ -58,6 +58,7 @@ use crate::config::IoConfig;
 use crate::memory::{ThrottledCopier, ONDEMAND_WEIGHT, PREFETCH_WEIGHT};
 use crate::metrics::LoaderStats;
 use crate::model::ExpertStore;
+use crate::remote::TieredStore;
 use crate::{ExpertKey, Precision};
 
 /// Why a load was requested.
@@ -479,9 +480,23 @@ impl ExpertLoader {
     }
 
     /// Start the loader with `io.lanes` worker lanes executing tasks as
-    /// `io.chunk_bytes`-sized chunks over the shared link.
+    /// `io.chunk_bytes`-sized chunks over the shared link. The store is
+    /// treated as fully local (every expert resident in host DRAM).
     pub fn start_with(
         store: Arc<ExpertStore>,
+        cache: Arc<Mutex<CacheManager>>,
+        copier: Arc<ThrottledCopier>,
+        io: IoConfig,
+    ) -> Self {
+        Self::start_tiered(Arc::new(TieredStore::local_only(store)), cache, copier, io)
+    }
+
+    /// Start the loader over a [`TieredStore`]: when the record is not in
+    /// the local DRAM shard, the worker's fetch transparently walks
+    /// staged-cache → peer (charged against the *network* link at the
+    /// task's lane weight) → disk before the PCIe chunk loop begins.
+    pub fn start_tiered(
+        store: Arc<TieredStore>,
         cache: Arc<Mutex<CacheManager>>,
         copier: Arc<ThrottledCopier>,
         io: IoConfig,
@@ -545,7 +560,7 @@ impl Drop for ExpertLoader {
 /// One transfer lane.
 struct Worker {
     shared: Arc<Shared>,
-    store: Arc<ExpertStore>,
+    store: Arc<TieredStore>,
     cache: Arc<Mutex<CacheManager>>,
     copier: Arc<ThrottledCopier>,
     stats: Arc<Mutex<LoaderStats>>,
@@ -733,11 +748,17 @@ impl Worker {
                 }
             }
         };
-        let record = self.store.record(task.key, task.precision);
         let weight = match task.kind {
             TaskKind::OnDemand => ONDEMAND_WEIGHT,
             TaskKind::Prefetch => PREFETCH_WEIGHT,
         };
+        // Materialize the record from whichever tier holds it. A remote
+        // fetch charges the network link (at this task's weight) before any
+        // PCIe chunk moves; the result lands in the tiered store's staged
+        // side-cache, so a preempted task's resume re-reads identical bytes
+        // without touching the network again.
+        let fetched = self.store.fetch(task.key, task.precision, weight);
+        let record = fetched.as_slice();
         let grant = self.copier.lane(weight);
         // DMA setup cost: once per transfer start and per preemption resume
         self.copier.charge_latency();

@@ -7,15 +7,18 @@ use anyhow::{anyhow, Result};
 use hobbit::baselines::{self, EQ3_WEIGHTS};
 use hobbit::cache::Policy;
 use hobbit::cli::{Args, USAGE};
-use hobbit::config::{HardwareConfig, PolicyConfig};
+use hobbit::config::{HardwareConfig, ModelConfig, PolicyConfig, RemoteConfig};
 use hobbit::coordinator::{Coordinator, Request, SchedPolicy, SchedulerMode};
 use hobbit::engine::Engine;
 use hobbit::figures;
+use hobbit::model::ExpertStore;
+use hobbit::remote::{ShardServer, ShardSpec};
 use hobbit::runtime::MAX_DECODE_BATCH;
 use hobbit::server::Server;
 use hobbit::sim::des::{simulate_decode, SimSystem};
 use hobbit::sim::params::{SimHardware, SimModel};
 use hobbit::trace::{generate as gen_traces, TraceGenConfig};
+use hobbit::util::json::Json;
 
 fn main() {
     let mut argv: Vec<String> = std::env::args().skip(1).collect();
@@ -39,6 +42,7 @@ fn main() {
     );
     let r = match cmd.as_str() {
         "serve" => cmd_serve(&args),
+        "shard-serve" => cmd_shard_serve(&args),
         "generate" => cmd_generate(&args),
         "figures" => cmd_figures(&args),
         "sim" => cmd_sim(&args),
@@ -112,7 +116,38 @@ fn build_engine(args: &Args, allow_sched_policy: bool) -> Result<Engine> {
     if args.has("progressive") {
         opts.policy.progressive = true;
     }
+    // remote expert tier: this node's DRAM shard + peer shard servers +
+    // the network link budget (validated as a disjoint, complete
+    // partition at engine construction)
+    let net_gbps = match args.get("net-gbps") {
+        Some(v) => Some(v.parse::<f64>().map_err(|_| anyhow!("bad --net-gbps '{v}'"))?),
+        None => None,
+    };
+    opts.remote = RemoteConfig::from_flags(args.get("peers"), args.get("shard"), net_gbps)
+        .map_err(|e| anyhow!("{e}"))?;
     Engine::new(&artifacts, model, opts)
+}
+
+/// `shard-serve`: run one expert shard server over a weight directory —
+/// the peer side of the remote expert tier. The model shape comes from
+/// `manifest.json` next to the weight files
+/// (`model::synth::write_store_manifest` / the AOT export both write it).
+fn cmd_shard_serve(args: &Args) -> Result<()> {
+    let weights = PathBuf::from(
+        args.get("weights").ok_or_else(|| anyhow!("shard-serve needs --weights DIR"))?,
+    );
+    let manifest_path = weights.join("manifest.json");
+    let text = std::fs::read_to_string(&manifest_path)
+        .map_err(|e| anyhow!("reading {}: {e}", manifest_path.display()))?;
+    let manifest = Json::parse(&text).map_err(|e| anyhow!("parsing manifest: {e}"))?;
+    let cfg = ModelConfig::from_manifest(&manifest).map_err(|e| anyhow!("manifest: {e}"))?;
+    let shard = ShardSpec::parse(args.get_or("shard", "all")).map_err(|e| anyhow!("{e}"))?;
+    let store = std::sync::Arc::new(ExpertStore::load(&weights, &cfg)?);
+    let chunk = args.get_usize("net-chunk-bytes", hobbit::remote::shard::DEFAULT_CHUNK_BYTES);
+    let server = ShardServer::bind(args.get_or("addr", "127.0.0.1:0"), store, shard, chunk)?;
+    // exact line the multi-process suite (and any orchestrator) parses
+    println!("shard-serve listening on {}", server.local_addr());
+    server.serve()
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {

@@ -42,6 +42,12 @@ impl LinkModel {
     pub fn transfer_time(&self, bytes: usize) -> Duration {
         Duration::from_secs_f64(self.latency_s + bytes as f64 / self.bytes_per_s)
     }
+
+    /// Link model from a gigabit-per-second budget (the `--net-gbps`
+    /// unit of the remote expert tier's network link class).
+    pub fn from_gbps(gbps: f64, latency_s: f64) -> Self {
+        Self { bytes_per_s: gbps * 1e9 / 8.0, latency_s }
+    }
 }
 
 /// Shared-bandwidth arbiter over one link.

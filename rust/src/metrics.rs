@@ -71,6 +71,21 @@ pub struct LoaderStats {
     /// upgrade continuations that aborted (slot evicted/refilled before
     /// the staged bytes landed — the narrower resident tier stays valid)
     pub upgrades_aborted: u64,
+    /// records pulled from a peer over the network link class (demand +
+    /// cross-tier staging)
+    pub remote_fetches: u64,
+    /// bytes pulled over the network link class
+    pub remote_bytes: u64,
+    /// transport retries spent on successful remote fetches
+    pub remote_retries: u64,
+    /// demand fetches a peer should have served but the local disk tier
+    /// did (the degraded-tier counter: dead peer, bounded retries spent)
+    pub peer_failovers: u64,
+    /// fetches answered by the staged peer->DRAM side-cache — the
+    /// cross-tier prefetch hits
+    pub remote_staged_hits: u64,
+    /// records read from the local disk failover tier
+    pub disk_fetches: u64,
 }
 
 impl LoaderStats {
@@ -117,6 +132,12 @@ impl LoaderStats {
             ("progressive_loads", num(self.progressive_loads as f64)),
             ("upgrades_committed", num(self.upgrades_committed as f64)),
             ("upgrades_aborted", num(self.upgrades_aborted as f64)),
+            ("remote_fetches", num(self.remote_fetches as f64)),
+            ("remote_bytes", num(self.remote_bytes as f64)),
+            ("remote_retries", num(self.remote_retries as f64)),
+            ("peer_failovers", num(self.peer_failovers as f64)),
+            ("remote_staged_hits", num(self.remote_staged_hits as f64)),
+            ("disk_fetches", num(self.disk_fetches as f64)),
         ])
     }
 }
@@ -548,6 +569,30 @@ mod tests {
         // degenerate means stay finite
         assert_eq!(LoaderStats::default().mean_ondemand_ready_ms(), 0.0);
         assert_eq!(LoaderStats::default().mean_prefetch_ready_ms(), 0.0);
+    }
+
+    #[test]
+    fn remote_stats_surface_only_in_serving_section() {
+        let mut rep = RunReport::default();
+        rep.loader.remote_fetches = 11;
+        rep.loader.remote_bytes = 4096;
+        rep.loader.remote_retries = 2;
+        rep.loader.peer_failovers = 1;
+        rep.loader.remote_staged_hits = 5;
+        rep.loader.disk_fetches = 3;
+        let fcfs = rep.to_json().to_string();
+        assert!(!fcfs.contains("remote"), "FCFS report grew remote keys");
+        assert!(!fcfs.contains("peer_failovers"), "FCFS report grew failover keys");
+        assert!(!fcfs.contains("disk_fetches"), "FCFS report grew disk keys");
+        rep.scheduler = Some(SchedulerStats::default());
+        let j = Json::parse(&rep.to_json().to_string()).unwrap();
+        let serving = j.get("serving").unwrap();
+        assert_eq!(serving.get("remote_fetches").unwrap().as_f64().unwrap(), 11.0);
+        assert_eq!(serving.get("remote_bytes").unwrap().as_f64().unwrap(), 4096.0);
+        assert_eq!(serving.get("remote_retries").unwrap().as_f64().unwrap(), 2.0);
+        assert_eq!(serving.get("peer_failovers").unwrap().as_f64().unwrap(), 1.0);
+        assert_eq!(serving.get("remote_staged_hits").unwrap().as_f64().unwrap(), 5.0);
+        assert_eq!(serving.get("disk_fetches").unwrap().as_f64().unwrap(), 3.0);
     }
 
     #[test]

@@ -109,6 +109,17 @@ pub fn write_synth_expert_store(dir: &Path, cfg: &ModelConfig) -> Result<()> {
     Ok(())
 }
 
+/// Write `manifest.json` next to the weight files so a shard server can
+/// recover the model shape from the directory alone (`hobbit shard-serve`
+/// reads it back through `ModelConfig::from_manifest`).
+pub fn write_store_manifest(dir: &Path, cfg: &ModelConfig) -> Result<()> {
+    std::fs::create_dir_all(dir)
+        .with_context(|| format!("creating {}", dir.display()))?;
+    std::fs::write(dir.join("manifest.json"), cfg.to_manifest_json().to_string())
+        .with_context(|| format!("writing {}/manifest.json", dir.display()))?;
+    Ok(())
+}
+
 /// Write the whole synthesized model (non-expert weights + every expert
 /// at every precision) under `dir`. Deterministic in `seed`.
 pub fn write_synth_model(dir: &Path, cfg: &ModelConfig, seed: u64) -> Result<()> {

@@ -164,6 +164,37 @@ impl Predictor {
         plan
     }
 
+    /// Cross-tier staging candidates: every predicted (expert, class) over
+    /// the WHOLE stacked horizon, with no pins taken, no cache probes, and
+    /// no early stop at the first uncovered layer. [`Self::plan`] answers
+    /// "what must move DRAM → HBM next"; this answers "what will be wanted
+    /// over the next `depth` layers at all" — the remote tier uses it to
+    /// pull peer-resident experts into local DRAM ahead of demand, a
+    /// fetch whose latency is far too long to hide inside `plan`'s
+    /// one-layer window.
+    pub fn stage_candidates(
+        &self,
+        current_layer: u32,
+        n_layers: u32,
+        stacked_probs: &[Vec<f32>],
+    ) -> Vec<(ExpertKey, Class)> {
+        let mut out = Vec::new();
+        for j in 1..stacked_probs.len() {
+            let layer = current_layer + j as u32;
+            if layer >= n_layers {
+                break;
+            }
+            let decisions =
+                scorer::decide(&stacked_probs[j], self.top_k, self.t1, self.t2, self.dynamic);
+            for d in &decisions {
+                if d.class != Class::Skip {
+                    out.push((ExpertKey::new(layer, d.expert), d.class));
+                }
+            }
+        }
+        out
+    }
+
     /// Score a layer's realized top-k against the pending prediction and
     /// release pins. Call when `layer` is actually executed.
     pub fn observe(&mut self, cache: &mut CacheManager, layer: u32, actual_probs: &[f32]) {
@@ -267,6 +298,25 @@ mod tests {
         t.record(0, &[0], &[0]);
         t.record(9, &[0], &[0]);
         assert!((t.accuracy(1) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stage_candidates_cover_whole_horizon_without_pins() {
+        let mut cache = mk_cache();
+        // layer 1's hot expert already cached: plan() stops early, but the
+        // staging view keeps walking and never pins anything
+        cache.reserve(ExpertKey::new(1, 0), Pool::Hi, 0).unwrap();
+        cache.commit(ExpertKey::new(1, 0), Pool::Hi);
+        let pred = Predictor::new(3, 2, 0.6, 0.9, true, 4);
+        let stacked = vec![probs(0, 4), probs(0, 4), probs(1, 4), probs(2, 4)];
+        let cands = pred.stage_candidates(0, 4, &stacked);
+        let layers: Vec<u32> = cands.iter().map(|(k, _)| k.layer).collect();
+        assert!(layers.contains(&1) && layers.contains(&2) && layers.contains(&3));
+        assert!(cands.iter().any(|(k, _)| k.layer == 2 && k.expert == 1));
+        assert!(cands.iter().all(|(_, c)| *c != Class::Skip));
+        assert!(!cache.hi.pinned_contains(ExpertKey::new(1, 0)));
+        // clamps at the model end like plan()
+        assert!(pred.stage_candidates(3, 4, &stacked).is_empty());
     }
 
     #[test]

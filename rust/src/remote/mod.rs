@@ -1,0 +1,226 @@
+//! The remote expert tier: multi-node expert sharding with peer fetch
+//! over a modeled network link.
+//!
+//! One HOBBIT process no longer has to hold every expert in host RAM.
+//! Peers run [`shard::ShardServer`] — a threaded line-protocol front-end
+//! in the `server.rs` style whose verb is `EXPERT <layer> <expert>
+//! <precision> [offset]`, streaming the raw record bytes back in chunks —
+//! and each peer owns a disjoint [`ShardSpec`] slice of the flat expert
+//! index space. The inference process plugs a [`tiered::TieredStore`]
+//! into the loader where `ExpertStore` used to sit, extending the memory
+//! hierarchy to the full
+//!
+//! ```text
+//!   HBM (expert cache)  <-  DRAM (local shard + staged records)
+//!                       <-  peer (EXPERT protocol over the network link)
+//!                       <-  disk (experts_*.bin byte ranges)
+//! ```
+//!
+//! Network bytes are charged against a *second* `memory::LinkArbiter`
+//! link class (its own `--net-gbps` budget, the same 4:1
+//! on-demand-vs-prefetch weighting), so network and PCIe bandwidth
+//! arbitrate independently: a peer fetch saturating the NIC model never
+//! steals modeled PCIe time from a local DRAM->HBM copy, and vice versa.
+//!
+//! Robustness is first-class: every client-side read goes through
+//! [`transport`]'s connect/read timeouts and bounded retry with backoff,
+//! and a peer that stays dead is circuit-broken for a cooldown while its
+//! records are served from the local disk tier (`peer_failovers` counts
+//! the degradation). A dead peer slows the system; it never wedges it.
+
+pub mod shard;
+pub mod tiered;
+pub mod transport;
+
+pub use shard::ShardServer;
+pub use tiered::{FetchTier, RecordRef, RemoteCounters, TieredStore};
+pub use transport::RetryPolicy;
+
+use std::fmt;
+
+/// A set of flat expert indices (`layer * n_experts + expert`) owned by
+/// one node. Parsed from `all`, `none`, or comma-separated inclusive
+/// ranges like `0-5,8,10-11`.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct ShardSpec {
+    /// inclusive (start, end) ranges over flat indices; ignored when `all`
+    ranges: Vec<(u32, u32)>,
+    all: bool,
+}
+
+impl ShardSpec {
+    /// The whole expert set (single-node default).
+    pub fn all() -> Self {
+        Self { ranges: Vec::new(), all: true }
+    }
+
+    /// No experts (a pure client node; peers must cover everything).
+    pub fn none() -> Self {
+        Self::default()
+    }
+
+    pub fn is_all(&self) -> bool {
+        self.all
+    }
+
+    pub fn is_none(&self) -> bool {
+        !self.all && self.ranges.is_empty()
+    }
+
+    pub fn parse(s: &str) -> Result<Self, String> {
+        let s = s.trim();
+        match s {
+            "all" => return Ok(Self::all()),
+            "" | "none" => return Ok(Self::none()),
+            _ => {}
+        }
+        let mut ranges = Vec::new();
+        for seg in s.split(',') {
+            let seg = seg.trim();
+            if seg.is_empty() {
+                return Err(format!("empty segment in shard spec '{s}'"));
+            }
+            let (a, b) = match seg.split_once('-') {
+                Some((a, b)) => (a, b),
+                None => (seg, seg),
+            };
+            let lo: u32 = a.trim().parse().map_err(|_| format!("bad shard index '{a}'"))?;
+            let hi: u32 = b.trim().parse().map_err(|_| format!("bad shard index '{b}'"))?;
+            if lo > hi {
+                return Err(format!("inverted shard range '{seg}'"));
+            }
+            ranges.push((lo, hi));
+        }
+        ranges.sort_unstable();
+        Ok(Self { ranges, all: false })
+    }
+
+    /// Does this shard hold the flat expert index?
+    pub fn contains(&self, flat: usize) -> bool {
+        if self.all {
+            return true;
+        }
+        let flat = flat as u32;
+        self.ranges.iter().any(|&(lo, hi)| lo <= flat && flat <= hi)
+    }
+
+    /// Add this shard's coverage counts into `cover` (one slot per flat
+    /// index); indices beyond `cover.len()` are an error (shard names an
+    /// expert the model does not have).
+    fn accumulate(&self, cover: &mut [u32]) -> Result<(), String> {
+        if self.all {
+            for c in cover.iter_mut() {
+                *c += 1;
+            }
+            return Ok(());
+        }
+        for &(lo, hi) in &self.ranges {
+            if hi as usize >= cover.len() {
+                return Err(format!(
+                    "shard range {lo}-{hi} exceeds expert count {}",
+                    cover.len()
+                ));
+            }
+            for c in &mut cover[lo as usize..=hi as usize] {
+                *c += 1;
+            }
+        }
+        Ok(())
+    }
+
+    /// Validate that `local` plus `peers` exactly partition the
+    /// `total`-sized flat expert space: every expert owned once, none
+    /// owned twice, none unowned. This is the startup gate — a bad
+    /// assignment is a config error, not a runtime miss.
+    pub fn validate_partition(
+        local: &ShardSpec,
+        peers: &[&ShardSpec],
+        total: usize,
+    ) -> Result<(), String> {
+        let mut cover = vec![0u32; total];
+        local.accumulate(&mut cover)?;
+        for p in peers {
+            p.accumulate(&mut cover)?;
+        }
+        for (i, &c) in cover.iter().enumerate() {
+            if c == 0 {
+                return Err(format!(
+                    "expert shard assignment incomplete: flat expert {i} owned by no node"
+                ));
+            }
+            if c > 1 {
+                return Err(format!(
+                    "expert shard assignment overlaps: flat expert {i} owned by {c} nodes"
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Display for ShardSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.all {
+            return write!(f, "all");
+        }
+        if self.ranges.is_empty() {
+            return write!(f, "none");
+        }
+        for (i, &(lo, hi)) in self.ranges.iter().enumerate() {
+            if i > 0 {
+                write!(f, ",")?;
+            }
+            if lo == hi {
+                write!(f, "{lo}")?;
+            } else {
+                write!(f, "{lo}-{hi}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shard_spec_parse_roundtrip() {
+        assert!(ShardSpec::parse("all").unwrap().is_all());
+        assert!(ShardSpec::parse("none").unwrap().is_none());
+        assert!(ShardSpec::parse("").unwrap().is_none());
+        let s = ShardSpec::parse("0-5,8,10-11").unwrap();
+        assert!(s.contains(0) && s.contains(5) && s.contains(8) && s.contains(10));
+        assert!(!s.contains(6) && !s.contains(9) && !s.contains(12));
+        assert_eq!(s.to_string(), "0-5,8,10-11");
+        assert_eq!(ShardSpec::all().to_string(), "all");
+        assert_eq!(ShardSpec::none().to_string(), "none");
+    }
+
+    #[test]
+    fn shard_spec_rejects_garbage() {
+        assert!(ShardSpec::parse("5-2").is_err(), "inverted range");
+        assert!(ShardSpec::parse("a-b").is_err());
+        assert!(ShardSpec::parse("1,,2").is_err());
+    }
+
+    #[test]
+    fn partition_validation() {
+        let a = ShardSpec::parse("0-5").unwrap();
+        let b = ShardSpec::parse("6-11").unwrap();
+        ShardSpec::validate_partition(&a, &[&b], 12).unwrap();
+        ShardSpec::validate_partition(&ShardSpec::none(), &[&a, &b], 12).unwrap();
+        ShardSpec::validate_partition(&ShardSpec::all(), &[], 12).unwrap();
+        // gap: expert 11 unowned
+        let short = ShardSpec::parse("6-10").unwrap();
+        let err = ShardSpec::validate_partition(&a, &[&short], 12).unwrap_err();
+        assert!(err.contains("incomplete"), "{err}");
+        // overlap: expert 5 owned twice
+        let over = ShardSpec::parse("5-11").unwrap();
+        let err = ShardSpec::validate_partition(&a, &[&over], 12).unwrap_err();
+        assert!(err.contains("overlap"), "{err}");
+        // out of range
+        let big = ShardSpec::parse("0-99").unwrap();
+        assert!(ShardSpec::validate_partition(&big, &[], 12).is_err());
+    }
+}

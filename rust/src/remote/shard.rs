@@ -1,0 +1,379 @@
+//! The expert shard server and its client: the `EXPERT` verb.
+//!
+//! A shard server is the `server.rs` front-end idiom applied to weight
+//! distribution: a threaded accept loop, one reader thread per
+//! connection, a line-oriented request grammar. The verb is
+//!
+//! ```text
+//!   EXPERT <layer> <expert> <precision> [offset]
+//! ```
+//!
+//! answered with `OK <nbytes>\n` followed by exactly `nbytes` raw record
+//! bytes (the record suffix starting at `offset`, default 0), written in
+//! `chunk_bytes`-sized pieces so a slow reader never buffers a whole
+//! record in the kernel; errors come back as a single `ERR <reason>\n`
+//! line. `PING` answers `OK 0\n` (liveness probe). A server only answers
+//! for experts inside its [`ShardSpec`] — asking the wrong peer is a
+//! protocol error, not a silent wrong answer.
+//!
+//! The client side, [`fetch_record`], reads the reply through the
+//! [`transport`] timeouts with bounded retry, reporting each chunk to a
+//! caller-supplied callback so the tiered store can charge the modeled
+//! network link without this module knowing about link arbitration.
+
+use std::io::{self, BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::model::ExpertStore;
+use crate::remote::transport::{self, RetryPolicy};
+use crate::remote::ShardSpec;
+use crate::{ExpertKey, Precision};
+
+/// Streaming granularity of record responses (server write side and
+/// client read side) unless configured otherwise.
+pub const DEFAULT_CHUNK_BYTES: usize = 64 * 1024;
+
+/// A peer-facing expert shard server over one local [`ExpertStore`].
+pub struct ShardServer {
+    listener: TcpListener,
+    store: Arc<ExpertStore>,
+    shard: ShardSpec,
+    chunk_bytes: usize,
+}
+
+impl ShardServer {
+    pub fn bind(
+        addr: &str,
+        store: Arc<ExpertStore>,
+        shard: ShardSpec,
+        chunk_bytes: usize,
+    ) -> Result<Self> {
+        let listener =
+            TcpListener::bind(addr).with_context(|| format!("binding shard server {addr}"))?;
+        Ok(Self { listener, store, shard, chunk_bytes: chunk_bytes.max(1) })
+    }
+
+    pub fn local_addr(&self) -> SocketAddr {
+        self.listener.local_addr().expect("listener addr")
+    }
+
+    /// Threaded accept loop: one connection, one reader thread, requests
+    /// served until the client disconnects. Runs forever.
+    pub fn serve(&self) -> Result<()> {
+        for conn in self.listener.incoming() {
+            let stream = match conn {
+                Ok(s) => s,
+                Err(_) => continue,
+            };
+            let store = self.store.clone();
+            let shard = self.shard.clone();
+            let chunk = self.chunk_bytes;
+            std::thread::spawn(move || {
+                let _ = handle_conn(stream, &store, &shard, chunk);
+            });
+        }
+        Ok(())
+    }
+
+    /// Spawn the accept loop on a background thread (in-process tests and
+    /// benches). The listener lives as long as the detached thread.
+    pub fn serve_background(self) -> SocketAddr {
+        let addr = self.local_addr();
+        std::thread::spawn(move || {
+            let _ = self.serve();
+        });
+        addr
+    }
+}
+
+fn handle_conn(
+    stream: TcpStream,
+    store: &ExpertStore,
+    shard: &ShardSpec,
+    chunk_bytes: usize,
+) -> io::Result<()> {
+    // an idle or wedged client may not hold a server thread forever
+    stream.set_read_timeout(Some(Duration::from_secs(30)))?;
+    stream.set_write_timeout(Some(Duration::from_secs(30)))?;
+    let _ = stream.set_nodelay(true);
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = stream;
+    let mut line = String::new();
+    loop {
+        line.clear();
+        if reader.read_line(&mut line)? == 0 {
+            return Ok(()); // client closed
+        }
+        let req = line.trim();
+        if req.is_empty() {
+            continue;
+        }
+        match parse_expert_request(req, store, shard) {
+            Ok(Some(body)) => {
+                writer.write_all(format!("OK {}\n", body.len()).as_bytes())?;
+                // stream the record in chunks, the unit a slow peer
+                // back-pressures at
+                for piece in body.chunks(chunk_bytes) {
+                    writer.write_all(piece)?;
+                }
+                writer.flush()?;
+            }
+            Ok(None) => {
+                writer.write_all(b"OK 0\n")?; // PING
+                writer.flush()?;
+            }
+            Err(msg) => {
+                writer.write_all(format!("ERR {msg}\n").as_bytes())?;
+                writer.flush()?;
+            }
+        }
+    }
+}
+
+/// Parse + execute one request line against the local store. `Ok(None)`
+/// is a PING (no body); `Ok(Some(bytes))` is an EXPERT hit.
+fn parse_expert_request<'a>(
+    req: &str,
+    store: &'a ExpertStore,
+    shard: &ShardSpec,
+) -> std::result::Result<Option<&'a [u8]>, String> {
+    let mut parts = req.split_whitespace();
+    match parts.next() {
+        Some("PING") => Ok(None),
+        Some("EXPERT") => {
+            let layer: u32 = parts
+                .next()
+                .and_then(|s| s.parse().ok())
+                .ok_or("EXPERT needs <layer> <expert> <precision> [offset]")?;
+            let expert: u32 = parts
+                .next()
+                .and_then(|s| s.parse().ok())
+                .ok_or("EXPERT needs <layer> <expert> <precision> [offset]")?;
+            let prec = parts
+                .next()
+                .and_then(Precision::from_name)
+                .ok_or("bad precision (f32|q8|q4|q2)")?;
+            let offset: usize = match parts.next() {
+                Some(s) => s.parse().map_err(|_| "bad offset")?,
+                None => 0,
+            };
+            if parts.next().is_some() {
+                return Err("trailing arguments".into());
+            }
+            let cfg = store.config();
+            if layer >= cfg.n_layers || expert >= cfg.n_experts {
+                return Err(format!("expert ({layer},{expert}) out of model range"));
+            }
+            let key = ExpertKey::new(layer, expert);
+            if !shard.contains(key.index(cfg.n_experts)) {
+                return Err(format!("expert ({layer},{expert}) not in this shard"));
+            }
+            let rec = store.record(key, prec);
+            if offset > rec.len() {
+                return Err(format!("offset {offset} beyond record ({} bytes)", rec.len()));
+            }
+            Ok(Some(&rec[offset..]))
+        }
+        _ => Err("unknown command (EXPERT|PING)".into()),
+    }
+}
+
+/// A fetched record plus how many transport retries it cost.
+pub struct FetchedRecord {
+    pub bytes: Vec<u8>,
+    pub retries: u32,
+}
+
+/// Fetch one expert record (suffix from `offset`) from a peer.
+///
+/// Transient I/O errors are retried within `policy`'s bounds; a protocol
+/// `ERR` reply (wrong shard, bad args) is not transient and fails
+/// immediately. Every chunk of the body read is reported to `on_chunk`
+/// with the wall time the read took, so the caller can charge a modeled
+/// network link at chunk granularity.
+pub fn fetch_record(
+    addr: &str,
+    key: ExpertKey,
+    prec: Precision,
+    offset: usize,
+    expect_len: usize,
+    chunk_bytes: usize,
+    policy: &RetryPolicy,
+    on_chunk: &mut dyn FnMut(usize, Duration),
+) -> io::Result<FetchedRecord> {
+    let attempts = policy.attempts.max(1);
+    let mut retries = 0u32;
+    let mut delay = policy.backoff;
+    loop {
+        match fetch_once(addr, key, prec, offset, expect_len, chunk_bytes, policy, on_chunk) {
+            Ok(bytes) => return Ok(FetchedRecord { bytes, retries }),
+            // ERR replies are deterministic; retrying cannot help
+            Err(e) if e.kind() == io::ErrorKind::InvalidData => return Err(e),
+            Err(e) => {
+                if retries + 1 >= attempts {
+                    return Err(e);
+                }
+                std::thread::sleep(delay);
+                delay = delay.saturating_mul(2);
+                retries += 1;
+            }
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn fetch_once(
+    addr: &str,
+    key: ExpertKey,
+    prec: Precision,
+    offset: usize,
+    expect_len: usize,
+    chunk_bytes: usize,
+    policy: &RetryPolicy,
+    on_chunk: &mut dyn FnMut(usize, Duration),
+) -> io::Result<Vec<u8>> {
+    let mut stream = transport::connect(addr, policy)?;
+    stream.write_all(
+        format!("EXPERT {} {} {} {}\n", key.layer, key.expert, prec.name(), offset).as_bytes(),
+    )?;
+    let mut reader = BufReader::new(&mut stream);
+    let mut header = String::new();
+    reader.read_line(&mut header)?;
+    let header = header.trim();
+    let n: usize = match header.strip_prefix("OK ") {
+        Some(n) => n
+            .parse()
+            .map_err(|_| io::Error::new(io::ErrorKind::InvalidData, "bad OK header"))?,
+        None => {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!("peer {addr}: {header}"),
+            ))
+        }
+    };
+    if n != expect_len {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("peer {addr}: record length {n}, expected {expect_len}"),
+        ));
+    }
+    let mut bytes = vec![0u8; n];
+    let chunk = chunk_bytes.max(1);
+    let mut read = 0usize;
+    while read < n {
+        let m = chunk.min(n - read);
+        let t0 = Instant::now();
+        reader.read_exact(&mut bytes[read..read + m])?;
+        on_chunk(m, t0.elapsed());
+        read += m;
+    }
+    Ok(bytes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::synth::{tiny_store_config, write_synth_expert_store};
+
+    fn test_store(name: &str) -> Arc<ExpertStore> {
+        let cfg = tiny_store_config(name);
+        let dir = std::env::temp_dir().join(format!("hobbit_shard_unit_{name}"));
+        write_synth_expert_store(&dir, &cfg).unwrap();
+        Arc::new(ExpertStore::load(&dir, &cfg).unwrap())
+    }
+
+    #[test]
+    fn expert_verb_round_trips_bytes_and_offsets() {
+        let store = test_store("roundtrip");
+        let key = ExpertKey::new(1, 2);
+        let want = store.record(key, Precision::Q8).to_vec();
+        let server =
+            ShardServer::bind("127.0.0.1:0", store.clone(), ShardSpec::all(), 128).unwrap();
+        let addr = server.serve_background().to_string();
+        let policy = RetryPolicy::fast();
+        let mut chunks = 0usize;
+        let got = fetch_record(
+            &addr,
+            key,
+            Precision::Q8,
+            0,
+            want.len(),
+            128,
+            &policy,
+            &mut |_, _| chunks += 1,
+        )
+        .unwrap();
+        assert_eq!(got.bytes, want, "remote record must be byte-identical");
+        assert_eq!(got.retries, 0);
+        assert!(chunks >= want.len() / 128, "body must stream in chunks");
+        // offset fetch returns the suffix
+        let got = fetch_record(
+            &addr,
+            key,
+            Precision::Q8,
+            100,
+            want.len() - 100,
+            128,
+            &policy,
+            &mut |_, _| {},
+        )
+        .unwrap();
+        assert_eq!(got.bytes, want[100..]);
+    }
+
+    #[test]
+    fn out_of_shard_and_bad_requests_err_without_retry() {
+        let store = test_store("shardcheck");
+        let shard = ShardSpec::parse("0-3").unwrap(); // layer 0 only (4 experts/layer)
+        let server = ShardServer::bind("127.0.0.1:0", store.clone(), shard, 4096).unwrap();
+        let addr = server.serve_background().to_string();
+        let policy = RetryPolicy::fast();
+        let n = store.record_bytes(Precision::Q4);
+        // in shard: fine
+        fetch_record(
+            &addr,
+            ExpertKey::new(0, 1),
+            Precision::Q4,
+            0,
+            n,
+            4096,
+            &policy,
+            &mut |_, _| {},
+        )
+        .unwrap();
+        // out of shard: immediate protocol error
+        let err = fetch_record(
+            &addr,
+            ExpertKey::new(3, 0),
+            Precision::Q4,
+            0,
+            n,
+            4096,
+            &policy,
+            &mut |_, _| {},
+        )
+        .unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+        assert!(err.to_string().contains("not in this shard"), "{err}");
+        // out of model range
+        let err = fetch_record(
+            &addr,
+            ExpertKey::new(9, 0),
+            Precision::Q4,
+            0,
+            n,
+            4096,
+            &policy,
+            &mut |_, _| {},
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("out of model range"), "{err}");
+        // PING liveness answers on the same protocol
+        let reply = transport::request_line(&addr, "PING", &policy).unwrap();
+        assert_eq!(reply, "OK 0");
+    }
+}

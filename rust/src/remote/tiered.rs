@@ -1,0 +1,617 @@
+//! The tiered expert store: DRAM <- peer <- disk behind one fetch call.
+//!
+//! [`TieredStore`] wraps the process-local [`ExpertStore`] (the DRAM
+//! tier, masked to the node's [`ShardSpec`]) with two lower tiers:
+//!
+//! * **peer** — the shard owner, reached through the `EXPERT` protocol
+//!   ([`crate::remote::shard`]) with every body chunk charged against a
+//!   dedicated network [`ThrottledCopier`] (the second link class: its
+//!   `LinkArbiter` splits `--net-gbps` among concurrent remote fetches
+//!   with the same 4:1 on-demand-vs-prefetch weighting as PCIe, but the
+//!   two links never share a budget);
+//! * **disk** — byte-range reads from the local `experts_*.bin` files.
+//!   Disk always holds everything, which is what makes peer death a
+//!   slowdown instead of a wedge: a peer that fails its bounded retries
+//!   is circuit-broken for a cooldown and its records come from disk,
+//!   counted in `peer_failovers`.
+//!
+//! Records fetched from a peer land in a bounded **staged** side-cache —
+//! the peer -> DRAM leg of cross-tier prefetching. The predictor stages
+//! ahead of demand through [`TieredStore::stage_async`] (a dedicated
+//! stager thread, network charged at prefetch weight), and chunk-level
+//! preemption resumes re-read the staged copy instead of re-downloading.
+//!
+//! The single-node configuration ([`TieredStore::local_only`]) keeps the
+//! exact pre-remote behavior: every fetch is a borrow from the local
+//! store, no staging, no network, zero overhead.
+
+use std::collections::{HashMap, HashSet, VecDeque};
+use std::io::{Read, Seek, SeekFrom};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::config::{ModelConfig, RemoteConfig};
+use crate::memory::{LinkModel, ThrottledCopier, PREFETCH_WEIGHT};
+use crate::metrics::LoaderStats;
+use crate::model::ExpertStore;
+use crate::remote::shard;
+use crate::remote::transport::RetryPolicy;
+use crate::remote::ShardSpec;
+use crate::{ExpertKey, Precision};
+
+/// Which tier would (or did) serve a record.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FetchTier {
+    /// process-local store (inside the local shard)
+    Dram,
+    /// the staged side-cache (already pulled from a peer)
+    Staged,
+    /// a live peer owning the shard
+    Peer,
+    /// local disk byte-range (peer down or no owner)
+    Disk,
+}
+
+/// Record bytes from whichever tier served them: a borrow from the local
+/// store, or a shared copy (staged / peer / disk).
+pub enum RecordRef<'a> {
+    Local(&'a [u8]),
+    Shared(Arc<Vec<u8>>),
+}
+
+impl RecordRef<'_> {
+    pub fn as_slice(&self) -> &[u8] {
+        match self {
+            RecordRef::Local(b) => b,
+            RecordRef::Shared(b) => b,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.as_slice().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.as_slice().is_empty()
+    }
+
+    pub fn to_vec(&self) -> Vec<u8> {
+        self.as_slice().to_vec()
+    }
+}
+
+/// Remote-tier counters (snapshot of the live atomics).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct RemoteCounters {
+    /// records pulled over the network (demand + staging)
+    pub remote_fetches: u64,
+    /// bytes pulled over the network
+    pub remote_bytes: u64,
+    /// transport retries spent on successful remote fetches
+    pub remote_retries: u64,
+    /// demand fetches a peer should have served but disk did (degraded tier)
+    pub peer_failovers: u64,
+    /// fetches answered by the staged side-cache (cross-tier prefetch hits)
+    pub staged_hits: u64,
+    /// records read from the local disk tier
+    pub disk_fetches: u64,
+}
+
+#[derive(Default)]
+struct RemoteStats {
+    remote_fetches: AtomicU64,
+    remote_bytes: AtomicU64,
+    remote_retries: AtomicU64,
+    peer_failovers: AtomicU64,
+    staged_hits: AtomicU64,
+    disk_fetches: AtomicU64,
+}
+
+impl RemoteStats {
+    fn snapshot(&self) -> RemoteCounters {
+        RemoteCounters {
+            remote_fetches: self.remote_fetches.load(Ordering::Relaxed),
+            remote_bytes: self.remote_bytes.load(Ordering::Relaxed),
+            remote_retries: self.remote_retries.load(Ordering::Relaxed),
+            peer_failovers: self.peer_failovers.load(Ordering::Relaxed),
+            staged_hits: self.staged_hits.load(Ordering::Relaxed),
+            disk_fetches: self.disk_fetches.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// One configured peer with its circuit-breaker state.
+struct Peer {
+    addr: String,
+    shard: ShardSpec,
+    /// circuit breaker: while set and in the future, skip straight to disk
+    down_until: Mutex<Option<Instant>>,
+}
+
+impl Peer {
+    fn is_up(&self) -> bool {
+        match *self.down_until.lock().unwrap() {
+            Some(t) => Instant::now() >= t,
+            None => true,
+        }
+    }
+
+    fn mark_down(&self, cooldown: Duration) {
+        *self.down_until.lock().unwrap() = Some(Instant::now() + cooldown);
+    }
+
+    fn mark_up(&self) {
+        *self.down_until.lock().unwrap() = None;
+    }
+}
+
+/// Local disk tier: byte-range reads from the weight files the local
+/// store was loaded from. Always covers every expert — the failover
+/// floor of the hierarchy.
+struct DiskTier {
+    dir: PathBuf,
+    cfg: ModelConfig,
+}
+
+impl DiskTier {
+    fn read(&self, key: ExpertKey, p: Precision) -> std::io::Result<Vec<u8>> {
+        let rb = self.cfg.bytes_for(p);
+        let mut f = std::fs::File::open(self.dir.join(format!("experts_{}.bin", p.name())))?;
+        f.seek(SeekFrom::Start((key.index(self.cfg.n_experts) * rb) as u64))?;
+        let mut buf = vec![0u8; rb];
+        f.read_exact(&mut buf)?;
+        Ok(buf)
+    }
+}
+
+/// Bounded FIFO side-cache of records pulled from lower tiers.
+struct StagedCache {
+    map: HashMap<(ExpertKey, Precision), Arc<Vec<u8>>>,
+    order: VecDeque<(ExpertKey, Precision)>,
+    cap: usize,
+}
+
+impl StagedCache {
+    fn new(cap: usize) -> Self {
+        Self { map: HashMap::new(), order: VecDeque::new(), cap: cap.max(1) }
+    }
+
+    fn get(&self, k: &(ExpertKey, Precision)) -> Option<Arc<Vec<u8>>> {
+        self.map.get(k).cloned()
+    }
+
+    fn insert(&mut self, k: (ExpertKey, Precision), v: Arc<Vec<u8>>) {
+        if self.map.insert(k, v).is_none() {
+            self.order.push_back(k);
+        }
+        while self.map.len() > self.cap {
+            if let Some(old) = self.order.pop_front() {
+                self.map.remove(&old);
+            } else {
+                break;
+            }
+        }
+    }
+}
+
+/// Everything the fetch path and the stager thread share.
+struct Core {
+    local: Arc<ExpertStore>,
+    local_shard: ShardSpec,
+    peers: Vec<Peer>,
+    disk: Option<DiskTier>,
+    net: Option<Arc<ThrottledCopier>>,
+    staged: Mutex<StagedCache>,
+    /// stage_async dedup: keys queued but not yet staged
+    queued: Mutex<HashSet<(ExpertKey, Precision)>>,
+    retry: RetryPolicy,
+    cooldown: Duration,
+    chunk_bytes: usize,
+    stats: RemoteStats,
+}
+
+impl Core {
+    fn flat(&self, key: ExpertKey) -> usize {
+        key.index(self.local.config().n_experts)
+    }
+
+    fn peer_for(&self, key: ExpertKey) -> Option<&Peer> {
+        let flat = self.flat(key);
+        self.peers.iter().find(|p| p.shard.contains(flat))
+    }
+
+    fn tier_of(&self, key: ExpertKey, p: Precision) -> FetchTier {
+        if self.peers.is_empty() || self.local_shard.contains(self.flat(key)) {
+            return FetchTier::Dram;
+        }
+        if self.staged.lock().unwrap().get(&(key, p)).is_some() {
+            return FetchTier::Staged;
+        }
+        match self.peer_for(key) {
+            Some(peer) if peer.is_up() => FetchTier::Peer,
+            _ => FetchTier::Disk,
+        }
+    }
+
+    /// Pull one record over the network, charging the network link class
+    /// at `weight` per chunk. Returns the bytes and the retries spent.
+    fn fetch_from_peer(
+        &self,
+        peer: &Peer,
+        key: ExpertKey,
+        p: Precision,
+        weight: f64,
+    ) -> std::io::Result<(Vec<u8>, u32)> {
+        let expect = self.local.record_bytes(p);
+        let rec = match &self.net {
+            Some(net) => {
+                let grant = net.lane(weight);
+                net.charge_latency();
+                shard::fetch_record(
+                    &peer.addr,
+                    key,
+                    p,
+                    0,
+                    expect,
+                    self.chunk_bytes,
+                    &self.retry,
+                    &mut |n, spent| net.charge_chunk(&grant, n, spent),
+                )?
+            }
+            None => shard::fetch_record(
+                &peer.addr,
+                key,
+                p,
+                0,
+                expect,
+                self.chunk_bytes,
+                &self.retry,
+                &mut |_, _| {},
+            )?,
+        };
+        if let Some(net) = &self.net {
+            net.note_transfer();
+        }
+        Ok((rec.bytes, rec.retries))
+    }
+
+    /// The demand fetch path: DRAM -> staged -> peer -> disk -> (last
+    /// resort) the local buffer. Infallible by construction — a dead
+    /// peer degrades the tier, it never fails the fetch.
+    fn fetch(&self, key: ExpertKey, p: Precision, weight: f64) -> RecordRef<'_> {
+        if self.peers.is_empty() || self.local_shard.contains(self.flat(key)) {
+            return RecordRef::Local(self.local.record(key, p));
+        }
+        if let Some(b) = self.staged.lock().unwrap().get(&(key, p)) {
+            self.stats.staged_hits.fetch_add(1, Ordering::Relaxed);
+            return RecordRef::Shared(b);
+        }
+        if let Some(peer) = self.peer_for(key) {
+            if peer.is_up() {
+                match self.fetch_from_peer(peer, key, p, weight) {
+                    Ok((bytes, retries)) => {
+                        peer.mark_up();
+                        self.stats.remote_fetches.fetch_add(1, Ordering::Relaxed);
+                        self.stats.remote_bytes.fetch_add(bytes.len() as u64, Ordering::Relaxed);
+                        self.stats.remote_retries.fetch_add(retries as u64, Ordering::Relaxed);
+                        let arc = Arc::new(bytes);
+                        self.staged.lock().unwrap().insert((key, p), arc.clone());
+                        return RecordRef::Shared(arc);
+                    }
+                    Err(_) => {
+                        // retries exhausted: break the circuit so the next
+                        // fetches skip the connect/read budget entirely
+                        peer.mark_down(self.cooldown);
+                        self.stats.peer_failovers.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            } else {
+                // peer in cooldown: every fetch it should have served is a
+                // degraded-tier fetch
+                self.stats.peer_failovers.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        if let Some(disk) = &self.disk {
+            if let Ok(bytes) = disk.read(key, p) {
+                self.stats.disk_fetches.fetch_add(1, Ordering::Relaxed);
+                let arc = Arc::new(bytes);
+                self.staged.lock().unwrap().insert((key, p), arc.clone());
+                return RecordRef::Shared(arc);
+            }
+        }
+        // the local store physically holds every record (the shard mask is
+        // a modeling decision), so correctness survives even a vanished
+        // weights directory
+        RecordRef::Local(self.local.record(key, p))
+    }
+}
+
+/// The loader-facing tiered store. See the module docs for the tier
+/// ordering and failure semantics.
+pub struct TieredStore {
+    core: Arc<Core>,
+    /// stager thread input; None when no peers are configured
+    stager: Option<mpsc::Sender<(ExpertKey, Precision)>>,
+}
+
+impl TieredStore {
+    /// Single-node wrapper: every fetch is a borrow from `store`, no
+    /// network, no staging — the exact pre-remote behavior.
+    pub fn local_only(store: Arc<ExpertStore>) -> Self {
+        let core = Core {
+            local: store,
+            local_shard: ShardSpec::all(),
+            peers: Vec::new(),
+            disk: None,
+            net: None,
+            staged: Mutex::new(StagedCache::new(1)),
+            queued: Mutex::new(HashSet::new()),
+            retry: RetryPolicy::default(),
+            cooldown: Duration::from_secs(2),
+            chunk_bytes: shard::DEFAULT_CHUNK_BYTES,
+            stats: RemoteStats::default(),
+        };
+        Self { core: Arc::new(core), stager: None }
+    }
+
+    /// Multi-node store: validates the shard partition, builds the
+    /// network link class from the config, and spawns the stager thread.
+    /// `weights_dir` backs the disk failover tier.
+    pub fn from_config(
+        store: Arc<ExpertStore>,
+        rc: &RemoteConfig,
+        weights_dir: &Path,
+    ) -> Result<Self> {
+        rc.validate(store.config().total_experts()).map_err(anyhow::Error::msg)?;
+        if rc.peers.is_empty() {
+            return Ok(Self::local_only(store));
+        }
+        let cfg = store.config().clone();
+        let net = Arc::new(ThrottledCopier::new(LinkModel {
+            bytes_per_s: rc.net_bw,
+            latency_s: rc.net_latency,
+        }));
+        let core = Arc::new(Core {
+            local: store,
+            local_shard: rc.local_shard.clone(),
+            peers: rc
+                .peers
+                .iter()
+                .map(|p| Peer {
+                    addr: p.addr.clone(),
+                    shard: p.shard.clone(),
+                    down_until: Mutex::new(None),
+                })
+                .collect(),
+            disk: Some(DiskTier { dir: weights_dir.to_path_buf(), cfg }),
+            net: Some(net),
+            staged: Mutex::new(StagedCache::new(rc.staged_capacity)),
+            queued: Mutex::new(HashSet::new()),
+            retry: rc.retry,
+            cooldown: rc.cooldown,
+            chunk_bytes: rc.chunk_bytes.max(1),
+            stats: RemoteStats::default(),
+        });
+        let (tx, rx) = mpsc::channel::<(ExpertKey, Precision)>();
+        let stager_core = core.clone();
+        std::thread::Builder::new()
+            .name("hobbit-stager".into())
+            .spawn(move || stager_loop(stager_core, rx))
+            .expect("spawn stager");
+        Ok(Self { core, stager: Some(tx) })
+    }
+
+    pub fn config(&self) -> &ModelConfig {
+        self.core.local.config()
+    }
+
+    pub fn record_bytes(&self, p: Precision) -> usize {
+        self.core.local.record_bytes(p)
+    }
+
+    /// True when any expert can live on a peer (multi-node mode).
+    pub fn has_remote(&self) -> bool {
+        !self.core.peers.is_empty()
+    }
+
+    /// The cheapest tier currently holding `(key, p)`.
+    pub fn tier_of(&self, key: ExpertKey, p: Precision) -> FetchTier {
+        self.core.tier_of(key, p)
+    }
+
+    /// Fetch the record bytes from the cheapest tier holding them.
+    /// `net_weight` prices any network leg on the network link class
+    /// (`memory::ONDEMAND_WEIGHT` / `memory::PREFETCH_WEIGHT`).
+    pub fn fetch(&self, key: ExpertKey, p: Precision, net_weight: f64) -> RecordRef<'_> {
+        self.core.fetch(key, p, net_weight)
+    }
+
+    /// Owned-bytes variant for callers that outlive the borrow (the
+    /// engine's cache-bypass reads).
+    pub fn fetch_owned(&self, key: ExpertKey, p: Precision, net_weight: f64) -> Vec<u8> {
+        self.core.fetch(key, p, net_weight).to_vec()
+    }
+
+    /// Queue a peer -> DRAM staging of `(key, p)` ahead of demand (the
+    /// predictor's cross-tier prefetch). No-op unless the record's
+    /// cheapest tier is a live peer; dedups in-flight requests.
+    pub fn stage_async(&self, key: ExpertKey, p: Precision) {
+        let Some(tx) = &self.stager else { return };
+        if self.core.tier_of(key, p) != FetchTier::Peer {
+            return;
+        }
+        if !self.core.queued.lock().unwrap().insert((key, p)) {
+            return; // already queued
+        }
+        let _ = tx.send((key, p));
+    }
+
+    /// Is `(key, p)` already in the staged side-cache?
+    pub fn is_staged(&self, key: ExpertKey, p: Precision) -> bool {
+        self.core.staged.lock().unwrap().get(&(key, p)).is_some()
+    }
+
+    pub fn counters(&self) -> RemoteCounters {
+        self.core.stats.snapshot()
+    }
+
+    /// Fold the remote counters into a [`LoaderStats`] snapshot (the
+    /// residency facade's stats merge point).
+    pub fn merge_into(&self, s: &mut LoaderStats) {
+        let c = self.counters();
+        s.remote_fetches = c.remote_fetches;
+        s.remote_bytes = c.remote_bytes;
+        s.remote_retries = c.remote_retries;
+        s.peer_failovers = c.peer_failovers;
+        s.remote_staged_hits = c.staged_hits;
+        s.disk_fetches = c.disk_fetches;
+    }
+
+    /// The network link class, when one exists (tests and benches probe
+    /// its byte/lane accounting).
+    pub fn net_copier(&self) -> Option<&Arc<ThrottledCopier>> {
+        self.core.net.as_ref()
+    }
+}
+
+/// The stager thread: pulls queued (key, precision) pairs and fetches
+/// them from their peer at prefetch weight into the staged side-cache.
+/// Exits when the store (the sender) drops. Staging failures are silent
+/// besides the circuit breaker — the demand path will fail over cleanly.
+fn stager_loop(core: Arc<Core>, rx: mpsc::Receiver<(ExpertKey, Precision)>) {
+    while let Ok((key, p)) = rx.recv() {
+        core.queued.lock().unwrap().remove(&(key, p));
+        if core.tier_of(key, p) != FetchTier::Peer {
+            continue; // raced with a demand fetch, or peer went down
+        }
+        let Some(peer) = core.peer_for(key) else { continue };
+        match core.fetch_from_peer(peer, key, p, PREFETCH_WEIGHT) {
+            Ok((bytes, retries)) => {
+                core.stats.remote_fetches.fetch_add(1, Ordering::Relaxed);
+                core.stats.remote_bytes.fetch_add(bytes.len() as u64, Ordering::Relaxed);
+                core.stats.remote_retries.fetch_add(retries as u64, Ordering::Relaxed);
+                core.staged.lock().unwrap().insert((key, p), Arc::new(bytes));
+            }
+            Err(_) => peer.mark_down(core.cooldown),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::synth::{tiny_store_config, write_synth_expert_store};
+    use crate::remote::ShardServer;
+
+    fn synth_dir(name: &str) -> (ModelConfig, PathBuf) {
+        let cfg = tiny_store_config(name);
+        let dir = std::env::temp_dir().join(format!("hobbit_tiered_unit_{name}"));
+        write_synth_expert_store(&dir, &cfg).unwrap();
+        (cfg, dir)
+    }
+
+    fn fast_remote(peers: Vec<crate::config::PeerSpec>, local: ShardSpec) -> RemoteConfig {
+        RemoteConfig {
+            local_shard: local,
+            peers,
+            retry: RetryPolicy::fast(),
+            cooldown: Duration::from_millis(200),
+            // fast modeled network so unit tests stay quick
+            net_bw: 1e9,
+            net_latency: 0.0,
+            ..RemoteConfig::default()
+        }
+    }
+
+    #[test]
+    fn local_only_borrows_and_counts_nothing() {
+        let (cfg, dir) = synth_dir("local");
+        let store = Arc::new(ExpertStore::load(&dir, &cfg).unwrap());
+        let tiered = TieredStore::local_only(store.clone());
+        let key = ExpertKey::new(2, 1);
+        assert_eq!(tiered.tier_of(key, Precision::F32), FetchTier::Dram);
+        let rec = tiered.fetch(key, Precision::F32, 4.0);
+        assert!(matches!(rec, RecordRef::Local(_)));
+        assert_eq!(rec.as_slice(), store.record(key, Precision::F32));
+        tiered.stage_async(key, Precision::F32); // no-op, no panic
+        assert_eq!(tiered.counters(), RemoteCounters::default());
+    }
+
+    #[test]
+    fn peer_fetch_stages_and_fails_over_to_disk() {
+        let (cfg, dir) = synth_dir("peerpath");
+        let store = Arc::new(ExpertStore::load(&dir, &cfg).unwrap());
+        // peer owns the top half of the flat space (layers 2-3)
+        let server = ShardServer::bind(
+            "127.0.0.1:0",
+            store.clone(),
+            ShardSpec::parse("8-15").unwrap(),
+            4096,
+        )
+        .unwrap();
+        let addr = server.serve_background().to_string();
+        let rc = fast_remote(
+            vec![crate::config::PeerSpec { addr, shard: ShardSpec::parse("8-15").unwrap() }],
+            ShardSpec::parse("0-7").unwrap(),
+        );
+        let tiered = TieredStore::from_config(store.clone(), &rc, &dir).unwrap();
+
+        // local half: DRAM borrow
+        let k_local = ExpertKey::new(0, 0);
+        assert_eq!(tiered.tier_of(k_local, Precision::Q8), FetchTier::Dram);
+        assert!(matches!(tiered.fetch(k_local, Precision::Q8, 4.0), RecordRef::Local(_)));
+
+        // remote half: peer fetch, byte-identical, then staged on re-fetch
+        let k_remote = ExpertKey::new(3, 1);
+        assert_eq!(tiered.tier_of(k_remote, Precision::Q8), FetchTier::Peer);
+        let rec = tiered.fetch(k_remote, Precision::Q8, 4.0);
+        assert_eq!(rec.as_slice(), store.record(k_remote, Precision::Q8));
+        assert_eq!(tiered.tier_of(k_remote, Precision::Q8), FetchTier::Staged);
+        let _ = tiered.fetch(k_remote, Precision::Q8, 4.0);
+        let c = tiered.counters();
+        assert_eq!(c.remote_fetches, 1, "second fetch must hit staged, not the network");
+        assert_eq!(c.staged_hits, 1);
+        assert_eq!(c.remote_bytes, store.record_bytes(Precision::Q8) as u64);
+        assert_eq!(c.peer_failovers, 0);
+
+        // dead peer: failover to disk, still byte-identical, counted
+        let dead = {
+            let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap().to_string()
+        };
+        let rc = fast_remote(
+            vec![crate::config::PeerSpec { addr: dead, shard: ShardSpec::parse("8-15").unwrap() }],
+            ShardSpec::parse("0-7").unwrap(),
+        );
+        let tiered = TieredStore::from_config(store.clone(), &rc, &dir).unwrap();
+        let rec = tiered.fetch(k_remote, Precision::F32, 4.0);
+        assert_eq!(rec.as_slice(), store.record(k_remote, Precision::F32));
+        let c = tiered.counters();
+        assert!(c.peer_failovers >= 1);
+        assert_eq!(c.disk_fetches, 1);
+        assert_eq!(c.remote_fetches, 0);
+        // circuit broken: the next miss goes straight to disk (fast)
+        let t0 = Instant::now();
+        let _ = tiered.fetch(ExpertKey::new(2, 2), Precision::F32, 4.0);
+        assert!(t0.elapsed() < Duration::from_millis(100), "cooldown must skip the dead peer");
+    }
+
+    #[test]
+    fn partition_validated_at_construction() {
+        let (cfg, dir) = synth_dir("badpart");
+        let store = Arc::new(ExpertStore::load(&dir, &cfg).unwrap());
+        let rc = fast_remote(
+            vec![crate::config::PeerSpec {
+                addr: "127.0.0.1:1".into(),
+                shard: ShardSpec::parse("8-14").unwrap(), // 15 unowned
+            }],
+            ShardSpec::parse("0-7").unwrap(),
+        );
+        let err = TieredStore::from_config(store, &rc, &dir).unwrap_err();
+        assert!(err.to_string().contains("incomplete"), "{err}");
+    }
+}

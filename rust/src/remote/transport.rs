@@ -1,0 +1,197 @@
+//! Client-side TCP transport with bounded everything: connect timeout,
+//! read/write timeouts, and bounded retry with exponential backoff.
+//!
+//! Before this module, `server::client_request` would block forever on a
+//! hung peer (no connect timeout, unbounded `read_line`). Every
+//! client-side read in the crate — the GEN/STATS client and the remote
+//! expert tier — now goes through these helpers, so the worst case for
+//! any network operation is `attempts * (connect_timeout + io_timeout)`
+//! plus backoff, never a wedge.
+
+use std::io::{self, BufRead, BufReader, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+use std::time::Duration;
+
+/// Timeout and retry budget for one logical client operation.
+#[derive(Debug, Clone, Copy)]
+pub struct RetryPolicy {
+    /// per-attempt TCP connect timeout
+    pub connect_timeout: Duration,
+    /// per-attempt read/write timeout on the connected stream
+    pub io_timeout: Duration,
+    /// total attempts (>= 1): 1 try + (attempts - 1) retries
+    pub attempts: u32,
+    /// sleep before the first retry; doubles each further retry
+    pub backoff: Duration,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        Self {
+            connect_timeout: Duration::from_secs(1),
+            io_timeout: Duration::from_secs(5),
+            attempts: 3,
+            backoff: Duration::from_millis(50),
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// Tight budgets for localhost peers and tests: a dead peer is
+    /// detected in well under a second.
+    pub fn fast() -> Self {
+        Self {
+            connect_timeout: Duration::from_millis(200),
+            io_timeout: Duration::from_millis(1000),
+            attempts: 2,
+            backoff: Duration::from_millis(10),
+        }
+    }
+}
+
+/// Connect with the policy's connect timeout and arm the stream's
+/// read/write timeouts. Tries every resolved address once.
+pub fn connect(addr: &str, policy: &RetryPolicy) -> io::Result<TcpStream> {
+    let mut last: Option<io::Error> = None;
+    for sa in addr.to_socket_addrs()? {
+        match TcpStream::connect_timeout(&sa, policy.connect_timeout) {
+            Ok(s) => {
+                s.set_read_timeout(Some(policy.io_timeout))?;
+                s.set_write_timeout(Some(policy.io_timeout))?;
+                let _ = s.set_nodelay(true);
+                return Ok(s);
+            }
+            Err(e) => last = Some(e),
+        }
+    }
+    Err(last.unwrap_or_else(|| {
+        io::Error::new(io::ErrorKind::AddrNotAvailable, format!("{addr}: no addresses"))
+    }))
+}
+
+/// Run `op` up to `policy.attempts` times with exponential backoff
+/// between tries. Returns the final result and the number of retries
+/// spent (0 = first try succeeded).
+pub fn with_retries<T>(
+    policy: &RetryPolicy,
+    mut op: impl FnMut() -> io::Result<T>,
+) -> (io::Result<T>, u32) {
+    let attempts = policy.attempts.max(1);
+    let mut retries = 0u32;
+    let mut delay = policy.backoff;
+    loop {
+        match op() {
+            Ok(v) => return (Ok(v), retries),
+            Err(e) => {
+                if retries + 1 >= attempts {
+                    return (Err(e), retries);
+                }
+                std::thread::sleep(delay);
+                delay = delay.saturating_mul(2);
+                retries += 1;
+            }
+        }
+    }
+}
+
+/// One-line request, one-line response, full timeout/retry cover. The
+/// transport behind `server::client_request`.
+pub fn request_line(addr: &str, line: &str, policy: &RetryPolicy) -> io::Result<String> {
+    let (res, _retries) = with_retries(policy, || {
+        let mut s = connect(addr, policy)?;
+        s.write_all(line.as_bytes())?;
+        if !line.ends_with('\n') {
+            s.write_all(b"\n")?;
+        }
+        let mut reader = BufReader::new(s);
+        let mut out = String::new();
+        reader.read_line(&mut out)?;
+        if out.is_empty() {
+            return Err(io::Error::new(
+                io::ErrorKind::UnexpectedEof,
+                "connection closed before response line",
+            ));
+        }
+        Ok(out.trim_end().to_string())
+    });
+    res
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::TcpListener;
+    use std::time::Instant;
+
+    #[test]
+    fn retries_are_bounded_and_counted() {
+        let policy =
+            RetryPolicy { attempts: 3, backoff: Duration::from_millis(1), ..RetryPolicy::fast() };
+        let mut calls = 0;
+        let (res, retries) = with_retries(&policy, || {
+            calls += 1;
+            Err::<(), _>(io::Error::new(io::ErrorKind::ConnectionRefused, "nope"))
+        });
+        assert!(res.is_err());
+        assert_eq!(calls, 3, "attempts bound the tries");
+        assert_eq!(retries, 2);
+
+        let mut calls = 0;
+        let (res, retries) = with_retries(&policy, || {
+            calls += 1;
+            if calls < 2 {
+                Err(io::Error::new(io::ErrorKind::ConnectionRefused, "nope"))
+            } else {
+                Ok(7)
+            }
+        });
+        assert_eq!(res.unwrap(), 7);
+        assert_eq!(retries, 1);
+    }
+
+    #[test]
+    fn dead_port_fails_fast() {
+        // bind-then-drop guarantees a port with no listener
+        let addr = {
+            let l = TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap().to_string()
+        };
+        let policy = RetryPolicy { attempts: 2, ..RetryPolicy::fast() };
+        let t0 = Instant::now();
+        assert!(request_line(&addr, "PING", &policy).is_err());
+        // 2 attempts * 200ms connect budget + 10ms backoff, with slack;
+        // localhost refusals return immediately so this is far quicker.
+        assert!(t0.elapsed() < Duration::from_secs(3), "took {:?}", t0.elapsed());
+    }
+
+    #[test]
+    fn silent_server_times_out_instead_of_hanging() {
+        // a listener that accepts and then never writes a byte
+        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = l.local_addr().unwrap().to_string();
+        let guard = std::thread::spawn(move || {
+            // hold every accepted socket open, silently, until test end
+            let mut held = Vec::new();
+            while let Ok((s, _)) = l.accept() {
+                held.push(s);
+                if held.len() >= 2 {
+                    break;
+                }
+            }
+        });
+        let policy = RetryPolicy {
+            io_timeout: Duration::from_millis(100),
+            attempts: 2,
+            backoff: Duration::from_millis(1),
+            ..RetryPolicy::fast()
+        };
+        let t0 = Instant::now();
+        assert!(request_line(&addr, "STATS", &policy).is_err());
+        assert!(
+            t0.elapsed() < Duration::from_secs(3),
+            "read timeout must bound the wait, took {:?}",
+            t0.elapsed()
+        );
+        drop(guard); // detach: listener thread exits once both conns arrive
+    }
+}

@@ -43,6 +43,7 @@ use crate::memory::ThrottledCopier;
 use crate::metrics::{CacheStats, LoaderStats};
 use crate::model::ExpertStore;
 use crate::predictor::Predictor;
+use crate::remote::{FetchTier, TieredStore};
 use crate::{ExpertKey, Precision};
 
 /// One expert the barrier decided to execute: key, effective precision
@@ -400,8 +401,11 @@ pub struct ExpertResidency {
     next_seq: AtomicU64,
     hi: Precision,
     lo: Precision,
-    /// next-level memory (tier byte sizes + the engine's bypass reads)
-    store: Arc<ExpertStore>,
+    /// next-level memory, now a tiered hierarchy: local DRAM shard →
+    /// staged side-cache → peer shard servers → disk (tier byte sizes,
+    /// cross-tier staging, and the remote counters merged into
+    /// [`Self::loader_stats`])
+    store: Arc<TieredStore>,
     /// shared link (arbiter queue depth = the link-pressure floor input)
     copier: Arc<ThrottledCopier>,
     /// progressive lo-bits-first streaming enabled (`PolicyConfig`)
@@ -433,7 +437,8 @@ impl ExpertResidency {
     }
 
     /// Build the facade over a loader running `io.lanes` transfer lanes
-    /// at `io.chunk_bytes` preemption granularity.
+    /// at `io.chunk_bytes` preemption granularity. The store is treated
+    /// as fully local (every expert in host DRAM).
     pub fn with_io(
         store: Arc<ExpertStore>,
         cache: Arc<Mutex<CacheManager>>,
@@ -443,7 +448,33 @@ impl ExpertResidency {
         lo: Precision,
         io: IoConfig,
     ) -> Self {
-        let loader = ExpertLoader::start_with(store.clone(), cache.clone(), copier.clone(), io);
+        Self::with_tiered(
+            Arc::new(TieredStore::local_only(store)),
+            cache,
+            copier,
+            predictor,
+            hi,
+            lo,
+            io,
+        )
+    }
+
+    /// Build the facade over a [`TieredStore`] — the remote-capable
+    /// hierarchy (local DRAM shard → staged side-cache → peer → disk).
+    /// Next-level fetches route through the tiers, hi-pool floor planning
+    /// becomes tier-aware, and the predictor's staging candidates pull
+    /// peer-resident experts into local DRAM ahead of demand.
+    #[allow(clippy::too_many_arguments)]
+    pub fn with_tiered(
+        store: Arc<TieredStore>,
+        cache: Arc<Mutex<CacheManager>>,
+        copier: Arc<ThrottledCopier>,
+        predictor: Predictor,
+        hi: Precision,
+        lo: Precision,
+        io: IoConfig,
+    ) -> Self {
+        let loader = ExpertLoader::start_tiered(store.clone(), cache.clone(), copier.clone(), io);
         let gens = loader.gen_table();
         Self {
             loader,
@@ -505,11 +536,16 @@ impl ExpertResidency {
     ///   deadline policy ([`Self::set_deadline_urgent`]);
     /// * **link pressure** — busy lanes on the shared link arbiter: a miss
     ///   that would fair-share the link with other transfers reaches
-    ///   usability far sooner at the lo byte count.
+    ///   usability far sooner at the lo byte count;
+    /// * **serving tier** — a record whose hi bytes live on a *peer* (not
+    ///   in the local DRAM shard) pays a network round-trip before the
+    ///   PCIe copy even starts, so a peer-tier miss counts as pressured:
+    ///   the lo floor crosses the network in a fraction of the bytes and
+    ///   the hi upgrade streams behind it.
     ///
     /// A pinned precision freezes the choice; with progressive off the
     /// plan is always (hi, no upgrade) — the pre-progressive byte stream.
-    fn plan_fetch(&self, score: f64) -> (Precision, Option<Precision>) {
+    fn plan_fetch(&self, key: ExpertKey, score: f64) -> (Precision, Option<Precision>) {
         if let Some(p) = self.pin {
             return (p, None);
         }
@@ -519,7 +555,9 @@ impl ExpertResidency {
         let urgent = self.deadline_urgent.load(Ordering::Relaxed);
         let pressured = self.copier.active_lanes() >= 1;
         let tolerant = score > 0.5 * self.score_t1;
-        if urgent || pressured || tolerant {
+        let remote = self.store.has_remote()
+            && matches!(self.store.tier_of(key, self.hi), FetchTier::Peer | FetchTier::Disk);
+        if urgent || pressured || tolerant || remote {
             (self.lo, Some(self.hi))
         } else {
             (self.hi, None)
@@ -651,7 +689,7 @@ impl ExpertResidency {
             // hi-pool misses consult the progressive plan (floor precision
             // + background upgrade); lo-pool slots are sized for lo only
             let (start, upgrade_to) = match pool {
-                Pool::Hi => self.plan_fetch(score),
+                Pool::Hi => self.plan_fetch(key, score),
                 Pool::Lo => (prec, None),
             };
             if let Some(t) = self.request_load(
@@ -901,6 +939,25 @@ impl ExpertResidency {
         stacked: &[Vec<f32>],
     ) {
         self.loader.bump_prefetch_generation_for(scope);
+        // Cross-tier staging: the DRAM→HBM prefetch below only looks one
+        // uncovered layer ahead, but a PEER→DRAM pull pays a network
+        // round-trip — far too long to hide in that window. So every
+        // peer-resident candidate over the whole stacked horizon is handed
+        // to the tiered store's background stager (network link, prefetch
+        // weight) ahead of demand; by the time the one-layer prefetch or
+        // the demand miss arrives, the bytes are in the staged side-cache.
+        if self.store.has_remote() {
+            for (key, class) in
+                self.predictor.stage_candidates(current_layer, n_layers, stacked)
+            {
+                let (prec, pool) = self.class_target(class);
+                let hi_floor = match pool {
+                    Pool::Hi => self.plan_fetch(key, f64::MAX).0,
+                    Pool::Lo => prec,
+                };
+                self.store.stage_async(key, hi_floor);
+            }
+        }
         let mut cache = self.cache.lock().unwrap();
         let plan = self.predictor.plan(&mut cache, current_layer, n_layers, stacked);
         drop(cache);
@@ -944,9 +1001,18 @@ impl ExpertResidency {
 
     // ---- introspection ------------------------------------------------
 
-    /// Snapshot of the loader counters (report sync, benches).
+    /// Snapshot of the loader counters (report sync, benches), with the
+    /// tiered store's remote counters folded in (zeros on a local-only
+    /// store, so reports without a remote tier are unchanged).
     pub fn loader_stats(&self) -> LoaderStats {
-        self.loader.stats.lock().unwrap().clone()
+        let mut s = self.loader.stats.lock().unwrap().clone();
+        self.store.merge_into(&mut s);
+        s
+    }
+
+    /// The tiered next-level store (tests, benches, engine bypass reads).
+    pub fn store(&self) -> &Arc<TieredStore> {
+        &self.store
     }
 
     /// Snapshot of the cache counters (report sync, benches).

@@ -409,15 +409,18 @@ fn err_json(msg: &str) -> Json {
     obj(vec![("error", s(msg))])
 }
 
-/// Minimal client helper (examples/tests).
+/// Minimal client helper (examples/tests). Goes through the shared
+/// timeout/retry transport: the old `TcpStream::connect` + blocking
+/// `read_line` pair hung forever against an unresponsive (accepting but
+/// never answering) or half-dead server — now the connect and every read
+/// carry deadlines and transient failures get a bounded retry with
+/// backoff.
 pub fn client_request(addr: &str, line: &str) -> Result<Json> {
-    let mut stream = TcpStream::connect(addr)?;
-    stream.write_all(line.as_bytes())?;
-    stream.write_all(b"\n")?;
-    stream.flush()?;
-    let mut reader = BufReader::new(stream);
-    let mut resp = String::new();
-    reader.read_line(&mut resp)?;
+    let resp = crate::remote::transport::request_line(
+        addr,
+        line,
+        &crate::remote::RetryPolicy::default(),
+    )?;
     Json::parse(resp.trim_end()).map_err(|e| anyhow::anyhow!("bad response: {e}"))
 }
 

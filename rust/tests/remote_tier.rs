@@ -1,0 +1,437 @@
+//! Remote expert tier regression suite: multi-node expert sharding with
+//! peer fetch over the modeled network link class.
+//!
+//! Everything except the final test is artifact-free and in-process: a
+//! synthetic expert store on disk, a real [`ShardServer`] on localhost,
+//! and the real residency/loader stack over a [`TieredStore`]. The final
+//! test is the multi-process acceptance run: two `hobbit shard-serve`
+//! child processes serve disjoint shards to a reference engine whose
+//! local shard is empty, and the generated logits must be bit-identical
+//! to a single-node local-store run — including when one peer is killed
+//! mid-generation (disk-tier failover).
+//!
+//! Coverage:
+//! * a peer-owned expert acquired through the residency stack is
+//!   byte-identical to the local store, and counted in `remote_fetches`;
+//! * a silent (accept-then-hang) peer is bounded by the connect/read
+//!   timeouts and bounded retry — the fetch falls to disk, never wedges;
+//! * a dead peer breaks the circuit: later fetches skip straight to
+//!   disk, fast, with `peer_failovers` counting the degradation;
+//! * cross-tier prefetch: `stage_async` (and the predictor's
+//!   `plan_prefetch` staging pass) pulls peer records into the staged
+//!   side-cache ahead of demand;
+//! * the network link class accounts its bytes independently of PCIe —
+//!   peer traffic never shows up as PCIe bytes;
+//! * the multi-process bit-identity + failover acceptance test.
+
+use std::io::BufRead;
+use std::io::BufReader;
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use hobbit::cache::{CacheManager, Policy, Pool};
+use hobbit::config::{HardwareConfig, IoConfig, ModelConfig, PeerSpec, PolicyConfig, RemoteConfig};
+use hobbit::engine::{Engine, EngineOptions};
+use hobbit::loader::scorer::Class;
+use hobbit::memory::{LinkModel, ThrottledCopier, ONDEMAND_WEIGHT};
+use hobbit::model::synth::{
+    tiny_model_config, tiny_store_config, write_store_manifest, write_synth_expert_store,
+    write_synth_model,
+};
+use hobbit::model::ExpertStore;
+use hobbit::predictor::Predictor;
+use hobbit::remote::{FetchTier, RetryPolicy, ShardServer, ShardSpec, TieredStore};
+use hobbit::residency::ExpertResidency;
+use hobbit::tokenizer::BOS;
+use hobbit::{ExpertKey, Precision};
+
+/// Synthetic store on disk (`tiny_store_config`: 4 layers x 4 experts,
+/// flat indices 0-15, f32 record 4096 B).
+fn synth_store(name: &str) -> (ModelConfig, PathBuf, Arc<ExpertStore>) {
+    let cfg = tiny_store_config(name);
+    let dir = std::env::temp_dir().join(format!("hobbit_remote_tier_{name}"));
+    write_synth_expert_store(&dir, &cfg).expect("synth store");
+    let store = Arc::new(ExpertStore::load(&dir, &cfg).unwrap());
+    (cfg, dir, store)
+}
+
+/// Remote config with localhost-grade timeouts and a fast modeled link.
+fn remote_cfg(peers: Vec<PeerSpec>, local: &str) -> RemoteConfig {
+    RemoteConfig {
+        local_shard: ShardSpec::parse(local).unwrap(),
+        peers,
+        net_bw: 1e9,
+        net_latency: 0.0,
+        retry: RetryPolicy::fast(),
+        cooldown: Duration::from_millis(300),
+        ..RemoteConfig::default()
+    }
+}
+
+/// The real residency facade (loader lanes + cache + predictor) over a
+/// tiered store; `bw` is the modeled PCIe bandwidth.
+fn mk_residency(tiered: Arc<TieredStore>, bw: f64) -> (ExpertResidency, Arc<ThrottledCopier>) {
+    let cfg = tiered.config().clone();
+    let cache = Arc::new(Mutex::new(CacheManager::new(
+        cfg.n_layers,
+        cfg.n_experts,
+        8,
+        cfg.bytes_for(Precision::F32),
+        4,
+        cfg.bytes_for(Precision::Q8),
+        Policy::Lru,
+        0.25,
+    )));
+    let copier = Arc::new(ThrottledCopier::new(LinkModel { bytes_per_s: bw, latency_s: 0.0 }));
+    let predictor = Predictor::new(2, cfg.top_k, 0.6, 0.9, true, cfg.n_layers);
+    let resid = ExpertResidency::with_tiered(
+        tiered,
+        cache,
+        copier.clone(),
+        predictor,
+        Precision::F32,
+        Precision::Q8,
+        IoConfig { lanes: 2, chunk_bytes: 1024 },
+    );
+    (resid, copier)
+}
+
+/// A live in-process shard server owning the top half of the flat space.
+fn top_half_server(store: Arc<ExpertStore>) -> (String, ShardSpec) {
+    let shard = ShardSpec::parse("8-15").unwrap();
+    let server = ShardServer::bind("127.0.0.1:0", store, shard.clone(), 4096).unwrap();
+    (server.serve_background().to_string(), shard)
+}
+
+// ---------------------------------------------------------------------
+// (a) byte-identity through the residency/loader stack
+// ---------------------------------------------------------------------
+
+#[test]
+fn remote_acquire_is_byte_identical_through_the_loader_stack() {
+    let (cfg, dir, store) = synth_store("bitident");
+    let (addr, shard) = top_half_server(store.clone());
+    let rc = remote_cfg(vec![PeerSpec { addr, shard }], "0-7");
+    let tiered = Arc::new(TieredStore::from_config(store.clone(), &rc, &dir).unwrap());
+    let (resid, _copier) = mk_residency(tiered, 1e9);
+
+    // remote half (flat 13): crosses the wire, byte-identical on arrival
+    let remote_key = ExpertKey::new(3, 1);
+    let (_u, w) = resid.acquire(3, vec![(remote_key, Class::Hi, vec![1.0], 0.0)], None);
+    resid.wait(&w);
+    let (tier, bytes) = resid.resident_record(remote_key, Pool::Hi).expect("resident");
+    assert_eq!(tier, Precision::F32);
+    assert_eq!(&bytes[..], store.record(remote_key, Precision::F32), "remote bytes diverged");
+    let st = resid.loader_stats();
+    assert_eq!(st.remote_fetches, 1);
+    assert_eq!(st.remote_bytes, cfg.bytes_for(Precision::F32) as u64);
+    assert_eq!(st.peer_failovers, 0);
+    resid.release(remote_key, Pool::Hi);
+
+    // local half: a DRAM borrow, no extra network traffic
+    let local_key = ExpertKey::new(0, 2);
+    let (_u, w) = resid.acquire(0, vec![(local_key, Class::Hi, vec![1.0], 0.0)], None);
+    resid.wait(&w);
+    let (_, bytes) = resid.resident_record(local_key, Pool::Hi).expect("resident");
+    assert_eq!(&bytes[..], store.record(local_key, Precision::F32));
+    assert_eq!(resid.loader_stats().remote_fetches, 1, "a local fetch crossed the network");
+    resid.release(local_key, Pool::Hi);
+}
+
+// ---------------------------------------------------------------------
+// (b) a silent peer is time-bounded: timeouts + bounded retry + failover
+// ---------------------------------------------------------------------
+
+#[test]
+fn silent_peer_times_out_and_fails_over_within_budget() {
+    let (_cfg, dir, store) = synth_store("silent");
+    // a peer that accepts the connection and then never writes a byte —
+    // the exact shape that used to hang clients forever
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    std::thread::spawn(move || {
+        let mut held = Vec::new();
+        while let Ok((s, _)) = listener.accept() {
+            held.push(s);
+        }
+    });
+    let mut rc =
+        remote_cfg(vec![PeerSpec { addr, shard: ShardSpec::parse("8-15").unwrap() }], "0-7");
+    rc.retry = RetryPolicy {
+        io_timeout: Duration::from_millis(150),
+        attempts: 2,
+        backoff: Duration::from_millis(10),
+        ..RetryPolicy::fast()
+    };
+    let tiered = TieredStore::from_config(store.clone(), &rc, &dir).unwrap();
+    let key = ExpertKey::new(2, 0); // flat 8: peer-owned
+    let t0 = Instant::now();
+    let rec = tiered.fetch(key, Precision::Q8, ONDEMAND_WEIGHT);
+    let elapsed = t0.elapsed();
+    assert_eq!(rec.as_slice(), store.record(key, Precision::Q8), "failover bytes diverged");
+    // 2 attempts x 150 ms read timeout + 10 ms backoff, with slack
+    assert!(elapsed < Duration::from_secs(3), "silent peer not time-bounded: {elapsed:?}");
+    let c = tiered.counters();
+    assert_eq!(c.peer_failovers, 1);
+    assert_eq!(c.disk_fetches, 1);
+    assert_eq!(c.remote_fetches, 0);
+}
+
+// ---------------------------------------------------------------------
+// (c) dead peer: circuit breaker + disk tier, degraded but never wedged
+// ---------------------------------------------------------------------
+
+#[test]
+fn dead_peer_circuit_breaks_and_serves_every_record_from_disk() {
+    let (cfg, dir, store) = synth_store("deadpeer");
+    // bind-then-drop guarantees a port with no listener
+    let dead = {
+        let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        l.local_addr().unwrap().to_string()
+    };
+    let rc =
+        remote_cfg(vec![PeerSpec { addr: dead, shard: ShardSpec::parse("8-15").unwrap() }], "0-7");
+    let tiered = TieredStore::from_config(store.clone(), &rc, &dir).unwrap();
+
+    // the first miss pays the bounded retries and breaks the circuit
+    let first = ExpertKey::new(2, 0);
+    assert_eq!(
+        tiered.fetch(first, Precision::F32, ONDEMAND_WEIGHT).as_slice(),
+        store.record(first, Precision::F32),
+    );
+    // every further peer-owned record: straight to disk, fast, correct
+    let t0 = Instant::now();
+    for flat in 9..16u32 {
+        let key = ExpertKey::new(flat / cfg.n_experts, flat % cfg.n_experts);
+        assert_eq!(
+            tiered.fetch(key, Precision::F32, ONDEMAND_WEIGHT).as_slice(),
+            store.record(key, Precision::F32),
+            "disk failover bytes diverged at flat {flat}"
+        );
+    }
+    assert!(t0.elapsed() < Duration::from_secs(2), "circuit breaker did not skip the dead peer");
+    let c = tiered.counters();
+    assert_eq!(c.peer_failovers, 8, "every degraded fetch must be counted");
+    assert_eq!(c.disk_fetches, 8);
+    assert_eq!(c.remote_fetches, 0);
+}
+
+// ---------------------------------------------------------------------
+// (d) cross-tier prefetch: peer -> local DRAM ahead of demand
+// ---------------------------------------------------------------------
+
+#[test]
+fn cross_tier_prefetch_stages_peer_records_ahead_of_demand() {
+    let (cfg, dir, store) = synth_store("stage");
+    let (addr, shard) = top_half_server(store.clone());
+    let rc = remote_cfg(vec![PeerSpec { addr, shard }], "0-7");
+    let tiered = Arc::new(TieredStore::from_config(store.clone(), &rc, &dir).unwrap());
+
+    // direct staging: the stager thread pulls the record at prefetch
+    // weight; the demand fetch then hits the staged side-cache
+    let key = ExpertKey::new(2, 1); // flat 9
+    assert_eq!(tiered.tier_of(key, Precision::F32), FetchTier::Peer);
+    tiered.stage_async(key, Precision::F32);
+    let t0 = Instant::now();
+    while !tiered.is_staged(key, Precision::F32) {
+        assert!(t0.elapsed() < Duration::from_secs(10), "stager never landed the record");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert_eq!(tiered.tier_of(key, Precision::F32), FetchTier::Staged);
+    let rec = tiered.fetch(key, Precision::F32, ONDEMAND_WEIGHT);
+    assert_eq!(rec.as_slice(), store.record(key, Precision::F32));
+    let c = tiered.counters();
+    assert_eq!(c.staged_hits, 1, "the demand fetch must hit the staged copy");
+    assert_eq!(c.remote_fetches, 1, "the stager's pull is the only network fetch");
+
+    // the predictor drives the same staging across the whole horizon:
+    // strongly gate (3, 2) [flat 14] in the stacked probs for layer 3
+    let (mut resid, _copier) = mk_residency(tiered.clone(), 1e9);
+    let horizon_key = ExpertKey::new(3, 2);
+    let mut probs = vec![0.0f32; cfg.n_experts as usize];
+    probs[2] = 1.0;
+    let stacked = vec![vec![0.25f32; cfg.n_experts as usize], probs];
+    resid.plan_prefetch(0, 2, cfg.n_layers, &stacked);
+    let t0 = Instant::now();
+    while !tiered.is_staged(horizon_key, Precision::F32) {
+        assert!(
+            t0.elapsed() < Duration::from_secs(10),
+            "plan_prefetch never staged the peer-resident candidate"
+        );
+        std::thread::sleep(Duration::from_millis(5));
+    }
+}
+
+// ---------------------------------------------------------------------
+// (e) the network is a second link class, independent of PCIe
+// ---------------------------------------------------------------------
+
+#[test]
+fn network_link_class_is_independent_of_pcie() {
+    let (cfg, dir, store) = synth_store("linkclass");
+    let (addr, shard) = top_half_server(store.clone());
+    let rc = remote_cfg(vec![PeerSpec { addr, shard }], "0-7");
+    let tiered_remote = Arc::new(TieredStore::from_config(store.clone(), &rc, &dir).unwrap());
+    let tiered_local = Arc::new(TieredStore::local_only(store.clone()));
+
+    let (resid_remote, pcie_remote) = mk_residency(tiered_remote.clone(), 1e8);
+    let (resid_local, pcie_local) = mk_residency(tiered_local.clone(), 1e8);
+    let key = ExpertKey::new(3, 3); // flat 15: peer-owned in the remote rig
+    for r in [&resid_remote, &resid_local] {
+        let (_u, w) = r.acquire(3, vec![(key, Class::Hi, vec![1.0], 0.0)], None);
+        r.wait(&w);
+        r.release(key, Pool::Hi);
+    }
+    // both rigs moved exactly one f32 record across PCIe — the network
+    // leg never shows up as PCIe traffic
+    let rec = cfg.bytes_for(Precision::F32) as u64;
+    assert_eq!(pcie_remote.bytes_moved(), pcie_local.bytes_moved());
+    assert_eq!(pcie_remote.bytes_moved(), rec);
+    // and the peer leg is charged on the network link class alone
+    let net = tiered_remote.net_copier().expect("remote rig has a network link");
+    assert_eq!(net.bytes_moved(), rec);
+    assert_eq!(net.transfers(), 1);
+    assert!(tiered_local.net_copier().is_none(), "local-only rig must have no network link");
+}
+
+// ---------------------------------------------------------------------
+// (f) multi-process acceptance: real shard servers, bit-identical
+//     logits, and mid-run peer death
+// ---------------------------------------------------------------------
+
+const MP_STEPS: usize = 16;
+
+/// Kills the children on scope exit (panic included) so a failing test
+/// never leaks shard-server processes.
+struct KillOnDrop(Vec<Child>);
+
+impl Drop for KillOnDrop {
+    fn drop(&mut self) {
+        for c in &mut self.0 {
+            let _ = c.kill();
+            let _ = c.wait();
+        }
+    }
+}
+
+/// Spawn `hobbit shard-serve` on an OS-assigned port and parse the bound
+/// address from its banner line.
+fn spawn_shard_server(dir: &Path, shard: &str) -> (Child, String) {
+    let mut child = Command::new(env!("CARGO_BIN_EXE_hobbit"))
+        .args([
+            "shard-serve",
+            "--weights",
+            dir.to_str().unwrap(),
+            "--shard",
+            shard,
+            "--addr",
+            "127.0.0.1:0",
+        ])
+        .stdout(Stdio::piped())
+        .stderr(Stdio::inherit())
+        .spawn()
+        .expect("spawn shard-serve");
+    let mut line = String::new();
+    BufReader::new(child.stdout.as_mut().expect("child stdout"))
+        .read_line(&mut line)
+        .expect("read shard-serve banner");
+    let addr = line
+        .trim()
+        .strip_prefix("shard-serve listening on ")
+        .unwrap_or_else(|| panic!("unexpected shard-serve banner: {line:?}"))
+        .to_string();
+    (child, addr)
+}
+
+/// Reference engine over the synthesized model. Pinned precision + a
+/// cache smaller than the 12-expert working set, so demand fetches keep
+/// flowing all run long and every run is bit-deterministic.
+fn reference_engine(dir: &Path, remote: Option<RemoteConfig>) -> Engine {
+    let cfg = tiny_model_config("remote-mp");
+    let hw = HardwareConfig {
+        name: "remote-mp".into(),
+        load_bw: 64e9,
+        load_latency: 0.0,
+        hi_cache_experts: 4,
+        lo_cache_experts: 4,
+        cpu_assist: false,
+        cpu_expert_time: 0.0,
+    };
+    let policy = PolicyConfig {
+        dynamic_loading: false,
+        pin_precision: Some(Precision::F32),
+        prefetch_depth: 0,
+        ..PolicyConfig::default()
+    };
+    let mut opts = EngineOptions::new(hw, policy);
+    opts.remote = remote;
+    Engine::new_reference(dir, cfg, opts).expect("reference engine")
+}
+
+fn mp_token(i: usize) -> u32 {
+    (65 + (i * 7) % 50) as u32
+}
+
+fn generate_logits(eng: &mut Engine) -> Vec<Vec<f32>> {
+    let mut kv = eng.new_sequence();
+    let mut out = Vec::with_capacity(MP_STEPS + 1);
+    out.push(eng.prefill(&mut kv, &[BOS, 72, 101]).expect("prefill"));
+    for i in 0..MP_STEPS {
+        out.push(eng.decode_step(&mut kv, mp_token(i)).expect("decode"));
+    }
+    out
+}
+
+#[test]
+fn multi_process_shard_servers_match_local_run_and_survive_peer_death() {
+    let dir = std::env::temp_dir().join("hobbit_remote_tier_mp");
+    let cfg = tiny_model_config("remote-mp");
+    write_synth_model(&dir, &cfg, 0xC0FFEE).expect("synth model");
+    write_store_manifest(&dir, &cfg).expect("manifest");
+
+    // single-node baseline: every expert from the local store
+    let mut local = reference_engine(&dir, None);
+    let want = generate_logits(&mut local);
+
+    // two real shard-server processes partitioning the 12-expert space
+    let (c1, a1) = spawn_shard_server(&dir, "0-5");
+    let (c2, a2) = spawn_shard_server(&dir, "6-11");
+    let mut guard = KillOnDrop(vec![c1, c2]);
+    let peers = || {
+        vec![
+            PeerSpec { addr: a1.clone(), shard: ShardSpec::parse("0-5").unwrap() },
+            PeerSpec { addr: a2.clone(), shard: ShardSpec::parse("6-11").unwrap() },
+        ]
+    };
+
+    // empty local shard: every expert crosses a process boundary — the
+    // generated logits must be bit-identical to the single-node run
+    let mut remote = reference_engine(&dir, Some(remote_cfg(peers(), "none")));
+    let got = generate_logits(&mut remote);
+    assert_eq!(want, got, "remote-tier logits diverged from the single-node run");
+    let st = remote.residency.loader_stats();
+    assert!(st.remote_fetches > 0, "nothing was fetched over the network");
+    assert_eq!(st.peer_failovers, 0, "both peers were live; nothing may degrade");
+
+    // kill one peer mid-generation: the run completes via disk-tier
+    // failover, still bit-identical, and the degradation is counted
+    let mut rc = remote_cfg(peers(), "none");
+    rc.staged_capacity = 1; // keep the side-cache from masking the death
+    let mut failover = reference_engine(&dir, Some(rc));
+    let mut kv = failover.new_sequence();
+    let mut got = Vec::with_capacity(MP_STEPS + 1);
+    got.push(failover.prefill(&mut kv, &[BOS, 72, 101]).expect("prefill"));
+    for i in 0..MP_STEPS {
+        if i == MP_STEPS / 2 {
+            let dead = &mut guard.0[1];
+            let _ = dead.kill();
+            let _ = dead.wait();
+        }
+        got.push(failover.decode_step(&mut kv, mp_token(i)).expect("decode after peer death"));
+    }
+    assert_eq!(want, got, "peer death changed the generated logits");
+    let st = failover.residency.loader_stats();
+    assert!(st.peer_failovers > 0, "the dead peer's records never failed over");
+}
