@@ -23,7 +23,7 @@
 
 use std::path::PathBuf;
 use std::sync::{Arc, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use hobbit::baselines;
 use hobbit::cache::{CacheManager, Policy, Pool};
@@ -39,11 +39,12 @@ use hobbit::model::synth::{
 use hobbit::model::ExpertStore;
 use hobbit::predictor::{AccuracyTracker, Predictor};
 use hobbit::residency::ExpertResidency;
-use hobbit::sim::des::simulate_progressive_fetch;
+use hobbit::sim::des::{simulate_open_loop, simulate_progressive_fetch};
 use hobbit::tokenizer::BOS;
 use hobbit::trace::replay::{replay, ReplayConfig};
 use hobbit::trace::{generate, TraceGenConfig};
 use hobbit::util::stats::summarize;
+use hobbit::workload::{self, DriveOptions, WorkloadConfig};
 use hobbit::{ExpertKey, Precision};
 
 /// Slow link + tiny cache: the regime where expert loading dominates
@@ -396,6 +397,153 @@ fn progressive_floor_scenario() {
 }
 
 // ---------------------------------------------------------------------
+// Open-loop overload: the traffic harness + degradation ladder A/B
+// (artifact-free: reference executor, real scheduler, real trace replay)
+// ---------------------------------------------------------------------
+
+/// Offload-bound reference engine with progressive streaming on — the
+/// precision stage of the ladder has a lo tier to shed to.
+fn overload_engine(tag: &str) -> Engine {
+    let dir = std::env::temp_dir().join(format!("hobbit_bench_openloop_{tag}"));
+    let mut cfg = tiny_model_config("bench-openloop");
+    cfg.max_seq = 512;
+    write_synth_model(&dir, &cfg, 0x0BE7_10AD).expect("synth model");
+    let hw = HardwareConfig {
+        name: "bench-openloop".into(),
+        load_bw: 2e6,
+        load_latency: 0.0,
+        hi_cache_experts: 6,
+        lo_cache_experts: 6,
+        cpu_assist: false,
+        cpu_expert_time: 0.0,
+    };
+    let policy = PolicyConfig { progressive: true, prefetch_depth: 2, ..PolicyConfig::default() };
+    Engine::new_reference(&dir, cfg, EngineOptions::new(hw, policy))
+        .expect("reference engine")
+}
+
+/// The bursty open-loop trace both A/B runs replay (same seed → byte-
+/// identical offered load for ladder-on and ladder-off).
+fn overload_trace_cfg() -> WorkloadConfig {
+    WorkloadConfig {
+        mean_rps: 40.0,
+        burstiness: 0.4,
+        diurnal_period_s: 2.0,
+        duration_s: 2.0,
+        prompt_mean: 8.0,
+        prompt_sigma: 0.5,
+        prompt_max: 32,
+        output_mean: 4.0,
+        output_sigma: 0.4,
+        output_max: 16,
+        seed: 0x0B5E55ED,
+    }
+}
+
+/// One measured open-loop replay: fresh engine, bounded admission queue,
+/// the ladder on or off. Returns (goodput, rejected) and prints the tail
+/// row + (for the ladder run) the serving JSON section.
+fn open_loop_run(ladder: bool) -> (f64, usize) {
+    let eng = overload_engine(if ladder { "ladder" } else { "noladder" });
+    let mut coord = Coordinator::interleaved(eng);
+    coord.max_active = 2;
+    coord.overload.queue_limit = Some(4);
+    coord.overload.slo_ttft = Some(Duration::from_millis(750));
+    coord.overload.ladder = ladder;
+    let trace = workload::generate_trace(&overload_trace_cfg());
+    let opts = DriveOptions { max_wall: Duration::from_secs(120), ..Default::default() };
+    let rep = workload::drive(&mut coord, &trace, &opts).expect("open-loop drive");
+    let sch = coord.scheduler_stats();
+    println!(
+        "{:<9} ttft p50 {:>6.1}ms p99 {:>7.1}ms p99.9 {:>7.1}ms | itl p99 {:>6.1}ms | \
+         goodput {:>6.2} tok/s, slo {:.2} | admitted {:>3}, rejected {:>3}, shed rounds {:>4}",
+        if ladder { "ladder" } else { "no-ladder" },
+        sch.ttft_hist.p50_s() * 1e3,
+        sch.ttft_hist.p99_s() * 1e3,
+        sch.ttft_hist.p999_s() * 1e3,
+        sch.itl_hist.p99_s() * 1e3,
+        sch.goodput_tps(),
+        sch.slo_attainment(),
+        rep.submitted,
+        rep.rejected,
+        sch.shed_precision_rounds,
+    );
+    if rep.hit_wall {
+        eprintln!("WARNING: open-loop replay hit the wall-clock bound");
+    }
+    let goodput = sch.goodput_tps();
+    if ladder {
+        // the same counters `hobbit serve` emits — "serving" key only
+        if let Some(serving) = coord.report.to_json().get("serving") {
+            println!("serving: {serving}");
+        }
+    }
+    (goodput, rep.rejected)
+}
+
+/// Open-loop overload A/B (measured) + the deterministic DES sweep of the
+/// same ladder (`sim::des::simulate_open_loop`) across overload factors —
+/// the acceptance demonstration that shedding precision first holds
+/// goodput where the rigid baseline sheds requests.
+fn open_loop_scenario() {
+    let cfg = overload_trace_cfg();
+    println!(
+        "\n== open-loop overload: {:.0} rps offered for {:.0}s (burstiness {:.1}), \
+         queue bound 4, reference executor ==\n",
+        cfg.mean_rps, cfg.duration_s, cfg.burstiness,
+    );
+    let (ladder_good, _) = open_loop_run(true);
+    let (base_good, _) = open_loop_run(false);
+    if base_good > 0.0 {
+        println!(
+            "\nmeasured goodput under overload: ladder {:.2}x the no-ladder baseline",
+            ladder_good / base_good,
+        );
+    }
+    if ladder_good < base_good {
+        eprintln!("WARNING: the ladder lost goodput vs the no-ladder baseline");
+    }
+
+    // the deterministic twin: same trace generator, closed-form service.
+    // tau_hi/tau_lo mirror the f32-vs-q8 byte ratio on the modeled link;
+    // mean_rps is scaled so `x` is the offered/capacity ratio.
+    let (tau_hi, tau_lo, prefill_tok) = (4e-3, 1e-3, 2e-4);
+    println!("\n== DES open-loop sweep: goodput vs overload factor (queue 32, slo 0.5s) ==\n");
+    for x in [0.5f64, 1.0, 2.0, 4.0] {
+        let service = 32.0 * prefill_tok + 16.0 * tau_hi;
+        let des_cfg = WorkloadConfig {
+            mean_rps: x / service,
+            burstiness: 0.3,
+            diurnal_period_s: 20.0,
+            duration_s: 60.0,
+            prompt_mean: 32.0,
+            prompt_sigma: 0.4,
+            prompt_max: 128,
+            output_mean: 16.0,
+            output_sigma: 0.3,
+            output_max: 64,
+            seed: 0xde5_10ad,
+        };
+        let on = simulate_open_loop(&des_cfg, 32, 0.25, true, tau_hi, tau_lo, prefill_tok, 0.5);
+        let off =
+            simulate_open_loop(&des_cfg, 32, 0.25, false, tau_hi, tau_lo, prefill_tok, 0.5);
+        let ratio =
+            if off.goodput_tps > 0.0 { on.goodput_tps / off.goodput_tps } else { f64::INFINITY };
+        println!(
+            "{x:>3.1}x offered: ladder {:>7.1} tok/s (p99 ttft {:>6.2}s, rejected {:>4}) | \
+             no-ladder {:>7.1} tok/s (p99 ttft {:>6.2}s, rejected {:>4}) | ratio {ratio:>5.2}x",
+            on.goodput_tps, on.ttft_p99, on.rejected, off.goodput_tps, off.ttft_p99, off.rejected,
+        );
+        if (x - 2.0).abs() < f64::EPSILON && ratio < 1.5 {
+            eprintln!(
+                "WARNING: at 2x overload the ladder held only {ratio:.2}x the no-ladder \
+                 goodput (acceptance floor is 1.5x)"
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
 // Remote expert tier: peer fetch vs local DRAM (artifact-free: a real
 // shard server on localhost + the modeled network link class)
 // ---------------------------------------------------------------------
@@ -520,6 +668,7 @@ fn remote_scenario() {
 fn main() {
     admission_scenario();
     progressive_floor_scenario();
+    open_loop_scenario();
     remote_scenario();
 
     if !PathBuf::from("artifacts/mixtral-tiny/manifest.json").exists() {

@@ -100,6 +100,16 @@ COMMANDS:
               --net-gbps G (modeled network link bandwidth for peer
               fetches — a second link class, independent of the PCIe
               budget [1])
+              --admission-limit N (bound the interleaved admission queue;
+              requests beyond N get a typed rejection instead of waiting)
+              --slo-ttft-ms N (TTFT service objective; drives goodput
+              accounting and the ladder's SLO-risk precision shed)
+              --no-ladder (disable graceful degradation: keep full
+              precision/prefetch under pressure; admission bound still
+              applies)
+              --client-timeout-ms N (per-connection read timeout [30000])
+              --max-conn-threads N (bound on live reader threads; over-
+              capacity connects get an error line, not a thread [256])
   shard-serve run one expert shard server (the peer side of --peers)
               --weights DIR (weight directory with manifest.json)
               --shard SPEC [all]  --addr 127.0.0.1:0

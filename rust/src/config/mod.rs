@@ -328,6 +328,69 @@ impl RemoteConfig {
     }
 }
 
+/// Overload-control plane for the interleaved scheduler (`serve
+/// --interleaved`): a bounded admission queue plus the degradation ladder
+/// that sheds expert *precision* before it sheds *requests* (MoBiLE's
+/// little-expert fallback, lifted to the serving layer).
+///
+/// Ladder stages as the admission queue fills toward `queue_limit`:
+///   1. fill >= `precision_frac` (or the oldest queued request is at SLO
+///      risk) — force the progressive-streaming floor to the low tier, so
+///      every hi-pool miss becomes usable after the low-bits prefix;
+///   2. fill >= `prefetch_frac` — drop speculative prefetch planning, the
+///      link belongs entirely to on-demand misses;
+///   3. fill == `queue_limit` — reject new submissions with a typed
+///      error (the only stage that refuses work).
+#[derive(Debug, Clone)]
+pub struct OverloadConfig {
+    /// bounded admission queue depth; `None` = unbounded (the legacy
+    /// closed-loop behavior — no rejection, ladder stages keyed off an
+    /// effectively-infinite queue never fire)
+    pub queue_limit: Option<usize>,
+    /// TTFT SLO: drives goodput accounting and the ladder's SLO-risk
+    /// signal; `None` = every completion counts toward goodput
+    pub slo_ttft: Option<Duration>,
+    /// queue fill fraction at which precision shedding engages (stage 1)
+    pub precision_frac: f64,
+    /// queue fill fraction at which prefetch shedding engages (stage 2)
+    pub prefetch_frac: f64,
+    /// master switch for stages 1–2 (`--no-ladder`); admission bounding
+    /// (stage 3) stays — availability is non-negotiable, accuracy is not
+    pub ladder: bool,
+}
+
+impl Default for OverloadConfig {
+    fn default() -> Self {
+        Self {
+            queue_limit: None,
+            slo_ttft: None,
+            precision_frac: 0.25,
+            prefetch_frac: 0.75,
+            ladder: true,
+        }
+    }
+}
+
+impl OverloadConfig {
+    pub fn validate(&self) -> Result<(), String> {
+        if self.queue_limit == Some(0) {
+            return Err("admission queue limit must be >= 1".into());
+        }
+        if !(0.0..=1.0).contains(&self.precision_frac)
+            || !(0.0..=1.0).contains(&self.prefetch_frac)
+        {
+            return Err("ladder fractions must be in [0,1]".into());
+        }
+        if self.precision_frac > self.prefetch_frac {
+            return Err("precision shed must engage at or before prefetch shed".into());
+        }
+        if self.slo_ttft == Some(Duration::ZERO) {
+            return Err("TTFT SLO must be > 0".into());
+        }
+        Ok(())
+    }
+}
+
 /// HOBBIT policy knobs (paper defaults in parentheses).
 #[derive(Debug, Clone)]
 pub struct PolicyConfig {
@@ -459,6 +522,29 @@ mod tests {
     fn policy_default_valid() {
         PolicyConfig::default().validate().unwrap();
         PolicyConfig::int8_group().validate().unwrap();
+    }
+
+    #[test]
+    fn overload_default_valid_and_bounds_checked() {
+        OverloadConfig::default().validate().unwrap();
+        let mut o = OverloadConfig::default();
+        o.queue_limit = Some(0);
+        assert!(o.validate().is_err(), "zero queue limit must fail");
+        let mut o = OverloadConfig::default();
+        o.precision_frac = 0.9;
+        o.prefetch_frac = 0.5;
+        assert!(o.validate().is_err(), "inverted ladder order must fail");
+        let mut o = OverloadConfig::default();
+        o.prefetch_frac = 1.5;
+        assert!(o.validate().is_err(), "fraction > 1 must fail");
+        let mut o = OverloadConfig::default();
+        o.slo_ttft = Some(Duration::ZERO);
+        assert!(o.validate().is_err(), "zero SLO must fail");
+        let mut o = OverloadConfig::default();
+        o.queue_limit = Some(64);
+        o.slo_ttft = Some(Duration::from_millis(500));
+        o.ladder = false;
+        o.validate().unwrap();
     }
 
     #[test]

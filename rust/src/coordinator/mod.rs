@@ -53,6 +53,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
+use crate::config::OverloadConfig;
 use crate::engine::{
     BatchCursor, BatchItem, BatchProgress, DecodeCursor, DecodeProgress, Engine, KvState,
     PrefillCursor, PrefillProgress, PREFILL_CHUNKS,
@@ -158,6 +159,66 @@ pub(crate) fn sjf_pick(seqs: &[(usize, bool)]) -> Option<usize> {
         .map(|(i, _)| i)
 }
 
+/// Typed admission rejection ([`Coordinator::try_submit`]) — the overload
+/// ladder's last stage. The caller answers the client's channel with it;
+/// the request never entered the queue.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum AdmissionError {
+    /// the bounded admission queue is full
+    QueueFull { depth: usize, limit: usize },
+}
+
+impl std::fmt::Display for AdmissionError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AdmissionError::QueueFull { depth, limit } => {
+                write!(f, "admission queue full ({depth}/{limit}); retry later")
+            }
+        }
+    }
+}
+
+impl std::error::Error for AdmissionError {}
+
+/// Degradation ladder stage, ordered by severity. Stages are cumulative:
+/// `ShedPrefetch` implies the precision shed stays on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub(crate) enum OverloadStage {
+    Normal,
+    /// force the progressive precision floor to the low tier
+    ShedPrecision,
+    /// additionally drop speculative prefetch planning
+    ShedPrefetch,
+}
+
+/// Pure ladder-stage decision (unit-testable): queue fill fraction against
+/// the configured thresholds, plus the SLO-risk signal — the *oldest*
+/// queued request having burned half its TTFT budget while still
+/// unadmitted means everything behind it is already late, so precision
+/// shedding starts even at shallow depth.
+pub(crate) fn overload_stage(
+    depth: usize,
+    limit: usize,
+    oldest_wait: Option<Duration>,
+    slo_ttft: Option<Duration>,
+    precision_frac: f64,
+    prefetch_frac: f64,
+) -> OverloadStage {
+    let limit = limit.max(1);
+    let fill = depth as f64 / limit as f64;
+    let slo_risk = match (oldest_wait, slo_ttft) {
+        (Some(w), Some(slo)) => w * 2 >= slo,
+        _ => false,
+    };
+    if fill >= prefetch_frac {
+        OverloadStage::ShedPrefetch
+    } else if fill >= precision_frac || slo_risk {
+        OverloadStage::ShedPrecision
+    } else {
+        OverloadStage::Normal
+    }
+}
+
 struct QueuedRequest {
     req: Request,
     enqueued: Instant,
@@ -201,6 +262,15 @@ struct ActiveSeq {
     compute: Duration,
     decode_started: Instant,
     ttft: Option<Duration>,
+    /// instant of the last completed decode token (inter-token-latency
+    /// histogram samples are the gaps between these)
+    last_token: Option<Instant>,
+    /// cached scheduler-visibility flags, kept current by
+    /// [`Coordinator::refresh_stall`] at every cursor/prefill/in_batch
+    /// mutation site — the incrementally-updated counts behind the O(1)
+    /// [`Coordinator::all_stalled`]
+    counted_live: bool,
+    counted_stalled: bool,
 }
 
 enum Advance {
@@ -262,11 +332,24 @@ pub struct Coordinator {
     /// Prefilling sequence has waited 75% of this since submission, its
     /// prefill slices preempt decode (`--ttft-deadline-ms`)
     pub ttft_deadline: Duration,
+    /// overload-control plane: bounded admission + the degradation ladder
+    /// (precision → prefetch → rejection); default = unbounded, ladder
+    /// armed but keyed off a queue that never fills
+    pub overload: OverloadConfig,
     /// per-request failures (admission/prefill errors) awaiting
     /// [`Self::take_failures`]
     failed: Vec<(u64, String)>,
     queue: VecDeque<QueuedRequest>,
     active: Vec<ActiveSeq>,
+    /// live solo (non-group) sequence count — `counted_live` sum
+    solo_live: usize,
+    /// of those, how many are suspended on unconsumed loads —
+    /// `counted_stalled` sum
+    solo_stalled: usize,
+    /// sequences examined by `all_stalled`/`first_stalled` since startup
+    /// (observability for the O(1)-per-slice guarantee; Cell so the
+    /// `&self` accessors can count themselves)
+    scan_ops: std::cell::Cell<u64>,
     /// the in-flight batched decode step, if one is ganged up
     group: Option<BatchCursor>,
     sched: SchedulerStats,
@@ -288,9 +371,13 @@ impl Coordinator {
             prefill_first: false,
             token_budget: 1,
             ttft_deadline: Duration::from_millis(500),
+            overload: OverloadConfig::default(),
             failed: Vec::new(),
             queue: VecDeque::new(),
             active: Vec::new(),
+            solo_live: 0,
+            solo_stalled: 0,
+            scan_ops: std::cell::Cell::new(0),
             group: None,
             sched: SchedulerStats::default(),
             busy_since: None,
@@ -307,6 +394,23 @@ impl Coordinator {
 
     pub fn submit(&mut self, req: Request) {
         self.queue.push_back(QueuedRequest { req, enqueued: Instant::now() });
+    }
+
+    /// Submit under admission control: with a bounded queue configured
+    /// ([`OverloadConfig::queue_limit`]), a full queue rejects with a
+    /// typed error instead of growing without bound — the ladder's last
+    /// stage, reached only after precision and prefetch already shed.
+    /// Unbounded (the default) never rejects, matching [`Self::submit`].
+    pub fn try_submit(&mut self, req: Request) -> Result<(), AdmissionError> {
+        if let Some(limit) = self.overload.queue_limit {
+            let depth = self.queue.len();
+            if depth >= limit {
+                self.sched.admission_rejects += 1;
+                return Err(AdmissionError::QueueFull { depth, limit });
+            }
+        }
+        self.submit(req);
+        Ok(())
     }
 
     pub fn pending(&self) -> usize {
@@ -417,6 +521,10 @@ impl Coordinator {
             self.busy_since = Some(Instant::now());
         }
         self.admit_waiting();
+        // overload ladder: judge standing pressure from what is STILL
+        // queued after admission filled the live set, and publish the
+        // shed signals to the residency facade for this round
+        self.apply_overload_ladder();
         let mut out = Vec::new();
         let mut progressed = false;
         // prefill-priority: admissions' chunks take the engine before any
@@ -572,6 +680,9 @@ impl Coordinator {
                     self.engine.decode_block(seq.cursor.as_mut().unwrap());
                 }
                 self.sched.unhidden_stall += t0.elapsed();
+                // the block satisfied the cursor's pending loads: it is
+                // runnable again, so the cached stall flag must clear
+                self.refresh_stall(idx);
             }
         }
         if !self.has_work() {
@@ -637,6 +748,7 @@ impl Coordinator {
                 self.engine.set_active_sequence(Some(id));
                 let cursor = self.engine.decode_begin(&self.active[i].kv, tok)?;
                 self.active[i].cursor = Some(cursor);
+                self.refresh_stall(i);
                 Ok(true)
             }
             n => {
@@ -647,6 +759,7 @@ impl Coordinator {
                     seq.in_batch = true;
                     let kv = std::mem::replace(&mut seq.kv, KvState::empty());
                     items.push(BatchItem { seq: Some(id), token: tok, kv });
+                    self.refresh_stall(i);
                 }
                 self.engine.set_active_sequence(None);
                 let cur = self.engine.decode_begin_batch(items)?;
@@ -709,6 +822,7 @@ impl Coordinator {
                                 seq.kv = kv;
                                 seq.cursor = Some(solo);
                                 seq.in_batch = false;
+                                self.refresh_stall(i);
                             }
                         }
                     }
@@ -722,6 +836,7 @@ impl Coordinator {
             }
             BatchProgress::Done(rows) => {
                 let shared_wait = cur.load_wait;
+                let now = Instant::now();
                 for done in rows {
                     let id = done.seq.expect("group rows carry session ids");
                     if let Some(i) = self.index_of(id) {
@@ -733,6 +848,11 @@ impl Coordinator {
                         if seq.ttft.is_none() {
                             seq.ttft = Some(seq.enqueued.elapsed());
                         }
+                        if let Some(prev) = seq.last_token {
+                            self.sched.itl_hist.record(now.saturating_duration_since(prev));
+                        }
+                        seq.last_token = Some(now);
+                        self.refresh_stall(i);
                     }
                 }
                 Ok(true)
@@ -740,20 +860,119 @@ impl Coordinator {
         }
     }
 
+    /// Compute the current ladder stage and publish the shed signals to
+    /// the residency facade. Stage 3 (rejection) lives in
+    /// [`Self::try_submit`]; this drives stages 1–2 each round. With
+    /// `ladder` off the signals stay cleared — the A/B baseline where
+    /// only admission bounding protects the server.
+    fn apply_overload_ladder(&mut self) {
+        let stage = match self.overload.queue_limit {
+            Some(limit) if self.overload.ladder => overload_stage(
+                self.queue.len(),
+                limit,
+                self.queue.front().map(|q| q.enqueued.elapsed()),
+                self.overload.slo_ttft,
+                self.overload.precision_frac,
+                self.overload.prefetch_frac,
+            ),
+            _ => OverloadStage::Normal,
+        };
+        let shed_precision = stage >= OverloadStage::ShedPrecision;
+        let shed_prefetch = stage >= OverloadStage::ShedPrefetch;
+        self.engine.residency.set_queue_pressure(shed_precision);
+        self.engine.residency.set_prefetch_shed(shed_prefetch);
+        if shed_precision {
+            self.sched.shed_precision_rounds += 1;
+        }
+        if shed_prefetch {
+            self.sched.shed_prefetch_rounds += 1;
+        }
+    }
+
+    /// Is sequence `i` invisible to the solo scheduler until a load lands?
+    /// (Suspended on unconsumed loads; group members never match — their
+    /// cursors live inside the group.)
+    fn seq_stalled(s: &ActiveSeq) -> bool {
+        s.prefill.as_ref().map(|c| c.is_pending()).unwrap_or(false)
+            || s.cursor.as_ref().map(|c| c.is_pending()).unwrap_or(false)
+    }
+
+    /// Re-derive sequence `i`'s cached live/stalled contribution and fix
+    /// the running counts. Called at every site that mutates a sequence's
+    /// `cursor`/`prefill`/`in_batch` — pending-ness only changes through
+    /// coordinator-driven polls and blocks, so between calls the counts
+    /// stay exact and [`Self::all_stalled`] never rescans the live set.
+    fn refresh_stall(&mut self, i: usize) {
+        let live_now = !self.active[i].in_batch;
+        let stalled_now = Self::seq_stalled(&self.active[i]);
+        let s = &mut self.active[i];
+        if s.counted_live != live_now {
+            self.solo_live = if live_now {
+                self.solo_live + 1
+            } else {
+                self.solo_live - 1
+            };
+            s.counted_live = live_now;
+        }
+        if s.counted_stalled != stalled_now {
+            self.solo_stalled = if stalled_now {
+                self.solo_stalled + 1
+            } else {
+                self.solo_stalled - 1
+            };
+            s.counted_stalled = stalled_now;
+        }
+    }
+
+    /// Drop sequence `i`'s contribution from the running counts (it is
+    /// about to be removed from the live set).
+    fn forget_stall(&mut self, i: usize) {
+        if self.active[i].counted_live {
+            self.solo_live -= 1;
+        }
+        if self.active[i].counted_stalled {
+            self.solo_stalled -= 1;
+        }
+    }
+
     /// True when every live sequence is suspended on in-flight loads (and
     /// there is at least one). Group members count as stalled only while
     /// the whole group is blocked — a group with a runnable row makes
     /// progress next step (directly or by evicting the blocked rows).
+    ///
+    /// O(1): reads the incrementally-maintained counts instead of
+    /// rescanning the live set — at 1k live sequences the per-slice
+    /// scheduler overhead stays flat ([`Self::stall_scan_ops`] is the
+    /// test-visible proof).
     pub fn all_stalled(&self) -> bool {
-        let solos_stalled = self.active.iter().filter(|s| !s.in_batch).all(|s| {
-            s.prefill.as_ref().map(|c| c.is_pending()).unwrap_or(false)
-                || s.cursor.as_ref().map(|c| c.is_pending()).unwrap_or(false)
-        });
+        self.scan_ops.set(self.scan_ops.get() + 1);
+        let solos_stalled = self.solo_stalled == self.solo_live;
         let group_stalled = match &self.group {
             Some(g) => g.is_pending() && !g.any_row_runnable(),
             None => true,
         };
-        !self.active.is_empty() && solos_stalled && group_stalled
+        let stalled = !self.active.is_empty() && solos_stalled && group_stalled;
+        #[cfg(debug_assertions)]
+        {
+            let rescan = self.active.iter().filter(|s| !s.in_batch).all(|s| {
+                s.prefill.as_ref().map(|c| c.is_pending()).unwrap_or(false)
+                    || s.cursor.as_ref().map(|c| c.is_pending()).unwrap_or(false)
+            });
+            debug_assert_eq!(
+                solos_stalled, rescan,
+                "incremental stall counts drifted from the live set \
+                 (live={} stalled={})",
+                self.solo_live, self.solo_stalled
+            );
+        }
+        stalled
+    }
+
+    /// Sequences examined by the stall queries since startup. The O(1)
+    /// guarantee, observable: each [`Self::all_stalled`] call adds exactly
+    /// 1 regardless of how many sequences are live.
+    pub fn stall_scan_ops(&self) -> u64 {
+        self.scan_ops.get()
     }
 
     /// Residency tickets every live sequence is suspended on (for the
@@ -819,6 +1038,8 @@ impl Coordinator {
         for q in self.queue.drain(..) {
             ids.push(q.req.id);
         }
+        self.solo_live = 0;
+        self.solo_stalled = 0;
         self.engine.set_active_sequence(None);
         if let Some(t) = self.busy_since.take() {
             self.sched.busy_wall += t.elapsed();
@@ -826,12 +1047,12 @@ impl Coordinator {
         ids
     }
 
+    /// First suspended sequence, for the blocking fallback. Reads the
+    /// cached per-sequence flags (no cursor re-polling); only runs on the
+    /// about-to-block path, never per slice.
     fn first_stalled(&self) -> Option<usize> {
-        (0..self.active.len()).find(|&j| {
-            let s = &self.active[j];
-            s.prefill.as_ref().map(|c| c.is_pending()).unwrap_or(false)
-                || s.cursor.as_ref().map(|c| c.is_pending()).unwrap_or(false)
-        })
+        self.scan_ops.set(self.scan_ops.get() + 1);
+        self.active.iter().position(|s| s.counted_stalled)
     }
 
     /// Move queued requests into the live set (up to `max_active`). With
@@ -899,8 +1120,13 @@ impl Coordinator {
                 compute: self.engine.compute_time().saturating_sub(compute0),
                 decode_started: Instant::now(),
                 ttft: None,
+                last_token: None,
+                counted_live: false,
+                counted_stalled: false,
                 req: q.req,
             });
+            let idx = self.active.len() - 1;
+            self.refresh_stall(idx);
         }
     }
 
@@ -972,6 +1198,7 @@ impl Coordinator {
                 self.sched.prefill_stall += cursor.load_wait;
                 self.fold_chunk_widths(cursor.chunk_widths());
                 self.engine.prefill_abort(cursor);
+                self.forget_stall(i);
                 let seq = self.active.remove(i);
                 self.engine.set_active_sequence(None);
                 self.fail_request(seq.req.id, format!("{e:#}"));
@@ -981,11 +1208,13 @@ impl Coordinator {
         match progress {
             PrefillProgress::Pending => {
                 self.active[i].prefill = Some(cursor);
+                self.refresh_stall(i);
                 Ok(PrefillOutcome::Stalled)
             }
             PrefillProgress::Chunk { .. } => {
                 self.sched.prefill_slices += 1;
                 self.active[i].prefill = Some(cursor);
+                self.refresh_stall(i);
                 Ok(PrefillOutcome::Progressed)
             }
             PrefillProgress::Done(logits) => {
@@ -998,6 +1227,7 @@ impl Coordinator {
                 seq.logits = logits;
                 seq.decode_started = Instant::now();
                 // cursor dropped: the sequence is decodable next round
+                self.refresh_stall(i);
                 Ok(PrefillOutcome::Progressed)
             }
         }
@@ -1087,15 +1317,22 @@ impl Coordinator {
         match progress {
             DecodeProgress::Pending => {
                 self.active[i].cursor = Some(cursor);
+                self.refresh_stall(i);
                 Ok(Advance::Stalled)
             }
             DecodeProgress::Done(logits) => {
+                let now = Instant::now();
                 let seq = &mut self.active[i];
                 seq.load_wait += cursor.load_wait;
                 seq.logits = logits;
                 if seq.ttft.is_none() {
                     seq.ttft = Some(seq.enqueued.elapsed());
                 }
+                if let Some(prev) = seq.last_token {
+                    self.sched.itl_hist.record(now.saturating_duration_since(prev));
+                }
+                seq.last_token = Some(now);
+                self.refresh_stall(i);
                 Ok(Advance::Progressed)
             }
         }
@@ -1106,6 +1343,7 @@ impl Coordinator {
     /// prefetch scope are released by its session dropping at the end of
     /// this function.
     fn finish(&mut self, i: usize) -> GenerationResult {
+        self.forget_stall(i);
         let seq = self.active.remove(i);
         self.engine.set_active_sequence(None);
         let metrics = RequestMetrics {
@@ -1121,7 +1359,15 @@ impl Coordinator {
         self.sched.completed += 1;
         self.sched.decoded_tokens += seq.generated.len() as u64;
         self.sched.queue_wait += seq.queue_wait;
-        self.sched.ttft += seq.ttft.unwrap_or_else(|| seq.enqueued.elapsed());
+        let ttft = seq.ttft.unwrap_or_else(|| seq.enqueued.elapsed());
+        self.sched.ttft += ttft;
+        self.sched.ttft_hist.record(ttft);
+        // goodput accounting: a request counts only if its TTFT met the
+        // SLO (no SLO configured = every completion counts)
+        if self.overload.slo_ttft.map(|slo| ttft <= slo).unwrap_or(true) {
+            self.sched.slo_met += 1;
+            self.sched.slo_met_tokens += seq.generated.len() as u64;
+        }
         self.sched.total_stall += seq.load_wait;
         GenerationResult {
             id: seq.req.id,
@@ -1173,6 +1419,48 @@ mod tests {
         assert_eq!(SchedPolicy::from_name("deadline"), Some(SchedPolicy::Deadline));
         assert_eq!(SchedPolicy::from_name("edf"), Some(SchedPolicy::Deadline));
         assert_eq!(SchedPolicy::from_name("lru"), None);
+    }
+
+    #[test]
+    fn ladder_stages_escalate_with_queue_fill() {
+        let stage = |depth| overload_stage(depth, 8, None, None, 0.25, 0.75);
+        assert_eq!(stage(0), OverloadStage::Normal);
+        assert_eq!(stage(1), OverloadStage::Normal);
+        // 2/8 = 0.25: precision sheds first
+        assert_eq!(stage(2), OverloadStage::ShedPrecision);
+        assert_eq!(stage(5), OverloadStage::ShedPrecision);
+        // 6/8 = 0.75: prefetch sheds next
+        assert_eq!(stage(6), OverloadStage::ShedPrefetch);
+        assert_eq!(stage(8), OverloadStage::ShedPrefetch);
+        // severity order backs the cumulative application
+        assert!(OverloadStage::ShedPrefetch > OverloadStage::ShedPrecision);
+        assert!(OverloadStage::ShedPrecision > OverloadStage::Normal);
+    }
+
+    #[test]
+    fn ladder_slo_risk_sheds_precision_at_shallow_depth() {
+        let slo = Some(Duration::from_millis(400));
+        // shallow queue, but the oldest waiter burned half its SLO budget
+        let w = Some(Duration::from_millis(200));
+        assert_eq!(
+            overload_stage(1, 64, w, slo, 0.25, 0.75),
+            OverloadStage::ShedPrecision
+        );
+        // fresh waiter: depth rules alone
+        let w = Some(Duration::from_millis(10));
+        assert_eq!(overload_stage(1, 64, w, slo, 0.25, 0.75), OverloadStage::Normal);
+        // no SLO configured: the risk signal never fires
+        assert_eq!(
+            overload_stage(1, 64, Some(Duration::from_secs(9)), None, 0.25, 0.75),
+            OverloadStage::Normal
+        );
+    }
+
+    #[test]
+    fn admission_error_displays_depth() {
+        let e = AdmissionError::QueueFull { depth: 8, limit: 8 };
+        let msg = e.to_string();
+        assert!(msg.contains("8/8"), "got {msg}");
     }
 
     #[test]

@@ -43,6 +43,10 @@
 //! * [`server`] — TCP serving front-end: single-threaded FCFS accept loop
 //!   (`serve`) or threaded accept + per-connection readers feeding the
 //!   interleaved scheduler over a channel (`serve_concurrent`).
+//! * [`workload`] — open-loop trace-driven traffic harness: bursty
+//!   Poisson/diurnal arrivals with heavy-tailed log-normal lengths,
+//!   replayed against the interleaved coordinator under admission control
+//!   (the offered load the overload ladder degrades against).
 //! * [`sim`] — discrete-event simulator at paper scale (figures/benches).
 //! * [`baselines`] — the six comparator systems of §5.
 //! * [`trace`] — gating-trace capture, synthetic generation, replay.
@@ -72,6 +76,7 @@ pub mod tensor;
 pub mod tokenizer;
 pub mod trace;
 pub mod util;
+pub mod workload;
 
 /// Expert identity: (layer, expert index) — the unit of offloading.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]

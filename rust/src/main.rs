@@ -38,6 +38,7 @@ fn main() {
             "no-chunked-prefill",
             "prefill-first",
             "progressive",
+            "no-ladder",
         ],
     );
     let r = match cmd.as_str() {
@@ -188,9 +189,26 @@ fn cmd_serve(args: &Args) -> Result<()> {
             args.get_usize("ttft-deadline-ms", coord.ttft_deadline.as_millis() as usize)
                 .max(1) as u64,
         );
+        // overload control: bounded admission + the degradation ladder
+        // (shed precision, then prefetch, then admissions)
+        if let Some(limit) = args.get("admission-limit") {
+            let n: usize =
+                limit.parse().map_err(|_| anyhow!("bad --admission-limit '{limit}'"))?;
+            coord.overload.queue_limit = Some(n);
+        }
+        if let Some(ms) = args.get("slo-ttft-ms") {
+            let n: u64 = ms.parse().map_err(|_| anyhow!("bad --slo-ttft-ms '{ms}'"))?;
+            coord.overload.slo_ttft = Some(std::time::Duration::from_millis(n));
+        }
+        coord.overload.ladder = !args.has("no-ladder");
+        coord.overload.validate().map_err(|e| anyhow!("{e}"))?;
     }
     let addr = args.get_or("addr", "127.0.0.1:7077");
     let mut server = Server::bind(addr)?;
+    server.set_client_timeout(std::time::Duration::from_millis(
+        args.get_usize("client-timeout-ms", 30_000).max(1) as u64,
+    ));
+    server.set_max_conn_threads(args.get_usize("max-conn-threads", 256));
     println!(
         "hobbit serving on {} (platform: {}, scheduler: {}{})",
         server.local_addr()?,

@@ -201,6 +201,107 @@ impl RequestMetrics {
     }
 }
 
+/// Bounded log-bucket latency histogram for tail percentiles.
+///
+/// Geometric buckets from [`Self::MIN_S`] with ratio [`Self::GROWTH`]
+/// (~7.5% half-width relative error per bucket), covering 1 µs .. >1 h in
+/// a fixed [`Self::BUCKETS`]-slot array — O(1) record, O(1) memory no
+/// matter how many samples land, so the open-loop harness can stream
+/// thousands of per-request TTFT / inter-token samples through it.
+/// Quantiles return the geometric midpoint of the covering bucket.
+#[derive(Debug, Clone)]
+pub struct LatencyHistogram {
+    counts: [u64; Self::BUCKETS],
+    total: u64,
+    sum: Duration,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self { counts: [0; Self::BUCKETS], total: 0, sum: Duration::ZERO }
+    }
+}
+
+impl LatencyHistogram {
+    /// lower edge of bucket 0 (1 µs); anything smaller folds into it
+    pub const MIN_S: f64 = 1e-6;
+    /// geometric bucket ratio — ln(3600/1e-6)/ln(1.15) ≈ 158 buckets to
+    /// span one hour, hence 160 slots (the last is the +inf overflow)
+    pub const GROWTH: f64 = 1.15;
+    pub const BUCKETS: usize = 160;
+
+    fn index(d: Duration) -> usize {
+        let s = d.as_secs_f64();
+        if s <= Self::MIN_S {
+            return 0;
+        }
+        let i = ((s / Self::MIN_S).ln() / Self::GROWTH.ln()).floor() as usize;
+        i.min(Self::BUCKETS - 1)
+    }
+
+    /// geometric midpoint of bucket `i`, in seconds
+    fn midpoint_s(i: usize) -> f64 {
+        Self::MIN_S * Self::GROWTH.powf(i as f64 + 0.5)
+    }
+
+    pub fn record(&mut self, d: Duration) {
+        self.counts[Self::index(d)] += 1;
+        self.total += 1;
+        self.sum += d;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn mean_s(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.sum.as_secs_f64() / self.total as f64
+        }
+    }
+
+    /// Quantile `q` in [0,1], in seconds (0.0 while empty). Nearest-rank
+    /// over the bucket counts; the answer carries the bucket's ~±7.5%
+    /// relative error, which is what makes the memory bound possible.
+    pub fn quantile_s(&self, q: f64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * self.total as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return Self::midpoint_s(i);
+            }
+        }
+        Self::midpoint_s(Self::BUCKETS - 1)
+    }
+
+    pub fn p50_s(&self) -> f64 {
+        self.quantile_s(0.50)
+    }
+
+    pub fn p99_s(&self) -> f64 {
+        self.quantile_s(0.99)
+    }
+
+    pub fn p999_s(&self) -> f64 {
+        self.quantile_s(0.999)
+    }
+
+    /// Fold another histogram in (per-shard collection).
+    pub fn merge(&mut self, other: &Self) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += b;
+        }
+        self.total += other.total;
+        self.sum += other.sum;
+    }
+}
+
 /// Interleaved-scheduler aggregates (queue wait, TTFT, aggregate decode
 /// throughput, and the overlap ratio — the fraction of load-wait hidden by
 /// other sequences' compute). Absent (None in [`RunReport`]) on the
@@ -245,6 +346,25 @@ pub struct SchedulerStats {
     /// admissions whose prefill errored: the request failed individually
     /// and serving kept running
     pub prefill_failures: u64,
+    /// per-request submit → first token distribution (tail metrics; the
+    /// `ttft` sum above stays for the legacy mean)
+    pub ttft_hist: LatencyHistogram,
+    /// per-token gap distribution within decode (2nd token onward)
+    pub itl_hist: LatencyHistogram,
+    /// completed requests whose TTFT met the configured SLO (all of them
+    /// when no SLO is set)
+    pub slo_met: u64,
+    /// decoded tokens belonging to SLO-met requests — the goodput numerator
+    pub slo_met_tokens: u64,
+    /// submissions rejected by bounded-queue admission control (ladder
+    /// stage 3 — the last resort)
+    pub admission_rejects: u64,
+    /// scheduler rounds spent with the precision-shed signal raised
+    /// (ladder stage 1: progressive floor forced to the low tier)
+    pub shed_precision_rounds: u64,
+    /// scheduler rounds spent with the prefetch-shed signal raised
+    /// (ladder stage 2: speculative link traffic dropped)
+    pub shed_prefetch_rounds: u64,
 }
 
 impl SchedulerStats {
@@ -285,6 +405,27 @@ impl SchedulerStats {
         }
     }
 
+    /// Goodput under the TTFT SLO: decoded tokens of SLO-met requests per
+    /// busy wall second. Equals `aggregate_decode_tps` when no SLO is
+    /// configured (every completion counts as met).
+    pub fn goodput_tps(&self) -> f64 {
+        let t = self.busy_wall.as_secs_f64();
+        if t <= 0.0 {
+            0.0
+        } else {
+            self.slo_met_tokens as f64 / t
+        }
+    }
+
+    /// Fraction of completed requests that met the TTFT SLO.
+    pub fn slo_attainment(&self) -> f64 {
+        if self.completed == 0 {
+            0.0
+        } else {
+            self.slo_met as f64 / self.completed as f64
+        }
+    }
+
     /// Mean sequences per batched decode step (1.0 when batching never
     /// engaged — occupancy > 1 is the "real FLOP sharing" signal).
     pub fn batch_occupancy(&self) -> f64 {
@@ -316,6 +457,19 @@ impl SchedulerStats {
             ("prefill_chunks_16", num(self.prefill_chunks[1] as f64)),
             ("prefill_chunks_1", num(self.prefill_chunks[2] as f64)),
             ("prefill_failures", num(self.prefill_failures as f64)),
+            // tail metrics + overload-control plane (serving key only; the
+            // FCFS report never carries a SchedulerStats)
+            ("ttft_p50_s", num(self.ttft_hist.p50_s())),
+            ("ttft_p99_s", num(self.ttft_hist.p99_s())),
+            ("ttft_p999_s", num(self.ttft_hist.p999_s())),
+            ("itl_p50_s", num(self.itl_hist.p50_s())),
+            ("itl_p99_s", num(self.itl_hist.p99_s())),
+            ("itl_p999_s", num(self.itl_hist.p999_s())),
+            ("goodput_tps", num(self.goodput_tps())),
+            ("slo_attainment", num(self.slo_attainment())),
+            ("admission_rejects", num(self.admission_rejects as f64)),
+            ("shed_precision_rounds", num(self.shed_precision_rounds as f64)),
+            ("shed_prefetch_rounds", num(self.shed_prefetch_rounds as f64)),
         ])
     }
 }
@@ -593,6 +747,103 @@ mod tests {
         assert_eq!(serving.get("peer_failovers").unwrap().as_f64().unwrap(), 1.0);
         assert_eq!(serving.get("remote_staged_hits").unwrap().as_f64().unwrap(), 5.0);
         assert_eq!(serving.get("disk_fetches").unwrap().as_f64().unwrap(), 3.0);
+    }
+
+    #[test]
+    fn histogram_quantiles_match_known_uniform() {
+        // 1..=1000 ms uniformly: p50 ≈ 500ms, p99 ≈ 990ms, p99.9 ≈ 1000ms,
+        // each within the bucket's ~±7.5% relative error.
+        let mut h = LatencyHistogram::default();
+        for ms in 1..=1000u64 {
+            h.record(Duration::from_millis(ms));
+        }
+        assert_eq!(h.count(), 1000);
+        let within = |got: f64, want: f64| (got - want).abs() / want < 0.08;
+        assert!(within(h.p50_s(), 0.500), "p50={} want ~0.5", h.p50_s());
+        assert!(within(h.p99_s(), 0.990), "p99={} want ~0.99", h.p99_s());
+        assert!(within(h.p999_s(), 0.999), "p99.9={} want ~1.0", h.p999_s());
+        assert!(within(h.mean_s(), 0.5005), "mean={} want ~0.5", h.mean_s());
+    }
+
+    #[test]
+    fn histogram_tail_separates_from_body() {
+        // 990 fast samples at 1ms + 10 slow at 2s: the mean hides the
+        // tail, the histogram does not — this is the satellite's point.
+        let mut h = LatencyHistogram::default();
+        for _ in 0..990 {
+            h.record(Duration::from_millis(1));
+        }
+        for _ in 0..10 {
+            h.record(Duration::from_secs(2));
+        }
+        assert!(h.p50_s() < 0.002, "p50={} should sit in the body", h.p50_s());
+        assert!(h.p999_s() > 1.8, "p99.9={} should sit in the tail", h.p999_s());
+        // nearest-rank: rank ceil(0.99*1000)=990 is still a fast sample
+        assert!(h.p99_s() < 0.002, "p99={} rank 990 is fast", h.p99_s());
+    }
+
+    #[test]
+    fn histogram_bounds_and_merge() {
+        let mut h = LatencyHistogram::default();
+        assert_eq!(h.p50_s(), 0.0);
+        h.record(Duration::ZERO); // underflow folds into bucket 0
+        h.record(Duration::from_secs(100_000)); // overflow folds into the last
+        assert_eq!(h.count(), 2);
+        assert!(h.quantile_s(0.0) <= LatencyHistogram::MIN_S * LatencyHistogram::GROWTH);
+        assert!(h.quantile_s(1.0) >= 3000.0);
+        let mut a = LatencyHistogram::default();
+        a.record(Duration::from_millis(10));
+        let mut b = LatencyHistogram::default();
+        b.record(Duration::from_millis(10));
+        b.record(Duration::from_millis(10));
+        a.merge(&b);
+        assert_eq!(a.count(), 3);
+        assert!((a.p50_s() - 0.010).abs() / 0.010 < 0.08);
+    }
+
+    #[test]
+    fn goodput_and_slo_math() {
+        let s = SchedulerStats {
+            completed: 10,
+            decoded_tokens: 100,
+            slo_met: 6,
+            slo_met_tokens: 60,
+            busy_wall: Duration::from_secs(2),
+            ..Default::default()
+        };
+        assert!((s.goodput_tps() - 30.0).abs() < 1e-9);
+        assert!((s.slo_attainment() - 0.6).abs() < 1e-9);
+        assert_eq!(SchedulerStats::default().goodput_tps(), 0.0);
+        assert_eq!(SchedulerStats::default().slo_attainment(), 0.0);
+    }
+
+    #[test]
+    fn tail_and_overload_stats_surface_only_in_serving_section() {
+        let mut rep = RunReport::default();
+        let fcfs = rep.to_json().to_string();
+        assert!(!fcfs.contains("ttft_p"), "FCFS report grew tail keys");
+        assert!(!fcfs.contains("goodput"), "FCFS report grew goodput keys");
+        assert!(!fcfs.contains("shed_"), "FCFS report grew ladder keys");
+        assert!(!fcfs.contains("admission"), "FCFS report grew admission keys");
+        let mut sch = SchedulerStats {
+            admission_rejects: 4,
+            shed_precision_rounds: 7,
+            shed_prefetch_rounds: 2,
+            slo_met_tokens: 50,
+            busy_wall: Duration::from_secs(1),
+            ..Default::default()
+        };
+        sch.ttft_hist.record(Duration::from_millis(100));
+        sch.itl_hist.record(Duration::from_millis(20));
+        rep.scheduler = Some(sch);
+        let j = Json::parse(&rep.to_json().to_string()).unwrap();
+        let serving = j.get("serving").unwrap();
+        assert!((serving.get("ttft_p99_s").unwrap().as_f64().unwrap() - 0.1).abs() < 0.01);
+        assert!((serving.get("itl_p50_s").unwrap().as_f64().unwrap() - 0.02).abs() < 0.002);
+        assert_eq!(serving.get("goodput_tps").unwrap().as_f64().unwrap(), 50.0);
+        assert_eq!(serving.get("admission_rejects").unwrap().as_f64().unwrap(), 4.0);
+        assert_eq!(serving.get("shed_precision_rounds").unwrap().as_f64().unwrap(), 7.0);
+        assert_eq!(serving.get("shed_prefetch_rounds").unwrap().as_f64().unwrap(), 2.0);
     }
 
     #[test]

@@ -419,6 +419,13 @@ pub struct ExpertResidency {
     /// the serving deadline policy reports TTFT urgency here; an urgent
     /// acquire lowers its precision floor to get usable bytes sooner
     deadline_urgent: AtomicBool,
+    /// overload ladder stage 1 (coordinator admission-queue depth / SLO
+    /// risk): while set, every hi-pool miss floors at the lo precision —
+    /// precision sheds before requests do
+    queue_pressure: AtomicBool,
+    /// overload ladder stage 2: drop speculative prefetch planning so the
+    /// link serves on-demand misses only
+    prefetch_shed: AtomicBool,
 }
 
 impl ExpertResidency {
@@ -491,6 +498,8 @@ impl ExpertResidency {
             pin: None,
             score_t1: 0.6,
             deadline_urgent: AtomicBool::new(false),
+            queue_pressure: AtomicBool::new(false),
+            prefetch_shed: AtomicBool::new(false),
         }
     }
 
@@ -526,6 +535,24 @@ impl ExpertResidency {
         self.deadline_urgent.store(urgent, Ordering::Relaxed);
     }
 
+    /// Overload ladder stage 1 (coordinator): while set, hi-pool misses
+    /// floor at the lo precision regardless of criticality or link state.
+    pub fn set_queue_pressure(&self, on: bool) {
+        self.queue_pressure.store(on, Ordering::Relaxed);
+    }
+
+    /// Overload ladder stage 2 (coordinator): while set,
+    /// [`Self::plan_prefetch`] cancels queued speculative work and plans
+    /// nothing new — the link belongs to on-demand misses.
+    pub fn set_prefetch_shed(&self, on: bool) {
+        self.prefetch_shed.store(on, Ordering::Relaxed);
+    }
+
+    /// Current stage-2 signal (test observability).
+    pub fn prefetch_shed_active(&self) -> bool {
+        self.prefetch_shed.load(Ordering::Relaxed)
+    }
+
     /// Plan the fetch for a hi-pool miss: the start (floor) precision and
     /// the background upgrade target, decided per acquire from
     ///
@@ -534,6 +561,10 @@ impl ExpertResidency {
     ///   expert whose contribution tolerates a briefly-lower tier;
     /// * **deadline slack** — TTFT urgency reported by the serving
     ///   deadline policy ([`Self::set_deadline_urgent`]);
+    /// * **overload pressure** — the coordinator's admission-queue ladder
+    ///   ([`Self::set_queue_pressure`]): a deep queue means every live
+    ///   request's TTFT is at risk, so precision sheds fleet-wide before
+    ///   any request is refused;
     /// * **link pressure** — busy lanes on the shared link arbiter: a miss
     ///   that would fair-share the link with other transfers reaches
     ///   usability far sooner at the lo byte count;
@@ -553,11 +584,12 @@ impl ExpertResidency {
             return (self.hi, None);
         }
         let urgent = self.deadline_urgent.load(Ordering::Relaxed);
+        let overloaded = self.queue_pressure.load(Ordering::Relaxed);
         let pressured = self.copier.active_lanes() >= 1;
         let tolerant = score > 0.5 * self.score_t1;
         let remote = self.store.has_remote()
             && matches!(self.store.tier_of(key, self.hi), FetchTier::Peer | FetchTier::Disk);
-        if urgent || pressured || tolerant || remote {
+        if urgent || overloaded || pressured || tolerant || remote {
             (self.lo, Some(self.hi))
         } else {
             (self.hi, None)
@@ -939,6 +971,13 @@ impl ExpertResidency {
         stacked: &[Vec<f32>],
     ) {
         self.loader.bump_prefetch_generation_for(scope);
+        // Overload ladder stage 2: the generation bump above has already
+        // invalidated this scope's queued speculative work; planning
+        // nothing new hands the whole link to on-demand misses until the
+        // coordinator clears the signal.
+        if self.prefetch_shed.load(Ordering::Relaxed) {
+            return;
+        }
         // Cross-tier staging: the DRAM→HBM prefetch below only looks one
         // uncovered layer ahead, but a PEER→DRAM pull pays a network
         // round-trip — far too long to hide in that window. So every

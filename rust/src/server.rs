@@ -9,12 +9,16 @@
 //!   single-threaded accept loop, one request at a time on the caller's
 //!   thread.
 //! * [`Server::serve_concurrent`] — continuous serving: an acceptor thread
-//!   plus one reader thread per connection feed the interleaved scheduler
-//!   through an mpsc event channel; the engine stays on the caller's
-//!   thread (PJRT state is not `Send`), and each completion is routed back
-//!   to its connection through a per-request response channel. While every
-//!   live sequence is stalled on the expert-load link, the scheduler parks
-//!   on the same channel and is woken by residency-ticket completion
+//!   plus one reader thread per connection (bounded by
+//!   `--max-conn-threads`; over-capacity connects get a one-line
+//!   `err_json` rejection instead of an unbounded thread spawn) feed the
+//!   interleaved scheduler through an mpsc event channel; the engine stays
+//!   on the caller's thread (PJRT state is not `Send`), and each
+//!   completion is routed back to its connection through a per-request
+//!   response channel. Requests the coordinator's bounded admission queue
+//!   refuses are answered immediately with the typed rejection. While
+//!   every live sequence is stalled on the expert-load link, the scheduler
+//!   parks on the same channel and is woken by residency-ticket completion
 //!   wakeups (`residency::Ticket::on_ready`) or by new connections — it
 //!   never spins.
 //!
@@ -25,7 +29,7 @@
 use std::collections::{HashMap, HashSet};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
@@ -34,9 +38,23 @@ use anyhow::Result;
 use crate::coordinator::{Coordinator, GenerationResult, Request, SchedulerMode};
 use crate::util::json::{num, obj, s, Json};
 
+/// Default per-connection read timeout (`--client-timeout-ms`).
+pub const DEFAULT_CLIENT_TIMEOUT: Duration = Duration::from_secs(30);
+/// Default cap on concurrent connection reader threads
+/// (`--max-conn-threads`). One OS thread per live connection is fine at
+/// this scale; an open-loop storm beyond it gets typed rejections instead
+/// of a thread bomb.
+pub const DEFAULT_MAX_CONN_THREADS: usize = 256;
+
 pub struct Server {
     listener: TcpListener,
     next_id: u64,
+    /// per-connection read timeout (both serving disciplines)
+    client_timeout: Duration,
+    /// bounded worker pool: max concurrent reader threads in
+    /// [`Self::serve_concurrent`]; over-capacity connects are answered
+    /// with an `err_json` rejection and closed by the acceptor
+    max_conn_threads: usize,
 }
 
 /// A parsed protocol line.
@@ -64,11 +82,29 @@ impl Server {
     /// Bind to `addr` (e.g. "127.0.0.1:7077"; port 0 picks a free port).
     pub fn bind(addr: &str) -> Result<Self> {
         let listener = TcpListener::bind(addr)?;
-        Ok(Self { listener, next_id: 1 })
+        Ok(Self {
+            listener,
+            next_id: 1,
+            client_timeout: DEFAULT_CLIENT_TIMEOUT,
+            max_conn_threads: DEFAULT_MAX_CONN_THREADS,
+        })
     }
 
     pub fn local_addr(&self) -> Result<std::net::SocketAddr> {
         Ok(self.listener.local_addr()?)
+    }
+
+    /// Per-connection read timeout (`--client-timeout-ms`): tight-deadline
+    /// overload tests set this to milliseconds so an idle client cannot
+    /// hold a reader thread for the legacy hard-coded 30 s.
+    pub fn set_client_timeout(&mut self, timeout: Duration) {
+        self.client_timeout = timeout.max(Duration::from_millis(1));
+    }
+
+    /// Cap concurrent connection reader threads (`--max-conn-threads`,
+    /// min 1). See [`DEFAULT_MAX_CONN_THREADS`].
+    pub fn set_max_conn_threads(&mut self, n: usize) {
+        self.max_conn_threads = n.max(1);
     }
 
     /// Serve forever (or until `max_conns` connections have been handled,
@@ -105,19 +141,36 @@ impl Server {
         let (tx, rx) = mpsc::channel::<Event>();
         let wake_tx = tx.clone();
         let ids = Arc::new(AtomicU64::new(self.next_id));
+        let timeout = self.client_timeout;
+        let thread_cap = self.max_conn_threads.max(1);
 
         let ids_acceptor = ids.clone();
+        // live reader-thread count: only the acceptor increments (so the
+        // check-then-increment below is race-free) and each reader
+        // decrements as it exits
+        let live_conns = Arc::new(AtomicUsize::new(0));
         let acceptor = std::thread::spawn(move || {
             let mut handled = 0usize;
             loop {
                 let Ok((stream, _peer)) = listener.accept() else { break };
-                let conn_tx = tx.clone();
-                let conn_ids = ids_acceptor.clone();
-                std::thread::spawn(move || {
-                    if let Err(e) = handle_conn(stream, conn_tx, conn_ids) {
-                        eprintln!("[server] connection error: {e:#}");
-                    }
-                });
+                if live_conns.load(Ordering::Acquire) >= thread_cap {
+                    // bounded worker pool: answer and close instead of
+                    // spawning an unbounded thread (or wedging the
+                    // acceptor behind a full pool)
+                    reject_conn(stream, thread_cap);
+                    let _ = tx.send(Event::ConnClosed);
+                } else {
+                    live_conns.fetch_add(1, Ordering::AcqRel);
+                    let conn_tx = tx.clone();
+                    let conn_ids = ids_acceptor.clone();
+                    let conn_live = live_conns.clone();
+                    std::thread::spawn(move || {
+                        if let Err(e) = handle_conn(stream, conn_tx, conn_ids, timeout) {
+                            eprintln!("[server] connection error: {e:#}");
+                        }
+                        conn_live.fetch_sub(1, Ordering::AcqRel);
+                    });
+                }
                 handled += 1;
                 if let Some(m) = max_conns {
                     if handled >= m {
@@ -263,7 +316,7 @@ impl Server {
     }
 
     fn handle(&mut self, coord: &mut Coordinator, stream: TcpStream) -> Result<()> {
-        stream.set_read_timeout(Some(Duration::from_secs(30)))?;
+        stream.set_read_timeout(Some(self.client_timeout))?;
         let mut reader = BufReader::new(stream.try_clone()?);
         let mut out = stream;
         let mut line = String::new();
@@ -333,8 +386,9 @@ fn handle_conn(
     stream: TcpStream,
     tx: mpsc::Sender<Event>,
     ids: Arc<AtomicU64>,
+    timeout: Duration,
 ) -> Result<()> {
-    stream.set_read_timeout(Some(Duration::from_secs(30)))?;
+    stream.set_read_timeout(Some(timeout))?;
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut out = stream;
     let mut line = String::new();
@@ -383,8 +437,18 @@ fn handle_event(
 ) {
     match ev {
         Event::Cmd(Command::Gen { req, resp }) => {
-            responders.insert(req.id, resp);
-            coord.submit(req);
+            // admission control: a full bounded queue answers the client's
+            // channel with a typed rejection right now — the overload
+            // ladder's last stage, after precision and prefetch shed
+            let id = req.id;
+            match coord.try_submit(req) {
+                Ok(()) => {
+                    responders.insert(id, resp);
+                }
+                Err(e) => {
+                    let _ = resp.send(err_json(&e.to_string()));
+                }
+            }
         }
         Event::Cmd(Command::Stats { resp }) => {
             coord.sync_report();
@@ -407,6 +471,18 @@ fn gen_json(r: &GenerationResult) -> Json {
 
 fn err_json(msg: &str) -> Json {
     obj(vec![("error", s(msg))])
+}
+
+/// Answer an over-capacity connect with a one-line rejection and close.
+/// Runs on the acceptor thread; the write is best-effort (a client that
+/// already vanished loses nothing).
+fn reject_conn(mut stream: TcpStream, cap: usize) {
+    let msg = err_json(&format!(
+        "server at connection capacity ({cap} reader threads); retry later"
+    ));
+    let _ = stream.write_all(msg.to_string().as_bytes());
+    let _ = stream.write_all(b"\n");
+    let _ = stream.flush();
 }
 
 /// Minimal client helper (examples/tests). Goes through the shared

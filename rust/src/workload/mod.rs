@@ -1,0 +1,424 @@
+//! Open-loop trace-driven workload generation: the production traffic
+//! harness behind the overload-control plane.
+//!
+//! Closed-loop load generators (N clients, each waiting for its response
+//! before sending the next request) self-throttle: when the server slows
+//! down, offered load drops with it, so overload behavior is unmeasurable
+//! by construction. This module is **open-loop**: arrivals follow a
+//! nonhomogeneous Poisson process whose rate the server cannot influence —
+//! requests keep arriving on schedule whether or not earlier ones
+//! finished, exactly like real user traffic. Combined with heavy-tailed
+//! (log-normal) prompt/output lengths and diurnal rate modulation, this is
+//! the workload shape that exposes queue growth, tail-latency blowups, and
+//! the degradation ladder's engagement points.
+//!
+//! * [`generate_trace`] — deterministic arrival trace from a
+//!   [`WorkloadConfig`] (Poisson thinning against the diurnal envelope,
+//!   log-normal lengths; same seed → same trace, so A/B runs of
+//!   ladder-on vs ladder-off see byte-identical offered load).
+//! * [`drive`] — replay a trace open-loop against a
+//!   [`Coordinator`] in interleaved mode: due arrivals are submitted via
+//!   [`Coordinator::try_submit`] (typed rejections are *counted*, never
+//!   retried — shed load is shed), the scheduler is stepped non-blocking,
+//!   and the whole run is bounded by a wall-clock deadline so a wedged
+//!   scheduler shows up as `hit_wall` instead of a hung test.
+
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::coordinator::{Coordinator, GenerationResult, Request};
+use crate::util::rng::Rng;
+
+/// Shape of the offered load. Defaults model a modest bursty service:
+/// 4 req/s mean with ±50% diurnal swing, ~32-token prompts and ~16-token
+/// outputs with a heavy log-normal tail.
+#[derive(Debug, Clone)]
+pub struct WorkloadConfig {
+    /// mean arrival rate (requests/second of *trace* time)
+    pub mean_rps: f64,
+    /// diurnal modulation amplitude in [0, 1): instantaneous rate is
+    /// `mean_rps * (1 + burstiness * sin(2π t / period))`
+    pub burstiness: f64,
+    /// diurnal period (seconds of trace time)
+    pub diurnal_period_s: f64,
+    /// trace length (seconds of trace time)
+    pub duration_s: f64,
+    /// log-normal prompt length: mean tokens and log-space sigma
+    pub prompt_mean: f64,
+    pub prompt_sigma: f64,
+    /// hard cap on sampled prompt tokens (model max_seq guards the rest)
+    pub prompt_max: usize,
+    /// log-normal output budget: mean tokens and log-space sigma
+    pub output_mean: f64,
+    pub output_sigma: f64,
+    pub output_max: usize,
+    pub seed: u64,
+}
+
+impl Default for WorkloadConfig {
+    fn default() -> Self {
+        Self {
+            mean_rps: 4.0,
+            burstiness: 0.5,
+            diurnal_period_s: 60.0,
+            duration_s: 30.0,
+            prompt_mean: 32.0,
+            prompt_sigma: 0.8,
+            prompt_max: 256,
+            output_mean: 16.0,
+            output_sigma: 0.6,
+            output_max: 128,
+            seed: 0x0B5E55ED,
+        }
+    }
+}
+
+impl WorkloadConfig {
+    pub fn validate(&self) -> Result<(), String> {
+        if self.mean_rps <= 0.0 || !self.mean_rps.is_finite() {
+            return Err("mean_rps must be > 0".into());
+        }
+        if !(0.0..1.0).contains(&self.burstiness) {
+            return Err("burstiness must be in [0,1)".into());
+        }
+        if self.diurnal_period_s <= 0.0 || self.duration_s <= 0.0 {
+            return Err("diurnal period and duration must be > 0".into());
+        }
+        if self.prompt_mean < 1.0 || self.output_mean < 1.0 {
+            return Err("mean lengths must be >= 1 token".into());
+        }
+        if self.prompt_sigma < 0.0 || self.output_sigma < 0.0 {
+            return Err("length sigmas must be >= 0".into());
+        }
+        if self.prompt_max == 0 || self.output_max == 0 {
+            return Err("length caps must be >= 1".into());
+        }
+        Ok(())
+    }
+
+    /// Peak instantaneous rate of the diurnal envelope (the thinning
+    /// majorant).
+    pub fn peak_rps(&self) -> f64 {
+        self.mean_rps * (1.0 + self.burstiness)
+    }
+}
+
+/// One arrival in the trace (times are trace-relative seconds).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArrivalEvent {
+    pub at_s: f64,
+    pub prompt_tokens: usize,
+    pub max_new_tokens: usize,
+}
+
+/// A generated arrival trace, sorted by time.
+#[derive(Debug, Clone, Default)]
+pub struct OpenLoopTrace {
+    pub events: Vec<ArrivalEvent>,
+}
+
+impl OpenLoopTrace {
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+}
+
+/// Log-normal sample with the requested *linear-space* mean: for
+/// `X = exp(mu + sigma N)`, `E[X] = exp(mu + sigma²/2)`, so
+/// `mu = ln(mean) − sigma²/2` keeps the configured mean while the sigma
+/// controls how heavy the tail is.
+fn lognormal(rng: &mut Rng, mean: f64, sigma: f64) -> f64 {
+    let mu = mean.ln() - sigma * sigma / 2.0;
+    (mu + sigma * rng.normal()).exp()
+}
+
+fn sample_len(rng: &mut Rng, mean: f64, sigma: f64, max: usize) -> usize {
+    (lognormal(rng, mean, sigma).round() as usize).clamp(1, max)
+}
+
+/// Generate a bursty open-loop arrival trace: a nonhomogeneous Poisson
+/// process (thinning against the [`WorkloadConfig::peak_rps`] majorant)
+/// under the diurnal rate envelope, with log-normal heavy-tailed
+/// prompt/output lengths per arrival. Deterministic in the seed.
+pub fn generate_trace(cfg: &WorkloadConfig) -> OpenLoopTrace {
+    let mut rng = Rng::new(cfg.seed);
+    let peak = cfg.peak_rps();
+    let mut events = Vec::new();
+    let mut t = 0.0f64;
+    loop {
+        // Exp(peak) inter-arrival for the homogeneous majorant process
+        let u: f64 = rng.f64();
+        t += -(1.0 - u).max(1e-300).ln() / peak;
+        if t >= cfg.duration_s {
+            break;
+        }
+        let rate = cfg.mean_rps
+            * (1.0
+                + cfg.burstiness
+                    * (2.0 * std::f64::consts::PI * t / cfg.diurnal_period_s).sin());
+        // thinning: keep with probability rate(t)/peak
+        if rng.f64() * peak <= rate {
+            events.push(ArrivalEvent {
+                at_s: t,
+                prompt_tokens: sample_len(
+                    &mut rng,
+                    cfg.prompt_mean,
+                    cfg.prompt_sigma,
+                    cfg.prompt_max,
+                ),
+                max_new_tokens: sample_len(
+                    &mut rng,
+                    cfg.output_mean,
+                    cfg.output_sigma,
+                    cfg.output_max,
+                ),
+            });
+        }
+    }
+    OpenLoopTrace { events }
+}
+
+/// A deterministic prompt string that the byte-level tokenizer encodes to
+/// exactly `tokens` ids (BOS + one id per byte): `tokens - 1` printable
+/// non-whitespace ASCII chars, varied by `salt` so requests differ.
+pub fn prompt_text(tokens: usize, salt: u64) -> String {
+    let n = tokens.saturating_sub(1);
+    (0..n).map(|i| (33 + ((salt as usize + i * 7) % 94)) as u8 as char).collect()
+}
+
+/// Replay knobs for [`drive`].
+#[derive(Debug, Clone)]
+pub struct DriveOptions {
+    /// wall seconds per trace second (< 1 compresses the trace so tests
+    /// replay a long diurnal window in milliseconds of wall time)
+    pub time_scale: f64,
+    /// hard wall-clock bound on the whole replay, drain included: a
+    /// wedged scheduler surfaces as [`DriveReport::hit_wall`], not a hang
+    pub max_wall: Duration,
+    /// request ids are `id_base + event index`
+    pub id_base: u64,
+    /// sampling temperature of every generated request (0.0 = greedy)
+    pub temperature: f32,
+}
+
+impl Default for DriveOptions {
+    fn default() -> Self {
+        Self {
+            time_scale: 1.0,
+            max_wall: Duration::from_secs(600),
+            id_base: 1,
+            temperature: 0.0,
+        }
+    }
+}
+
+/// What one open-loop replay did. `submitted + rejected` always equals
+/// the number of due arrivals, and every submitted request is accounted
+/// for as completed, failed, or still in flight when the wall hit.
+#[derive(Debug, Default)]
+pub struct DriveReport {
+    pub submitted: usize,
+    /// typed admission rejections (shed load; never retried)
+    pub rejected: usize,
+    /// per-request prefill failures surfaced by the coordinator
+    pub failed: usize,
+    /// completions, in completion order
+    pub results: Vec<GenerationResult>,
+    /// deepest admission-queue depth observed (bounded-queue invariant)
+    pub max_queue_depth: usize,
+    /// the wall-clock bound fired before the live set drained
+    pub hit_wall: bool,
+    /// wall time spent replaying
+    pub wall: Duration,
+}
+
+/// Replay `trace` open-loop against an interleaved coordinator: submit
+/// each arrival at its scheduled (scaled) time regardless of completions,
+/// step the scheduler without blocking, and drain after the last arrival.
+/// Never calls the blocking `step` — when every live sequence stalls on
+/// the link and no arrival is due, it parks briefly instead, exactly like
+/// the serving front-end's event loop.
+pub fn drive(
+    coord: &mut Coordinator,
+    trace: &OpenLoopTrace,
+    opts: &DriveOptions,
+) -> Result<DriveReport> {
+    let start = Instant::now();
+    let mut rep = DriveReport::default();
+    let mut next = 0usize;
+    while next < trace.events.len() || coord.has_work() {
+        if start.elapsed() >= opts.max_wall {
+            rep.hit_wall = true;
+            break;
+        }
+        let now_s = start.elapsed().as_secs_f64();
+        while next < trace.events.len()
+            && trace.events[next].at_s * opts.time_scale <= now_s
+        {
+            let ev = &trace.events[next];
+            let req = Request {
+                id: opts.id_base + next as u64,
+                prompt: prompt_text(ev.prompt_tokens, next as u64),
+                max_new_tokens: ev.max_new_tokens,
+                temperature: opts.temperature,
+            };
+            match coord.try_submit(req) {
+                Ok(()) => rep.submitted += 1,
+                Err(_) => rep.rejected += 1,
+            }
+            next += 1;
+        }
+        rep.max_queue_depth = rep.max_queue_depth.max(coord.pending());
+        rep.results.extend(coord.step_nonblocking()?);
+        rep.failed += coord.take_failures().len();
+        // park only when nothing is runnable: every live sequence stalled
+        // on the link, or the live set is empty and the next arrival is
+        // in the future
+        let idle = if coord.has_work() {
+            coord.all_stalled()
+        } else {
+            next < trace.events.len()
+        };
+        if idle {
+            let next_due = trace
+                .events
+                .get(next)
+                .map(|e| e.at_s * opts.time_scale - start.elapsed().as_secs_f64())
+                .unwrap_or(f64::INFINITY);
+            let park = next_due.clamp(0.0, 250e-6);
+            if park > 0.0 {
+                std::thread::sleep(Duration::from_secs_f64(park));
+            }
+        }
+    }
+    coord.sync_report();
+    rep.wall = start.elapsed();
+    Ok(rep)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_is_deterministic_in_seed() {
+        let cfg = WorkloadConfig::default();
+        let a = generate_trace(&cfg);
+        let b = generate_trace(&cfg);
+        assert!(!a.is_empty());
+        assert_eq!(a.events, b.events);
+        let c = generate_trace(&WorkloadConfig { seed: 7, ..cfg });
+        assert_ne!(a.events, c.events, "different seeds must differ");
+    }
+
+    #[test]
+    fn arrival_count_tracks_mean_rate() {
+        // thousands of arrivals: 50 rps * 60 s ≈ 3000 expected; Poisson
+        // sd ≈ 55, so ±15% is a ~8σ envelope — deterministic in practice
+        let cfg = WorkloadConfig {
+            mean_rps: 50.0,
+            duration_s: 60.0,
+            ..Default::default()
+        };
+        let tr = generate_trace(&cfg);
+        let expect = cfg.mean_rps * cfg.duration_s;
+        let got = tr.len() as f64;
+        assert!(
+            (got - expect).abs() / expect < 0.15,
+            "got {got} arrivals, expected ~{expect}"
+        );
+    }
+
+    #[test]
+    fn trace_is_sorted_and_bounded() {
+        let cfg = WorkloadConfig { mean_rps: 20.0, duration_s: 30.0, ..Default::default() };
+        let tr = generate_trace(&cfg);
+        let mut last = 0.0;
+        for ev in &tr.events {
+            assert!(ev.at_s >= last && ev.at_s < cfg.duration_s);
+            last = ev.at_s;
+            assert!((1..=cfg.prompt_max).contains(&ev.prompt_tokens));
+            assert!((1..=cfg.output_max).contains(&ev.max_new_tokens));
+        }
+    }
+
+    #[test]
+    fn lengths_are_heavy_tailed() {
+        let cfg = WorkloadConfig {
+            mean_rps: 100.0,
+            duration_s: 60.0,
+            prompt_sigma: 1.0,
+            prompt_max: 100_000,
+            ..Default::default()
+        };
+        let tr = generate_trace(&cfg);
+        let mut lens: Vec<usize> = tr.events.iter().map(|e| e.prompt_tokens).collect();
+        lens.sort_unstable();
+        let p50 = lens[lens.len() / 2];
+        let p99 = lens[lens.len() * 99 / 100];
+        // log-normal with sigma 1: p99/p50 = exp(2.33 * sigma) ≈ 10
+        assert!(
+            p99 as f64 / p50 as f64 > 3.0,
+            "tail not heavy: p50={p50} p99={p99}"
+        );
+        // the configured mean survives the sampling
+        let mean = lens.iter().sum::<usize>() as f64 / lens.len() as f64;
+        assert!(
+            (mean - cfg.prompt_mean).abs() / cfg.prompt_mean < 0.25,
+            "mean drifted: {mean} vs {}",
+            cfg.prompt_mean
+        );
+    }
+
+    #[test]
+    fn burstiness_modulates_local_rate() {
+        // with burstiness 0.9 and period = duration, the first half-period
+        // (rising sine) must carry measurably more arrivals than the
+        // second (falling below mean)
+        let cfg = WorkloadConfig {
+            mean_rps: 50.0,
+            burstiness: 0.9,
+            diurnal_period_s: 40.0,
+            duration_s: 40.0,
+            ..Default::default()
+        };
+        let tr = generate_trace(&cfg);
+        let half = cfg.duration_s / 2.0;
+        let first = tr.events.iter().filter(|e| e.at_s < half).count();
+        let second = tr.len() - first;
+        assert!(
+            first as f64 > 1.2 * second as f64,
+            "no burst: first={first} second={second}"
+        );
+    }
+
+    #[test]
+    fn prompt_text_encodes_to_exact_token_count() {
+        let tok = crate::tokenizer::Tokenizer::new();
+        for want in [1usize, 2, 17, 64] {
+            let text = prompt_text(want, 3);
+            assert_eq!(tok.encode(&text).len(), want, "tokens for {want}");
+        }
+    }
+
+    #[test]
+    fn config_validation_rejects_nonsense() {
+        WorkloadConfig::default().validate().unwrap();
+        let bad = |f: fn(&mut WorkloadConfig)| {
+            let mut c = WorkloadConfig::default();
+            f(&mut c);
+            c.validate().is_err()
+        };
+        assert!(bad(|c| c.mean_rps = 0.0));
+        assert!(bad(|c| c.burstiness = 1.0));
+        assert!(bad(|c| c.duration_s = 0.0));
+        assert!(bad(|c| c.prompt_mean = 0.5));
+        assert!(bad(|c| c.output_max = 0));
+        assert!(bad(|c| c.prompt_sigma = -0.1));
+    }
+}

@@ -1,0 +1,396 @@
+//! Overload-control regression suite: bounded admission, the graceful
+//! degradation ladder (shed precision → shed prefetch → reject), and the
+//! bounded connection pool — the server must degrade *accuracy* under
+//! pressure before it degrades *availability*.
+//!
+//! Everything here runs artifact-free on a synthesized model
+//! (`model::synth`) through the pure-Rust reference executor, like
+//! `chunked_prefill.rs`: the loader, cache, residency facade, scheduler,
+//! TCP front-end, and the open-loop workload harness are all the real
+//! ones, so this suite gates CI without the AOT compile step.
+//!
+//! Coverage:
+//! * admission control: a full bounded queue answers *every* client's
+//!   channel with the typed rejection — no request is silently dropped
+//!   and no connection hangs;
+//! * bounded worker pool: over-capacity connects get a one-line rejection
+//!   from the acceptor instead of an unbounded thread spawn, and the
+//!   configurable `--client-timeout-ms` reaps idle readers;
+//! * ladder ordering: at moderate overload the precision stage engages
+//!   (progressive low-first loads observed, shed rounds counted) while
+//!   prefetch shed and admission rejection stay at zero;
+//! * availability: a sustained ~2x open-loop overload sheds load through
+//!   typed rejections, keeps the queue at its bound, completes every
+//!   admitted request, and never wedges;
+//! * light load is undegraded: with the ladder armed but the queue far
+//!   from its thresholds, outputs are bit-identical to a no-ladder run
+//!   and every shed/reject counter stays zero;
+//! * the scheduler's stall query is O(1) in the live-set size
+//!   (`stall_scan_ops` counts exactly one op per call at any population).
+
+use std::io::{BufRead, BufReader, Read};
+use std::net::TcpStream;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Barrier};
+use std::time::{Duration, Instant};
+
+use hobbit::config::{HardwareConfig, ModelConfig, PolicyConfig};
+use hobbit::coordinator::{Coordinator, Request};
+use hobbit::engine::{Engine, EngineOptions};
+use hobbit::model::synth::{tiny_model_config, write_synth_model};
+use hobbit::server::{client_request, Server};
+use hobbit::workload::{self, DriveOptions, WorkloadConfig};
+
+const SEED: u64 = 0x0E71_0AD;
+
+fn big_cfg(name: &str) -> ModelConfig {
+    let mut cfg = tiny_model_config(name);
+    cfg.max_seq = 512;
+    cfg
+}
+
+fn synth_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("hobbit_overload_{name}"));
+    let cfg = big_cfg(name);
+    write_synth_model(&dir, &cfg, SEED).expect("synth model");
+    dir
+}
+
+fn fast_hw() -> HardwareConfig {
+    HardwareConfig {
+        name: "overload-fast".into(),
+        load_bw: 1e9,
+        load_latency: 0.0,
+        hi_cache_experts: 12,
+        lo_cache_experts: 12,
+        cpu_assist: false,
+        cpu_expert_time: 0.0,
+    }
+}
+
+/// Offload-bound: small cache + a link slow enough (~3ms per f32 expert)
+/// that service time dwarfs arrival spacing — the overload regime.
+fn offload_hw() -> HardwareConfig {
+    HardwareConfig {
+        name: "overload-slow".into(),
+        load_bw: 2e6,
+        load_latency: 0.0,
+        hi_cache_experts: 6,
+        lo_cache_experts: 6,
+        cpu_assist: false,
+        cpu_expert_time: 0.0,
+    }
+}
+
+/// Deterministic outputs: dynamic loading off + hi-pinned fetches, so the
+/// ladder A/B runs can be compared token-for-token.
+fn quality_policy() -> PolicyConfig {
+    PolicyConfig {
+        dynamic_loading: false,
+        prefetch_depth: 2,
+        pin_precision: Some(hobbit::Precision::F32),
+        ..PolicyConfig::default()
+    }
+}
+
+/// Progressive low-bits-first streaming on: the precision stage of the
+/// ladder has a lower tier to shed *to*.
+fn progressive_policy() -> PolicyConfig {
+    PolicyConfig { progressive: true, prefetch_depth: 2, ..PolicyConfig::default() }
+}
+
+fn mk_engine(name: &str, dir: &Path, hw: HardwareConfig, policy: PolicyConfig) -> Engine {
+    Engine::new_reference(dir, big_cfg(name), EngineOptions::new(hw, policy))
+        .expect("reference engine")
+}
+
+// ---------------------------------------------------------------------
+// Admission control answers every channel
+// ---------------------------------------------------------------------
+
+/// Six clients race GENs at a server whose admission queue holds one
+/// request (one more decoding). Every client must get a JSON answer —
+/// some the generation, at least one the typed "admission queue full"
+/// rejection — and the server must drain cleanly afterwards.
+#[test]
+fn admission_rejection_answers_every_channel() {
+    const CLIENTS: usize = 6;
+    let name = "admit";
+    let dir = synth_dir(name);
+    let eng = mk_engine(name, &dir, offload_hw(), quality_policy());
+    let mut coord = Coordinator::interleaved(eng);
+    coord.max_active = 1;
+    coord.overload.queue_limit = Some(1);
+
+    let mut server = Server::bind("127.0.0.1:0").unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+    let barrier = Arc::new(Barrier::new(CLIENTS));
+    let clients: Vec<_> = (0..CLIENTS)
+        .map(|i| {
+            let addr = addr.clone();
+            let barrier = barrier.clone();
+            std::thread::spawn(move || {
+                barrier.wait();
+                // short prompt + budget: the whole (possibly queued)
+                // generation must finish well inside the client
+                // transport's per-attempt read deadline, or the client
+                // would retry on a fresh connection and break the
+                // max_conns accounting
+                client_request(&addr, &format!("GEN 4 0 storm{i}"))
+                    .expect("every channel gets a JSON line")
+            })
+        })
+        .collect();
+
+    server.serve_concurrent(&mut coord, Some(CLIENTS)).unwrap();
+    let responses: Vec<_> = clients.into_iter().map(|c| c.join().unwrap()).collect();
+
+    let mut ok = 0usize;
+    let mut rejected = 0usize;
+    for r in &responses {
+        match r.get("error") {
+            None => {
+                // a success line always carries the tokens field (the
+                // count itself may be 0 if greedy decode hits EOS first)
+                assert!(r.get("tokens").unwrap().as_f64().unwrap() >= 0.0);
+                ok += 1;
+            }
+            Some(e) => {
+                let msg = e.as_str().unwrap();
+                assert!(
+                    msg.contains("admission queue full"),
+                    "unexpected error kind: {msg}"
+                );
+                rejected += 1;
+            }
+        }
+    }
+    assert_eq!(ok + rejected, CLIENTS, "every channel answered exactly once");
+    assert!(ok >= 1, "an empty queue must admit");
+    assert!(
+        rejected >= 1,
+        "six simultaneous requests against a 1-deep queue must shed"
+    );
+    assert_eq!(coord.scheduler_stats().admission_rejects, rejected as u64);
+    assert!(coord.take_failures().is_empty());
+}
+
+// ---------------------------------------------------------------------
+// Bounded connection pool + configurable client timeout
+// ---------------------------------------------------------------------
+
+/// With one reader-thread slot taken by a silent connection, the next
+/// connect is answered by the acceptor with the capacity rejection (no
+/// thread spawned, no hang), and the idle reader itself is reaped by the
+/// configured `--client-timeout-ms` instead of the legacy hard 30 s.
+#[test]
+fn conn_pool_rejects_over_capacity_and_reaps_idle_readers() {
+    let name = "pool";
+    let dir = synth_dir(name);
+    let eng = mk_engine(name, &dir, fast_hw(), quality_policy());
+    let mut coord = Coordinator::interleaved(eng);
+
+    let mut server = Server::bind("127.0.0.1:0").unwrap();
+    server.set_max_conn_threads(1);
+    server.set_client_timeout(Duration::from_millis(500));
+    let addr = server.local_addr().unwrap();
+
+    let client = std::thread::spawn(move || {
+        // A: occupies the single reader slot, sends nothing
+        let a = TcpStream::connect(addr).unwrap();
+        std::thread::sleep(Duration::from_millis(150));
+        // B: over capacity — the acceptor must answer and close. B never
+        // writes, so the rejection line can't be lost to an RST race.
+        let b = TcpStream::connect(addr).unwrap();
+        b.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        let mut line = String::new();
+        BufReader::new(b.try_clone().unwrap()).read_line(&mut line).unwrap();
+        assert!(
+            line.contains("connection capacity"),
+            "over-capacity connect must get the pool rejection: {line:?}"
+        );
+        // A: the 500ms read timeout must reap the idle reader — observed
+        // as A's socket closing (EOF or reset) well before the old 30 s
+        a.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        let t0 = Instant::now();
+        let mut buf = [0u8; 64];
+        let reaped = matches!(a.try_clone().unwrap().read(&mut buf), Ok(0) | Err(_));
+        assert!(reaped, "idle connection was not closed");
+        assert!(
+            t0.elapsed() < Duration::from_secs(8),
+            "idle reader outlived the configured client timeout"
+        );
+    });
+
+    // two accepted connections: A (reader) + B (rejected by the acceptor)
+    server.serve_concurrent(&mut coord, Some(2)).unwrap();
+    client.join().unwrap();
+}
+
+// ---------------------------------------------------------------------
+// Ladder ordering: precision sheds first, requests are not refused
+// ---------------------------------------------------------------------
+
+/// Moderate overload (queue well past the precision threshold, short of
+/// the prefetch one): the coordinator must publish queue pressure so
+/// hi-pool misses stream low-bits-first, while prefetch shedding and
+/// admission rejection never fire — and every request still completes.
+#[test]
+fn precision_ladder_engages_before_shedding_requests() {
+    let name = "ladder";
+    let dir = synth_dir(name);
+    let eng = mk_engine(name, &dir, offload_hw(), progressive_policy());
+    let mut coord = Coordinator::interleaved(eng);
+    coord.max_active = 2;
+    coord.overload.queue_limit = Some(8);
+    coord.overload.precision_frac = 0.25;
+    coord.overload.prefetch_frac = 0.95;
+    coord.overload.validate().unwrap();
+
+    const REQS: usize = 8;
+    for i in 0..REQS {
+        let req = Request::new(i as u64 + 1, workload::prompt_text(24, i as u64), 4);
+        coord.try_submit(req).expect("under the queue limit: no rejection");
+    }
+    let results = coord.drain().expect("drain");
+    assert_eq!(results.len(), REQS, "every queued request completes");
+    assert!(coord.take_failures().is_empty());
+
+    let sch = coord.scheduler_stats();
+    assert!(
+        sch.shed_precision_rounds > 0,
+        "a 6/8-deep queue (>= 25% fill) must engage the precision stage"
+    );
+    assert_eq!(
+        sch.shed_prefetch_rounds, 0,
+        "fill stayed below the prefetch threshold: stage 2 must not fire"
+    );
+    assert_eq!(
+        sch.admission_rejects, 0,
+        "the ladder must absorb moderate overload without refusing anyone"
+    );
+    let loads = coord.engine.residency.loader_stats();
+    assert!(
+        loads.progressive_loads > 0,
+        "precision shed must materialize as low-bits-first streamed misses"
+    );
+}
+
+// ---------------------------------------------------------------------
+// Availability under sustained open-loop overload
+// ---------------------------------------------------------------------
+
+/// An open-loop trace offering far more than the engine can serve, against
+/// a 2-deep admission queue: the server sheds through typed rejections,
+/// the queue never exceeds its bound, every admitted request completes,
+/// and the replay drains instead of wedging.
+#[test]
+fn availability_under_sustained_overload() {
+    let name = "avail";
+    let dir = synth_dir(name);
+    let eng = mk_engine(name, &dir, offload_hw(), progressive_policy());
+    let mut coord = Coordinator::interleaved(eng);
+    coord.max_active = 2;
+    coord.overload.queue_limit = Some(2);
+
+    let cfg = WorkloadConfig {
+        mean_rps: 60.0,
+        burstiness: 0.3,
+        diurnal_period_s: 2.0,
+        duration_s: 1.0,
+        prompt_mean: 6.0,
+        prompt_sigma: 0.4,
+        prompt_max: 16,
+        output_mean: 3.0,
+        output_sigma: 0.3,
+        output_max: 8,
+        seed: 0xde5_10ad,
+    };
+    cfg.validate().unwrap();
+    let trace = workload::generate_trace(&cfg);
+    assert!(trace.len() >= 30, "the trace must actually offer overload");
+
+    let opts = DriveOptions { max_wall: Duration::from_secs(120), ..Default::default() };
+    let rep = workload::drive(&mut coord, &trace, &opts).expect("drive");
+
+    assert!(!rep.hit_wall, "overload must not wedge the scheduler");
+    assert_eq!(rep.submitted + rep.rejected, trace.len(), "every arrival accounted");
+    assert!(rep.rejected >= 1, "sustained overload against a 2-deep queue must shed");
+    assert_eq!(rep.failed, 0, "admitted requests must not fail under load");
+    assert_eq!(rep.results.len(), rep.submitted, "every admitted request completes");
+    assert!(rep.max_queue_depth <= 2, "the admission bound held");
+    assert_eq!(coord.scheduler_stats().admission_rejects, rep.rejected as u64);
+}
+
+// ---------------------------------------------------------------------
+// Light load: the armed ladder is bit-inert
+// ---------------------------------------------------------------------
+
+/// With the ladder armed but the queue far below every threshold, tokens
+/// must be bit-identical to a ladder-off run and all overload counters
+/// zero — degradation is something overload *causes*, not a standing tax.
+#[test]
+fn light_load_is_bit_identical_to_no_ladder() {
+    let name = "light";
+    let dir = synth_dir(name);
+    let prompts: Vec<String> = (0..3).map(|i| workload::prompt_text(20, i)).collect();
+
+    let run = |ladder: bool| {
+        let eng = mk_engine(name, &dir, offload_hw(), quality_policy());
+        let mut coord = Coordinator::interleaved(eng);
+        coord.overload.queue_limit = Some(64);
+        coord.overload.ladder = ladder;
+        for (i, p) in prompts.iter().enumerate() {
+            coord.try_submit(Request::new(i as u64 + 1, p.clone(), 5)).unwrap();
+        }
+        let mut results = coord.drain().expect("drain");
+        assert!(coord.take_failures().is_empty());
+        results.sort_by_key(|r| r.id);
+        let sch = coord.scheduler_stats();
+        assert_eq!(sch.admission_rejects, 0);
+        assert_eq!(sch.shed_precision_rounds, 0, "light load must not shed (ladder={ladder})");
+        assert_eq!(sch.shed_prefetch_rounds, 0);
+        results.into_iter().map(|r| (r.id, r.tokens)).collect::<Vec<_>>()
+    };
+
+    let with_ladder = run(true);
+    let without = run(false);
+    assert_eq!(with_ladder, without, "armed ladder changed light-load outputs");
+}
+
+// ---------------------------------------------------------------------
+// O(1) stall query at any live population
+// ---------------------------------------------------------------------
+
+/// `all_stalled` must cost exactly one scan op per call whether 2 or 12
+/// sequences are live — the incrementally-maintained counts, observable
+/// through `stall_scan_ops`.
+#[test]
+fn stall_query_cost_is_flat_in_live_set_size() {
+    let cost_at = |n: usize| {
+        let name = format!("scan{n}");
+        let dir = synth_dir(&name);
+        let eng = mk_engine(&name, &dir, offload_hw(), quality_policy());
+        let mut coord = Coordinator::interleaved(eng);
+        coord.max_active = 16;
+        for i in 0..n {
+            coord.submit(Request::new(i as u64 + 1, workload::prompt_text(40, i as u64), 3));
+        }
+        // a few non-blocking rounds: admission + first prefill slices
+        for _ in 0..4 {
+            let _ = coord.step_nonblocking().expect("step");
+        }
+        assert_eq!(coord.pending(), 0, "all {n} sequences admitted");
+        let before = coord.stall_scan_ops();
+        for _ in 0..1000 {
+            let _ = coord.all_stalled();
+        }
+        let ops = coord.stall_scan_ops() - before;
+        let _ = coord.abort_all();
+        ops
+    };
+    let small = cost_at(2);
+    let large = cost_at(12);
+    assert_eq!(small, 1000, "2 live sequences: one op per query");
+    assert_eq!(large, 1000, "12 live sequences: one op per query, not O(n)");
+}
