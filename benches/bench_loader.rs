@@ -85,8 +85,9 @@ fn misprediction_scenario() {
     println!(
         "== misprediction penalty: on-demand miss behind a just-started wrong prefetch =="
     );
-    let mono = mk_rig(BW, IoConfig { lanes: 1, chunk_bytes: usize::MAX }, "mono");
-    let pipe = mk_rig(BW, IoConfig { lanes: 1, chunk_bytes: 1024 }, "pipe");
+    let mono =
+        mk_rig(BW, IoConfig { lanes: 1, chunk_bytes: usize::MAX, ..IoConfig::default() }, "mono");
+    let pipe = mk_rig(BW, IoConfig { lanes: 1, chunk_bytes: 1024, ..IoConfig::default() }, "pipe");
     let (mono_wait, mono_drain) = mispredict_once(&mono, transfer);
     let (pipe_wait, pipe_drain) = mispredict_once(&pipe, transfer);
     let chunk_t = 1024.0 / BW;

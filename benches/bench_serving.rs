@@ -277,7 +277,7 @@ fn measured_ttfu(pin: Precision) -> f64 {
         predictor,
         Precision::F32,
         Precision::Q8,
-        IoConfig { lanes: 2, chunk_bytes: 1024 },
+        IoConfig { lanes: 2, chunk_bytes: 1024, ..IoConfig::default() },
     )
     .with_precision_mode(Some(pin), false, 0.6);
     let mut total = 0.0;

@@ -9,6 +9,9 @@ byte-exact low-precision versions to fetch.
 Layout under artifacts/weights/<model>/:
 
   weights.json               manifest: every tensor's file, shape, dtype
+  manifest.json              model shape + per-record FNV-1a64 checksums
+                             (the "integrity" section rust's
+                             ExpertStore::load / verify-weights check)
   nonexpert.bin              all non-expert tensors, concatenated f32 LE
   experts_f32.bin            [layer][expert] (w1 | w3 | w2) f32 LE
   experts_q8.bin / _q4 / _q2 per-expert packed codes + scales, concatenated
@@ -27,6 +30,20 @@ import numpy as np
 
 from .configs import MODELS, PRECISIONS
 from . import quantize
+
+
+FNV_OFFSET = 0xCBF29CE484222325
+FNV_PRIME = 0x00000100000001B3
+_U64 = (1 << 64) - 1
+
+
+def fnv1a64(data: bytes) -> int:
+    """FNV-1a 64 over raw record bytes — must match rust
+    util/checksum.rs::fnv1a64 bit for bit (python/tests cross-check)."""
+    h = FNV_OFFSET
+    for b in data:
+        h = ((h ^ b) * FNV_PRIME) & _U64
+    return h
 
 
 def _init(rng, shape, fan_in):
@@ -96,16 +113,19 @@ def export_model(cfg, out_root, seed):
     files = {fmt: open(os.path.join(out_dir, f"experts_{fmt}.bin"), "wb")
              for fmt in PRECISIONS}
     rec_bytes = {fmt: None for fmt in PRECISIONS}
+    checksums = {fmt: [] for fmt in PRECISIONS}
     for li in range(cfg.n_layers):
         for ei in range(cfg.n_experts):
             mats = expert_tensors(cfg, rng, li, ei)
             f32_rec = b"".join(w.tobytes() for _, w in mats)
             files["f32"].write(f32_rec)
             rec_bytes["f32"] = len(f32_rec)
+            checksums["f32"].append(fnv1a64(f32_rec))
             for fmt in PRECISIONS[1:]:
                 rec = quantized_record(cfg, mats, fmt)
                 files[fmt].write(rec)
                 rec_bytes[fmt] = len(rec)
+                checksums[fmt].append(fnv1a64(rec))
     for f in files.values():
         f.close()
     manifest["experts"] = {
@@ -116,6 +136,33 @@ def export_model(cfg, out_root, seed):
 
     with open(os.path.join(out_dir, "weights.json"), "w") as f:
         json.dump(manifest, f, indent=1)
+
+    # store manifest: model shape + per-record checksums, the exact shape
+    # rust's model/synth.rs::write_store_manifest emits (16 lowercase hex
+    # digits — u64 does not survive JSON's f64, strings do)
+    store_manifest = {
+        "model": {
+            "name": cfg.name,
+            "n_layers": cfg.n_layers,
+            "d_model": cfg.d_model,
+            "d_ff": cfg.d_ff,
+            "n_experts": cfg.n_experts,
+            "top_k": cfg.top_k,
+            "n_heads": cfg.n_heads,
+            "n_kv_heads": cfg.n_kv_heads,
+            "vocab": cfg.vocab,
+            "max_seq": cfg.max_seq,
+            "quant_group": cfg.quant_group,
+            "expert_bytes": {p: cfg.expert_bytes(p) for p in PRECISIONS},
+        },
+        "integrity": {
+            "algo": "fnv1a64",
+            "records": {fmt: [f"{s:016x}" for s in sums]
+                        for fmt, sums in checksums.items()},
+        },
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(store_manifest, f, indent=1)
     total = sum(rec_bytes[p] for p in PRECISIONS) * cfg.n_layers * cfg.n_experts
     print(f"  [{cfg.name}] exported {cfg.n_layers}x{cfg.n_experts} experts, "
           f"{total/1e6:.0f} MB expert data, {off/1e6:.1f} MB non-expert "

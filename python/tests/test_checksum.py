@@ -1,0 +1,49 @@
+"""The python FNV-1a64 mirror must match rust util/checksum.rs bit for
+bit (same standard test vectors), and the exported manifest.json must
+carry checksums that re-verify against the record files on disk."""
+
+import json
+import os
+
+import pytest
+
+from compile import gen_weights
+from compile.configs import MIXTRAL_TINY, PRECISIONS
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_fnv1a64_known_vectors():
+    # the same standard vectors rust/src/util/checksum.rs pins
+    assert gen_weights.fnv1a64(b"") == 0xCBF29CE484222325
+    assert gen_weights.fnv1a64(b"a") == 0xAF63DC4C8601EC8C
+    assert gen_weights.fnv1a64(b"foobar") == 0x85944171F73967E8
+
+
+def test_fnv1a64_detects_a_bit_flip():
+    rec = bytes(i % 251 for i in range(4096))
+    flipped = bytearray(rec)
+    flipped[1234] ^= 0x10
+    assert gen_weights.fnv1a64(rec) != gen_weights.fnv1a64(bytes(flipped))
+
+
+def test_exported_manifest_checksums_reverify():
+    cfg = MIXTRAL_TINY
+    wdir = os.path.join(ART, "weights", cfg.name)
+    path = os.path.join(wdir, "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("weights not exported")
+    with open(path) as f:
+        man = json.load(f)
+    assert man["integrity"]["algo"] == "fnv1a64"
+    n = cfg.n_layers * cfg.n_experts
+    for fmt in PRECISIONS:
+        sums = man["integrity"]["records"][fmt]
+        assert len(sums) == n
+        rb = cfg.expert_bytes(fmt)
+        with open(os.path.join(wdir, f"experts_{fmt}.bin"), "rb") as f:
+            blob = f.read()
+        assert len(blob) == rb * n
+        for i in range(n):
+            got = gen_weights.fnv1a64(blob[i * rb:(i + 1) * rb])
+            assert f"{got:016x}" == sums[i], f"{fmt} record {i}"

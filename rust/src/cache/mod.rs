@@ -236,6 +236,30 @@ pub struct Reservation {
     pub evicted: Option<ExpertKey>,
 }
 
+/// Outcome of a checksum-verified commit ([`CacheManager::commit_tier_verified`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CommitOutcome {
+    /// bytes verified (or no checksum supplied); slot is Ready
+    Committed,
+    /// bytes failed verification; slot was scrubbed and freed — the
+    /// quarantine path: corrupt bytes are never served
+    Corrupt,
+}
+
+/// Outcome of a checksum-verified in-place upgrade
+/// ([`CacheManager::commit_upgrade_verified`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum UpgradeCommit {
+    /// staged record verified and landed; slot now holds the wider tier
+    Committed,
+    /// slot was evicted or refilled since staging — benign abort, the
+    /// resident narrower tier stays valid
+    SlotMovedOn,
+    /// staged record failed verification (torn upgrade); nothing was
+    /// copied — the resident narrower tier stays valid
+    Corrupt,
+}
+
 /// The Multidimensional Cache Manager (Fig 12).
 ///
 /// Sequence records come in two flavours: `records` is the *merged* view
@@ -430,6 +454,68 @@ impl CacheManager {
             debug_assert_eq!(p.state[slot], SlotState::Loading(key));
             p.state[slot] = SlotState::Ready(key);
             p.tiers[slot] = tier;
+        }
+    }
+
+    /// [`Self::commit_tier`] with commit-time checksum verification: the
+    /// tier-crossing boundary where a chunked (possibly preempted-and-
+    /// resumed) transfer becomes servable. `expected` is the record's
+    /// `(fnv1a64, byte length)`; verification reads the slot's first
+    /// `len` bytes under the slot lock, after every chunk has landed — so
+    /// a bit flipped in *any* chunk of the transfer is caught here. On
+    /// mismatch the slot is quarantined: scrubbed, freed, never Ready —
+    /// the caller re-acquires from a clean source. `None` skips
+    /// verification (records with no known checksum, e.g. sim fills).
+    pub fn commit_tier_verified(
+        &mut self,
+        key: ExpertKey,
+        pool: Pool,
+        tier: Option<Precision>,
+        expected: Option<(u64, usize)>,
+    ) -> CommitOutcome {
+        if let Some((sum, len)) = expected {
+            let p = self.pool_mut(pool);
+            if let Some(&slot) = p.map.get(&key) {
+                if p.state[slot] == SlotState::Loading(key) {
+                    let mut buf = p.buffers[slot].lock().unwrap();
+                    let n = len.min(buf.len());
+                    if n != len || crate::util::checksum::fnv1a64(&buf[..n]) != sum {
+                        buf.fill(0);
+                        drop(buf);
+                        p.state[slot] = SlotState::Free;
+                        p.tiers[slot] = None;
+                        p.map.remove(&key);
+                        return CommitOutcome::Corrupt;
+                    }
+                }
+            }
+        }
+        self.commit_tier(key, pool, tier);
+        CommitOutcome::Committed
+    }
+
+    /// [`Self::commit_upgrade`] with checksum verification of the staged
+    /// record *before* any byte touches the live slot — a torn upgrade
+    /// must never replace valid narrow-tier bytes with corrupt wide-tier
+    /// ones. The lo record already resident and the hi record staged here
+    /// are verified independently (each against its own tier's checksum).
+    pub fn commit_upgrade_verified(
+        &mut self,
+        key: ExpertKey,
+        pool: Pool,
+        tier: Option<Precision>,
+        record: &[u8],
+        expected: Option<u64>,
+    ) -> UpgradeCommit {
+        if let Some(sum) = expected {
+            if crate::util::checksum::fnv1a64(record) != sum {
+                return UpgradeCommit::Corrupt;
+            }
+        }
+        if self.commit_upgrade(key, pool, tier, record) {
+            UpgradeCommit::Committed
+        } else {
+            UpgradeCommit::SlotMovedOn
         }
     }
 
@@ -711,6 +797,67 @@ mod tests {
         m.commit(k(0, 1), Pool::Hi);
         // reserve reset the tier for the new occupant
         assert_eq!(m.hi.resident_tier(k(0, 1)), Some(None));
+    }
+
+    #[test]
+    fn verified_commit_quarantines_corrupt_slots() {
+        use crate::util::checksum::fnv1a64;
+        let mut m = mgr(1, 0);
+        let good = [0x5au8; 8];
+        let sum = fnv1a64(&good);
+        // clean landing commits
+        let r = m.reserve(k(0, 0), Pool::Hi, 0).unwrap();
+        r.buffer.lock().unwrap().copy_from_slice(&good);
+        let out = m.commit_tier_verified(k(0, 0), Pool::Hi, None, Some((sum, 8)));
+        assert_eq!(out, CommitOutcome::Committed);
+        assert!(m.hi.contains_ready(k(0, 0)));
+        // corrupt landing: slot scrubbed, freed, never Ready
+        let r = m.reserve(k(0, 1), Pool::Hi, 0).unwrap();
+        assert_eq!(r.evicted, Some(k(0, 0)));
+        let mut bad = good;
+        bad[3] ^= 0x04; // one flipped bit
+        r.buffer.lock().unwrap().copy_from_slice(&bad);
+        let out = m.commit_tier_verified(k(0, 1), Pool::Hi, None, Some((sum, 8)));
+        assert_eq!(out, CommitOutcome::Corrupt);
+        assert!(!m.hi.contains_ready(k(0, 1)));
+        assert!(!m.hi.is_loading(k(0, 1)));
+        assert_eq!(&*r.buffer.lock().unwrap(), &[0u8; 8], "quarantined slot scrubbed");
+        // the freed slot is immediately reusable
+        assert!(m.reserve(k(0, 2), Pool::Hi, 0).is_some());
+        // a record longer than its slot can never verify
+        let mut m = mgr(1, 0);
+        m.reserve(k(0, 0), Pool::Hi, 0).unwrap();
+        let out = m.commit_tier_verified(k(0, 0), Pool::Hi, None, Some((sum, 9)));
+        assert_eq!(out, CommitOutcome::Corrupt);
+    }
+
+    #[test]
+    fn verified_upgrade_refuses_torn_records() {
+        use crate::util::checksum::fnv1a64;
+        let mut m = mgr(1, 0);
+        let lo = [0x11u8; 4];
+        let hi = [0x22u8; 8];
+        let r = m.reserve(k(0, 0), Pool::Hi, 0).unwrap();
+        r.buffer.lock().unwrap()[..4].copy_from_slice(&lo);
+        m.commit_tier(k(0, 0), Pool::Hi, Some(Precision::Q8));
+        // torn staged record: nothing copied, lo tier stays resident
+        let mut torn = hi;
+        torn[5] ^= 0x80;
+        let out =
+            m.commit_upgrade_verified(k(0, 0), Pool::Hi, None, &torn, Some(fnv1a64(&hi)));
+        assert_eq!(out, UpgradeCommit::Corrupt);
+        assert_eq!(m.hi.resident_tier(k(0, 0)), Some(Some(Precision::Q8)));
+        assert_eq!(&r.buffer.lock().unwrap()[..4], &lo[..], "lo bytes untouched");
+        // intact staged record lands
+        let out = m.commit_upgrade_verified(k(0, 0), Pool::Hi, None, &hi, Some(fnv1a64(&hi)));
+        assert_eq!(out, UpgradeCommit::Committed);
+        assert_eq!(m.hi.resident_tier(k(0, 0)), Some(None));
+        assert_eq!(&*r.buffer.lock().unwrap(), &hi[..]);
+        // evicted slot reports the benign abort, not corruption
+        let r2 = m.reserve(k(0, 1), Pool::Hi, 0).unwrap();
+        assert_eq!(r2.evicted, Some(k(0, 0)));
+        let out = m.commit_upgrade_verified(k(0, 0), Pool::Hi, None, &hi, Some(fnv1a64(&hi)));
+        assert_eq!(out, UpgradeCommit::SlotMovedOn);
     }
 
     #[test]

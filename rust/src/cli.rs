@@ -114,9 +114,20 @@ COMMANDS:
               --weights DIR (weight directory with manifest.json)
               --shard SPEC [all]  --addr 127.0.0.1:0
               --net-chunk-bytes N (streaming chunk size [65536])
+              --fault-plan SEED:SPEC (serve deliberately corrupted or
+              truncated replies, for integrity testing)
   generate    run one generation from the CLI
               --model M --artifacts DIR --prompt TEXT --max-new N --temp T
               --hardware H --no-dynamic --no-prefetch --policy P
+              --fault-plan SEED:SPEC (deterministic fault injection at the
+              tier boundaries: flip@disk#N, flip@peer#N, trunc@peer#N,
+              flip@xfer#N, stall@xfer#N:MS, tear@upgrade#N; '#*' = every
+              occurrence. Corruption is detected, quarantined, and healed
+              by re-fetch — logits stay byte-identical)
+  verify-weights
+              scan a weight directory's expert records against the
+              manifest checksums (exit 1 on any mismatch)
+              --weights DIR  --verbose (print PASS lines too)
   figures     regenerate the paper's tables/figures
               --fig 3a|3b|5|7|9|10|11|14|15|16|17a|17b|18a|18b|table3 | --all
               --artifacts DIR --model M

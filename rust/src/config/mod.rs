@@ -4,8 +4,10 @@
 //! Everything is JSON-loadable so experiments are reproducible from files;
 //! presets mirror the paper's three testbeds (Table 2).
 
+use std::sync::Arc;
 use std::time::Duration;
 
+use crate::faults::FaultPlan;
 use crate::remote::transport::RetryPolicy;
 use crate::remote::ShardSpec;
 use crate::util::json::Json;
@@ -192,14 +194,21 @@ pub struct IoConfig {
     pub lanes: usize,
     /// preemption granularity: bytes copied between checkpoints (>= 1)
     pub chunk_bytes: usize,
+    /// wedged-ticket watchdog: a residency wait blocked longer than this
+    /// (milliseconds) on a still-unfinished load re-submits the fetch and
+    /// counts a `watchdog_recovery` — a stalled I/O lane degrades latency,
+    /// never availability. 0 disables the watchdog.
+    pub watchdog_ms: u64,
 }
 
 impl Default for IoConfig {
     /// The chunked pipeline: 2 lanes, 256 KiB chunks — an on-demand miss
     /// behind a mispredicted in-flight prefetch waits at most one chunk
-    /// instead of the whole expert (Fig 9's penalty, removed).
+    /// instead of the whole expert (Fig 9's penalty, removed). The
+    /// watchdog bound is far above any healthy transfer time for the
+    /// scaled link models, so it only fires on genuinely wedged lanes.
     fn default() -> Self {
-        Self { lanes: 2, chunk_bytes: 256 * 1024 }
+        Self { lanes: 2, chunk_bytes: 256 * 1024, watchdog_ms: 5000 }
     }
 }
 
@@ -254,6 +263,9 @@ pub struct RemoteConfig {
     pub retry: RetryPolicy,
     /// circuit-breaker cooldown after a peer exhausts its retries
     pub cooldown: Duration,
+    /// deterministic fault injection for the remote/disk tiers
+    /// (`--fault-plan`); None in production
+    pub faults: Option<Arc<FaultPlan>>,
 }
 
 impl Default for RemoteConfig {
@@ -267,6 +279,7 @@ impl Default for RemoteConfig {
             chunk_bytes: 64 * 1024,
             retry: RetryPolicy::default(),
             cooldown: Duration::from_secs(2),
+            faults: None,
         }
     }
 }
@@ -595,10 +608,17 @@ mod tests {
         let io = IoConfig::default();
         assert_eq!(io.lanes, 2);
         assert_eq!(io.chunk_bytes, 256 * 1024);
+        assert!(io.watchdog_ms > 0, "watchdog on by default");
         io.validate().unwrap();
         assert_eq!(IoConfig::single_lane().lanes, 1);
-        assert!(IoConfig { lanes: 0, chunk_bytes: 1 }.validate().is_err());
-        assert!(IoConfig { lanes: 1, chunk_bytes: 0 }.validate().is_err());
+        assert!(IoConfig { lanes: 0, chunk_bytes: 1, ..IoConfig::default() }
+            .validate()
+            .is_err());
+        assert!(IoConfig { lanes: 1, chunk_bytes: 0, ..IoConfig::default() }
+            .validate()
+            .is_err());
+        // watchdog_ms 0 is the explicit off switch, always valid
+        IoConfig { watchdog_ms: 0, ..IoConfig::default() }.validate().unwrap();
     }
 
     #[test]

@@ -113,6 +113,10 @@ pub struct EngineOptions {
     /// local DRAM shard, the peer shard servers, and the network link
     /// budget. None = every expert local (the single-node hierarchy).
     pub remote: Option<RemoteConfig>,
+    /// deterministic fault injection (`--fault-plan seed:spec`): seeded
+    /// corruption/stall/tear events at the tier boundaries, for exercising
+    /// the integrity layer. None in production.
+    pub faults: Option<Arc<crate::faults::FaultPlan>>,
 }
 
 impl EngineOptions {
@@ -125,6 +129,7 @@ impl EngineOptions {
             use_fast_ffn: true,
             io: IoConfig::default(),
             remote: None,
+            faults: None,
         }
     }
 }
@@ -571,13 +576,24 @@ impl Engine {
         );
         // The next-level store: local DRAM only, or — with a remote
         // config — the tiered hierarchy whose misses walk staged-cache →
-        // peer shard servers → the weight files on disk.
+        // peer shard servers → the weight files on disk. A fault plan
+        // (engine option, or one already on the remote config) rides into
+        // the store before construction: the stager thread holds a core
+        // ref from birth, so post-share attachment would be a no-op.
+        let plan = opts
+            .faults
+            .clone()
+            .or_else(|| opts.remote.as_ref().and_then(|rc| rc.faults.clone()));
         let tiered = match &opts.remote {
-            Some(rc) => Arc::new(
-                TieredStore::from_config(store.clone(), rc, weights_dir)
-                    .map_err(|e| anyhow!("remote tier: {e}"))?,
-            ),
-            None => Arc::new(TieredStore::local_only(store.clone())),
+            Some(rc) => {
+                let mut rc = rc.clone();
+                rc.faults = plan;
+                Arc::new(
+                    TieredStore::from_config(store.clone(), &rc, weights_dir)
+                        .map_err(|e| anyhow!("remote tier: {e}"))?,
+                )
+            }
+            None => Arc::new(TieredStore::local_only(store.clone()).with_faults(plan)),
         };
         let residency = ExpertResidency::with_tiered(
             tiered,

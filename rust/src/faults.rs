@@ -1,0 +1,355 @@
+//! Deterministic fault injection: the chaos harness behind the integrity
+//! layer's acceptance tests.
+//!
+//! A [`FaultPlan`] is parsed from a `seed:spec` string (the `--fault-plan`
+//! CLI knob) and threaded to every tier boundary the integrity layer
+//! guards. Each fault names a *site* and an *occurrence*; the sites count
+//! their events (1-based) and a fault fires when its occurrence matches —
+//! `#3` fires on the third event, `#*` on every event. Which bit flips,
+//! which byte a truncation keeps, is drawn from a [`Rng`] seeded by
+//! `seed ^ occurrence`, so the same plan string always corrupts the same
+//! bits: a chaos run is exactly reproducible from its CLI line.
+//!
+//! Grammar (comma-separated, no spaces):
+//!
+//! ```text
+//!   flip@disk#N      flip one bit of the Nth disk-tier record read
+//!   flip@peer#N      shard server: flip one bit of the Nth EXPERT reply
+//!                    body (after the frame checksum is computed, so the
+//!                    wire-level check is what catches it)
+//!   trunc@peer#N     shard server: truncate the Nth EXPERT reply mid-body
+//!                    and drop the connection
+//!   flip@xfer#N      loader: flip one bit of a chunk while the Nth
+//!                    chunked transfer copies into its slot (caught by
+//!                    commit-time verification, healed by re-acquire)
+//!   stall@xfer#N:MS  stall the I/O lane for MS milliseconds at the start
+//!                    of the Nth transfer (the watchdog's prey)
+//!   tear@upgrade#N   corrupt the Nth staged upgrade record just before
+//!                    `commit_upgrade` (a torn in-place upgrade)
+//! ```
+//!
+//! `N` is a positive integer or `*`. Example:
+//! `--fault-plan 7:flip@disk#1,trunc@peer#2,stall@xfer#4:250,tear@upgrade#1`.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::util::rng::Rng;
+
+/// Where in the byte-moving hierarchy a fault fires. Each site keeps its
+/// own 1-based occurrence counter.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+enum Site {
+    DiskRead,
+    PeerReply,
+    Transfer,
+    UpgradeCommit,
+}
+
+/// Which occurrences of a site's event a fault applies to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Occurrence {
+    Nth(u64),
+    Every,
+}
+
+impl Occurrence {
+    fn matches(&self, n: u64) -> bool {
+        match self {
+            Occurrence::Nth(want) => *want == n,
+            Occurrence::Every => true,
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Kind {
+    Flip,
+    Trunc,
+    Stall { ms: u64 },
+    Tear,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Fault {
+    site: Site,
+    kind: Kind,
+    when: Occurrence,
+}
+
+/// What the loader should do to the transfer it just started.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct TransferFault {
+    /// sleep this long before moving any bytes (a wedged lane)
+    pub stall: Option<Duration>,
+    /// corrupt one seeded bit of the record while copying; the draw keys
+    /// the bit choice so reruns flip the same bit
+    pub flip: Option<u64>,
+}
+
+/// What the shard server should do to the reply body it is about to send.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PeerFault {
+    /// body already corrupted in place (one bit)
+    Flipped,
+    /// send only this many body bytes, then drop the connection
+    Truncate(usize),
+}
+
+/// A seeded, reproducible fault schedule. Thread-safe: one plan is shared
+/// by every lane, the tiered store, and (in-process) shard servers.
+#[derive(Debug)]
+pub struct FaultPlan {
+    seed: u64,
+    spec: String,
+    faults: Vec<Fault>,
+    counts: Mutex<HashMap<Site, u64>>,
+    fired: AtomicU64,
+}
+
+impl FaultPlan {
+    /// Parse a `seed:spec` plan string. An empty spec (`"7:"`) is a valid
+    /// plan that never fires.
+    pub fn parse(s: &str) -> Result<FaultPlan, String> {
+        let (seed_s, spec) = s
+            .split_once(':')
+            .ok_or_else(|| format!("fault plan '{s}': expected seed:spec"))?;
+        let seed: u64 = seed_s
+            .trim()
+            .parse()
+            .map_err(|_| format!("fault plan seed '{seed_s}': not a u64"))?;
+        let mut faults = Vec::new();
+        for part in spec.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            faults.push(parse_fault(part)?);
+        }
+        Ok(FaultPlan {
+            seed,
+            spec: spec.to_string(),
+            faults,
+            counts: Mutex::new(HashMap::new()),
+            fired: AtomicU64::new(0),
+        })
+    }
+
+    /// The plan's spec text (diagnostics / reproduction lines).
+    pub fn spec(&self) -> &str {
+        &self.spec
+    }
+
+    /// Total faults fired so far.
+    pub fn injected(&self) -> u64 {
+        self.fired.load(Ordering::Relaxed)
+    }
+
+    /// Count one event at `site` and return the matching fault, if any,
+    /// plus the seeded rng for its byte/bit draws.
+    fn event(&self, site: Site) -> Option<(Kind, Rng)> {
+        let n = {
+            let mut counts = self.counts.lock().unwrap();
+            let e = counts.entry(site).or_insert(0);
+            *e += 1;
+            *e
+        };
+        let f = self.faults.iter().find(|f| f.site == site && f.when.matches(n))?;
+        self.fired.fetch_add(1, Ordering::Relaxed);
+        Some((f.kind, Rng::new(self.seed ^ n.wrapping_mul(0x9E37_79B9_7F4A_7C15))))
+    }
+
+    /// A disk-tier record was read; maybe flip one bit in place. Returns
+    /// true when the record was corrupted.
+    pub fn on_disk_read(&self, bytes: &mut [u8]) -> bool {
+        match self.event(Site::DiskRead) {
+            Some((Kind::Flip, mut rng)) if !bytes.is_empty() => {
+                flip_bit(bytes, &mut rng);
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// A shard server is about to stream `body`; maybe corrupt it. The
+    /// caller passes a mutable copy (the no-fault path stays zero-copy).
+    pub fn on_peer_reply(&self, body: &mut [u8]) -> Option<PeerFault> {
+        match self.event(Site::PeerReply) {
+            Some((Kind::Flip, mut rng)) if !body.is_empty() => {
+                flip_bit(body, &mut rng);
+                Some(PeerFault::Flipped)
+            }
+            Some((Kind::Trunc, mut rng)) => {
+                // keep a strict prefix so the client's read_exact starves
+                let keep = if body.is_empty() { 0 } else { rng.below(body.len()) };
+                Some(PeerFault::Truncate(keep))
+            }
+            _ => None,
+        }
+    }
+
+    /// A chunked transfer is starting on an I/O lane.
+    pub fn on_transfer(&self) -> TransferFault {
+        match self.event(Site::Transfer) {
+            Some((Kind::Stall { ms }, _)) => {
+                TransferFault { stall: Some(Duration::from_millis(ms)), flip: None }
+            }
+            Some((Kind::Flip, mut rng)) => {
+                TransferFault { stall: None, flip: Some(rng.next_u64()) }
+            }
+            _ => TransferFault::default(),
+        }
+    }
+
+    /// A staged upgrade record is about to land via `commit_upgrade`;
+    /// maybe tear it (flip one bit of the staged bytes). Returns true when
+    /// the record was corrupted.
+    pub fn on_upgrade_commit(&self, staged: &mut [u8]) -> bool {
+        match self.event(Site::UpgradeCommit) {
+            Some((Kind::Tear, mut rng)) if !staged.is_empty() => {
+                flip_bit(staged, &mut rng);
+                true
+            }
+            _ => false,
+        }
+    }
+}
+
+/// Flip one rng-drawn bit in place (shared by every flip-style fault so
+/// all sites corrupt identically for a given seed).
+pub(crate) fn flip_bit(bytes: &mut [u8], rng: &mut Rng) {
+    let byte = rng.below(bytes.len());
+    let bit = rng.below(8);
+    bytes[byte] ^= 1u8 << bit;
+}
+
+fn parse_fault(part: &str) -> Result<Fault, String> {
+    let (head, tail) = part
+        .split_once('@')
+        .ok_or_else(|| format!("fault '{part}': expected kind@site#occurrence"))?;
+    let (site_s, occ_s) = tail
+        .split_once('#')
+        .ok_or_else(|| format!("fault '{part}': expected kind@site#occurrence"))?;
+    // stall carries a trailing :MS on the occurrence
+    let (occ_s, ms) = match occ_s.split_once(':') {
+        Some((o, ms_s)) => {
+            let ms_s = ms_s.strip_suffix("ms").unwrap_or(ms_s);
+            let ms: u64 =
+                ms_s.parse().map_err(|_| format!("fault '{part}': bad stall millis '{ms_s}'"))?;
+            (o, Some(ms))
+        }
+        None => (occ_s, None),
+    };
+    let when = if occ_s == "*" {
+        Occurrence::Every
+    } else {
+        let n: u64 =
+            occ_s.parse().map_err(|_| format!("fault '{part}': bad occurrence '{occ_s}'"))?;
+        if n == 0 {
+            return Err(format!("fault '{part}': occurrences are 1-based"));
+        }
+        Occurrence::Nth(n)
+    };
+    let (site, kind) = match (head, site_s) {
+        ("flip", "disk") => (Site::DiskRead, Kind::Flip),
+        ("flip", "peer") => (Site::PeerReply, Kind::Flip),
+        ("trunc", "peer") => (Site::PeerReply, Kind::Trunc),
+        ("flip", "xfer") => (Site::Transfer, Kind::Flip),
+        ("stall", "xfer") => {
+            let ms = ms.ok_or_else(|| format!("fault '{part}': stall needs :MS"))?;
+            (Site::Transfer, Kind::Stall { ms })
+        }
+        ("tear", "upgrade") => (Site::UpgradeCommit, Kind::Tear),
+        _ => {
+            return Err(format!(
+                "fault '{part}': unknown kind@site (flip@disk, flip@peer, trunc@peer, \
+                 flip@xfer, stall@xfer, tear@upgrade)"
+            ))
+        }
+    };
+    if ms.is_some() && !matches!(kind, Kind::Stall { .. }) {
+        return Err(format!("fault '{part}': only stall takes :MS"));
+    }
+    Ok(Fault { site, kind, when })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_full_grammar() {
+        let plan = FaultPlan::parse(
+            "7:flip@disk#1,flip@peer#2,trunc@peer#3,flip@xfer#4,stall@xfer#5:250ms,tear@upgrade#*",
+        )
+        .unwrap();
+        assert_eq!(plan.faults.len(), 6);
+        assert_eq!(plan.seed, 7);
+        assert_eq!(plan.injected(), 0);
+    }
+
+    #[test]
+    fn rejects_malformed_specs() {
+        for bad in [
+            "nocolon",
+            "x:flip@disk#1",
+            "7:flip@disk",
+            "7:flip@disk#0",
+            "7:flip@disk#q",
+            "7:melt@disk#1",
+            "7:stall@xfer#1",
+            "7:flip@disk#1:50",
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "{bad} should not parse");
+        }
+        // empty spec: a valid plan that never fires
+        let plan = FaultPlan::parse("3:").unwrap();
+        assert!(plan.faults.is_empty());
+    }
+
+    #[test]
+    fn occurrence_counting_is_per_site() {
+        let plan = FaultPlan::parse("1:flip@disk#2,flip@xfer#1").unwrap();
+        let mut rec = vec![0u8; 64];
+        assert!(!plan.on_disk_read(&mut rec), "first disk read clean");
+        assert!(plan.on_disk_read(&mut rec), "second disk read flipped");
+        assert!(!plan.on_disk_read(&mut rec), "third disk read clean again");
+        assert!(plan.on_transfer().flip.is_some(), "transfer counter independent");
+        assert_eq!(plan.injected(), 2);
+    }
+
+    #[test]
+    fn same_plan_flips_same_bit() {
+        let run = |_: ()| {
+            let plan = FaultPlan::parse("42:flip@disk#1").unwrap();
+            let mut rec = vec![0u8; 4096];
+            plan.on_disk_read(&mut rec);
+            rec
+        };
+        assert_eq!(run(()), run(()), "fault injection must be reproducible");
+        assert_ne!(run(()), vec![0u8; 4096], "exactly one bit differs");
+    }
+
+    #[test]
+    fn stall_and_trunc_payloads() {
+        let plan = FaultPlan::parse("9:stall@xfer#1:150,trunc@peer#1").unwrap();
+        let f = plan.on_transfer();
+        assert_eq!(f.stall, Some(Duration::from_millis(150)));
+        assert!(f.flip.is_none());
+        assert_eq!(plan.on_transfer().stall, None, "second transfer unaffected");
+        let mut body = vec![1u8; 100];
+        match plan.on_peer_reply(&mut body) {
+            Some(PeerFault::Truncate(keep)) => assert!(keep < 100),
+            other => panic!("expected truncation, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn tear_corrupts_staged_bytes() {
+        let plan = FaultPlan::parse("5:tear@upgrade#1").unwrap();
+        let mut staged = vec![7u8; 256];
+        assert!(plan.on_upgrade_commit(&mut staged));
+        assert_ne!(staged, vec![7u8; 256]);
+        let mut staged2 = vec![7u8; 256];
+        assert!(!plan.on_upgrade_commit(&mut staged2), "one-shot fault");
+        assert_eq!(staged2, vec![7u8; 256]);
+    }
+}

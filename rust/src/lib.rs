@@ -47,6 +47,9 @@
 //!   Poisson/diurnal arrivals with heavy-tailed log-normal lengths,
 //!   replayed against the interleaved coordinator under admission control
 //!   (the offered load the overload ladder degrades against).
+//! * [`faults`] — seeded deterministic fault injection (`--fault-plan`):
+//!   reproducible bit-flips, truncated peer streams, lane stalls, and torn
+//!   upgrades at every tier boundary the integrity layer guards.
 //! * [`sim`] — discrete-event simulator at paper scale (figures/benches).
 //! * [`baselines`] — the six comparator systems of §5.
 //! * [`trace`] — gating-trace capture, synthetic generation, replay.
@@ -60,6 +63,7 @@ pub mod cli;
 pub mod config;
 pub mod coordinator;
 pub mod engine;
+pub mod faults;
 pub mod figures;
 pub mod loader;
 pub mod memory;

@@ -53,7 +53,7 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use crate::cache::{CacheManager, Pool};
+use crate::cache::{CacheManager, CommitOutcome, Pool, UpgradeCommit};
 use crate::config::IoConfig;
 use crate::memory::{ThrottledCopier, ONDEMAND_WEIGHT, PREFETCH_WEIGHT};
 use crate::metrics::LoaderStats;
@@ -79,7 +79,16 @@ pub enum LoadOutcome {
     NoSlot,
     /// dropped as a stale prefetch (generation bump / retired scope)
     Stale,
+    /// the landed bytes failed their manifest checksum at commit: the slot
+    /// was quarantined (scrubbed and freed, never `Ready`), the expert is
+    /// NOT resident — waiters re-acquire so a clean copy is re-fetched
+    Corrupt,
 }
+
+/// How many times an upgrade continuation whose staged record failed its
+/// checksum is re-fetched before the upgrade is abandoned (the narrower
+/// resident tier stays valid either way).
+const MAX_INTEGRITY_HEALS: u32 = 2;
 
 /// The global (batch-1) prefetch-generation scope; live sequences use
 /// their sequence id.
@@ -126,6 +135,12 @@ pub struct LoadTask {
     /// every token — upgrades would otherwise never run); nobody waits on
     /// it, so it completes without a done-set entry.
     upgrade: bool,
+    /// integrity heal attempts spent on this upgrade continuation
+    /// (bounded by [`MAX_INTEGRITY_HEALS`])
+    heal: u32,
+    /// pending transfer-flip fault (rng seed), drawn at transfer start and
+    /// applied at commit so it survives preemption yields
+    xfer_flip: Option<u64>,
     /// partial progress of a preempted transfer (None = not yet started)
     resume: Option<Resume>,
     /// submit instant (per-kind time-to-ready accounting). Reset when a
@@ -273,6 +288,8 @@ impl LoaderIo {
             current_layer,
             upgrade_to,
             upgrade: false,
+            heal: 0,
+            xfer_flip: None,
             resume: None,
             submitted: Instant::now(),
         };
@@ -515,6 +532,7 @@ impl ExpertLoader {
         let stats = Arc::new(Mutex::new(LoaderStats::default()));
         let lanes = io.lanes.max(1);
         let chunk_bytes = io.chunk_bytes.max(1);
+        let faults = store.faults();
         let mut handles = Vec::with_capacity(lanes);
         for lane in 0..lanes {
             let worker = Worker {
@@ -525,6 +543,7 @@ impl ExpertLoader {
                 stats: stats.clone(),
                 chunk_bytes,
                 lanes,
+                faults: faults.clone(),
             };
             let handle = std::thread::Builder::new()
                 .name(format!("hobbit-io-lane-{lane}"))
@@ -568,6 +587,10 @@ struct Worker {
     /// total lane count (preemption checkpoints only yield when every
     /// lane is busy — an idle lane will take the on-demand work itself)
     lanes: usize,
+    /// deterministic fault injection for transfer/commit sites (pulled
+    /// from the tiered store so one plan covers every tier); None in
+    /// production
+    faults: Option<Arc<crate::faults::FaultPlan>>,
 }
 
 /// What one `execute` call did with its task.
@@ -697,6 +720,9 @@ impl Worker {
     }
 
     fn execute(&self, mut task: LoadTask) -> Step {
+        // a resume is not a new transfer: the fault plan's transfer
+        // counter only ticks on fresh starts
+        let fresh_start = task.resume.is_none();
         // resolve the destination: a fresh reservation, the preempted
         // transfer's kept buffer + offset, or — for an upgrade
         // continuation — private staging memory (the slot stays readable
@@ -759,6 +785,21 @@ impl Worker {
         // without touching the network again.
         let fetched = self.store.fetch(task.key, task.precision, weight);
         let record = fetched.as_slice();
+        let xfer_fault = match (&self.faults, fresh_start) {
+            (Some(plan), true) => plan.on_transfer(),
+            _ => crate::faults::TransferFault::default(),
+        };
+        if let Some(stall) = xfer_fault.stall {
+            // a wedged I/O lane: the bytes are fine but late — the
+            // residency watchdog's prey. The stall occupies a real lane
+            // grant, so link-pressure consumers see it too.
+            self.copier.stall_lane(weight, stall);
+        }
+        if xfer_fault.flip.is_some() {
+            // applied at commit time (below) so a preemption yield between
+            // now and then cannot lose the fault
+            task.xfer_flip = xfer_fault.flip;
+        }
         let grant = self.copier.lane(weight);
         // DMA setup cost: once per transfer start and per preemption resume
         self.copier.charge_latency();
@@ -816,31 +857,102 @@ impl Worker {
             }
         }
         drop(grant);
+        if let Some(seed) = task.xfer_flip {
+            // the pending transfer fault lands now, after every chunk (and
+            // any preemption resume) has written its bytes — exactly what
+            // a DMA engine corrupting one word in flight looks like to the
+            // commit-time check
+            let mut rng = crate::util::rng::Rng::new(seed);
+            let mut buf = buffer.lock().unwrap();
+            crate::faults::flip_bit(&mut buf[..record.len()], &mut rng);
+        }
         if task.upgrade {
-            // land the fully staged record atomically; a false return
-            // means the slot moved on (evicted/refilled) — the narrower
-            // tier that is (or was) resident stays valid, nothing torn
-            let staged = buffer.lock().unwrap();
-            let committed = {
-                let mut cache = self.cache.lock().unwrap();
-                cache.commit_upgrade(task.key, task.pool, Some(task.precision), &staged)
-            };
-            drop(staged);
-            self.copier.note_transfer();
-            let mut st = self.stats.lock().unwrap();
-            if committed {
-                st.upgrades_committed += 1;
-            } else {
-                st.upgrades_aborted += 1;
+            if let Some(plan) = &self.faults {
+                let mut staged = buffer.lock().unwrap();
+                plan.on_upgrade_commit(&mut staged);
             }
-            st.bytes_loaded += record.len() as u64;
+            // land the fully staged record atomically — but only if it
+            // still matches its manifest checksum; a torn staged record
+            // must never overwrite a live, readable slot
+            let expected = self.store.expected_checksum(task.key, task.precision);
+            let outcome = {
+                let staged = buffer.lock().unwrap();
+                let mut cache = self.cache.lock().unwrap();
+                cache.commit_upgrade_verified(
+                    task.key,
+                    task.pool,
+                    Some(task.precision),
+                    &staged,
+                    expected,
+                )
+            };
+            self.copier.note_transfer();
+            let mut reheal = false;
+            {
+                let mut st = self.stats.lock().unwrap();
+                match outcome {
+                    UpgradeCommit::Committed => st.upgrades_committed += 1,
+                    // the slot moved on (evicted/refilled): the narrower
+                    // tier that is (or was) resident stays valid
+                    UpgradeCommit::SlotMovedOn => st.upgrades_aborted += 1,
+                    UpgradeCommit::Corrupt => {
+                        st.integrity_failures += 1;
+                        if task.heal < MAX_INTEGRITY_HEALS {
+                            st.integrity_refetches += 1;
+                            reheal = true;
+                        } else {
+                            st.upgrades_aborted += 1;
+                        }
+                    }
+                }
+                st.bytes_loaded += record.len() as u64;
+            }
+            if reheal {
+                // bounded self-heal: re-stream the record from the store
+                // (whose copy is verified) into fresh staging memory
+                let id = self.shared.next_id.fetch_add(1, Ordering::Relaxed);
+                let cont = LoadTask {
+                    id,
+                    key: task.key,
+                    precision: task.precision,
+                    pool: task.pool,
+                    kind: TaskKind::Prefetch,
+                    gen: 0,
+                    scope: task.scope,
+                    current_layer: task.current_layer,
+                    upgrade_to: None,
+                    upgrade: true,
+                    heal: task.heal + 1,
+                    xfer_flip: None,
+                    resume: None,
+                    submitted: Instant::now(),
+                };
+                let mut q = self.shared.queue.lock().unwrap();
+                q.prefetch.push_back(cont);
+                drop(q);
+                self.shared.queue_cv.notify_one();
+            }
             return Step::Done(LoadOutcome::Fulfilled);
         }
-        {
+        let expected = self
+            .store
+            .expected_checksum(task.key, task.precision)
+            .map(|sum| (sum, record.len()));
+        let commit = {
             let mut cache = self.cache.lock().unwrap();
-            cache.commit_tier(task.key, task.pool, Some(task.precision));
-        }
+            cache.commit_tier_verified(task.key, task.pool, Some(task.precision), expected)
+        };
         self.copier.note_transfer();
+        if commit == CommitOutcome::Corrupt {
+            // quarantined: the slot was scrubbed and freed, the expert is
+            // not resident. Waiters re-acquire (the residency facade's
+            // bounded heal) and the re-fetch reads the store's clean copy.
+            let mut st = self.stats.lock().unwrap();
+            st.integrity_failures += 1;
+            st.quarantined_slots += 1;
+            st.bytes_loaded += record.len() as u64;
+            return Step::Done(LoadOutcome::Corrupt);
+        }
         {
             let mut st = self.stats.lock().unwrap();
             let slot = crate::config::precision_slot(task.precision);
@@ -874,6 +986,8 @@ impl Worker {
                 current_layer: task.current_layer,
                 upgrade_to: None,
                 upgrade: true,
+                heal: 0,
+                xfer_flip: None,
                 resume: None,
                 submitted: Instant::now(),
             };

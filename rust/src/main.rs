@@ -10,6 +10,7 @@ use hobbit::cli::{Args, USAGE};
 use hobbit::config::{HardwareConfig, ModelConfig, PolicyConfig, RemoteConfig};
 use hobbit::coordinator::{Coordinator, Request, SchedPolicy, SchedulerMode};
 use hobbit::engine::Engine;
+use hobbit::faults::FaultPlan;
 use hobbit::figures;
 use hobbit::model::ExpertStore;
 use hobbit::remote::{ShardServer, ShardSpec};
@@ -39,6 +40,7 @@ fn main() {
             "prefill-first",
             "progressive",
             "no-ladder",
+            "verbose",
         ],
     );
     let r = match cmd.as_str() {
@@ -48,6 +50,7 @@ fn main() {
         "figures" => cmd_figures(&args),
         "sim" => cmd_sim(&args),
         "selfcheck" => cmd_selfcheck(&args),
+        "verify-weights" => cmd_verify_weights(&args),
         "help" | "--help" | "-h" => {
             print!("{USAGE}");
             Ok(())
@@ -126,7 +129,52 @@ fn build_engine(args: &Args, allow_sched_policy: bool) -> Result<Engine> {
     };
     opts.remote = RemoteConfig::from_flags(args.get("peers"), args.get("shard"), net_gbps)
         .map_err(|e| anyhow!("{e}"))?;
+    // deterministic fault injection: seeded corruption/stall/tear events
+    // at the tier boundaries, exercising the integrity layer's
+    // quarantine-and-heal path (see DESIGN.md)
+    opts.faults = parse_fault_plan(args)?;
     Engine::new(&artifacts, model, opts)
+}
+
+/// `--fault-plan seed:spec` (e.g. `42:flip@disk#1,stall@xfer#2:50ms`).
+fn parse_fault_plan(args: &Args) -> Result<Option<std::sync::Arc<FaultPlan>>> {
+    match args.get("fault-plan") {
+        Some(s) => Ok(Some(std::sync::Arc::new(
+            FaultPlan::parse(s).map_err(|e| anyhow!("{e}"))?,
+        ))),
+        None => Ok(None),
+    }
+}
+
+/// `verify-weights`: scan a weight directory's records against the
+/// manifest checksums; nonzero exit when any record fails.
+fn cmd_verify_weights(args: &Args) -> Result<()> {
+    let dir = PathBuf::from(
+        args.get("weights").ok_or_else(|| anyhow!("verify-weights needs --weights DIR"))?,
+    );
+    let report = hobbit::model::verify_weights_dir(&dir)?;
+    for r in &report.records {
+        if !r.ok || args.has("verbose") {
+            println!(
+                "{} L{}E{} {}: {}",
+                if r.ok { "PASS" } else { "FAIL" },
+                r.key.layer,
+                r.key.expert,
+                r.precision.name(),
+                if r.ok { "checksum ok" } else { "checksum mismatch" },
+            );
+        }
+    }
+    println!(
+        "verify-weights: {} records, {} passed, {} failed",
+        report.records.len(),
+        report.passed,
+        report.failed
+    );
+    if !report.all_ok() {
+        return Err(anyhow!("{} corrupt record(s) in {}", report.failed, dir.display()));
+    }
+    Ok(())
 }
 
 /// `shard-serve`: run one expert shard server over a weight directory —
@@ -145,7 +193,8 @@ fn cmd_shard_serve(args: &Args) -> Result<()> {
     let shard = ShardSpec::parse(args.get_or("shard", "all")).map_err(|e| anyhow!("{e}"))?;
     let store = std::sync::Arc::new(ExpertStore::load(&weights, &cfg)?);
     let chunk = args.get_usize("net-chunk-bytes", hobbit::remote::shard::DEFAULT_CHUNK_BYTES);
-    let server = ShardServer::bind(args.get_or("addr", "127.0.0.1:0"), store, shard, chunk)?;
+    let server = ShardServer::bind(args.get_or("addr", "127.0.0.1:0"), store, shard, chunk)?
+        .with_faults(parse_fault_plan(args)?);
     // exact line the multi-process suite (and any orchestrator) parses
     println!("shard-serve listening on {}", server.local_addr());
     server.serve()

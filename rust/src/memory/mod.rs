@@ -210,6 +210,17 @@ impl ThrottledCopier {
         self.bytes_moved.fetch_add(bytes as u64, Ordering::Relaxed);
     }
 
+    /// Hold one lane busy for `d` without moving any bytes — the fault
+    /// plan's injected I/O-lane stall. Registering a real grant (instead
+    /// of a bare sleep) makes the stall visible to every link-pressure
+    /// consumer: [`Self::active_lanes`] rises and other lanes' fair share
+    /// shrinks for the duration, exactly like a wedged DMA engine still
+    /// holding the link.
+    pub fn stall_lane(&self, weight: f64, d: Duration) {
+        let _grant = self.arbiter.begin(weight);
+        std::thread::sleep(d);
+    }
+
     /// Count one completed (possibly multi-chunk, possibly resumed)
     /// transfer.
     pub fn note_transfer(&self) {
@@ -360,6 +371,23 @@ mod tests {
         assert_eq!(c.transfers(), 0, "chunks are not transfers");
         c.note_transfer();
         assert_eq!(c.transfers(), 1);
+    }
+
+    #[test]
+    fn stall_lane_occupies_the_link() {
+        let c = Arc::new(ThrottledCopier::new(LinkModel { bytes_per_s: 1e9, latency_s: 0.0 }));
+        let c2 = c.clone();
+        let h = std::thread::spawn(move || {
+            c2.stall_lane(ONDEMAND_WEIGHT, Duration::from_millis(250));
+        });
+        let t0 = Instant::now();
+        while c.active_lanes() == 0 && t0.elapsed() < Duration::from_secs(2) {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert_eq!(c.active_lanes(), 1, "a stalled lane holds the link");
+        h.join().unwrap();
+        assert_eq!(c.active_lanes(), 0, "the stall retires its grant");
+        assert_eq!(c.bytes_moved(), 0, "a stall moves no bytes");
     }
 
     #[test]

@@ -86,6 +86,18 @@ pub struct LoaderStats {
     pub remote_staged_hits: u64,
     /// records read from the local disk failover tier
     pub disk_fetches: u64,
+    /// records that failed checksum verification at any tier boundary
+    /// (peer frame, staged side-cache, disk read, or cache commit)
+    pub integrity_failures: u64,
+    /// recovery fetches issued after an integrity failure — from the next
+    /// tier down, or a fresh re-acquire after a corrupt commit
+    pub integrity_refetches: u64,
+    /// cache slots scrubbed and returned to the free list because their
+    /// just-landed bytes failed commit verification (never served)
+    pub quarantined_slots: u64,
+    /// wedged tickets the residency watchdog recovered by re-submitting
+    /// the load after a lane stalled past `IoConfig::watchdog_ms`
+    pub watchdog_recoveries: u64,
 }
 
 impl LoaderStats {
@@ -138,6 +150,10 @@ impl LoaderStats {
             ("peer_failovers", num(self.peer_failovers as f64)),
             ("remote_staged_hits", num(self.remote_staged_hits as f64)),
             ("disk_fetches", num(self.disk_fetches as f64)),
+            ("integrity_failures", num(self.integrity_failures as f64)),
+            ("integrity_refetches", num(self.integrity_refetches as f64)),
+            ("quarantined_slots", num(self.quarantined_slots as f64)),
+            ("watchdog_recoveries", num(self.watchdog_recoveries as f64)),
         ])
     }
 }
@@ -747,6 +763,26 @@ mod tests {
         assert_eq!(serving.get("peer_failovers").unwrap().as_f64().unwrap(), 1.0);
         assert_eq!(serving.get("remote_staged_hits").unwrap().as_f64().unwrap(), 5.0);
         assert_eq!(serving.get("disk_fetches").unwrap().as_f64().unwrap(), 3.0);
+    }
+
+    #[test]
+    fn integrity_stats_surface_only_in_serving_section() {
+        let mut rep = RunReport::default();
+        rep.loader.integrity_failures = 3;
+        rep.loader.integrity_refetches = 2;
+        rep.loader.quarantined_slots = 1;
+        rep.loader.watchdog_recoveries = 1;
+        let fcfs = rep.to_json().to_string();
+        assert!(!fcfs.contains("integrity"), "FCFS report grew integrity keys");
+        assert!(!fcfs.contains("quarantined"), "FCFS report grew quarantine keys");
+        assert!(!fcfs.contains("watchdog"), "FCFS report grew watchdog keys");
+        rep.scheduler = Some(SchedulerStats::default());
+        let j = Json::parse(&rep.to_json().to_string()).unwrap();
+        let serving = j.get("serving").unwrap();
+        assert_eq!(serving.get("integrity_failures").unwrap().as_f64().unwrap(), 3.0);
+        assert_eq!(serving.get("integrity_refetches").unwrap().as_f64().unwrap(), 2.0);
+        assert_eq!(serving.get("quarantined_slots").unwrap().as_f64().unwrap(), 1.0);
+        assert_eq!(serving.get("watchdog_recoveries").unwrap().as_f64().unwrap(), 1.0);
     }
 
     #[test]

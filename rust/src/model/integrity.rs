@@ -1,0 +1,296 @@
+//! Per-record integrity: the checksum table every tier boundary verifies
+//! against.
+//!
+//! One FNV-1a 64 sum per (expert, precision) record, computed over the raw
+//! record bytes exactly as they sit in `experts_{tier}.bin`. The table is
+//! written into the weights-dir `manifest.json` under an `"integrity"` key
+//! (sums as 16-hex-digit strings — u64 does not survive JSON's f64
+//! numbers) by `model::synth` and `python/compile/gen_weights.py`, and
+//! recomputed from the loaded bytes by `ExpertStore::load`, so in-process
+//! verification works even on bare directories with no manifest.
+//!
+//! Verification happens where bytes *land*, not where they are read: disk
+//! and peer records verify in `remote/tiered.rs` before entering the
+//! staged cache, chunked transfers verify at `CacheManager` commit (after
+//! every resume/preemption has finished writing), and staged upgrades
+//! verify before `commit_upgrade` copies them over a live slot. See
+//! DESIGN.md §Integrity.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::config::{precision_slot, ModelConfig};
+use crate::util::checksum::{fnv1a64, from_hex, to_hex};
+use crate::util::json::Json;
+use crate::{ExpertKey, Precision};
+
+/// Checksums for every (expert, precision) record of one model, indexed
+/// `[precision_slot][flat expert index]`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct IntegrityTable {
+    sums: [Vec<u64>; 4],
+}
+
+impl IntegrityTable {
+    /// Compute the table from the four contiguous tier buffers (each
+    /// `total_experts * record_bytes` long), indexed by precision slot.
+    pub fn from_tier_buffers(cfg: &ModelConfig, tiers: [&[u8]; 4]) -> Result<Self> {
+        let n = cfg.total_experts();
+        let mut sums: [Vec<u64>; 4] = Default::default();
+        for p in Precision::ALL {
+            let slot = precision_slot(p);
+            let rb = cfg.bytes_for(p);
+            let buf = tiers[slot];
+            anyhow::ensure!(
+                buf.len() == rb * n,
+                "tier {} buffer is {} bytes, expected {} records x {} bytes",
+                p.name(),
+                buf.len(),
+                n,
+                rb
+            );
+            sums[slot] = buf.chunks_exact(rb).map(fnv1a64).collect();
+        }
+        Ok(Self { sums })
+    }
+
+    /// Expected checksum of one record.
+    pub fn checksum(&self, flat: usize, p: Precision) -> Option<u64> {
+        self.sums[precision_slot(p)].get(flat).copied()
+    }
+
+    /// Whether `bytes` match the recorded sum for this record. Records
+    /// outside the table (wrong flat index) never verify.
+    pub fn verify(&self, flat: usize, p: Precision, bytes: &[u8]) -> bool {
+        self.checksum(flat, p) == Some(fnv1a64(bytes))
+    }
+
+    pub fn records_per_tier(&self) -> usize {
+        self.sums[0].len()
+    }
+
+    /// Render as the manifest's `"integrity"` section.
+    pub fn to_json(&self) -> Json {
+        let mut records = BTreeMap::new();
+        for p in Precision::ALL {
+            records.insert(
+                p.name().to_string(),
+                Json::Arr(
+                    self.sums[precision_slot(p)]
+                        .iter()
+                        .map(|&s| Json::Str(to_hex(s)))
+                        .collect(),
+                ),
+            );
+        }
+        let mut obj = BTreeMap::new();
+        obj.insert("algo".to_string(), Json::Str("fnv1a64".to_string()));
+        obj.insert("records".to_string(), Json::Obj(records));
+        Json::Obj(obj)
+    }
+
+    /// Parse a manifest's `"integrity"` section. Typed errors on unknown
+    /// algorithms, missing tiers, non-hex sums, or ragged tier lengths.
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let algo = j
+            .get("algo")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("integrity section missing 'algo'"))?;
+        anyhow::ensure!(algo == "fnv1a64", "unsupported integrity algo '{algo}'");
+        let records = j
+            .get("records")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("integrity section missing 'records'"))?;
+        let mut sums: [Vec<u64>; 4] = Default::default();
+        for p in Precision::ALL {
+            let tier = records
+                .get(p.name())
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("integrity records missing tier '{}'", p.name()))?;
+            let mut v = Vec::with_capacity(tier.len());
+            for (i, ent) in tier.iter().enumerate() {
+                let hex = ent
+                    .as_str()
+                    .ok_or_else(|| anyhow!("integrity {}[{i}]: not a string", p.name()))?;
+                let sum = from_hex(hex).ok_or_else(|| {
+                    anyhow!("integrity {}[{i}]: bad checksum '{hex}'", p.name())
+                })?;
+                v.push(sum);
+            }
+            sums[precision_slot(p)] = v;
+        }
+        let n = sums[0].len();
+        anyhow::ensure!(
+            sums.iter().all(|t| t.len() == n),
+            "integrity tiers have ragged record counts"
+        );
+        Ok(Self { sums })
+    }
+}
+
+/// One record's verdict from a weights-dir scan.
+#[derive(Debug, Clone, Copy)]
+pub struct RecordCheck {
+    pub key: ExpertKey,
+    pub precision: Precision,
+    pub ok: bool,
+}
+
+/// Result of [`verify_weights_dir`]: per-record verdicts plus totals.
+#[derive(Debug)]
+pub struct VerifyReport {
+    pub records: Vec<RecordCheck>,
+    pub passed: usize,
+    pub failed: usize,
+}
+
+impl VerifyReport {
+    pub fn all_ok(&self) -> bool {
+        self.failed == 0
+    }
+}
+
+/// Scan a weights directory against its manifest checksums: the engine of
+/// `hobbit verify-weights`. Reads `manifest.json` (which must carry an
+/// `"integrity"` section), then checks every record of every
+/// `experts_{tier}.bin` file against the recorded sums.
+pub fn verify_weights_dir(dir: &Path) -> Result<VerifyReport> {
+    let man_path = dir.join("manifest.json");
+    let text = std::fs::read_to_string(&man_path)
+        .with_context(|| format!("reading {}", man_path.display()))?;
+    let j = Json::parse(&text).map_err(|e| anyhow!("{}: {e}", man_path.display()))?;
+    let cfg = ModelConfig::from_manifest(&j).map_err(|e| anyhow!("{}: {e}", man_path.display()))?;
+    let table = IntegrityTable::from_json(
+        j.get("integrity")
+            .ok_or_else(|| anyhow!("{}: no 'integrity' section", man_path.display()))?,
+    )?;
+    anyhow::ensure!(
+        table.records_per_tier() == cfg.total_experts(),
+        "manifest integrity covers {} records, model has {}",
+        table.records_per_tier(),
+        cfg.total_experts()
+    );
+    let mut records = Vec::new();
+    let (mut passed, mut failed) = (0usize, 0usize);
+    for p in Precision::ALL {
+        let path = dir.join(format!("experts_{}.bin", p.name()));
+        let buf = std::fs::read(&path).with_context(|| format!("reading {}", path.display()))?;
+        let rb = cfg.bytes_for(p);
+        anyhow::ensure!(
+            buf.len() == rb * cfg.total_experts(),
+            "{} is {} bytes, expected {}",
+            path.display(),
+            buf.len(),
+            rb * cfg.total_experts()
+        );
+        for (flat, rec) in buf.chunks_exact(rb).enumerate() {
+            let ok = table.verify(flat, p, rec);
+            let key = ExpertKey::new(
+                (flat / cfg.n_experts as usize) as u32,
+                (flat % cfg.n_experts as usize) as u32,
+            );
+            if ok {
+                passed += 1;
+            } else {
+                failed += 1;
+            }
+            records.push(RecordCheck { key, precision: p, ok });
+        }
+    }
+    Ok(VerifyReport { records, passed, failed })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::synth::{tiny_store_config, write_synth_expert_store, write_store_manifest};
+
+    fn store_buffers(cfg: &ModelConfig) -> [Vec<u8>; 4] {
+        let mut out: [Vec<u8>; 4] = Default::default();
+        for p in Precision::ALL {
+            let n = cfg.bytes_for(p) * cfg.total_experts();
+            out[precision_slot(p)] = (0..n).map(|i| (i % 251) as u8).collect();
+        }
+        out
+    }
+
+    #[test]
+    fn table_json_round_trips() {
+        let cfg = tiny_store_config("it-rt");
+        let bufs = store_buffers(&cfg);
+        let t = IntegrityTable::from_tier_buffers(
+            &cfg,
+            [&bufs[0], &bufs[1], &bufs[2], &bufs[3]],
+        )
+        .unwrap();
+        let j = Json::parse(&t.to_json().to_string()).unwrap();
+        let back = IntegrityTable::from_json(&j).unwrap();
+        assert_eq!(back, t);
+        assert_eq!(back.records_per_tier(), cfg.total_experts());
+    }
+
+    #[test]
+    fn verify_catches_any_single_bit_flip() {
+        let cfg = tiny_store_config("it-flip");
+        let bufs = store_buffers(&cfg);
+        let t = IntegrityTable::from_tier_buffers(
+            &cfg,
+            [&bufs[0], &bufs[1], &bufs[2], &bufs[3]],
+        )
+        .unwrap();
+        let rb = cfg.bytes_for(Precision::Q4);
+        let mut rec = bufs[precision_slot(Precision::Q4)][rb * 5..rb * 6].to_vec();
+        assert!(t.verify(5, Precision::Q4, &rec));
+        rec[rb / 2] ^= 0x01;
+        assert!(!t.verify(5, Precision::Q4, &rec));
+        // out-of-table records never verify
+        assert!(!t.verify(cfg.total_experts(), Precision::Q4, &rec));
+    }
+
+    #[test]
+    fn from_json_rejects_malformed_sections() {
+        let good = {
+            let cfg = tiny_store_config("it-bad");
+            let bufs = store_buffers(&cfg);
+            IntegrityTable::from_tier_buffers(&cfg, [&bufs[0], &bufs[1], &bufs[2], &bufs[3]])
+                .unwrap()
+                .to_json()
+                .to_string()
+        };
+        for (mangle, why) in [
+            (good.replace("fnv1a64", "crc32"), "unknown algo"),
+            (good.replace("\"q2\"", "\"qx\""), "missing tier"),
+            (good.replacen("\"records\"", "\"wrong\"", 1), "missing records"),
+        ] {
+            let j = Json::parse(&mangle).unwrap();
+            assert!(IntegrityTable::from_json(&j).is_err(), "{why} should fail");
+        }
+    }
+
+    #[test]
+    fn weights_dir_scan_reports_a_flipped_byte() {
+        let dir = std::env::temp_dir().join("hobbit_it_scan");
+        let _ = std::fs::remove_dir_all(&dir);
+        let cfg = tiny_store_config("it-scan");
+        write_synth_expert_store(&dir, &cfg).unwrap();
+        write_store_manifest(&dir, &cfg).unwrap();
+        let rep = verify_weights_dir(&dir).unwrap();
+        assert!(rep.all_ok());
+        assert_eq!(rep.passed, cfg.total_experts() * 4);
+
+        // flip one byte of one q8 record on disk
+        let path = dir.join("experts_q8.bin");
+        let mut bytes = std::fs::read(&path).unwrap();
+        let rb = cfg.bytes_for(Precision::Q8);
+        bytes[rb * 3 + 7] ^= 0x40;
+        std::fs::write(&path, &bytes).unwrap();
+        let rep = verify_weights_dir(&dir).unwrap();
+        assert_eq!(rep.failed, 1);
+        let bad: Vec<_> = rep.records.iter().filter(|r| !r.ok).collect();
+        assert_eq!(bad.len(), 1);
+        assert_eq!(bad[0].precision, Precision::Q8);
+        assert_eq!(bad[0].key.index(cfg.n_experts), 3);
+    }
+}

@@ -2,9 +2,11 @@
 //! expert store (the "next-level memory" tier holding every expert at
 //! every precision, exported by `python/compile/gen_weights.py`).
 
+pub mod integrity;
 pub mod synth;
 mod weights;
 
+pub use integrity::{verify_weights_dir, IntegrityTable, VerifyReport};
 pub use weights::{ExpertStore, NonExpertWeights};
 
 use anyhow::Result;

@@ -14,6 +14,7 @@ use std::path::Path;
 use anyhow::{Context, Result};
 
 use crate::config::ModelConfig;
+use crate::model::integrity::IntegrityTable;
 use crate::quant;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
@@ -111,11 +112,28 @@ pub fn write_synth_expert_store(dir: &Path, cfg: &ModelConfig) -> Result<()> {
 
 /// Write `manifest.json` next to the weight files so a shard server can
 /// recover the model shape from the directory alone (`hobbit shard-serve`
-/// reads it back through `ModelConfig::from_manifest`).
+/// reads it back through `ModelConfig::from_manifest`). When the
+/// `experts_*.bin` files are already present (the normal call order), the
+/// manifest also carries the per-record `"integrity"` checksum table that
+/// `verify-weights` and `ExpertStore::load` check against.
 pub fn write_store_manifest(dir: &Path, cfg: &ModelConfig) -> Result<()> {
     std::fs::create_dir_all(dir)
         .with_context(|| format!("creating {}", dir.display()))?;
-    std::fs::write(dir.join("manifest.json"), cfg.to_manifest_json().to_string())
+    let bufs: Option<Vec<Vec<u8>>> = Precision::ALL
+        .iter()
+        .map(|p| std::fs::read(dir.join(format!("experts_{}.bin", p.name()))).ok())
+        .collect();
+    let mut manifest = cfg.to_manifest_json();
+    if let Some(bufs) = bufs {
+        let table = IntegrityTable::from_tier_buffers(
+            cfg,
+            [&bufs[0], &bufs[1], &bufs[2], &bufs[3]],
+        )?;
+        if let Json::Obj(m) = &mut manifest {
+            m.insert("integrity".to_string(), table.to_json());
+        }
+    }
+    std::fs::write(dir.join("manifest.json"), manifest.to_string())
         .with_context(|| format!("writing {}/manifest.json", dir.display()))?;
     Ok(())
 }
@@ -208,6 +226,15 @@ pub fn write_synth_model(dir: &Path, cfg: &ModelConfig, seed: u64) -> Result<()>
         debug_assert_eq!(tier.len(), cfg.bytes_for(p) * cfg.total_experts());
         std::fs::write(dir.join(format!("experts_{}.bin", p.name())), tier)?;
     }
+
+    // ---- manifest (shape + per-record integrity checksums) ------------
+    let table =
+        IntegrityTable::from_tier_buffers(cfg, [&tiers[0], &tiers[1], &tiers[2], &tiers[3]])?;
+    let mut manifest = cfg.to_manifest_json();
+    if let Json::Obj(m) = &mut manifest {
+        m.insert("integrity".to_string(), table.to_json());
+    }
+    std::fs::write(dir.join("manifest.json"), manifest.to_string())?;
     Ok(())
 }
 

@@ -8,6 +8,7 @@ use std::path::Path;
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::config::ModelConfig;
+use crate::model::integrity::IntegrityTable;
 use crate::util::json::Json;
 use crate::{ExpertKey, Precision};
 
@@ -77,6 +78,12 @@ pub struct ExpertStore {
     cfg: ModelConfig,
     /// per precision slot: backing buffer (f32-aligned) and record stride
     tiers: [Tier; 4],
+    /// per-record checksums computed from the loaded bytes — the reference
+    /// every downstream tier crossing (peer, staged, commit) verifies
+    /// against. When the directory carries a manifest integrity section,
+    /// load itself verifies against it, so a record that rotted on disk
+    /// before this process started is caught here.
+    integrity: IntegrityTable,
 }
 
 struct Tier {
@@ -117,7 +124,60 @@ impl ExpertStore {
             tiers.push(Tier { buf, record_bytes });
         }
         let tiers: [Tier; 4] = tiers.try_into().map_err(|_| anyhow!("tier count"))?;
-        Ok(Self { cfg: cfg.clone(), tiers })
+        let integrity = IntegrityTable::from_tier_buffers(
+            cfg,
+            [&tiers[0].buf, &tiers[1].buf, &tiers[2].buf, &tiers[3].buf],
+        )?;
+        let store = Self { cfg: cfg.clone(), tiers, integrity };
+        store.verify_against_manifest(weights_dir)?;
+        Ok(store)
+    }
+
+    /// If the directory carries a manifest with an integrity section,
+    /// check the loaded bytes against it; a mismatch is a typed error
+    /// naming the first rotten record. Directories without a manifest (or
+    /// with a manifest predating the integrity layer) load unverified —
+    /// the store's own computed table still guards every later tier hop.
+    fn verify_against_manifest(&self, weights_dir: &Path) -> Result<()> {
+        let man_path = weights_dir.join("manifest.json");
+        let text = match std::fs::read_to_string(&man_path) {
+            Ok(t) => t,
+            Err(_) => return Ok(()),
+        };
+        let j = Json::parse(&text).map_err(|e| anyhow!("{}: {e}", man_path.display()))?;
+        let Some(sec) = j.get("integrity") else { return Ok(()) };
+        let expected = IntegrityTable::from_json(sec)
+            .with_context(|| format!("{}: bad integrity section", man_path.display()))?;
+        anyhow::ensure!(
+            expected.records_per_tier() == self.cfg.total_experts(),
+            "{}: integrity covers {} records, model has {}",
+            man_path.display(),
+            expected.records_per_tier(),
+            self.cfg.total_experts()
+        );
+        for p in Precision::ALL {
+            for flat in 0..self.cfg.total_experts() {
+                if expected.checksum(flat, p) != self.integrity.checksum(flat, p) {
+                    let key = ExpertKey::new(
+                        (flat / self.cfg.n_experts as usize) as u32,
+                        (flat % self.cfg.n_experts as usize) as u32,
+                    );
+                    bail!(
+                        "expert record corrupt on disk: layer {} expert {} tier {} \
+                         fails its manifest checksum",
+                        key.layer,
+                        key.expert,
+                        p.name()
+                    );
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// The per-record checksum table (computed from the loaded bytes).
+    pub fn integrity(&self) -> &IntegrityTable {
+        &self.integrity
     }
 
     /// Raw record bytes of one expert at one precision.

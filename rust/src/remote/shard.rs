@@ -8,13 +8,17 @@
 //!   EXPERT <layer> <expert> <precision> [offset]
 //! ```
 //!
-//! answered with `OK <nbytes>\n` followed by exactly `nbytes` raw record
-//! bytes (the record suffix starting at `offset`, default 0), written in
-//! `chunk_bytes`-sized pieces so a slow reader never buffers a whole
-//! record in the kernel; errors come back as a single `ERR <reason>\n`
-//! line. `PING` answers `OK 0\n` (liveness probe). A server only answers
-//! for experts inside its [`ShardSpec`] — asking the wrong peer is a
-//! protocol error, not a silent wrong answer.
+//! answered with `OK <nbytes> <fnv1a64-hex>\n` followed by exactly
+//! `nbytes` raw record bytes (the record suffix starting at `offset`,
+//! default 0), written in `chunk_bytes`-sized pieces so a slow reader
+//! never buffers a whole record in the kernel; errors come back as a
+//! single `ERR <reason>\n` line. The frame's checksum field covers the
+//! body being sent, so the client detects a record corrupted anywhere on
+//! the peer→wire→client path the moment the last byte lands (clients
+//! tolerate a missing checksum field from pre-integrity peers). `PING`
+//! answers `OK 0\n` (liveness probe). A server only answers for experts
+//! inside its [`ShardSpec`] — asking the wrong peer is a protocol error,
+//! not a silent wrong answer.
 //!
 //! The client side, [`fetch_record`], reads the reply through the
 //! [`transport`] timeouts with bounded retry, reporting each chunk to a
@@ -28,9 +32,11 @@ use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
+use crate::faults::{FaultPlan, PeerFault};
 use crate::model::ExpertStore;
 use crate::remote::transport::{self, RetryPolicy};
 use crate::remote::ShardSpec;
+use crate::util::checksum::{fnv1a64, from_hex, to_hex};
 use crate::{ExpertKey, Precision};
 
 /// Streaming granularity of record responses (server write side and
@@ -43,6 +49,9 @@ pub struct ShardServer {
     store: Arc<ExpertStore>,
     shard: ShardSpec,
     chunk_bytes: usize,
+    /// chaos harness: corrupt/truncate replies on a seeded schedule
+    /// (`shard-serve --fault-plan`); None in production
+    faults: Option<Arc<FaultPlan>>,
 }
 
 impl ShardServer {
@@ -54,7 +63,16 @@ impl ShardServer {
     ) -> Result<Self> {
         let listener =
             TcpListener::bind(addr).with_context(|| format!("binding shard server {addr}"))?;
-        Ok(Self { listener, store, shard, chunk_bytes: chunk_bytes.max(1) })
+        Ok(Self { listener, store, shard, chunk_bytes: chunk_bytes.max(1), faults: None })
+    }
+
+    /// Attach a fault plan: replies corrupt or truncate on its schedule.
+    /// The frame checksum is always computed from the *clean* bytes, so
+    /// an injected flip is exactly what a real wire corruption looks like
+    /// to the client.
+    pub fn with_faults(mut self, faults: Option<Arc<FaultPlan>>) -> Self {
+        self.faults = faults;
+        self
     }
 
     pub fn local_addr(&self) -> SocketAddr {
@@ -72,8 +90,9 @@ impl ShardServer {
             let store = self.store.clone();
             let shard = self.shard.clone();
             let chunk = self.chunk_bytes;
+            let faults = self.faults.clone();
             std::thread::spawn(move || {
-                let _ = handle_conn(stream, &store, &shard, chunk);
+                let _ = handle_conn(stream, &store, &shard, chunk, faults.as_deref());
             });
         }
         Ok(())
@@ -95,6 +114,7 @@ fn handle_conn(
     store: &ExpertStore,
     shard: &ShardSpec,
     chunk_bytes: usize,
+    faults: Option<&FaultPlan>,
 ) -> io::Result<()> {
     // an idle or wedged client may not hold a server thread forever
     stream.set_read_timeout(Some(Duration::from_secs(30)))?;
@@ -114,13 +134,39 @@ fn handle_conn(
         }
         match parse_expert_request(req, store, shard) {
             Ok(Some(body)) => {
-                writer.write_all(format!("OK {}\n", body.len()).as_bytes())?;
-                // stream the record in chunks, the unit a slow peer
-                // back-pressures at
-                for piece in body.chunks(chunk_bytes) {
-                    writer.write_all(piece)?;
+                // the frame checksum covers the clean body: anything that
+                // changes a byte after this point — wire damage or an
+                // injected fault — fails the client's post-read check
+                let header = format!("OK {} {}\n", body.len(), to_hex(fnv1a64(body)));
+                match faults {
+                    Some(plan) => {
+                        let mut owned = body.to_vec();
+                        let fault = plan.on_peer_reply(&mut owned);
+                        let send: &[u8] = match fault {
+                            Some(PeerFault::Truncate(keep)) => &owned[..keep],
+                            _ => &owned,
+                        };
+                        writer.write_all(header.as_bytes())?;
+                        for piece in send.chunks(chunk_bytes) {
+                            writer.write_all(piece)?;
+                        }
+                        writer.flush()?;
+                        if matches!(fault, Some(PeerFault::Truncate(_))) {
+                            // a torn stream: drop the connection with the
+                            // client starved mid-record
+                            return Ok(());
+                        }
+                    }
+                    None => {
+                        writer.write_all(header.as_bytes())?;
+                        // stream the record in chunks, the unit a slow
+                        // peer back-pressures at
+                        for piece in body.chunks(chunk_bytes) {
+                            writer.write_all(piece)?;
+                        }
+                        writer.flush()?;
+                    }
                 }
-                writer.flush()?;
             }
             Ok(None) => {
                 writer.write_all(b"OK 0\n")?; // PING
@@ -244,16 +290,26 @@ fn fetch_once(
     let mut header = String::new();
     reader.read_line(&mut header)?;
     let header = header.trim();
-    let n: usize = match header.strip_prefix("OK ") {
-        Some(n) => n
-            .parse()
-            .map_err(|_| io::Error::new(io::ErrorKind::InvalidData, "bad OK header"))?,
+    let rest = match header.strip_prefix("OK ") {
+        Some(rest) => rest,
         None => {
             return Err(io::Error::new(
                 io::ErrorKind::InvalidData,
                 format!("peer {addr}: {header}"),
             ))
         }
+    };
+    let mut toks = rest.split_whitespace();
+    let n: usize = toks
+        .next()
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| io::Error::new(io::ErrorKind::InvalidData, "bad OK header"))?;
+    // frame checksum: optional for compatibility with pre-integrity peers
+    let wire_sum = match toks.next() {
+        Some(hex) => Some(from_hex(hex).ok_or_else(|| {
+            io::Error::new(io::ErrorKind::InvalidData, "bad OK header checksum")
+        })?),
+        None => None,
     };
     if n != expect_len {
         return Err(io::Error::new(
@@ -270,6 +326,17 @@ fn fetch_once(
         reader.read_exact(&mut bytes[read..read + m])?;
         on_chunk(m, t0.elapsed());
         read += m;
+    }
+    if let Some(sum) = wire_sum {
+        if fnv1a64(&bytes) != sum {
+            // deliberately InvalidData (non-retryable): a corrupt peer is
+            // failed over, not hammered — the tiered store heals from the
+            // next tier down
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!("peer {addr}: record checksum mismatch"),
+            ));
+        }
     }
     Ok(bytes)
 }
@@ -375,5 +442,47 @@ mod tests {
         // PING liveness answers on the same protocol
         let reply = transport::request_line(&addr, "PING", &policy).unwrap();
         assert_eq!(reply, "OK 0");
+    }
+
+    #[test]
+    fn flipped_reply_fails_the_frame_checksum_without_retry() {
+        let store = test_store("peerflip");
+        let plan = Arc::new(FaultPlan::parse("11:flip@peer#1").unwrap());
+        let server = ShardServer::bind("127.0.0.1:0", store.clone(), ShardSpec::all(), 4096)
+            .unwrap()
+            .with_faults(Some(plan));
+        let addr = server.serve_background().to_string();
+        let policy = RetryPolicy::fast();
+        let key = ExpertKey::new(0, 0);
+        let n = store.record_bytes(Precision::Q8);
+        // first reply is flipped after the header checksum was computed:
+        // the client's post-read check catches it, non-retryably
+        let err = fetch_record(&addr, key, Precision::Q8, 0, n, 4096, &policy, &mut |_, _| {})
+            .unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+        assert!(err.to_string().contains("checksum mismatch"), "{err}");
+        // the plan only fires once; the second fetch is clean
+        let got = fetch_record(&addr, key, Precision::Q8, 0, n, 4096, &policy, &mut |_, _| {})
+            .unwrap();
+        assert_eq!(got.bytes, store.record(key, Precision::Q8));
+    }
+
+    #[test]
+    fn truncated_reply_is_transient_and_retried() {
+        let store = test_store("peertrunc");
+        let plan = Arc::new(FaultPlan::parse("12:trunc@peer#1").unwrap());
+        let server = ShardServer::bind("127.0.0.1:0", store.clone(), ShardSpec::all(), 4096)
+            .unwrap()
+            .with_faults(Some(plan));
+        let addr = server.serve_background().to_string();
+        let policy = RetryPolicy::fast();
+        let key = ExpertKey::new(1, 1);
+        let n = store.record_bytes(Precision::Q4);
+        // first reply tears mid-record (connection drops): UnexpectedEof is
+        // transient, so the retry loop re-fetches and the record lands clean
+        let got = fetch_record(&addr, key, Precision::Q4, 0, n, 4096, &policy, &mut |_, _| {})
+            .unwrap();
+        assert_eq!(got.bytes, store.record(key, Precision::Q4));
+        assert_eq!(got.retries, 1, "torn stream must cost exactly one retry");
     }
 }

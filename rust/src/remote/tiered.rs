@@ -35,6 +35,7 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use crate::config::{ModelConfig, RemoteConfig};
+use crate::faults::FaultPlan;
 use crate::memory::{LinkModel, ThrottledCopier, PREFETCH_WEIGHT};
 use crate::metrics::LoaderStats;
 use crate::model::ExpertStore;
@@ -99,6 +100,10 @@ pub struct RemoteCounters {
     pub staged_hits: u64,
     /// records read from the local disk tier
     pub disk_fetches: u64,
+    /// records that failed their checksum at a tier boundary
+    pub integrity_failures: u64,
+    /// verified records served from a lower tier after a corrupt one
+    pub integrity_refetches: u64,
 }
 
 #[derive(Default)]
@@ -109,6 +114,8 @@ struct RemoteStats {
     peer_failovers: AtomicU64,
     staged_hits: AtomicU64,
     disk_fetches: AtomicU64,
+    integrity_failures: AtomicU64,
+    integrity_refetches: AtomicU64,
 }
 
 impl RemoteStats {
@@ -120,6 +127,8 @@ impl RemoteStats {
             peer_failovers: self.peer_failovers.load(Ordering::Relaxed),
             staged_hits: self.staged_hits.load(Ordering::Relaxed),
             disk_fetches: self.disk_fetches.load(Ordering::Relaxed),
+            integrity_failures: self.integrity_failures.load(Ordering::Relaxed),
+            integrity_refetches: self.integrity_refetches.load(Ordering::Relaxed),
         }
     }
 }
@@ -196,6 +205,13 @@ impl StagedCache {
             }
         }
     }
+
+    /// Quarantine one entry (a staged copy that failed its checksum).
+    fn remove(&mut self, k: &(ExpertKey, Precision)) {
+        if self.map.remove(k).is_some() {
+            self.order.retain(|e| e != k);
+        }
+    }
 }
 
 /// Everything the fetch path and the stager thread share.
@@ -212,11 +228,19 @@ struct Core {
     cooldown: Duration,
     chunk_bytes: usize,
     stats: RemoteStats,
+    /// deterministic fault injection (disk flips here; the loader pulls
+    /// the same plan for transfer faults); None in production
+    faults: Option<Arc<FaultPlan>>,
 }
 
 impl Core {
     fn flat(&self, key: ExpertKey) -> usize {
         key.index(self.local.config().n_experts)
+    }
+
+    /// Verify a full record against the local integrity table.
+    fn verify(&self, key: ExpertKey, p: Precision, bytes: &[u8]) -> bool {
+        self.local.integrity().verify(self.flat(key), p, bytes)
     }
 
     fn peer_for(&self, key: ExpertKey) -> Option<&Peer> {
@@ -281,30 +305,61 @@ impl Core {
 
     /// The demand fetch path: DRAM -> staged -> peer -> disk -> (last
     /// resort) the local buffer. Infallible by construction — a dead
-    /// peer degrades the tier, it never fails the fetch.
+    /// peer degrades the tier, it never fails the fetch, and a record
+    /// that fails its checksum at any boundary is quarantined and healed
+    /// from the next tier down (corruption costs latency, never
+    /// correctness).
     fn fetch(&self, key: ExpertKey, p: Precision, weight: f64) -> RecordRef<'_> {
         if self.peers.is_empty() || self.local_shard.contains(self.flat(key)) {
             return RecordRef::Local(self.local.record(key, p));
         }
-        if let Some(b) = self.staged.lock().unwrap().get(&(key, p)) {
-            self.stats.staged_hits.fetch_add(1, Ordering::Relaxed);
-            return RecordRef::Shared(b);
+        // set once a tier serves corrupt bytes; the first verified record
+        // from a lower tier then counts as an integrity re-fetch
+        let mut healing = false;
+        // bind outside the if-let: the lock guard must drop before the
+        // quarantine path re-locks to remove the entry
+        let staged_hit = self.staged.lock().unwrap().get(&(key, p));
+        if let Some(b) = staged_hit {
+            if self.verify(key, p, &b) {
+                self.stats.staged_hits.fetch_add(1, Ordering::Relaxed);
+                return RecordRef::Shared(b);
+            }
+            // quarantine the corrupt staged copy and heal from below
+            self.staged.lock().unwrap().remove(&(key, p));
+            self.stats.integrity_failures.fetch_add(1, Ordering::Relaxed);
+            healing = true;
         }
         if let Some(peer) = self.peer_for(key) {
             if peer.is_up() {
                 match self.fetch_from_peer(peer, key, p, weight) {
-                    Ok((bytes, retries)) => {
+                    Ok((bytes, retries)) if self.verify(key, p, &bytes) => {
                         peer.mark_up();
                         self.stats.remote_fetches.fetch_add(1, Ordering::Relaxed);
                         self.stats.remote_bytes.fetch_add(bytes.len() as u64, Ordering::Relaxed);
                         self.stats.remote_retries.fetch_add(retries as u64, Ordering::Relaxed);
+                        if healing {
+                            self.stats.integrity_refetches.fetch_add(1, Ordering::Relaxed);
+                        }
                         let arc = Arc::new(bytes);
                         self.staged.lock().unwrap().insert((key, p), arc.clone());
                         return RecordRef::Shared(arc);
                     }
-                    Err(_) => {
+                    Ok(_) => {
+                        // the frame checksum matched what the peer sent, but
+                        // the table says the peer's copy itself is corrupt:
+                        // break the circuit and heal from disk
+                        self.stats.integrity_failures.fetch_add(1, Ordering::Relaxed);
+                        peer.mark_down(self.cooldown);
+                        self.stats.peer_failovers.fetch_add(1, Ordering::Relaxed);
+                        healing = true;
+                    }
+                    Err(e) => {
                         // retries exhausted: break the circuit so the next
                         // fetches skip the connect/read budget entirely
+                        if is_integrity_error(&e) {
+                            self.stats.integrity_failures.fetch_add(1, Ordering::Relaxed);
+                            healing = true;
+                        }
                         peer.mark_down(self.cooldown);
                         self.stats.peer_failovers.fetch_add(1, Ordering::Relaxed);
                     }
@@ -316,18 +371,39 @@ impl Core {
             }
         }
         if let Some(disk) = &self.disk {
-            if let Ok(bytes) = disk.read(key, p) {
-                self.stats.disk_fetches.fetch_add(1, Ordering::Relaxed);
-                let arc = Arc::new(bytes);
-                self.staged.lock().unwrap().insert((key, p), arc.clone());
-                return RecordRef::Shared(arc);
+            if let Ok(mut bytes) = disk.read(key, p) {
+                if let Some(plan) = &self.faults {
+                    plan.on_disk_read(&mut bytes);
+                }
+                if self.verify(key, p, &bytes) {
+                    self.stats.disk_fetches.fetch_add(1, Ordering::Relaxed);
+                    if healing {
+                        self.stats.integrity_refetches.fetch_add(1, Ordering::Relaxed);
+                    }
+                    let arc = Arc::new(bytes);
+                    self.staged.lock().unwrap().insert((key, p), arc.clone());
+                    return RecordRef::Shared(arc);
+                }
+                // corrupt disk read: never serve it, heal from the local
+                // in-memory copy below
+                self.stats.integrity_failures.fetch_add(1, Ordering::Relaxed);
+                healing = true;
             }
         }
         // the local store physically holds every record (the shard mask is
-        // a modeling decision), so correctness survives even a vanished
-        // weights directory
+        // a modeling decision) and was checksum-verified at load, so
+        // correctness survives even a vanished weights directory
+        if healing {
+            self.stats.integrity_refetches.fetch_add(1, Ordering::Relaxed);
+        }
         RecordRef::Local(self.local.record(key, p))
     }
+}
+
+/// Is this fetch error a detected corruption (as opposed to a dead or
+/// unreachable peer)?
+fn is_integrity_error(e: &std::io::Error) -> bool {
+    e.kind() == std::io::ErrorKind::InvalidData && e.to_string().contains("checksum mismatch")
 }
 
 /// The loader-facing tiered store. See the module docs for the tier
@@ -354,8 +430,32 @@ impl TieredStore {
             cooldown: Duration::from_secs(2),
             chunk_bytes: shard::DEFAULT_CHUNK_BYTES,
             stats: RemoteStats::default(),
+            faults: None,
         };
         Self { core: Arc::new(core), stager: None }
+    }
+
+    /// Attach a fault plan to a single-node store (must be called before
+    /// the store is shared — multi-node stores thread the plan through
+    /// [`RemoteConfig::faults`] instead, because the stager thread already
+    /// holds a reference by the time `from_config` returns).
+    pub fn with_faults(mut self, faults: Option<Arc<FaultPlan>>) -> Self {
+        if let Some(core) = Arc::get_mut(&mut self.core) {
+            core.faults = faults;
+        }
+        self
+    }
+
+    /// The attached fault plan, if any: the loader pulls this for its
+    /// transfer/commit fault sites so one plan covers every tier.
+    pub fn faults(&self) -> Option<Arc<FaultPlan>> {
+        self.core.faults.clone()
+    }
+
+    /// The manifest checksum the commit-time verification expects for one
+    /// record (from the local store's integrity table).
+    pub fn expected_checksum(&self, key: ExpertKey, p: Precision) -> Option<u64> {
+        self.core.local.integrity().checksum(self.core.flat(key), p)
     }
 
     /// Multi-node store: validates the shard partition, builds the
@@ -395,6 +495,7 @@ impl TieredStore {
             cooldown: rc.cooldown,
             chunk_bytes: rc.chunk_bytes.max(1),
             stats: RemoteStats::default(),
+            faults: rc.faults.clone(),
         });
         let (tx, rx) = mpsc::channel::<(ExpertKey, Precision)>();
         let stager_core = core.clone();
@@ -469,12 +570,23 @@ impl TieredStore {
         s.peer_failovers = c.peer_failovers;
         s.remote_staged_hits = c.staged_hits;
         s.disk_fetches = c.disk_fetches;
+        // accumulated, not assigned: the loader counts its own commit-time
+        // failures/heals in the same fields
+        s.integrity_failures += c.integrity_failures;
+        s.integrity_refetches += c.integrity_refetches;
     }
 
     /// The network link class, when one exists (tests and benches probe
     /// its byte/lane accounting).
     pub fn net_copier(&self) -> Option<&Arc<ThrottledCopier>> {
         self.core.net.as_ref()
+    }
+
+    /// Test-only: plant raw bytes in the staged side-cache (simulating a
+    /// copy corrupted after it was staged).
+    #[cfg(test)]
+    fn stage_raw(&self, key: ExpertKey, p: Precision, bytes: Vec<u8>) {
+        self.core.staged.lock().unwrap().insert((key, p), Arc::new(bytes));
     }
 }
 
@@ -598,6 +710,108 @@ mod tests {
         let t0 = Instant::now();
         let _ = tiered.fetch(ExpertKey::new(2, 2), Precision::F32, 4.0);
         assert!(t0.elapsed() < Duration::from_millis(100), "cooldown must skip the dead peer");
+    }
+
+    #[test]
+    fn corrupt_staged_copy_is_quarantined_and_healed_from_peer() {
+        let (cfg, dir) = synth_dir("stagedheal");
+        let store = Arc::new(ExpertStore::load(&dir, &cfg).unwrap());
+        let server = ShardServer::bind(
+            "127.0.0.1:0",
+            store.clone(),
+            ShardSpec::parse("8-15").unwrap(),
+            4096,
+        )
+        .unwrap();
+        let addr = server.serve_background().to_string();
+        let rc = fast_remote(
+            vec![crate::config::PeerSpec { addr, shard: ShardSpec::parse("8-15").unwrap() }],
+            ShardSpec::parse("0-7").unwrap(),
+        );
+        let tiered = TieredStore::from_config(store.clone(), &rc, &dir).unwrap();
+
+        // plant a corrupted staged copy: one bit off the real record
+        let key = ExpertKey::new(2, 3);
+        let mut bad = store.record(key, Precision::Q8).to_vec();
+        bad[17] ^= 0x08;
+        tiered.stage_raw(key, Precision::Q8, bad);
+        assert_eq!(tiered.tier_of(key, Precision::Q8), FetchTier::Staged);
+
+        // the fetch never serves it: quarantined, healed from the peer
+        let rec = tiered.fetch(key, Precision::Q8, 4.0);
+        assert_eq!(rec.as_slice(), store.record(key, Precision::Q8));
+        let c = tiered.counters();
+        assert_eq!(c.integrity_failures, 1);
+        assert_eq!(c.integrity_refetches, 1);
+        assert_eq!(c.staged_hits, 0, "a corrupt staged copy is not a hit");
+        assert_eq!(c.remote_fetches, 1);
+        // the healed copy replaced the corrupt one in the side-cache
+        let _ = tiered.fetch(key, Precision::Q8, 4.0);
+        assert_eq!(tiered.counters().staged_hits, 1);
+    }
+
+    #[test]
+    fn corrupt_peer_heals_from_disk() {
+        let (cfg, dir) = synth_dir("peerheal");
+        let store = Arc::new(ExpertStore::load(&dir, &cfg).unwrap());
+        // the peer flips every reply after the frame checksum is computed,
+        // so the client detects it on the wire every time
+        let plan = Arc::new(crate::faults::FaultPlan::parse("5:flip@peer#*").unwrap());
+        let server = ShardServer::bind(
+            "127.0.0.1:0",
+            store.clone(),
+            ShardSpec::parse("8-15").unwrap(),
+            4096,
+        )
+        .unwrap()
+        .with_faults(Some(plan));
+        let addr = server.serve_background().to_string();
+        let rc = fast_remote(
+            vec![crate::config::PeerSpec { addr, shard: ShardSpec::parse("8-15").unwrap() }],
+            ShardSpec::parse("0-7").unwrap(),
+        );
+        let tiered = TieredStore::from_config(store.clone(), &rc, &dir).unwrap();
+
+        let key = ExpertKey::new(3, 2);
+        let rec = tiered.fetch(key, Precision::F32, 4.0);
+        assert_eq!(rec.as_slice(), store.record(key, Precision::F32));
+        let c = tiered.counters();
+        assert_eq!(c.integrity_failures, 1);
+        assert_eq!(c.integrity_refetches, 1);
+        assert_eq!(c.disk_fetches, 1, "heal must come from the disk tier");
+        assert!(c.peer_failovers >= 1);
+        assert_eq!(c.remote_fetches, 0, "a corrupt remote record never counts as fetched");
+    }
+
+    #[test]
+    fn corrupt_disk_read_falls_back_to_local_borrow() {
+        let (cfg, dir) = synth_dir("diskheal");
+        let store = Arc::new(ExpertStore::load(&dir, &cfg).unwrap());
+        let dead = {
+            let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap().to_string()
+        };
+        let mut rc = fast_remote(
+            vec![crate::config::PeerSpec { addr: dead, shard: ShardSpec::parse("8-15").unwrap() }],
+            ShardSpec::parse("0-7").unwrap(),
+        );
+        rc.faults = Some(Arc::new(crate::faults::FaultPlan::parse("9:flip@disk#1").unwrap()));
+        let tiered = TieredStore::from_config(store.clone(), &rc, &dir).unwrap();
+
+        // peer dead, disk read flipped: the last-resort local borrow still
+        // returns the correct bytes
+        let key = ExpertKey::new(3, 0);
+        let rec = tiered.fetch(key, Precision::Q4, 4.0);
+        assert_eq!(rec.as_slice(), store.record(key, Precision::Q4));
+        let c = tiered.counters();
+        assert_eq!(c.integrity_failures, 1);
+        assert_eq!(c.integrity_refetches, 1);
+        assert_eq!(c.disk_fetches, 0, "a corrupt disk read never counts as served");
+
+        // next fetch: the plan is spent, disk serves clean
+        let rec = tiered.fetch(ExpertKey::new(2, 1), Precision::Q4, 4.0);
+        assert_eq!(rec.as_slice(), store.record(ExpertKey::new(2, 1), Precision::Q4));
+        assert_eq!(tiered.counters().disk_fetches, 1);
     }
 
     #[test]

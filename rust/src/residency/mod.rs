@@ -144,6 +144,21 @@ impl LoadState {
         }
     }
 
+    /// Timed variant of [`Self::block`]: true when the state resolved,
+    /// false when `timeout` elapsed first (the watchdog's wedge signal).
+    fn block_for(&self, timeout: Duration) -> bool {
+        let deadline = Instant::now() + timeout;
+        let mut g = self.inner.lock().unwrap();
+        while !g.done {
+            let now = Instant::now();
+            if now >= deadline {
+                return false;
+            }
+            g = self.cv.wait_timeout(g, deadline - now).unwrap().0;
+        }
+        true
+    }
+
     /// Register a wakeup; false (not registered) if already complete.
     fn subscribe(&self, cb: Box<dyn FnOnce() + Send>) -> bool {
         let mut g = self.inner.lock().unwrap();
@@ -254,14 +269,6 @@ impl TicketSet {
     pub fn all_ready(&self) -> bool {
         self.tickets.iter().all(|t| t.is_ready())
     }
-
-    fn block(&self) -> Duration {
-        let t0 = Instant::now();
-        for t in &self.tickets {
-            t.state.block();
-        }
-        t0.elapsed()
-    }
 }
 
 // ---------------------------------------------------------------------
@@ -344,12 +351,23 @@ fn install_completion(
     let io_retry = io.clone();
     io.on_complete_consume_outcome(id, move |_, outcome| {
         let mut fulfilled = outcome == LoadOutcome::Fulfilled;
-        if outcome == LoadOutcome::NoSlot && kind == TaskKind::OnDemand && reacquires > 0 {
+        // Corrupt is NoSlot-shaped: the slot was quarantined, the expert is
+        // not resident, and a fresh task re-fetches the store's clean copy
+        // — the integrity layer's bounded self-heal rides the same
+        // re-acquire machinery
+        let heal = outcome == LoadOutcome::Corrupt;
+        if (outcome == LoadOutcome::NoSlot || heal)
+            && kind == TaskKind::OnDemand
+            && reacquires > 0
+        {
             // re-acquire: a fresh task gets a fresh reserve() attempt
             // (pins may have released since); a staged plan stays staged
             if let Some(new_id) =
                 io_retry.submit_staged(key, precision, upgrade_to, pool, kind, layer, scope)
             {
+                if heal {
+                    io_retry.stats.lock().unwrap().integrity_refetches += 1;
+                }
                 state.task_id.store(new_id, Ordering::SeqCst);
                 install_completion(
                     io_retry,
@@ -426,6 +444,11 @@ pub struct ExpertResidency {
     /// overload ladder stage 2: drop speculative prefetch planning so the
     /// link serves on-demand misses only
     prefetch_shed: AtomicBool,
+    /// wedged-ticket watchdog period ([`IoConfig::watchdog_ms`]; zero
+    /// disables): a ticket still unresolved after this long gets an
+    /// idempotent re-submit — the loader's dedup makes the poke a no-op
+    /// while the original task is merely slow
+    watchdog: Duration,
 }
 
 impl ExpertResidency {
@@ -481,6 +504,7 @@ impl ExpertResidency {
         lo: Precision,
         io: IoConfig,
     ) -> Self {
+        let watchdog = Duration::from_millis(io.watchdog_ms);
         let loader = ExpertLoader::start_tiered(store.clone(), cache.clone(), copier.clone(), io);
         let gens = loader.gen_table();
         Self {
@@ -500,6 +524,7 @@ impl ExpertResidency {
             deadline_urgent: AtomicBool::new(false),
             queue_pressure: AtomicBool::new(false),
             prefetch_shed: AtomicBool::new(false),
+            watchdog,
         }
     }
 
@@ -897,10 +922,62 @@ impl ExpertResidency {
     /// Block until every ticket in `waits` resolves; the blocked time is
     /// charged to the loader's `wait_time` (the unhidden-stall metric on
     /// the batch-1 path). Returns the wall time spent.
+    ///
+    /// With a nonzero [`IoConfig::watchdog_ms`] the block is supervised: a
+    /// ticket still unresolved after a full watchdog period is presumed
+    /// wedged (a completion lost to a fault, a lane stalled forever) and
+    /// recovered via [`Self::recover_wedged`]; the wait then resumes. A
+    /// slow-but-alive load tolerates the poke — re-submission dedups
+    /// against the resident/incoming slot — so the watchdog can only add
+    /// latency, never change what gets served.
     pub fn wait(&self, waits: &TicketSet) -> Duration {
-        let waited = waits.block();
+        let t0 = Instant::now();
+        for t in waits.tickets() {
+            if self.watchdog.is_zero() {
+                t.state.block();
+            } else {
+                while !t.state.block_for(self.watchdog) {
+                    self.recover_wedged(t);
+                }
+            }
+        }
+        let waited = t0.elapsed();
         self.loader.stats.lock().unwrap().wait_time += waited;
         waited
+    }
+
+    /// Watchdog recovery for one wedged ticket: count the event, then
+    /// re-submit the load under the same shared state. If the original
+    /// task is alive the submit finds the expert incoming and returns
+    /// None — the poke was a no-op; if the task (or its completion) was
+    /// lost, the fresh on-demand task re-points the state and its
+    /// completion hook resolves the ticket.
+    fn recover_wedged(&self, t: &Ticket) {
+        self.loader.stats.lock().unwrap().watchdog_recoveries += 1;
+        if let Some(new_id) = self.loader.submit_staged(
+            t.key,
+            t.precision,
+            None,
+            t.pool,
+            TaskKind::OnDemand,
+            t.key.layer,
+            GLOBAL_SCOPE,
+        ) {
+            t.state.task_id.store(new_id, Ordering::SeqCst);
+            install_completion(
+                self.loader.io(),
+                self.inflight.clone(),
+                t.key,
+                t.precision,
+                None,
+                t.pool,
+                TaskKind::OnDemand,
+                t.key.layer,
+                GLOBAL_SCOPE,
+                t.state.clone(),
+                NOSLOT_REACQUIRES,
+            );
+        }
     }
 
     // ---- post-barrier accessors (FFN execution path) -----------------

@@ -61,12 +61,17 @@ pub struct Manifest {
     /// raw model section (config/mod.rs parses it into ModelConfig)
     pub model: Json,
     pub artifacts: BTreeMap<String, ArtifactSpec>,
+    /// raw per-record checksum section, preserved verbatim when present
+    /// (`model::integrity::IntegrityTable::from_json` parses it); older
+    /// artifact sets predate it.
+    pub integrity: Option<Json>,
 }
 
 impl Manifest {
     pub fn parse(text: &str) -> Result<Self, String> {
         let j = Json::parse(text)?;
         let model = j.get("model").cloned().ok_or("manifest missing 'model'")?;
+        let integrity = j.get("integrity").cloned();
         let arts = j
             .get("artifacts")
             .and_then(Json::as_obj)
@@ -95,7 +100,7 @@ impl Manifest {
             let outputs = a.get("outputs").and_then(Json::as_usize).unwrap_or(1);
             artifacts.insert(name.clone(), ArtifactSpec { file, inputs, outputs });
         }
-        Ok(Self { model, artifacts })
+        Ok(Self { model, artifacts, integrity })
     }
 
     /// Names of all artifacts used in decode (S = 1) for a given prefetch
@@ -169,6 +174,20 @@ mod tests {
         assert_eq!(a.inputs[0], (vec![1, 256], DType::F32));
         assert_eq!(a.inputs[1], (vec![], DType::I32));
         assert_eq!(m.artifacts["expert_q8_s1"].inputs[0].1, DType::U8);
+    }
+
+    #[test]
+    fn integrity_section_is_carried_through() {
+        let m = Manifest::parse(SRC).unwrap();
+        assert!(m.integrity.is_none(), "seed manifests predate integrity");
+        let with = SRC.replacen(
+            "\"model\"",
+            "\"integrity\": {\"algo\": \"fnv1a64\", \"records\": {}}, \"model\"",
+            1,
+        );
+        let m = Manifest::parse(&with).unwrap();
+        let sec = m.integrity.expect("integrity preserved");
+        assert_eq!(sec.get("algo").and_then(Json::as_str), Some("fnv1a64"));
     }
 
     #[test]

@@ -1160,6 +1160,76 @@ pub fn simulate_remote_cluster(
 }
 
 // ---------------------------------------------------------------------
+// Faulty-link model (integrity layer's re-fetch penalty)
+// ---------------------------------------------------------------------
+
+/// Outcome of [`simulate_faulty_link`]: the latency cost of integrity
+/// healing at DES scale.
+#[derive(Debug, Clone, Default)]
+pub struct FaultyLinkResult {
+    /// expert fetches demanded
+    pub fetches: u64,
+    /// fetches whose peer bytes failed verification (quarantined)
+    pub corrupt: u64,
+    /// clean re-fetches from the next tier down (here: disk)
+    pub refetches: u64,
+    /// wall time until the last fetch verifies, with corruption
+    pub total_time: f64,
+    /// wall time of the identical fetch sequence with zero corruption
+    pub clean_time: f64,
+}
+
+impl FaultyLinkResult {
+    /// Extra wall time the corruption cost (the heal penalty).
+    pub fn heal_penalty(&self) -> f64 {
+        (self.total_time - self.clean_time).max(0.0)
+    }
+}
+
+/// DES twin of the integrity layer's quarantine-and-heal path: `n_fetches`
+/// expert records are pulled over a peer network link; each delivery is
+/// corrupt with probability `corrupt_rate` (deterministic in `seed`), in
+/// which case the bytes are quarantined and the record is re-fetched once
+/// from the next tier down — the disk link — which always verifies
+/// (matching the real system, where the manifest checksums come FROM
+/// disk). Both links are serialized timelines, so the model also captures
+/// queueing behind the healing traffic. The invariant this exists to pin:
+/// per corruption, healing costs at most one extra tier fetch — never a
+/// retry storm.
+pub fn simulate_faulty_link(
+    n_fetches: usize,
+    expert_bytes: f64,
+    corrupt_rate: f64,
+    peer: (f64, f64),
+    disk: (f64, f64),
+    seed: u64,
+) -> FaultyLinkResult {
+    let mut out = FaultyLinkResult::default();
+    let mut rng = Rng::new(seed ^ 0xfa17_11e5);
+    let mut net = Link { free_at: 0.0, bw: peer.0.max(1.0), lat: peer.1 };
+    let mut dsk = Link { free_at: 0.0, bw: disk.0.max(1.0), lat: disk.1 };
+    let mut clean_net = Link { free_at: 0.0, bw: peer.0.max(1.0), lat: peer.1 };
+    let mut now = 0.0f64;
+    let mut clean_now = 0.0f64;
+    for _ in 0..n_fetches {
+        out.fetches += 1;
+        let mut done = net.enqueue(now, expert_bytes);
+        if rng.f64() < corrupt_rate {
+            // commit-time verification rejects the peer bytes: quarantine,
+            // then exactly one clean fetch from the tier below
+            out.corrupt += 1;
+            out.refetches += 1;
+            done = dsk.enqueue(done, expert_bytes);
+        }
+        now = done;
+        clean_now = clean_net.enqueue(clean_now, expert_bytes);
+    }
+    out.total_time = now;
+    out.clean_time = clean_now;
+    out
+}
+
+// ---------------------------------------------------------------------
 // Open-loop overload model (traffic harness + degradation ladder)
 // ---------------------------------------------------------------------
 
@@ -1290,6 +1360,31 @@ mod tests {
         let model = SimModel::mixtral_8x7b();
         let traces = generate(&TraceGenConfig::mixtral_like(), 2, 24);
         (hw, model, traces)
+    }
+
+    #[test]
+    fn faulty_link_heal_costs_at_most_one_tier_fetch() {
+        let bytes = 4.0e6;
+        let peer = (1.0e9, 0.5e-3);
+        let disk = (0.5e9, 1.0e-3);
+        let r = simulate_faulty_link(200, bytes, 0.2, peer, disk, 7);
+        assert!(r.corrupt > 0, "0.2 corruption rate over 200 fetches must fire");
+        assert_eq!(r.refetches, r.corrupt, "every quarantine heals exactly once");
+        // the invariant: per corruption, healing costs at most one fetch
+        // from the next tier down — never a retry storm
+        let disk_fetch = disk.1 + bytes / disk.0;
+        assert!(
+            r.heal_penalty() <= r.corrupt as f64 * disk_fetch + 1e-9,
+            "penalty {} > {} corruptions x one disk fetch {}",
+            r.heal_penalty(),
+            r.corrupt,
+            disk_fetch,
+        );
+        assert!(r.heal_penalty() > 0.0, "corruption is never free");
+        // a fault-free run costs exactly the clean timeline
+        let r0 = simulate_faulty_link(200, bytes, 0.0, peer, disk, 7);
+        assert_eq!(r0.corrupt, 0);
+        assert_eq!(r0.total_time, r0.clean_time);
     }
 
     #[test]

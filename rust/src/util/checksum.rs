@@ -1,0 +1,74 @@
+//! Record checksums: 64-bit FNV-1a, the integrity layer's one hash.
+//!
+//! FNV-1a is not cryptographic — the threat model is bit rot and torn
+//! transfers, not an adversary — but it is byte-order stable, allocation
+//! free, fast enough to run on every tier-crossing commit, and trivially
+//! reimplemented by the Python export step (`python/compile/gen_weights.py`
+//! writes the same values into `manifest.json`). All record checksums in
+//! the system (manifest, shard-protocol frame field, commit verification)
+//! are this function over the raw record bytes.
+
+/// FNV-1a offset basis (64-bit).
+pub const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+
+/// FNV-1a prime (64-bit).
+pub const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// 64-bit FNV-1a over `bytes`.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = FNV_OFFSET;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// Render a checksum the way manifests store it (16 lowercase hex digits,
+/// zero padded — u64 does not survive a round-trip through JSON's f64
+/// numbers, strings do).
+pub fn to_hex(sum: u64) -> String {
+    format!("{sum:016x}")
+}
+
+/// Parse a manifest-format checksum; `None` on anything but 16 hex digits.
+pub fn from_hex(s: &str) -> Option<u64> {
+    if s.len() != 16 {
+        return None;
+    }
+    u64::from_str_radix(s, 16).ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_vectors() {
+        // standard FNV-1a test vectors
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a64(b"foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn single_bit_flip_changes_sum() {
+        let mut rec = vec![0u8; 4096];
+        for (i, b) in rec.iter_mut().enumerate() {
+            *b = (i % 251) as u8;
+        }
+        let clean = fnv1a64(&rec);
+        rec[1234] ^= 0x10;
+        assert_ne!(clean, fnv1a64(&rec));
+    }
+
+    #[test]
+    fn hex_round_trips() {
+        for sum in [0u64, 1, 0xcbf2_9ce4_8422_2325, u64::MAX] {
+            assert_eq!(from_hex(&to_hex(sum)), Some(sum));
+        }
+        assert_eq!(from_hex("xyz"), None);
+        assert_eq!(from_hex("00ff"), None, "short strings rejected");
+        assert_eq!(from_hex("00000000000000000"), None, "long strings rejected");
+    }
+}

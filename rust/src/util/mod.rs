@@ -3,6 +3,7 @@
 //! small pieces of those we need are implemented here.
 
 pub mod benchkit;
+pub mod checksum;
 pub mod json;
 pub mod proptest_mini;
 pub mod rng;

@@ -1,0 +1,461 @@
+//! End-to-end expert-record integrity: checksums at every tier boundary,
+//! deterministic fault injection, and self-healing re-fetch.
+//!
+//! Everything here is artifact-free (synthetic stores / synthetic model),
+//! in the style of `remote_tier.rs`. The per-tier detection unit tests
+//! live next to the code (`remote::tiered`, `remote::shard`, `cache`,
+//! `faults`); this suite covers the composed system:
+//!
+//! * **chaos-under-bit-identity** (the headline acceptance run): a full
+//!   generation under a hostile seeded fault plan — a disk bit-flip, a
+//!   truncated peer stream, a flipped peer reply, a stalled I/O lane, a
+//!   corrupted in-flight transfer — produces logits byte-identical to the
+//!   fault-free run, with the damage visible only in the integrity
+//!   counters (and never in the FCFS report);
+//! * **retry-exhaustion bypass**: when every re-acquire lands corrupt, the
+//!   ticket resolves unfulfilled and the cache-bypass path still serves
+//!   clean verified bytes — corruption degrades latency, never
+//!   correctness or availability;
+//! * **torn upgrade**: a corrupted in-place upgrade commit never touches
+//!   the slot (the floor record keeps serving), heals within the bounded
+//!   reheal budget, and aborts cleanly when the budget exhausts;
+//! * **`hobbit verify-weights`**: the CLI scan passes on a clean store and
+//!   fails (exit 1, FAIL line) on a deliberately flipped byte;
+//! * **multi-process corrupt peer**: a real `shard-serve` child serving
+//!   deliberately flipped records is quarantined at the frame checksum and
+//!   healed from the disk tier, bit-identically.
+
+use std::io::{BufRead, BufReader};
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use hobbit::cache::{CacheManager, Policy, Pool};
+use hobbit::config::{HardwareConfig, IoConfig, ModelConfig, PeerSpec, PolicyConfig, RemoteConfig};
+use hobbit::coordinator::{Coordinator, Request};
+use hobbit::engine::{Engine, EngineOptions};
+use hobbit::faults::FaultPlan;
+use hobbit::loader::scorer::Class;
+use hobbit::memory::{LinkModel, ThrottledCopier, ONDEMAND_WEIGHT};
+use hobbit::model::synth::{
+    tiny_model_config, tiny_store_config, write_store_manifest, write_synth_expert_store,
+    write_synth_model,
+};
+use hobbit::model::ExpertStore;
+use hobbit::predictor::Predictor;
+use hobbit::remote::{RetryPolicy, ShardSpec, TieredStore};
+use hobbit::residency::ExpertResidency;
+use hobbit::tokenizer::BOS;
+use hobbit::{ExpertKey, Precision};
+
+// ---------------------------------------------------------------------
+// Shared rigs
+// ---------------------------------------------------------------------
+
+/// Synthetic store on disk (4 layers x 4 experts) plus its manifest, so
+/// `ExpertStore::load` verifies against real checksums.
+fn synth_store(name: &str) -> (ModelConfig, PathBuf, Arc<ExpertStore>) {
+    let cfg = tiny_store_config(name);
+    let dir = std::env::temp_dir().join(format!("hobbit_integrity_{name}"));
+    write_synth_expert_store(&dir, &cfg).expect("synth store");
+    write_store_manifest(&dir, &cfg).expect("manifest");
+    let store = Arc::new(ExpertStore::load(&dir, &cfg).unwrap());
+    (cfg, dir, store)
+}
+
+/// Residency facade over a (possibly fault-injected) tiered store.
+fn mk_residency(
+    tiered: Arc<TieredStore>,
+    progressive: bool,
+) -> (ExpertResidency, Arc<ThrottledCopier>) {
+    let cfg = tiered.config().clone();
+    let cache = Arc::new(Mutex::new(CacheManager::new(
+        cfg.n_layers,
+        cfg.n_experts,
+        8,
+        cfg.bytes_for(Precision::F32),
+        4,
+        cfg.bytes_for(Precision::Q8),
+        Policy::Lru,
+        0.25,
+    )));
+    let copier = Arc::new(ThrottledCopier::new(LinkModel { bytes_per_s: 1e9, latency_s: 0.0 }));
+    let predictor = Predictor::new(2, cfg.top_k, 0.6, 0.9, true, cfg.n_layers);
+    let resid = ExpertResidency::with_tiered(
+        tiered,
+        cache,
+        copier.clone(),
+        predictor,
+        Precision::F32,
+        Precision::Q8,
+        IoConfig { lanes: 2, chunk_bytes: 1024, ..IoConfig::default() },
+    )
+    .with_precision_mode(None, progressive, 0.6);
+    (resid, copier)
+}
+
+fn drain(resid: &ExpertResidency) {
+    let t0 = Instant::now();
+    while !resid.is_idle() {
+        assert!(t0.elapsed() < Duration::from_secs(30), "loader never drained");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+}
+
+// ---------------------------------------------------------------------
+// (a) retry-exhaustion bypass: corruption degrades latency, never
+//     correctness or availability
+// ---------------------------------------------------------------------
+
+#[test]
+fn exhausted_heals_resolve_unfulfilled_and_bypass_serves_clean_bytes() {
+    let (_cfg, _dir, store) = synth_store("bypass");
+    // EVERY fresh transfer flips a bit: the initial attempt and all three
+    // re-acquires land corrupt, so the heal budget must exhaust
+    let plan = Arc::new(FaultPlan::parse("3:flip@xfer#*").unwrap());
+    let tiered =
+        Arc::new(TieredStore::local_only(store.clone()).with_faults(Some(plan.clone())));
+    let (resid, _copier) = mk_residency(tiered.clone(), false);
+
+    let key = ExpertKey::new(1, 2);
+    let (_u, waits) = resid.acquire(1, vec![(key, Class::Hi, vec![1.0], 0.0)], None);
+    assert_eq!(waits.len(), 1, "the miss must submit a load");
+    resid.wait(&waits);
+    let t = &waits.tickets()[0];
+    assert!(t.is_ready(), "an exhausted ticket still resolves — waiters never wedge");
+    assert!(!t.is_fulfilled(), "every attempt was corrupt; the ticket must be unfulfilled");
+    assert!(
+        resid.resident_record(key, Pool::Hi).is_none(),
+        "a quarantined expert must never be served from the cache"
+    );
+
+    // 1 initial attempt + 3 re-acquires, all corrupt-at-commit
+    let st = resid.loader_stats();
+    assert_eq!(st.integrity_failures, 4, "failures: {st:?}");
+    assert_eq!(st.quarantined_slots, 4);
+    assert_eq!(st.integrity_refetches, 3, "one heal per re-acquire");
+
+    // availability: the bypass path reads the tier hierarchy directly —
+    // transfer faults live on the loader's lanes, so the bytes are clean
+    // and verified
+    let rec = tiered.fetch(key, Precision::F32, ONDEMAND_WEIGHT);
+    assert_eq!(rec.as_slice(), store.record(key, Precision::F32), "bypass bytes diverged");
+    assert!(plan.injected() >= 4);
+    resid.release(key, Pool::Hi);
+}
+
+// ---------------------------------------------------------------------
+// (b) a corrupt commit heals transparently: one flip, one re-acquire,
+//     byte-identical residency
+// ---------------------------------------------------------------------
+
+#[test]
+fn single_corrupt_commit_heals_and_serves_identical_bytes() {
+    let (_cfg, _dir, store) = synth_store("heal");
+    let plan = Arc::new(FaultPlan::parse("11:flip@xfer#1").unwrap());
+    let tiered = Arc::new(TieredStore::local_only(store.clone()).with_faults(Some(plan)));
+    let (resid, _copier) = mk_residency(tiered, false);
+
+    let key = ExpertKey::new(2, 3);
+    let (_u, waits) = resid.acquire(2, vec![(key, Class::Hi, vec![1.0], 0.0)], None);
+    resid.wait(&waits);
+    assert!(waits.tickets()[0].is_fulfilled(), "one corrupt commit must heal, not exhaust");
+    let (tier, bytes) = resid.resident_record(key, Pool::Hi).expect("resident after heal");
+    assert_eq!(tier, Precision::F32);
+    assert_eq!(&bytes[..], store.record(key, Precision::F32), "healed bytes diverged");
+    let st = resid.loader_stats();
+    assert_eq!(st.integrity_failures, 1);
+    assert_eq!(st.quarantined_slots, 1);
+    assert_eq!(st.integrity_refetches, 1);
+    resid.release(key, Pool::Hi);
+}
+
+// ---------------------------------------------------------------------
+// (c) torn upgrades: the slot never regresses, heals are bounded
+// ---------------------------------------------------------------------
+
+#[test]
+fn torn_upgrade_heals_within_budget_and_lands_exact_hi_bytes() {
+    let (_cfg, _dir, store) = synth_store("tear_heal");
+    let plan = Arc::new(FaultPlan::parse("5:tear@upgrade#1").unwrap());
+    let tiered = Arc::new(TieredStore::local_only(store.clone()).with_faults(Some(plan)));
+    let (resid, _copier) = mk_residency(tiered, true);
+
+    // tolerant progressive miss: Q8 floor now, F32 upgrade behind it —
+    // the first upgrade commit is torn, the reheal lands clean
+    let key = ExpertKey::new(0, 1);
+    let (_u, waits) = resid.acquire(0, vec![(key, Class::Hi, vec![1.0], 1.0)], None);
+    resid.wait(&waits);
+    drain(&resid);
+    let (tier, bytes) = resid.resident_record(key, Pool::Hi).expect("resident");
+    assert_eq!(tier, Precision::F32, "the healed upgrade must land");
+    assert_eq!(&bytes[..], store.record(key, Precision::F32), "upgraded bytes diverged");
+    let st = resid.loader_stats();
+    assert_eq!(st.integrity_failures, 1);
+    assert_eq!(st.integrity_refetches, 1);
+    assert_eq!(st.upgrades_committed, 1);
+    assert_eq!(st.upgrades_aborted, 0);
+    assert_eq!(st.quarantined_slots, 0, "a torn upgrade never touches the slot");
+    resid.release(key, Pool::Hi);
+}
+
+#[test]
+fn torn_upgrade_exhausts_reheal_budget_and_keeps_serving_the_floor() {
+    let (_cfg, _dir, store) = synth_store("tear_abort");
+    // EVERY upgrade commit is torn: initial + MAX_INTEGRITY_HEALS reheals
+    let plan = Arc::new(FaultPlan::parse("5:tear@upgrade#*").unwrap());
+    let tiered = Arc::new(TieredStore::local_only(store.clone()).with_faults(Some(plan)));
+    let (resid, _copier) = mk_residency(tiered, true);
+
+    let key = ExpertKey::new(0, 2);
+    let (_u, waits) = resid.acquire(0, vec![(key, Class::Hi, vec![1.0], 1.0)], None);
+    resid.wait(&waits);
+    drain(&resid);
+    // the upgrade never lands, but the floor record keeps serving —
+    // valid, verified lo-tier bytes
+    let (tier, bytes) = resid.resident_record(key, Pool::Hi).expect("floor still resident");
+    assert_eq!(tier, Precision::Q8, "an aborted upgrade must leave the floor tier");
+    assert_eq!(&bytes[..], store.record(key, Precision::Q8), "floor bytes diverged");
+    let st = resid.loader_stats();
+    assert_eq!(st.integrity_failures, 3, "initial + 2 bounded reheals");
+    assert_eq!(st.integrity_refetches, 2);
+    assert_eq!(st.upgrades_committed, 0);
+    assert_eq!(st.upgrades_aborted, 1, "budget exhaustion must abort, not loop");
+    resid.release(key, Pool::Hi);
+}
+
+// ---------------------------------------------------------------------
+// (d) `hobbit verify-weights`: clean pass, flipped-byte fail
+// ---------------------------------------------------------------------
+
+#[test]
+fn verify_weights_cli_catches_a_flipped_byte() {
+    let cfg = tiny_store_config("verify_cli");
+    let dir = std::env::temp_dir().join("hobbit_integrity_verify_cli");
+    write_synth_expert_store(&dir, &cfg).expect("synth store");
+    write_store_manifest(&dir, &cfg).expect("manifest");
+
+    let run = || {
+        Command::new(env!("CARGO_BIN_EXE_hobbit"))
+            .args(["verify-weights", "--weights", dir.to_str().unwrap()])
+            .output()
+            .expect("run verify-weights")
+    };
+    let clean = run();
+    assert!(clean.status.success(), "clean store must pass: {clean:?}");
+    let stdout = String::from_utf8_lossy(&clean.stdout).to_string();
+    assert!(stdout.contains("0 failed"), "unexpected clean output: {stdout}");
+
+    // flip one bit of one q4 record on disk
+    let path = dir.join("experts_q4.bin");
+    let mut bytes = std::fs::read(&path).unwrap();
+    let rb = cfg.bytes_for(Precision::Q4);
+    bytes[rb * 5 + 17] ^= 0x10;
+    std::fs::write(&path, &bytes).unwrap();
+
+    let bad = run();
+    assert!(!bad.status.success(), "corrupt store must exit nonzero");
+    let stdout = String::from_utf8_lossy(&bad.stdout).to_string();
+    assert!(stdout.contains("FAIL"), "no FAIL line in: {stdout}");
+    assert!(stdout.contains("1 failed"), "exactly one record was flipped: {stdout}");
+}
+
+// ---------------------------------------------------------------------
+// (e) the chaos acceptance run + multi-process corrupt peer
+// ---------------------------------------------------------------------
+
+const MP_STEPS: usize = 16;
+
+struct KillOnDrop(Vec<Child>);
+
+impl Drop for KillOnDrop {
+    fn drop(&mut self) {
+        for c in &mut self.0 {
+            let _ = c.kill();
+            let _ = c.wait();
+        }
+    }
+}
+
+/// Spawn `hobbit shard-serve` (optionally with a fault plan) and parse
+/// the bound address from its banner line.
+fn spawn_shard_server(dir: &Path, shard: &str, fault_plan: Option<&str>) -> (Child, String) {
+    let mut args = vec![
+        "shard-serve".to_string(),
+        "--weights".into(),
+        dir.to_str().unwrap().into(),
+        "--shard".into(),
+        shard.into(),
+        "--addr".into(),
+        "127.0.0.1:0".into(),
+    ];
+    if let Some(fp) = fault_plan {
+        args.push("--fault-plan".into());
+        args.push(fp.into());
+    }
+    let mut child = Command::new(env!("CARGO_BIN_EXE_hobbit"))
+        .args(&args)
+        .stdout(Stdio::piped())
+        .stderr(Stdio::inherit())
+        .spawn()
+        .expect("spawn shard-serve");
+    let mut line = String::new();
+    BufReader::new(child.stdout.as_mut().expect("child stdout"))
+        .read_line(&mut line)
+        .expect("read shard-serve banner");
+    let addr = line
+        .trim()
+        .strip_prefix("shard-serve listening on ")
+        .unwrap_or_else(|| panic!("unexpected shard-serve banner: {line:?}"))
+        .to_string();
+    (child, addr)
+}
+
+/// Reference engine over the synthesized model, pinned F32 (progressive
+/// logits are timing-dependent; pinned generation is bit-deterministic,
+/// so healing must reproduce it exactly).
+fn reference_engine(
+    dir: &Path,
+    remote: Option<RemoteConfig>,
+    faults: Option<Arc<FaultPlan>>,
+    watchdog_ms: u64,
+) -> Engine {
+    let cfg = tiny_model_config("integrity-mp");
+    let hw = HardwareConfig {
+        name: "integrity-mp".into(),
+        load_bw: 64e9,
+        load_latency: 0.0,
+        hi_cache_experts: 4,
+        lo_cache_experts: 4,
+        cpu_assist: false,
+        cpu_expert_time: 0.0,
+    };
+    let policy = PolicyConfig {
+        dynamic_loading: false,
+        pin_precision: Some(Precision::F32),
+        prefetch_depth: 0,
+        ..PolicyConfig::default()
+    };
+    let mut opts = EngineOptions::new(hw, policy);
+    opts.remote = remote;
+    opts.faults = faults;
+    opts.io.watchdog_ms = watchdog_ms;
+    Engine::new_reference(dir, cfg, opts).expect("reference engine")
+}
+
+fn remote_cfg(peers: Vec<PeerSpec>) -> RemoteConfig {
+    RemoteConfig {
+        local_shard: ShardSpec::parse("none").unwrap(),
+        peers,
+        net_bw: 1e9,
+        net_latency: 0.0,
+        retry: RetryPolicy::fast(),
+        cooldown: Duration::from_millis(300),
+        ..RemoteConfig::default()
+    }
+}
+
+fn mp_token(i: usize) -> u32 {
+    (65 + (i * 7) % 50) as u32
+}
+
+fn generate_logits(eng: &mut Engine) -> Vec<Vec<f32>> {
+    let mut kv = eng.new_sequence();
+    let mut out = Vec::with_capacity(MP_STEPS + 1);
+    out.push(eng.prefill(&mut kv, &[BOS, 72, 101]).expect("prefill"));
+    for i in 0..MP_STEPS {
+        out.push(eng.decode_step(&mut kv, mp_token(i)).expect("decode"));
+    }
+    out
+}
+
+/// The headline acceptance run: a hostile seeded fault plan on both sides
+/// of the wire — the peer truncates one stream and flips one reply, the
+/// client flips its first disk read, stalls an I/O lane past the watchdog
+/// period, and corrupts one in-flight transfer — and the generated logits
+/// are byte-identical to the fault-free run.
+#[test]
+fn chaos_generation_is_bit_identical_to_the_fault_free_run() {
+    let dir = std::env::temp_dir().join("hobbit_integrity_chaos");
+    let cfg = tiny_model_config("integrity-mp");
+    write_synth_model(&dir, &cfg, 0xC0FFEE).expect("synth model");
+    write_store_manifest(&dir, &cfg).expect("manifest");
+
+    // fault-free single-node baseline, and the all-counters-zero check
+    let mut clean = reference_engine(&dir, None, None, 0);
+    let want = generate_logits(&mut clean);
+    let st = clean.residency.loader_stats();
+    assert_eq!(st.integrity_failures, 0, "no faults => no failures");
+    assert_eq!(st.integrity_refetches, 0);
+    assert_eq!(st.quarantined_slots, 0);
+    assert_eq!(st.watchdog_recoveries, 0);
+
+    // one real shard-server child owning every expert, seeded to truncate
+    // its first reply and flip its second
+    let (child, addr) = spawn_shard_server(&dir, "all", Some("7:trunc@peer#1,flip@peer#2"));
+    let _guard = KillOnDrop(vec![child]);
+    let rc = remote_cfg(vec![PeerSpec { addr, shard: ShardSpec::parse("all").unwrap() }]);
+
+    // client-side plan: first disk read flipped, first transfer stalled
+    // past the 250 ms watchdog, third transfer corrupted in flight
+    let plan =
+        Arc::new(FaultPlan::parse("42:flip@disk#1,stall@xfer#1:600ms,flip@xfer#3").unwrap());
+    let mut chaos = reference_engine(&dir, Some(rc), Some(plan.clone()), 250);
+    let got = generate_logits(&mut chaos);
+    assert_eq!(want, got, "corruption must never reach the logits");
+
+    let st = chaos.residency.loader_stats();
+    assert!(st.integrity_failures > 0, "the plan must have fired: {st:?}");
+    assert!(st.integrity_refetches > 0, "every failure must heal: {st:?}");
+    assert!(st.watchdog_recoveries >= 1, "the 600 ms stall must trip the 250 ms watchdog");
+    assert!(plan.injected() >= 3, "client-side faults fired {}", plan.injected());
+}
+
+/// A peer that corrupts EVERY reply is quarantined at the frame checksum
+/// and healed from the disk tier — a whole generation stays bit-identical
+/// to the fault-free local run.
+#[test]
+fn corrupt_peer_process_is_quarantined_and_healed_from_disk() {
+    let dir = std::env::temp_dir().join("hobbit_integrity_badpeer");
+    let cfg = tiny_model_config("integrity-mp");
+    write_synth_model(&dir, &cfg, 0xC0FFEE).expect("synth model");
+    write_store_manifest(&dir, &cfg).expect("manifest");
+
+    let mut local = reference_engine(&dir, None, None, 0);
+    let want = generate_logits(&mut local);
+
+    let (child, addr) = spawn_shard_server(&dir, "all", Some("9:flip@peer#*"));
+    let _guard = KillOnDrop(vec![child]);
+    let rc = remote_cfg(vec![PeerSpec { addr, shard: ShardSpec::parse("all").unwrap() }]);
+    let mut eng = reference_engine(&dir, Some(rc), None, 0);
+    let got = generate_logits(&mut eng);
+    assert_eq!(want, got, "a corrupt peer must never change the logits");
+
+    let st = eng.residency.loader_stats();
+    assert!(st.integrity_failures > 0, "corrupt frames must be counted: {st:?}");
+    assert!(st.integrity_refetches > 0, "every quarantine must heal: {st:?}");
+    assert!(st.disk_fetches > 0, "heals must come from the disk tier: {st:?}");
+    assert_eq!(st.remote_fetches, 0, "no corrupt frame may ever count as a good fetch");
+}
+
+// ---------------------------------------------------------------------
+// (f) the FCFS report stays frozen: integrity lives under "serving" only
+// ---------------------------------------------------------------------
+
+#[test]
+fn fcfs_report_json_is_unchanged_by_the_integrity_layer() {
+    let dir = std::env::temp_dir().join("hobbit_integrity_fcfs");
+    let cfg = tiny_model_config("integrity-mp");
+    write_synth_model(&dir, &cfg, 0xC0FFEE).expect("synth model");
+    write_store_manifest(&dir, &cfg).expect("manifest");
+    let engine = reference_engine(&dir, None, None, 0);
+    let mut coord = Coordinator::new(engine);
+    coord.generate(&Request::new(1, "integrity probe", 4)).expect("generate");
+    coord.sync_report();
+    let json = coord.report.to_json().to_string();
+    assert!(
+        !json.contains("integrity") && !json.contains("quarantined") && !json.contains("watchdog"),
+        "FCFS report grew integrity keys: {json}"
+    );
+}

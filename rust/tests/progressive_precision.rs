@@ -86,7 +86,7 @@ fn mk_residency(
         predictor,
         Precision::F32,
         Precision::Q8,
-        IoConfig { lanes: 2, chunk_bytes: 256 },
+        IoConfig { lanes: 2, chunk_bytes: 256, ..IoConfig::default() },
     )
     .with_precision_mode(pin, progressive, 0.6);
     (resid, copier, store)

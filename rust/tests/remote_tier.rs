@@ -93,7 +93,7 @@ fn mk_residency(tiered: Arc<TieredStore>, bw: f64) -> (ExpertResidency, Arc<Thro
         predictor,
         Precision::F32,
         Precision::Q8,
-        IoConfig { lanes: 2, chunk_bytes: 1024 },
+        IoConfig { lanes: 2, chunk_bytes: 1024, ..IoConfig::default() },
     );
     (resid, copier)
 }

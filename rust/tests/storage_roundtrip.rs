@@ -7,9 +7,12 @@
 use std::path::PathBuf;
 
 use hobbit::config::ModelConfig;
-use hobbit::model::ExpertStore;
+use hobbit::model::synth::{tiny_store_config, write_store_manifest, write_synth_expert_store};
+use hobbit::model::{verify_weights_dir, ExpertStore, IntegrityTable};
 use hobbit::quant;
 use hobbit::runtime::Manifest;
+use hobbit::util::json::Json;
+use hobbit::util::proptest_mini::{self, Config};
 use hobbit::{ExpertKey, Precision};
 
 fn artifacts_root() -> PathBuf {
@@ -117,4 +120,99 @@ fn dequantized_records_approximate_f32() {
         assert!(mean < 0.05, "{p:?} mean err {mean} too large for 0.06-scale weights");
         prev_err = mean;
     }
+}
+
+// ---------------------------------------------------------------------
+// Record integrity: manifest checksums round-trip through the store
+// writer and loader, and any on-disk damage is a typed error (these are
+// artifact-free — they run on the synthetic store).
+// ---------------------------------------------------------------------
+
+fn synth_dir(name: &str) -> (ModelConfig, PathBuf) {
+    let cfg = tiny_store_config(name);
+    let dir = std::env::temp_dir().join(format!("hobbit_storage_{name}"));
+    write_synth_expert_store(&dir, &cfg).expect("synth store");
+    write_store_manifest(&dir, &cfg).expect("manifest");
+    (cfg, dir)
+}
+
+#[test]
+fn synth_store_checksums_roundtrip_through_writer_and_loader() {
+    let (cfg, dir) = synth_dir("cksum_roundtrip");
+    // load verifies every record against the manifest's integrity table
+    let _store = ExpertStore::load(&dir, &cfg).expect("clean store must verify");
+    let report = verify_weights_dir(&dir).expect("verify scan");
+    assert!(report.all_ok(), "clean store must pass the scan: {report:?}");
+    let n = (cfg.n_layers * cfg.n_experts) as usize * Precision::ALL.len();
+    assert_eq!(report.records.len(), n, "one verdict per (expert, tier)");
+    assert_eq!(report.passed, n);
+}
+
+#[test]
+fn on_disk_bit_flip_is_a_typed_load_error() {
+    let (cfg, dir) = synth_dir("cksum_flip");
+    let path = dir.join("experts_q8.bin");
+    let mut bytes = std::fs::read(&path).unwrap();
+    let rb = cfg.bytes_for(Precision::Q8);
+    bytes[rb * 3 + 11] ^= 0x04; // one bit of one q8 record
+    std::fs::write(&path, &bytes).unwrap();
+
+    let err = ExpertStore::load(&dir, &cfg).expect_err("corrupt store must not load");
+    assert!(
+        format!("{err:#}").contains("fails its manifest checksum"),
+        "want the typed integrity error, got: {err:#}"
+    );
+    let report = verify_weights_dir(&dir).expect("scan still runs");
+    assert_eq!(report.failed, 1, "exactly one record was flipped");
+}
+
+#[test]
+fn truncated_record_file_is_a_typed_load_error() {
+    let (cfg, dir) = synth_dir("cksum_trunc");
+    let path = dir.join("experts_f32.bin");
+    let bytes = std::fs::read(&path).unwrap();
+    std::fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
+    assert!(ExpertStore::load(&dir, &cfg).is_err(), "truncated store must not load");
+}
+
+/// Fuzz the manifest parsing stack: truncations, junk bytes, and bit
+/// flips over a valid manifest must produce `Err`, never a panic.
+#[test]
+fn mutated_manifests_never_panic_the_parsers() {
+    let (_cfg, dir) = synth_dir("cksum_fuzz");
+    let valid = std::fs::read(dir.join("manifest.json")).unwrap();
+    proptest_mini::check_cfg(
+        "mutated manifests parse to Ok or Err",
+        Config { cases: 128, ..Config::default() },
+        |rng| {
+            let mut bytes = valid.clone();
+            match rng.below(3) {
+                0 => bytes.truncate(rng.below(bytes.len() + 1)),
+                1 => {
+                    for _ in 0..1 + rng.below(8) {
+                        let i = rng.below(bytes.len());
+                        bytes[i] = (rng.next_u64() & 0xff) as u8;
+                    }
+                }
+                _ => {
+                    let i = rng.below(bytes.len());
+                    let junk = b"\x00{]\"integrity\":";
+                    let mut out = bytes[..i].to_vec();
+                    out.extend_from_slice(junk);
+                    out.extend_from_slice(&bytes[i..]);
+                    bytes = out;
+                }
+            }
+            let text = String::from_utf8_lossy(&bytes).into_owned();
+            // every layer of the stack: Ok or Err, never a panic
+            let _ = Manifest::parse(&text);
+            if let Ok(j) = Json::parse(&text) {
+                let _ = ModelConfig::from_manifest(&j);
+                if let Some(sec) = j.get("integrity") {
+                    let _ = IntegrityTable::from_json(sec);
+                }
+            }
+            Ok(())
+        },
+    );
 }

@@ -117,7 +117,7 @@ fn chunked_transfer_is_byte_identical_to_monolithic() {
         8,
         8,
         1e8,
-        IoConfig { lanes: 2, chunk_bytes: 128 },
+        IoConfig { lanes: 2, chunk_bytes: 128, ..IoConfig::default() },
         "bytes_chunked",
     );
     // one lane, chunk >= record: the pre-pipeline monolithic transfer
@@ -125,7 +125,7 @@ fn chunked_transfer_is_byte_identical_to_monolithic() {
         8,
         8,
         1e8,
-        IoConfig { lanes: 1, chunk_bytes: usize::MAX },
+        IoConfig { lanes: 1, chunk_bytes: usize::MAX, ..IoConfig::default() },
         "bytes_mono",
     );
     let picks = [
@@ -176,7 +176,7 @@ fn ondemand_issued_mid_prefetch_ready_within_one_chunk_plus_own_transfer() {
         8,
         8,
         1e4,
-        IoConfig { lanes: 1, chunk_bytes: 256 },
+        IoConfig { lanes: 1, chunk_bytes: 256, ..IoConfig::default() },
         "preempt_bound",
     );
     let wrong = ExpertKey::new(0, 0); // the mispredicted prefetch
@@ -229,7 +229,7 @@ fn lanes_conserve_total_link_bandwidth() {
         8,
         8,
         4e4,
-        IoConfig { lanes: 2, chunk_bytes: 256 },
+        IoConfig { lanes: 2, chunk_bytes: 256, ..IoConfig::default() },
         "conserve",
     );
     let serial = Duration::from_secs_f64(2.0 * 4096.0 / 4e4);
@@ -266,7 +266,7 @@ fn preempted_transfer_keeps_slot_incoming_and_resumes_to_identical_commit() {
         8,
         8,
         1e4,
-        IoConfig { lanes: 1, chunk_bytes: 256 },
+        IoConfig { lanes: 1, chunk_bytes: 256, ..IoConfig::default() },
         "partial",
     );
     let pf_key = ExpertKey::new(2, 0);
@@ -317,7 +317,7 @@ fn promote_reprioritizes_a_started_prefetch() {
         8,
         8,
         1e4,
-        IoConfig { lanes: 1, chunk_bytes: 256 },
+        IoConfig { lanes: 1, chunk_bytes: 256, ..IoConfig::default() },
         "promote_started",
     );
     let key = ExpertKey::new(1, 3);
@@ -352,7 +352,7 @@ fn noslot_drop_is_counted_and_facade_reacquires() {
         1,
         4,
         1e8,
-        IoConfig { lanes: 1, chunk_bytes: 1024 },
+        IoConfig { lanes: 1, chunk_bytes: 1024, ..IoConfig::default() },
         "noslot",
     );
     let a = ExpertKey::new(0, 0);
