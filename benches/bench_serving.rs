@@ -14,6 +14,13 @@
 //! the live sequences during the admission window quantify it (the DES
 //! mirror is `sim::des::simulate_admission`).
 //!
+//! The **ragged grouped decode** scenario (artifact-free) A/Bs grouped
+//! execution against the legacy per-row path at batch {4, 16, 64} on a
+//! hot-skewed request set: per-step launch/dequant counts show launches
+//! collapsing to O(unique experts) while `dequant_reuses` and the
+//! hot-expert replica counters absorb the row fan-in (the DES mirror is
+//! `sim::des::simulate_grouped_decode`).
+//!
 //! And the **remote expert tier** scenario (also artifact-free): a real
 //! in-process shard server owning half the synthetic store's experts,
 //! fetched through the `TieredStore` over the modeled network link class
@@ -665,11 +672,138 @@ fn remote_scenario() {
     }
 }
 
+// ---------------------------------------------------------------------
+// Ragged grouped decode: one launch per unique expert per layer step
+// (artifact-free: reference executor, hot-skewed batch so the routed
+// rows pile onto few experts and replication has something to serve)
+// ---------------------------------------------------------------------
+
+/// Every row decodes the same prompt greedily, so each batch step routes
+/// all rows to the same top-k experts — the worst case for per-row
+/// execution (K identical dequants) and the best for grouping.
+const HOT_PROMPT: &str = "the mixture of experts model";
+const GROUPED_NEW: usize = 10;
+
+/// Reference engine for the grouped A/B: fast link + a cache with free
+/// slots beyond the working set (3 layers x 4 experts), so hot-expert
+/// replicas have somewhere to live without evicting primaries.
+fn grouped_engine(tag: &str, grouped: bool, max_replicas: usize) -> Engine {
+    let dir = std::env::temp_dir().join(format!("hobbit_bench_grouped_{tag}"));
+    let mut cfg = tiny_model_config("bench-grouped");
+    cfg.max_seq = 512;
+    write_synth_model(&dir, &cfg, 0x6B07_11E5).expect("synth model");
+    let hw = HardwareConfig {
+        name: "bench-grouped".into(),
+        load_bw: 3e8,
+        load_latency: 0.0,
+        hi_cache_experts: 16,
+        lo_cache_experts: 8,
+        cpu_assist: false,
+        cpu_expert_time: 0.0,
+    };
+    let policy = PolicyConfig { prefetch_depth: 2, ..PolicyConfig::default() };
+    let mut opts = EngineOptions::new(hw, policy);
+    opts.grouped = grouped;
+    opts.max_replicas = max_replicas;
+    Engine::new_reference(&dir, cfg, opts).expect("reference engine")
+}
+
+/// One measured run at a batch width: submit `batch` copies of the hot
+/// prompt, drain, return (wall, tokens, report, batch_steps).
+fn grouped_run(batch: usize, grouped: bool) -> (f64, usize, RunReport, u64) {
+    let tag = format!("{batch}_{}", if grouped { "grouped" } else { "perrow" });
+    let eng = grouped_engine(&tag, grouped, if grouped { 2 } else { 0 });
+    let mut coord = Coordinator::interleaved(eng);
+    coord.max_batch = batch;
+    coord.max_active = coord.max_active.max(batch);
+    for i in 0..batch {
+        coord.submit(Request::new(i as u64 + 1, HOT_PROMPT, GROUPED_NEW));
+    }
+    let t0 = Instant::now();
+    let results = coord.drain().expect("drain");
+    let wall = t0.elapsed().as_secs_f64();
+    let tokens: usize = results.iter().map(|r| r.tokens.len()).sum();
+    coord.sync_report();
+    let steps = coord.scheduler_stats().batch_steps;
+    (wall, tokens, coord.report.clone(), steps)
+}
+
+/// Grouped-vs-per-row A/B at batch {4, 16, 64}: per-step launch and
+/// dequant counts from the serving counters, plus the replica traffic
+/// the hot skew generates. `group_rows` is exactly what the per-row
+/// path would have launched, so the collapse ratio reads off one run.
+fn grouped_scenario() {
+    let n_layers = tiny_model_config("bench-grouped").n_layers as u64;
+    println!(
+        "\n== ragged grouped decode: {GROUPED_NEW} tokens/seq, hot-skewed batch \
+         (every row routes identically), reference executor ==\n"
+    );
+    let mut batch16_json: Option<String> = None;
+    for batch in [4usize, 16, 64] {
+        let (gw, gt, grep, gsteps) = grouped_run(batch, true);
+        let (pw, pt, _prep, _psteps) = grouped_run(batch, false);
+        let ld = &grep.loader;
+        let ffn_steps = (gsteps * n_layers).max(1);
+        println!(
+            "batch {batch:>2}: grouped {gt:>4} tok {gw:>6.2}s ({:>7.1} tok/s) | \
+             per-row {pt:>4} tok {pw:>6.2}s ({:>7.1} tok/s)",
+            gt as f64 / gw.max(1e-9),
+            pt as f64 / pw.max(1e-9),
+        );
+        println!(
+            "          launches/step {:>5.2} vs routed rows/step {:>5.2} \
+             ({} launches for {} rows, {} dequant reuses)",
+            ld.grouped_launches as f64 / ffn_steps as f64,
+            ld.group_rows as f64 / ffn_steps as f64,
+            ld.grouped_launches,
+            ld.group_rows,
+            ld.dequant_reuses,
+        );
+        println!(
+            "          snapshots: {} copies, {} reuses | replicas: {} created, \
+             {} hits, {} evictions",
+            ld.snapshot_copies,
+            ld.snapshot_reuses,
+            grep.cache.replicas_created,
+            grep.cache.replica_hits,
+            grep.cache.replica_evictions,
+        );
+        if batch >= 16 {
+            if ld.dequant_reuses == 0 {
+                eprintln!(
+                    "WARNING: batch {batch} grouped run reused no dequants on a \
+                     hot-skewed trace"
+                );
+            }
+            if 2 * ld.grouped_launches > ld.group_rows {
+                eprintln!(
+                    "WARNING: batch {batch} launches did not collapse 2x vs per-row \
+                     ({} launches for {} rows)",
+                    ld.grouped_launches, ld.group_rows,
+                );
+            }
+            if grep.cache.replica_hits == 0 {
+                eprintln!(
+                    "WARNING: batch {batch} hot-skewed run served no reads from replicas"
+                );
+            }
+        }
+        if batch == 16 {
+            // the same counters `hobbit serve` emits — "serving" key only
+            batch16_json = grep.to_json().get("serving").map(|s| s.to_string());
+        }
+    }
+    if let Some(serving) = batch16_json {
+        println!("\nserving (batch 16, grouped): {serving}");
+    }
+}
+
 fn main() {
     admission_scenario();
     progressive_floor_scenario();
     open_loop_scenario();
     remote_scenario();
+    grouped_scenario();
 
     if !PathBuf::from("artifacts/mixtral-tiny/manifest.json").exists() {
         eprintln!("\nartifacts not built; skipping the FCFS-vs-interleaved serving bench");

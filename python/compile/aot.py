@@ -11,7 +11,10 @@ Outputs, per model, under artifacts/<model>/:
   gate_p{p}_s1.hlo.txt           p in {1..4}   (Stacking Computer, decode)
   gate_seq_p{p}_s1.hlo.txt       p in {1..4}   (sequential baseline, Fig 17a)
   gate_p1_s{S}.hlo.txt           S in {16, 128} (prefill gating)
-  expert_{fmt}_s{S}.hlo.txt      fmt in {f32, q8, q4, q2} x S in {1, 16, 128}
+  expert_{fmt}_s{S}.hlo.txt      fmt in {f32, q8, q4, q2} x S in
+                                 {1, 16, 128} u {2, 4, 8, 32, 64} (the
+                                 extra widths are the ragged grouped-decode
+                                 ladder; only the FFN units need them)
   head_s{S}.hlo.txt              S in {1, 16, 128}
   manifest.json                  shapes/dtypes/arity of every artifact
 
@@ -32,7 +35,14 @@ import jax.numpy as jnp
 from jax._src.lib import xla_client as xc
 
 from . import configs, model
-from .configs import MODELS, PRECISIONS, SEQ_VARIANTS, PREFILL_CHUNKS, GATE_STACK_DEPTHS
+from .configs import (
+    MODELS,
+    PRECISIONS,
+    SEQ_VARIANTS,
+    PREFILL_CHUNKS,
+    GATE_STACK_DEPTHS,
+    EXPERT_GROUP_WIDTHS,
+)
 
 F32 = jnp.float32
 S32 = jnp.int32
@@ -96,7 +106,10 @@ def artifact_defs(cfg):
             f"gate_p1_s{s}", gate_fn,
             [spec((s, d)), spec((1, d)), spec((1, d, e))], 2))
 
-    for s in SEQ_VARIANTS:
+    # expert FFN widths: the decode/prefill s-variants plus the grouped
+    # ladder — grouped decode launches one expert over a slab of sorted
+    # rows, so the FFN (and nothing else) compiles at every group width
+    for s in sorted(set(SEQ_VARIANTS) | set(EXPERT_GROUP_WIDTHS)):
         # two lowerings per expert unit: the Pallas kernel (the real-TPU
         # hot path; interpret-mode on CPU) and the XLA-fused jnp variant
         # the engine serves from on the CPU PJRT client (§Perf)

@@ -69,6 +69,14 @@ PREFILL_CHUNKS = (16, 128)
 DECODE_S = 1
 SEQ_VARIANTS = (DECODE_S,) + PREFILL_CHUNKS
 
+# Expert-group launch widths for ragged grouped decode: a group of g
+# routed rows pads to the smallest of these that fits (must match
+# rust/src/runtime/manifest.rs GROUPED_WIDTHS). Only the expert FFN units
+# compile at these widths — a grouped launch feeds one expert's record a
+# slab of sorted tokens, so gate/head shapes are irrelevant and stay on
+# SEQ_VARIANTS.
+EXPERT_GROUP_WIDTHS = (2, 4, 8, 16, 32, 64)
+
 # Stacking-Computer depths we AOT-compile (Fig 8 / Fig 17).
 GATE_STACK_DEPTHS = (1, 2, 3, 4)
 

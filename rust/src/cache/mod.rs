@@ -97,6 +97,18 @@ enum SlotState {
     /// reserved by the loader; not evictable, not readable
     Loading(ExpertKey),
     Ready(ExpertKey),
+    /// read-replica of a hot Ready primary: filled by a DRAM-to-DRAM copy
+    /// (never via the link), not in `map`, never a pin target, first
+    /// eviction victim
+    Replica(ExpertKey),
+}
+
+/// The replica slots of one hot key, plus the rotation cursor that
+/// spreads concurrent readers across primary + replicas.
+#[derive(Debug, Clone, Default)]
+struct ReplicaSet {
+    slots: Vec<usize>,
+    next: usize,
 }
 
 /// One precision pool.
@@ -111,6 +123,9 @@ pub struct CachePool {
     /// narrower than the pool's native precision)
     tiers: Vec<Option<Precision>>,
     pinned: HashMap<ExpertKey, u32>, // pin count (predictions may stack)
+    /// read-replicas of hot keys (slots in `state` as `Replica`, never in
+    /// `map` — primaries alone are pinnable/evictable by policy)
+    replicas: HashMap<ExpertKey, ReplicaSet>,
 }
 
 impl CachePool {
@@ -123,6 +138,7 @@ impl CachePool {
                 .collect(),
             tiers: vec![None; capacity],
             pinned: HashMap::new(),
+            replicas: HashMap::new(),
         }
     }
 
@@ -227,6 +243,92 @@ impl CachePool {
             _ => None,
         })
     }
+
+    /// Populate one read-replica of a hot Ready primary into a Free slot:
+    /// a cheap DRAM-to-DRAM copy of bytes + tier, never a link fetch.
+    /// Refuses (false) when the primary is not Ready or no slot is free —
+    /// replicas only ever use otherwise-idle capacity.
+    pub fn add_replica(&mut self, key: ExpertKey) -> bool {
+        let Some(&pslot) = self.map.get(&key) else { return false };
+        if self.state[pslot] != SlotState::Ready(key) {
+            return false;
+        }
+        let Some(free) = self.state.iter().position(|s| *s == SlotState::Free) else {
+            return false;
+        };
+        {
+            let src = self.buffers[pslot].lock().unwrap();
+            let mut dst = self.buffers[free].lock().unwrap();
+            let n = src.len().min(dst.len());
+            dst[..n].copy_from_slice(&src[..n]);
+        }
+        self.tiers[free] = self.tiers[pslot];
+        self.state[free] = SlotState::Replica(key);
+        self.replicas.entry(key).or_default().slots.push(free);
+        true
+    }
+
+    /// Live replica count of one key / of the whole pool.
+    pub fn replica_count(&self, key: ExpertKey) -> usize {
+        self.replicas.get(&key).map(|r| r.slots.len()).unwrap_or(0)
+    }
+
+    pub fn total_replicas(&self) -> usize {
+        self.replicas.values().map(|r| r.slots.len()).sum()
+    }
+
+    /// [`Self::buffer_tier`] that rotates reads across the primary and
+    /// its replicas so concurrent snapshots never contend on one slot
+    /// lock; the bool reports whether a replica served this read.
+    pub fn buffer_tier_rotated(
+        &mut self,
+        key: ExpertKey,
+    ) -> Option<(Arc<Mutex<Vec<u8>>>, Option<Precision>, bool)> {
+        let &pslot = self.map.get(&key)?;
+        if self.state[pslot] != SlotState::Ready(key) {
+            return None;
+        }
+        if let Some(rs) = self.replicas.get_mut(&key) {
+            if !rs.slots.is_empty() {
+                let turn = rs.next % (rs.slots.len() + 1);
+                rs.next = rs.next.wrapping_add(1);
+                if turn > 0 {
+                    let slot = rs.slots[turn - 1];
+                    return Some((self.buffers[slot].clone(), self.tiers[slot], true));
+                }
+            }
+        }
+        Some((self.buffers[pslot].clone(), self.tiers[pslot], false))
+    }
+
+    /// Invalidate every replica of `key` (primary evicted, upgraded, or
+    /// quarantined): their slots free atomically under the caller's cache
+    /// lock, so a reader can never rotate onto stale-primary bytes.
+    /// Returns how many slots were reclaimed.
+    pub fn drop_replicas(&mut self, key: ExpertKey) -> usize {
+        let Some(rs) = self.replicas.remove(&key) else { return 0 };
+        for &s in &rs.slots {
+            self.state[s] = SlotState::Free;
+            self.tiers[s] = None;
+        }
+        rs.slots.len()
+    }
+
+    /// Reclaim one replica slot (lowest slot index — deterministic), the
+    /// pool's first eviction victim class. Returns the freed slot.
+    fn evict_one_replica(&mut self) -> Option<usize> {
+        let slot = self.state.iter().position(|s| matches!(s, SlotState::Replica(_)))?;
+        let SlotState::Replica(key) = self.state[slot] else { unreachable!() };
+        if let Some(rs) = self.replicas.get_mut(&key) {
+            rs.slots.retain(|&s| s != slot);
+            if rs.slots.is_empty() {
+                self.replicas.remove(&key);
+            }
+        }
+        self.state[slot] = SlotState::Free;
+        self.tiers[slot] = None;
+        Some(slot)
+    }
 }
 
 /// Result of a slot reservation.
@@ -281,6 +383,8 @@ pub struct CacheManager {
     experts_per_layer: u32,
     /// miss-penalty ratio B_l/B_h of the active precision pair
     penalty_ratio: f64,
+    /// hot-expert replica budget per pool (0 = replication off)
+    max_replicas: usize,
 }
 
 impl CacheManager {
@@ -304,7 +408,48 @@ impl CacheManager {
             n_layers,
             experts_per_layer,
             penalty_ratio,
+            max_replicas: 0,
         }
+    }
+
+    /// Set the per-pool hot-expert replica budget (0 disables replication
+    /// — the default, so existing callers see unchanged behaviour).
+    pub fn set_max_replicas(&mut self, n: usize) {
+        self.max_replicas = n;
+    }
+
+    pub fn max_replicas(&self) -> usize {
+        self.max_replicas
+    }
+
+    /// Populate one read-replica of a hot Ready primary, within budget.
+    /// Replicas fill only Free slots (never evict, never fetch over the
+    /// link), so they can't change hit/miss behaviour — only contention.
+    pub fn add_replica(&mut self, key: ExpertKey, pool: Pool) -> bool {
+        if self.max_replicas == 0 || self.pool(pool).total_replicas() >= self.max_replicas {
+            return false;
+        }
+        let ok = self.pool_mut(pool).add_replica(key);
+        if ok {
+            self.stats.replicas_created += 1;
+        }
+        ok
+    }
+
+    /// Snapshot read source for a Ready `key`: rotates across primary +
+    /// replicas ([`CachePool::buffer_tier_rotated`]) and counts replica-
+    /// served reads. Callers clone (tier, bytes) under the one cache lock,
+    /// exactly as with [`CachePool::buffer_tier`].
+    pub fn read_buffer_tier(
+        &mut self,
+        key: ExpertKey,
+        pool: Pool,
+    ) -> Option<(Arc<Mutex<Vec<u8>>>, Option<Precision>)> {
+        let (buf, tier, replica) = self.pool_mut(pool).buffer_tier_rotated(key)?;
+        if replica {
+            self.stats.replica_hits += 1;
+        }
+        Some((buf, tier))
     }
 
     fn pool(&self, p: Pool) -> &CachePool {
@@ -418,16 +563,23 @@ impl CacheManager {
             return None; // already present/incoming
         }
         let n_layers = self.n_layers;
-        // find a free slot first
+        // find a free slot first; replicas are the next victim class —
+        // reclaiming one costs nothing (the primary still serves reads) —
+        // and only then does the policy pick a primary to evict
         let free = self.pool(pool).state.iter().position(|s| *s == SlotState::Free);
         let (slot, evicted) = if let Some(s) = free {
+            (s, None)
+        } else if let Some(s) = self.pool_mut(pool).evict_one_replica() {
+            self.stats.replica_evictions += 1;
             (s, None)
         } else {
             let victim = self.choose_victim(pool, current_layer)?;
             let p = self.pool_mut(pool);
             let vslot = p.map[&victim];
             p.map.remove(&victim);
+            let dropped = p.drop_replicas(victim);
             self.stats.evictions += 1;
+            self.stats.replica_evictions += dropped as u64;
             (vslot, Some(victim))
         };
         let _ = n_layers;
@@ -485,6 +637,9 @@ impl CacheManager {
                         p.state[slot] = SlotState::Free;
                         p.tiers[slot] = None;
                         p.map.remove(&key);
+                        // quarantine invalidates replicas atomically too
+                        let dropped = p.drop_replicas(key);
+                        self.stats.replica_evictions += dropped as u64;
                         return CommitOutcome::Corrupt;
                     }
                 }
@@ -547,6 +702,10 @@ impl CacheManager {
         buf[..record.len()].copy_from_slice(record);
         drop(buf);
         p.tiers[slot] = tier;
+        // replicas hold the pre-upgrade tier: invalidate them under this
+        // same lock so no reader rotates onto stale bytes
+        let dropped = p.drop_replicas(key);
+        self.stats.replica_evictions += dropped as u64;
         true
     }
 
@@ -557,6 +716,11 @@ impl CacheManager {
             if p.state[slot] == SlotState::Loading(key) {
                 p.state[slot] = SlotState::Free;
                 p.map.remove(&key);
+                // a Loading key cannot have replicas (they require a Ready
+                // primary, and re-reserving evicts the old primary first),
+                // but drop defensively so an orphan can never be served
+                let dropped = p.drop_replicas(key);
+                self.stats.replica_evictions += dropped as u64;
             }
         }
     }
@@ -858,6 +1022,79 @@ mod tests {
         assert_eq!(r2.evicted, Some(k(0, 0)));
         let out = m.commit_upgrade_verified(k(0, 0), Pool::Hi, None, &hi, Some(fnv1a64(&hi)));
         assert_eq!(out, UpgradeCommit::SlotMovedOn);
+    }
+
+    #[test]
+    fn replicas_rotate_reads_and_evict_first() {
+        let mut m = mgr(3, 0);
+        m.set_max_replicas(2);
+        let r = m.reserve(k(0, 0), Pool::Hi, 0).unwrap();
+        r.buffer.lock().unwrap().fill(0x7f);
+        m.commit(k(0, 0), Pool::Hi);
+        assert!(m.add_replica(k(0, 0), Pool::Hi));
+        assert_eq!(m.hi.replica_count(k(0, 0)), 1);
+        assert_eq!(m.stats.replicas_created, 1);
+        // rotation: primary first, then the replica (same bytes + tier)
+        let _ = m.read_buffer_tier(k(0, 0), Pool::Hi).unwrap();
+        assert_eq!(m.stats.replica_hits, 0);
+        let (buf, tier) = m.read_buffer_tier(k(0, 0), Pool::Hi).unwrap();
+        assert_eq!(tier, None);
+        assert_eq!(&*buf.lock().unwrap(), &[0x7f; 8]);
+        assert_eq!(m.stats.replica_hits, 1);
+        // filling the pool reclaims the replica before any primary
+        m.reserve(k(0, 1), Pool::Hi, 0).unwrap();
+        m.commit(k(0, 1), Pool::Hi);
+        let r = m.reserve(k(0, 2), Pool::Hi, 0).unwrap();
+        assert!(r.evicted.is_none(), "replica reclaimed, no primary evicted");
+        assert_eq!(m.hi.replica_count(k(0, 0)), 0);
+        assert_eq!(m.stats.replica_evictions, 1);
+        assert_eq!(m.stats.evictions, 0);
+    }
+
+    #[test]
+    fn replica_budget_and_free_slot_requirement() {
+        let mut m = mgr(2, 0);
+        m.reserve(k(0, 0), Pool::Hi, 0).unwrap();
+        m.commit(k(0, 0), Pool::Hi);
+        // budget 0 (the default): replication is off
+        assert!(!m.add_replica(k(0, 0), Pool::Hi));
+        m.set_max_replicas(1);
+        assert!(m.add_replica(k(0, 0), Pool::Hi));
+        // per-pool budget reached
+        assert!(!m.add_replica(k(0, 0), Pool::Hi));
+        m.set_max_replicas(8);
+        // no free slot left either: replicas never evict to make room
+        assert!(!m.add_replica(k(0, 0), Pool::Hi));
+        // a non-resident key can't be replicated
+        assert!(!m.add_replica(k(0, 3), Pool::Hi));
+    }
+
+    #[test]
+    fn upgrade_and_eviction_invalidate_replicas() {
+        let mut m = mgr(3, 0);
+        m.set_max_replicas(2);
+        let r = m.reserve(k(0, 0), Pool::Hi, 0).unwrap();
+        r.buffer.lock().unwrap()[..4].fill(0x11);
+        m.commit_tier(k(0, 0), Pool::Hi, Some(Precision::Q8));
+        assert!(m.add_replica(k(0, 0), Pool::Hi));
+        // in-place upgrade of the primary drops its replicas atomically —
+        // a rotated read must never see the pre-upgrade tier
+        assert!(m.commit_upgrade(k(0, 0), Pool::Hi, None, &[0x22u8; 8]));
+        assert_eq!(m.hi.replica_count(k(0, 0)), 0);
+        assert_eq!(m.stats.replica_evictions, 1);
+        let (buf, tier) = m.read_buffer_tier(k(0, 0), Pool::Hi).unwrap();
+        assert_eq!(tier, None);
+        assert_eq!(&*buf.lock().unwrap(), &[0x22u8; 8]);
+        // reserve pressure reclaims the replica slot, never a primary,
+        // and an evicted key's reads stop resolving entirely
+        assert!(m.add_replica(k(0, 0), Pool::Hi));
+        let r = m.reserve(k(0, 1), Pool::Hi, 0).unwrap();
+        assert!(r.evicted.is_none(), "free slot first");
+        m.commit(k(0, 1), Pool::Hi);
+        let r = m.reserve(k(0, 2), Pool::Hi, 0).unwrap();
+        assert!(r.evicted.is_none(), "replica slot reclaimed before any primary");
+        assert_eq!(m.hi.replica_count(k(0, 0)), 0);
+        assert!(m.read_buffer_tier(k(0, 3), Pool::Hi).is_none());
     }
 
     #[test]

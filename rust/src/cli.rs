@@ -76,9 +76,16 @@ COMMANDS:
               --ttft-deadline-ms N [500];
               cache-policy names still work here too, e.g. --policy lru)
               --max-batch N (true batched decode: gang up to N runnable
-              sequences into one launch, padded to the nearest compiled
-              width in {2,4,8}, with ONE merged expert acquire per layer;
-              requires --interleaved, N <= 8)
+              sequences into one ragged grouped step — each layer's FFN
+              runs as one grouped pass, dequantizing every unique expert
+              once — with ONE merged expert acquire per layer; requires
+              --interleaved, N <= 64)
+              --no-grouped (legacy padded execution: launches padded to
+              the nearest compiled width in {2,4,8}; caps --max-batch at 8)
+              --max-replicas N (hot-expert read replication: up to N
+              DRAM-to-DRAM read replicas per cache pool for predictor-hot
+              experts demanded by several rows; snapshot reads rotate
+              across replicas. 0 = off [default])
               --no-chunked-prefill (run each admission's whole prefill
               blocking instead of slicing it into 128/16/1 chunks that
               interleave with live decode)  --prefill-first (give prefill

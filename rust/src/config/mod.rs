@@ -404,6 +404,68 @@ impl OverloadConfig {
     }
 }
 
+/// Typed `--max-batch` configuration error: the requested batch width is
+/// covered by no execution path, and the message says which knob would
+/// cover it. Replaces the silent hole where widths above the padded
+/// ceiling were rejected with a generic bound even though grouped
+/// execution (the default) runs them ragged at their exact row count.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum BatchWidthError {
+    /// zero is not a batch
+    Zero,
+    /// wider than even the grouped ragged ceiling
+    TooWide { requested: usize, ceiling: usize },
+    /// grouped execution is off and no compiled padded launch width
+    /// covers the request; `grouped_ceiling` is what dropping
+    /// `--no-grouped` would buy
+    NoPaddedWidth { requested: usize, ceiling: usize, grouped_ceiling: usize },
+}
+
+impl std::fmt::Display for BatchWidthError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            BatchWidthError::Zero => write!(f, "--max-batch must be >= 1"),
+            BatchWidthError::TooWide { requested, ceiling } => write!(
+                f,
+                "--max-batch {requested} exceeds the grouped execution \
+                 ceiling of {ceiling}"
+            ),
+            BatchWidthError::NoPaddedWidth { requested, ceiling, grouped_ceiling } => write!(
+                f,
+                "--max-batch {requested} has no compiled padded launch \
+                 width under --no-grouped (max {ceiling}); drop \
+                 --no-grouped for ragged widths up to {grouped_ceiling}"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for BatchWidthError {}
+
+/// Startup gate for `--max-batch`: every width in `1..=ceiling` of the
+/// selected execution path is accepted, everything else gets a
+/// [`BatchWidthError`] naming the knob that would cover it.
+pub fn validate_max_batch(max_batch: usize, grouped: bool) -> Result<(), BatchWidthError> {
+    use crate::runtime::{MAX_DECODE_BATCH, MAX_GROUPED_BATCH};
+    if max_batch == 0 {
+        return Err(BatchWidthError::Zero);
+    }
+    if max_batch > MAX_GROUPED_BATCH {
+        return Err(BatchWidthError::TooWide {
+            requested: max_batch,
+            ceiling: MAX_GROUPED_BATCH,
+        });
+    }
+    if !grouped && max_batch > MAX_DECODE_BATCH {
+        return Err(BatchWidthError::NoPaddedWidth {
+            requested: max_batch,
+            ceiling: MAX_DECODE_BATCH,
+            grouped_ceiling: MAX_GROUPED_BATCH,
+        });
+    }
+    Ok(())
+}
+
 /// HOBBIT policy knobs (paper defaults in parentheses).
 #[derive(Debug, Clone)]
 pub struct PolicyConfig {
@@ -558,6 +620,38 @@ mod tests {
         o.slo_ttft = Some(Duration::from_millis(500));
         o.ladder = false;
         o.validate().unwrap();
+    }
+
+    #[test]
+    fn max_batch_validation_is_exec_mode_aware() {
+        use crate::runtime::{MAX_DECODE_BATCH, MAX_GROUPED_BATCH};
+        // grouped (default): any width up to the ragged ceiling
+        validate_max_batch(1, true).unwrap();
+        validate_max_batch(MAX_DECODE_BATCH + 1, true).unwrap();
+        validate_max_batch(MAX_GROUPED_BATCH, true).unwrap();
+        assert_eq!(
+            validate_max_batch(MAX_GROUPED_BATCH + 1, true),
+            Err(BatchWidthError::TooWide {
+                requested: MAX_GROUPED_BATCH + 1,
+                ceiling: MAX_GROUPED_BATCH
+            })
+        );
+        // legacy padded path: capped at the largest compiled width, and
+        // the error names the knob that would cover the request
+        validate_max_batch(MAX_DECODE_BATCH, false).unwrap();
+        let err = validate_max_batch(MAX_DECODE_BATCH + 1, false).unwrap_err();
+        assert_eq!(
+            err,
+            BatchWidthError::NoPaddedWidth {
+                requested: MAX_DECODE_BATCH + 1,
+                ceiling: MAX_DECODE_BATCH,
+                grouped_ceiling: MAX_GROUPED_BATCH
+            }
+        );
+        assert!(err.to_string().contains("--no-grouped"), "{err}");
+        // zero rejected on both paths
+        assert_eq!(validate_max_batch(0, true), Err(BatchWidthError::Zero));
+        assert_eq!(validate_max_batch(0, false), Err(BatchWidthError::Zero));
     }
 
     #[test]

@@ -22,8 +22,10 @@
 //!
 //! With `--max-batch N` (N > 1), the interleaved scheduler additionally
 //! performs **true batched decode**: each round it gangs up to N runnable,
-//! non-blocked sequences into one [`BatchCursor`] step (padded to the
-//! nearest compiled launch width in {2, 4, 8}) so concurrency becomes
+//! non-blocked sequences into one [`BatchCursor`] step (ragged, at the
+//! exact batch width, under grouped execution — the default — or padded
+//! to the nearest compiled launch width in {2, 4, 8} on the legacy
+//! per-row path) so concurrency becomes
 //! FLOP *and* load sharing — per layer the group issues a single merged
 //! `ExpertResidency::acquire` for the union of its routed experts and
 //! parks on one ticket set. Group membership follows the fairness policy
@@ -60,7 +62,6 @@ use crate::engine::{
 };
 use crate::metrics::{RequestMetrics, RunReport, SchedulerStats};
 use crate::residency::{SequenceSession, Ticket};
-use crate::runtime::MAX_DECODE_BATCH;
 use crate::tensor::sample_logits;
 use crate::tokenizer::{Tokenizer, EOS};
 use crate::util::rng::Rng;
@@ -311,8 +312,10 @@ pub struct Coordinator {
     /// max sequences decoded concurrently in interleaved mode
     pub max_active: usize,
     /// max sequences ganged into one batched decode step (1 = solo
-    /// time-multiplexing only; capped at the largest compiled launch
-    /// width, `runtime::MAX_DECODE_BATCH`)
+    /// time-multiplexing only; capped at the engine's
+    /// [`Engine::batch_ceiling`] — `runtime::MAX_GROUPED_BATCH` under
+    /// grouped execution, `runtime::MAX_DECODE_BATCH` on the legacy
+    /// padded path)
     pub max_batch: usize,
     /// chunked-prefill interleaving (interleaved mode only, default on):
     /// admission is non-blocking and prefill chunks are schedulable slices
@@ -710,7 +713,7 @@ impl Coordinator {
         if self.group.is_some() {
             return Ok(false);
         }
-        let limit = self.max_batch.min(MAX_DECODE_BATCH);
+        let limit = self.max_batch.min(self.engine.batch_ceiling());
         let mut ids: Vec<(u64, usize)> = self
             .active
             .iter()
@@ -1385,6 +1388,7 @@ impl Coordinator {
         self.report.loader = self.engine.residency.loader_stats();
         self.report.cache = self.engine.residency.cache_stats();
         if self.mode == SchedulerMode::Interleaved {
+            self.sched.exec_mode = self.engine.exec_mode().to_string();
             self.report.scheduler = Some(self.sched.clone());
         }
     }

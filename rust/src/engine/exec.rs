@@ -7,10 +7,16 @@
 //!
 //! * [`PjrtExec`] — the production path: AOT-compiled HLO artifacts
 //!   executed through the PJRT C API (moved here from `Engine`). Batched
-//!   decode widths ({2, 4, 8}) run as one launch when the manifest carries
-//!   the `*_s{w}` variants and fall back to per-row s=1 launches when it
-//!   does not (`runtime::Manifest::decode_batch_widths`); the fallback is
-//!   bit-identical per row, so batching never changes a sequence's logits.
+//!   decode widths run as one launch when the manifest carries the
+//!   `*_s{w}` variants (`runtime::Manifest::decode_batch_widths`, up to
+//!   the grouped-width ladder) and fall back to per-row s=1 launches when
+//!   it does not; the fallback is bit-identical per row, so batching never
+//!   changes a sequence's logits. Grouped expert execution
+//!   ([`Exec::expert_grouped`]) gathers each expert's routed rows into a
+//!   compact slab padded to the smallest compiled expert width
+//!   (`runtime::Manifest::grouped_expert_widths`), so a (batch, layer)
+//!   step costs one launch per *unique expert* instead of one per
+//!   (row, expert) pair.
 //! * [`RefExec`] — pure-Rust reference kernels mirroring
 //!   `python/compile/model.py` (RMSNorm + RoPE GQA attention, softmax
 //!   gating, SwiGLU experts with group-dequant, tied-embedding head).
@@ -44,6 +50,27 @@ use super::{EngineOptions, KvState};
 /// (`python/compile/configs.py` defaults; not carried by the manifest).
 const NORM_EPS: f32 = 1e-5;
 const ROPE_THETA: f32 = 10000.0;
+
+/// One expert group of a grouped FFN step: the expert's record at the
+/// tier it is resident at, plus the full-width gate weights (zero for
+/// rows not routed here — exactly the per-row path's contract, so the
+/// group's routed-row set is `gatew[r] != 0`).
+pub(crate) struct GroupSpec<'a> {
+    pub key: ExpertKey,
+    pub prec: Precision,
+    pub record: &'a [u8],
+    pub gatew: &'a [f32],
+}
+
+/// What a grouped FFN step actually cost: launches issued, routed rows
+/// served, and per-row dequants avoided by parsing each group's record
+/// once (`routed - 1` per group — the dequant-once invariant).
+#[derive(Debug, Default, Clone, Copy)]
+pub(crate) struct GroupedExecStats {
+    pub launches: u64,
+    pub rows: u64,
+    pub dequant_reuses: u64,
+}
 
 /// One executor behind the engine: either the AOT PJRT artifacts or the
 /// pure-Rust reference kernels.
@@ -102,6 +129,25 @@ impl Exec {
         match self {
             Exec::Pjrt(e) => e.expert(s, prec, record, hn, gatew, key),
             Exec::Reference(e) => e.expert(s, prec, record, hn, gatew),
+        }
+    }
+
+    /// The whole FFN of one (batch, layer) step as grouped launches: one
+    /// entry per expert group (tokens pre-sorted by expert — the caller's
+    /// group order is the accumulation order). Returns each group's
+    /// full-width output plus launch/dequant accounting. Every group's
+    /// record is parsed exactly once; rows are computed with the same
+    /// row-local arithmetic as [`Self::expert`], so grouped execution is
+    /// bit-identical to the per-row path.
+    pub fn expert_grouped(
+        &mut self,
+        s: usize,
+        hn: &[f32],
+        groups: &[GroupSpec<'_>],
+    ) -> Result<(Vec<Vec<f32>>, GroupedExecStats)> {
+        match self {
+            Exec::Pjrt(e) => e.expert_grouped(s, hn, groups),
+            Exec::Reference(e) => e.expert_grouped(s, hn, groups),
         }
     }
 
@@ -178,6 +224,10 @@ pub(crate) struct PjrtExec {
     chunk_s: Vec<usize>,
     /// batched decode widths with a full compiled variant set
     batched: Vec<usize>,
+    /// expert-group launch widths (ascending) with compiled FFN variants
+    /// for every precision in use; a routed group pads to the smallest
+    /// one that fits and chunks at the largest
+    grouped_ws: Vec<usize>,
 }
 
 impl PjrtExec {
@@ -231,6 +281,29 @@ impl PjrtExec {
                 names.push(format!("gate_p{p}_s{w}"));
             }
         }
+        // expert-group widths for ragged grouped execution: a width is
+        // usable only when *every* precision in use is compiled at it
+        // (a mid-step tier flip must never change the launch width)
+        let mut grouped_ws =
+            rt.manifest.grouped_expert_widths(ffn_prefix, hi.name(), lo.name());
+        grouped_ws.retain(|&w| {
+            precs
+                .iter()
+                .all(|p| rt.manifest.has_variant(&format!("{ffn_prefix}_{}", p.name()), w))
+        });
+        for &w in &grouped_ws {
+            for p in &precs {
+                names.push(format!("{ffn_prefix}_{}_s{w}", p.name()));
+            }
+        }
+        // the prefill chunk widths are compiled unconditionally above and
+        // double as group widths
+        for w in [16usize, 128] {
+            if !grouped_ws.contains(&w) {
+                grouped_ws.push(w);
+            }
+        }
+        grouped_ws.sort_unstable();
         rt.ensure_all(names.iter().map(|s| s.as_str()))?;
 
         // ---- per-layer literals -------------------------------------------
@@ -290,12 +363,23 @@ impl PjrtExec {
             ffn_prefix,
             chunk_s,
             batched,
+            grouped_ws,
         })
     }
 
     /// Whether a single launch of width `s` is compiled.
     fn has_width(&self, s: usize) -> bool {
         self.chunk_s.contains(&s)
+    }
+
+    /// Smallest compiled group width that fits `g` routed rows; the
+    /// largest one when `g` exceeds them all (the group then chunks).
+    fn group_width(&self, g: usize) -> Option<usize> {
+        self.grouped_ws
+            .iter()
+            .copied()
+            .find(|&w| w >= g)
+            .or_else(|| self.grouped_ws.last().copied())
     }
 
     fn attn(
@@ -418,6 +502,74 @@ impl PjrtExec {
             out[r * d..(r + 1) * d].copy_from_slice(&y);
         }
         Ok(out)
+    }
+
+    fn expert_grouped(
+        &mut self,
+        s: usize,
+        hn: &[f32],
+        groups: &[GroupSpec<'_>],
+    ) -> Result<(Vec<Vec<f32>>, GroupedExecStats)> {
+        let d = self.cfg.d_model;
+        let mut outs = Vec::with_capacity(groups.len());
+        let mut st = GroupedExecStats::default();
+        for g in groups {
+            let routed: Vec<usize> = (0..s).filter(|&r| g.gatew[r] != 0.0).collect();
+            if routed.is_empty() {
+                outs.push(vec![0.0f32; s * d]);
+                continue;
+            }
+            st.rows += routed.len() as u64;
+            st.dequant_reuses += routed.len() as u64 - 1;
+            // gather only when a group width is tighter than the full
+            // batch width (or the full width has no compiled variant)
+            let gather = self
+                .group_width(routed.len())
+                .filter(|&w| !self.has_width(s) || w < s);
+            let y = match gather {
+                Some(w) => {
+                    let name = format!("{}_{}_s{w}", self.ffn_prefix, g.prec.name());
+                    let wlits = expert_literals(&self.cfg, g.prec, g.record)?;
+                    let mut out = vec![0.0f32; s * d];
+                    // pad the group's routed rows to the compiled width;
+                    // oversized groups chunk in ascending-row order (row
+                    // outputs are row-local, so order is cosmetic)
+                    for chunk in routed.chunks(w) {
+                        let mut xg = vec![0.0f32; w * d];
+                        let mut gwv = vec![0.0f32; w];
+                        for (i, &r) in chunk.iter().enumerate() {
+                            xg[i * d..(i + 1) * d].copy_from_slice(&hn[r * d..(r + 1) * d]);
+                            gwv[i] = g.gatew[r];
+                        }
+                        let x_lit = lit_f32(&[w, d], &xg)?;
+                        let gw_lit = lit_f32(&[w], &gwv)?;
+                        let mut args: Vec<&Literal> = Vec::with_capacity(8);
+                        args.push(&x_lit);
+                        args.extend(wlits.iter());
+                        args.push(&gw_lit);
+                        let louts = self
+                            .rt
+                            .execute(&name, &args)
+                            .with_context(|| format!("expert {:?} via {name} (group)", g.key))?;
+                        st.launches += 1;
+                        let yg = lit_to_f32(&louts[0])?;
+                        for (i, &r) in chunk.iter().enumerate() {
+                            out[r * d..(r + 1) * d].copy_from_slice(&yg[i * d..(i + 1) * d]);
+                        }
+                    }
+                    out
+                }
+                None => {
+                    // one compiled full-width launch, or the bit-identical
+                    // per-row s=1 ladder when nothing wider exists
+                    st.launches +=
+                        if self.has_width(s) { 1 } else { routed.len() as u64 };
+                    self.expert(s, g.prec, g.record, hn, g.gatew, g.key)?
+                }
+            };
+            outs.push(y);
+        }
+        Ok((outs, st))
     }
 
     fn head(&mut self, s: usize, x: &[f32], live: Option<&[bool]>) -> Result<Vec<f32>> {
@@ -553,7 +705,7 @@ impl RefExec {
             wo,
             post_norm,
             wg,
-            batched: crate::runtime::DECODE_BATCH_WIDTHS.to_vec(),
+            batched: crate::runtime::GROUPED_WIDTHS.to_vec(),
             compute: std::cell::Cell::new(Duration::ZERO),
         })
     }
@@ -733,6 +885,30 @@ impl RefExec {
             }
             Ok(out)
         })
+    }
+
+    fn expert_grouped(
+        &mut self,
+        s: usize,
+        hn: &[f32],
+        groups: &[GroupSpec<'_>],
+    ) -> Result<(Vec<Vec<f32>>, GroupedExecStats)> {
+        let mut outs = Vec::with_capacity(groups.len());
+        let mut st = GroupedExecStats::default();
+        for g in groups {
+            let routed = g.gatew.iter().filter(|w| **w != 0.0).count() as u64;
+            // `expert` parses the record once and computes every routed
+            // row from it — the dequant-once invariant; one "launch" per
+            // group, identical per-row arithmetic
+            let y = self.expert(s, g.prec, g.record, hn, g.gatew)?;
+            if routed > 0 {
+                st.launches += 1;
+                st.rows += routed;
+                st.dequant_reuses += routed - 1;
+            }
+            outs.push(y);
+        }
+        Ok((outs, st))
     }
 
     fn head(&mut self, s: usize, x: &[f32], live: Option<&[bool]>) -> Result<Vec<f32>> {

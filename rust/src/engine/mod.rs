@@ -33,16 +33,22 @@
 //!   (`DecodeProgress::Pending`) instead of blocking.
 //! * [`Engine::decode_begin_batch`]/[`Engine::decode_poll_batch`] — *true
 //!   batched decode* ([`BatchCursor`]): one token for a whole group of
-//!   sequences, padded to the nearest compiled launch width in {2, 4, 8}.
-//!   Per layer the engine computes the union of routed experts across the
-//!   batch and issues a single merged `ExpertResidency::acquire_merged`,
-//!   parking the whole group on one `TicketSet` — cross-sequence load
-//!   sharing, not just latency hiding. Attention stays per-row (each
-//!   sequence owns its KV cache and position); gate/expert/head launch at
-//!   batch width when the artifact set carries the `*_s{2,4,8}` variants
-//!   and fall back to bit-identical per-row s=1 launches when it does not.
-//!   A row whose loads block while the rest of the group is runnable is
-//!   *evicted* into a solo [`DecodeCursor`]
+//!   sequences. In the default **grouped** mode the step runs *ragged* at
+//!   its exact row count (no padding, any width up to
+//!   `MAX_GROUPED_BATCH`): each layer's routed (token, expert) pairs are
+//!   regrouped by expert and the whole FFN executes as one grouped pass —
+//!   each unique expert's record is parsed/dequantized ONCE per step and
+//!   reused across every row routed to it (`Exec::expert_grouped`). With
+//!   grouped mode off the legacy path pads to the nearest compiled launch
+//!   width in {2, 4, 8}. Per layer the engine computes the union of routed
+//!   experts across the batch and issues a single merged
+//!   `ExpertResidency::acquire_merged`, parking the whole group on one
+//!   `TicketSet` — cross-sequence load sharing, not just latency hiding.
+//!   Attention stays per-row (each sequence owns its KV cache and
+//!   position); gate/expert/head launch at batch width when the artifact
+//!   set carries the width variants and fall back to bit-identical per-row
+//!   s=1 launches when it does not. A row whose loads block while the rest
+//!   of the group is runnable is *evicted* into a solo [`DecodeCursor`]
 //!   ([`Engine::decode_evict_row`]), taking exactly its own ticket subset
 //!   and cache pins with it.
 
@@ -69,10 +75,10 @@ use crate::model::{ExpertStore, NonExpertWeights};
 use crate::predictor::Predictor;
 use crate::remote::TieredStore;
 use crate::residency::{ExpertResidency, MergedUse, SequenceSession, Ticket, TicketSet};
-use crate::runtime::{pad_batch_width, Runtime, MAX_DECODE_BATCH};
+use crate::runtime::{pad_batch_width, Runtime, MAX_DECODE_BATCH, MAX_GROUPED_BATCH};
 use crate::{ExpertKey, Precision};
 
-use exec::{Exec, PjrtExec, RefExec};
+use exec::{Exec, GroupSpec, PjrtExec, RefExec};
 
 /// Prefill chunk sizes with compiled artifacts, largest first.
 pub const PREFILL_CHUNKS: [usize; 3] = [128, 16, 1];
@@ -117,6 +123,15 @@ pub struct EngineOptions {
     /// corruption/stall/tear events at the tier boundaries, for exercising
     /// the integrity layer. None in production.
     pub faults: Option<Arc<crate::faults::FaultPlan>>,
+    /// ragged grouped expert execution (`--no-grouped` turns it off):
+    /// batched decode runs at its exact row count and each layer's FFN
+    /// executes as one grouped pass — dequantize each unique expert once
+    /// per step, reuse across its rows. Off = the legacy padded-width path.
+    pub grouped: bool,
+    /// hot-expert read-replica budget per pool (`--max-replicas`; 0 = off):
+    /// predictor-hot experts demanded by several rows get DRAM-to-DRAM
+    /// replicas that rotate snapshot reads across slots.
+    pub max_replicas: usize,
 }
 
 impl EngineOptions {
@@ -130,6 +145,8 @@ impl EngineOptions {
             io: IoConfig::default(),
             remote: None,
             faults: None,
+            grouped: true,
+            max_replicas: 0,
         }
     }
 }
@@ -379,7 +396,8 @@ pub struct BatchCursor {
     layer: usize,
     /// activations [s, d]; rows >= n (padding) and evicted rows are dead
     x: Vec<f32>,
-    /// padded launch width (2, 4, or 8)
+    /// launch width: the exact row count in grouped mode (ragged), or the
+    /// padded width (2, 4, or 8) on the legacy path
     s: usize,
     rows: Vec<BatchRow>,
     /// capture token-id base: ids `token_base..token_base+rows` were
@@ -490,6 +508,8 @@ pub struct Engine {
     /// sequence whose cache records the current compute is attributed to
     /// (interleaved serving; None on the batch-1 path)
     current_seq: Option<u64>,
+    /// ragged grouped expert execution (see [`EngineOptions::grouped`])
+    grouped: bool,
 }
 
 impl Engine {
@@ -552,7 +572,7 @@ impl Engine {
         let cache_policy = opts.cache_policy.clone().unwrap_or(Policy::Multidim {
             w: [opts.policy.w_lru, opts.policy.w_lfu, opts.policy.w_lhu, opts.policy.w_fld],
         });
-        let cache = Arc::new(Mutex::new(CacheManager::new(
+        let mut manager = CacheManager::new(
             cfg.n_layers,
             cfg.n_experts,
             opts.hardware.hi_cache_experts,
@@ -561,7 +581,9 @@ impl Engine {
             cfg.bytes_for(lo),
             cache_policy,
             penalty_ratio,
-        )));
+        );
+        manager.set_max_replicas(opts.max_replicas);
+        let cache = Arc::new(Mutex::new(manager));
         let copier = Arc::new(ThrottledCopier::new(LinkModel {
             bytes_per_s: opts.hardware.load_bw,
             latency_s: opts.hardware.load_latency,
@@ -623,6 +645,7 @@ impl Engine {
             load_wait: Duration::ZERO,
             token_counter: 0,
             current_seq: None,
+            grouped: opts.grouped,
         })
     }
 
@@ -646,6 +669,32 @@ impl Engine {
     /// sharing).
     pub fn native_batch_widths(&self) -> &[usize] {
         self.exec.batched_widths()
+    }
+
+    /// Largest batched-decode group this engine accepts: grouped execution
+    /// has no compiled-width ceiling (bounded only by the bookkeeping cap
+    /// `MAX_GROUPED_BATCH`); the legacy padded path tops out at the widest
+    /// padded launch width.
+    pub fn batch_ceiling(&self) -> usize {
+        if self.grouped {
+            MAX_GROUPED_BATCH
+        } else {
+            MAX_DECODE_BATCH
+        }
+    }
+
+    /// The batched-decode execution mode this engine runs, surfaced in the
+    /// `"serving"` report: "grouped" (ragged expert-grouped FFN),
+    /// "padded" (legacy width-padded launches), or "per-row" (no batched
+    /// artifacts compiled — every launch falls back to s=1).
+    pub fn exec_mode(&self) -> &'static str {
+        if self.grouped {
+            "grouped"
+        } else if !self.exec.batched_widths().is_empty() {
+            "padded"
+        } else {
+            "per-row"
+        }
     }
 
     /// Start a new sequence: fresh KV state + per-sequence cache records.
@@ -1000,17 +1049,26 @@ impl Engine {
     /// Begin one batched decode step for a group of runnable sequences
     /// (one token each). Takes ownership of each row's KV state for the
     /// duration; `BatchProgress::Done` (or eviction/abort) hands it back.
-    /// The group pads to the nearest compiled launch width in {2, 4, 8}.
+    /// Grouped mode runs the step *ragged* at its exact row count (up to
+    /// `MAX_GROUPED_BATCH`); the legacy path pads to the nearest compiled
+    /// launch width in {2, 4, 8}.
     pub fn decode_begin_batch(&mut self, items: Vec<BatchItem>) -> Result<BatchCursor> {
+        let ceiling = self.batch_ceiling();
         anyhow::ensure!(
-            (2..=MAX_DECODE_BATCH).contains(&items.len()),
-            "batch of {} (want 2..={MAX_DECODE_BATCH})",
+            (2..=ceiling).contains(&items.len()),
+            "batch of {} (want 2..={ceiling})",
             items.len()
         );
         for it in &items {
             anyhow::ensure!(it.kv.remaining() >= 1, "KV cache full in batch");
         }
-        let s = pad_batch_width(items.len()).expect("len checked above");
+        let s = if self.grouped {
+            // ragged: grouped execution serves any width, so padded rows
+            // (and their wasted FLOPs) are simply never created
+            items.len()
+        } else {
+            pad_batch_width(items.len()).expect("len checked above")
+        };
         let tokens: Vec<u32> = items.iter().map(|it| it.token).collect();
         let x = self.embed(&tokens, s);
         let rows: Vec<BatchRow> = items
@@ -1180,6 +1238,17 @@ impl Engine {
             // ONE merged acquire for the whole group
             let demands: Vec<MergedUse> = merged.into_values().collect();
             let (uses, waits) = self.residency.acquire_merged(li_u32, demands, &batch_seqs);
+
+            // hot-expert replication: an expert demanded by several rows
+            // whose gate-score EMA marks it hot earns a DRAM read-replica
+            // (no-op when the budget is 0, no Free slot exists, or the
+            // primary is not Ready yet — replicas never fetch via the link)
+            for u in &uses {
+                if u.rows.len() >= 2 && self.residency.is_hot(u.key) {
+                    let (_prec, pool) = self.class_target(u.class);
+                    self.residency.add_replica(u.key, pool);
+                }
+            }
 
             // map each row to its subset of the shared ticket set
             let mut ticket_idx: HashMap<(ExpertKey, Pool), usize> = HashMap::new();
@@ -1546,6 +1615,7 @@ impl Engine {
     /// (expert, class) over the padded width, with cache records
     /// attributed per demanding sequence and one pin released per
     /// demanding row (mirroring `acquire_merged`'s per-row pins).
+    /// Grouped mode takes [`Self::layer_ffn_batch_grouped`] instead.
     fn layer_ffn_batch(
         &mut self,
         s: usize,
@@ -1553,6 +1623,9 @@ impl Engine {
         uses: Vec<MergedUse>,
         token_base: u64,
     ) -> Result<Vec<f32>> {
+        if self.grouped {
+            return self.layer_ffn_batch_grouped(s, hn, uses, token_base);
+        }
         let d = self.cfg.d_model;
         let mut moe_out = vec![0.0f32; s * d];
         // same contract as layer_ffn: release every remaining use's
@@ -1591,6 +1664,152 @@ impl Engine {
             None => Ok(moe_out),
             Some(e) => Err(e),
         }
+    }
+
+    /// The grouped FFN pass: one snapshot + one dequant per unique expert
+    /// of the step, every routed row reusing it.
+    ///
+    /// * **Snapshot arena** — one owned (tier, bytes) copy per unique
+    ///   (expert, pool) via [`ExpertResidency::snapshot_records`]; uses
+    ///   that collide on the same record (a Hi-upgraded Lo demand next to
+    ///   a native Hi demand) share the copy (`snapshot_reuses`).
+    /// * **Grouping** — resident same-record uses merge into one group
+    ///   (their demanding rows are disjoint, so folding gate weights is an
+    ///   assignment, not arithmetic); bypass uses (record evicted between
+    ///   load and use) group alone over a direct next-level fetch, exactly
+    ///   like the per-row path's bypass.
+    /// * **One executor call** — [`Exec::expert_grouped`] dequantizes or
+    ///   uploads each group's record once and runs all its rows, counting
+    ///   launches/rows/dequant-reuses.
+    /// * **Bit-identity** — groups accumulate in first-occurrence
+    ///   (expert-ascending) order and every (row, expert) pair contributes
+    ///   exactly once, so each output element sees the same addition
+    ///   sequence as the per-row path (zero rows contribute exact zeros,
+    ///   and the residual can never hold -0.0, so dropping them is exact).
+    fn layer_ffn_batch_grouped(
+        &mut self,
+        s: usize,
+        hn: &[f32],
+        uses: Vec<MergedUse>,
+        token_base: u64,
+    ) -> Result<Vec<f32>> {
+        let d = self.cfg.d_model;
+        let pools: Vec<Pool> = uses.iter().map(|u| self.class_target(u.class).1).collect();
+        let wants: Vec<(ExpertKey, Pool)> =
+            uses.iter().zip(&pools).map(|(u, &p)| (u.key, p)).collect();
+        let arena = self.residency.snapshot_records(&wants);
+
+        enum Rec {
+            Arena((ExpertKey, Pool)),
+            Owned(Vec<u8>),
+        }
+        struct GroupBuild {
+            key: ExpertKey,
+            prec: Precision,
+            gatew: Vec<f32>,
+            rec: Rec,
+            bypass: bool,
+        }
+        let mut groups: Vec<GroupBuild> = Vec::new();
+        let mut gidx: HashMap<(ExpertKey, Pool), usize> = HashMap::new();
+        let mut use_group: Vec<usize> = Vec::with_capacity(uses.len());
+        for (u, &pool) in uses.iter().zip(&pools) {
+            match arena.get(&(u.key, pool)) {
+                Some(&(tier, _)) => {
+                    let gi = *gidx.entry((u.key, pool)).or_insert_with(|| {
+                        groups.push(GroupBuild {
+                            key: u.key,
+                            prec: tier,
+                            gatew: vec![0.0; s],
+                            rec: Rec::Arena((u.key, pool)),
+                            bypass: false,
+                        });
+                        groups.len() - 1
+                    });
+                    for (gw, uw) in groups[gi].gatew.iter_mut().zip(&u.gatew) {
+                        if *uw != 0.0 {
+                            *gw = *uw;
+                        }
+                    }
+                    use_group.push(gi);
+                }
+                None => {
+                    let (prec, _) = self.class_target(u.class);
+                    let record =
+                        self.residency.store().fetch_owned(u.key, prec, ONDEMAND_WEIGHT);
+                    groups.push(GroupBuild {
+                        key: u.key,
+                        prec,
+                        gatew: u.gatew.clone(),
+                        rec: Rec::Owned(record),
+                        bypass: true,
+                    });
+                    use_group.push(groups.len() - 1);
+                }
+            }
+        }
+        let specs: Vec<GroupSpec<'_>> = groups
+            .iter()
+            .map(|g| GroupSpec {
+                key: g.key,
+                prec: g.prec,
+                record: match &g.rec {
+                    Rec::Arena(k) => &arena[k].1,
+                    Rec::Owned(v) => v,
+                },
+                gatew: &g.gatew,
+            })
+            .collect();
+        let (ys, st) = match self.exec.expert_grouped(s, hn, &specs) {
+            Ok(out) => out,
+            Err(e) => {
+                // same contract as the per-row path: an executor error
+                // must not leak the uses' per-row pins
+                for (u, &pool) in uses.iter().zip(&pools) {
+                    for _ in &u.rows {
+                        self.residency.release(u.key, pool);
+                    }
+                }
+                return Err(e);
+            }
+        };
+        self.residency.note_grouped_exec(st.launches, st.rows, st.dequant_reuses);
+        let mut moe_out = vec![0.0f32; s * d];
+        for y in &ys {
+            accumulate(&mut moe_out, y);
+        }
+        // per-use tail in merge order: Fig-5 capture off the group output,
+        // cache-record uses per demanding sequence, one pin per row
+        for (ui, u) in uses.iter().enumerate() {
+            let pool = pools[ui];
+            let g = use_group[ui];
+            if self.capture.gate_stats {
+                let y = &ys[g];
+                for (r, w) in u.gatew.iter().enumerate() {
+                    if *w > 0.0 {
+                        let row = &y[r * d..(r + 1) * d];
+                        let norm =
+                            row.iter().map(|v| (*v as f64) * (*v as f64)).sum::<f64>().sqrt();
+                        self.capture.gates.push(GateObs {
+                            key: u.key,
+                            token: token_base + r as u64,
+                            gate: *w,
+                            out_norm: norm as f32,
+                            score: 0.0,
+                        });
+                    }
+                }
+            }
+            if !groups[g].bypass {
+                for seq in &u.seqs {
+                    self.residency.note_use(u.key, pool, *seq);
+                }
+            }
+            for _ in &u.rows {
+                self.residency.release(u.key, pool);
+            }
+        }
+        Ok(moe_out)
     }
 
     /// LM head over the final activations; returns the last real row's

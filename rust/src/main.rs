@@ -7,14 +7,15 @@ use anyhow::{anyhow, Result};
 use hobbit::baselines::{self, EQ3_WEIGHTS};
 use hobbit::cache::Policy;
 use hobbit::cli::{Args, USAGE};
-use hobbit::config::{HardwareConfig, ModelConfig, PolicyConfig, RemoteConfig};
+use hobbit::config::{
+    validate_max_batch, HardwareConfig, ModelConfig, PolicyConfig, RemoteConfig,
+};
 use hobbit::coordinator::{Coordinator, Request, SchedPolicy, SchedulerMode};
 use hobbit::engine::Engine;
 use hobbit::faults::FaultPlan;
 use hobbit::figures;
 use hobbit::model::ExpertStore;
 use hobbit::remote::{ShardServer, ShardSpec};
-use hobbit::runtime::MAX_DECODE_BATCH;
 use hobbit::server::Server;
 use hobbit::sim::des::{simulate_decode, SimSystem};
 use hobbit::sim::params::{SimHardware, SimModel};
@@ -40,6 +41,7 @@ fn main() {
             "prefill-first",
             "progressive",
             "no-ladder",
+            "no-grouped",
             "verbose",
         ],
     );
@@ -120,6 +122,11 @@ fn build_engine(args: &Args, allow_sched_policy: bool) -> Result<Engine> {
     if args.has("progressive") {
         opts.policy.progressive = true;
     }
+    // ragged grouped expert execution (default on): batched decode runs
+    // at its exact row count, one grouped FFN pass per layer
+    opts.grouped = !args.has("no-grouped");
+    // hot-expert read-replica budget (0 = replication off)
+    opts.max_replicas = args.get_usize("max-replicas", 0);
     // remote expert tier: this node's DRAM shard + peer shard servers +
     // the network link budget (validated as a disjoint, complete
     // partition at engine construction)
@@ -215,11 +222,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             "--max-batch batches the interleaved scheduler; add --interleaved"
         ));
     }
-    if !(1..=MAX_DECODE_BATCH).contains(&max_batch) {
-        return Err(anyhow!(
-            "--max-batch must be in 1..={MAX_DECODE_BATCH} (largest compiled launch width)"
-        ));
-    }
+    validate_max_batch(max_batch, !args.has("no-grouped")).map_err(|e| anyhow!("{e}"))?;
     let engine = build_engine(args, true)?;
     let mut coord = Coordinator::new(engine);
     if interleaved {
@@ -271,8 +274,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
         },
         if coord.max_batch > 1 {
             format!(
-                ", max-batch {} (native widths {:?})",
+                ", max-batch {} (exec {}, native widths {:?})",
                 coord.max_batch,
+                coord.engine.exec_mode(),
                 coord.engine.native_batch_widths()
             )
         } else {

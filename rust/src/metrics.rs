@@ -98,6 +98,20 @@ pub struct LoaderStats {
     /// wedged tickets the residency watchdog recovered by re-submitting
     /// the load after a lane stalled past `IoConfig::watchdog_ms`
     pub watchdog_recoveries: u64,
+    /// grouped expert launches issued by the ragged grouped FFN path:
+    /// one per (expert group, chunk) — the O(unique experts) collapse
+    pub grouped_launches: u64,
+    /// routed rows carried by those grouped launches
+    pub group_rows: u64,
+    /// per-row dequants avoided by parsing each group's record once
+    /// (`routed_rows - 1` summed over groups — the dequant-once win)
+    pub dequant_reuses: u64,
+    /// owned (tier, bytes) snapshots copied out of the cache by batch
+    /// steps (one per unique (key, pool) per step with the arena)
+    pub snapshot_copies: u64,
+    /// snapshot reads served from the step's arena instead of re-copying
+    /// under the cache lock
+    pub snapshot_reuses: u64,
 }
 
 impl LoaderStats {
@@ -154,6 +168,11 @@ impl LoaderStats {
             ("integrity_refetches", num(self.integrity_refetches as f64)),
             ("quarantined_slots", num(self.quarantined_slots as f64)),
             ("watchdog_recoveries", num(self.watchdog_recoveries as f64)),
+            ("grouped_launches", num(self.grouped_launches as f64)),
+            ("group_rows", num(self.group_rows as f64)),
+            ("dequant_reuses", num(self.dequant_reuses as f64)),
+            ("snapshot_copies", num(self.snapshot_copies as f64)),
+            ("snapshot_reuses", num(self.snapshot_reuses as f64)),
         ])
     }
 }
@@ -167,6 +186,13 @@ pub struct CacheStats {
     pub evictions: u64,
     /// §3.4 miss *penalty*: hi miss = 1.0, lo miss = B_l/B_h
     pub miss_penalty: f64,
+    /// hot-expert read-replicas populated (DRAM-to-DRAM, never the link)
+    pub replicas_created: u64,
+    /// snapshot reads served by a replica slot instead of the primary
+    pub replica_hits: u64,
+    /// replica slots reclaimed (capacity pressure) or invalidated
+    /// (primary evicted / upgraded / quarantined)
+    pub replica_evictions: u64,
 }
 
 impl CacheStats {
@@ -381,6 +407,10 @@ pub struct SchedulerStats {
     /// scheduler rounds spent with the prefetch-shed signal raised
     /// (ladder stage 2: speculative link traffic dropped)
     pub shed_prefetch_rounds: u64,
+    /// how batched decode executes experts: "grouped" (ragged grouped
+    /// launches), "padded" (compiled-width per-expert launches), or
+    /// "per-row" (s=1 fallback ladder)
+    pub exec_mode: String,
 }
 
 impl SchedulerStats {
@@ -486,6 +516,7 @@ impl SchedulerStats {
             ("admission_rejects", num(self.admission_rejects as f64)),
             ("shed_precision_rounds", num(self.shed_precision_rounds as f64)),
             ("shed_prefetch_rounds", num(self.shed_prefetch_rounds as f64)),
+            ("exec_mode", s(&self.exec_mode)),
         ])
     }
 }
@@ -565,6 +596,18 @@ impl RunReport {
                 m.insert(
                     "prefill_merged_demands".into(),
                     num(self.loader.prefill_merged_demands as f64),
+                );
+                // hot-expert replication counters live in CacheStats (the
+                // cache owns replicas) but are a serving phenomenon: the
+                // FCFS cache surface stays hit_ratio + miss_penalty only
+                m.insert(
+                    "replicas_created".into(),
+                    num(self.cache.replicas_created as f64),
+                );
+                m.insert("replica_hits".into(), num(self.cache.replica_hits as f64));
+                m.insert(
+                    "replica_evictions".into(),
+                    num(self.cache.replica_evictions as f64),
                 );
                 // the transfer-pipeline counters ride along (never at the
                 // FCFS top level)
@@ -783,6 +826,40 @@ mod tests {
         assert_eq!(serving.get("integrity_refetches").unwrap().as_f64().unwrap(), 2.0);
         assert_eq!(serving.get("quarantined_slots").unwrap().as_f64().unwrap(), 1.0);
         assert_eq!(serving.get("watchdog_recoveries").unwrap().as_f64().unwrap(), 1.0);
+    }
+
+    #[test]
+    fn grouped_and_replica_stats_surface_only_in_serving_section() {
+        let mut rep = RunReport::default();
+        rep.loader.grouped_launches = 6;
+        rep.loader.group_rows = 24;
+        rep.loader.dequant_reuses = 18;
+        rep.loader.snapshot_copies = 6;
+        rep.loader.snapshot_reuses = 4;
+        rep.cache.replicas_created = 3;
+        rep.cache.replica_hits = 9;
+        rep.cache.replica_evictions = 2;
+        let fcfs = rep.to_json().to_string();
+        assert!(!fcfs.contains("grouped"), "FCFS report grew grouped keys");
+        assert!(!fcfs.contains("replica"), "FCFS report grew replica keys");
+        assert!(!fcfs.contains("dequant"), "FCFS report grew dequant keys");
+        assert!(!fcfs.contains("snapshot"), "FCFS report grew snapshot keys");
+        assert!(!fcfs.contains("exec_mode"), "FCFS report grew exec_mode key");
+        rep.scheduler = Some(SchedulerStats {
+            exec_mode: "grouped".into(),
+            ..Default::default()
+        });
+        let j = Json::parse(&rep.to_json().to_string()).unwrap();
+        let serving = j.get("serving").unwrap();
+        assert_eq!(serving.get("grouped_launches").unwrap().as_f64().unwrap(), 6.0);
+        assert_eq!(serving.get("group_rows").unwrap().as_f64().unwrap(), 24.0);
+        assert_eq!(serving.get("dequant_reuses").unwrap().as_f64().unwrap(), 18.0);
+        assert_eq!(serving.get("snapshot_copies").unwrap().as_f64().unwrap(), 6.0);
+        assert_eq!(serving.get("snapshot_reuses").unwrap().as_f64().unwrap(), 4.0);
+        assert_eq!(serving.get("replicas_created").unwrap().as_f64().unwrap(), 3.0);
+        assert_eq!(serving.get("replica_hits").unwrap().as_f64().unwrap(), 9.0);
+        assert_eq!(serving.get("replica_evictions").unwrap().as_f64().unwrap(), 2.0);
+        assert_eq!(serving.get("exec_mode").unwrap().as_str().unwrap(), "grouped");
     }
 
     #[test]

@@ -7,10 +7,20 @@
 //! fully cached, issue mixed-precision prefetches for the gap, pin
 //! ("mask") predictions against eviction, and track realized accuracy.
 
+use std::collections::HashMap;
+
 use crate::cache::{CacheManager, Pool};
 use crate::loader::scorer::{self, Class};
 use crate::tensor::topk;
 use crate::ExpertKey;
+
+/// Heat EMA decay: per observed token, `heat = (1-α)·heat + α·prob`.
+const HEAT_ALPHA: f32 = 0.1;
+
+/// Hotness threshold as a multiple of the uniform gate mass `1/n_experts`:
+/// an expert whose smoothed gate share sits 25% above uniform is hot enough
+/// to be worth a DRAM read-replica.
+const HEAT_HOT_FACTOR: f32 = 1.25;
 
 /// Prefetch plan for one predicted layer.
 #[derive(Debug, Clone)]
@@ -82,6 +92,12 @@ pub struct Predictor {
     pub tracker: AccuracyTracker,
     /// last predictions per absolute layer (for accuracy scoring + unpin)
     pending: Vec<Option<PendingPrediction>>,
+    /// per-expert gate-score EMA over *observed* (realized) gate
+    /// distributions — the hot-expert signal replica placement keys on
+    heat: HashMap<ExpertKey, f32>,
+    /// gate width learned from the first observed distribution (0 until
+    /// then, which keeps [`Self::hot`] false before any evidence exists)
+    n_experts: usize,
 }
 
 impl Predictor {
@@ -94,6 +110,8 @@ impl Predictor {
             dynamic,
             tracker: AccuracyTracker::new(depth.max(1)),
             pending: (0..n_layers).map(|_| None).collect(),
+            heat: HashMap::new(),
+            n_experts: 0,
         }
     }
 
@@ -198,6 +216,15 @@ impl Predictor {
     /// Score a layer's realized top-k against the pending prediction and
     /// release pins. Call when `layer` is actually executed.
     pub fn observe(&mut self, cache: &mut CacheManager, layer: u32, actual_probs: &[f32]) {
+        // fold the realized gate distribution into the per-expert heat EMA
+        // (the hot-expert replica signal); experts never observed decay
+        // implicitly by staying at their last value until seen again
+        self.n_experts = actual_probs.len();
+        for (e, &p) in actual_probs.iter().enumerate() {
+            let key = ExpertKey::new(layer, e as u32);
+            let h = self.heat.entry(key).or_insert(0.0);
+            *h = (1.0 - HEAT_ALPHA) * *h + HEAT_ALPHA * p;
+        }
         let actual: Vec<u32> =
             topk(actual_probs, self.top_k).iter().map(|(i, _)| *i as u32).collect();
         if let Some(p) = self.pending[layer as usize].take() {
@@ -206,6 +233,17 @@ impl Predictor {
             self.tracker.record(1, &p.experts, &actual);
             release_pins(cache, &p.pinned);
         }
+    }
+
+    /// Hot-expert probe for replica placement: true when the expert's
+    /// gate-score EMA sits [`HEAT_HOT_FACTOR`]× above the uniform share
+    /// `1/n_experts`. False before any distribution has been observed.
+    pub fn hot(&self, key: ExpertKey) -> bool {
+        if self.n_experts == 0 {
+            return false;
+        }
+        let threshold = HEAT_HOT_FACTOR / self.n_experts as f32;
+        self.heat.get(&key).is_some_and(|&h| h >= threshold)
     }
 }
 
@@ -317,6 +355,27 @@ mod tests {
         assert!(!cache.hi.pinned_contains(ExpertKey::new(1, 0)));
         // clamps at the model end like plan()
         assert!(pred.stage_candidates(3, 4, &stacked).is_empty());
+    }
+
+    #[test]
+    fn heat_ema_marks_skewed_experts_hot() {
+        let mut cache = mk_cache();
+        let mut pred = Predictor::new(2, 2, 0.6, 0.9, true, 4);
+        // no evidence yet: nothing is hot
+        assert!(!pred.hot(ExpertKey::new(1, 0)));
+        // a steady 0.9 gate share converges the EMA well past 1.25/4
+        for _ in 0..20 {
+            pred.observe(&mut cache, 1, &probs(0, 4));
+        }
+        assert!(pred.hot(ExpertKey::new(1, 0)), "skewed expert should be hot");
+        assert!(!pred.hot(ExpertKey::new(1, 1)), "cold expert stays cold");
+        assert!(!pred.hot(ExpertKey::new(2, 0)), "heat is per (layer, expert)");
+        // shifting the distribution cools the old favourite
+        for _ in 0..60 {
+            pred.observe(&mut cache, 1, &probs(3, 4));
+        }
+        assert!(!pred.hot(ExpertKey::new(1, 0)), "EMA decays when traffic moves");
+        assert!(pred.hot(ExpertKey::new(1, 3)));
     }
 
     #[test]

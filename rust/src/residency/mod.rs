@@ -1002,12 +1002,11 @@ impl ExpertResidency {
     /// never be observed half-applied. Returns None when the expert is
     /// not Ready (callers then bypass the cache as before).
     pub fn resident_record(&self, key: ExpertKey, pool: Pool) -> Option<(Precision, Vec<u8>)> {
-        let cache = self.cache.lock().unwrap();
-        let p = match pool {
-            Pool::Hi => &cache.hi,
-            Pool::Lo => &cache.lo,
-        };
-        let (buf, tier) = p.buffer_tier(key)?;
+        let mut cache = self.cache.lock().unwrap();
+        // reads rotate across the primary and any hot-expert replicas
+        // (DRAM-to-DRAM copies of the same bytes), spreading slot-lock
+        // contention without changing what is read
+        let (buf, tier) = cache.read_buffer_tier(key, pool)?;
         let prec = tier.unwrap_or(match pool {
             Pool::Hi => self.hi,
             Pool::Lo => self.lo,
@@ -1016,6 +1015,70 @@ impl ExpertResidency {
         let guard = buf.lock().unwrap();
         debug_assert!(guard.len() >= n, "slot smaller than resident record");
         Some((prec, guard[..n].to_vec()))
+    }
+
+    /// The grouped step's snapshot arena: one owned (tier, bytes) snapshot
+    /// per unique (expert, pool) of a batch step, shared by every use that
+    /// demanded it. `wants` may repeat a key (e.g. a Lo demand upgraded to
+    /// a resident Hi copy colliding with a native Hi demand); repeats
+    /// reuse the first copy and are counted as `snapshot_reuses`, actual
+    /// clones as `snapshot_copies`. Absent entries mean the expert is not
+    /// Ready — callers bypass the cache for those uses, exactly like a
+    /// None from [`Self::resident_record`]. Each clone happens with the
+    /// slot buffer locked under the one cache lock (the `commit_upgrade`
+    /// order), and reads rotate across replicas like `resident_record`.
+    pub fn snapshot_records(
+        &self,
+        wants: &[(ExpertKey, Pool)],
+    ) -> HashMap<(ExpertKey, Pool), (Precision, Vec<u8>)> {
+        let mut out: HashMap<(ExpertKey, Pool), (Precision, Vec<u8>)> = HashMap::new();
+        let (mut copies, mut reuses) = (0u64, 0u64);
+        let mut cache = self.cache.lock().unwrap();
+        for &(key, pool) in wants {
+            if out.contains_key(&(key, pool)) {
+                reuses += 1;
+                continue;
+            }
+            let Some((buf, tier)) = cache.read_buffer_tier(key, pool) else {
+                continue;
+            };
+            let prec = tier.unwrap_or(match pool {
+                Pool::Hi => self.hi,
+                Pool::Lo => self.lo,
+            });
+            let n = self.store.record_bytes(prec);
+            let guard = buf.lock().unwrap();
+            debug_assert!(guard.len() >= n, "slot smaller than resident record");
+            out.insert((key, pool), (prec, guard[..n].to_vec()));
+            copies += 1;
+        }
+        drop(cache);
+        let mut st = self.loader.stats.lock().unwrap();
+        st.snapshot_copies += copies;
+        st.snapshot_reuses += reuses;
+        out
+    }
+
+    /// Fold one grouped FFN launch's execution counters into the loader
+    /// ledger (surfaced under the `"serving"` report key only).
+    pub fn note_grouped_exec(&self, launches: u64, rows: u64, dequant_reuses: u64) {
+        let mut st = self.loader.stats.lock().unwrap();
+        st.grouped_launches += launches;
+        st.group_rows += rows;
+        st.dequant_reuses += dequant_reuses;
+    }
+
+    /// Try to populate one read-replica of a hot Ready expert (bounded by
+    /// the cache's replica budget; replicas only fill Free slots and are
+    /// copied DRAM-to-DRAM, never fetched over the link).
+    pub fn add_replica(&self, key: ExpertKey, pool: Pool) -> bool {
+        self.cache.lock().unwrap().add_replica(key, pool)
+    }
+
+    /// Predictor heat probe: true when the expert's gate-score EMA marks
+    /// it hot enough to be worth a read-replica.
+    pub fn is_hot(&self, key: ExpertKey) -> bool {
+        self.predictor.hot(key)
     }
 
     /// Record a realized use for the replacement policy, attributed to a

@@ -11,8 +11,23 @@ use crate::util::json::Json;
 /// that fits ([`pad_batch_width`]).
 pub const DECODE_BATCH_WIDTHS: [usize; 3] = [2, 4, 8];
 
-/// Largest decode batch one launch can carry.
+/// Largest decode batch one *padded-width* launch can carry (the PR 3
+/// per-row-per-expert mode). Grouped execution has no such ceiling — see
+/// [`MAX_GROUPED_BATCH`].
 pub const MAX_DECODE_BATCH: usize = 8;
+
+/// Expert-group launch widths the AOT compiler may emit for ragged
+/// grouped execution (`expert_*_s{2..64}`): a group of g routed rows pads
+/// to the smallest one that fits; oversized groups chunk at the largest.
+/// Supersets [`DECODE_BATCH_WIDTHS`] so padded-width artifact sets keep
+/// working as group launchers.
+pub const GROUPED_WIDTHS: [usize; 6] = [2, 4, 8, 16, 32, 64];
+
+/// Largest decode batch the grouped execution path admits. Not a launch
+/// width: grouped mode sorts the batch's (token, expert) pairs by expert
+/// and launches per *group*, so the batch width only bounds bookkeeping
+/// (per-row KV/cursor state), not compiled artifact shapes.
+pub const MAX_GROUPED_BATCH: usize = 64;
 
 /// Smallest compiled-size launch width that fits a batch of `n` runnable
 /// sequences (the padding rule of batched decode). None when `n` exceeds
@@ -129,7 +144,7 @@ impl Manifest {
         hi: &str,
         lo: &str,
     ) -> Vec<usize> {
-        DECODE_BATCH_WIDTHS
+        GROUPED_WIDTHS
             .iter()
             .copied()
             .filter(|&w| {
@@ -137,6 +152,24 @@ impl Manifest {
                     && self.has_variant(&format!("{ffn_prefix}_{hi}"), w)
                     && self.has_variant(&format!("{ffn_prefix}_{lo}"), w)
                     && self.has_variant("head", w)
+            })
+            .collect()
+    }
+
+    /// Which expert-group launch widths this artifact set carries: only the
+    /// FFN units matter (a group launch feeds one expert's record a slab of
+    /// sorted tokens — gate and head shapes are irrelevant), but *both*
+    /// precision classes must exist so a group never changes width when the
+    /// residency tier flips. Groups bigger than every compiled width chunk
+    /// at the largest one; an empty result means grouped launches fall back
+    /// to bit-identical s=1 per-row launches.
+    pub fn grouped_expert_widths(&self, ffn_prefix: &str, hi: &str, lo: &str) -> Vec<usize> {
+        GROUPED_WIDTHS
+            .iter()
+            .copied()
+            .filter(|&w| {
+                self.has_variant(&format!("{ffn_prefix}_{hi}"), w)
+                    && self.has_variant(&format!("{ffn_prefix}_{lo}"), w)
             })
             .collect()
     }
@@ -247,5 +280,39 @@ mod tests {
             "gate_p2_s4", "expert_fast_f32_s4", "expert_fast_q8_s4", "head_s4",
         ]);
         assert!(m.decode_batch_widths(2, "expert_fast", "f32", "q8").is_empty());
+    }
+
+    #[test]
+    fn decode_widths_extend_past_legacy_ceiling() {
+        // a full s16 decode set resolves {16}: the padded path is no
+        // longer artificially capped at the legacy {2,4,8} ladder
+        let m = variant_manifest(&[
+            "gate_p1_s16", "gate_p2_s16", "expert_fast_f32_s16", "expert_fast_q8_s16",
+            "head_s16",
+        ]);
+        assert_eq!(m.decode_batch_widths(2, "expert_fast", "f32", "q8"), vec![16]);
+    }
+
+    #[test]
+    fn grouped_expert_widths_need_only_ffn_pairs() {
+        // expert-only variants resolve grouped widths without gate/head
+        let m = variant_manifest(&[
+            "expert_fast_f32_s4", "expert_fast_q8_s4", "expert_fast_f32_s32",
+            "expert_fast_q8_s32", "head_s1",
+        ]);
+        assert_eq!(m.grouped_expert_widths("expert_fast", "f32", "q8"), vec![4, 32]);
+
+        // one precision class alone is not usable: a tier flip mid-step
+        // must never change the launch width
+        let m = variant_manifest(&["expert_fast_f32_s8", "head_s8", "gate_p1_s8"]);
+        assert!(m.grouped_expert_widths("expert_fast", "f32", "q8").is_empty());
+    }
+
+    #[test]
+    fn grouped_batch_ceiling_covers_width_ladder() {
+        assert_eq!(GROUPED_WIDTHS.last().copied(), Some(MAX_GROUPED_BATCH));
+        // the legacy padded ladder is a prefix of the grouped ladder
+        assert_eq!(&GROUPED_WIDTHS[..3], &DECODE_BATCH_WIDTHS);
+        assert!(MAX_GROUPED_BATCH > MAX_DECODE_BATCH);
     }
 }

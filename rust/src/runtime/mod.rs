@@ -6,7 +6,8 @@
 mod manifest;
 
 pub use manifest::{
-    pad_batch_width, ArtifactSpec, DType, Manifest, DECODE_BATCH_WIDTHS, MAX_DECODE_BATCH,
+    pad_batch_width, ArtifactSpec, DType, Manifest, DECODE_BATCH_WIDTHS, GROUPED_WIDTHS,
+    MAX_DECODE_BATCH, MAX_GROUPED_BATCH,
 };
 
 use std::collections::HashMap;

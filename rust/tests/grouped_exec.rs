@@ -1,0 +1,634 @@
+//! Ragged grouped execution + hot-expert replication regression suite:
+//! grouping and replication must NEVER change logits.
+//!
+//! Artifact-free (synthesized model, reference executor), like
+//! `batched_decode.rs` — the loader, cache, predictor, residency facade,
+//! and both schedulers are the real ones, and every equivalence below is
+//! **bit-identical**, not tolerance-based.
+//!
+//! Coverage:
+//! * engine-level: grouped decode of K rows runs *ragged* (no padding)
+//!   and matches per-row sequential logits bitwise, K in {2, 4, 5, 8, 16};
+//! * hot skew: identical rows collapse each layer step to one launch +
+//!   one snapshot per unique expert (`grouped_launches` ==
+//!   steps x layers x top_k), with `dequant_reuses` and the snapshot
+//!   dedup counters accounting for every shared row;
+//! * coordinator-level: `--max-batch K` grouped completions equal the
+//!   FCFS batch-1 reference on a per-row engine under rr and sjf,
+//!   including K = 16 (past the legacy padded ceiling), and the serving
+//!   report carries `exec_mode: "grouped"`;
+//! * replication: a hot-skewed run with `max_replicas > 0` creates
+//!   replicas, serves reads from them, and stays bit-identical to the
+//!   replication-off run; upgrade/quarantine invalidate replicas
+//!   atomically; mid-step eviction and batch abort leak no pins with
+//!   replication on.
+
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use hobbit::cache::{CacheManager, CommitOutcome, Policy, Pool};
+use hobbit::config::{HardwareConfig, IoConfig, PolicyConfig};
+use hobbit::coordinator::{Coordinator, Request, SchedPolicy};
+use hobbit::engine::{BatchItem, BatchProgress, DecodeProgress, Engine, EngineOptions, KvState};
+use hobbit::loader::scorer::Class;
+use hobbit::memory::{LinkModel, ThrottledCopier};
+use hobbit::model::synth::{
+    tiny_model_config, tiny_store_config, write_synth_expert_store, write_synth_model,
+};
+use hobbit::model::ExpertStore;
+use hobbit::predictor::Predictor;
+use hobbit::residency::ExpertResidency;
+use hobbit::tokenizer::BOS;
+use hobbit::util::checksum::fnv1a64;
+use hobbit::{ExpertKey, Precision};
+
+const SEED: u64 = 0x6E0;
+
+fn synth_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("hobbit_grouped_{name}"));
+    let cfg = tiny_model_config(name);
+    write_synth_model(&dir, &cfg, SEED).expect("synth model");
+    dir
+}
+
+fn fast_hw() -> HardwareConfig {
+    HardwareConfig {
+        name: "grouped-fast".into(),
+        load_bw: 1e9,
+        load_latency: 0.0,
+        hi_cache_experts: 12, // every expert of the tiny model fits
+        lo_cache_experts: 12,
+        cpu_assist: false,
+        cpu_expert_time: 0.0,
+    }
+}
+
+/// Offload-bound: small cache + a link slow enough (~3ms per f32 expert)
+/// that merged acquires genuinely wait on the wire.
+fn offload_hw() -> HardwareConfig {
+    HardwareConfig {
+        name: "grouped-offload".into(),
+        load_bw: 2e6,
+        load_latency: 0.0,
+        hi_cache_experts: 6,
+        lo_cache_experts: 6,
+        cpu_assist: false,
+        cpu_expert_time: 0.0,
+    }
+}
+
+/// Roomy cache: the whole working set fits with Free slots left over, so
+/// hot-expert replicas have somewhere to live and nothing ever bypasses.
+fn roomy_hw() -> HardwareConfig {
+    HardwareConfig { hi_cache_experts: 16, lo_cache_experts: 12, ..fast_hw() }
+}
+
+/// Dynamic loading off + fetch precision pinned hi: logits depend only on
+/// each row's own token history, so grouping, batching, replication, and
+/// scheduling order must not change them.
+fn quality_policy(prefetch_depth: usize) -> PolicyConfig {
+    PolicyConfig {
+        dynamic_loading: false,
+        prefetch_depth,
+        pin_precision: Some(hobbit::Precision::F32),
+        ..PolicyConfig::default()
+    }
+}
+
+fn mk_engine(
+    name: &str,
+    dir: &Path,
+    hw: HardwareConfig,
+    prefetch: usize,
+    grouped: bool,
+    max_replicas: usize,
+) -> Engine {
+    let cfg = tiny_model_config(name);
+    let mut opts = EngineOptions::new(hw, quality_policy(prefetch));
+    opts.grouped = grouped;
+    opts.max_replicas = max_replicas;
+    Engine::new_reference(dir, cfg, opts).expect("reference engine")
+}
+
+/// Deterministic per-row token streams (byte tokens, all < 256).
+fn stream(row: usize, step: usize) -> u32 {
+    (65 + ((row * 31 + step * 7) % 190)) as u32
+}
+
+fn prompt_tokens(row: usize) -> Vec<u32> {
+    vec![BOS, (70 + row as u32) % 256]
+}
+
+/// Ground truth: each row decoded alone, batch-1, on a per-row engine.
+fn sequential_logits(name: &str, dir: &Path, rows: usize, steps: usize) -> Vec<Vec<Vec<f32>>> {
+    let mut eng = mk_engine(name, dir, fast_hw(), 2, false, 0);
+    (0..rows)
+        .map(|r| {
+            let mut kv = eng.new_sequence();
+            eng.prefill(&mut kv, &prompt_tokens(r)).expect("prefill");
+            (0..steps)
+                .map(|j| eng.decode_step(&mut kv, stream(r, j)).expect("decode"))
+                .collect()
+        })
+        .collect()
+}
+
+fn poll_to_done(eng: &mut Engine, cur: &mut hobbit::engine::BatchCursor) -> Vec<hobbit::engine::BatchDone> {
+    loop {
+        match eng.decode_poll_batch(cur).expect("poll batch") {
+            BatchProgress::Done(d) => break d,
+            BatchProgress::Pending => eng.decode_block_batch(cur),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Engine-level grouped bit-equivalence (ragged widths, replication on)
+// ---------------------------------------------------------------------
+
+fn grouped_equivalence(rows: usize) {
+    let name = format!("eq{rows}");
+    let dir = synth_dir(&name);
+    let steps = 4usize;
+    let reference = sequential_logits(&name, &dir, rows, steps);
+
+    // grouped engine under offload pressure, replication enabled — both
+    // must be invisible in the logits
+    let mut eng = mk_engine(&name, &dir, offload_hw(), 2, true, 2);
+    let mut kvs: Vec<Option<KvState>> = (0..rows)
+        .map(|r| {
+            let mut kv = eng.new_sequence();
+            eng.prefill(&mut kv, &prompt_tokens(r)).expect("prefill");
+            Some(kv)
+        })
+        .collect();
+    for j in 0..steps {
+        let items: Vec<BatchItem> = (0..rows)
+            .map(|r| BatchItem {
+                seq: None,
+                token: stream(r, j),
+                kv: kvs[r].take().expect("kv present"),
+            })
+            .collect();
+        let mut cur = eng.decode_begin_batch(items).expect("begin batch");
+        assert_eq!(cur.width(), rows, "grouped decode is ragged: no padding at {rows}");
+        let done = poll_to_done(&mut eng, &mut cur);
+        assert_eq!(done.len(), rows);
+        for (r, d) in done.into_iter().enumerate() {
+            assert_eq!(
+                d.logits, reference[r][j],
+                "row {r} step {j}: grouped logits diverged from sequential"
+            );
+            kvs[r] = Some(d.kv);
+        }
+    }
+    // still one merged acquire per (batch step, layer), and the grouped
+    // pass actually ran
+    let st = eng.residency.loader_stats();
+    let n_layers = eng.cfg.n_layers as u64;
+    assert_eq!(st.merged_acquires, steps as u64 * n_layers);
+    assert!(st.grouped_launches > 0, "grouped path never engaged");
+    assert!(st.group_rows >= st.grouped_launches);
+    assert_eq!(st.dequant_reuses, st.group_rows - st.grouped_launches);
+}
+
+#[test]
+fn grouped_batch_of_2_matches_sequential_bitwise() {
+    grouped_equivalence(2);
+}
+
+#[test]
+fn grouped_batch_of_4_matches_sequential_bitwise() {
+    grouped_equivalence(4);
+}
+
+#[test]
+fn grouped_batch_of_5_is_ragged_and_matches_sequential_bitwise() {
+    grouped_equivalence(5); // not a padded width: only grouped mode serves it natively
+}
+
+#[test]
+fn grouped_batch_of_8_matches_sequential_bitwise() {
+    grouped_equivalence(8);
+}
+
+#[test]
+fn grouped_batch_of_16_matches_sequential_bitwise() {
+    grouped_equivalence(16); // past the legacy padded ceiling of 8
+}
+
+#[test]
+fn per_row_engine_rejects_width_over_ceiling_grouped_accepts() {
+    let name = "ceiling";
+    let dir = synth_dir(name);
+    let mut per_row = mk_engine(name, &dir, fast_hw(), 0, false, 0);
+    assert_eq!(per_row.batch_ceiling(), 8);
+    assert_ne!(per_row.exec_mode(), "grouped");
+    let items: Vec<BatchItem> = (0..9)
+        .map(|r| BatchItem { seq: None, token: stream(r, 0), kv: KvState::new(&per_row.cfg) })
+        .collect();
+    assert!(per_row.decode_begin_batch(items).is_err(), "padded path must cap at 8");
+
+    let mut grouped = mk_engine(name, &dir, fast_hw(), 0, true, 0);
+    assert_eq!(grouped.batch_ceiling(), 64);
+    assert_eq!(grouped.exec_mode(), "grouped");
+    let items: Vec<BatchItem> = (0..9)
+        .map(|r| BatchItem { seq: None, token: stream(r, 0), kv: KvState::new(&grouped.cfg) })
+        .collect();
+    let mut cur = grouped.decode_begin_batch(items).expect("grouped serves width 9");
+    assert_eq!(cur.width(), 9);
+    let done = poll_to_done(&mut grouped, &mut cur);
+    assert_eq!(done.len(), 9);
+}
+
+// ---------------------------------------------------------------------
+// Hot skew: launches and snapshots collapse to unique experts
+// ---------------------------------------------------------------------
+
+/// Eight bit-identical rows (same prompt, same token stream) route to the
+/// same top-k experts every step, so each layer step must execute exactly
+/// top_k grouped launches with exactly one snapshot copy each — the
+/// per-unique-(key, step) dedup contract — while every other routed row
+/// is a dequant reuse.
+#[test]
+fn hot_skew_collapses_launches_and_snapshot_copies() {
+    let name = "hotskew";
+    let dir = synth_dir(name);
+    let (rows, steps) = (8usize, 4usize);
+    let mut eng = mk_engine(name, &dir, roomy_hw(), 2, true, 0);
+    let mut kvs: Vec<Option<KvState>> = (0..rows)
+        .map(|_| {
+            let mut kv = eng.new_sequence();
+            eng.prefill(&mut kv, &[BOS, 70]).expect("prefill");
+            Some(kv)
+        })
+        .collect();
+    let st0 = eng.residency.loader_stats();
+    for j in 0..steps {
+        let items: Vec<BatchItem> = (0..rows)
+            .map(|r| BatchItem {
+                seq: None,
+                token: stream(0, j), // every row decodes the same token
+                kv: kvs[r].take().expect("kv present"),
+            })
+            .collect();
+        let mut cur = eng.decode_begin_batch(items).expect("begin batch");
+        let done = poll_to_done(&mut eng, &mut cur);
+        for (r, d) in done.into_iter().enumerate() {
+            kvs[r] = Some(d.kv);
+        }
+    }
+    let st = eng.residency.loader_stats();
+    let expect_launches = (steps * eng.cfg.n_layers as usize * eng.cfg.top_k) as u64;
+    let launches = st.grouped_launches - st0.grouped_launches;
+    let group_rows = st.group_rows - st0.group_rows;
+    assert_eq!(launches, expect_launches, "one launch per unique expert per layer step");
+    assert_eq!(group_rows, expect_launches * rows as u64, "every routed row grouped");
+    assert_eq!(
+        st.dequant_reuses - st0.dequant_reuses,
+        group_rows - launches,
+        "all but the first row of each group reuse the dequant"
+    );
+    assert_eq!(
+        st.snapshot_copies - st0.snapshot_copies,
+        launches,
+        "exactly one resident-record snapshot per unique (expert, step)"
+    );
+}
+
+// ---------------------------------------------------------------------
+// Coordinator-level equivalence (rr + sjf), grouped vs per-row engines
+// ---------------------------------------------------------------------
+
+const PROMPTS: [&str; 16] = [
+    "alpha request one",
+    "bravo request two",
+    "charlie request three",
+    "delta request four",
+    "echo request five",
+    "foxtrot request six",
+    "golf request seven",
+    "hotel request eight",
+    "india request nine",
+    "juliet request ten",
+    "kilo request eleven",
+    "lima request twelve",
+    "mike request thirteen",
+    "november request fourteen",
+    "oscar request fifteen",
+    "papa request sixteen",
+];
+
+/// FCFS batch-1 ground truth on a fresh per-row reference engine.
+fn reference_results(name: &str, dir: &Path, k: usize, max_new: usize) -> Vec<Vec<u32>> {
+    let eng = mk_engine(name, dir, fast_hw(), 2, false, 0);
+    let mut coord = Coordinator::new(eng);
+    (0..k)
+        .map(|i| {
+            coord
+                .generate(&Request::new(i as u64 + 1, PROMPTS[i], max_new))
+                .expect("generate")
+                .tokens
+        })
+        .collect()
+}
+
+fn coordinator_grouped_equivalence(k: usize, policy: SchedPolicy) {
+    let name = format!("coord{k}{:?}", policy == SchedPolicy::Sjf);
+    let dir = synth_dir(&name);
+    let max_new = 5usize;
+    let reference = reference_results(&name, &dir, k, max_new);
+
+    let eng = mk_engine(&name, &dir, offload_hw(), 2, true, 2);
+    let mut coord = Coordinator::interleaved(eng);
+    coord.sched_policy = policy;
+    coord.max_active = k;
+    coord.max_batch = k;
+    for (i, p) in PROMPTS.iter().take(k).enumerate() {
+        coord.submit(Request::new(i as u64 + 1, *p, max_new));
+    }
+    let mut results = coord.drain().expect("drain");
+    assert_eq!(results.len(), k);
+    results.sort_by_key(|r| r.id);
+    for (r, want) in results.iter().zip(&reference) {
+        assert_eq!(
+            &r.tokens, want,
+            "request {}: grouped batched decode diverged from the batch-1 reference",
+            r.id
+        );
+    }
+
+    // batching engaged past the legacy ceiling, grouped counters flowed,
+    // and the serving report names the mode
+    let sch = coord.scheduler_stats().clone();
+    assert!(sch.batch_steps > 0, "no batched steps with max_batch {k}");
+    coord.sync_report();
+    assert!(coord.report.loader.grouped_launches > 0);
+    assert!(coord.report.loader.group_rows >= coord.report.loader.grouped_launches);
+    let serving = coord
+        .report
+        .to_json()
+        .get("serving")
+        .expect("serving section")
+        .to_string();
+    assert!(
+        serving.contains("\"exec_mode\":\"grouped\""),
+        "serving report must surface the execution mode: {serving}"
+    );
+    assert!(serving.contains("\"grouped_launches\""));
+    if k > 8 {
+        assert!(
+            sch.batch_occupancy() > 8.0,
+            "occupancy {} never exceeded the legacy padded ceiling with {k} sequences",
+            sch.batch_occupancy()
+        );
+    }
+}
+
+#[test]
+fn coordinator_rr_grouped_matches_reference_k4() {
+    coordinator_grouped_equivalence(4, SchedPolicy::RoundRobin);
+}
+
+#[test]
+fn coordinator_rr_grouped_matches_reference_k16() {
+    coordinator_grouped_equivalence(16, SchedPolicy::RoundRobin);
+}
+
+#[test]
+fn coordinator_sjf_grouped_matches_reference_k16() {
+    coordinator_grouped_equivalence(16, SchedPolicy::Sjf);
+}
+
+// ---------------------------------------------------------------------
+// Hot-expert replication: visible in counters, invisible in logits
+// ---------------------------------------------------------------------
+
+/// One hot-skewed run: `rows` identical sequences, `steps` grouped steps.
+/// Returns every step's row-0 logits plus the final cache stats.
+fn hot_run(name: &str, dir: &Path, max_replicas: usize) -> (Vec<Vec<f32>>, hobbit::metrics::CacheStats) {
+    let (rows, steps) = (8usize, 24usize);
+    let mut eng = mk_engine(name, dir, roomy_hw(), 2, true, max_replicas);
+    let mut kvs: Vec<Option<KvState>> = (0..rows)
+        .map(|_| {
+            let mut kv = eng.new_sequence();
+            eng.prefill(&mut kv, &[BOS, 70]).expect("prefill");
+            Some(kv)
+        })
+        .collect();
+    let mut out = Vec::with_capacity(steps);
+    for j in 0..steps {
+        let items: Vec<BatchItem> = (0..rows)
+            .map(|r| BatchItem {
+                seq: None,
+                token: stream(0, j),
+                kv: kvs[r].take().expect("kv present"),
+            })
+            .collect();
+        let mut cur = eng.decode_begin_batch(items).expect("begin batch");
+        let done = poll_to_done(&mut eng, &mut cur);
+        out.push(done[0].logits.clone());
+        for (r, d) in done.into_iter().enumerate() {
+            kvs[r] = Some(d.kv);
+        }
+    }
+    // replicas hold no pins: the ledger balances once the run is done
+    let cache = eng.residency.cache_handle();
+    let c = cache.lock().unwrap();
+    assert_eq!(c.hi.pinned_count(), 0, "leaked hi-pool pins");
+    assert_eq!(c.lo.pinned_count(), 0, "leaked lo-pool pins");
+    drop(c);
+    (out, eng.residency.cache_stats())
+}
+
+#[test]
+fn replication_serves_reads_without_changing_logits() {
+    let name = "replica";
+    let dir = synth_dir(name);
+    let (base_logits, base_stats) = hot_run(name, &dir, 0);
+    let (repl_logits, repl_stats) = hot_run(name, &dir, 2);
+    assert_eq!(base_stats.replicas_created, 0, "budget 0 must disable replication");
+    assert!(
+        repl_stats.replicas_created > 0,
+        "a 24-step hot-skewed run with free slots never created a replica"
+    );
+    assert!(
+        repl_stats.replica_hits > 0,
+        "rotated snapshot reads never landed on a replica"
+    );
+    assert_eq!(
+        repl_logits, base_logits,
+        "replica-served reads changed logits vs the replication-off run"
+    );
+}
+
+// ---------------------------------------------------------------------
+// Replica coherence at the residency seam: rotation, dedup, upgrade,
+// quarantine
+// ---------------------------------------------------------------------
+
+#[test]
+fn replica_rotation_snapshot_dedup_and_upgrade_coherence() {
+    let cfg = tiny_store_config("grouped-replica");
+    let dir = std::env::temp_dir().join("hobbit_grouped_replica_store");
+    write_synth_expert_store(&dir, &cfg).expect("synth store");
+    let store = Arc::new(ExpertStore::load(&dir, &cfg).expect("store"));
+    let cache = Arc::new(Mutex::new(CacheManager::new(
+        cfg.n_layers,
+        cfg.n_experts,
+        4,
+        cfg.bytes_for(Precision::F32),
+        2,
+        cfg.bytes_for(Precision::Q8),
+        Policy::Lru,
+        0.25,
+    )));
+    cache.lock().unwrap().set_max_replicas(2);
+    let copier =
+        Arc::new(ThrottledCopier::new(LinkModel { bytes_per_s: 1e9, latency_s: 0.0 }));
+    let predictor = Predictor::new(2, cfg.top_k, 0.6, 0.9, true, cfg.n_layers);
+    let resid = ExpertResidency::with_io(
+        store.clone(),
+        cache.clone(),
+        copier,
+        predictor,
+        Precision::F32,
+        Precision::Q8,
+        IoConfig::default(),
+    );
+    let key = ExpertKey::new(0, 0);
+    let (_uses, w) = resid.acquire(0, vec![(key, Class::Hi, vec![1.0], 1.0)], None);
+    resid.wait(&w);
+    assert!(resid.add_replica(key, Pool::Hi), "Ready primary + free slot + budget");
+
+    // snapshot dedup: repeats of one (key, pool) within a step cost one
+    // copy, the rest are reuses
+    let st0 = resid.loader_stats();
+    let snap = resid.snapshot_records(&[(key, Pool::Hi), (key, Pool::Hi), (key, Pool::Hi)]);
+    assert_eq!(snap.len(), 1);
+    let st1 = resid.loader_stats();
+    assert_eq!(st1.snapshot_copies - st0.snapshot_copies, 1);
+    assert_eq!(st1.snapshot_reuses - st0.snapshot_reuses, 2);
+    assert_eq!(
+        snap[&(key, Pool::Hi)].1.as_slice(),
+        store.record(key, Precision::F32),
+        "snapshot bytes match the store record wherever the rotation lands"
+    );
+    // a second snapshot rotates onto the replica — same bytes
+    let snap2 = resid.snapshot_records(&[(key, Pool::Hi)]);
+    assert_eq!(
+        snap2[&(key, Pool::Hi)].1.as_slice(),
+        store.record(key, Precision::F32)
+    );
+    assert!(resid.cache_stats().replica_hits > 0, "rotation never used the replica");
+
+    // in-place upgrade of the primary invalidates its replicas atomically
+    {
+        let mut c = cache.lock().unwrap();
+        let rec = store.record(key, Precision::F32).to_vec();
+        assert!(c.commit_upgrade(key, Pool::Hi, None, &rec));
+        assert_eq!(c.hi.replica_count(key), 0, "upgrade left a stale replica");
+    }
+    assert!(resid.cache_stats().replica_evictions >= 1);
+    // reads still resolve from the (upgraded) primary
+    let snap3 = resid.snapshot_records(&[(key, Pool::Hi)]);
+    assert_eq!(
+        snap3[&(key, Pool::Hi)].1.as_slice(),
+        store.record(key, Precision::F32)
+    );
+    resid.release(key, Pool::Hi);
+
+    // quarantine: a corrupt landing scrubs the slot AND drops replicas —
+    // a rotated read can never serve bytes whose primary was quarantined
+    {
+        let mut c = cache.lock().unwrap();
+        let k2 = ExpertKey::new(0, 1);
+        let good = store.record(k2, Precision::F32);
+        let sum = fnv1a64(good);
+        let r = c.reserve(k2, Pool::Hi, 0).expect("reserve");
+        assert!(!c.add_replica(k2, Pool::Hi), "a Loading key can't be replicated");
+        let mut bad = good.to_vec();
+        bad[0] ^= 0x01;
+        r.buffer.lock().unwrap()[..bad.len()].copy_from_slice(&bad);
+        let out = c.commit_tier_verified(k2, Pool::Hi, None, Some((sum, good.len())));
+        assert_eq!(out, CommitOutcome::Corrupt);
+        assert_eq!(c.hi.replica_count(k2), 0);
+        assert!(c.read_buffer_tier(k2, Pool::Hi).is_none(), "quarantined key unreadable");
+    }
+}
+
+// ---------------------------------------------------------------------
+// Eviction + abort under grouped execution with replication on
+// ---------------------------------------------------------------------
+
+/// A row whose loads block mid-group leaves the grouped batch without
+/// stalling the others, finishes solo bit-identically, and every cache
+/// pin is released — with replication enabled.
+#[test]
+fn grouped_blocked_row_evicts_without_stalling_or_leaking_pins() {
+    let name = "gevict";
+    let dir = synth_dir(name);
+    let reference: Vec<Vec<f32>> = {
+        let mut eng = mk_engine(name, &dir, fast_hw(), 0, false, 0);
+        (0..2)
+            .map(|r| {
+                let mut kv = eng.new_sequence();
+                eng.decode_step(&mut kv, stream(r, 0)).expect("decode")
+            })
+            .collect()
+    };
+
+    // ~120ms per f32 expert: layer-0 misses are guaranteed mid-flight
+    let slow = HardwareConfig { load_bw: 5e4, ..offload_hw() };
+    let mut eng = mk_engine(name, &dir, slow, 0, true, 2);
+    let items: Vec<BatchItem> = (0..2)
+        .map(|r| BatchItem { seq: None, token: stream(r, 0), kv: KvState::new(&eng.cfg) })
+        .collect();
+    let mut cur = eng.decode_begin_batch(items).expect("begin");
+    let progress = eng.decode_poll_batch(&mut cur).expect("poll");
+    assert!(matches!(progress, BatchProgress::Pending));
+    assert!(cur.row_blocked(1), "row 1's loads are on the link");
+
+    let (seq, mut kv1, mut solo) =
+        eng.decode_evict_row(&mut cur, 1).expect("blocked row is evictable");
+    assert_eq!(seq, None);
+    assert_eq!(cur.rows_alive(), 1, "evicted row left the group");
+
+    let done = poll_to_done(&mut eng, &mut cur);
+    assert_eq!(done.len(), 1);
+    assert_eq!(done[0].logits, reference[0], "survivor diverged after eviction");
+
+    let logits1 = loop {
+        match eng.decode_poll(&mut kv1, &mut solo).expect("solo poll") {
+            DecodeProgress::Done(l) => break l,
+            DecodeProgress::Pending => eng.decode_block(&mut solo),
+        }
+    };
+    assert_eq!(logits1, reference[1], "evicted row diverged from sequential");
+
+    let cache = eng.residency.cache_handle();
+    let c = cache.lock().unwrap();
+    assert_eq!(c.hi.pinned_count(), 0, "leaked hi-pool pins");
+    assert_eq!(c.lo.pinned_count(), 0, "leaked lo-pool pins");
+}
+
+/// Aborting a suspended grouped batch releases every remaining row's pins
+/// (replication on — replica slots hold no pins either).
+#[test]
+fn grouped_batch_abort_releases_all_pins() {
+    let name = "gabort";
+    let dir = synth_dir(name);
+    let slow = HardwareConfig { load_bw: 5e4, ..offload_hw() };
+    let mut eng = mk_engine(name, &dir, slow, 0, true, 2);
+    let items: Vec<BatchItem> = (0..4)
+        .map(|r| BatchItem { seq: None, token: stream(r, 0), kv: KvState::new(&eng.cfg) })
+        .collect();
+    let mut cur = eng.decode_begin_batch(items).expect("begin");
+    let progress = eng.decode_poll_batch(&mut cur).expect("poll");
+    assert!(matches!(progress, BatchProgress::Pending));
+    eng.decode_abort_batch(cur);
+    let cache = eng.residency.cache_handle();
+    let c = cache.lock().unwrap();
+    assert_eq!(c.hi.pinned_count(), 0, "abort leaked hi-pool pins");
+    assert_eq!(c.lo.pinned_count(), 0, "abort leaked lo-pool pins");
+}
